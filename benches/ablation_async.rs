@@ -1,0 +1,60 @@
+//! §7 future-work ablation — synchronous launch-per-iteration engines vs
+//! the persistent asynchronous engine ([`cupso::engine::AsyncEngine`]).
+//!
+//! Measures (a) wall time: the async engine pays ONE dispatch per run
+//! instead of 1–2 per iteration, and (b) solution quality: asynchrony
+//! trades gbest freshness for throughput — the quality column shows the
+//! price (usually none on these workloads).
+
+use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
+use cupso::engine::{AsyncEngine, Engine, ParallelSettings, QueueEngine, QueueLockEngine};
+use cupso::fitness::{Cubic, Objective};
+use cupso::metrics::Table;
+use cupso::pso::PsoParams;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    println!("ablation_async: dispatch-per-iteration vs persistent kernel\n");
+
+    let mut table = Table::new(
+        "Async ablation: launches per run vs wall time vs quality",
+        &["Workload", "Engine", "Dispatches", "Time (s)", "gbest", "% opt"],
+    );
+
+    let settings = ParallelSettings::with_workers(0);
+    for (n, d, paper_iters) in [(2048usize, 1usize, 100_000u64), (8192, 120, 2000)] {
+        let iters = cfg.iters(paper_iters);
+        let params = PsoParams {
+            dim: d,
+            ..PsoParams::paper_1d(n, iters)
+        };
+        let opt = 900_000.0 * d as f64;
+        let blocks = (n + 255) / 256;
+        let runs: Vec<(Box<dyn Engine>, u64)> = vec![
+            (Box::new(QueueEngine::new(settings.clone())), 2 * iters),
+            (Box::new(QueueLockEngine::new(settings.clone())), iters),
+            (Box::new(AsyncEngine::new(settings.clone())), 1),
+        ];
+        for (mut engine, dispatches) in runs {
+            let mut last_fit = 0.0;
+            let s = measure_timed(&cfg, || {
+                last_fit = engine.run(&params, &Cubic, Objective::Maximize, 42).gbest_fit;
+            });
+            table.row(&[
+                format!("n={n} d={d} it={iters} ({blocks} blocks)"),
+                engine.name().to_string(),
+                dispatches.to_string(),
+                format!("{:.4}", s.trimmed_mean()),
+                format!("{last_fit:.0}"),
+                format!("{:.2}%", 100.0 * last_fit / opt),
+            ]);
+        }
+    }
+    table.emit(&results_dir(), "ablation_async").unwrap();
+    println!(
+        "reading: the persistent engine amortizes all dispatch overhead into\n\
+         one launch (the paper's §7 'asynchronous execution scheme'); on a\n\
+         multi-core host the gap equals the per-iteration dispatch cost ×\n\
+         iterations, with no quality loss on these workloads."
+    );
+}

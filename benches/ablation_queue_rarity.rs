@@ -1,0 +1,72 @@
+//! §4.1 premise check — "the possibility of the satisfied condition may
+//! be less than 0.1%".
+//!
+//! The queue algorithm's entire advantage rests on improvements over the
+//! incumbent global best being rare. We measure the actual conditional-
+//! push rate of the Queue engine across workloads and iteration budgets,
+//! showing both the magnitude (≪0.1% on long runs) and the decay (early
+//! iterations improve often; the rate collapses as the swarm converges —
+//! the basis for gpusim's amortized IMPROVE_RATE).
+
+use cupso::benchkit::{results_dir, BenchConfig};
+use cupso::engine::{Engine, ParallelSettings, QueueEngine};
+use cupso::fitness::{Cubic, Objective};
+use cupso::metrics::Table;
+use cupso::pso::PsoParams;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    println!("ablation_queue_rarity: measured conditional-push rates\n");
+    let settings = ParallelSettings::with_workers(0);
+
+    let mut table = Table::new(
+        "Queue-push rarity (§4.1): pushes / particle-updates",
+        &[
+            "Particles",
+            "Dim",
+            "Iters",
+            "Updates",
+            "Pushes",
+            "Rate (%)",
+            "< 0.1%?",
+        ],
+    );
+
+    let workloads: &[(usize, usize, u64)] = &[
+        (1024, 1, cfg.iters(100_000)),
+        (2048, 1, cfg.iters(100_000)),
+        (65_536.min(cfg.max_particles), 1, cfg.iters(20_000)),
+        (1024, 120, cfg.iters(20_000)),
+        (8192, 120, cfg.iters(5_000)),
+        // Short runs: the rate is much higher early (decay evidence).
+        (1024, 120, 20),
+        (1024, 120, 200),
+        (1024, 120, 2000),
+    ];
+
+    for &(n, dim, iters) in workloads {
+        let params = PsoParams {
+            dim,
+            ..PsoParams::paper_1d(n, iters)
+        };
+        let mut engine = QueueEngine::new(settings.clone());
+        let out = engine.run(&params, &Cubic, Objective::Maximize, 42);
+        let rate = out.counters.queue_push_rate();
+        table.row(&[
+            n.to_string(),
+            dim.to_string(),
+            iters.to_string(),
+            out.counters.particle_updates.to_string(),
+            out.counters.queue_pushes.to_string(),
+            format!("{:.5}", 100.0 * rate),
+            if rate < 0.001 { "yes" } else { "no (short run)" }.to_string(),
+        ]);
+    }
+    table.emit(&results_dir(), "ablation_queue_rarity").unwrap();
+    println!(
+        "reading: long runs land well under the paper's 0.1% bound; short\n\
+         runs show the early-phase improvement burst, explaining why the\n\
+         amortized rate used by the cost model (5e-5) is an order below the\n\
+         paper's upper bound."
+    );
+}

@@ -1,0 +1,130 @@
+//! §5.4 ablation — cuRAND-style Philox vs a "custom-made" generator
+//! (xoshiro256++) inside the same PSO hot loop. The paper reports the
+//! cuRAND path ≈1.1× faster than a hand-ported generator on the GPU; we
+//! re-measure both raw generation throughput and the in-loop effect on
+//! this host, plus the counter-based stateless mode the engines use.
+
+use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
+use cupso::fitness::{Cubic, Fitness, Objective};
+use cupso::metrics::Table;
+use cupso::pso::PsoParams;
+use cupso::rng::{Philox4x32, PhiloxStream, RngEngine, Xoshiro256pp};
+
+/// A minimal serial PSO sweep generic over the RNG engine — isolates the
+/// generator cost in an otherwise identical loop.
+fn pso_loop<R: RngEngine>(rng: &mut R, params: &PsoParams, iters: u64) -> f64 {
+    let n = params.n;
+    let mut pos: Vec<f64> = (0..n)
+        .map(|_| rng.uniform(params.min_pos, params.max_pos))
+        .collect();
+    let mut vel: Vec<f64> = (0..n)
+        .map(|_| rng.uniform(-params.max_v, params.max_v))
+        .collect();
+    let mut pbest_pos = pos.clone();
+    let mut pbest_fit: Vec<f64> = pos.iter().map(|&p| Cubic.eval(&[p])).collect();
+    let mut gbest_fit = f64::NEG_INFINITY;
+    let mut gbest_pos = 0.0;
+    for (i, &f) in pbest_fit.iter().enumerate() {
+        if f > gbest_fit {
+            gbest_fit = f;
+            gbest_pos = pos[i];
+        }
+    }
+    for _ in 0..iters {
+        for i in 0..n {
+            let r1 = rng.next_f64();
+            let r2 = rng.next_f64();
+            let v = (params.w * vel[i]
+                + params.c1 * r1 * (pbest_pos[i] - pos[i])
+                + params.c2 * r2 * (gbest_pos - pos[i]))
+                .clamp(-params.max_v, params.max_v);
+            let p = (pos[i] + v).clamp(params.min_pos, params.max_pos);
+            vel[i] = v;
+            pos[i] = p;
+            let fit = Cubic.eval(&[p]);
+            if fit > pbest_fit[i] {
+                pbest_fit[i] = fit;
+                pbest_pos[i] = p;
+            }
+            if fit > gbest_fit {
+                gbest_fit = fit;
+                gbest_pos = p;
+            }
+        }
+    }
+    gbest_fit
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let iters = cfg.iters(100_000);
+    let params = PsoParams::paper_1d(1024, iters);
+    println!("ablation_rng: 1024 particles × {iters} iters\n");
+
+    // Raw generation throughput (ns per f64).
+    const DRAWS: u64 = 10_000_000;
+    let raw = |mut r: Box<dyn RngEngine>| {
+        let s = measure_timed(&cfg, || {
+            let mut acc = 0.0;
+            for _ in 0..DRAWS {
+                acc += r.next_f64();
+            }
+            std::hint::black_box(acc);
+        });
+        s.trimmed_mean() / DRAWS as f64 * 1e9
+    };
+    let raw_philox = raw(Box::new(Philox4x32::seeded(1)));
+    let raw_xoshiro = raw(Box::new(Xoshiro256pp::seeded(1)));
+
+    // Counter-based stateless mode (what the engines actually use — the
+    // cuRAND-style per-(particle, iter) derivation).
+    let stream = PhiloxStream::new(1);
+    let s = measure_timed(&cfg, || {
+        let mut acc = 0.0;
+        for i in 0..(DRAWS / 2) {
+            let (a, b) = stream.r1r2(i, i >> 8, 0);
+            acc += a + b;
+        }
+        std::hint::black_box(acc);
+    });
+    let raw_stream = s.trimmed_mean() / DRAWS as f64 * 1e9;
+
+    // In-loop effect.
+    let mut philox = Philox4x32::seeded(7);
+    let t_philox = measure_timed(&cfg, || {
+        std::hint::black_box(pso_loop(&mut philox, &params, iters));
+    })
+    .trimmed_mean();
+    let mut xoshiro = Xoshiro256pp::seeded(7);
+    let t_xoshiro = measure_timed(&cfg, || {
+        std::hint::black_box(pso_loop(&mut xoshiro, &params, iters));
+    })
+    .trimmed_mean();
+
+    let mut table = Table::new(
+        "RNG ablation (§5.4): Philox (cuRAND engine) vs xoshiro256++ (custom)",
+        &["Metric", "Philox", "xoshiro256++", "Philox counter-mode", "ratio x/philox"],
+    );
+    table.row(&[
+        "raw ns / f64".into(),
+        format!("{raw_philox:.2}"),
+        format!("{raw_xoshiro:.2}"),
+        format!("{raw_stream:.2}"),
+        format!("{:.2}", raw_xoshiro / raw_philox),
+    ]);
+    table.row(&[
+        "PSO loop (s)".into(),
+        format!("{t_philox:.4}"),
+        format!("{t_xoshiro:.4}"),
+        "-".into(),
+        format!("{:.3}", t_xoshiro / t_philox),
+    ]);
+    table.emit(&results_dir(), "ablation_rng").unwrap();
+    println!(
+        "paper context: on the GPU, cuRAND's Philox beat the custom port by\n\
+         ~1.1x (hardware-tuned, per-thread state in registers). On a CPU the\n\
+         custom xoshiro is the cheaper generator — the in-loop gap shows how\n\
+         little the generator matters once the fitness+update work dominates,\n\
+         which is the honest CPU reading of the paper's 1.1x."
+    );
+}

@@ -1,0 +1,86 @@
+//! Figure 3 — "plotting of the execution times of the five
+//! implementations with different number of particles involved".
+//!
+//! Regenerates the figure as an ASCII chart (log-y, like the published
+//! plot's visual spread) plus a CSV series file for external plotting.
+//! Two panels: measured (Plane A) and estimated GTX-1080Ti (Plane C).
+
+use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
+use cupso::config::EngineKind;
+use cupso::fitness::{Cubic, Objective};
+use cupso::gpusim;
+use cupso::metrics::{write_csv, AsciiPlot, Table};
+use cupso::pso::PsoParams;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let iters = cfg.iters(100_000);
+    println!("fig3_series: {} iterations ({})\n", iters, cfg.scale_note());
+
+    let particles = gpusim::TABLE3_PARTICLES;
+    let mut measured: Vec<(EngineKind, Vec<f64>)> = Vec::new();
+    for kind in EngineKind::TABLE3 {
+        let mut series = Vec::new();
+        for &n in &particles {
+            let params = PsoParams::paper_1d(n, iters);
+            let mut engine = cupso::engine::build(kind, 0).unwrap();
+            let s = measure_timed(&cfg, || {
+                engine.run(&params, &Cubic, Objective::Maximize, 42);
+            });
+            series.push(s.trimmed_mean());
+        }
+        measured.push((kind, series));
+    }
+
+    // Panel 1: measured on this host.
+    let mut plot = AsciiPlot::new(
+        &format!("Figure 3 (measured, Plane A) — seconds for {iters} iters, log y"),
+        64,
+        18,
+    )
+    .log_y()
+    .x_labels(&particles.to_vec());
+    for (kind, series) in &measured {
+        plot = plot.series(kind.label(), series);
+    }
+    println!("{}", plot.render());
+
+    // Panel 2: the Plane-C estimated GTX-1080Ti, which reproduces the
+    // published figure's absolute shape.
+    let mut plot = AsciiPlot::new(
+        "Figure 3 (estimated GTX-1080Ti, Plane C) — seconds for 100k iters, log y",
+        64,
+        18,
+    )
+    .log_y()
+    .x_labels(&particles.to_vec());
+    let mut est_rows = Vec::new();
+    for kind in EngineKind::TABLE3 {
+        let series: Vec<f64> = particles
+            .iter()
+            .map(|&n| gpusim::estimate_seconds(kind, n, 1, 100_000))
+            .collect();
+        plot = plot.series(kind.label(), &series);
+        est_rows.push((kind, series));
+    }
+    println!("{}", plot.render());
+
+    // CSV: one row per (engine, n) with both panels.
+    let mut table = Table::new(
+        "fig3 series",
+        &["Engine", "Particles", "measured_s", "estimated_gpu_s"],
+    );
+    for ((kind, m), (_, e)) in measured.iter().zip(est_rows.iter()) {
+        for (i, &n) in particles.iter().enumerate() {
+            table.row(&[
+                kind.label().to_string(),
+                n.to_string(),
+                format!("{:.5}", m[i]),
+                format!("{:.5}", e[i]),
+            ]);
+        }
+    }
+    let path = results_dir().join("fig3_series.csv");
+    write_csv(&path, &table.to_csv()).unwrap();
+    println!("series written to {}", path.display());
+}

@@ -1,0 +1,69 @@
+//! Table 3 — execution times of the five implementations on the 1-D
+//! problem (paper: 100k iterations, particles 32…2048).
+//!
+//! Emits three aligned columns per cell: **measured** (Plane A, this
+//! host), **estimated GPU** (Plane C, GTX-1080Ti model), and **paper**
+//! (the published number). Scale via CUPSO_BENCH_SCALE=ci|paper|smoke.
+
+use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
+use cupso::config::EngineKind;
+use cupso::fitness::{Cubic, Objective};
+use cupso::gpusim;
+use cupso::metrics::Table;
+use cupso::pso::PsoParams;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let iters = cfg.iters(100_000);
+    let scale = 100_000.0 / iters as f64;
+    println!(
+        "table3_1d: {} iterations per run ({}), {} reps trimmed-mean\n",
+        iters,
+        cfg.scale_note(),
+        cfg.reps
+    );
+
+    let mut table = Table::new(
+        &format!("Table 3 — 1-D Cubic ({} iters, extrapolated to 100k)", iters),
+        &[
+            "Particles",
+            "Engine",
+            "measured (s)",
+            "extrap. 100k (s)",
+            "est. GPU (s)",
+            "paper (s)",
+        ],
+    );
+
+    for (row_idx, &n) in gpusim::TABLE3_PARTICLES.iter().enumerate() {
+        let params = PsoParams::paper_1d(n, iters);
+        let paper_row = gpusim::paper::TABLE3[row_idx];
+        let paper_vals = [
+            paper_row.1, paper_row.2, paper_row.3, paper_row.4, paper_row.5,
+        ];
+        for (col, kind) in EngineKind::TABLE3.into_iter().enumerate() {
+            let mut engine = cupso::engine::build(kind, 0).unwrap();
+            let summary = measure_timed(&cfg, || {
+                engine.run(&params, &Cubic, Objective::Maximize, 42);
+            });
+            let measured = summary.trimmed_mean();
+            let est = gpusim::estimate_seconds(kind, n, 1, 100_000);
+            table.row(&[
+                n.to_string(),
+                kind.label().to_string(),
+                format!("{measured:.4}"),
+                format!("{:.3}", measured * scale),
+                format!("{est:.3}"),
+                format!("{:.3}", paper_vals[col]),
+            ]);
+        }
+    }
+    table.emit(&results_dir(), "table3_1d").unwrap();
+
+    println!(
+        "shape checks: within each particle count the measured ranking should\n\
+         echo the paper's (QueueLock fastest, Reduction slowest among GPU-\n\
+         style engines); absolute numbers differ — this is a CPU-thread\n\
+         substrate, see DESIGN.md §Plane A."
+    );
+}

@@ -1,0 +1,77 @@
+//! Table 4 — speedups achieved by the Queue-Lock algorithm on the 1-D
+//! problem (paper: CPU serial vs GPU Queue-Lock, 128…131072 particles,
+//! peak ≈195× at 65 536, drop at 131 072).
+//!
+//! Measured columns use Plane A (serial vs Queue-Lock on threads); the
+//! estimated column replays the sweep on the Plane-C GTX-1080Ti model,
+//! which reproduces the paper's peak-then-drop signature.
+
+use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
+use cupso::config::EngineKind;
+use cupso::engine::{Engine, ParallelSettings, QueueLockEngine, SerialEngine};
+use cupso::fitness::{Cubic, Objective};
+use cupso::gpusim;
+use cupso::metrics::Table;
+use cupso::pso::PsoParams;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let iters = cfg.iters(100_000);
+    println!(
+        "table4_speedup_1d: {} iterations ({}), {} reps\n",
+        iters,
+        cfg.scale_note(),
+        cfg.reps
+    );
+
+    let mut table = Table::new(
+        &format!("Table 4 — 1-D speedup, CPU vs Queue Lock ({iters} iters)"),
+        &[
+            "Particles",
+            "CPU (s)",
+            "QueueLock (s)",
+            "Speedup",
+            "est. GPU speedup",
+            "paper speedup",
+        ],
+    );
+
+    let settings = ParallelSettings::with_workers(0);
+    for (n, _, _, paper_speedup) in gpusim::paper::TABLE4 {
+        if n > cfg.max_particles {
+            continue;
+        }
+        // Large serial rows dominate the bench; halve reps beyond 32k.
+        let mut row_cfg = cfg.clone();
+        if n >= 32_768 {
+            row_cfg.reps = (cfg.reps / 2).max(2);
+        }
+        let params = PsoParams::paper_1d(n, iters);
+        let mut serial = SerialEngine;
+        let t_cpu = measure_timed(&row_cfg, || {
+            serial.run(&params, &Cubic, Objective::Maximize, 42);
+        })
+        .trimmed_mean();
+        let mut ql = QueueLockEngine::new(settings.clone());
+        let t_ql = measure_timed(&row_cfg, || {
+            ql.run(&params, &Cubic, Objective::Maximize, 42);
+        })
+        .trimmed_mean();
+        let est_cpu = gpusim::estimate_seconds(EngineKind::SerialCpu, n, 1, 100_000);
+        let est_gpu = gpusim::estimate_seconds(EngineKind::QueueLock, n, 1, 100_000);
+        table.row(&[
+            n.to_string(),
+            format!("{t_cpu:.4}"),
+            format!("{t_ql:.4}"),
+            format!("{:.2}", t_cpu / t_ql),
+            format!("{:.2}", est_cpu / est_gpu),
+            format!("{paper_speedup:.2}"),
+        ]);
+    }
+    table.emit(&results_dir(), "table4_speedup_1d").unwrap();
+    println!(
+        "the measured speedup is bounded by this host's core count; the\n\
+         estimated-GPU column carries the paper's ~200x class and the\n\
+         131072-particle oversubscription drop."
+    );
+}

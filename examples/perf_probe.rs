@@ -1,0 +1,16 @@
+// perf probe: per-particle-iteration cost of the serial hot loop
+use cupso::fitness::{Cubic, Objective};
+use cupso::pso::{serial, PsoParams};
+use std::time::Instant;
+
+fn main() {
+    for (n, d, iters) in [(2048usize, 1usize, 5000u64), (1024, 120, 100)] {
+        let params = PsoParams { dim: d, ..PsoParams::paper_1d(n, iters) };
+        let t = Instant::now();
+        let out = serial::run(&params, &Cubic, Objective::Maximize, 42);
+        let s = t.elapsed().as_secs_f64();
+        let per = s / (n as f64 * iters as f64);
+        println!("n={n} d={d}: {:.3}s total, {:.1} ns/particle-iter, {:.2} ns/dim  (gbest {:.0})",
+            s, per * 1e9, per * 1e9 / d as f64, out.gbest_fit);
+    }
+}

@@ -1,0 +1,17 @@
+// perf probe 2: Plane-A queue engine per-dim cost at large n (striding test)
+use cupso::engine::{Engine, ParallelSettings, QueueEngine};
+use cupso::fitness::{Cubic, Objective};
+use cupso::pso::PsoParams;
+use std::time::Instant;
+
+fn main() {
+    for (n, d, iters) in [(65536usize, 120usize, 10u64), (8192, 120, 50), (65536, 1, 2000)] {
+        let params = PsoParams { dim: d, ..PsoParams::paper_1d(n, iters) };
+        let mut e = QueueEngine::new(ParallelSettings::with_workers(0));
+        let t = Instant::now();
+        let out = e.run(&params, &Cubic, Objective::Maximize, 42);
+        let s = t.elapsed().as_secs_f64();
+        let per = s / (n as f64 * iters as f64 * d as f64);
+        println!("queue n={n} d={d} iters={iters}: {:.3}s, {:.2} ns/dim-update (gbest {:.0})", s, per * 1e9, out.gbest_fit);
+    }
+}

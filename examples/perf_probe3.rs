@@ -1,0 +1,62 @@
+// perf probe 3: hot-loop cost breakdown — full loop vs no-RNG vs RNG-only
+use cupso::rng::PhiloxStream;
+use std::time::Instant;
+
+fn main() {
+    const N: usize = 8192;
+    const D: usize = 120;
+    const ITERS: u64 = 30;
+    let stream = PhiloxStream::new(1);
+    let mut pos = vec![0.5f64; N * D];
+    let mut vel = vec![0.1f64; N * D];
+    let pb = vec![0.7f64; N * D];
+
+    // Full row loop (mirrors step_block phase 1).
+    let t = Instant::now();
+    for iter in 0..ITERS {
+        for d in 0..D {
+            let base = d * N;
+            for i in 0..N {
+                let (r1, r2) = stream.r1r2(i as u64, iter, d as u32);
+                let v = (1.0 * vel[base + i] + 2.0 * r1 * (pb[base + i] - pos[base + i])
+                    + 2.0 * r2 * (0.3 - pos[base + i])).clamp(-100.0, 100.0);
+                vel[base + i] = v;
+                pos[base + i] = (pos[base + i] + v).clamp(-100.0, 100.0);
+            }
+        }
+    }
+    let full = t.elapsed().as_secs_f64();
+
+    // Same loop, RNG replaced by constants.
+    let t = Instant::now();
+    for _iter in 0..ITERS {
+        for d in 0..D {
+            let base = d * N;
+            for i in 0..N {
+                let (r1, r2) = (0.42f64, 0.17f64);
+                let v = (1.0 * vel[base + i] + 2.0 * r1 * (pb[base + i] - pos[base + i])
+                    + 2.0 * r2 * (0.3 - pos[base + i])).clamp(-100.0, 100.0);
+                vel[base + i] = v;
+                pos[base + i] = (pos[base + i] + v).clamp(-100.0, 100.0);
+            }
+        }
+    }
+    let norng = t.elapsed().as_secs_f64();
+
+    // RNG only.
+    let t = Instant::now();
+    let mut acc = 0.0;
+    for iter in 0..ITERS {
+        for d in 0..D {
+            for i in 0..N {
+                let (r1, r2) = stream.r1r2(i as u64, iter, d as u32);
+                acc += r1 + r2;
+            }
+        }
+    }
+    let rngonly = t.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+
+    let per = 1e9 / (N as f64 * D as f64 * ITERS as f64);
+    println!("full: {:.2} ns/dim | no-rng: {:.2} | rng-only: {:.2}", full * per, norng * per, rngonly * per);
+}

@@ -1,0 +1,29 @@
+//! Quickstart: solve the paper's 1-D Cubic problem with the Queue-Lock
+//! engine in ~30 lines.
+//!
+//!     cargo run --release --example quickstart
+
+use cupso::engine::{Engine, ParallelSettings, QueueLockEngine};
+use cupso::fitness::{Cubic, Fitness, Objective};
+use cupso::pso::PsoParams;
+
+fn main() {
+    // The paper's §6.2 workload, scaled to a second or two of runtime.
+    let params = PsoParams::paper_1d(/*particles=*/ 1024, /*iters=*/ 10_000);
+
+    // Queue-Lock (Algorithm 2 + 3): the paper's fastest algorithm.
+    let mut engine = QueueLockEngine::new(ParallelSettings::with_workers(0));
+    let out = engine.run(&params, &Cubic, Objective::Maximize, /*seed=*/ 42);
+
+    println!("gbest fitness : {:.6}", out.gbest_fit);
+    println!("gbest position: {:.6}", out.gbest_pos[0]);
+    println!("known optimum : {:.6} at x = 100", Cubic.optimum(1).unwrap());
+    println!(
+        "improvement rarity: {:.5}% of {} particle updates pushed to a queue",
+        100.0 * out.counters.queue_push_rate(),
+        out.counters.particle_updates,
+    );
+
+    assert!(out.gbest_fit > 899_999.0, "should solve 1-D cubic exactly");
+    println!("OK");
+}

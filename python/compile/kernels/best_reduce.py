@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: per-tile argmax reduction — the *reduction baseline*.
+
+The CUDA baseline tree-reduces every block's fitness array in shared
+memory each iteration (Harris-style), then a second kernel reduces the
+per-block results. The TPU analog: each grid step reduces its fitness
+tile to a (best, index) pair in VMEM and writes it to the aux arrays;
+the (tiny) aux array is then reduced by the caller. Unconditional work
+every iteration — exactly the cost the queue kernel avoids.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(fit_ref, aux_fit_ref, aux_idx_ref, *, tile, maximize):
+    """Reduce one fitness tile to its (best, global index)."""
+    t = pl.program_id(0)
+    fit = fit_ref[...]
+    local = jnp.argmax(fit) if maximize else jnp.argmin(fit)
+    aux_fit_ref[0] = fit[local]
+    aux_idx_ref[0] = (t * tile + local).astype(jnp.int32)
+
+
+def tile_best_reduce(fit, *, tile=None, maximize=True):
+    """Per-tile reduction: ``fit [n] -> (aux_fit [n/tile], aux_idx [n/tile])``.
+
+    The "1st kernel" half of the reduction approach; the caller (the L2
+    model or a second invocation) reduces the aux arrays.
+    """
+    (n,) = fit.shape
+    if tile is None:
+        tile = min(512, n)
+    if n % tile != 0:
+        tile = n
+    grid = (n // tile,)
+    kernel = functools.partial(_reduce_kernel, tile=tile, maximize=maximize)
+    out_shape = [
+        jax.ShapeDtypeStruct((n // tile,), fit.dtype),
+        jax.ShapeDtypeStruct((n // tile,), jnp.int32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(fit)
+
+
+def best_reduce(fit, *, tile=None, maximize=True):
+    """Full two-level reduction to a scalar ``(best_fit, best_idx)``.
+
+    Level 1 is the Pallas tile kernel; level 2 (the "2nd kernel") is a
+    plain argmax over the aux arrays — it is tiny (n/tile elements) and
+    XLA fuses it with the surrounding update, mirroring the single-block
+    second kernel of the paper.
+    """
+    aux_fit, aux_idx = tile_best_reduce(fit, tile=tile, maximize=maximize)
+    k = jnp.argmax(aux_fit) if maximize else jnp.argmin(aux_fit)
+    return aux_fit[k], aux_idx[k]

@@ -1,0 +1,138 @@
+"""L1 Pallas kernel: the fused PSO step (the paper's "1st kernel" body).
+
+One kernel application updates a **particle tile**: velocity (Eq. 1),
+position (Eq. 2), clamps, fitness, and the pbest merge — all in VMEM, one
+HBM round trip per tile per iteration. The grid dimension over particle
+tiles plays the role of the CUDA thread-block grid; ``BlockSpec`` is the
+HBM↔VMEM schedule the paper expressed with blocks and coalesced loads
+(Figure 2): the particle axis is minor/lane-contiguous.
+
+Hardware adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * scalars (w, c1, c2, bounds) are baked at trace time — the constant-
+    memory analog (§5.2); XLA constant-folds them into the kernel.
+  * the random draws r1/r2 arrive as inputs, produced by counter-based
+    threefry in the surrounding jax program (cuRAND analog, §5.4) so the
+    kernel itself stays a pure map and lowers into the same HLO module.
+  * ``interpret=True`` everywhere: the CPU PJRT client cannot execute
+    Mosaic custom-calls; interpret-mode lowers to plain HLO ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Particle-tile width. 8x128-lane friendly; small problems use one tile.
+DEFAULT_TILE = 512
+
+
+def _fitness_tile(p, fitness):
+    """Fitness of a [d, tile] position block, reduced over dim axis."""
+    return ref.FITNESS[fitness](p)
+
+
+def _step_kernel(
+    pos_ref,
+    vel_ref,
+    pbp_ref,
+    pbf_ref,
+    gbp_ref,
+    r1_ref,
+    r2_ref,
+    pos_out,
+    vel_out,
+    pbp_out,
+    pbf_out,
+    fit_out,
+    *,
+    params,
+    fitness,
+    maximize,
+):
+    """Kernel body over one [d, tile] block (all refs already in VMEM)."""
+    w, c1, c2 = params["w"], params["c1"], params["c2"]
+    vmax = params["max_v"]
+    lo, hi = params["min_pos"], params["max_pos"]
+
+    pos = pos_ref[...]
+    vel = vel_ref[...]
+    pbp = pbp_ref[...]
+    pbf = pbf_ref[...]
+    gbp = gbp_ref[...]  # [d, 1] broadcast against the tile
+
+    v = w * vel + c1 * r1_ref[...] * (pbp - pos) + c2 * r2_ref[...] * (gbp - pos)
+    v = jnp.clip(v, -vmax, vmax)
+    p = jnp.clip(pos + v, lo, hi)
+    fit = _fitness_tile(p, fitness)
+
+    better = fit > pbf if maximize else fit < pbf
+    pbf_new = jnp.where(better, fit, pbf)
+    pbp_new = jnp.where(better[None, :], p, pbp)
+
+    pos_out[...] = p
+    vel_out[...] = v
+    pbp_out[...] = pbp_new
+    pbf_out[...] = pbf_new
+    fit_out[...] = fit
+
+
+def pso_step(
+    pos,
+    vel,
+    pbest_pos,
+    pbest_fit,
+    gbest_pos,
+    r1,
+    r2,
+    *,
+    params,
+    fitness="cubic",
+    tile=None,
+):
+    """Apply the fused step kernel to the whole swarm.
+
+    Shapes: pos/vel/pbest_pos/r1/r2 ``[d, n]``, pbest_fit ``[n]``,
+    gbest_pos ``[d]``. Returns the same tuple as :func:`ref.pso_step`.
+
+    ``n`` must be divisible by the tile width (the AOT manifest only emits
+    power-of-two swarm sizes; odd sizes fall back to one full-width tile).
+    """
+    d, n = pos.shape
+    dtype = pos.dtype
+    if tile is None:
+        tile = min(DEFAULT_TILE, n)
+    if n % tile != 0:
+        tile = n  # single-tile fallback for odd sizes
+    grid = (n // tile,)
+    maximize = ref.MAXIMIZE[fitness]
+
+    # [d, tile] tiles over the particle axis for the big arrays...
+    mat = pl.BlockSpec((d, tile), lambda i: (0, i))
+    # ...[tile] for per-particle scalars...
+    row = pl.BlockSpec((tile,), lambda i: (i,))
+    # ...and the full gbest position replicated to every tile.
+    rep = pl.BlockSpec((d, 1), lambda i: (0, 0))
+
+    kernel = functools.partial(
+        _step_kernel, params=params, fitness=fitness, maximize=maximize
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((d, n), dtype),  # pos
+        jax.ShapeDtypeStruct((d, n), dtype),  # vel
+        jax.ShapeDtypeStruct((d, n), dtype),  # pbest_pos
+        jax.ShapeDtypeStruct((n,), dtype),  # pbest_fit
+        jax.ShapeDtypeStruct((n,), dtype),  # fit
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[mat, mat, mat, row, rep, mat, mat],
+        out_specs=[mat, mat, mat, row, row],
+        out_shape=out_shape,
+        interpret=True,
+    )(pos, vel, pbest_pos, pbest_fit, gbest_pos[:, None], r1, r2)

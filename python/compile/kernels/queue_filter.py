@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: predicate-then-reduce — the *queue algorithm* on TPU.
+
+The CUDA queue (Algorithm 2) exploits that improvements over the global
+best are rare (<0.1%): threads conditionally `atomicAdd`-append to a
+shared-memory queue, and the scan of that queue is almost always a no-op.
+
+TPUs have no shared-memory atomics, so the insight is re-expressed in
+lane-parallel form (DESIGN.md §Hardware-Adaptation):
+
+  1. compute the improvement mask ``fit > gbest_fit`` — one vector
+     compare, the analog of Algorithm 2 line 1;
+  2. reduce the mask to a scalar ``any`` flag — the analog of the queue
+     length ``num``;
+  3. only under ``@pl.when(flag)`` run the expensive masked argmax and
+     write the real (fit, index) — the analog of thread 0 scanning a
+     non-empty queue (lines 10–19). The common case writes only the
+     sentinel, skipping the reduction's full data pass.
+
+Both paths write the aux slot (lines 8–9 initialize the aux arrays to
+INT_MIN in the paper — same sentinel idea).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _queue_kernel(fit_ref, gbf_ref, aux_fit_ref, aux_idx_ref, *, tile, maximize):
+    t = pl.program_id(0)
+    fit = fit_ref[...]
+    gbf = gbf_ref[0]
+    sentinel = -jnp.inf if maximize else jnp.inf
+
+    # Algorithm 2 lines 8-9: initialize the aux slot to the sentinel.
+    aux_fit_ref[0] = jnp.asarray(sentinel, fit.dtype)
+    aux_idx_ref[0] = jnp.int32(t * tile)
+
+    mask = fit > gbf if maximize else fit < gbf
+    improved = jnp.any(mask)  # the queue length `num`
+
+    @pl.when(improved)
+    def _scan_queue():
+        # Lines 10-19: only entered when the queue is non-empty.
+        masked = jnp.where(mask, fit, sentinel)
+        local = jnp.argmax(masked) if maximize else jnp.argmin(masked)
+        aux_fit_ref[0] = masked[local]
+        aux_idx_ref[0] = (t * tile + local).astype(jnp.int32)
+
+
+def tile_queue_filter(fit, gbest_fit, *, tile=None, maximize=True):
+    """Per-tile conditional aggregation.
+
+    ``fit [n]``, ``gbest_fit`` scalar → ``(aux_fit [n/tile],
+    aux_idx [n/tile])`` where non-improving tiles carry the sentinel.
+    """
+    (n,) = fit.shape
+    if tile is None:
+        tile = min(512, n)
+    if n % tile != 0:
+        tile = n
+    grid = (n // tile,)
+    kernel = functools.partial(_queue_kernel, tile=tile, maximize=maximize)
+    gbf = jnp.reshape(gbest_fit, (1,)).astype(fit.dtype)
+    out_shape = [
+        jax.ShapeDtypeStruct((n // tile,), fit.dtype),
+        jax.ShapeDtypeStruct((n // tile,), jnp.int32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(fit, gbf)
+
+
+def queue_filter(fit, gbest_fit, *, tile=None, maximize=True):
+    """Scalar result matching :func:`ref.queue_filter`:
+    ``(best_fit, best_idx, any_improved)``."""
+    aux_fit, aux_idx = tile_queue_filter(fit, gbest_fit, tile=tile, maximize=maximize)
+    k = jnp.argmax(aux_fit) if maximize else jnp.argmin(aux_fit)
+    best_fit = aux_fit[k]
+    sentinel = -jnp.inf if maximize else jnp.inf
+    improved = best_fit != sentinel
+    best_idx = jnp.where(improved, aux_idx[k], 0)
+    return best_fit, best_idx, improved

@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for the Pallas kernels and the full PSO iteration.
+
+Everything here is straight-line jax.numpy with no Pallas, no scan — the
+simplest possible statement of the math, used by pytest to validate the
+kernels and the scan model. Layout convention everywhere: positions are
+``[dim, n]`` (dimension-major, particle-minor — the SoA/coalesced layout
+of the paper's Figure 2 adapted to TPU lanes).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Fitness functions (the paper's Cubic, Eq. 3, plus alternates).
+# ---------------------------------------------------------------------------
+
+
+def cubic(pos):
+    """Eq. 3: sum_d x^3 - 0.8 x^2 - 1000 x + 8000 over dim axis 0."""
+    x = pos
+    return jnp.sum(((x - 0.8) * x - 1000.0) * x + 8000.0, axis=0)
+
+
+def sphere(pos):
+    """Sum of squares (minimization benchmark)."""
+    return jnp.sum(pos * pos, axis=0)
+
+
+def rastrigin(pos):
+    """10 d + sum (x^2 - 10 cos 2 pi x)."""
+    d = pos.shape[0]
+    return 10.0 * d + jnp.sum(
+        pos * pos - 10.0 * jnp.cos(2.0 * jnp.pi * pos), axis=0
+    )
+
+
+FITNESS = {"cubic": cubic, "sphere": sphere, "rastrigin": rastrigin}
+
+# Whether larger is better, per function (the paper maximizes Cubic).
+MAXIMIZE = {"cubic": True, "sphere": False, "rastrigin": False}
+
+
+# ---------------------------------------------------------------------------
+# Step kernel oracle.
+# ---------------------------------------------------------------------------
+
+
+def pso_step(pos, vel, pbest_pos, pbest_fit, gbest_pos, r1, r2, *, params, fitness="cubic"):
+    """One synchronous PSO update for the whole swarm.
+
+    Args:
+        pos, vel, pbest_pos: ``[d, n]``.
+        pbest_fit: ``[n]``.
+        gbest_pos: ``[d]`` (frozen for the iteration).
+        r1, r2: ``[d, n]`` uniforms in [0, 1).
+        params: dict with w, c1, c2, min_pos, max_pos, max_v.
+        fitness: fitness key in ``FITNESS``.
+
+    Returns:
+        (pos', vel', pbest_pos', pbest_fit', fit') with fit' ``[n]``.
+    """
+    w, c1, c2 = params["w"], params["c1"], params["c2"]
+    vmax = params["max_v"]
+    lo, hi = params["min_pos"], params["max_pos"]
+    maximize = MAXIMIZE[fitness]
+
+    v = w * vel + c1 * r1 * (pbest_pos - pos) + c2 * r2 * (gbest_pos[:, None] - pos)
+    v = jnp.clip(v, -vmax, vmax)
+    p = jnp.clip(pos + v, lo, hi)
+    fit = FITNESS[fitness](p)
+    better = fit > pbest_fit if maximize else fit < pbest_fit
+    new_pbest_fit = jnp.where(better, fit, pbest_fit)
+    new_pbest_pos = jnp.where(better[None, :], p, pbest_pos)
+    return p, v, new_pbest_pos, new_pbest_fit, fit
+
+
+# ---------------------------------------------------------------------------
+# Aggregation oracles.
+# ---------------------------------------------------------------------------
+
+
+def best_reduce(fit, *, maximize=True):
+    """Full argmax/argmin reduction: returns (best_fit, best_idx)."""
+    idx = jnp.argmax(fit) if maximize else jnp.argmin(fit)
+    return fit[idx], idx
+
+
+def queue_filter(fit, gbest_fit, *, maximize=True):
+    """The queue-algorithm semantics: the best *improving* candidate.
+
+    Returns (best_fit, best_idx, any_improved). When nothing improves,
+    best_fit is the sentinel (-inf for maximize) and best_idx is 0 —
+    matching the kernel's cheap no-improvement path.
+    """
+    mask = fit > gbest_fit if maximize else fit < gbest_fit
+    sentinel = -jnp.inf if maximize else jnp.inf
+    masked = jnp.where(mask, fit, sentinel)
+    any_improved = jnp.any(mask)
+    best_fit, best_idx = best_reduce(masked, maximize=maximize)
+    best_fit = jnp.where(any_improved, best_fit, sentinel)
+    best_idx = jnp.where(any_improved, best_idx, 0)
+    return best_fit, best_idx, any_improved
+
+
+# ---------------------------------------------------------------------------
+# Full-iteration oracle (synchronous PPSO semantics).
+# ---------------------------------------------------------------------------
+
+
+def pso_iteration(state, r1, r2, *, params, fitness="cubic"):
+    """One full synchronous iteration: step + gbest update.
+
+    ``state`` is (pos, vel, pbest_pos, pbest_fit, gbest_pos, gbest_fit).
+    """
+    pos, vel, pbp, pbf, gbp, gbf = state
+    maximize = MAXIMIZE[fitness]
+    pos, vel, pbp, pbf, fit = pso_step(
+        pos, vel, pbp, pbf, gbp, r1, r2, params=params, fitness=fitness
+    )
+    cand_fit, cand_idx = best_reduce(fit, maximize=maximize)
+    better = cand_fit > gbf if maximize else cand_fit < gbf
+    gbf = jnp.where(better, cand_fit, gbf)
+    gbp = jnp.where(better, pos[:, cand_idx], gbp)
+    return (pos, vel, pbp, pbf, gbp, gbf)

@@ -1,0 +1,162 @@
+"""L2: the PSO compute graph — K synchronous iterations as a lax.scan.
+
+This is the unit the AOT pipeline lowers to one HLO artifact: the Rust
+coordinator calls it in a loop ("chunks"), keeping Python entirely out of
+the runtime. The scan carry holds the full swarm state plus the global
+best, so there is **no host round trip between iterations** — the
+inter-iteration dependency the CUDA version pays kernel launches for is
+a carry edge here.
+
+Three aggregation variants mirror the paper's algorithms:
+
+  * ``reduction`` — the baseline: full per-tile argmax every iteration
+    (kernels/best_reduce.py) + tiny second-level reduce.
+  * ``queue``     — the paper's contribution re-expressed for TPU:
+    predicate-then-reduce (kernels/queue_filter.py); the expensive pass
+    runs only when something improved.
+  * ``fused``     — the queue-lock analog: no aux arrays at all, the
+    candidate max updates the gbest carry inline, letting XLA fuse the
+    whole iteration into one computation (the "one kernel per iteration"
+    structure of Algorithm 3).
+
+All three produce bit-identical trajectories (same argmax tie-breaking);
+pytest asserts it.
+
+RNG: counter-based threefry keyed by ``fold_in(key, iter0 + t)`` — the
+stateless per-(iteration) streams of cuRAND (§5.4), replayable across
+chunks because the Rust side passes the running iteration offset.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import best_reduce as br
+from .kernels import pso_step as ps
+from .kernels import queue_filter as qf
+from .kernels import ref
+
+VARIANTS = ("reduction", "queue", "fused")
+
+
+def default_params():
+    """The paper's §6.1 parameter set on the Cubic domain."""
+    return dict(w=1.0, c1=2.0, c2=2.0, min_pos=-100.0, max_pos=100.0, max_v=100.0)
+
+
+def make_chunk(*, variant="queue", iters=50, params=None, fitness="cubic", tile=None):
+    """Build the chunk function ``(state..., key_bits, iter0) -> state...``.
+
+    Signature (all positional, the artifact ABI the Rust runtime uses):
+
+        pos       f64[d, n]     in/out
+        vel       f64[d, n]     in/out
+        pbest_pos f64[d, n]     in/out
+        pbest_fit f64[n]        in/out
+        gbest_pos f64[d]        in/out
+        gbest_fit f64[]         in/out
+        key_bits  u32[2]        in       (threefry key data)
+        iter0     i64[]         in       (global iteration offset)
+
+    Returns ``(pos, vel, pbest_pos, pbest_fit, gbest_pos, gbest_fit,
+    trace)`` where ``trace`` is ``f64[iters]`` of gbest_fit after each
+    iteration (convergence telemetry for the coordinator).
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; expected {VARIANTS}")
+    if params is None:
+        params = default_params()
+    maximize = ref.MAXIMIZE[fitness]
+
+    def chunk(pos, vel, pbp, pbf, gbp, gbf, key_bits, iter0):
+        key = jax.random.wrap_key_data(key_bits, impl="threefry2x32")
+        d, n = pos.shape
+        dtype = pos.dtype
+
+        def body(carry, t):
+            pos, vel, pbp, pbf, gbp, gbf = carry
+            k = jax.random.fold_in(key, iter0 + t)
+            r = jax.random.uniform(k, (2, d, n), dtype)
+            pos, vel, pbp, pbf, fit = ps.pso_step(
+                pos, vel, pbp, pbf, gbp, r[0], r[1],
+                params=params, fitness=fitness, tile=tile,
+            )
+            if variant == "reduction":
+                cand_fit, cand_idx = br.best_reduce(fit, tile=tile, maximize=maximize)
+                better = cand_fit > gbf if maximize else cand_fit < gbf
+            elif variant == "queue":
+                cand_fit, cand_idx, better = qf.queue_filter(
+                    fit, gbf, tile=tile, maximize=maximize
+                )
+            else:  # fused
+                cand_idx = jnp.argmax(fit) if maximize else jnp.argmin(fit)
+                cand_fit = fit[cand_idx]
+                better = cand_fit > gbf if maximize else cand_fit < gbf
+            gbf = jnp.where(better, cand_fit, gbf)
+            gbp = jnp.where(better, pos[:, cand_idx], gbp)
+            return (pos, vel, pbp, pbf, gbp, gbf), gbf
+
+        init = (pos, vel, pbp, pbf, gbp, gbf)
+        (pos, vel, pbp, pbf, gbp, gbf), trace = jax.lax.scan(
+            body, init, jnp.arange(iters, dtype=jnp.int64)
+        )
+        return pos, vel, pbp, pbf, gbp, gbf, trace
+
+    chunk.__name__ = f"pso_chunk_{variant}_{fitness}_k{iters}"
+    return chunk
+
+
+def init_state(n, d, *, key, params=None, fitness="cubic", dtype=jnp.float64):
+    """Step-1 initialization (uniform positions/velocities, seeded bests).
+
+    Build-time helper for tests and for producing the initial literals the
+    Rust runtime feeds the first chunk.
+    """
+    if params is None:
+        params = default_params()
+    kp, kv = jax.random.split(key)
+    lo, hi = params["min_pos"], params["max_pos"]
+    vmax = params["max_v"]
+    pos = jax.random.uniform(kp, (d, n), dtype, lo, hi)
+    vel = jax.random.uniform(kv, (d, n), dtype, -vmax, vmax)
+    fit = ref.FITNESS[fitness](pos)
+    maximize = ref.MAXIMIZE[fitness]
+    gi = jnp.argmax(fit) if maximize else jnp.argmin(fit)
+    return (
+        pos,
+        vel,
+        pos,          # pbest_pos
+        fit,          # pbest_fit
+        pos[:, gi],   # gbest_pos
+        fit[gi],      # gbest_fit
+    )
+
+
+def reference_chunk(*, iters, params=None, fitness="cubic"):
+    """Pure-jnp oracle for :func:`make_chunk` (no Pallas, python loop)."""
+    if params is None:
+        params = default_params()
+
+    def chunk(pos, vel, pbp, pbf, gbp, gbf, key_bits, iter0):
+        key = jax.random.wrap_key_data(key_bits, impl="threefry2x32")
+        d, n = pos.shape
+        state = (pos, vel, pbp, pbf, gbp, gbf)
+        trace = []
+        for t in range(iters):
+            k = jax.random.fold_in(key, iter0 + t)
+            r = jax.random.uniform(k, (2, d, n), pos.dtype)
+            state = ref.pso_iteration(state, r[0], r[1], params=params, fitness=fitness)
+            trace.append(state[5])
+        return (*state, jnp.stack(trace))
+
+    return chunk
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_cache(variant, iters, fitness, n, d):
+    """Jitted chunk per static config (used by tests/benches)."""
+    fn = make_chunk(variant=variant, iters=iters, fitness=fitness)
+    return jax.jit(fn)

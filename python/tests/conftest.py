@@ -1,0 +1,23 @@
+"""Shared pytest fixtures. x64 must be enabled before any jax import in
+the test modules (f64 end-to-end, matching the paper's double precision).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+from compile import model  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def paper_params():
+    return model.default_params()
+
+
+def make_swarm(n, d, seed=0, dtype=jnp.float64):
+    """Random-but-deterministic swarm state for tests."""
+    key = jax.random.PRNGKey(seed)
+    return model.init_state(n, d, key=key, dtype=dtype)

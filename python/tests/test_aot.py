@@ -1,0 +1,80 @@
+"""AOT pipeline: lowered HLO text is well-formed, the manifest describes
+it accurately, and lowering is deterministic."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    configs = [("queue", 128, 1, 5), ("fused", 128, 2, 5)]
+    names = aot.build(str(out), configs, verbose=False)
+    return out, names, configs
+
+
+class TestBuild:
+    def test_writes_all_files(self, built):
+        out, names, configs = built
+        assert len(names) == len(configs)
+        for name in names:
+            assert (out / f"{name}.hlo.txt").exists()
+        assert (out / "manifest.toml").exists()
+
+    def test_hlo_text_is_parseable_module(self, built):
+        out, names, _ = built
+        for name in names:
+            text = (out / f"{name}.hlo.txt").read_text()
+            assert text.startswith("HloModule"), f"{name} is not HLO text"
+            assert "ENTRY" in text
+            # The ABI: 8 inputs, 7-tuple output, f64 state.
+            assert "u32[2]" in text
+            assert "f64[" in text
+
+    def test_manifest_describes_artifacts(self, built):
+        out, names, configs = built
+        mf = (out / "manifest.toml").read_text()
+        for name, (variant, n, d, k) in zip(names, configs):
+            assert f"[artifact.{name}]" in mf
+            assert f'variant = "{variant}"' in mf
+            assert f"n = {n}" in mf
+            assert f"dim = {d}" in mf
+            assert f"iters = {k}" in mf
+        assert "outputs = 7" in mf
+
+    def test_manifest_hashes_match_files(self, built):
+        import hashlib
+
+        out, names, _ = built
+        mf = (out / "manifest.toml").read_text()
+        for name in names:
+            text = (out / f"{name}.hlo.txt").read_text()
+            sha = hashlib.sha256(text.encode()).hexdigest()
+            assert sha in mf, f"stale hash for {name}"
+
+
+class TestLowering:
+    def test_deterministic(self):
+        a = aot.lower_chunk("queue", 64, 1, 3)
+        b = aot.lower_chunk("queue", 64, 1, 3)
+        assert a == b
+
+    def test_scalars_are_baked(self):
+        # w, c1, c2 are compile-time constants: no runtime parameter should
+        # carry them (8 params exactly: 6 state + key + iter0).
+        text = aot.lower_chunk("fused", 64, 1, 3)
+        entry = text[text.index("ENTRY"):]
+        n_params = entry.count("parameter(")
+        assert n_params == 8, f"expected 8 entry params, found {n_params}"
+
+    def test_artifact_name_round_trip(self):
+        assert aot.artifact_name("queue", 1024, 120, 25) == "pso_queue_n1024_d120_k25"
+
+    def test_variant_structure_differs(self):
+        # The three variants must lower to genuinely different programs
+        # (otherwise the xla_runtime bench compares nothing).
+        texts = {v: aot.lower_chunk(v, 128, 1, 3) for v in model.VARIANTS}
+        assert len(set(texts.values())) == 3

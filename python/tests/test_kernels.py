@@ -1,0 +1,157 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps the shape/dtype/seed space — the CORE correctness
+signal for the kernel layer (kernels run under interpret=True, so these
+semantics are exactly what the AOT artifacts embed).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import best_reduce as br
+from compile.kernels import pso_step as ps
+from compile.kernels import queue_filter as qf
+from compile.kernels import ref
+
+from .conftest import make_swarm
+
+# Tolerances per dtype: interpret-mode Pallas and jnp share the same
+# scalar semantics, so f64 agrees to near-ulp. f32 needs an absolute
+# floor: Cubic spans ±1e6 and crosses zero, so a 1-ulp position
+# difference (XLA may fuse mul-adds differently) moves the fitness by
+# O(1) absolute — meaningless relative to the value range, fatal to a
+# pure rtol check near the zeros.
+# (f64 dim-sums may associate differently between the tiled kernel and
+# the oracle: a few ulps at 1e6 scale ⇒ atol ~1e-8.)
+TOL = {jnp.float64: dict(rtol=1e-9, atol=1e-7), jnp.float32: dict(rtol=1e-4, atol=2.0)}
+
+DIMS = st.sampled_from([1, 2, 3, 7, 120])
+SIZES = st.sampled_from([64, 128, 256, 512, 1024])
+TILES = st.sampled_from([None, 64, 128, 512])
+DTYPES = st.sampled_from([jnp.float64, jnp.float32])
+
+
+def _rand_inputs(n, d, seed, dtype):
+    params = model.default_params()
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    pos = jax.random.uniform(ks[0], (d, n), dtype, -100.0, 100.0)
+    vel = jax.random.uniform(ks[1], (d, n), dtype, -100.0, 100.0)
+    pbp = jax.random.uniform(ks[2], (d, n), dtype, -100.0, 100.0)
+    pbf = ref.cubic(pbp)
+    gbp = pos[:, 0]
+    r1 = jax.random.uniform(ks[3], (d, n), dtype)
+    r2 = jax.random.uniform(ks[4], (d, n), dtype)
+    return params, pos, vel, pbp, pbf, gbp, r1, r2
+
+
+class TestStepKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(n=SIZES, d=DIMS, seed=st.integers(0, 2**31 - 1), tile=TILES, dtype=DTYPES)
+    def test_matches_ref(self, n, d, seed, tile, dtype):
+        params, pos, vel, pbp, pbf, gbp, r1, r2 = _rand_inputs(n, d, seed, dtype)
+        want = ref.pso_step(pos, vel, pbp, pbf, gbp, r1, r2, params=params)
+        got = ps.pso_step(pos, vel, pbp, pbf, gbp, r1, r2, params=params, tile=tile)
+        for w, g, name in zip(want, got, ["pos", "vel", "pbp", "pbf", "fit"]):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), err_msg=f"{name} n={n} d={d}", **TOL[dtype]
+            )
+
+    def test_odd_size_falls_back_to_single_tile(self):
+        # 300 is not divisible by the default tile; must still be correct.
+        params, pos, vel, pbp, pbf, gbp, r1, r2 = _rand_inputs(300, 2, 3, jnp.float64)
+        want = ref.pso_step(pos, vel, pbp, pbf, gbp, r1, r2, params=params)
+        got = ps.pso_step(pos, vel, pbp, pbf, gbp, r1, r2, params=params)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=1e-12)
+
+    def test_clamps_are_enforced(self):
+        params, pos, vel, pbp, pbf, gbp, r1, r2 = _rand_inputs(128, 3, 1, jnp.float64)
+        vel = vel * 1e6  # force the clamp
+        got = ps.pso_step(pos, vel, pbp, pbf, gbp, r1, r2, params=params)
+        assert float(jnp.max(jnp.abs(got[1]))) <= params["max_v"] + 1e-9
+        assert float(jnp.max(got[0])) <= params["max_pos"] + 1e-9
+        assert float(jnp.min(got[0])) >= params["min_pos"] - 1e-9
+
+    def test_sphere_fitness_variant(self):
+        params, pos, vel, pbp, pbf, gbp, r1, r2 = _rand_inputs(128, 4, 5, jnp.float64)
+        pbf = ref.sphere(pbp)
+        want = ref.pso_step(pos, vel, pbp, pbf, gbp, r1, r2, params=params, fitness="sphere")
+        got = ps.pso_step(
+            pos, vel, pbp, pbf, gbp, r1, r2, params=params, fitness="sphere"
+        )
+        for w, g in zip(want, got):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-12)
+
+
+class TestBestReduce:
+    @settings(max_examples=25, deadline=None)
+    @given(n=SIZES, seed=st.integers(0, 2**31 - 1), tile=TILES)
+    def test_matches_argmax(self, n, seed, tile):
+        fit = jax.random.uniform(jax.random.PRNGKey(seed), (n,), jnp.float64, -1e6, 1e6)
+        wf, wi = ref.best_reduce(fit)
+        gf, gi = br.best_reduce(fit, tile=tile)
+        assert float(wf) == float(gf)
+        assert int(wi) == int(gi)
+
+    def test_minimize_sense(self):
+        fit = jnp.asarray([5.0, -2.0, 7.0, -2.0])
+        gf, gi = br.best_reduce(fit, maximize=False)
+        assert float(gf) == -2.0
+        assert int(gi) == 1  # first minimum wins
+
+    def test_duplicate_max_takes_first_index(self):
+        fit = jnp.asarray([1.0, 9.0, 9.0, 3.0] * 64)
+        gf, gi = br.best_reduce(fit, tile=64)
+        assert float(gf) == 9.0
+        assert int(gi) == 1
+
+    def test_tile_level_outputs(self):
+        fit = jnp.arange(256, dtype=jnp.float64)
+        aux_fit, aux_idx = br.tile_best_reduce(fit, tile=64)
+        assert aux_fit.shape == (4,)
+        np.testing.assert_allclose(np.asarray(aux_fit), [63.0, 127.0, 191.0, 255.0])
+        np.testing.assert_array_equal(np.asarray(aux_idx), [63, 127, 191, 255])
+
+
+class TestQueueFilter:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=SIZES,
+        seed=st.integers(0, 2**31 - 1),
+        tile=TILES,
+        quantile=st.sampled_from([0.0, 0.5, 0.9, 1.0]),
+    )
+    def test_matches_ref_across_thresholds(self, n, seed, tile, quantile):
+        fit = jax.random.uniform(jax.random.PRNGKey(seed), (n,), jnp.float64, -1e6, 1e6)
+        gbf = float(jnp.quantile(fit, quantile))
+        wf, wi, wany = ref.queue_filter(fit, gbf)
+        gf, gi, gany = qf.queue_filter(fit, gbf, tile=tile)
+        assert bool(wany) == bool(gany)
+        assert float(wf) == float(gf)
+        if bool(wany):
+            assert int(wi) == int(gi)
+
+    def test_no_improvement_is_cheap_sentinel(self):
+        fit = jnp.zeros(256, jnp.float64)
+        gf, gi, gany = qf.queue_filter(fit, 1.0, tile=64)
+        assert not bool(gany)
+        assert float(gf) == -np.inf
+
+    def test_single_improver_found_in_any_tile(self):
+        for hot in [0, 63, 64, 200, 255]:
+            fit = jnp.zeros(256, jnp.float64).at[hot].set(5.0)
+            gf, gi, gany = qf.queue_filter(fit, 1.0, tile=64)
+            assert bool(gany)
+            assert int(gi) == hot
+            assert float(gf) == 5.0
+
+    def test_minimize_sense(self):
+        fit = jnp.asarray([5.0, 1.0, 3.0, 0.5] * 32)
+        gf, gi, gany = qf.queue_filter(fit, 0.75, tile=32, maximize=False)
+        assert bool(gany)
+        assert float(gf) == 0.5
+        assert int(gi) == 3

@@ -1,0 +1,117 @@
+"""L2 correctness: the scan-chunk model vs the pure python-loop oracle,
+cross-variant equivalence, convergence behaviour, and chunk chaining
+(the ABI property the Rust coordinator depends on)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+from .conftest import make_swarm
+
+KEY_BITS = jax.random.key_data(jax.random.PRNGKey(2022))
+
+
+def run_chunk(variant, state, iters, iter0=0):
+    fn = jax.jit(model.make_chunk(variant=variant, iters=iters))
+    return fn(*state, KEY_BITS, jnp.int64(iter0))
+
+
+class TestVariantEquivalence:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.sampled_from([64, 256, 1024]),
+        d=st.sampled_from([1, 3, 120]),
+        seed=st.integers(0, 1000),
+    )
+    def test_all_variants_identical(self, n, d, seed):
+        state = make_swarm(n, d, seed)
+        outs = [run_chunk(v, state, 8) for v in model.VARIANTS]
+        for v, o in zip(model.VARIANTS[1:], outs[1:]):
+            for a, b in zip(outs[0], o):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b), err_msg=f"{v} diverged (n={n} d={d})"
+                )
+
+    def test_variants_match_python_loop_oracle(self):
+        state = make_swarm(128, 2, 1)
+        oracle = model.reference_chunk(iters=12)(*state, KEY_BITS, jnp.int64(0))
+        for v in model.VARIANTS:
+            out = run_chunk(v, state, 12)
+            for a, b, name in zip(
+                out, oracle, ["pos", "vel", "pbp", "pbf", "gbp", "gbf", "trace"]
+            ):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=1e-12, err_msg=f"{v}:{name}"
+                )
+
+
+class TestConvergence:
+    def test_gbest_trace_is_monotone(self):
+        state = make_swarm(256, 120, 3)
+        out = run_chunk("queue", state, 30)
+        trace = np.asarray(out[6])
+        assert np.all(np.diff(trace) >= 0), "gbest worsened within a chunk"
+
+    def test_solves_cubic_1d(self):
+        state = make_swarm(512, 1, 4)
+        out = run_chunk("fused", state, 60)
+        assert float(out[5]) > 899_000.0  # optimum 900k at x=100
+
+    def test_positions_stay_in_bounds(self):
+        state = make_swarm(128, 5, 9)
+        out = run_chunk("queue", state, 25)
+        pos = np.asarray(out[0])
+        assert pos.max() <= 100.0 + 1e-9 and pos.min() >= -100.0 - 1e-9
+        vel = np.asarray(out[1])
+        assert np.abs(vel).max() <= 100.0 + 1e-9
+
+
+class TestChunkChaining:
+    """Two chunks of K must equal one chunk of 2K when iter0 is threaded —
+    the exact contract the Rust coordinator relies on."""
+
+    def test_chaining_equals_single_long_chunk(self):
+        state = make_swarm(256, 3, 7)
+        single = run_chunk("queue", state, 20)
+        half1 = run_chunk("queue", state, 10, iter0=0)
+        half2 = run_chunk("queue", tuple(half1[:6]), 10, iter0=10)
+        for a, b, name in zip(
+            half2[:6], single[:6], ["pos", "vel", "pbp", "pbf", "gbp", "gbf"]
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+        # Traces concatenate.
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(half1[6]), np.asarray(half2[6])]),
+            np.asarray(single[6]),
+        )
+
+    def test_different_iter0_gives_different_randomness(self):
+        # One iteration only: longer 1-D/2-D cubic runs clamp every
+        # particle onto the domain corner, where different random draws
+        # produce identical (saturated) positions.
+        state = make_swarm(64, 2, 5)
+        a = run_chunk("queue", state, 1, iter0=0)
+        b = run_chunk("queue", state, 1, iter0=1000)
+        assert not np.array_equal(np.asarray(a[1]), np.asarray(b[1])), "velocities"
+
+
+class TestInitState:
+    def test_shapes_and_bounds(self):
+        state = model.init_state(128, 7, key=jax.random.PRNGKey(0))
+        pos, vel, pbp, pbf, gbp, gbf = state
+        assert pos.shape == (7, 128) and pbf.shape == (128,) and gbp.shape == (7,)
+        assert float(jnp.max(pos)) <= 100.0 and float(jnp.min(pos)) >= -100.0
+        np.testing.assert_array_equal(np.asarray(pos), np.asarray(pbp))
+
+    def test_gbest_is_swarm_argmax(self):
+        state = model.init_state(64, 2, key=jax.random.PRNGKey(1))
+        _, _, _, pbf, _, gbf = state
+        assert float(gbf) == float(jnp.max(pbf))
+
+    def test_rejects_unknown_variant(self):
+        with pytest.raises(ValueError):
+            model.make_chunk(variant="warp")

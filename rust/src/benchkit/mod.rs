@@ -1,0 +1,149 @@
+//! Bench runner used by every `benches/*.rs` target.
+//!
+//! criterion is unavailable in this offline environment, so this module
+//! provides the harness: warmup, R repetitions, the paper's trimmed-mean
+//! estimator ([`crate::metrics::Summary::trimmed_mean`]), and scale
+//! control. The paper runs each configuration 10 times and drops min/max
+//! (§6.1); `BenchConfig::paper()` reproduces that protocol, while the
+//! default CI scale keeps `cargo bench` minutes-fast.
+//!
+//! Scale knobs (environment, so `cargo bench` needs no arg plumbing):
+//! * `CUPSO_BENCH_SCALE=paper` — full paper workloads (100k iterations,
+//!   up to 131072 particles). Expect minutes-to-hours like the original.
+//! * `CUPSO_BENCH_SCALE=ci` (default) — iteration counts divided so every
+//!   table finishes in a few minutes while preserving the comparisons.
+//! * `CUPSO_BENCH_REPS=n` — override repetition count.
+
+use crate::metrics::Summary;
+
+/// Measurement protocol configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Timed repetitions per configuration.
+    pub reps: usize,
+    /// Untimed warmup repetitions.
+    pub warmup: usize,
+    /// Iteration-count divisor vs the paper's workloads (1 = paper scale).
+    pub iter_divisor: u64,
+    /// Cap on particle-count sweeps (paper max 131072).
+    pub max_particles: usize,
+}
+
+impl BenchConfig {
+    /// The paper's protocol: 10 runs, trim min/max, full workloads.
+    pub fn paper() -> Self {
+        Self {
+            reps: 10,
+            warmup: 1,
+            iter_divisor: 1,
+            max_particles: 131_072,
+        }
+    }
+
+    /// CI-scale: identical comparisons, ~50× smaller workloads.
+    pub fn ci() -> Self {
+        Self {
+            reps: 5,
+            warmup: 1,
+            iter_divisor: 50,
+            max_particles: 131_072,
+        }
+    }
+
+    /// Resolve from the environment (see module docs).
+    pub fn from_env() -> Self {
+        let mut cfg = match std::env::var("CUPSO_BENCH_SCALE").as_deref() {
+            Ok("paper") => Self::paper(),
+            Ok("smoke") => Self {
+                reps: 2,
+                warmup: 0,
+                iter_divisor: 1000,
+                max_particles: 8192,
+            },
+            _ => Self::ci(),
+        };
+        if let Ok(r) = std::env::var("CUPSO_BENCH_REPS") {
+            if let Ok(r) = r.parse() {
+                cfg.reps = r;
+            }
+        }
+        cfg
+    }
+
+    /// Scale a paper iteration count by the divisor (≥1 iteration).
+    pub fn iters(&self, paper_iters: u64) -> u64 {
+        (paper_iters / self.iter_divisor).max(1)
+    }
+
+    /// Scale factor back to paper iterations (for reporting extrapolated
+    /// absolute times next to measured ones).
+    pub fn scale_note(&self) -> String {
+        if self.iter_divisor == 1 {
+            "paper scale".to_string()
+        } else {
+            format!("iterations ÷{}", self.iter_divisor)
+        }
+    }
+}
+
+/// Run `f` under the protocol and summarize the measured seconds.
+pub fn measure<F: FnMut() -> f64>(cfg: &BenchConfig, mut f: F) -> Summary {
+    for _ in 0..cfg.warmup {
+        let _ = f();
+    }
+    let samples: Vec<f64> = (0..cfg.reps.max(1)).map(|_| f()).collect();
+    Summary::from_samples(&samples)
+}
+
+/// Run a closure `reps` times, timing each run wholesale.
+pub fn measure_timed<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Summary {
+    measure(cfg, || {
+        let sw = crate::metrics::Stopwatch::start();
+        f();
+        sw.elapsed_s()
+    })
+}
+
+/// Where bench CSV outputs land (`target/bench-results`).
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("target/bench-results");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_protocol_matches_section_6_1() {
+        let p = BenchConfig::paper();
+        assert_eq!(p.reps, 10);
+        assert_eq!(p.iter_divisor, 1);
+        assert_eq!(p.iters(100_000), 100_000);
+    }
+
+    #[test]
+    fn ci_scale_preserves_at_least_one_iteration() {
+        let c = BenchConfig::ci();
+        assert!(c.iters(10) >= 1);
+        assert_eq!(c.iters(100_000), 2_000);
+    }
+
+    #[test]
+    fn measure_collects_reps_samples() {
+        let cfg = BenchConfig {
+            reps: 4,
+            warmup: 1,
+            iter_divisor: 1,
+            max_particles: 1,
+        };
+        let mut calls = 0;
+        let s = measure(&cfg, || {
+            calls += 1;
+            calls as f64
+        });
+        assert_eq!(calls, 5); // 1 warmup + 4 timed
+        assert_eq!(s.n(), 4);
+    }
+}

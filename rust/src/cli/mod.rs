@@ -1,0 +1,234 @@
+//! Dependency-free CLI argument parser (clap is unavailable offline).
+//!
+//! Supports the launcher's needs: a subcommand word followed by
+//! `--flag value`, `--flag=value`, and boolean `--flag` options, with
+//! declared options, typed accessors, and generated `--help` text.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Declared option metadata (for help text + unknown-flag rejection).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Long name without the `--`.
+    pub name: &'static str,
+    /// Help line.
+    pub help: &'static str,
+    /// Whether the option consumes a value.
+    pub takes_value: bool,
+    /// Shown default, if any.
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line: subcommand + options + positional args.
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// The subcommand word (first non-flag argument), if any.
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// String option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Presence of a boolean flag.
+    pub fn flag(&self, name: &str) -> bool {
+        self.opts.contains_key(name)
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(raw) => raw
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {raw:?}: {e}")),
+        }
+    }
+}
+
+/// A subcommand parser: declared options + usage rendering.
+pub struct Command {
+    name: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    /// New subcommand spec.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// Declare an option that takes a value.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Render the help text.
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{}{val}\n        {}{def}\n", o.name, o.help));
+        }
+        out
+    }
+
+    /// Parse raw args (post-subcommand) against the declared options.
+    pub fn parse(&self, raw: &[String]) -> Result<Args> {
+        let mut opts = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = raw.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .with_context(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                let value = if spec.takes_value {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .with_context(|| format!("--{name} expects a value"))?
+                            .clone(),
+                    }
+                } else {
+                    if inline.is_some() {
+                        bail!("--{name} does not take a value");
+                    }
+                    "true".to_string()
+                };
+                opts.insert(name.to_string(), value);
+            } else {
+                positional.push(arg.clone());
+            }
+        }
+        // Apply declared defaults for options not given, so `get` is
+        // reliable wherever a default exists.
+        for spec in &self.opts {
+            if spec.takes_value && !opts.contains_key(spec.name) {
+                if let Some(d) = spec.default {
+                    opts.insert(spec.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(Args {
+            command: Some(self.name.to_string()),
+            opts,
+            positional,
+        })
+    }
+}
+
+/// Split argv into `(subcommand, rest)`.
+pub fn split_subcommand(argv: &[String]) -> (Option<&str>, &[String]) {
+    match argv.first() {
+        Some(first) if !first.starts_with('-') => (Some(first.as_str()), &argv[1..]),
+        _ => (None, argv),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run a swarm")
+            .opt("particles", "swarm size", Some("1024"))
+            .opt("engine", "algorithm", Some("queuelock"))
+            .switch("verbose", "log more")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_space_and_equals_forms() {
+        let a = cmd()
+            .parse(&argv(&["--particles", "2048", "--engine=queue", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get("particles"), Some("2048"));
+        assert_eq!(a.get("engine"), Some("queue"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_accessor_with_default_and_underscores() {
+        let a = cmd().parse(&argv(&["--particles", "65_536"])).unwrap();
+        assert_eq!(a.get_parse("particles", 0usize).unwrap(), 65_536);
+        assert_eq!(a.get_parse("missing-ok", 7u64).unwrap_or(7), 7);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(cmd().parse(&argv(&["--nope"])).is_err());
+        assert!(cmd().parse(&argv(&["--particles"])).is_err());
+        assert!(cmd().parse(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = cmd().parse(&argv(&["config.toml", "--verbose"])).unwrap();
+        assert_eq!(a.positional, vec!["config.toml"]);
+    }
+
+    #[test]
+    fn subcommand_split() {
+        let v = argv(&["bench", "--reps", "3"]);
+        let (cmd, rest) = split_subcommand(&v);
+        assert_eq!(cmd, Some("bench"));
+        assert_eq!(rest.len(), 2);
+        let v2 = argv(&["--help"]);
+        assert_eq!(split_subcommand(&v2).0, None);
+    }
+
+    #[test]
+    fn usage_lists_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--particles"));
+        assert!(u.contains("default: 1024"));
+    }
+}

@@ -1,0 +1,313 @@
+//! Run configuration: a typed config struct, a TOML-subset file format,
+//! and validation. serde is unavailable offline, so parsing is a small
+//! hand-rolled scanner supporting the subset the launcher needs:
+//! `[section]` headers, `key = value` with string / integer / float /
+//! boolean values, `#` comments.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use crate::fitness::Objective;
+use crate::rng::RngKind;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which algorithm drives the swarm (the paper's five implementations,
+/// plus the Plane-B XLA engines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Serial SPSO on one core (the paper's "CPU" column).
+    SerialCpu,
+    /// Parallel reduction, two kernels per iteration (state of the art).
+    Reduction,
+    /// Reduction with unrolled final levels ("Loop Unrolling").
+    LoopUnrolling,
+    /// Shared-memory queue (Algorithm 2) — the paper's contribution #1.
+    Queue,
+    /// Queue + global CAS lock, fused kernels (Algorithm 3) — contribution #2.
+    QueueLock,
+    /// Persistent-kernel fully asynchronous engine (the paper's §7 future
+    /// work): one dispatch per run, blocks free-run all iterations.
+    AsyncPersistent,
+    /// Plane-B: AOT XLA artifact, synchronous coordinator.
+    XlaSync,
+    /// Plane-B: AOT XLA artifacts, asynchronous lock-based coordinator.
+    XlaAsync,
+}
+
+impl EngineKind {
+    /// All Plane-A engines in the paper's Table 3 column order.
+    pub const TABLE3: [EngineKind; 5] = [
+        EngineKind::SerialCpu,
+        EngineKind::Reduction,
+        EngineKind::LoopUnrolling,
+        EngineKind::Queue,
+        EngineKind::QueueLock,
+    ];
+
+    /// Parse CLI/config text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+            "serial" | "cpu" | "serialcpu" => Some(Self::SerialCpu),
+            "reduction" => Some(Self::Reduction),
+            "unroll" | "loopunrolling" | "unrolling" => Some(Self::LoopUnrolling),
+            "queue" => Some(Self::Queue),
+            "queuelock" => Some(Self::QueueLock),
+            "async" | "asyncpersistent" | "persistent" => Some(Self::AsyncPersistent),
+            "xla" | "xlasync" => Some(Self::XlaSync),
+            "xlaasync" => Some(Self::XlaAsync),
+            _ => None,
+        }
+    }
+
+    /// Table-header label (matches the paper's column names).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::SerialCpu => "CPU",
+            Self::Reduction => "Reduction",
+            Self::LoopUnrolling => "Loop Unrolling",
+            Self::Queue => "Queue",
+            Self::QueueLock => "Queue Lock",
+            Self::AsyncPersistent => "Async Persistent",
+            Self::XlaSync => "XLA Sync",
+            Self::XlaAsync => "XLA Async",
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Full run configuration for the launcher.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Fitness function name (see [`crate::fitness::by_name`]).
+    pub fitness: String,
+    /// Optimization sense; `None` = the function's conventional default.
+    pub objective: Option<Objective>,
+    /// Swarm size (`particle_cnt`).
+    pub particles: usize,
+    /// Problem dimensionality.
+    pub dim: usize,
+    /// Iteration budget (`max_iter`).
+    pub iters: u64,
+    /// Inertia weight `w` (paper: 1.0).
+    pub w: f64,
+    /// Cognitive coefficient `c1` (paper: 2.0).
+    pub c1: f64,
+    /// Social coefficient `c2` (paper: 2.0).
+    pub c2: f64,
+    /// Position bounds override; `None` = the function's domain.
+    pub bounds: Option<(f64, f64)>,
+    /// Velocity clamp as a fraction of the position range (common PSO
+    /// practice; the paper clamps velocity to a fixed range).
+    pub vmax_frac: f64,
+    /// Engine selection.
+    pub engine: EngineKind,
+    /// Worker threads for the parallel engines (0 = machine default).
+    pub workers: usize,
+    /// RNG engine (§5.4 ablation).
+    pub rng: RngKind,
+    /// Master seed.
+    pub seed: u64,
+    /// Directory of AOT artifacts (Plane-B engines).
+    pub artifacts_dir: String,
+    /// Shards for the XLA coordinator.
+    pub shards: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            fitness: "cubic".into(),
+            objective: None,
+            particles: 1024,
+            dim: 1,
+            iters: 10_000,
+            w: 1.0,
+            c1: 2.0,
+            c2: 2.0,
+            bounds: None,
+            vmax_frac: 0.5,
+            engine: EngineKind::QueueLock,
+            workers: 0,
+            rng: RngKind::Philox,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            shards: 4,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML-subset file (flat keys or under `[pso]`/`[run]`).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = Self::default();
+        // Accept both flat keys and any section; last write wins.
+        let mut flat: BTreeMap<String, TomlValue> = BTreeMap::new();
+        for (key, value) in doc {
+            let leaf = key.rsplit('.').next().unwrap().to_string();
+            flat.insert(leaf, value);
+        }
+        macro_rules! get {
+            ($name:literal, $conv:ident) => {
+                flat.get($name).map(|v| v.$conv($name)).transpose()?
+            };
+        }
+        if let Some(v) = get!("fitness", as_str) {
+            cfg.fitness = v.to_string();
+        }
+        if let Some(v) = get!("objective", as_str) {
+            cfg.objective =
+                Some(Objective::parse(v).with_context(|| format!("bad objective {v}"))?);
+        }
+        if let Some(v) = get!("particles", as_int) {
+            cfg.particles = v as usize;
+        }
+        if let Some(v) = get!("dim", as_int) {
+            cfg.dim = v as usize;
+        }
+        if let Some(v) = get!("iters", as_int) {
+            cfg.iters = v as u64;
+        }
+        if let Some(v) = get!("w", as_float) {
+            cfg.w = v;
+        }
+        if let Some(v) = get!("c1", as_float) {
+            cfg.c1 = v;
+        }
+        if let Some(v) = get!("c2", as_float) {
+            cfg.c2 = v;
+        }
+        if let (Some(lo), Some(hi)) = (get!("min_pos", as_float), get!("max_pos", as_float)) {
+            cfg.bounds = Some((lo, hi));
+        }
+        if let Some(v) = get!("vmax_frac", as_float) {
+            cfg.vmax_frac = v;
+        }
+        if let Some(v) = get!("engine", as_str) {
+            cfg.engine = EngineKind::parse(v).with_context(|| format!("bad engine {v}"))?;
+        }
+        if let Some(v) = get!("workers", as_int) {
+            cfg.workers = v as usize;
+        }
+        if let Some(v) = get!("rng", as_str) {
+            cfg.rng = RngKind::parse(v).with_context(|| format!("bad rng {v}"))?;
+        }
+        if let Some(v) = get!("seed", as_int) {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = get!("artifacts_dir", as_str) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = get!("shards", as_int) {
+            cfg.shards = v as usize;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.particles == 0 {
+            bail!("particles must be > 0");
+        }
+        if self.dim == 0 {
+            bail!("dim must be > 0");
+        }
+        if self.iters == 0 {
+            bail!("iters must be > 0");
+        }
+        if !(self.w.is_finite() && self.c1.is_finite() && self.c2.is_finite()) {
+            bail!("non-finite PSO coefficients");
+        }
+        if let Some((lo, hi)) = self.bounds {
+            if !(lo < hi) {
+                bail!("bounds must satisfy min < max, got [{lo}, {hi}]");
+            }
+        }
+        if !(0.0 < self.vmax_frac && self.vmax_frac <= 1.0) {
+            bail!("vmax_frac must be in (0, 1], got {}", self.vmax_frac);
+        }
+        if crate::fitness::by_name(&self.fitness).is_none() {
+            bail!("unknown fitness function '{}'", self.fitness);
+        }
+        if self.shards == 0 {
+            bail!("shards must be > 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_and_paperlike() {
+        let c = RunConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.w, 1.0);
+        assert_eq!(c.c1, 2.0);
+        assert_eq!(c.c2, 2.0);
+        assert_eq!(c.fitness, "cubic");
+    }
+
+    #[test]
+    fn parses_flat_and_sectioned_toml() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+            # paper 120D workload
+            [pso]
+            fitness = "cubic"
+            particles = 32768
+            dim = 120
+            iters = 1000
+            [run]
+            engine = "queue"
+            workers = 8
+            rng = "philox"
+            seed = 7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.particles, 32_768);
+        assert_eq!(cfg.dim, 120);
+        assert_eq!(cfg.engine, EngineKind::Queue);
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::from_toml_str("particles = 0").is_err());
+        assert!(RunConfig::from_toml_str("engine = \"warp\"").is_err());
+        assert!(RunConfig::from_toml_str("fitness = \"nope\"").is_err());
+        assert!(
+            RunConfig::from_toml_str("min_pos = 5.0\nmax_pos = -5.0").is_err()
+        );
+    }
+
+    #[test]
+    fn engine_kind_parse_labels() {
+        for k in EngineKind::TABLE3 {
+            // label → parse round trip (modulo spaces/case).
+            let norm = k.label().replace(' ', "").to_lowercase();
+            assert_eq!(EngineKind::parse(&norm), Some(k), "{norm}");
+        }
+        assert_eq!(EngineKind::parse("xla-async"), Some(EngineKind::XlaAsync));
+    }
+}

@@ -1,0 +1,180 @@
+//! TOML-subset parser: `[section]` headers, `key = value` pairs, `#`
+//! comments. Values: quoted strings, booleans, integers (with `_`
+//! separators), floats. Keys are returned dotted (`section.key`).
+
+use anyhow::{bail, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// Coerce to string.
+    pub fn as_str(&self, key: &str) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("{key}: expected string, got {other:?}"),
+        }
+    }
+
+    /// Coerce to integer.
+    pub fn as_int(&self, key: &str) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => bail!("{key}: expected integer, got {other:?}"),
+        }
+    }
+
+    /// Coerce to float (integers widen).
+    pub fn as_float(&self, key: &str) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("{key}: expected float, got {other:?}"),
+        }
+    }
+
+    /// Coerce to bool.
+    pub fn as_bool(&self, key: &str) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("{key}: expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// Parse the subset; returns `(dotted_key, value)` pairs in file order.
+pub fn parse_toml(text: &str) -> Result<Vec<(String, TomlValue)>> {
+    let mut section = String::new();
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            if section.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected `key = value`, got {line:?}", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let dotted = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.push((dotted, parse_value(val, lineno + 1)?));
+    }
+    Ok(out)
+}
+
+/// Remove a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<TomlValue> {
+    if v.is_empty() {
+        bail!("line {lineno}: missing value");
+    }
+    if let Some(inner) = v.strip_prefix('"') {
+        let Some(s) = inner.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string {v:?}");
+        };
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = v.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value {v:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_scalar_kinds() {
+        let doc = parse_toml(
+            r#"
+            name = "cubic"       # trailing comment
+            particles = 65_536
+            w = 1.0
+            fused = true
+            neg = -3
+            sci = 1.5e3
+            "#,
+        )
+        .unwrap();
+        let get = |k: &str| doc.iter().find(|(key, _)| key == k).unwrap().1.clone();
+        assert_eq!(get("name"), TomlValue::Str("cubic".into()));
+        assert_eq!(get("particles"), TomlValue::Int(65_536));
+        assert_eq!(get("w"), TomlValue::Float(1.0));
+        assert_eq!(get("fused"), TomlValue::Bool(true));
+        assert_eq!(get("neg"), TomlValue::Int(-3));
+        assert_eq!(get("sci"), TomlValue::Float(1500.0));
+    }
+
+    #[test]
+    fn sections_dot_the_keys() {
+        let doc = parse_toml("[pso]\nparticles = 8\n[run]\nseed = 1").unwrap();
+        assert_eq!(doc[0].0, "pso.particles");
+        assert_eq!(doc[1].0, "run.seed");
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse_toml(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc[0].1, TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("ok = 1\nbroken").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("k = \"unterminated").is_err());
+        assert!(parse_toml("k = what").is_err());
+    }
+
+    #[test]
+    fn coercions() {
+        assert_eq!(TomlValue::Int(3).as_float("k").unwrap(), 3.0);
+        assert!(TomlValue::Str("x".into()).as_int("k").is_err());
+        assert!(TomlValue::Bool(true).as_bool("k").unwrap());
+    }
+}

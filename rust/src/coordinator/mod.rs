@@ -1,0 +1,314 @@
+//! L3 coordinator — the paper's coordination ideas lifted to the
+//! process level over PJRT executions.
+//!
+//! The swarm is split into `shards` independent sub-swarms ("islands"),
+//! each driven by an AOT-compiled chunk executable (K iterations per
+//! call). Two schedulers mirror the paper's two synchronization designs:
+//!
+//! * [`SyncScheduler`] — the *reduction-style* structure: every round all
+//!   shards execute one chunk, then a **barrier**, then the global best is
+//!   reduced across shards and re-broadcast. Cross-shard information moves
+//!   only at round boundaries, and stragglers stall everyone — exactly the
+//!   inter-kernel synchronization cost of §3.2.
+//! * [`AsyncScheduler`] — the *queue-lock-style* structure: shards
+//!   free-run; after each chunk a shard merges with the global best behind
+//!   a CAS spin lock ([`crate::exec::SpinLock`]), no barrier anywhere —
+//!   Algorithm 3 lifted from thread blocks to OS threads over PJRT calls.
+//!
+//! Both schedulers preserve the monotone-gbest invariant (property-tested
+//! in `rust/tests/coordinator_integration.rs`).
+
+use crate::exec::SpinLock;
+use crate::fitness::{by_name, Objective};
+use crate::pso::PsoParams;
+use crate::runtime::{ChunkExec, XlaRuntime, XlaSwarmState};
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Aggregation variant of the artifacts to load.
+    pub variant: String,
+    /// Particles **per shard**.
+    pub shard_particles: usize,
+    /// Problem dimensionality.
+    pub dim: usize,
+    /// Number of independent shards (each gets an OS thread).
+    pub shards: usize,
+    /// Total iterations each shard runs (rounded up to whole chunks).
+    pub iters: u64,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl CoordinatorConfig {
+    /// Sensible defaults for the e2e example: queue variant, 4 shards.
+    pub fn new(variant: &str, shard_particles: usize, dim: usize, iters: u64) -> Self {
+        Self {
+            variant: variant.to_string(),
+            shard_particles,
+            dim,
+            shards: 4,
+            iters,
+            seed: 42,
+        }
+    }
+}
+
+/// Result of a coordinated run.
+#[derive(Debug, Clone)]
+pub struct CoordOutput {
+    /// Best fitness across all shards.
+    pub gbest_fit: f64,
+    /// Best position.
+    pub gbest_pos: Vec<f64>,
+    /// Iterations executed per shard.
+    pub iters_per_shard: u64,
+    /// Total PJRT chunk executions.
+    pub chunk_calls: u64,
+    /// Global-best merges that improved the shared value.
+    pub merges: u64,
+    /// Per-shard final gbest (dispersion diagnostics).
+    pub shard_fits: Vec<f64>,
+    /// Concatenated per-round global-best samples (round, gbest).
+    pub history: Vec<(u64, f64)>,
+}
+
+/// The shared cross-shard best (fit, pos) behind the Algorithm-3 lock.
+struct SharedBest {
+    inner: SpinLock<(f64, Vec<f64>)>,
+    merges: AtomicU64,
+}
+
+impl SharedBest {
+    fn new(objective: Objective, dim: usize) -> Self {
+        Self {
+            inner: SpinLock::new((objective.worst(), vec![0.0; dim])),
+            merges: AtomicU64::new(0),
+        }
+    }
+
+    /// Two-way merge: publish the shard's best if better, and pull the
+    /// global one into the shard if the global is better.
+    fn merge(&self, objective: Objective, state: &mut XlaSwarmState) {
+        let mut g = self.inner.lock();
+        if objective.better(state.gbest_fit, g.0) {
+            g.0 = state.gbest_fit;
+            g.1.copy_from_slice(&state.gbest_pos);
+            self.merges.fetch_add(1, Ordering::Relaxed);
+        } else if objective.better(g.0, state.gbest_fit) {
+            state.adopt_gbest(objective, g.0, &g.1.clone());
+        }
+    }
+
+    fn snapshot(&self) -> (f64, Vec<f64>) {
+        let g = self.inner.lock();
+        (g.0, g.1.clone())
+    }
+}
+
+/// Shared plumbing for both schedulers.
+struct ShardSet {
+    exec: ChunkExec,
+    states: Vec<XlaSwarmState>,
+    objective: Objective,
+    /// Kept for bound/diagnostic checks by future extensions.
+    #[allow(dead_code)]
+    params: PsoParams,
+    rounds: u64,
+}
+
+fn prepare(rt: &XlaRuntime, cfg: &CoordinatorConfig) -> Result<ShardSet> {
+    if cfg.shards == 0 {
+        bail!("shards must be > 0");
+    }
+    let exec = rt
+        .load_config(&cfg.variant, cfg.shard_particles, cfg.dim)
+        .context("loading coordinator artifact")?;
+    let meta = &exec.meta;
+    let fitness = by_name(&meta.fitness)
+        .with_context(|| format!("unknown fitness {} in manifest", meta.fitness))?;
+    let objective = fitness.default_objective();
+    let params = PsoParams {
+        w: meta.w,
+        c1: meta.c1,
+        c2: meta.c2,
+        min_pos: meta.min_pos,
+        max_pos: meta.max_pos,
+        max_v: meta.max_v,
+        max_iter: cfg.iters,
+        n: cfg.shard_particles,
+        dim: cfg.dim,
+    };
+    let states: Vec<XlaSwarmState> = (0..cfg.shards)
+        .map(|s| XlaSwarmState::init(&params, fitness.as_ref(), objective, cfg.seed, s as u64))
+        .collect();
+    let rounds = cfg.iters.div_ceil(meta.iters);
+    Ok(ShardSet {
+        exec,
+        states,
+        objective,
+        params,
+        rounds,
+    })
+}
+
+fn finish(set: ShardSet, shared: &SharedBest, chunk_calls: u64, history: Vec<(u64, f64)>) -> CoordOutput {
+    let objective = set.objective;
+    let (mut best_fit, mut best_pos) = shared.snapshot();
+    let mut shard_fits = Vec::with_capacity(set.states.len());
+    for st in &set.states {
+        shard_fits.push(st.gbest_fit);
+        if objective.better(st.gbest_fit, best_fit) {
+            best_fit = st.gbest_fit;
+            best_pos = st.gbest_pos.clone();
+        }
+    }
+    CoordOutput {
+        gbest_fit: best_fit,
+        gbest_pos: best_pos,
+        iters_per_shard: set.rounds * set.exec.iters_per_call(),
+        chunk_calls,
+        merges: shared.merges.load(Ordering::Relaxed),
+        shard_fits,
+        history,
+    }
+}
+
+/// Barrier-per-round scheduler (reduction-style coordination).
+pub struct SyncScheduler;
+
+impl SyncScheduler {
+    /// Run to completion.
+    pub fn run(rt: &XlaRuntime, cfg: &CoordinatorConfig) -> Result<CoordOutput> {
+        let mut set = prepare(rt, cfg)?;
+        let shared = SharedBest::new(set.objective, cfg.dim);
+        let key_bits = [cfg.seed as u32, (cfg.seed >> 32) as u32];
+        let k = set.exec.iters_per_call();
+        let mut history = Vec::new();
+        let mut chunk_calls = 0u64;
+
+        for round in 0..set.rounds {
+            // All shards run one chunk in parallel, then the barrier
+            // (scope join) — the inter-kernel sync analog.
+            let exec = &set.exec;
+            let objective = set.objective;
+            let results: Vec<Result<Vec<f64>>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = set
+                    .states
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(s, st)| {
+                        scope.spawn(move || {
+                            let kb = [key_bits[0] ^ s as u32, key_bits[1]];
+                            exec.run(st, kb, (round * k) as i64)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for r in results {
+                r?;
+                chunk_calls += 1;
+            }
+            // Post-barrier reduction across shards + re-broadcast.
+            for st in set.states.iter_mut() {
+                shared.merge(objective, st);
+            }
+            let (g, _) = shared.snapshot();
+            for st in set.states.iter_mut() {
+                let (gf, gp) = shared.snapshot();
+                let _ = st.adopt_gbest(objective, gf, &gp);
+                debug_assert!(g <= st.gbest_fit || objective == Objective::Minimize);
+            }
+            history.push((round * k, shared.snapshot().0));
+        }
+        Ok(finish(set, &shared, chunk_calls, history))
+    }
+}
+
+/// Free-running scheduler with lock-based merges (queue-lock-style).
+pub struct AsyncScheduler;
+
+impl AsyncScheduler {
+    /// Run to completion.
+    pub fn run(rt: &XlaRuntime, cfg: &CoordinatorConfig) -> Result<CoordOutput> {
+        let mut set = prepare(rt, cfg)?;
+        let shared = Arc::new(SharedBest::new(set.objective, cfg.dim));
+        let key_bits = [cfg.seed as u32, (cfg.seed >> 32) as u32];
+        let k = set.exec.iters_per_call();
+        let rounds = set.rounds;
+        let objective = set.objective;
+        let chunk_calls = AtomicU64::new(0);
+
+        let exec = &set.exec;
+        let history_lock: SpinLock<Vec<(u64, f64)>> = SpinLock::new(Vec::new());
+        let errors: Result<Vec<()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = set
+                .states
+                .iter_mut()
+                .enumerate()
+                .map(|(s, st)| {
+                    let shared = shared.clone();
+                    let chunk_calls = &chunk_calls;
+                    let history_lock = &history_lock;
+                    scope.spawn(move || -> Result<()> {
+                        // No barrier: this shard sprints through its
+                        // rounds, merging through the lock after each
+                        // chunk (Algorithm 3 at coordinator scale).
+                        for round in 0..rounds {
+                            let kb = [key_bits[0] ^ s as u32, key_bits[1]];
+                            exec.run(st, kb, (round * k) as i64)?;
+                            chunk_calls.fetch_add(1, Ordering::Relaxed);
+                            shared.merge(objective, st);
+                            if s == 0 {
+                                history_lock
+                                    .lock()
+                                    .push((round * k, shared.snapshot().0));
+                            }
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        errors?;
+        let history = history_lock.into_inner();
+        let calls = chunk_calls.load(Ordering::Relaxed);
+        Ok(finish(set, &shared, calls, history))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_builder_defaults() {
+        let c = CoordinatorConfig::new("queue", 1024, 1, 500);
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.variant, "queue");
+    }
+
+    #[test]
+    fn shared_best_merge_is_two_way() {
+        let shared = SharedBest::new(Objective::Maximize, 1);
+        let params = PsoParams::paper_1d(8, 1);
+        let mut a = XlaSwarmState::init(&params, &crate::fitness::Cubic, Objective::Maximize, 1, 0);
+        let mut b = XlaSwarmState::init(&params, &crate::fitness::Cubic, Objective::Maximize, 1, 1);
+        a.gbest_fit = 10.0;
+        a.gbest_pos = vec![1.0];
+        b.gbest_fit = 5.0;
+        b.gbest_pos = vec![2.0];
+        shared.merge(Objective::Maximize, &mut a);
+        shared.merge(Objective::Maximize, &mut b);
+        // b pulled a's better value.
+        assert_eq!(b.gbest_fit, 10.0);
+        assert_eq!(b.gbest_pos, vec![1.0]);
+        assert_eq!(shared.snapshot().0, 10.0);
+        assert_eq!(shared.merges.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,151 @@
+//! The paper's §7 future work, built: a fully **asynchronous** engine in
+//! the persistent-kernel style (cf. Mussi et al. [9], the GPU-async PSO
+//! line the paper cites).
+//!
+//! Where Queue-Lock still launches one kernel per iteration (the grid is
+//! re-synchronized at every iteration boundary), this engine launches the
+//! grid **once**: each block loops through all `max_iter` iterations of
+//! its own particles, reading the global best from the shared atomics at
+//! the top of every iteration and publishing improvements through the
+//! Algorithm-3 lock. No iteration barrier exists anywhere — blocks drift
+//! apart freely, bounded only by the monotone global best.
+//!
+//! Semantics: weaker than Queue-Lock (a block may step against a gbest
+//! that is several iterations stale for other blocks — exactly the
+//! asynchrony of [9]); still monotone, still bound-respecting, and
+//! empirically the same quality class (tests below + the property suite).
+//! Launch overhead drops from `max_iter` dispatches to **one**.
+
+use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSwarm, StepScratch};
+use super::Engine;
+use crate::fitness::{Fitness, Objective};
+use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
+use crate::rng::PhiloxStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Persistent-kernel asynchronous engine (one launch per run).
+pub struct AsyncEngine {
+    settings: ParallelSettings,
+}
+
+impl AsyncEngine {
+    /// New engine on the given pool/geometry.
+    pub fn new(settings: ParallelSettings) -> Self {
+        Self { settings }
+    }
+}
+
+impl Engine for AsyncEngine {
+    fn name(&self) -> &'static str {
+        "Async Persistent"
+    }
+
+    fn run(
+        &mut self,
+        params: &PsoParams,
+        fitness: &dyn Fitness,
+        objective: Objective,
+        seed: u64,
+    ) -> RunOutput {
+        let stream = PhiloxStream::new(seed);
+        let mut init = SwarmState::init(params, &stream);
+        let (fit0, gi) = init.seed_fitness(fitness, objective);
+        let gbest = GlobalBest::new(fit0, &init.position_of(gi));
+        let state = SharedSwarm::new(init);
+
+        let blocks = self.settings.blocks_for(params.n);
+        let step_scratch =
+            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
+        let snapshots = PerBlock::from_fn(blocks, |_| vec![0.0; params.dim]);
+        // Sampled history: block 0 records the global best as it passes
+        // its own iteration marks (other blocks may be ahead or behind —
+        // that skew is the point of the design).
+        let stride = history_stride(params.max_iter);
+        let history_cells = PerBlock::from_fn(1, |_| Vec::<(u64, f64)>::new());
+        let pbest_improvements = AtomicU64::new(0);
+
+        // ---- the single persistent launch ----
+        self.settings.pool.launch(blocks, |ctx| {
+            let b = ctx.block_id;
+            let (lo, hi) = self.settings.block_range(b, params.n);
+            // SAFETY: per-block disjoint state/scratch (see common.rs).
+            let st = unsafe { state.get() };
+            let ss = unsafe { step_scratch.get(b) };
+            let frozen = unsafe { snapshots.get(b) };
+            for iter in 0..params.max_iter {
+                gbest.load_pos(frozen);
+                let (best, best_i) = step_block(
+                    st, lo, hi, frozen, params, fitness, objective, &stream, iter, ss,
+                );
+                if best_i != usize::MAX && objective.better(best, gbest.fit_relaxed()) {
+                    gbest.update_locked(objective, best, || st.position_of(best_i));
+                }
+                if b == 0 && iter % stride == 0 {
+                    // SAFETY: only block 0 touches the history cell.
+                    unsafe { history_cells.get(0) }.push((iter, gbest.fit_relaxed()));
+                }
+            }
+            let improved = ss.improved.iter().filter(|&&x| x).count() as u64;
+            pbest_improvements.fetch_add(improved, Ordering::Relaxed);
+        });
+
+        let mut history = std::mem::take(unsafe { history_cells.get(0) });
+        history.push((params.max_iter, gbest.fit_relaxed()));
+
+        let counters = Counters {
+            particle_updates: params.n as u64 * params.max_iter,
+            gbest_updates: gbest.update_count(),
+            pbest_improvements: pbest_improvements.load(Ordering::Relaxed),
+            ..Default::default()
+        };
+        RunOutput {
+            gbest_fit: gbest.fit_relaxed(),
+            gbest_pos: gbest.pos_vec(),
+            iters: params.max_iter,
+            history,
+            counters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::Cubic;
+
+    #[test]
+    fn solves_cubic_both_dims() {
+        let mut e = AsyncEngine::new(ParallelSettings::with_workers(4));
+        let p1 = PsoParams::paper_1d(512, 150);
+        let out = e.run(&p1, &Cubic, Objective::Maximize, 1);
+        assert!(out.gbest_fit > 890_000.0, "1-D gbest {}", out.gbest_fit);
+
+        let p120 = PsoParams::paper_120d(256, 80);
+        let out = e.run(&p120, &Cubic, Objective::Maximize, 2);
+        let opt = 900_000.0 * 120.0;
+        assert!(out.gbest_fit > 0.5 * opt, "120-D gbest {}", out.gbest_fit);
+    }
+
+    #[test]
+    fn monotone_history_despite_full_asynchrony() {
+        let mut e = AsyncEngine::new(ParallelSettings::with_workers(8));
+        let params = PsoParams::paper_120d(1024, 60);
+        let out = e.run(&params, &Cubic, Objective::Maximize, 3);
+        for w in out.history.windows(2) {
+            assert!(w[1].1 >= w[0].1, "gbest worsened: {w:?}");
+        }
+    }
+
+    #[test]
+    fn single_block_reduces_to_queue_lock_semantics() {
+        // With one block there is no asynchrony: identical to Queue-Lock
+        // (and hence to the synchronous oracle).
+        let params = PsoParams::paper_1d(200, 50);
+        let settings = ParallelSettings::with_workers(4);
+        let oracle = crate::pso::serial_sync::run(&params, &Cubic, Objective::Maximize, 7);
+        let mut e = AsyncEngine::new(settings);
+        let out = e.run(&params, &Cubic, Objective::Maximize, 7);
+        assert_eq!(out.gbest_fit, oracle.gbest_fit);
+        assert_eq!(out.gbest_pos, oracle.gbest_pos);
+    }
+}

@@ -1,0 +1,398 @@
+//! Shared machinery for the parallel engines: block geometry, the shared
+//! "1st kernel" body, the global-best cell, and disjoint per-block
+//! storage.
+
+use crate::exec::{AtomicF64, GridPool, SpinLock};
+use crate::fitness::{Fitness, Objective};
+use crate::pso::{PsoParams, SwarmState};
+use crate::rng::PhiloxStream;
+use std::cell::UnsafeCell;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Pool + geometry configuration shared by the engines.
+#[derive(Clone)]
+pub struct ParallelSettings {
+    /// The worker pool (shareable across engines so benches reuse threads).
+    pub pool: Arc<GridPool>,
+    /// Particles per logical block (the CUDA `blockDim.x`; paper-style 256).
+    pub block_size: usize,
+}
+
+impl ParallelSettings {
+    /// Default block size, matching common CUDA practice for PPSO.
+    pub const DEFAULT_BLOCK_SIZE: usize = 256;
+
+    /// Settings with `workers` pool threads (0 = machine default).
+    pub fn with_workers(workers: usize) -> Self {
+        let pool = if workers == 0 {
+            GridPool::with_default_parallelism()
+        } else {
+            GridPool::new(workers)
+        };
+        Self {
+            pool: Arc::new(pool),
+            block_size: Self::DEFAULT_BLOCK_SIZE,
+        }
+    }
+
+    /// Settings on an existing pool.
+    pub fn with_pool(pool: Arc<GridPool>) -> Self {
+        Self {
+            pool,
+            block_size: Self::DEFAULT_BLOCK_SIZE,
+        }
+    }
+
+    /// Override the block size (geometry ablations).
+    pub fn block_size(mut self, bs: usize) -> Self {
+        self.block_size = bs.max(1);
+        self
+    }
+
+    /// Number of blocks covering `n` particles.
+    pub fn blocks_for(&self, n: usize) -> usize {
+        n.div_ceil(self.block_size)
+    }
+
+    /// Particle range `[lo, hi)` of block `b`.
+    pub fn block_range(&self, b: usize, n: usize) -> (usize, usize) {
+        let lo = b * self.block_size;
+        let hi = ((b + 1) * self.block_size).min(n);
+        (lo, hi)
+    }
+}
+
+/// Swarm state shared across blocks. Blocks touch disjoint particle
+/// columns, so `&mut` access per block is sound (the SoA arrays interleave
+/// columns, but element indices `d*n + i` are disjoint for disjoint `i`).
+pub(crate) struct SharedSwarm(UnsafeCell<SwarmState>);
+
+unsafe impl Sync for SharedSwarm {}
+
+impl SharedSwarm {
+    pub fn new(state: SwarmState) -> Self {
+        Self(UnsafeCell::new(state))
+    }
+
+    /// # Safety
+    /// Caller must only touch particle columns of its own block while any
+    /// other block may be live, and must not alias reads of columns being
+    /// written elsewhere.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self) -> &mut SwarmState {
+        &mut *self.0.get()
+    }
+
+    #[allow(dead_code)]
+    pub fn into_inner(self) -> SwarmState {
+        self.0.into_inner()
+    }
+}
+
+/// Disjoint per-block storage: block `b` may mutate entry `b` while other
+/// blocks mutate theirs.
+pub(crate) struct PerBlock<T> {
+    cells: Vec<UnsafeCell<T>>,
+}
+
+unsafe impl<T: Send> Sync for PerBlock<T> {}
+
+impl<T> PerBlock<T> {
+    pub fn from_fn<F: FnMut(usize) -> T>(n: usize, mut f: F) -> Self {
+        Self {
+            cells: (0..n).map(|i| UnsafeCell::new(f(i))).collect(),
+        }
+    }
+
+    /// # Safety
+    /// Each index must be accessed by at most one block at a time; reads
+    /// of other blocks' entries require those blocks to have quiesced
+    /// (e.g. after an inter-kernel barrier).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self, i: usize) -> &mut T {
+        &mut *self.cells[i].get()
+    }
+
+    #[allow(dead_code)]
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+}
+
+/// The global best datum.
+///
+/// `fit` is an atomic so the Queue engines can read the improvement
+/// threshold without a lock (the paper reads `gbest_fit` unsynchronized in
+/// Algorithm 2 line 1 — on the CPU that must be an atomic load to stay
+/// defined). `pos` entries are atomics for the same reason: the fused
+/// Queue-Lock kernel lets one block update the position while another is
+/// still stepping against it, which is the paper's documented benign race
+/// (per-element visibility, possible cross-dimension tearing — "no bad
+/// side effect" in 1-D).
+pub struct GlobalBest {
+    fit: AtomicF64,
+    pos: Vec<AtomicF64>,
+    /// Serializes compound updates (Algorithm 3's lock).
+    lock: SpinLock<()>,
+    updates: std::sync::atomic::AtomicU64,
+}
+
+impl GlobalBest {
+    /// Initialize from the seeded swarm's best.
+    pub fn new(fit: f64, pos: &[f64]) -> Self {
+        Self {
+            fit: AtomicF64::new(fit),
+            pos: pos.iter().map(|&p| AtomicF64::new(p)).collect(),
+            lock: SpinLock::new(()),
+            updates: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Unlocked threshold read (Algorithm 2 line 1).
+    #[inline]
+    pub fn fit_relaxed(&self) -> f64 {
+        self.fit.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the position into `out` (relaxed per-element loads).
+    #[inline]
+    pub fn load_pos(&self, out: &mut [f64]) {
+        for (o, p) in out.iter_mut().zip(&self.pos) {
+            *o = p.load(Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot as a fresh vec.
+    pub fn pos_vec(&self) -> Vec<f64> {
+        let mut v = vec![0.0; self.pos.len()];
+        self.load_pos(&mut v);
+        v
+    }
+
+    /// Algorithm 3 verbatim: take the CAS lock, re-check, update
+    /// `(gbest_fit, gbest_pos)`, fence, release. `pos_src` yields the
+    /// candidate position only if the re-check passes (so losers don't pay
+    /// the gather).
+    pub fn update_locked<F: FnOnce() -> Vec<f64>>(
+        &self,
+        objective: Objective,
+        fit: f64,
+        pos_src: F,
+    ) -> bool {
+        if !objective.better(fit, self.fit_relaxed()) {
+            return false;
+        }
+        let _g = self.lock.lock();
+        // Re-check under the lock (another block may have won the race).
+        if !objective.better(fit, self.fit.load(Ordering::Acquire)) {
+            return false;
+        }
+        let pos = pos_src();
+        for (slot, &p) in self.pos.iter().zip(&pos) {
+            slot.store(p, Ordering::Relaxed);
+        }
+        self.fit.store(fit, Ordering::Release);
+        self.updates.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Exclusive (single-block 2nd kernel) update — no lock needed, but
+    /// kept atomic so concurrent relaxed readers stay defined.
+    pub fn update_exclusive(&self, objective: Objective, fit: f64, pos: &[f64]) -> bool {
+        if !objective.better(fit, self.fit.load(Ordering::Acquire)) {
+            return false;
+        }
+        for (slot, &p) in self.pos.iter().zip(pos) {
+            slot.store(p, Ordering::Relaxed);
+        }
+        self.fit.store(fit, Ordering::Release);
+        self.updates.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// How many times the global best was improved.
+    pub fn update_count(&self) -> u64 {
+        self.updates.load(Ordering::Relaxed)
+    }
+
+    /// Lock acquisitions (Queue-Lock contention instrumentation).
+    pub fn lock_acquisitions(&self) -> u64 {
+        self.lock.acquisition_count()
+    }
+}
+
+/// Reusable per-block scratch for the dimension-major step.
+pub(crate) struct StepScratch {
+    /// Fitness of the block's particles this iteration.
+    pub fit: Vec<f64>,
+    /// Which particles improved their pbest (row-masked copy phase).
+    pub improved: Vec<bool>,
+}
+
+impl StepScratch {
+    pub fn new(block_size: usize) -> Self {
+        Self {
+            fit: vec![0.0; block_size],
+            improved: vec![false; block_size],
+        }
+    }
+}
+
+/// The shared "1st kernel" body: step every particle of block `b` against
+/// the frozen global-best position, then evaluate fitness and update
+/// pbest. Returns the block's best `(fit, idx)` of *this iteration* under
+/// the index tie-break (lowest index wins).
+///
+/// **Dimension-major** (perf pass, EXPERIMENTS.md §Perf): each phase
+/// streams contiguous SoA rows — velocity/position update row by row,
+/// fitness via [`Fitness::eval_range`], then a row-masked pbest copy —
+/// instead of striding across all rows per particle. Numerically
+/// bit-identical to the per-particle order (same draws, same per-element
+/// op sequence, ascending-dimension fitness accumulation), which the
+/// equivalence suite enforces.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn step_block(
+    state: &mut SwarmState,
+    lo: usize,
+    hi: usize,
+    gbest_pos: &[f64],
+    params: &PsoParams,
+    fitness: &dyn Fitness,
+    objective: Objective,
+    stream: &PhiloxStream,
+    iter: u64,
+    scratch: &mut StepScratch,
+) -> (f64, usize) {
+    let n = state.n;
+    let dim = state.dim;
+    let m = hi - lo;
+
+    // Phase 1 — velocity + position (Eq. 1, Eq. 2, clamps), row by row,
+    // with the Philox draws generated four particles at a time (the
+    // lane-batched generator vectorizes; bit-identical to scalar draws).
+    for d in 0..dim {
+        let base = d * n;
+        let gb = gbest_pos[d];
+        let (pos_row, vel_row, pb_row) = (
+            &mut state.pos[base + lo..base + hi],
+            &mut state.vel[base + lo..base + hi],
+            &state.pbest_pos[base + lo..base + hi],
+        );
+        macro_rules! upd {
+            ($k:expr, $r1:expr, $r2:expr) => {{
+                let k = $k;
+                let v = params.w * vel_row[k]
+                    + params.c1 * $r1 * (pb_row[k] - pos_row[k])
+                    + params.c2 * $r2 * (gb - pos_row[k]);
+                let v = v.clamp(-params.max_v, params.max_v);
+                vel_row[k] = v;
+                pos_row[k] = (pos_row[k] + v).clamp(params.min_pos, params.max_pos);
+            }};
+        }
+        // Perf note (EXPERIMENTS.md §Perf): the lane-batched
+        // `PhiloxStream::r1r2_x4` wins 3.7× in isolation but *loses* in
+        // this memory-interleaved loop (A/B best-of-5: 21.2 vs 19.5
+        // ns/dim) — the scalar draw overlaps with the row stores, the
+        // batch does not. Scalar path kept.
+        for k in 0..m {
+            let (r1, r2) = stream.r1r2((lo + k) as u64, iter, d as u32);
+            upd!(k, r1, r2);
+        }
+    }
+
+    // Phase 2 — fitness over the block range (streaming for separable
+    // functions via eval_range overrides).
+    fitness.eval_range(&state.pos, n, dim, lo, hi, &mut scratch.fit[..m]);
+
+    // Phase 3 — pbest merge + block best (per-particle scalars, then a
+    // row-masked position copy).
+    let mut best = objective.worst();
+    let mut best_i = usize::MAX;
+    let mut any_improved = false;
+    for k in 0..m {
+        let i = lo + k;
+        let fit = scratch.fit[k];
+        state.fit[i] = fit;
+        let better = objective.better(fit, state.pbest_fit[i]);
+        scratch.improved[k] = better;
+        any_improved |= better;
+        if better {
+            state.pbest_fit[i] = fit;
+        }
+        if crate::pso::serial_sync::better_with_tie(objective, fit, i, best, best_i) {
+            best = fit;
+            best_i = i;
+        }
+    }
+    if any_improved {
+        for d in 0..dim {
+            let base = d * n;
+            for k in 0..m {
+                if scratch.improved[k] {
+                    state.pbest_pos[base + lo + k] = state.pos[base + lo + k];
+                }
+            }
+        }
+    }
+    (best, best_i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_partitions_exactly() {
+        let s = ParallelSettings::with_workers(1).block_size(256);
+        assert_eq!(s.blocks_for(2048), 8);
+        assert_eq!(s.blocks_for(2049), 9);
+        assert_eq!(s.block_range(0, 2048), (0, 256));
+        assert_eq!(s.block_range(7, 2000), (1792, 2000));
+        // Union of ranges covers 0..n without overlap.
+        let n = 1000;
+        let mut covered = vec![false; n];
+        for b in 0..s.blocks_for(n) {
+            let (lo, hi) = s.block_range(b, n);
+            for c in &mut covered[lo..hi] {
+                assert!(!*c);
+                *c = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn global_best_lock_update_semantics() {
+        let g = GlobalBest::new(10.0, &[1.0, 2.0]);
+        // Worse candidate: rejected without calling pos_src.
+        let updated = g.update_locked(Objective::Maximize, 5.0, || panic!("must not gather"));
+        assert!(!updated);
+        // Better candidate: accepted.
+        assert!(g.update_locked(Objective::Maximize, 20.0, || vec![3.0, 4.0]));
+        assert_eq!(g.fit_relaxed(), 20.0);
+        assert_eq!(g.pos_vec(), vec![3.0, 4.0]);
+        assert_eq!(g.update_count(), 1);
+    }
+
+    #[test]
+    fn global_best_concurrent_updates_keep_max() {
+        let g = Arc::new(GlobalBest::new(f64::NEG_INFINITY, &[0.0]));
+        let mut handles = vec![];
+        for t in 0..8u64 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..5000u64 {
+                    let v = (t * 5000 + i) as f64;
+                    g.update_locked(Objective::Maximize, v, || vec![v]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.fit_relaxed(), 39_999.0);
+        assert_eq!(g.pos_vec(), vec![39_999.0]);
+    }
+}

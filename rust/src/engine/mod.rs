@@ -1,0 +1,116 @@
+//! Plane-A parallel PSO engines — the paper's four GPU algorithms mapped
+//! onto the CUDA-like substrate of [`crate::exec`].
+//!
+//! All four share the same "1st kernel" body ([`common::step_block`]):
+//! velocity/position update + fitness + pbest per particle. They differ
+//! only in how the swarm's best datum is aggregated each iteration:
+//!
+//! | engine | aggregation | launches/iter |
+//! |---|---|---|
+//! | [`ReductionEngine`] | per-block tree reduction → aux arrays → 2nd-kernel tree reduction | 2 |
+//! | [`ReductionEngine::unrolled`] | same, final levels unrolled (the "Loop Unrolling" column) | 2 |
+//! | [`QueueEngine`] | conditional atomic-append queue (Algorithm 2) → aux arrays → 2nd-kernel scan | 2 |
+//! | [`QueueLockEngine`] | queue + global CAS lock (Algorithm 3), kernels fused | 1 |
+//!
+//! Reduction, Loop-Unrolling and Queue are *bit-exact* equivalents of the
+//! synchronous serial reference ([`crate::pso::serial_sync`]) — verified
+//! by `rust/tests/engine_equivalence.rs`. Queue-Lock relaxes the
+//! inter-block barrier exactly as the paper describes, so its trajectory
+//! can deviate when several blocks improve concurrently (it remains
+//! monotone and converges to the same quality; with a single block it is
+//! bit-exact too).
+
+mod async_persistent;
+mod common;
+mod queue;
+mod queue_lock;
+mod reduction;
+
+pub use async_persistent::AsyncEngine;
+pub use common::{GlobalBest, ParallelSettings};
+pub use queue::QueueEngine;
+pub use queue_lock::QueueLockEngine;
+pub use reduction::ReductionEngine;
+
+use crate::config::EngineKind;
+use crate::fitness::{Fitness, Objective};
+use crate::pso::{PsoParams, RunOutput};
+
+/// A PSO solver implementation (one of the paper's five columns).
+pub trait Engine: Send {
+    /// Column label (matches the paper's tables).
+    fn name(&self) -> &'static str;
+
+    /// Solve: run `params.max_iter` iterations and return the best datum.
+    fn run(
+        &mut self,
+        params: &PsoParams,
+        fitness: &dyn Fitness,
+        objective: Objective,
+        seed: u64,
+    ) -> RunOutput;
+}
+
+/// The serial Algorithm 1 as an [`Engine`] (the "CPU" column).
+pub struct SerialEngine;
+
+impl Engine for SerialEngine {
+    fn name(&self) -> &'static str {
+        "CPU"
+    }
+
+    fn run(
+        &mut self,
+        params: &PsoParams,
+        fitness: &dyn Fitness,
+        objective: Objective,
+        seed: u64,
+    ) -> RunOutput {
+        crate::pso::serial::run(params, fitness, objective, seed)
+    }
+}
+
+/// Construct an engine by kind (Plane-A kinds only; the XLA kinds live in
+/// [`crate::coordinator`]).
+pub fn build(kind: EngineKind, workers: usize) -> Option<Box<dyn Engine>> {
+    let settings = ParallelSettings::with_workers(workers);
+    match kind {
+        EngineKind::SerialCpu => Some(Box::new(SerialEngine)),
+        EngineKind::Reduction => Some(Box::new(ReductionEngine::new(settings))),
+        EngineKind::LoopUnrolling => Some(Box::new(ReductionEngine::unrolled(settings))),
+        EngineKind::Queue => Some(Box::new(QueueEngine::new(settings))),
+        EngineKind::QueueLock => Some(Box::new(QueueLockEngine::new(settings))),
+        EngineKind::AsyncPersistent => Some(Box::new(AsyncEngine::new(settings))),
+        EngineKind::XlaSync | EngineKind::XlaAsync => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::Cubic;
+
+    #[test]
+    fn build_covers_all_plane_a_kinds() {
+        for kind in EngineKind::TABLE3 {
+            let e = build(kind, 2).expect("plane-A engine");
+            assert_eq!(e.name(), kind.label());
+        }
+        assert!(build(EngineKind::XlaSync, 2).is_none());
+    }
+
+    #[test]
+    fn every_engine_solves_cubic_1d() {
+        let params = PsoParams::paper_1d(128, 150);
+        for kind in EngineKind::TABLE3 {
+            let mut e = build(kind, 4).unwrap();
+            let out = e.run(&params, &Cubic, Objective::Maximize, 1);
+            assert!(
+                out.gbest_fit > 890_000.0,
+                "{}: gbest {}",
+                e.name(),
+                out.gbest_fit
+            );
+        }
+    }
+}

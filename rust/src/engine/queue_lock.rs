@@ -1,0 +1,166 @@
+//! The Queue-Lock engine — Algorithm 2 + Algorithm 3 fused (§4.2), the
+//! paper's second contribution.
+//!
+//! The two kernels are fused into one launch per iteration: each block
+//! steps its particles with the conditional queue exactly as the Queue
+//! engine, but instead of writing its block best to aux arrays and
+//! waiting for a second kernel, it immediately compares against the
+//! global best and — only when better — takes the CAS spin lock and
+//! updates `(gbest_fit, gbest_pos)` in place (Algorithm 3). This removes
+//! the aux-array traffic *and* the inter-kernel barrier; blocks of the
+//! same iteration run unsynchronized against each other, which is the
+//! paper's documented relaxation ("no bad side effect", best for 1-D).
+
+use super::common::{step_block, GlobalBest, ParallelSettings, SharedSwarm, StepScratch};
+use super::Engine;
+use crate::exec::SharedQueue;
+use crate::fitness::{Fitness, Objective};
+use crate::pso::serial_sync::better_with_tie;
+use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
+use crate::rng::PhiloxStream;
+
+/// The fused Queue-Lock engine (one kernel per iteration).
+pub struct QueueLockEngine {
+    settings: ParallelSettings,
+}
+
+impl QueueLockEngine {
+    /// New engine on the given pool/geometry.
+    pub fn new(settings: ParallelSettings) -> Self {
+        Self { settings }
+    }
+}
+
+impl Engine for QueueLockEngine {
+    fn name(&self) -> &'static str {
+        "Queue Lock"
+    }
+
+    fn run(
+        &mut self,
+        params: &PsoParams,
+        fitness: &dyn Fitness,
+        objective: Objective,
+        seed: u64,
+    ) -> RunOutput {
+        let stream = PhiloxStream::new(seed);
+        let mut init = SwarmState::init(params, &stream);
+        let (fit0, gi) = init.seed_fitness(fitness, objective);
+        let gbest = GlobalBest::new(fit0, &init.position_of(gi));
+        let state = SharedSwarm::new(init);
+
+        let blocks = self.settings.blocks_for(params.n);
+        let queues: Vec<SharedQueue<(f64, u32)>> = (0..blocks)
+            .map(|_| SharedQueue::new(self.settings.block_size))
+            .collect();
+
+        let stride = history_stride(params.max_iter);
+        let mut history = Vec::new();
+        // Per-block gbest_pos snapshot buffer: in the fused kernel the
+        // global position can be updated by another block mid-iteration
+        // (the paper's benign race); each block snapshots at its start.
+        let snapshots = super::common::PerBlock::from_fn(blocks, |_| vec![0.0; params.dim]);
+        let step_scratch = super::common::PerBlock::from_fn(blocks, |_| {
+            StepScratch::new(self.settings.block_size)
+        });
+
+        for iter in 0..params.max_iter {
+            // ---- single fused kernel ----
+            self.settings.pool.launch(blocks, |ctx| {
+                let b = ctx.block_id;
+                let (lo, hi) = self.settings.block_range(b, params.n);
+                let q = &queues[b];
+                q.reset();
+                // SAFETY: snapshot buffer b belongs to this block.
+                let frozen = unsafe { snapshots.get(b) };
+                gbest.load_pos(frozen);
+                let threshold = gbest.fit_relaxed();
+                // SAFETY: this block only touches particles [lo, hi).
+                let st = unsafe { state.get() };
+                let ss = unsafe { step_scratch.get(b) };
+                step_block(
+                    st, lo, hi, frozen, params, fitness, objective, &stream, iter, ss,
+                );
+                for k in 0..(hi - lo) {
+                    let fit = ss.fit[k];
+                    if objective.better(fit, threshold) {
+                        q.push((fit, (lo + k) as u32));
+                    }
+                }
+                // Thread-0 scan of the block queue…
+                let mut best = (objective.worst(), u32::MAX);
+                q.scan(|&(f, i)| {
+                    if better_with_tie(objective, f, i as usize, best.0, best.1 as usize) {
+                        best = (f, i);
+                    }
+                });
+                // …then Algorithm 3: lock + re-check + in-place update,
+                // replacing the aux-array write and the 2nd kernel.
+                if best.1 != u32::MAX {
+                    gbest.update_locked(objective, best.0, || {
+                        st.position_of(best.1 as usize)
+                    });
+                }
+            });
+            if iter % stride == 0 {
+                history.push((iter, gbest.fit_relaxed()));
+            }
+        }
+        history.push((params.max_iter, gbest.fit_relaxed()));
+
+        let counters = Counters {
+            particle_updates: params.n as u64 * params.max_iter,
+            queue_pushes: queues.iter().map(|q| q.total_pushes()).sum(),
+            gbest_updates: gbest.update_count(),
+            ..Default::default()
+        };
+        RunOutput {
+            gbest_fit: gbest.fit_relaxed(),
+            gbest_pos: gbest.pos_vec(),
+            iters: params.max_iter,
+            history,
+            counters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::Cubic;
+
+    #[test]
+    fn solves_cubic_1d() {
+        let params = PsoParams::paper_1d(512, 100);
+        let mut e = QueueLockEngine::new(ParallelSettings::with_workers(4));
+        let out = e.run(&params, &Cubic, Objective::Maximize, 1);
+        assert!(out.gbest_fit > 890_000.0, "gbest {}", out.gbest_fit);
+        assert!((out.gbest_pos[0] - 100.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn monotone_despite_relaxed_sync() {
+        let params = PsoParams::paper_120d(128, 60);
+        let mut e = QueueLockEngine::new(ParallelSettings::with_workers(8));
+        let out = e.run(&params, &Cubic, Objective::Maximize, 2);
+        for w in out.history.windows(2) {
+            assert!(w[1].1 >= w[0].1, "gbest must never worsen");
+        }
+    }
+
+    #[test]
+    fn lock_taken_rarely() {
+        // The whole point: the lock serializes only improvements, which
+        // are rare relative to particle updates.
+        let params = PsoParams::paper_1d(1024, 200);
+        let mut e = QueueLockEngine::new(ParallelSettings::with_workers(4));
+        let out = e.run(&params, &Cubic, Objective::Maximize, 7);
+        let updates = out.counters.particle_updates;
+        assert!(
+            out.counters.gbest_updates * 50 < updates,
+            "gbest updates {} vs particle updates {}",
+            out.counters.gbest_updates,
+            updates
+        );
+    }
+}

@@ -1,0 +1,299 @@
+//! The Reduction and Loop-Unrolling engines (§3.2) — the state of the art
+//! the paper compares against ([3] and the Harris reduction).
+//!
+//! Per iteration:
+//! 1. **1st kernel** (one launch): every block steps its particles, then
+//!    copies the fresh fitness values into a per-block scratch array and
+//!    tree-reduces it (`s = bs/2, bs/4, …, 1` — the full `O(log n)` memory
+//!    traffic the queue algorithm avoids), writing the block best to the
+//!    aux arrays `(auxFit[b], auxIdx[b])`.
+//! 2. **2nd kernel** (second launch = the implicit inter-kernel barrier):
+//!    a single block tree-reduces the aux arrays and updates the global
+//!    best.
+//!
+//! The Loop-Unrolling variant replaces the last reduction levels
+//! (`s ≤ 32`) with straight-line code — the warp-unrolling optimization of
+//! the Harris notes, which removes loop/branch overhead but none of the
+//! memory traffic or the inter-kernel synchronization.
+
+use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSwarm, StepScratch};
+use super::Engine;
+use crate::fitness::{Fitness, Objective};
+use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
+use crate::rng::PhiloxStream;
+
+/// Per-block reduction scratch (`bestFit` / index arrays in shared memory).
+struct Scratch {
+    fits: Vec<f64>,
+    idxs: Vec<u32>,
+}
+
+/// Tree-reduce `m` live entries (scratch is padded to a power of two with
+/// the objective's worst). Winner lands in slot 0. `unrolled` switches the
+/// final levels to straight-line code.
+fn reduce_tree(scratch: &mut Scratch, m: usize, objective: Objective, unrolled: bool) -> (f64, u32) {
+    use crate::pso::serial_sync::better_with_tie;
+    let len = m.next_power_of_two();
+    let (fits, idxs) = (&mut scratch.fits, &mut scratch.idxs);
+
+    /// One reduction level: fold `[j + s]` into `[j]`.
+    macro_rules! level {
+        ($s:expr) => {
+            let s = $s;
+            for j in 0..s {
+                if better_with_tie(
+                    objective,
+                    fits[j + s],
+                    idxs[j + s] as usize,
+                    fits[j],
+                    idxs[j] as usize,
+                ) {
+                    fits[j] = fits[j + s];
+                    idxs[j] = idxs[j + s];
+                }
+            }
+        };
+    }
+
+    let mut s = len / 2;
+    while s > 32 {
+        level!(s);
+        s /= 2;
+    }
+    if unrolled {
+        // The Harris-style unrolled tail: no loop bookkeeping for s ≤ 32.
+        if s >= 32 {
+            level!(32);
+        }
+        if s >= 16 {
+            level!(16);
+        }
+        if s >= 8 {
+            level!(8);
+        }
+        if s >= 4 {
+            level!(4);
+        }
+        if s >= 2 {
+            level!(2);
+        }
+        if s >= 1 {
+            level!(1);
+        }
+    } else {
+        while s >= 1 {
+            level!(s);
+            s /= 2;
+        }
+    }
+    (fits[0], idxs[0])
+}
+
+/// The Reduction / Loop-Unrolling engine.
+pub struct ReductionEngine {
+    settings: ParallelSettings,
+    unrolled: bool,
+}
+
+impl ReductionEngine {
+    /// Plain parallel reduction (the paper's "Reduction" column).
+    pub fn new(settings: ParallelSettings) -> Self {
+        Self {
+            settings,
+            unrolled: false,
+        }
+    }
+
+    /// Unrolled final levels (the paper's "Loop Unrolling" column).
+    pub fn unrolled(settings: ParallelSettings) -> Self {
+        Self {
+            settings,
+            unrolled: true,
+        }
+    }
+}
+
+impl Engine for ReductionEngine {
+    fn name(&self) -> &'static str {
+        if self.unrolled {
+            "Loop Unrolling"
+        } else {
+            "Reduction"
+        }
+    }
+
+    fn run(
+        &mut self,
+        params: &PsoParams,
+        fitness: &dyn Fitness,
+        objective: Objective,
+        seed: u64,
+    ) -> RunOutput {
+        let stream = PhiloxStream::new(seed);
+        let mut init = SwarmState::init(params, &stream);
+        let (fit0, gi) = init.seed_fitness(fitness, objective);
+        let gbest = GlobalBest::new(fit0, &init.position_of(gi));
+        let state = SharedSwarm::new(init);
+
+        let blocks = self.settings.blocks_for(params.n);
+        let pad = self.settings.block_size.next_power_of_two();
+        let scratch = PerBlock::from_fn(blocks, |_| Scratch {
+            fits: vec![objective.worst(); pad],
+            idxs: vec![u32::MAX; pad],
+        });
+        let step_scratch =
+            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
+        // aux arrays: (auxFit[b], auxIdx[b]) + 2nd-kernel scratch.
+        let aux = PerBlock::from_fn(blocks, |_| (objective.worst(), u32::MAX));
+        let aux_pad = blocks.next_power_of_two();
+        let k2_scratch = PerBlock::from_fn(1, |_| Scratch {
+            fits: vec![objective.worst(); aux_pad],
+            idxs: vec![u32::MAX; aux_pad],
+        });
+
+        let stride = history_stride(params.max_iter);
+        let mut history = Vec::new();
+        let mut frozen = gbest.pos_vec();
+        let unrolled = self.unrolled;
+
+        for iter in 0..params.max_iter {
+            gbest.load_pos(&mut frozen);
+            let frozen_ref = &frozen;
+            // ---- 1st kernel: step + intra-block reduction -> aux ----
+            self.settings.pool.launch(blocks, |ctx| {
+                let b = ctx.block_id;
+                let (lo, hi) = self.settings.block_range(b, params.n);
+                // SAFETY: this block only touches particles [lo, hi).
+                let st = unsafe { state.get() };
+                let ss = unsafe { step_scratch.get(b) };
+                step_block(
+                    st, lo, hi, frozen_ref, params, fitness, objective, &stream, iter, ss,
+                );
+                // Copy fits to shared-memory scratch and tree-reduce —
+                // the full O(bs) traffic + O(log bs) passes of the
+                // reduction approach, paid EVERY iteration.
+                // SAFETY: scratch[b] is this block's own.
+                let sc = unsafe { scratch.get(b) };
+                let m = hi - lo;
+                let len = m.next_power_of_two();
+                for k in 0..m {
+                    sc.fits[k] = st.fit[lo + k];
+                    sc.idxs[k] = (lo + k) as u32;
+                }
+                for k in m..len {
+                    sc.fits[k] = objective.worst();
+                    sc.idxs[k] = u32::MAX;
+                }
+                let (bf, bi) = reduce_tree(sc, m, objective, unrolled);
+                // SAFETY: aux[b] is this block's own slot.
+                unsafe { *aux.get(b) = (bf, bi) };
+            });
+            // ---- 2nd kernel: single block reduces aux -> global best ----
+            self.settings.pool.launch(1, |_| {
+                // SAFETY: all 1st-kernel blocks joined; single block here.
+                let sc = unsafe { k2_scratch.get(0) };
+                for b in 0..blocks {
+                    let (f, i) = unsafe { *aux.get(b) };
+                    sc.fits[b] = f;
+                    sc.idxs[b] = i;
+                }
+                for b in blocks..aux_pad {
+                    sc.fits[b] = objective.worst();
+                    sc.idxs[b] = u32::MAX;
+                }
+                let (bf, bi) = reduce_tree(sc, blocks, objective, unrolled);
+                if bi != u32::MAX {
+                    let st = unsafe { state.get() };
+                    gbest.update_exclusive(objective, bf, &st.position_of(bi as usize));
+                }
+            });
+            if iter % stride == 0 {
+                history.push((iter, gbest.fit_relaxed()));
+            }
+        }
+        history.push((params.max_iter, gbest.fit_relaxed()));
+
+        let counters = Counters {
+            particle_updates: params.n as u64 * params.max_iter,
+            gbest_updates: gbest.update_count(),
+            ..Default::default()
+        };
+        RunOutput {
+            gbest_fit: gbest.fit_relaxed(),
+            gbest_pos: gbest.pos_vec(),
+            iters: params.max_iter,
+            history,
+            counters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::Cubic;
+
+    fn scratch_from(vals: &[f64]) -> Scratch {
+        let len = vals.len().next_power_of_two();
+        let mut fits = vec![f64::NEG_INFINITY; len];
+        let mut idxs = vec![u32::MAX; len];
+        for (i, &v) in vals.iter().enumerate() {
+            fits[i] = v;
+            idxs[i] = i as u32;
+        }
+        Scratch { fits, idxs }
+    }
+
+    #[test]
+    fn tree_reduce_finds_argmax_with_tie_break() {
+        for unrolled in [false, true] {
+            let mut sc = scratch_from(&[1.0, 7.0, 7.0, 3.0, -2.0]);
+            let (f, i) = reduce_tree(&mut sc, 5, Objective::Maximize, unrolled);
+            assert_eq!(f, 7.0);
+            assert_eq!(i, 1, "tie must go to the lower index (unrolled={unrolled})");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_single_element() {
+        let mut sc = scratch_from(&[4.2]);
+        assert_eq!(reduce_tree(&mut sc, 1, Objective::Maximize, true), (4.2, 0));
+    }
+
+    #[test]
+    fn tree_reduce_large_random_matches_linear_scan() {
+        use crate::rng::{RngEngine, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::seeded(1);
+        for unrolled in [false, true] {
+            for m in [2usize, 31, 32, 33, 255, 256, 257, 1000] {
+                let vals: Vec<f64> = (0..m).map(|_| rng.uniform(-1e6, 1e6)).collect();
+                let mut sc = scratch_from(&vals);
+                let (f, i) = reduce_tree(&mut sc, m, Objective::Maximize, unrolled);
+                let (li, lf) = vals
+                    .iter()
+                    .enumerate()
+                    .fold((usize::MAX, f64::NEG_INFINITY), |(bi, bf), (j, &v)| {
+                        if v > bf {
+                            (j, v)
+                        } else {
+                            (bi, bf)
+                        }
+                    });
+                assert_eq!((f, i as usize), (lf, li), "m={m} unrolled={unrolled}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_solves_and_both_variants_agree() {
+        let params = PsoParams::paper_1d(300, 80);
+        let s1 = ParallelSettings::with_workers(4);
+        let mut plain = ReductionEngine::new(s1.clone());
+        let mut unrl = ReductionEngine::unrolled(s1);
+        let a = plain.run(&params, &Cubic, Objective::Maximize, 9);
+        let b = unrl.run(&params, &Cubic, Objective::Maximize, 9);
+        assert_eq!(a.gbest_fit, b.gbest_fit, "unrolling must not change results");
+        assert_eq!(a.gbest_pos, b.gbest_pos);
+        assert!(a.gbest_fit > 890_000.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Atomic `f64` via CAS on the bit pattern — the CPU analog of CUDA's
+//! software atomic-double idiom (`atomicCAS` on `unsigned long long`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// An `f64` updatable atomically across threads.
+pub struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    /// New cell holding `v`.
+    pub fn new(v: f64) -> Self {
+        Self {
+            bits: AtomicU64::new(v.to_bits()),
+        }
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn load(&self, order: Ordering) -> f64 {
+        f64::from_bits(self.bits.load(order))
+    }
+
+    /// Unconditional store.
+    #[inline]
+    pub fn store(&self, v: f64, order: Ordering) {
+        self.bits.store(v.to_bits(), order);
+    }
+
+    /// CAS loop applying `f` until it sticks; returns the previous value.
+    #[inline]
+    pub fn fetch_update<F: Fn(f64) -> Option<f64>>(&self, f: F) -> Result<f64, f64> {
+        self.bits
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |b| {
+                f(f64::from_bits(b)).map(f64::to_bits)
+            })
+            .map(f64::from_bits)
+            .map_err(f64::from_bits)
+    }
+
+    /// Monotone max update (the `gbest_fit` pattern under Maximize):
+    /// store `v` only if it exceeds the current value. Returns `true` if
+    /// the store happened.
+    #[inline]
+    pub fn fetch_max(&self, v: f64) -> bool {
+        self.fetch_update(|cur| if v > cur { Some(v) } else { None })
+            .is_ok()
+    }
+
+    /// Monotone min update (Minimize sense).
+    #[inline]
+    pub fn fetch_min(&self, v: f64) -> bool {
+        self.fetch_update(|cur| if v < cur { Some(v) } else { None })
+            .is_ok()
+    }
+}
+
+impl std::fmt::Debug for AtomicF64 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AtomicF64({})", self.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::*;
+
+    #[test]
+    fn load_store_roundtrip() {
+        let a = AtomicF64::new(1.5);
+        assert_eq!(a.load(Relaxed), 1.5);
+        a.store(-2.25, Relaxed);
+        assert_eq!(a.load(Relaxed), -2.25);
+    }
+
+    #[test]
+    fn fetch_max_is_monotone() {
+        let a = AtomicF64::new(0.0);
+        assert!(a.fetch_max(3.0));
+        assert!(!a.fetch_max(1.0));
+        assert!(!a.fetch_max(3.0)); // strict: equal does not store
+        assert_eq!(a.load(Relaxed), 3.0);
+    }
+
+    #[test]
+    fn fetch_min_is_monotone() {
+        let a = AtomicF64::new(0.0);
+        assert!(a.fetch_min(-3.0));
+        assert!(!a.fetch_min(5.0));
+        assert_eq!(a.load(Relaxed), -3.0);
+    }
+
+    #[test]
+    fn concurrent_max_converges_to_global_max() {
+        let a = std::sync::Arc::new(AtomicF64::new(f64::NEG_INFINITY));
+        let mut handles = vec![];
+        for t in 0..8 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000 {
+                    a.fetch_max((t * 10_000 + i) as f64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load(Relaxed), 79_999.0);
+    }
+
+    #[test]
+    fn handles_neg_infinity_identity() {
+        let a = AtomicF64::new(f64::NEG_INFINITY);
+        assert!(a.fetch_max(-1e300));
+        assert_eq!(a.load(Relaxed), -1e300);
+    }
+}

@@ -1,0 +1,76 @@
+//! CUDA-like execution substrate on OS threads.
+//!
+//! The paper's algorithms are expressed against the CUDA machine model:
+//! a *grid* of *thread blocks*, per-block shared memory, `atomicAdd` /
+//! `atomicCAS` / `atomicExch`, `__syncthreads()`, and an implicit barrier
+//! between kernel launches. This module rebuilds that model on a multicore
+//! CPU so the algorithms (`engine/`) can be written structurally verbatim:
+//!
+//! | CUDA | here |
+//! |---|---|
+//! | thread block | one logical block processed by a pool worker ([`GridPool::launch`]) |
+//! | kernel launch + implicit inter-kernel barrier | [`GridPool::launch`] dispatch + join |
+//! | shared-memory queue + `atomicAdd` on the index | [`SharedQueue`] |
+//! | `atomicCAS(lock,0,1)` / `atomicExch(lock,0)` spin lock (Algorithm 3) | [`SpinLock`] |
+//! | atomic double updates | [`AtomicF64`] |
+//!
+//! The cost *structure* carries over: a launch costs a dispatch/join round
+//! (the kernel-launch analog), queue appends serialize on an atomic index,
+//! and the lock serializes global-best updates — exactly the overheads the
+//! paper's Queue and Queue-Lock algorithms trade against reduction traffic.
+
+mod atomic_f64;
+mod pool;
+mod queue;
+mod spinlock;
+
+pub use atomic_f64::AtomicF64;
+pub use pool::{BlockCtx, GridPool};
+pub use queue::SharedQueue;
+pub use spinlock::SpinLock;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn launch_covers_every_block_exactly_once() {
+        let pool = GridPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+        pool.launch(37, |ctx| {
+            hits[ctx.block_id].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "block {i}");
+        }
+    }
+
+    #[test]
+    fn launch_joins_before_returning() {
+        // The inter-kernel barrier: effects of launch N are visible to
+        // launch N+1.
+        let pool = GridPool::new(3);
+        let data: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+        pool.launch(16, |ctx| {
+            data[ctx.block_id].store(ctx.block_id + 1, Ordering::Release);
+        });
+        let sum = AtomicUsize::new(0);
+        pool.launch(16, |ctx| {
+            sum.fetch_add(data[ctx.block_id].load(Ordering::Acquire), Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (1..=16).sum::<usize>());
+    }
+
+    #[test]
+    fn sequential_launches_reuse_workers() {
+        let pool = GridPool::new(2);
+        let count = AtomicUsize::new(0);
+        for _ in 0..1000 {
+            pool.launch(2, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 2000);
+    }
+}

@@ -1,0 +1,175 @@
+//! The paper's shared-memory queue (Algorithm 2, lines 1–5):
+//!
+//! ```cuda
+//! if (fit > gbest_fit) {
+//!     unsigned qIdx = atomicAdd(&num, 1);
+//!     bestFitQueue[qIdx] = fit;
+//!     bestPosQueue[qIdx] = pos;
+//! }
+//! ```
+//!
+//! A fixed-capacity array with an atomic append cursor. Entries are pushed
+//! *conditionally* (only on improvement — <0.1% of updates per the paper's
+//! measurement, re-verified by `benches/ablation_queue_rarity.rs`), then a
+//! single scanner (thread 0 of the block) linearly reduces the queue.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Fixed-capacity multi-producer append array (`atomicAdd` on the cursor).
+///
+/// `T: Copy` because entries are `(fit, particle index)` pairs — the paper
+/// stores particle *indices* in the high-dimension case to bound shared
+/// memory (§5.3), and we mirror that.
+pub struct SharedQueue<T: Copy> {
+    slots: Box<[UnsafeCell<T>]>,
+    len: AtomicUsize,
+    /// Lifetime pushes (instrumentation for the rarity ablation).
+    total_pushes: std::sync::atomic::AtomicU64,
+}
+
+// SAFETY: slot writes are claimed by unique indices from `len`; reads only
+// happen after producers quiesce (enforced by &mut or the barrier in the
+// engine between the push phase and the scan phase).
+unsafe impl<T: Copy + Send> Send for SharedQueue<T> {}
+unsafe impl<T: Copy + Send> Sync for SharedQueue<T> {}
+
+impl<T: Copy + Default> SharedQueue<T> {
+    /// Queue with `capacity` slots (the shared-memory allocation).
+    pub fn new(capacity: usize) -> Self {
+        let slots: Vec<UnsafeCell<T>> =
+            (0..capacity).map(|_| UnsafeCell::new(T::default())).collect();
+        Self {
+            slots: slots.into_boxed_slice(),
+            len: AtomicUsize::new(0),
+            total_pushes: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+}
+
+impl<T: Copy> SharedQueue<T> {
+    /// `atomicAdd(&num, 1)` + slot write. Returns the claimed index, or
+    /// `None` if the queue is full (the paper sizes the queue = block size
+    /// so overflow is impossible there; we keep the check for smaller
+    /// capacities and count the drop).
+    #[inline]
+    pub fn push(&self, value: T) -> Option<usize> {
+        let idx = self.len.fetch_add(1, Ordering::AcqRel);
+        if idx >= self.slots.len() {
+            // Back out the overshoot so len stays ≤ capacity-ish; the
+            // saturating semantic only matters for diagnostics.
+            self.len.fetch_sub(1, Ordering::AcqRel);
+            return None;
+        }
+        // SAFETY: idx was uniquely claimed by fetch_add.
+        unsafe { *self.slots[idx].get() = value };
+        self.total_pushes.fetch_add(1, Ordering::Relaxed);
+        Some(idx)
+    }
+
+    /// Number of live entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Acquire).min(self.slots.len())
+    }
+
+    /// True if no entries were pushed since the last reset — the common
+    /// (>99.9%) case the queue algorithm optimizes for.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Capacity (shared-memory slots).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Scan the live entries (the thread-0 loop of Algorithm 2, lines
+    /// 10–16). Caller must be the only accessor (post-quiescence), which
+    /// the engines guarantee by scanning after the block's push phase.
+    #[inline]
+    pub fn scan<F: FnMut(&T)>(&self, mut f: F) {
+        let n = self.len();
+        for slot in &self.slots[..n] {
+            // SAFETY: producers have quiesced; indices < len are written.
+            f(unsafe { &*slot.get() });
+        }
+    }
+
+    /// Reset for the next iteration (`num = 0`).
+    #[inline]
+    pub fn reset(&self) {
+        self.len.store(0, Ordering::Release);
+    }
+
+    /// Lifetime number of successful pushes (rarity instrumentation).
+    pub fn total_pushes(&self) -> u64 {
+        self.total_pushes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_scan_roundtrip() {
+        let q: SharedQueue<(f64, usize)> = SharedQueue::new(8);
+        assert!(q.is_empty());
+        q.push((1.0, 10));
+        q.push((3.0, 30));
+        q.push((2.0, 20));
+        assert_eq!(q.len(), 3);
+        let mut seen = vec![];
+        q.scan(|&(f, i)| seen.push((f, i)));
+        assert_eq!(seen, vec![(1.0, 10), (3.0, 30), (2.0, 20)]);
+    }
+
+    #[test]
+    fn reset_clears_logical_content() {
+        let q: SharedQueue<u64> = SharedQueue::new(4);
+        q.push(1);
+        q.push(2);
+        q.reset();
+        assert!(q.is_empty());
+        let mut count = 0;
+        q.scan(|_| count += 1);
+        assert_eq!(count, 0);
+        assert_eq!(q.total_pushes(), 2); // instrumentation survives reset
+    }
+
+    #[test]
+    fn overflow_is_reported_not_ub() {
+        let q: SharedQueue<u64> = SharedQueue::new(2);
+        assert!(q.push(1).is_some());
+        assert!(q.push(2).is_some());
+        assert!(q.push(3).is_none());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_pushes_claim_unique_slots() {
+        let q: Arc<SharedQueue<u64>> = Arc::new(SharedQueue::new(64_000));
+        let mut handles = vec![];
+        for t in 0..8u64 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..8000 {
+                    q.push(t * 8000 + i).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(q.len(), 64_000);
+        let mut seen = vec![false; 64_000];
+        q.scan(|&v| {
+            assert!(!seen[v as usize], "duplicate value {v}");
+            seen[v as usize] = true;
+        });
+        assert!(seen.iter().all(|&s| s), "lost a slot");
+    }
+}

@@ -1,0 +1,379 @@
+//! Concrete fitness functions.
+//!
+//! Each overrides `eval_batch` with an SoA-streaming loop (dimension-major,
+//! particle-minor) so the hot path touches memory exactly the way the
+//! paper's coalesced layout does (Figure 2): for a fixed dimension `d`, the
+//! inner loop walks `pos[d*n .. d*n+n]` contiguously.
+
+use super::{Fitness, Objective};
+
+/// The paper's fitness function (Eq. 3), **maximized** over `[-100,100]^d`:
+///
+/// `f(x) = Σ_d  x_d³ − 0.8·x_d² − 1000·x_d + 8000`
+///
+/// Separable; per-dimension maximum on the closed domain sits at the upper
+/// boundary `x = 100` with value `100³ − 0.8·100² − 1000·100 + 8000 =
+/// 900_000` per dimension.
+pub struct Cubic;
+
+impl Cubic {
+    /// Per-dimension term — shared by the scalar and batch paths and by the
+    /// gpusim FLOP count.
+    #[inline(always)]
+    pub fn term(x: f64) -> f64 {
+        // Horner form: ((x - 0.8) * x - 1000) * x + 8000
+        ((x - 0.8) * x - 1000.0) * x + 8000.0
+    }
+}
+
+impl Fitness for Cubic {
+    fn name(&self) -> &'static str {
+        "cubic"
+    }
+
+    fn default_bounds(&self) -> (f64, f64) {
+        (-100.0, 100.0)
+    }
+
+    fn default_objective(&self) -> Objective {
+        Objective::Maximize
+    }
+
+    #[inline]
+    fn eval(&self, x: &[f64]) -> f64 {
+        x.iter().map(|&v| Self::term(v)).sum()
+    }
+
+    fn optimum(&self, dim: usize) -> Option<f64> {
+        Some(900_000.0 * dim as f64)
+    }
+
+    fn eval_batch(&self, pos: &[f64], n: usize, dim: usize, fit: &mut [f64]) {
+        fit.fill(0.0);
+        for d in 0..dim {
+            let row = &pos[d * n..(d + 1) * n];
+            for (f, &x) in fit.iter_mut().zip(row) {
+                *f += Self::term(x);
+            }
+        }
+    }
+
+    fn eval_range(&self, pos: &[f64], n: usize, dim: usize, lo: usize, hi: usize, fit: &mut [f64]) {
+        fit.fill(0.0);
+        for d in 0..dim {
+            let row = &pos[d * n + lo..d * n + hi];
+            for (f, &x) in fit.iter_mut().zip(row) {
+                *f += Self::term(x);
+            }
+        }
+    }
+}
+
+/// Sphere: `Σ x²`, minimized over `[-100, 100]^d`, optimum 0 at origin.
+pub struct Sphere;
+
+impl Fitness for Sphere {
+    fn name(&self) -> &'static str {
+        "sphere"
+    }
+
+    fn default_bounds(&self) -> (f64, f64) {
+        (-100.0, 100.0)
+    }
+
+    fn default_objective(&self) -> Objective {
+        Objective::Minimize
+    }
+
+    #[inline]
+    fn eval(&self, x: &[f64]) -> f64 {
+        x.iter().map(|&v| v * v).sum()
+    }
+
+    fn optimum(&self, _dim: usize) -> Option<f64> {
+        Some(0.0)
+    }
+
+    fn eval_batch(&self, pos: &[f64], n: usize, dim: usize, fit: &mut [f64]) {
+        fit.fill(0.0);
+        for d in 0..dim {
+            let row = &pos[d * n..(d + 1) * n];
+            for (f, &x) in fit.iter_mut().zip(row) {
+                *f += x * x;
+            }
+        }
+    }
+
+    fn eval_range(&self, pos: &[f64], n: usize, dim: usize, lo: usize, hi: usize, fit: &mut [f64]) {
+        fit.fill(0.0);
+        for d in 0..dim {
+            let row = &pos[d * n + lo..d * n + hi];
+            for (f, &x) in fit.iter_mut().zip(row) {
+                *f += x * x;
+            }
+        }
+    }
+}
+
+/// Rosenbrock: `Σ 100(x_{d+1} − x_d²)² + (1 − x_d)²`, minimized over
+/// `[-30, 30]^d`, optimum 0 at all-ones. Non-separable (couples adjacent
+/// dimensions) — exercises the multi-dimension paths differently from the
+/// separable functions.
+pub struct Rosenbrock;
+
+impl Fitness for Rosenbrock {
+    fn name(&self) -> &'static str {
+        "rosenbrock"
+    }
+
+    fn default_bounds(&self) -> (f64, f64) {
+        (-30.0, 30.0)
+    }
+
+    fn default_objective(&self) -> Objective {
+        Objective::Minimize
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        x.windows(2)
+            .map(|w| {
+                let t = w[1] - w[0] * w[0];
+                let u = 1.0 - w[0];
+                100.0 * t * t + u * u
+            })
+            .sum()
+    }
+
+    fn optimum(&self, _dim: usize) -> Option<f64> {
+        Some(0.0)
+    }
+
+    fn eval_batch(&self, pos: &[f64], n: usize, dim: usize, fit: &mut [f64]) {
+        fit.fill(0.0);
+        for d in 0..dim.saturating_sub(1) {
+            let cur = &pos[d * n..(d + 1) * n];
+            let nxt = &pos[(d + 1) * n..(d + 2) * n];
+            for i in 0..n {
+                let t = nxt[i] - cur[i] * cur[i];
+                let u = 1.0 - cur[i];
+                fit[i] += 100.0 * t * t + u * u;
+            }
+        }
+    }
+}
+
+/// Griewank: `1 + Σ x²/4000 − Π cos(x_d/√(d+1))`, minimized over
+/// `[-600, 600]^d`, optimum 0 at origin.
+pub struct Griewank;
+
+impl Fitness for Griewank {
+    fn name(&self) -> &'static str {
+        "griewank"
+    }
+
+    fn default_bounds(&self) -> (f64, f64) {
+        (-600.0, 600.0)
+    }
+
+    fn default_objective(&self) -> Objective {
+        Objective::Minimize
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        let sum: f64 = x.iter().map(|&v| v * v).sum::<f64>() / 4000.0;
+        let prod: f64 = x
+            .iter()
+            .enumerate()
+            .map(|(d, &v)| (v / ((d + 1) as f64).sqrt()).cos())
+            .product();
+        1.0 + sum - prod
+    }
+
+    fn optimum(&self, _dim: usize) -> Option<f64> {
+        Some(0.0)
+    }
+
+    fn eval_batch(&self, pos: &[f64], n: usize, dim: usize, fit: &mut [f64]) {
+        // fit accumulates the quadratic sum; prod kept in a scratch row.
+        let mut prod = vec![1.0; n];
+        fit.fill(0.0);
+        for d in 0..dim {
+            let row = &pos[d * n..(d + 1) * n];
+            let inv_sqrt = 1.0 / ((d + 1) as f64).sqrt();
+            for i in 0..n {
+                fit[i] += row[i] * row[i];
+                prod[i] *= (row[i] * inv_sqrt).cos();
+            }
+        }
+        for i in 0..n {
+            fit[i] = 1.0 + fit[i] / 4000.0 - prod[i];
+        }
+    }
+}
+
+/// Rastrigin: `10d + Σ (x² − 10 cos 2πx)`, minimized over `[-5.12, 5.12]^d`,
+/// optimum 0 at origin. Highly multimodal.
+pub struct Rastrigin;
+
+impl Fitness for Rastrigin {
+    fn name(&self) -> &'static str {
+        "rastrigin"
+    }
+
+    fn default_bounds(&self) -> (f64, f64) {
+        (-5.12, 5.12)
+    }
+
+    fn default_objective(&self) -> Objective {
+        Objective::Minimize
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        let d = x.len() as f64;
+        10.0 * d
+            + x.iter()
+                .map(|&v| v * v - 10.0 * (std::f64::consts::TAU * v).cos())
+                .sum::<f64>()
+    }
+
+    fn optimum(&self, _dim: usize) -> Option<f64> {
+        Some(0.0)
+    }
+
+    fn eval_batch(&self, pos: &[f64], n: usize, dim: usize, fit: &mut [f64]) {
+        fit.fill(10.0 * dim as f64);
+        for d in 0..dim {
+            let row = &pos[d * n..(d + 1) * n];
+            for (f, &x) in fit.iter_mut().zip(row) {
+                *f += x * x - 10.0 * (std::f64::consts::TAU * x).cos();
+            }
+        }
+    }
+
+    fn eval_range(&self, pos: &[f64], n: usize, dim: usize, lo: usize, hi: usize, fit: &mut [f64]) {
+        fit.fill(10.0 * dim as f64);
+        for d in 0..dim {
+            let row = &pos[d * n + lo..d * n + hi];
+            for (f, &x) in fit.iter_mut().zip(row) {
+                *f += x * x - 10.0 * (std::f64::consts::TAU * x).cos();
+            }
+        }
+    }
+}
+
+/// Ackley: minimized over `[-32, 32]^d`, optimum 0 at origin.
+pub struct Ackley;
+
+impl Fitness for Ackley {
+    fn name(&self) -> &'static str {
+        "ackley"
+    }
+
+    fn default_bounds(&self) -> (f64, f64) {
+        (-32.0, 32.0)
+    }
+
+    fn default_objective(&self) -> Objective {
+        Objective::Minimize
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        let d = x.len() as f64;
+        let sq: f64 = x.iter().map(|&v| v * v).sum::<f64>() / d;
+        let cs: f64 = x
+            .iter()
+            .map(|&v| (std::f64::consts::TAU * v).cos())
+            .sum::<f64>()
+            / d;
+        -20.0 * (-0.2 * sq.sqrt()).exp() - cs.exp() + 20.0 + std::f64::consts::E
+    }
+
+    fn optimum(&self, _dim: usize) -> Option<f64> {
+        Some(0.0)
+    }
+}
+
+/// Schwefel 2.26: `418.9829d − Σ x sin √|x|`, minimized over
+/// `[-500, 500]^d`, optimum ≈0 at `x = 420.9687...`. Deceptive: the global
+/// optimum is far from the domain center, punishing premature convergence.
+pub struct Schwefel226;
+
+impl Fitness for Schwefel226 {
+    fn name(&self) -> &'static str {
+        "schwefel226"
+    }
+
+    fn default_bounds(&self) -> (f64, f64) {
+        (-500.0, 500.0)
+    }
+
+    fn default_objective(&self) -> Objective {
+        Objective::Minimize
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        418.9829 * x.len() as f64
+            - x.iter().map(|&v| v * v.abs().sqrt().sin()).sum::<f64>()
+    }
+
+    fn optimum(&self, _dim: usize) -> Option<f64> {
+        Some(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cubic_matches_equation3_reference_points() {
+        // f(0) = 8000 per dimension.
+        assert_eq!(Cubic.eval(&[0.0]), 8000.0);
+        // f(100) = 1e6 - 8000 - 1e5 + 8000 = 900000.
+        assert!((Cubic.eval(&[100.0]) - 900_000.0).abs() < 1e-9);
+        // f(-100) = -1e6 - 8000 + 1e5 + 8000 = -900000.
+        assert!((Cubic.eval(&[-100.0]) + 900_000.0).abs() < 1e-9);
+        // Separability: d-dim = sum of 1-dim terms.
+        let v = Cubic.eval(&[1.0, 2.0, 3.0]);
+        let w = Cubic.eval(&[1.0]) + Cubic.eval(&[2.0]) + Cubic.eval(&[3.0]);
+        assert!((v - w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cubic_domain_max_is_at_upper_bound() {
+        // Dense scan: no interior point beats x=100 on [-100, 100].
+        let best = (0..=2000)
+            .map(|k| -100.0 + 0.1 * k as f64)
+            .map(|x| Cubic.eval(&[x]))
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!((best - 900_000.0).abs() < 1e-6);
+        assert_eq!(Cubic.optimum(120), Some(900_000.0 * 120.0));
+    }
+
+    #[test]
+    fn minimized_suite_is_zero_at_optimum() {
+        assert_eq!(Sphere.eval(&[0.0; 8]), 0.0);
+        assert_eq!(Rosenbrock.eval(&[1.0; 8]), 0.0);
+        assert!(Griewank.eval(&[0.0; 8]).abs() < 1e-12);
+        assert!(Rastrigin.eval(&[0.0; 8]).abs() < 1e-12);
+        assert!(Ackley.eval(&[0.0; 8]).abs() < 1e-12);
+        assert!(Schwefel226.eval(&[420.9687; 8]).abs() < 1e-2);
+    }
+
+    #[test]
+    fn nonoptimal_points_are_worse() {
+        assert!(Sphere.eval(&[1.0, 1.0]) > 0.0);
+        assert!(Rosenbrock.eval(&[0.0, 0.0]) > 0.0);
+        assert!(Rastrigin.eval(&[0.5, 0.5]) > 0.0);
+        assert!(Ackley.eval(&[5.0]) > 1.0);
+    }
+
+    #[test]
+    fn rosenbrock_batch_handles_dim1() {
+        // dim=1 has no adjacent pair: fitness must be 0, not a panic.
+        let pos = [3.0, -2.0];
+        let mut fit = [9.9, 9.9];
+        Rosenbrock.eval_batch(&pos, 2, 1, &mut fit);
+        assert_eq!(fit, [0.0, 0.0]);
+    }
+}

@@ -1,0 +1,243 @@
+//! Fitness-function library.
+//!
+//! The paper evaluates exclusively on the **Cubic** function (Eq. 3),
+//! *maximizing* it over `[-100, 100]^d` (Algorithm 1 uses `>` comparisons
+//! throughout). We implement Cubic plus the standard benchmark suite the
+//! paper names as alternatives (Sphere, Rosenbrock, Griewank) and a few
+//! more that downstream users expect (Rastrigin, Ackley, Schwefel 2.26),
+//! each with its canonical search domain and optimization sense.
+
+mod functions;
+
+pub use functions::{Ackley, Cubic, Griewank, Rastrigin, Rosenbrock, Schwefel226, Sphere};
+
+/// Whether larger or smaller fitness is better.
+///
+/// The paper maximizes (Cubic's `+8000 - 1000x` shape peaks at the upper
+/// bound); the classical test suite minimizes. Engines are generic over
+/// the sense via [`Objective::better`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Larger fitness wins (the paper's setting).
+    Maximize,
+    /// Smaller fitness wins (classical benchmark convention).
+    Minimize,
+}
+
+impl Objective {
+    /// Is `a` strictly better than `b` under this sense?
+    #[inline(always)]
+    pub fn better(self, a: f64, b: f64) -> bool {
+        match self {
+            Objective::Maximize => a > b,
+            Objective::Minimize => a < b,
+        }
+    }
+
+    /// The worst representable fitness (identity of the `better` fold).
+    #[inline]
+    pub fn worst(self) -> f64 {
+        match self {
+            Objective::Maximize => f64::NEG_INFINITY,
+            Objective::Minimize => f64::INFINITY,
+        }
+    }
+
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "max" | "maximize" => Some(Objective::Maximize),
+            "min" | "minimize" => Some(Objective::Minimize),
+            _ => None,
+        }
+    }
+}
+
+/// A fitness function over `R^d`.
+///
+/// `eval` is the scalar hot-path entry (one particle); `eval_batch` is the
+/// SoA entry the engines and the AOT plane use — positions laid out
+/// `[dim][particle]` (coalesced, Figure 2 of the paper) with `fit` filled
+/// per particle.
+pub trait Fitness: Sync {
+    /// Human-readable name (table headers, CLI).
+    fn name(&self) -> &'static str;
+
+    /// Canonical per-dimension search bounds `(min_pos, max_pos)`.
+    fn default_bounds(&self) -> (f64, f64);
+
+    /// The optimization sense this function is conventionally used with.
+    fn default_objective(&self) -> Objective;
+
+    /// Evaluate one position (length = dimensionality).
+    fn eval(&self, x: &[f64]) -> f64;
+
+    /// Known optimum fitness value, if analytic (used by convergence tests).
+    /// `dim` is the dimensionality.
+    fn optimum(&self, dim: usize) -> Option<f64> {
+        let _ = dim;
+        None
+    }
+
+    /// Batch evaluation over SoA storage: `pos[d * n + i]` is coordinate `d`
+    /// of particle `i`; writes `fit[i]`. Default loops over `eval` via a
+    /// scratch vector; implementations override with a vectorized loop.
+    fn eval_batch(&self, pos: &[f64], n: usize, dim: usize, fit: &mut [f64]) {
+        debug_assert_eq!(pos.len(), n * dim);
+        debug_assert_eq!(fit.len(), n);
+        let mut x = vec![0.0; dim];
+        for i in 0..n {
+            for d in 0..dim {
+                x[d] = pos[d * n + i];
+            }
+            fit[i] = self.eval(&x);
+        }
+    }
+
+    /// Range evaluation over SoA storage: fitness of particles `lo..hi`
+    /// into `fit[0..hi-lo]`. This is the engines' hot path — the default
+    /// gathers per particle (strided), while separable functions override
+    /// with **dimension-major row accumulation** that streams each SoA row
+    /// contiguously (the CPU analog of the paper's coalesced access).
+    ///
+    /// Implementations must accumulate per-dimension terms in ascending
+    /// dimension order so results are bit-identical to `eval` (the
+    /// cross-engine equivalence tests rely on it).
+    fn eval_range(&self, pos: &[f64], n: usize, dim: usize, lo: usize, hi: usize, fit: &mut [f64]) {
+        debug_assert!(hi <= n && lo <= hi);
+        debug_assert_eq!(fit.len(), hi - lo);
+        let mut x = vec![0.0; dim];
+        for i in lo..hi {
+            for d in 0..dim {
+                x[d] = pos[d * n + i];
+            }
+            fit[i - lo] = self.eval(&x);
+        }
+    }
+}
+
+/// Runtime function selection (CLI `--fitness`).
+pub fn by_name(name: &str) -> Option<Box<dyn Fitness + Send>> {
+    match name.to_ascii_lowercase().as_str() {
+        "cubic" => Some(Box::new(Cubic)),
+        "sphere" => Some(Box::new(Sphere)),
+        "rosenbrock" => Some(Box::new(Rosenbrock)),
+        "griewank" => Some(Box::new(Griewank)),
+        "rastrigin" => Some(Box::new(Rastrigin)),
+        "ackley" => Some(Box::new(Ackley)),
+        "schwefel" | "schwefel226" => Some(Box::new(Schwefel226)),
+        _ => None,
+    }
+}
+
+/// All registered function names (for `--help` and the gallery example).
+pub const ALL_NAMES: &[&str] = &[
+    "cubic",
+    "sphere",
+    "rosenbrock",
+    "griewank",
+    "rastrigin",
+    "ackley",
+    "schwefel",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_better_semantics() {
+        assert!(Objective::Maximize.better(2.0, 1.0));
+        assert!(!Objective::Maximize.better(1.0, 2.0));
+        assert!(!Objective::Maximize.better(1.0, 1.0));
+        assert!(Objective::Minimize.better(1.0, 2.0));
+        assert!(Objective::Maximize.better(0.0, Objective::Maximize.worst()));
+        assert!(Objective::Minimize.better(0.0, Objective::Minimize.worst()));
+    }
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in ALL_NAMES {
+            assert!(by_name(name).is_some(), "missing {name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn eval_range_matches_eval_batch_for_all_functions() {
+        // Both the streaming overrides (Cubic/Sphere/Rastrigin) and the
+        // gather default (Rosenbrock/Griewank/Ackley/Schwefel) must agree
+        // with eval_batch on arbitrary sub-ranges — including bit-exact
+        // agreement for the separable overrides (ascending-dim sums).
+        let n = 13;
+        let dim = 6;
+        for name in ALL_NAMES {
+            let f = by_name(name).unwrap();
+            let (lo_b, hi_b) = f.default_bounds();
+            let pos: Vec<f64> = (0..n * dim)
+                .map(|k| lo_b + (hi_b - lo_b) * ((k * 53 % 97) as f64 / 97.0))
+                .collect();
+            let mut full = vec![0.0; n];
+            f.eval_batch(&pos, n, dim, &mut full);
+            for (lo, hi) in [(0usize, n), (0, 5), (4, 11), (12, 13), (7, 7)] {
+                let mut part = vec![0.0; hi - lo];
+                f.eval_range(&pos, n, dim, lo, hi, &mut part);
+                for k in 0..(hi - lo) {
+                    assert!(
+                        (part[k] - full[lo + k]).abs()
+                            <= 1e-12 * full[lo + k].abs().max(1.0),
+                        "{name} range ({lo},{hi}) idx {k}: {} vs {}",
+                        part[k],
+                        full[lo + k]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_range_separable_is_bit_exact_with_eval() {
+        // The engines' equivalence tests need eval_range ≡ eval exactly
+        // for the functions on the hot path.
+        let n = 8;
+        let dim = 120;
+        let f = Cubic;
+        let pos: Vec<f64> = (0..n * dim)
+            .map(|k| -100.0 + 200.0 * ((k * 31 % 113) as f64 / 113.0))
+            .collect();
+        let mut out = vec![0.0; n];
+        f.eval_range(&pos, n, dim, 0, n, &mut out);
+        for i in 0..n {
+            let x: Vec<f64> = (0..dim).map(|d| pos[d * n + i]).collect();
+            assert_eq!(out[i], f.eval(&x), "particle {i} not bit-exact");
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar_eval() {
+        let funcs: Vec<Box<dyn Fitness + Send>> =
+            ALL_NAMES.iter().map(|n| by_name(n).unwrap()).collect();
+        let n = 7;
+        let dim = 5;
+        for f in &funcs {
+            let (lo, hi) = f.default_bounds();
+            // Deterministic pseudo-positions inside the domain.
+            let pos: Vec<f64> = (0..n * dim)
+                .map(|k| lo + (hi - lo) * ((k * 37 % 101) as f64 / 101.0))
+                .collect();
+            let mut fit = vec![0.0; n];
+            f.eval_batch(&pos, n, dim, &mut fit);
+            for i in 0..n {
+                let x: Vec<f64> = (0..dim).map(|d| pos[d * n + i]).collect();
+                let want = f.eval(&x);
+                assert!(
+                    (fit[i] - want).abs() <= 1e-9 * want.abs().max(1.0),
+                    "{}: batch {} vs scalar {}",
+                    f.name(),
+                    fit[i],
+                    want
+                );
+            }
+        }
+    }
+}

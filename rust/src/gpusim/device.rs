@@ -1,0 +1,144 @@
+//! Device descriptions for the cost model.
+
+/// A priced execution platform. GPU fields describe the SIMT machine; the
+/// CPU constructor only uses `clock_ghz` and the per-dimension cycle cost.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Human name for table headers.
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub sm_count: usize,
+    /// Total scalar cores (SIMT lanes).
+    pub cuda_cores: usize,
+    /// Core clock in GHz.
+    pub clock_ghz: f64,
+    /// DRAM bandwidth in GB/s.
+    pub mem_bw_gbps: f64,
+    /// Kernel-launch + implicit-sync overhead per launch, in µs.
+    pub launch_overhead_us: f64,
+    /// Max resident threads across the device (oversubscription knee).
+    pub max_resident_threads: usize,
+    /// Multiplier applied per extra wave beyond residency (scheduling /
+    /// cache pressure): reproduces the 131 072-particle slowdown.
+    pub oversub_penalty: f64,
+    /// Cycles for one serialized atomic RMW on shared/global memory.
+    pub atomic_cycles: f64,
+    /// Cycles per tree-reduction pass per block (compare+swap+sync).
+    pub reduction_pass_cycles: f64,
+    /// Same with the unrolled tail (no loop bookkeeping, warp-sync).
+    pub unrolled_pass_cycles: f64,
+    /// Per-particle per-dimension compute cycles of the PSO step
+    /// (RNG draw + Eq.1 FMAs + clamp + fitness term + pbest merge).
+    pub step_cycles_per_dim: f64,
+    /// Fixed per-particle cycles independent of dimension.
+    pub step_cycles_fixed: f64,
+    /// Bytes of global traffic per particle per dimension (SoA layout).
+    pub bytes_per_dim: f64,
+    /// Fixed per-particle bytes (fitness, pbest_fit, queue predicate).
+    pub bytes_fixed: f64,
+    /// Coalescing efficiency multiplier for AoS layout (ablation).
+    pub aos_penalty: f64,
+    /// Latency multiplier at near-zero occupancy: with too few resident
+    /// warps the SM cannot hide ALU/memory latency, so each in-thread
+    /// instruction costs ~this factor more. Decays quadratically to 1 at
+    /// full residency. (The paper's 120-D small-swarm rows — ~100 µs per
+    /// iteration for 128 particles whose ideal depth is ~7 µs — pin this
+    /// at ≈15 for the GTX-1080Ti.)
+    pub latency_mult_max: f64,
+}
+
+impl DeviceSpec {
+    /// The paper's GPU: GTX-1080Ti, 28 SMs, 3584 cores @1.48 GHz,
+    /// 484 GB/s, CUDA 11.2. Launch overhead and pass costs calibrated
+    /// against Table 3 (DESIGN.md §Plane C); everything else is the
+    /// public datasheet.
+    pub fn gtx_1080ti() -> Self {
+        Self {
+            name: "GTX-1080Ti (model)",
+            sm_count: 28,
+            cuda_cores: 3584,
+            clock_ghz: 1.481,
+            mem_bw_gbps: 484.0,
+            launch_overhead_us: 1.9,
+            max_resident_threads: 28 * 2048,
+            oversub_penalty: 1.22,
+            atomic_cycles: 120.0,
+            reduction_pass_cycles: 150.0,
+            unrolled_pass_cycles: 58.0,
+            step_cycles_per_dim: 86.0,
+            step_cycles_fixed: 24.0,
+            // pos/vel/pbest_pos read+write + r-draws materialized: ~7
+            // doubles moved per dim, plus ~3 per-particle scalars.
+            bytes_per_dim: 7.0 * 8.0,
+            bytes_fixed: 3.0 * 8.0,
+            aos_penalty: 3.0,
+            latency_mult_max: 15.0,
+        }
+    }
+
+    /// The paper's CPU: Xeon E3-1275 v5 @3.6 GHz. The serial model only
+    /// needs cycle costs; 112 cycles per particle-dimension-iteration is
+    /// the constant the paper's own Table 3/5 CPU columns imply (0.100 s
+    /// / (32 × 100k) at d=1 and 2.392 s / (128 × 5k × 120) at d=120 both
+    /// give ≈112).
+    pub fn xeon_e3_1275() -> Self {
+        Self {
+            name: "Xeon E3-1275 v5 (model)",
+            sm_count: 1,
+            cuda_cores: 1,
+            clock_ghz: 3.6,
+            mem_bw_gbps: 34.0,
+            launch_overhead_us: 0.0,
+            max_resident_threads: 8,
+            oversub_penalty: 1.0,
+            atomic_cycles: 20.0,
+            reduction_pass_cycles: 0.0,
+            unrolled_pass_cycles: 0.0,
+            step_cycles_per_dim: 112.0,
+            step_cycles_fixed: 10.0,
+            bytes_per_dim: 7.0 * 8.0,
+            bytes_fixed: 3.0 * 8.0,
+            aos_penalty: 1.15,
+            latency_mult_max: 1.0,
+        }
+    }
+
+    /// Seconds for `cycles` of serialized work at this clock.
+    #[inline]
+    pub fn cycles_to_s(&self, cycles: f64) -> f64 {
+        cycles / (self.clock_ghz * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datasheet_values() {
+        let g = DeviceSpec::gtx_1080ti();
+        assert_eq!(g.cuda_cores, 3584);
+        assert_eq!(g.sm_count, 28);
+        assert!(g.mem_bw_gbps > 400.0);
+        let c = DeviceSpec::xeon_e3_1275();
+        assert_eq!(c.clock_ghz, 3.6);
+    }
+
+    #[test]
+    fn cpu_calibration_reproduces_paper_cpu_column() {
+        // The constant must reproduce both tables' CPU columns within 15%.
+        let c = DeviceSpec::xeon_e3_1275();
+        let t_1d = c.cycles_to_s((c.step_cycles_fixed + c.step_cycles_per_dim) * 32.0 * 100_000.0);
+        assert!((t_1d - 0.100).abs() / 0.100 < 0.15, "1-D: {t_1d}");
+        let t_120d = c.cycles_to_s(
+            (c.step_cycles_fixed + c.step_cycles_per_dim * 120.0) * 128.0 * 5000.0,
+        );
+        assert!((t_120d - 2.392).abs() / 2.392 < 0.15, "120-D: {t_120d}");
+    }
+
+    #[test]
+    fn cycles_to_s_scales_with_clock() {
+        let g = DeviceSpec::gtx_1080ti();
+        assert!((g.cycles_to_s(1.481e9) - 1.0).abs() < 1e-9);
+    }
+}

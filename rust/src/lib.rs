@@ -1,0 +1,46 @@
+//! # cupso — queue-based parallel Particle Swarm Optimization
+//!
+//! Reproduction of *"cuPSO: GPU Parallelization for Particle Swarm
+//! Optimization Algorithms"* (Wang, Ho, Tu, Hung — ACM SAC'22) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The library is organised in three planes (see `DESIGN.md`):
+//!
+//! * **Plane A** — the paper's five algorithms (serial CPU, parallel
+//!   Reduction, Loop-Unrolling, Queue, Queue-Lock) executed on a CUDA-like
+//!   grid/block substrate over OS threads ([`exec`], [`engine`], [`pso`]).
+//! * **Plane B** — the three-layer AOT stack: Pallas kernels + JAX scan
+//!   model lowered to HLO text at build time, loaded and driven from Rust
+//!   via PJRT ([`runtime`], [`coordinator`]).
+//! * **Plane C** — an analytical GTX-1080Ti cost model that regenerates the
+//!   paper's absolute-shaped tables ([`gpusim`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use cupso::fitness::{Cubic, Objective};
+//! use cupso::pso::PsoParams;
+//! use cupso::engine::{Engine, ParallelSettings, QueueLockEngine};
+//!
+//! let params = PsoParams::paper_1d(1024, 10_000);
+//! let mut engine = QueueLockEngine::new(ParallelSettings::with_workers(4));
+//! let out = engine.run(&params, &Cubic, Objective::Maximize, 42);
+//! println!("gbest fitness = {:.6} at {:?}", out.gbest_fit, out.gbest_pos);
+//! ```
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod exec;
+pub mod fitness;
+pub mod gpusim;
+pub mod metrics;
+pub mod pso;
+pub mod rng;
+pub mod runtime;
+pub mod testsupport;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

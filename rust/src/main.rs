@@ -1,0 +1,347 @@
+//! `cupso` — the launcher.
+//!
+//! Subcommands:
+//!   run       solve one PSO workload with a chosen engine
+//!   compare   run all five paper algorithms on one workload and rank them
+//!   simulate  print the Plane-C estimated-GPU tables (no execution)
+//!   xla       drive the three-layer AOT stack (sync or async coordinator)
+//!   info      platform, engines, fitness functions, artifact inventory
+//!
+//! `cupso <cmd> --help` lists options. A TOML config can seed any run:
+//! `cupso run --config run.toml [overrides...]`.
+
+use anyhow::{bail, Context, Result};
+use cupso::cli::{split_subcommand, Command};
+use cupso::config::{EngineKind, RunConfig};
+use cupso::coordinator::{AsyncScheduler, CoordinatorConfig, SyncScheduler};
+use cupso::fitness::{by_name, Objective};
+use cupso::gpusim;
+use cupso::metrics::{Stopwatch, Table};
+use cupso::pso::PsoParams;
+use cupso::rng::RngKind;
+use cupso::runtime::XlaRuntime;
+use std::path::Path;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let (cmd, rest) = split_subcommand(argv);
+    match cmd {
+        Some("run") => cmd_run(rest),
+        Some("compare") => cmd_compare(rest),
+        Some("simulate") => cmd_simulate(rest),
+        Some("xla") => cmd_xla(rest),
+        Some("info") => cmd_info(rest),
+        Some(other) => bail!("unknown command {other:?}\n\n{}", top_usage()),
+        None => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+    }
+}
+
+fn top_usage() -> String {
+    "cupso — queue-based parallel PSO (cuPSO reproduction)\n\n\
+     Commands:\n\
+     \x20 run       solve one workload with a chosen engine\n\
+     \x20 compare   rank all five paper algorithms on one workload\n\
+     \x20 simulate  print the estimated-GPU tables (Plane C)\n\
+     \x20 xla       drive the AOT three-layer stack\n\
+     \x20 info      platform + inventory\n\n\
+     Try `cupso run --help`."
+        .to_string()
+}
+
+/// Shared options → RunConfig.
+fn run_command_spec(name: &'static str, about: &'static str) -> Command {
+    Command::new(name, about)
+        .opt("config", "TOML config file (flags override it)", None)
+        .opt("fitness", "fitness function", Some("cubic"))
+        .opt("particles", "swarm size", Some("1024"))
+        .opt("dim", "dimensionality", Some("1"))
+        .opt("iters", "iterations", Some("10000"))
+        .opt("engine", "cpu|reduction|unroll|queue|queuelock", Some("queuelock"))
+        .opt("workers", "worker threads (0 = all cores)", Some("0"))
+        .opt("rng", "philox|xoshiro", Some("philox"))
+        .opt("seed", "master seed", Some("42"))
+        .opt("objective", "max|min (default: function's convention)", None)
+        .switch("history", "print the convergence history")
+}
+
+fn parse_run_config(rest: &[String], spec: &Command) -> Result<(RunConfig, bool)> {
+    let args = spec.parse(rest)?;
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = args.get("fitness") {
+        cfg.fitness = v.to_string();
+    }
+    cfg.particles = args.get_parse("particles", cfg.particles)?;
+    cfg.dim = args.get_parse("dim", cfg.dim)?;
+    cfg.iters = args.get_parse("iters", cfg.iters)?;
+    if let Some(v) = args.get("engine") {
+        cfg.engine = EngineKind::parse(v).with_context(|| format!("bad engine {v}"))?;
+    }
+    cfg.workers = args.get_parse("workers", cfg.workers)?;
+    if let Some(v) = args.get("rng") {
+        cfg.rng = RngKind::parse(v).with_context(|| format!("bad rng {v}"))?;
+    }
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    if let Some(v) = args.get("objective") {
+        cfg.objective = Some(Objective::parse(v).with_context(|| format!("bad objective {v}"))?);
+    }
+    cfg.validate()?;
+    Ok((cfg, args.flag("history")))
+}
+
+fn cmd_run(rest: &[String]) -> Result<()> {
+    let spec = run_command_spec("run", "solve one PSO workload");
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        return Ok(());
+    }
+    let (cfg, show_history) = parse_run_config(rest, &spec)?;
+    let fitness = by_name(&cfg.fitness).unwrap();
+    let objective = cfg.objective.unwrap_or(fitness.default_objective());
+    let params = PsoParams::from_config(&cfg, fitness.as_ref());
+    let mut engine = cupso::engine::build(cfg.engine, cfg.workers)
+        .with_context(|| format!("engine {} needs the `xla` subcommand", cfg.engine))?;
+
+    println!(
+        "cupso run: {} × {}d × {} iters, engine={}, rng={}, seed={}",
+        cfg.particles, cfg.dim, cfg.iters, cfg.engine, cfg.rng, cfg.seed
+    );
+    let sw = Stopwatch::start();
+    let out = engine.run(&params, fitness.as_ref(), objective, cfg.seed);
+    let elapsed = sw.elapsed_s();
+
+    println!("gbest fitness  : {:.6}", out.gbest_fit);
+    if let Some(opt) = fitness.optimum(cfg.dim) {
+        println!("known optimum  : {opt:.6}");
+    }
+    let pos_preview: Vec<String> = out
+        .gbest_pos
+        .iter()
+        .take(8)
+        .map(|p| format!("{p:.4}"))
+        .collect();
+    println!(
+        "gbest position : [{}{}]",
+        pos_preview.join(", "),
+        if cfg.dim > 8 { ", …" } else { "" }
+    );
+    println!("wall time      : {elapsed:.3}s");
+    println!(
+        "counters       : {} pbest improvements, {} queue pushes ({:.4}%), {} gbest updates",
+        out.counters.pbest_improvements,
+        out.counters.queue_pushes,
+        100.0 * out.counters.queue_push_rate(),
+        out.counters.gbest_updates
+    );
+    if show_history {
+        let mut t = Table::new("Convergence", &["iteration", "gbest_fit"]);
+        for (it, f) in &out.history {
+            t.row(&[it.to_string(), format!("{f:.6}")]);
+        }
+        println!("{}", t.to_markdown());
+    }
+    Ok(())
+}
+
+fn cmd_compare(rest: &[String]) -> Result<()> {
+    let spec = run_command_spec("compare", "rank all five paper algorithms");
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        return Ok(());
+    }
+    let (cfg, _) = parse_run_config(rest, &spec)?;
+    let fitness = by_name(&cfg.fitness).unwrap();
+    let objective = cfg.objective.unwrap_or(fitness.default_objective());
+    let params = PsoParams::from_config(&cfg, fitness.as_ref());
+
+    let mut table = Table::new(
+        &format!(
+            "Engine comparison — {} n={} d={} iters={}",
+            cfg.fitness, cfg.particles, cfg.dim, cfg.iters
+        ),
+        &["Engine", "Time (s)", "gbest", "vs best time"],
+    );
+    let mut rows = Vec::new();
+    for kind in EngineKind::TABLE3 {
+        let mut engine = cupso::engine::build(kind, cfg.workers).unwrap();
+        let sw = Stopwatch::start();
+        let out = engine.run(&params, fitness.as_ref(), objective, cfg.seed);
+        rows.push((kind.label(), sw.elapsed_s(), out.gbest_fit));
+    }
+    let best = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+    for (name, t, fit) in rows {
+        table.row(&[
+            name.to_string(),
+            format!("{t:.3}"),
+            format!("{fit:.3}"),
+            format!("{:.2}x", t / best),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<()> {
+    let spec = Command::new("simulate", "print the Plane-C estimated-GPU tables")
+        .opt("table", "3|4|5|all", Some("all"));
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        return Ok(());
+    }
+    let args = spec.parse(rest)?;
+    let which = args.get("table").unwrap_or("all");
+    if which == "3" || which == "all" {
+        let mut t = Table::new(
+            "Table 3 (estimated GTX-1080Ti vs paper) — 1-D, 100k iters",
+            &["Particles", "CPU", "Reduction", "Unroll", "Queue", "QueueLock", "paper QueueLock"],
+        );
+        for (n, _, _, _, _, p_ql) in gpusim::paper::TABLE3 {
+            let est = |k| gpusim::estimate_seconds(k, n, 1, 100_000);
+            t.row(&[
+                n.to_string(),
+                format!("{:.3}", est(EngineKind::SerialCpu)),
+                format!("{:.3}", est(EngineKind::Reduction)),
+                format!("{:.3}", est(EngineKind::LoopUnrolling)),
+                format!("{:.3}", est(EngineKind::Queue)),
+                format!("{:.3}", est(EngineKind::QueueLock)),
+                format!("{p_ql:.3}"),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+    }
+    if which == "4" || which == "all" {
+        let mut t = Table::new(
+            "Table 4 (estimated) — 1-D speedup, CPU vs Queue Lock",
+            &["Particles", "CPU (s)", "QueueLock (s)", "Speedup", "paper"],
+        );
+        for (n, _, _, p_s) in gpusim::paper::TABLE4 {
+            let c = gpusim::estimate_seconds(EngineKind::SerialCpu, n, 1, 100_000);
+            let g = gpusim::estimate_seconds(EngineKind::QueueLock, n, 1, 100_000);
+            t.row(&[
+                n.to_string(),
+                format!("{c:.3}"),
+                format!("{g:.3}"),
+                format!("{:.2}", c / g),
+                format!("{p_s:.2}"),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+    }
+    if which == "5" || which == "all" {
+        let mut t = Table::new(
+            "Table 5 (estimated) — 120-D speedup, CPU vs Queue",
+            &["Particles", "Iters", "CPU (s)", "Queue (s)", "Speedup", "paper"],
+        );
+        for ((n, iters), (_, _, _, _, p_s)) in
+            gpusim::TABLE5_ROWS.iter().zip(gpusim::paper::TABLE5.iter())
+        {
+            let c = gpusim::estimate_seconds(EngineKind::SerialCpu, *n, 120, *iters);
+            let g = gpusim::estimate_seconds(EngineKind::Queue, *n, 120, *iters);
+            t.row(&[
+                n.to_string(),
+                iters.to_string(),
+                format!("{c:.3}"),
+                format!("{g:.3}"),
+                format!("{:.2}", c / g),
+                format!("{p_s:.2}"),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+    }
+    Ok(())
+}
+
+fn cmd_xla(rest: &[String]) -> Result<()> {
+    let spec = Command::new("xla", "drive the three-layer AOT stack")
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("variant", "reduction|queue|fused", Some("queue"))
+        .opt("particles", "particles per shard (must match an artifact)", Some("1024"))
+        .opt("dim", "dimensionality (must match an artifact)", Some("1"))
+        .opt("shards", "independent shards", Some("4"))
+        .opt("iters", "iterations per shard", Some("500"))
+        .opt("seed", "master seed", Some("42"))
+        .opt("scheduler", "sync|async", Some("async"));
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        return Ok(());
+    }
+    let args = spec.parse(rest)?;
+    let rt = XlaRuntime::open(Path::new(args.get("artifacts").unwrap()))?;
+    let mut cfg = CoordinatorConfig::new(
+        args.get("variant").unwrap(),
+        args.get_parse("particles", 1024usize)?,
+        args.get_parse("dim", 1usize)?,
+        args.get_parse("iters", 500u64)?,
+    );
+    cfg.shards = args.get_parse("shards", 4usize)?;
+    cfg.seed = args.get_parse("seed", 42u64)?;
+    let scheduler = args.get("scheduler").unwrap_or("async");
+
+    println!(
+        "cupso xla: platform={}, variant={}, {} shards × {} particles × {}d, {} iters, {} scheduler",
+        rt.platform(),
+        cfg.variant,
+        cfg.shards,
+        cfg.shard_particles,
+        cfg.dim,
+        cfg.iters,
+        scheduler
+    );
+    let sw = Stopwatch::start();
+    let out = match scheduler {
+        "sync" => SyncScheduler::run(&rt, &cfg)?,
+        "async" => AsyncScheduler::run(&rt, &cfg)?,
+        other => bail!("unknown scheduler {other} (sync|async)"),
+    };
+    let elapsed = sw.elapsed_s();
+    println!("gbest fitness : {:.6}", out.gbest_fit);
+    println!("wall time     : {elapsed:.3}s");
+    println!(
+        "chunk calls   : {} ({} iters/shard), merges: {}",
+        out.chunk_calls, out.iters_per_shard, out.merges
+    );
+    println!(
+        "shard fits    : {:?}",
+        out.shard_fits.iter().map(|f| format!("{f:.1}")).collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let spec = Command::new("info", "platform + inventory")
+        .opt("artifacts", "artifact directory", Some("artifacts"));
+    let args = spec.parse(rest)?;
+    println!("cupso {} — cuPSO (SAC'22) reproduction", env!("CARGO_PKG_VERSION"));
+    println!(
+        "cores: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+    );
+    println!("engines: cpu, reduction, unroll, queue, queuelock (+ xla sync/async)");
+    println!("fitness: {}", cupso::fitness::ALL_NAMES.join(", "));
+    let dir = Path::new(args.get("artifacts").unwrap());
+    match XlaRuntime::open(dir) {
+        Ok(rt) => {
+            println!("artifacts ({}, jax {}):", rt.platform(), rt.manifest().jax_version);
+            for m in rt.manifest().iter() {
+                println!(
+                    "  {:<28} variant={:<9} n={:<6} d={:<3} k={}",
+                    m.name, m.variant, m.n, m.dim, m.iters
+                );
+            }
+        }
+        Err(_) => println!("artifacts: none (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Measurement and reporting utilities.
+//!
+//! The paper reports "the average numbers of the execution time for 10
+//! runs, removing the maximum and minimum numbers" (§6.1) — that exact
+//! trimmed-mean estimator is [`Summary::trimmed_mean`] and is what every
+//! bench target reports. Output side: aligned markdown tables (matching
+//! the paper's table layout), CSV for downstream plotting, and an ASCII
+//! line plot used to regenerate Figure 3 in the terminal.
+
+mod plot;
+mod stats;
+mod table;
+
+pub use plot::AsciiPlot;
+pub use stats::Summary;
+pub use table::{write_csv, Table};
+
+use std::time::Instant;
+
+/// Monotonic stopwatch with split support.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds since start.
+    #[inline]
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap_s(&mut self) -> f64 {
+        let t = self.elapsed_s();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Time a closure, returning `(seconds, output)`.
+pub fn time_it<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (sw.elapsed_s(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_forward_time() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let lap = sw.lap_s();
+        assert!(lap >= 0.004, "lap {lap}");
+        assert!(sw.elapsed_s() < lap, "restarted");
+    }
+
+    #[test]
+    fn time_it_returns_output() {
+        let (t, v) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

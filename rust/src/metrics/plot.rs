@@ -1,0 +1,153 @@
+//! Terminal line plots — regenerates Figure 3 ("plotting of the execution
+//! times of the five implementations") as an ASCII chart with a log-scaled
+//! y-axis option, since the paper's series span 0.1 s … 6 s.
+
+/// Multi-series ASCII line plot on a character canvas.
+pub struct AsciiPlot {
+    title: String,
+    width: usize,
+    height: usize,
+    log_y: bool,
+    x_labels: Vec<String>,
+    series: Vec<(String, Vec<f64>)>,
+}
+
+/// Glyphs assigned to series, in order.
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%'];
+
+impl AsciiPlot {
+    /// New plot canvas (`width`×`height` interior cells).
+    pub fn new(title: &str, width: usize, height: usize) -> Self {
+        Self {
+            title: title.to_string(),
+            width: width.max(16),
+            height: height.max(6),
+            log_y: false,
+            x_labels: Vec::new(),
+            series: Vec::new(),
+        }
+    }
+
+    /// Use log10 scaling on the y axis.
+    pub fn log_y(mut self) -> Self {
+        self.log_y = true;
+        self
+    }
+
+    /// Category labels along x (e.g. particle counts).
+    pub fn x_labels<S: ToString>(mut self, labels: &[S]) -> Self {
+        self.x_labels = labels.iter().map(|l| l.to_string()).collect();
+        self
+    }
+
+    /// Add one named series (same length as `x_labels`).
+    pub fn series(mut self, name: &str, values: &[f64]) -> Self {
+        self.series.push((name.to_string(), values.to_vec()));
+        self
+    }
+
+    /// Render the chart.
+    pub fn render(&self) -> String {
+        let mut out = format!("{}\n", self.title);
+        if self.series.is_empty() {
+            out.push_str("(no data)\n");
+            return out;
+        }
+        let tx = |v: f64| if self.log_y { v.max(1e-12).log10() } else { v };
+        let all: Vec<f64> = self
+            .series
+            .iter()
+            .flat_map(|(_, vs)| vs.iter().map(|&v| tx(v)))
+            .collect();
+        let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = if (hi - lo).abs() < 1e-15 { 1.0 } else { hi - lo };
+        let npts = self.series.iter().map(|(_, v)| v.len()).max().unwrap();
+        let mut canvas = vec![vec![' '; self.width]; self.height];
+        for (si, (_, vs)) in self.series.iter().enumerate() {
+            let glyph = GLYPHS[si % GLYPHS.len()];
+            for (i, &v) in vs.iter().enumerate() {
+                let x = if npts <= 1 {
+                    0
+                } else {
+                    i * (self.width - 1) / (npts - 1)
+                };
+                let yf = (tx(v) - lo) / span;
+                let y = self.height - 1 - ((yf * (self.height - 1) as f64).round() as usize);
+                canvas[y.min(self.height - 1)][x] = glyph;
+            }
+        }
+        // y-axis labels: top and bottom values (untransformed).
+        let inv = |t: f64| if self.log_y { 10f64.powf(t) } else { t };
+        let top = format!("{:>9.3}", inv(hi));
+        let bot = format!("{:>9.3}", inv(lo));
+        for (r, line) in canvas.iter().enumerate() {
+            let label = if r == 0 {
+                &top
+            } else if r == self.height - 1 {
+                &bot
+            } else {
+                &String::new()
+            };
+            out.push_str(&format!("{label:>9} |{}\n", line.iter().collect::<String>()));
+        }
+        out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(self.width)));
+        if !self.x_labels.is_empty() {
+            let first = self.x_labels.first().unwrap();
+            let last = self.x_labels.last().unwrap();
+            let gap = self
+                .width
+                .saturating_sub(first.len() + last.len());
+            out.push_str(&format!("{:>9}  {}{}{}\n", "", first, " ".repeat(gap), last));
+        }
+        out.push_str(&format!(
+            "{:>9}  legend: {}\n",
+            "",
+            self.series
+                .iter()
+                .enumerate()
+                .map(|(i, (n, _))| format!("{}={}", GLYPHS[i % GLYPHS.len()], n))
+                .collect::<Vec<_>>()
+                .join("  ")
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_series_glyphs() {
+        let p = AsciiPlot::new("t", 40, 10)
+            .x_labels(&[32, 64, 128])
+            .series("a", &[1.0, 2.0, 3.0])
+            .series("b", &[3.0, 2.0, 1.0]);
+        let r = p.render();
+        assert!(r.contains('*'));
+        assert!(r.contains('o'));
+        assert!(r.contains("legend: *=a  o=b"));
+    }
+
+    #[test]
+    fn log_scale_handles_wide_ranges() {
+        let p = AsciiPlot::new("t", 40, 10)
+            .log_y()
+            .series("a", &[0.001, 1000.0]);
+        let r = p.render();
+        assert!(r.contains("1000"));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let p = AsciiPlot::new("t", 30, 8).series("c", &[5.0, 5.0, 5.0]);
+        let r = p.render();
+        assert!(r.contains('*'));
+    }
+
+    #[test]
+    fn empty_plot_is_graceful() {
+        assert!(AsciiPlot::new("e", 20, 6).render().contains("(no data)"));
+    }
+}

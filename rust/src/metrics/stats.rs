@@ -1,0 +1,140 @@
+//! Run-summary statistics, headlined by the paper's trimmed mean.
+
+/// Summary statistics over a sample of measurements (seconds, ratios, …).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    sorted: Vec<f64>,
+}
+
+impl Summary {
+    /// Build from raw samples (order irrelevant; NaNs rejected).
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "empty sample set");
+        assert!(
+            samples.iter().all(|x| !x.is_nan()),
+            "NaN in samples: {samples:?}"
+        );
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { sorted }
+    }
+
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Plain arithmetic mean.
+    pub fn mean(&self) -> f64 {
+        self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
+    }
+
+    /// The paper's estimator (§6.1): mean after dropping the single
+    /// minimum and single maximum. Falls back to the plain mean when
+    /// fewer than 3 samples exist.
+    pub fn trimmed_mean(&self) -> f64 {
+        if self.sorted.len() < 3 {
+            return self.mean();
+        }
+        let inner = &self.sorted[1..self.sorted.len() - 1];
+        inner.iter().sum::<f64>() / inner.len() as f64
+    }
+
+    /// Median (50th percentile).
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Smallest sample.
+    pub fn min(&self) -> f64 {
+        self.sorted[0]
+    }
+
+    /// Largest sample.
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap()
+    }
+
+    /// Linear-interpolated percentile, `p` in `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.sorted.len();
+        if n == 1 {
+            return self.sorted[0];
+        }
+        let rank = (p.clamp(0.0, 100.0) / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+    }
+
+    /// Sample standard deviation (n−1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.sorted.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.sorted.iter().map(|x| (x - m) * (x - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    /// Relative spread — stddev / mean (useful to flag noisy benches).
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            0.0
+        } else {
+            self.stddev() / m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trimmed_mean_drops_min_and_max() {
+        // 10 runs as the paper does: drop 1 (min) and 100 (max).
+        let s = Summary::from_samples(&[1.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 100.0]);
+        assert_eq!(s.trimmed_mean(), 5.0);
+        assert!((s.mean() - 14.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trimmed_mean_small_samples_fall_back() {
+        assert_eq!(Summary::from_samples(&[2.0]).trimmed_mean(), 2.0);
+        assert_eq!(Summary::from_samples(&[2.0, 4.0]).trimmed_mean(), 3.0);
+    }
+
+    #[test]
+    fn order_statistics() {
+        let s = Summary::from_samples(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert_eq!(s.median(), 2.0);
+        assert_eq!(s.n(), 3);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = Summary::from_samples(&[0.0, 10.0]);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn stddev_of_constant_is_zero() {
+        let s = Summary::from_samples(&[4.0, 4.0, 4.0]);
+        assert_eq!(s.stddev(), 0.0);
+        assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn rejects_nan() {
+        Summary::from_samples(&[1.0, f64::NAN]);
+    }
+}

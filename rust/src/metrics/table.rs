@@ -1,0 +1,209 @@
+//! Aligned markdown tables + CSV emission — the bench targets print the
+//! same rows the paper's tables report.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple row/column table with markdown rendering.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row arity mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: format-heterogeneous row.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows were added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Title accessor.
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    /// Render as an aligned markdown table (numbers right-aligned).
+    pub fn to_markdown(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        // Right-align columns whose body cells are all numeric-ish.
+        let aligns: Vec<Align> = (0..cols)
+            .map(|i| {
+                let numeric = self.rows.iter().all(|r| {
+                    let c = r[i].trim().trim_end_matches('x').replace(',', "");
+                    !c.is_empty() && c.parse::<f64>().is_ok()
+                });
+                if numeric && !self.rows.is_empty() {
+                    Align::Right
+                } else {
+                    Align::Left
+                }
+            })
+            .collect();
+        let pad = |s: &str, w: usize, a: Align| match a {
+            Align::Left => format!("{s:<w$}"),
+            Align::Right => format!("{s:>w$}"),
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| pad(h, widths[i], aligns[i]))
+            .collect();
+        let _ = writeln!(out, "| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths
+            .iter()
+            .zip(&aligns)
+            .map(|(w, a)| match a {
+                Align::Left => format!("{:-<w$}", ""),
+                Align::Right => format!("{:->w$}", ""),
+            })
+            .collect();
+        let _ = writeln!(out, "|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| pad(c, widths[i], aligns[i]))
+                .collect();
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        out
+    }
+
+    /// Render as CSV (header + rows).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Print markdown to stdout and write CSV next to `dir` as
+    /// `<slug>.csv`; returns the CSV path.
+    pub fn emit(&self, dir: &Path, slug: &str) -> std::io::Result<std::path::PathBuf> {
+        println!("{}", self.to_markdown());
+        let path = dir.join(format!("{slug}.csv"));
+        write_csv(&path, &self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Write `content` to `path`, creating parent directories.
+pub fn write_csv(path: &Path, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(content.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Demo", &["Name", "Value"]);
+        t.row(&["alpha".into(), "1.50".into()]);
+        t.row(&["beta".into(), "12.25".into()]);
+        t
+    }
+
+    #[test]
+    fn markdown_is_aligned_and_complete() {
+        let md = sample().to_markdown();
+        assert!(md.contains("## Demo"));
+        assert!(md.contains("| Name  |"));
+        assert!(md.contains("|  1.50 |")); // numeric column right-aligned
+        assert_eq!(md.lines().count(), 5);
+    }
+
+    #[test]
+    fn csv_escapes_and_rounds_trips() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["with,comma".into(), "q\"uote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"with,comma\""));
+        assert!(csv.contains("\"q\"\"uote\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        Table::new("x", &["a", "b"]).row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn emit_writes_csv_file() {
+        let dir = std::env::temp_dir().join("cupso-table-test");
+        let p = sample().emit(&dir, "demo").unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert!(content.starts_with("Name,Value"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,181 @@
+//! Core PSO types and the serial baseline.
+//!
+//! * [`PsoParams`] — Table 1 of the paper, with constructors for the two
+//!   evaluated workloads (1-D and 120-D Cubic).
+//! * [`SwarmState`] — SoA particle storage (§5.1 / Figure 2), plus an AoS
+//!   variant used only by the layout ablation.
+//! * [`serial`] — Algorithm 1 verbatim (the paper's "CPU" column):
+//!   in-loop gbest updates (a later particle in the same sweep sees the
+//!   gbest a previous particle just set).
+//! * [`serial_sync`] — a synchronous serial reference with PPSO semantics
+//!   (gbest is frozen for the whole iteration, applied at the end). This
+//!   is the *oracle* for the parallel engines: Reduction / Loop-Unrolling
+//!   / Queue / Queue-Lock must reproduce its gbest trajectory bit-exactly,
+//!   because all four differ only in aggregation mechanics.
+
+mod params;
+pub mod serial;
+pub mod serial_sync;
+mod state;
+
+pub use params::PsoParams;
+pub use state::{AosSwarm, SwarmState};
+
+use crate::fitness::Objective;
+
+/// Result of a full PSO run.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    /// Best fitness found.
+    pub gbest_fit: f64,
+    /// Best position found (length = dim).
+    pub gbest_pos: Vec<f64>,
+    /// Iterations executed.
+    pub iters: u64,
+    /// Sampled convergence history: `(iteration, gbest_fit)`.
+    pub history: Vec<(u64, f64)>,
+    /// Instrumentation counters (queue pushes, lock acquisitions, …).
+    pub counters: Counters,
+}
+
+/// Hot-loop instrumentation the ablation benches read.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    /// Particle updates that improved their pbest.
+    pub pbest_improvements: u64,
+    /// Conditional queue pushes (Algorithm 2 line 2) across all blocks.
+    pub queue_pushes: u64,
+    /// Global-lock acquisitions (Algorithm 3) / gbest update attempts.
+    pub gbest_updates: u64,
+    /// Total particle-iteration updates (denominator for rarity rates).
+    pub particle_updates: u64,
+}
+
+impl Counters {
+    /// The paper's §4.1 observation: fraction of particle updates that
+    /// pushed to the queue (they report < 0.1%).
+    pub fn queue_push_rate(&self) -> f64 {
+        if self.particle_updates == 0 {
+            0.0
+        } else {
+            self.queue_pushes as f64 / self.particle_updates as f64
+        }
+    }
+}
+
+/// Shared convergence bookkeeping: how many history samples a run keeps.
+pub const HISTORY_SAMPLES: u64 = 64;
+
+/// Stride so a run of `iters` yields ≈[`HISTORY_SAMPLES`] samples.
+pub fn history_stride(iters: u64) -> u64 {
+    (iters / HISTORY_SAMPLES).max(1)
+}
+
+/// One velocity+position update for particle `i`, dimension-major SoA —
+/// Eq. (1) and Eq. (2) plus the clamps of Algorithm 1 lines 9–12.
+///
+/// Shared by the serial baselines and all Plane-A engines so the physics
+/// is one piece of code and cross-engine equivalence is meaningful.
+#[inline]
+pub fn update_particle(
+    state: &mut SwarmState,
+    i: usize,
+    gbest_pos: &[f64],
+    params: &PsoParams,
+    rng: &crate::rng::PhiloxStream,
+    iter: u64,
+) {
+    let n = state.n;
+    for d in 0..state.dim {
+        let idx = d * n + i;
+        let (r1, r2) = rng.r1r2(i as u64, iter, d as u32);
+        let v = params.w * state.vel[idx]
+            + params.c1 * r1 * (state.pbest_pos[idx] - state.pos[idx])
+            + params.c2 * r2 * (gbest_pos[d] - state.pos[idx]);
+        let v = v.clamp(-params.max_v, params.max_v);
+        let p = (state.pos[idx] + v).clamp(params.min_pos, params.max_pos);
+        state.vel[idx] = v;
+        state.pos[idx] = p;
+    }
+}
+
+/// Fitness evaluation + pbest update for particle `i` (Algorithm 1 lines
+/// 13–16). Returns the new fitness.
+#[inline]
+pub fn eval_and_pbest(
+    state: &mut SwarmState,
+    i: usize,
+    fitness: &dyn crate::fitness::Fitness,
+    objective: Objective,
+) -> f64 {
+    let n = state.n;
+    let dim = state.dim;
+    // Gather the particle's position into a scratch row. dim==1 takes the
+    // scalar fast path (the paper's 1-D problem).
+    let fit = if dim == 1 {
+        fitness.eval(&state.pos[i..=i])
+    } else {
+        let mut x = [0.0f64; 256];
+        if dim <= 256 {
+            for (d, slot) in x[..dim].iter_mut().enumerate() {
+                *slot = state.pos[d * n + i];
+            }
+            fitness.eval(&x[..dim])
+        } else {
+            let xs: Vec<f64> = (0..dim).map(|d| state.pos[d * n + i]).collect();
+            fitness.eval(&xs)
+        }
+    };
+    state.fit[i] = fit;
+    if objective.better(fit, state.pbest_fit[i]) {
+        state.pbest_fit[i] = fit;
+        for d in 0..dim {
+            state.pbest_pos[d * n + i] = state.pos[d * n + i];
+        }
+    }
+    fit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::{Cubic, Fitness};
+    use crate::rng::PhiloxStream;
+
+    #[test]
+    fn history_stride_is_sane() {
+        assert_eq!(history_stride(64), 1);
+        assert_eq!(history_stride(6400), 100);
+        assert_eq!(history_stride(1), 1);
+    }
+
+    #[test]
+    fn update_respects_clamps() {
+        let params = PsoParams::paper_1d(4, 10);
+        let stream = PhiloxStream::new(1);
+        let mut st = SwarmState::init(&params, &stream);
+        // Force extreme velocity to exercise the clamp.
+        st.vel[0] = 1e9;
+        let g = vec![params.max_pos];
+        update_particle(&mut st, 0, &g, &params, &stream, 0);
+        assert!(st.vel[0] <= params.max_v && st.vel[0] >= -params.max_v);
+        assert!(st.pos[0] <= params.max_pos && st.pos[0] >= params.min_pos);
+    }
+
+    #[test]
+    fn eval_updates_pbest_only_on_improvement() {
+        let params = PsoParams::paper_1d(2, 10);
+        let stream = PhiloxStream::new(2);
+        let mut st = SwarmState::init(&params, &stream);
+        st.pos[0] = 100.0; // cubic max on the domain
+        let f = eval_and_pbest(&mut st, 0, &Cubic, Objective::Maximize);
+        assert_eq!(f, Cubic.eval(&[100.0]));
+        assert_eq!(st.pbest_fit[0], f);
+        assert_eq!(st.pbest_pos[0], 100.0);
+        // Now a worse position must not disturb pbest.
+        st.pos[0] = 0.0;
+        eval_and_pbest(&mut st, 0, &Cubic, Objective::Maximize);
+        assert_eq!(st.pbest_fit[0], f);
+        assert_eq!(st.pbest_pos[0], 100.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! The paper's Table 1 parameter set.
+
+use crate::config::RunConfig;
+use crate::fitness::Fitness;
+
+/// PSO hyper-parameters (Table 1). `w = 1`, `c1 = c2 = 2` are the paper's
+/// settings (§6.1); position bounds default to the fitness function's
+/// domain and the velocity clamp to half the position range.
+#[derive(Debug, Clone)]
+pub struct PsoParams {
+    /// Inertia weight.
+    pub w: f64,
+    /// Cognitive coefficient.
+    pub c1: f64,
+    /// Social coefficient.
+    pub c2: f64,
+    /// Lower position bound (per dimension).
+    pub min_pos: f64,
+    /// Upper position bound (per dimension).
+    pub max_pos: f64,
+    /// Velocity clamp: `v ∈ [-max_v, max_v]`.
+    pub max_v: f64,
+    /// Iteration budget (`max_iter`).
+    pub max_iter: u64,
+    /// Swarm size (`particle_cnt`).
+    pub n: usize,
+    /// Problem dimensionality (1 or 120 in the paper).
+    pub dim: usize,
+}
+
+impl PsoParams {
+    /// The paper's 1-D Cubic workload (§6.2): `w=1, c1=c2=2`, domain
+    /// `[-100, 100]`.
+    pub fn paper_1d(particles: usize, iters: u64) -> Self {
+        Self {
+            w: 1.0,
+            c1: 2.0,
+            c2: 2.0,
+            min_pos: -100.0,
+            max_pos: 100.0,
+            max_v: 100.0,
+            max_iter: iters,
+            n: particles,
+            dim: 1,
+        }
+    }
+
+    /// The paper's 120-D Cubic workload (§6.3).
+    pub fn paper_120d(particles: usize, iters: u64) -> Self {
+        Self {
+            dim: 120,
+            ..Self::paper_1d(particles, iters)
+        }
+    }
+
+    /// Parameters for an arbitrary fitness function: bounds from its
+    /// domain, velocity clamp = `vmax_frac` × range.
+    pub fn for_fitness(f: &dyn Fitness, particles: usize, dim: usize, iters: u64, vmax_frac: f64) -> Self {
+        let (lo, hi) = f.default_bounds();
+        Self {
+            w: 1.0,
+            c1: 2.0,
+            c2: 2.0,
+            min_pos: lo,
+            max_pos: hi,
+            max_v: vmax_frac * (hi - lo),
+            max_iter: iters,
+            n: particles,
+            dim,
+        }
+    }
+
+    /// Build from a launcher [`RunConfig`] (bounds override respected).
+    pub fn from_config(cfg: &RunConfig, f: &dyn Fitness) -> Self {
+        let mut p = Self::for_fitness(f, cfg.particles, cfg.dim, cfg.iters, cfg.vmax_frac);
+        p.w = cfg.w;
+        p.c1 = cfg.c1;
+        p.c2 = cfg.c2;
+        if let Some((lo, hi)) = cfg.bounds {
+            p.min_pos = lo;
+            p.max_pos = hi;
+            p.max_v = cfg.vmax_frac * (hi - lo);
+        }
+        p
+    }
+
+    /// Total scalar state in the SoA arrays (for footprint reporting).
+    pub fn state_doubles(&self) -> usize {
+        // pos + vel + pbest_pos (n×dim each) + fit + pbest_fit (n each)
+        3 * self.n * self.dim + 2 * self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::Sphere;
+
+    #[test]
+    fn paper_constructors_match_section_6_1() {
+        let p = PsoParams::paper_1d(2048, 100_000);
+        assert_eq!((p.w, p.c1, p.c2), (1.0, 2.0, 2.0));
+        assert_eq!((p.min_pos, p.max_pos), (-100.0, 100.0));
+        assert_eq!(p.dim, 1);
+        assert_eq!(PsoParams::paper_120d(128, 5000).dim, 120);
+    }
+
+    #[test]
+    fn for_fitness_uses_function_domain() {
+        let p = PsoParams::for_fitness(&Sphere, 64, 10, 100, 0.5);
+        assert_eq!((p.min_pos, p.max_pos), (-100.0, 100.0));
+        assert_eq!(p.max_v, 100.0);
+    }
+
+    #[test]
+    fn state_footprint() {
+        let p = PsoParams::paper_120d(1000, 1);
+        assert_eq!(p.state_doubles(), 3 * 120_000 + 2000);
+    }
+}

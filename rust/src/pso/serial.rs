@@ -1,0 +1,127 @@
+//! Algorithm 1, verbatim — the paper's serial "CPU" implementation.
+//!
+//! Note the in-loop global-best update (lines 17–19): particle `i+1`
+//! already sees a gbest improved by particle `i` *within the same
+//! iteration*. This asynchronous-within-sweep behaviour is the classic
+//! sequential SPSO; the parallel engines are synchronous instead
+//! (see [`super::serial_sync`]), exactly as in the paper.
+
+use super::{eval_and_pbest, history_stride, update_particle, PsoParams, RunOutput, SwarmState};
+use crate::fitness::{Fitness, Objective};
+use crate::rng::PhiloxStream;
+
+/// Run the sequential SPSO (Algorithm 1).
+pub fn run(
+    params: &PsoParams,
+    fitness: &dyn Fitness,
+    objective: Objective,
+    seed: u64,
+) -> RunOutput {
+    let stream = PhiloxStream::new(seed);
+    let mut state = SwarmState::init(params, &stream);
+
+    // Step 1 tail: seed fitness/pbest and the initial global best.
+    let (mut gbest_fit, gi) = state.seed_fitness(fitness, objective);
+    let mut gbest_pos = state.position_of(gi);
+
+    let stride = history_stride(params.max_iter);
+    let mut history = Vec::with_capacity(super::HISTORY_SAMPLES as usize + 1);
+    let mut counters = super::Counters::default();
+
+    // Steps 2–5.
+    for iter in 0..params.max_iter {
+        for i in 0..params.n {
+            // Step 2: velocity + position (Eq. 1, Eq. 2, clamps).
+            update_particle(&mut state, i, &gbest_pos, params, &stream, iter);
+            // Step 3 + 4: fitness, local best.
+            let before = state.pbest_fit[i];
+            let fit = eval_and_pbest(&mut state, i, fitness, objective);
+            counters.particle_updates += 1;
+            if objective.better(fit, before) {
+                counters.pbest_improvements += 1;
+            }
+            // Step 5: global best — *inside* the particle loop.
+            if objective.better(state.pbest_fit[i], gbest_fit) {
+                gbest_fit = state.pbest_fit[i];
+                gbest_pos = state.pbest_of(i);
+                counters.gbest_updates += 1;
+            }
+        }
+        if iter % stride == 0 {
+            history.push((iter, gbest_fit));
+        }
+    }
+    history.push((params.max_iter, gbest_fit));
+
+    RunOutput {
+        gbest_fit,
+        gbest_pos,
+        iters: params.max_iter,
+        history,
+        counters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::{Cubic, Sphere};
+
+    #[test]
+    fn converges_on_cubic_1d() {
+        let params = PsoParams::paper_1d(128, 200);
+        let out = run(&params, &Cubic, Objective::Maximize, 1);
+        // Optimum is 900_000 at x = 100; PSO should get very close in
+        // 200 iterations with 128 particles on a 1-D problem.
+        assert!(
+            out.gbest_fit > 899_000.0,
+            "gbest {} too far from 900000",
+            out.gbest_fit
+        );
+        assert!((out.gbest_pos[0] - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn converges_on_sphere_minimization() {
+        let params = PsoParams::for_fitness(&Sphere, 64, 3, 300, 0.5);
+        let out = run(&params, &Sphere, Objective::Minimize, 7);
+        assert!(out.gbest_fit < 1.0, "gbest {}", out.gbest_fit);
+    }
+
+    #[test]
+    fn gbest_history_is_monotone() {
+        let params = PsoParams::paper_120d(32, 100);
+        let out = run(&params, &Cubic, Objective::Maximize, 3);
+        for w in out.history.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1,
+                "gbest worsened: {:?} -> {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        // 120-D so the boundary optimum is not reached instantly (1-D
+        // Cubic clamps a particle to x=100 within an iteration or two,
+        // making any two seeds coincide at exactly 900000).
+        let params = PsoParams::paper_120d(16, 30);
+        let a = run(&params, &Cubic, Objective::Maximize, 11);
+        let b = run(&params, &Cubic, Objective::Maximize, 11);
+        assert_eq!(a.gbest_fit, b.gbest_fit);
+        assert_eq!(a.gbest_pos, b.gbest_pos);
+        assert_eq!(a.history, b.history);
+        let c = run(&params, &Cubic, Objective::Maximize, 12);
+        assert_ne!(a.history, c.history);
+    }
+
+    #[test]
+    fn counters_are_consistent() {
+        let params = PsoParams::paper_1d(32, 20);
+        let out = run(&params, &Cubic, Objective::Maximize, 5);
+        assert_eq!(out.counters.particle_updates, 32 * 20);
+        assert!(out.counters.gbest_updates <= out.counters.pbest_improvements);
+    }
+}

@@ -1,0 +1,138 @@
+//! Synchronous serial reference — PPSO semantics on one core.
+//!
+//! Identical physics to [`super::serial`], but the global best is frozen
+//! for the whole sweep and applied once at the end of each iteration,
+//! exactly like the GPU algorithms (the "1st kernel" computes every
+//! particle against the *previous* iteration's gbest, then the best data
+//! is aggregated). The four Plane-A parallel engines must reproduce this
+//! trajectory **bit-exactly** — that equivalence is the core correctness
+//! test for the queue algorithms.
+
+use super::{eval_and_pbest, history_stride, update_particle, PsoParams, RunOutput, SwarmState};
+use crate::fitness::{Fitness, Objective};
+use crate::rng::PhiloxStream;
+
+/// Tie-break rule shared with every parallel engine: on equal fitness the
+/// smaller particle index wins. This makes the argmax total so engines
+/// with different scan orders still agree bit-exactly.
+#[inline]
+pub fn better_with_tie(
+    objective: Objective,
+    fit: f64,
+    idx: usize,
+    best_fit: f64,
+    best_idx: usize,
+) -> bool {
+    objective.better(fit, best_fit) || (fit == best_fit && idx < best_idx)
+}
+
+/// Run the synchronous serial PSO (the parallel engines' oracle).
+pub fn run(
+    params: &PsoParams,
+    fitness: &dyn Fitness,
+    objective: Objective,
+    seed: u64,
+) -> RunOutput {
+    let stream = PhiloxStream::new(seed);
+    let mut state = SwarmState::init(params, &stream);
+    let (mut gbest_fit, gi) = state.seed_fitness(fitness, objective);
+    let mut gbest_pos = state.position_of(gi);
+
+    let stride = history_stride(params.max_iter);
+    let mut history = Vec::with_capacity(super::HISTORY_SAMPLES as usize + 1);
+    let mut counters = super::Counters::default();
+
+    for iter in 0..params.max_iter {
+        // Sweep with frozen gbest.
+        let mut iter_best_fit = objective.worst();
+        let mut iter_best_idx = usize::MAX;
+        for i in 0..params.n {
+            update_particle(&mut state, i, &gbest_pos, params, &stream, iter);
+            let before = state.pbest_fit[i];
+            let fit = eval_and_pbest(&mut state, i, fitness, objective);
+            counters.particle_updates += 1;
+            if objective.better(fit, before) {
+                counters.pbest_improvements += 1;
+            }
+            // The GPU kernels aggregate this iteration's `fit` (Algorithm 2
+            // pushes `fit`, not `pbest_fit`); the resulting gbest
+            // trajectory is identical because gbest(t-1) already dominates
+            // all older fits.
+            if better_with_tie(objective, state.fit[i], i, iter_best_fit, iter_best_idx) {
+                iter_best_fit = state.fit[i];
+                iter_best_idx = i;
+            }
+        }
+        // Single end-of-iteration gbest update (the "2nd kernel").
+        if objective.better(iter_best_fit, gbest_fit) {
+            gbest_fit = iter_best_fit;
+            // The winning particle just improved its pbest, so pos ==
+            // pbest_pos for it; read pos for symmetry with the kernels.
+            gbest_pos = state.position_of(iter_best_idx);
+            counters.gbest_updates += 1;
+        }
+        if iter % stride == 0 {
+            history.push((iter, gbest_fit));
+        }
+    }
+    history.push((params.max_iter, gbest_fit));
+
+    RunOutput {
+        gbest_fit,
+        gbest_pos,
+        iters: params.max_iter,
+        history,
+        counters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::Cubic;
+
+    #[test]
+    fn converges_like_the_async_serial() {
+        let params = PsoParams::paper_1d(128, 200);
+        let sync = run(&params, &Cubic, Objective::Maximize, 1);
+        let asyn = super::super::serial::run(&params, &Cubic, Objective::Maximize, 1);
+        // Both should essentially solve the 1-D problem; they are distinct
+        // algorithms (gbest propagation timing) so exact equality is NOT
+        // expected — closeness is.
+        assert!(sync.gbest_fit > 899_000.0);
+        assert!(asyn.gbest_fit > 899_000.0);
+    }
+
+    #[test]
+    fn trajectories_differ_from_async_serial_in_general() {
+        // With few particles and iterations the propagation-timing
+        // difference is observable — documents that these are two
+        // different reference semantics, as the paper describes.
+        let params = PsoParams::paper_120d(8, 30);
+        let sync = run(&params, &Cubic, Objective::Maximize, 2);
+        let asyn = super::super::serial::run(&params, &Cubic, Objective::Maximize, 2);
+        assert!(
+            sync.gbest_fit != asyn.gbest_fit || sync.gbest_pos != asyn.gbest_pos,
+            "sync and async serial coincided unexpectedly (not wrong, but \
+             suspicious for this workload)"
+        );
+    }
+
+    #[test]
+    fn tie_break_is_total_and_index_ordered() {
+        use crate::fitness::Objective::*;
+        assert!(better_with_tie(Maximize, 2.0, 5, 1.0, 0));
+        assert!(better_with_tie(Maximize, 2.0, 3, 2.0, 5)); // tie → lower idx
+        assert!(!better_with_tie(Maximize, 2.0, 7, 2.0, 5));
+        assert!(better_with_tie(Minimize, 1.0, 9, 2.0, 0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let params = PsoParams::paper_1d(64, 50);
+        let a = run(&params, &Cubic, Objective::Maximize, 4);
+        let b = run(&params, &Cubic, Objective::Maximize, 4);
+        assert_eq!(a.gbest_fit, b.gbest_fit);
+        assert_eq!(a.history, b.history);
+    }
+}

@@ -1,0 +1,238 @@
+//! Particle storage.
+//!
+//! [`SwarmState`] is the SoA layout of §5.1 (Data Structure SoA /
+//! Figure 2): every field is a flat array, dimension-major
+//! (`pos[d * n + i]`), so a sweep over particles at fixed dimension walks
+//! memory contiguously — the CPU-cache analog of coalesced access.
+//!
+//! [`AosSwarm`] is the Array-of-Structures layout the paper calls "almost
+//! the worst case" for parallel code; it exists solely for
+//! `benches/ablation_layout.rs` to measure the difference.
+
+use super::PsoParams;
+use crate::fitness::Objective;
+use crate::rng::PhiloxStream;
+
+/// SoA swarm storage (the production layout).
+#[derive(Debug, Clone)]
+pub struct SwarmState {
+    /// Particle count.
+    pub n: usize,
+    /// Dimensionality.
+    pub dim: usize,
+    /// Positions, `pos[d * n + i]`.
+    pub pos: Vec<f64>,
+    /// Velocities, same layout.
+    pub vel: Vec<f64>,
+    /// Current fitness per particle.
+    pub fit: Vec<f64>,
+    /// Best-known position per particle, same layout as `pos`.
+    pub pbest_pos: Vec<f64>,
+    /// Best-known fitness per particle.
+    pub pbest_fit: Vec<f64>,
+}
+
+impl SwarmState {
+    /// Step-1 initialization (Algorithm 1 lines 1–6): uniform random
+    /// positions and velocities inside the bounds, pbest = initial state.
+    /// Deterministic in the stream: position/velocity of particle `i`
+    /// come from counter slots independent of execution order, so serial
+    /// and parallel engines start from the *identical* swarm.
+    pub fn init(params: &PsoParams, stream: &PhiloxStream) -> Self {
+        let (n, dim) = (params.n, params.dim);
+        let mut pos = vec![0.0; n * dim];
+        let mut vel = vec![0.0; n * dim];
+        for d in 0..dim {
+            for i in 0..n {
+                // Iteration counter u64::MAX is reserved for init draws so
+                // they never collide with update draws (iter < max_iter).
+                let (rp, rv) = stream.r1r2(i as u64, u64::MAX, d as u32);
+                pos[d * n + i] = params.min_pos + (params.max_pos - params.min_pos) * rp;
+                vel[d * n + i] = -params.max_v + 2.0 * params.max_v * rv;
+            }
+        }
+        Self {
+            n,
+            dim,
+            pos: pos.clone(),
+            vel,
+            fit: vec![0.0; n],
+            pbest_pos: pos,
+            pbest_fit: vec![0.0; n],
+        }
+    }
+
+    /// Evaluate all particles and seed pbest/fit from the initial
+    /// positions (the tail of Step 1). Returns the initial global best
+    /// `(fit, particle index)`.
+    pub fn seed_fitness(
+        &mut self,
+        fitness: &dyn crate::fitness::Fitness,
+        objective: Objective,
+    ) -> (f64, usize) {
+        fitness.eval_batch(&self.pos, self.n, self.dim, &mut self.fit);
+        self.pbest_fit.copy_from_slice(&self.fit);
+        self.pbest_pos.copy_from_slice(&self.pos);
+        let mut best = objective.worst();
+        let mut best_i = 0;
+        for (i, &f) in self.fit.iter().enumerate() {
+            if objective.better(f, best) {
+                best = f;
+                best_i = i;
+            }
+        }
+        (best, best_i)
+    }
+
+    /// Copy particle `i`'s position out (length-dim row gather).
+    pub fn position_of(&self, i: usize) -> Vec<f64> {
+        (0..self.dim).map(|d| self.pos[d * self.n + i]).collect()
+    }
+
+    /// Copy particle `i`'s pbest position out.
+    pub fn pbest_of(&self, i: usize) -> Vec<f64> {
+        (0..self.dim)
+            .map(|d| self.pbest_pos[d * self.n + i])
+            .collect()
+    }
+
+    /// Invariant check used by property tests: all positions and
+    /// velocities inside bounds.
+    pub fn check_bounds(&self, params: &PsoParams) -> Result<(), String> {
+        for (k, &p) in self.pos.iter().enumerate() {
+            if !(params.min_pos..=params.max_pos).contains(&p) {
+                return Err(format!("pos[{k}] = {p} out of bounds"));
+            }
+        }
+        for (k, &v) in self.vel.iter().enumerate() {
+            if !(-params.max_v..=params.max_v).contains(&v) {
+                return Err(format!("vel[{k}] = {v} out of clamp"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One particle in AoS layout (the paper's "Data Structure AoS").
+#[derive(Debug, Clone)]
+pub struct AosParticle {
+    /// Position (length dim).
+    pub pos: Vec<f64>,
+    /// Velocity.
+    pub vel: Vec<f64>,
+    /// Current fitness.
+    pub fit: f64,
+    /// Best-known position.
+    pub pbest_pos: Vec<f64>,
+    /// Best-known fitness.
+    pub pbest_fit: f64,
+}
+
+/// AoS swarm — layout-ablation only.
+#[derive(Debug, Clone)]
+pub struct AosSwarm {
+    /// The particles.
+    pub particles: Vec<AosParticle>,
+}
+
+impl AosSwarm {
+    /// Mirror of [`SwarmState::init`] producing the identical swarm in
+    /// AoS layout (same RNG draws).
+    pub fn init(params: &PsoParams, stream: &PhiloxStream) -> Self {
+        let soa = SwarmState::init(params, stream);
+        Self::from_soa(&soa)
+    }
+
+    /// Convert from SoA (test/ablation bridge).
+    pub fn from_soa(s: &SwarmState) -> Self {
+        let particles = (0..s.n)
+            .map(|i| AosParticle {
+                pos: s.position_of(i),
+                vel: (0..s.dim).map(|d| s.vel[d * s.n + i]).collect(),
+                fit: s.fit[i],
+                pbest_pos: s.pbest_of(i),
+                pbest_fit: s.pbest_fit[i],
+            })
+            .collect();
+        Self { particles }
+    }
+
+    /// Convert to SoA (equivalence checks).
+    pub fn to_soa(&self, dim: usize) -> SwarmState {
+        let n = self.particles.len();
+        let mut s = SwarmState {
+            n,
+            dim,
+            pos: vec![0.0; n * dim],
+            vel: vec![0.0; n * dim],
+            fit: vec![0.0; n],
+            pbest_pos: vec![0.0; n * dim],
+            pbest_fit: vec![0.0; n],
+        };
+        for (i, p) in self.particles.iter().enumerate() {
+            for d in 0..dim {
+                s.pos[d * n + i] = p.pos[d];
+                s.vel[d * n + i] = p.vel[d];
+                s.pbest_pos[d * n + i] = p.pbest_pos[d];
+            }
+            s.fit[i] = p.fit;
+            s.pbest_fit[i] = p.pbest_fit;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::{Cubic, Objective};
+
+    #[test]
+    fn init_is_inside_bounds_and_deterministic() {
+        let params = PsoParams::paper_1d(256, 10);
+        let stream = PhiloxStream::new(42);
+        let a = SwarmState::init(&params, &stream);
+        let b = SwarmState::init(&params, &stream);
+        a.check_bounds(&params).unwrap();
+        assert_eq!(a.pos, b.pos);
+        assert_eq!(a.vel, b.vel);
+        // Positions should not all be equal (it's a random swarm).
+        assert!(a.pos.iter().any(|&p| (p - a.pos[0]).abs() > 1e-9));
+    }
+
+    #[test]
+    fn seed_fitness_finds_argmax() {
+        let params = PsoParams::paper_1d(64, 10);
+        let stream = PhiloxStream::new(3);
+        let mut st = SwarmState::init(&params, &stream);
+        let (best, best_i) = st.seed_fitness(&Cubic, Objective::Maximize);
+        assert_eq!(best, st.fit[best_i]);
+        for &f in &st.fit {
+            assert!(f <= best);
+        }
+        assert_eq!(st.pbest_fit, st.fit);
+    }
+
+    #[test]
+    fn aos_soa_roundtrip_is_identity() {
+        let params = PsoParams::paper_120d(16, 1);
+        let stream = PhiloxStream::new(9);
+        let mut soa = SwarmState::init(&params, &stream);
+        soa.seed_fitness(&Cubic, Objective::Maximize);
+        let aos = AosSwarm::from_soa(&soa);
+        let back = aos.to_soa(params.dim);
+        assert_eq!(soa.pos, back.pos);
+        assert_eq!(soa.vel, back.vel);
+        assert_eq!(soa.fit, back.fit);
+        assert_eq!(soa.pbest_pos, back.pbest_pos);
+        assert_eq!(soa.pbest_fit, back.pbest_fit);
+    }
+
+    #[test]
+    fn init_draws_do_not_collide_with_update_draws() {
+        // Init uses iter = u64::MAX; updates use iter < max_iter. Check a
+        // couple of values differ (no accidental counter reuse).
+        let stream = PhiloxStream::new(5);
+        assert_ne!(stream.r1r2(0, u64::MAX, 0), stream.r1r2(0, 0, 0));
+    }
+}

@@ -1,0 +1,206 @@
+//! `artifacts/manifest.toml` parsing — the artifact registry the AOT
+//! pipeline emits and the runtime trusts for ABI shapes.
+
+use crate::config::{parse_toml, TomlValue};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One artifact's description (a `[artifact.<name>]` section).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Artifact stem (`pso_queue_n1024_d1_k50`).
+    pub name: String,
+    /// HLO text filename relative to the artifact dir.
+    pub file: String,
+    /// Aggregation variant (`reduction` | `queue` | `fused`).
+    pub variant: String,
+    /// Swarm size the module was lowered for.
+    pub n: usize,
+    /// Dimensionality.
+    pub dim: usize,
+    /// Iterations per chunk call.
+    pub iters: u64,
+    /// Fitness function baked into the module.
+    pub fitness: String,
+    /// Baked PSO scalars (w, c1, c2, min_pos, max_pos, max_v).
+    pub w: f64,
+    pub c1: f64,
+    pub c2: f64,
+    pub min_pos: f64,
+    pub max_pos: f64,
+    pub max_v: f64,
+    /// SHA-256 of the HLO text (staleness check).
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// jax version that lowered the artifacts (diagnostics).
+    pub jax_version: String,
+    artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load and parse `manifest.toml`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut jax_version = String::new();
+        // Group keys by artifact section.
+        let mut sections: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+        for (key, value) in doc {
+            if key == "jax_version" {
+                jax_version = value.as_str("jax_version")?.to_string();
+                continue;
+            }
+            if let Some(rest) = key.strip_prefix("artifact.") {
+                let Some((name, field)) = rest.rsplit_once('.') else {
+                    bail!("malformed manifest key {key}");
+                };
+                sections
+                    .entry(name.to_string())
+                    .or_default()
+                    .insert(field.to_string(), value);
+            }
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, fields) in sections {
+            let get = |f: &str| -> Result<&TomlValue> {
+                fields
+                    .get(f)
+                    .with_context(|| format!("artifact {name} missing field {f}"))
+            };
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                file: get("file")?.as_str("file")?.to_string(),
+                variant: get("variant")?.as_str("variant")?.to_string(),
+                n: get("n")?.as_int("n")? as usize,
+                dim: get("dim")?.as_int("dim")? as usize,
+                iters: get("iters")?.as_int("iters")? as u64,
+                fitness: get("fitness")?.as_str("fitness")?.to_string(),
+                w: get("w")?.as_float("w")?,
+                c1: get("c1")?.as_float("c1")?,
+                c2: get("c2")?.as_float("c2")?,
+                min_pos: get("min_pos")?.as_float("min_pos")?,
+                max_pos: get("max_pos")?.as_float("max_pos")?,
+                max_v: get("max_v")?.as_float("max_v")?,
+                sha256: get("sha256")?.as_str("sha256")?.to_string(),
+            };
+            artifacts.insert(name, meta);
+        }
+        if artifacts.is_empty() {
+            bail!("manifest contains no artifacts");
+        }
+        Ok(Self {
+            jax_version,
+            artifacts,
+        })
+    }
+
+    /// Look up by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.get(name)
+    }
+
+    /// First artifact matching `(variant, n, dim)`.
+    pub fn find(&self, variant: &str, n: usize, dim: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .values()
+            .find(|a| a.variant == variant && a.n == n && a.dim == dim)
+    }
+
+    /// All artifact names.
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.keys().cloned().collect()
+    }
+
+    /// All artifacts.
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+jax_version = "0.8.2"
+
+[artifact.pso_queue_n256_d1_k10]
+file = "pso_queue_n256_d1_k10.hlo.txt"
+variant = "queue"
+n = 256
+dim = 1
+iters = 10
+dtype = "f64"
+fitness = "cubic"
+w = 1.0
+c1 = 2.0
+c2 = 2.0
+min_pos = -100.0
+max_pos = 100.0
+max_v = 100.0
+sha256 = "abc123"
+bytes = 53818
+outputs = 7
+
+[artifact.pso_fused_n1024_d120_k25]
+file = "pso_fused_n1024_d120_k25.hlo.txt"
+variant = "fused"
+n = 1024
+dim = 120
+iters = 25
+dtype = "f64"
+fitness = "cubic"
+w = 1.0
+c1 = 2.0
+c2 = 2.0
+min_pos = -100.0
+max_pos = 100.0
+max_v = 100.0
+sha256 = "def456"
+bytes = 1
+outputs = 7
+"#;
+
+    #[test]
+    fn parses_sections_and_fields() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.jax_version, "0.8.2");
+        assert_eq!(m.names().len(), 2);
+        let a = m.get("pso_queue_n256_d1_k10").unwrap();
+        assert_eq!(a.variant, "queue");
+        assert_eq!((a.n, a.dim, a.iters), (256, 1, 10));
+        assert_eq!(a.max_v, 100.0);
+        assert_eq!(a.sha256, "abc123");
+    }
+
+    #[test]
+    fn find_matches_config() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find("fused", 1024, 120).is_some());
+        assert!(m.find("fused", 1024, 1).is_none());
+        assert!(m.find("reduction", 256, 1).is_none());
+    }
+
+    #[test]
+    fn missing_field_is_an_error() {
+        let broken = "[artifact.x]\nfile = \"x.hlo.txt\"\n";
+        let err = Manifest::parse(broken).unwrap_err().to_string();
+        assert!(err.contains("missing field"), "{err}");
+    }
+
+    #[test]
+    fn empty_manifest_is_an_error() {
+        assert!(Manifest::parse("jax_version = \"0.8.2\"\n").is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Host-side swarm state for the XLA plane — flat `[dim, n]` row-major
+//! buffers matching the artifact ABI, with init mirroring the Plane-A
+//! swarm (Philox draws) so both planes start from comparable swarms.
+
+use crate::fitness::{Fitness, Objective};
+use crate::pso::PsoParams;
+use crate::rng::PhiloxStream;
+
+/// Swarm state in the artifact ABI layout.
+#[derive(Debug, Clone)]
+pub struct XlaSwarmState {
+    /// Dimensionality.
+    pub dim: usize,
+    /// Particle count.
+    pub n: usize,
+    /// `[dim, n]` row-major positions.
+    pub pos: Vec<f64>,
+    /// `[dim, n]` velocities.
+    pub vel: Vec<f64>,
+    /// `[dim, n]` best-known positions.
+    pub pbest_pos: Vec<f64>,
+    /// `[n]` best-known fitness.
+    pub pbest_fit: Vec<f64>,
+    /// `[dim]` global best position.
+    pub gbest_pos: Vec<f64>,
+    /// Global best fitness.
+    pub gbest_fit: f64,
+}
+
+impl XlaSwarmState {
+    /// Initialize uniformly inside the bounds (Step 1 of Algorithm 1) and
+    /// seed pbest/gbest from the initial fitness.
+    ///
+    /// `shard_id` decorrelates the Philox draws of different coordinator
+    /// shards (they are independent sub-swarms).
+    pub fn init(
+        params: &PsoParams,
+        fitness: &dyn Fitness,
+        objective: Objective,
+        seed: u64,
+        shard_id: u64,
+    ) -> Self {
+        let stream = PhiloxStream::new(seed ^ (shard_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+        let (n, dim) = (params.n, params.dim);
+        let mut pos = vec![0.0; n * dim];
+        let mut vel = vec![0.0; n * dim];
+        for d in 0..dim {
+            for i in 0..n {
+                let (rp, rv) = stream.r1r2(i as u64, u64::MAX, d as u32);
+                pos[d * n + i] = params.min_pos + (params.max_pos - params.min_pos) * rp;
+                vel[d * n + i] = -params.max_v + 2.0 * params.max_v * rv;
+            }
+        }
+        let mut fit = vec![0.0; n];
+        fitness.eval_batch(&pos, n, dim, &mut fit);
+        let mut best = objective.worst();
+        let mut gi = 0usize;
+        for (i, &f) in fit.iter().enumerate() {
+            if objective.better(f, best) {
+                best = f;
+                gi = i;
+            }
+        }
+        let gbest_pos = (0..dim).map(|d| pos[d * n + gi]).collect();
+        Self {
+            dim,
+            n,
+            pbest_pos: pos.clone(),
+            pos,
+            vel,
+            pbest_fit: fit,
+            gbest_pos,
+            gbest_fit: best,
+        }
+    }
+
+    /// Adopt a better global best from another shard (the coordinator's
+    /// cross-shard merge). Returns true if adopted.
+    pub fn adopt_gbest(&mut self, objective: Objective, fit: f64, pos: &[f64]) -> bool {
+        if objective.better(fit, self.gbest_fit) {
+            self.gbest_fit = fit;
+            self.gbest_pos.copy_from_slice(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Invariant: all positions within bounds (property tests).
+    pub fn check_bounds(&self, params: &PsoParams) -> Result<(), String> {
+        for (k, &p) in self.pos.iter().enumerate() {
+            if !(params.min_pos..=params.max_pos).contains(&p) {
+                return Err(format!("pos[{k}] = {p} out of bounds"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::Cubic;
+
+    #[test]
+    fn init_seeds_gbest_from_swarm_argmax() {
+        let params = PsoParams::paper_1d(128, 10);
+        let st = XlaSwarmState::init(&params, &Cubic, Objective::Maximize, 1, 0);
+        st.check_bounds(&params).unwrap();
+        let best = st
+            .pbest_fit
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(st.gbest_fit, best);
+        assert_eq!(st.pos, st.pbest_pos);
+    }
+
+    #[test]
+    fn shards_are_decorrelated() {
+        let params = PsoParams::paper_1d(64, 10);
+        let a = XlaSwarmState::init(&params, &Cubic, Objective::Maximize, 1, 0);
+        let b = XlaSwarmState::init(&params, &Cubic, Objective::Maximize, 1, 1);
+        assert_ne!(a.pos, b.pos);
+    }
+
+    #[test]
+    fn adopt_gbest_only_improves() {
+        let params = PsoParams::paper_1d(16, 10);
+        let mut st = XlaSwarmState::init(&params, &Cubic, Objective::Maximize, 2, 0);
+        let old = st.gbest_fit;
+        assert!(!st.adopt_gbest(Objective::Maximize, old - 1.0, &[0.0]));
+        assert_eq!(st.gbest_fit, old);
+        assert!(st.adopt_gbest(Objective::Maximize, old + 1.0, &[5.0]));
+        assert_eq!(st.gbest_fit, old + 1.0);
+        assert_eq!(st.gbest_pos, vec![5.0]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Property-testing support (proptest is unavailable offline).
+//!
+//! [`prop_check`] runs a predicate over `n` randomly generated cases from
+//! a seeded generator, with greedy shrinking on failure: the failing case
+//! is re-generated with progressively "smaller" parameters via the
+//! caller's `shrink` hook, and the smallest still-failing case is
+//! reported. Deterministic per seed, so CI failures reproduce.
+
+use crate::rng::{RngEngine, SplitMix64};
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropFailure<C: std::fmt::Debug> {
+    /// The (possibly shrunk) counterexample.
+    pub case: C,
+    /// Cases executed before the failure.
+    pub cases_run: usize,
+    /// Message from the failing predicate.
+    pub message: String,
+}
+
+impl<C: std::fmt::Debug> std::fmt::Display for PropFailure<C> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed after {} cases: {}\ncounterexample: {:#?}",
+            self.cases_run, self.message, self.case
+        )
+    }
+}
+
+/// Run `check` on `cases` generated cases; panic with the shrunk
+/// counterexample on failure.
+///
+/// * `gen`: produce a case from the RNG.
+/// * `shrink`: yield strictly-smaller variants of a case (may be empty).
+/// * `check`: return `Err(msg)` to fail the property.
+pub fn prop_check<C, G, S, F>(seed: u64, cases: usize, mut gen: G, shrink: S, mut check: F)
+where
+    C: Clone + std::fmt::Debug,
+    G: FnMut(&mut dyn RngEngine) -> C,
+    S: Fn(&C) -> Vec<C>,
+    F: FnMut(&C) -> Result<(), String>,
+{
+    let mut rng = SplitMix64::new(seed);
+    for i in 0..cases {
+        let case = gen(&mut rng);
+        if let Err(msg) = check(&case) {
+            // Greedy shrink: repeatedly take the first smaller variant
+            // that still fails, up to a budget.
+            let mut best = case.clone();
+            let mut best_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = check(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "{}",
+                PropFailure {
+                    case: best,
+                    cases_run: i + 1,
+                    message: best_msg
+                }
+            );
+        }
+    }
+}
+
+/// Uniform usize in `[lo, hi]` from an engine (generator helper).
+pub fn gen_usize(rng: &mut dyn RngEngine, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo <= hi);
+    lo + (rng.next_u64() as usize) % (hi - lo + 1)
+}
+
+/// Standard shrink for a usize toward `lo`: halving steps.
+pub fn shrink_usize(v: usize, lo: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if v > lo {
+        out.push(lo);
+        let mid = lo + (v - lo) / 2;
+        if mid != lo && mid != v {
+            out.push(mid);
+        }
+        if v - 1 != lo {
+            out.push(v - 1);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check(
+            1,
+            50,
+            |r| gen_usize(r, 0, 100),
+            |_| vec![],
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn failing_property_panics_with_case() {
+        prop_check(
+            2,
+            100,
+            |r| gen_usize(r, 0, 1000),
+            |&c| shrink_usize(c, 0),
+            |&c| {
+                if c >= 10 {
+                    Err(format!("{c} too big"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Capture the panic message and assert the shrunk case is minimal.
+        let result = std::panic::catch_unwind(|| {
+            prop_check(
+                3,
+                100,
+                |r| gen_usize(r, 0, 1000),
+                |&c| shrink_usize(c, 0),
+                |&c| if c >= 10 { Err("big".into()) } else { Ok(()) },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy halving should land at or near the boundary (10..20).
+        let case: usize = msg
+            .lines()
+            .find_map(|l| l.strip_prefix("counterexample: ")?.trim().parse().ok())
+            .expect("case in message");
+        assert!(case < 30, "shrunk case {case} not small: {msg}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = vec![];
+        let mut b = vec![];
+        prop_check(9, 10, |r| gen_usize(r, 0, 99), |_| vec![], |&c| {
+            a.push(c);
+            Ok(())
+        });
+        prop_check(9, 10, |r| gen_usize(r, 0, 99), |_| vec![], |&c| {
+            b.push(c);
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

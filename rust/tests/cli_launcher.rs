@@ -1,0 +1,138 @@
+//! Launcher integration: drive the real `cupso` binary end to end.
+
+use std::process::Command;
+
+fn cupso(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_cupso"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn cupso");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, text) = cupso(&[]);
+    assert!(ok);
+    assert!(text.contains("Commands:"));
+    assert!(text.contains("compare"));
+}
+
+#[test]
+fn run_solves_small_cubic() {
+    let (ok, text) = cupso(&[
+        "run",
+        "--particles",
+        "128",
+        "--iters",
+        "200",
+        "--engine",
+        "queuelock",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("gbest fitness"), "{text}");
+    assert!(text.contains("queue pushes"), "{text}");
+    // 1-D cubic run at this size reaches the optimum.
+    assert!(text.contains("900000"), "{text}");
+}
+
+#[test]
+fn run_with_history_prints_table() {
+    let (ok, text) = cupso(&[
+        "run", "--particles", "64", "--iters", "100", "--history",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("## Convergence"), "{text}");
+}
+
+#[test]
+fn run_rejects_bad_engine() {
+    let (ok, text) = cupso(&["run", "--engine", "warp"]);
+    assert!(!ok);
+    assert!(text.contains("bad engine"), "{text}");
+}
+
+#[test]
+fn run_accepts_config_file_with_override() {
+    let dir = std::env::temp_dir().join("cupso-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("run.toml");
+    std::fs::write(
+        &cfg,
+        "particles = 64\niters = 100\nengine = \"queue\"\nfitness = \"sphere\"\ndim = 3\n",
+    )
+    .unwrap();
+    let (ok, text) = cupso(&["run", "--config", cfg.to_str().unwrap(), "--iters", "150"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("150 iters"), "{text}");
+    assert!(text.contains("engine=Queue"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn compare_ranks_all_five() {
+    let (ok, text) = cupso(&["compare", "--particles", "128", "--iters", "150"]);
+    assert!(ok, "{text}");
+    for name in ["CPU", "Reduction", "Loop Unrolling", "Queue", "Queue Lock"] {
+        assert!(text.contains(name), "missing {name} in:\n{text}");
+    }
+}
+
+#[test]
+fn simulate_emits_all_three_tables() {
+    let (ok, text) = cupso(&["simulate"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Table 3"), "{text}");
+    assert!(text.contains("Table 4"), "{text}");
+    assert!(text.contains("Table 5"), "{text}");
+    // The estimated peak-then-drop: last Table 4 row's speedup below peak.
+    assert!(text.contains("195.45"), "paper column present: {text}");
+}
+
+#[test]
+fn info_lists_engines_and_artifacts() {
+    let (ok, text) = cupso(&["info"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("engines:"), "{text}");
+    assert!(text.contains("cubic"), "{text}");
+    // artifacts/ exists in the repo once `make artifacts` has run.
+    assert!(
+        text.contains("pso_queue") || text.contains("none"),
+        "{text}"
+    );
+}
+
+#[test]
+fn xla_async_runs_on_artifacts() {
+    let (ok, text) = cupso(&[
+        "xla",
+        "--variant",
+        "queue",
+        "--particles",
+        "1024",
+        "--dim",
+        "1",
+        "--shards",
+        "2",
+        "--iters",
+        "100",
+        "--scheduler",
+        "async",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("gbest fitness"), "{text}");
+    assert!(text.contains("chunk calls"), "{text}");
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (ok, text) = cupso(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"), "{text}");
+}

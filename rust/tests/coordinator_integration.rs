@@ -1,0 +1,189 @@
+//! Plane-B integration: PJRT artifact loading, chunk execution semantics,
+//! and both coordinator schedulers, against the real `artifacts/` output
+//! of `make artifacts` (the Makefile orders this correctly).
+
+use cupso::coordinator::{AsyncScheduler, CoordinatorConfig, SyncScheduler};
+use cupso::fitness::{Cubic, Fitness, Objective};
+use cupso::pso::PsoParams;
+use cupso::runtime::{XlaRuntime, XlaSwarmState};
+use std::path::Path;
+
+fn runtime() -> XlaRuntime {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    XlaRuntime::open(&dir).expect("run `make artifacts` before `cargo test`")
+}
+
+fn state_for(rt: &XlaRuntime, variant: &str, n: usize, d: usize) -> XlaSwarmState {
+    let meta = rt.find(variant, n, d).expect("artifact in manifest");
+    let params = PsoParams {
+        w: meta.w,
+        c1: meta.c1,
+        c2: meta.c2,
+        min_pos: meta.min_pos,
+        max_pos: meta.max_pos,
+        max_v: meta.max_v,
+        max_iter: meta.iters,
+        n,
+        dim: d,
+    };
+    XlaSwarmState::init(&params, &Cubic, Objective::Maximize, 7, 0)
+}
+
+#[test]
+fn manifest_lists_default_configs() {
+    let rt = runtime();
+    for variant in ["reduction", "queue", "fused"] {
+        assert!(
+            rt.find(variant, 1024, 1).is_some(),
+            "missing {variant} n=1024 d=1"
+        );
+        assert!(
+            rt.find(variant, 256, 120).is_some(),
+            "missing {variant} n=256 d=120"
+        );
+    }
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn chunk_advances_state_and_traces_monotone() {
+    let rt = runtime();
+    let exec = rt.load_config("queue", 1024, 1).unwrap();
+    let mut st = state_for(&rt, "queue", 1024, 1);
+    let initial = st.gbest_fit;
+    let trace = exec.run(&mut st, [1, 2], 0).unwrap();
+    assert_eq!(trace.len(), exec.meta.iters as usize);
+    for w in trace.windows(2) {
+        assert!(w[1] >= w[0], "gbest worsened inside the chunk");
+    }
+    assert!(st.gbest_fit >= initial);
+    // 1-D cubic with 1024 particles: 50 iterations should solve it.
+    assert!(
+        st.gbest_fit > 899_000.0,
+        "gbest {} after one chunk",
+        st.gbest_fit
+    );
+    // Positions stayed in bounds.
+    assert!(st.pos.iter().all(|&p| (-100.0..=100.0).contains(&p)));
+}
+
+#[test]
+fn all_variants_agree_bitwise_from_same_state() {
+    // The three lowered variants embed the same synchronous semantics —
+    // from identical state + key they must produce identical outputs.
+    let rt = runtime();
+    let mut results = Vec::new();
+    for variant in ["reduction", "queue", "fused"] {
+        let exec = rt.load_config(variant, 1024, 1).unwrap();
+        let mut st = state_for(&rt, variant, 1024, 1);
+        let trace = exec.run(&mut st, [9, 9], 0).unwrap();
+        results.push((variant, st, trace));
+    }
+    let (_, st0, tr0) = &results[0];
+    for (variant, st, tr) in &results[1..] {
+        assert_eq!(st.gbest_fit, st0.gbest_fit, "{variant} fit");
+        assert_eq!(st.gbest_pos, st0.gbest_pos, "{variant} pos");
+        assert_eq!(st.pos, st0.pos, "{variant} swarm pos");
+        assert_eq!(tr, tr0, "{variant} trace");
+    }
+}
+
+#[test]
+fn chunks_chain_exactly() {
+    // Replaying the second chunk from the mid-state must equal the
+    // chained evolution (the coordinator contract).
+    let rt = runtime();
+    let exec = rt.load_config("fused", 1024, 1).unwrap();
+    let k = exec.meta.iters as i64;
+
+    let mut chained = state_for(&rt, "fused", 1024, 1);
+    exec.run(&mut chained, [3, 4], 0).unwrap();
+    let mid = chained.clone();
+    exec.run(&mut chained, [3, 4], k).unwrap();
+
+    let mut replay = mid;
+    exec.run(&mut replay, [3, 4], k).unwrap();
+    assert_eq!(chained.pos, replay.pos);
+    assert_eq!(chained.gbest_fit, replay.gbest_fit);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let rt = runtime();
+    let t0 = std::time::Instant::now();
+    let _a = rt.load("pso_queue_n1024_d1_k50").unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _b = rt.load("pso_queue_n1024_d1_k50").unwrap();
+    let second = t1.elapsed();
+    assert!(
+        second < first / 2,
+        "cache ineffective: first {first:?}, second {second:?}"
+    );
+}
+
+#[test]
+fn sync_scheduler_runs_and_improves() {
+    let rt = runtime();
+    let mut cfg = CoordinatorConfig::new("queue", 256, 120, 100);
+    cfg.shards = 3;
+    let out = SyncScheduler::run(&rt, &cfg).unwrap();
+    assert_eq!(out.chunk_calls, 3 * out.iters_per_shard / 25);
+    assert_eq!(out.shard_fits.len(), 3);
+    // Quality: 120-D cubic optimum is 108M; 100 iterations with 3×256
+    // particles should be well on the way (over 60% of optimal).
+    let opt = Cubic.optimum(120).unwrap();
+    assert!(
+        out.gbest_fit > 0.6 * opt,
+        "gbest {} vs optimum {opt}",
+        out.gbest_fit
+    );
+    // History monotone.
+    for w in out.history.windows(2) {
+        assert!(w[1].1 >= w[0].1);
+    }
+    // The shared best dominates every shard.
+    for &f in &out.shard_fits {
+        assert!(out.gbest_fit >= f);
+    }
+}
+
+#[test]
+fn async_scheduler_matches_sync_quality() {
+    let rt = runtime();
+    let mut cfg = CoordinatorConfig::new("queue", 256, 120, 100);
+    cfg.shards = 3;
+    let sync = SyncScheduler::run(&rt, &cfg).unwrap();
+    let asy = AsyncScheduler::run(&rt, &cfg).unwrap();
+    assert_eq!(asy.chunk_calls, sync.chunk_calls);
+    // Async relaxes propagation, not quality class.
+    let rel = (asy.gbest_fit - sync.gbest_fit).abs() / sync.gbest_fit.abs();
+    assert!(
+        rel < 0.1,
+        "async {} vs sync {} (rel {rel})",
+        asy.gbest_fit,
+        sync.gbest_fit
+    );
+    for w in asy.history.windows(2) {
+        assert!(w[1].1 >= w[0].1, "async gbest worsened");
+    }
+}
+
+#[test]
+fn missing_artifact_errors_helpfully() {
+    let rt = runtime();
+    let err = rt.load_config("queue", 12345, 1).unwrap_err().to_string();
+    assert!(err.contains("no artifact"), "{err}");
+    assert!(err.contains("available"), "{err}");
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let rt = runtime();
+    let exec = rt.load_config("queue", 1024, 1).unwrap();
+    let mut st = state_for(&rt, "queue", 1024, 1);
+    st.n = 512; // lie about the shape
+    st.pos.truncate(512);
+    let err = exec.run(&mut st, [0, 0], 0).unwrap_err().to_string();
+    assert!(err.contains("does not match"), "{err}");
+}

@@ -1,0 +1,185 @@
+//! Cross-engine equivalence — the core correctness argument for the
+//! queue algorithms.
+//!
+//! Reduction, Loop-Unrolling and Queue differ *only* in how the best
+//! datum is aggregated; with the counter-based RNG all three must
+//! reproduce the synchronous serial reference trajectory **bit-exactly**,
+//! for every workload shape. Queue-Lock relaxes inter-block ordering, so
+//! it is held to: bit-exactness in the single-block case, and monotone +
+//! quality-band behaviour in the general case.
+
+use cupso::engine::{Engine, ParallelSettings, QueueEngine, QueueLockEngine, ReductionEngine};
+use cupso::fitness::{by_name, Cubic, Objective};
+use cupso::pso::{serial_sync, PsoParams};
+use cupso::testsupport::{gen_usize, prop_check};
+
+/// Workload grid for the exact-equivalence checks: both paper dims, odd
+/// swarm sizes (partial blocks), and sizes around block boundaries.
+fn workloads() -> Vec<PsoParams> {
+    vec![
+        PsoParams::paper_1d(32, 40),
+        PsoParams::paper_1d(100, 40),   // partial block
+        PsoParams::paper_1d(256, 40),   // exactly one block
+        PsoParams::paper_1d(257, 40),   // one block + 1
+        PsoParams::paper_1d(1024, 25),  // multiple blocks
+        PsoParams::paper_120d(64, 15),
+        PsoParams::paper_120d(300, 10), // partial blocks, high dim
+    ]
+}
+
+#[test]
+fn reduction_unroll_queue_match_serial_sync_bit_exactly() {
+    let settings = ParallelSettings::with_workers(4);
+    for params in workloads() {
+        let oracle = serial_sync::run(&params, &Cubic, Objective::Maximize, 42);
+        let engines: Vec<Box<dyn Engine>> = vec![
+            Box::new(ReductionEngine::new(settings.clone())),
+            Box::new(ReductionEngine::unrolled(settings.clone())),
+            Box::new(QueueEngine::new(settings.clone())),
+        ];
+        for mut e in engines {
+            let out = e.run(&params, &Cubic, Objective::Maximize, 42);
+            assert_eq!(
+                out.gbest_fit, oracle.gbest_fit,
+                "{} fit mismatch on n={} d={}",
+                e.name(),
+                params.n,
+                params.dim
+            );
+            assert_eq!(
+                out.gbest_pos, oracle.gbest_pos,
+                "{} pos mismatch on n={} d={}",
+                e.name(),
+                params.n,
+                params.dim
+            );
+            assert_eq!(
+                out.history, oracle.history,
+                "{} trajectory mismatch on n={} d={}",
+                e.name(),
+                params.n,
+                params.dim
+            );
+        }
+    }
+}
+
+#[test]
+fn queue_lock_single_block_is_bit_exact() {
+    // With one block there is no cross-block race: the fused engine is
+    // sequentially identical to the synchronous reference.
+    let settings = ParallelSettings::with_workers(4);
+    for params in [PsoParams::paper_1d(200, 50), PsoParams::paper_120d(128, 15)] {
+        let oracle = serial_sync::run(&params, &Cubic, Objective::Maximize, 7);
+        let mut e = QueueLockEngine::new(settings.clone());
+        let out = e.run(&params, &Cubic, Objective::Maximize, 7);
+        assert_eq!(out.gbest_fit, oracle.gbest_fit, "n={}", params.n);
+        assert_eq!(out.gbest_pos, oracle.gbest_pos);
+        assert_eq!(out.history, oracle.history);
+    }
+}
+
+#[test]
+fn queue_lock_multi_block_is_monotone_and_in_quality_band() {
+    let settings = ParallelSettings::with_workers(8);
+    let params = PsoParams::paper_120d(1024, 40);
+    let oracle = serial_sync::run(&params, &Cubic, Objective::Maximize, 9);
+    let mut e = QueueLockEngine::new(settings);
+    let out = e.run(&params, &Cubic, Objective::Maximize, 9);
+    for w in out.history.windows(2) {
+        assert!(w[1].1 >= w[0].1, "gbest worsened");
+    }
+    // Relaxed sync alters the trajectory — typically *helping* (a block
+    // sees gbest updates from earlier blocks of the same iteration, like
+    // the serial in-loop Algorithm 1) — but must not degrade the quality
+    // class: no worse than 80% of the synchronous reference.
+    assert!(
+        out.gbest_fit >= 0.8 * oracle.gbest_fit,
+        "queue-lock quality {} degraded vs oracle {}",
+        out.gbest_fit,
+        oracle.gbest_fit
+    );
+}
+
+#[test]
+fn property_equivalence_over_random_workloads() {
+    // Property test: random (n, dim, iters, seed) — queue engine equals
+    // the oracle bit-exactly on every sampled workload.
+    let settings = ParallelSettings::with_workers(4);
+    prop_check(
+        0xC0FFEE,
+        12,
+        |rng| {
+            let n = gen_usize(rng, 2, 600);
+            let dim = [1usize, 2, 3, 7, 120][gen_usize(rng, 0, 4)];
+            let iters = gen_usize(rng, 1, 25) as u64;
+            let seed = rng.next_u64();
+            (n, dim, iters, seed)
+        },
+        |&(n, dim, iters, seed)| {
+            let mut out = Vec::new();
+            if n > 2 {
+                out.push((n / 2, dim, iters, seed));
+            }
+            if iters > 1 {
+                out.push((n, dim, iters / 2, seed));
+            }
+            if dim > 1 {
+                out.push((n, 1, iters, seed));
+            }
+            out
+        },
+        |&(n, dim, iters, seed)| {
+            let params = PsoParams::paper_1d(n, iters);
+            let params = PsoParams { dim, ..params };
+            let oracle = serial_sync::run(&params, &Cubic, Objective::Maximize, seed);
+            let mut e = QueueEngine::new(settings.clone());
+            let got = e.run(&params, &Cubic, Objective::Maximize, seed);
+            if got.gbest_fit != oracle.gbest_fit || got.gbest_pos != oracle.gbest_pos {
+                return Err(format!(
+                    "queue {} vs oracle {}",
+                    got.gbest_fit, oracle.gbest_fit
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn equivalence_holds_for_minimization_too() {
+    let sphere = by_name("sphere").unwrap();
+    let params = PsoParams::for_fitness(sphere.as_ref(), 300, 5, 30, 0.5);
+    let settings = ParallelSettings::with_workers(4);
+    let oracle = serial_sync::run(&params, sphere.as_ref(), Objective::Minimize, 3);
+    for mut e in [
+        Box::new(ReductionEngine::new(settings.clone())) as Box<dyn Engine>,
+        Box::new(QueueEngine::new(settings.clone())),
+    ] {
+        let out = e.run(&params, sphere.as_ref(), Objective::Minimize, 3);
+        assert_eq!(out.gbest_fit, oracle.gbest_fit, "{}", e.name());
+        assert_eq!(out.gbest_pos, oracle.gbest_pos, "{}", e.name());
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    // The same engine must produce identical results regardless of
+    // parallelism degree (1, 2, 8 workers) — scheduling must not leak
+    // into numerics for the synchronized engines.
+    let params = PsoParams::paper_120d(500, 12);
+    let mut reference = None;
+    for workers in [1usize, 2, 8] {
+        let settings = ParallelSettings::with_workers(workers);
+        let mut e = QueueEngine::new(settings);
+        let out = e.run(&params, &Cubic, Objective::Maximize, 5);
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => {
+                assert_eq!(out.gbest_fit, r.gbest_fit, "workers={workers}");
+                assert_eq!(out.gbest_pos, r.gbest_pos, "workers={workers}");
+                assert_eq!(out.history, r.history, "workers={workers}");
+            }
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Property tests over the core invariants, across random workloads:
+//!
+//! * **bound invariant** — positions/velocities stay clamped for every
+//!   engine on every workload;
+//! * **monotone-gbest invariant** — the history never worsens;
+//! * **gbest-dominates invariant** — the final gbest is ≥ every particle's
+//!   pbest (maximize sense);
+//! * **substrate stress** — GridPool under irregular grids and nested
+//!   state, SharedQueue under concurrent churn.
+
+use cupso::config::EngineKind;
+use cupso::engine::{Engine, ParallelSettings};
+use cupso::exec::{GridPool, SharedQueue};
+use cupso::fitness::{Cubic, Objective};
+use cupso::pso::{PsoParams, SwarmState};
+use cupso::rng::PhiloxStream;
+use cupso::testsupport::{gen_usize, prop_check};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[test]
+fn engines_respect_bounds_and_monotonicity() {
+    prop_check(
+        0xBEEF,
+        10,
+        |rng| {
+            let n = gen_usize(rng, 3, 700);
+            let dim = [1usize, 2, 5, 40][gen_usize(rng, 0, 3)];
+            let iters = gen_usize(rng, 2, 40) as u64;
+            let engine_idx = gen_usize(rng, 0, 4);
+            let seed = rng.next_u64();
+            (n, dim, iters, engine_idx, seed)
+        },
+        |&(n, dim, iters, e, seed)| {
+            let mut shrunk = Vec::new();
+            if n > 3 {
+                shrunk.push((n / 2, dim, iters, e, seed));
+            }
+            if iters > 2 {
+                shrunk.push((n, dim, iters / 2, e, seed));
+            }
+            shrunk
+        },
+        |&(n, dim, iters, engine_idx, seed)| {
+            let kind = EngineKind::TABLE3[engine_idx];
+            let params = PsoParams {
+                dim,
+                ..PsoParams::paper_1d(n, iters)
+            };
+            let mut engine = cupso::engine::build(kind, 2).unwrap();
+            let out = engine.run(&params, &Cubic, Objective::Maximize, seed);
+            // Monotone history.
+            for w in out.history.windows(2) {
+                if w[1].1 < w[0].1 {
+                    return Err(format!("{kind:?}: gbest worsened {w:?}"));
+                }
+            }
+            // Bounds on the final best position.
+            for &p in &out.gbest_pos {
+                if !(params.min_pos..=params.max_pos).contains(&p) {
+                    return Err(format!("{kind:?}: gbest pos {p} out of bounds"));
+                }
+            }
+            // gbest must at least match the best initial particle.
+            let stream = PhiloxStream::new(seed);
+            let mut init = SwarmState::init(&params, &stream);
+            let (init_best, _) = init.seed_fitness(&Cubic, Objective::Maximize);
+            if out.gbest_fit < init_best {
+                return Err(format!(
+                    "{kind:?}: final gbest {} below initial best {init_best}",
+                    out.gbest_fit
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn grid_pool_covers_irregular_grids() {
+    let pool = GridPool::new(3);
+    prop_check(
+        0xFACE,
+        40,
+        |rng| gen_usize(rng, 1, 300),
+        |&b| if b > 1 { vec![b / 2] } else { vec![] },
+        |&blocks| {
+            let hits: Vec<AtomicUsize> = (0..blocks).map(|_| AtomicUsize::new(0)).collect();
+            pool.launch(blocks, |ctx| {
+                hits[ctx.block_id].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                let v = h.load(Ordering::Relaxed);
+                if v != 1 {
+                    return Err(format!("block {i} ran {v} times (blocks={blocks})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn grid_pool_rapid_relaunch_has_no_lost_or_stale_work() {
+    // Stress the generation-handoff protocol: thousands of tiny launches
+    // back to back, verifying the sum of all work (a stale-descriptor bug
+    // would double-count or segfault).
+    let pool = GridPool::new(4);
+    let total = AtomicUsize::new(0);
+    for round in 0..3000 {
+        let blocks = (round % 7) + 1;
+        pool.launch(blocks, |ctx| {
+            total.fetch_add(ctx.block_id + 1, Ordering::Relaxed);
+        });
+    }
+    let expect: usize = (0..3000).map(|r| ((r % 7) + 1) * ((r % 7) + 2) / 2).sum();
+    assert_eq!(total.load(Ordering::Relaxed), expect);
+}
+
+#[test]
+fn shared_queue_concurrent_reset_push_cycles() {
+    // The per-iteration pattern: reset → concurrent pushes → scan.
+    let pool = GridPool::new(4);
+    let q: SharedQueue<(f64, u32)> = SharedQueue::new(1024);
+    for iter in 0..200 {
+        q.reset();
+        pool.launch(8, |ctx| {
+            for k in 0..16u32 {
+                q.push((iter as f64, (ctx.block_id as u32) * 100 + k));
+            }
+        });
+        assert_eq!(q.len(), 128, "iteration {iter}");
+        let mut count = 0;
+        q.scan(|&(f, _)| {
+            assert_eq!(f, iter as f64, "stale entry survived reset");
+            count += 1;
+        });
+        assert_eq!(count, 128);
+    }
+}
+
+#[test]
+fn engines_survive_degenerate_workloads() {
+    // n=1 (single particle, single block), n=block_size boundary, dim=1
+    // iters=1 — the smallest legal configurations must not panic and must
+    // return a sane result.
+    for kind in EngineKind::TABLE3 {
+        for (n, iters) in [(1usize, 1u64), (1, 10), (256, 1), (257, 1)] {
+            let params = PsoParams::paper_1d(n, iters);
+            let mut engine = cupso::engine::build(kind, 2).unwrap();
+            let out = engine.run(&params, &Cubic, Objective::Maximize, 5);
+            assert!(
+                out.gbest_fit.is_finite(),
+                "{kind:?} n={n} iters={iters}: non-finite gbest"
+            );
+            assert_eq!(out.gbest_pos.len(), 1);
+        }
+    }
+}
+
+#[test]
+fn custom_block_size_preserves_equivalence() {
+    // Geometry must not leak into numerics: 64-, 256- and 1024-wide
+    // blocks give identical results for the synchronized engines.
+    use cupso::engine::QueueEngine;
+    let params = PsoParams::paper_1d(500, 20);
+    let mut reference = None;
+    for bs in [64usize, 256, 1024] {
+        let settings = ParallelSettings::with_workers(3).block_size(bs);
+        let mut e = QueueEngine::new(settings);
+        let out = e.run(&params, &Cubic, Objective::Maximize, 11);
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => {
+                assert_eq!(out.gbest_fit, r.gbest_fit, "bs={bs}");
+                assert_eq!(out.gbest_pos, r.gbest_pos, "bs={bs}");
+                assert_eq!(out.history, r.history, "bs={bs}");
+            }
+        }
+    }
+}
