@@ -1,0 +1,113 @@
+//! Scheduler throughput — 16 concurrent 1-D paper jobs multiplexed over
+//! ONE shared pool vs the same 16 jobs run sequentially as one-shot
+//! `Engine::run` calls (each on the shared pool too, but exclusively).
+//!
+//! What this measures: the overhead of the step-wise multiplexing layer
+//! (per-step dispatch, policy pick, telemetry) against run-to-completion
+//! execution of an identical workload. Because the engines are step-wise
+//! and every buffer is allocated in `prepare`, the expected gap is small;
+//! large gaps would indicate per-step allocation or pool thrash.
+//!
+//! Scale via CUPSO_BENCH_SCALE=ci|paper|smoke (see benchkit).
+
+use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
+use cupso::config::EngineKind;
+use cupso::engine::{self, Engine, ParallelSettings};
+use cupso::fitness::{Cubic, Objective};
+use cupso::metrics::Table;
+use cupso::pso::PsoParams;
+use cupso::scheduler::{JobScheduler, JobSpec, SchedPolicy};
+use std::sync::Arc;
+
+const JOBS: usize = 16;
+
+fn specs(iters: u64) -> Vec<JobSpec> {
+    // Mixed bit-exact engines over the paper's 1-D workload, distinct
+    // seeds so the jobs are genuinely independent tenants.
+    let kinds = [
+        EngineKind::Queue,
+        EngineKind::Reduction,
+        EngineKind::LoopUnrolling,
+        EngineKind::QueueLock,
+    ];
+    (0..JOBS)
+        .map(|j| {
+            JobSpec::new(
+                &format!("job{j:02}"),
+                kinds[j % kinds.len()],
+                PsoParams::paper_1d(1024, iters),
+                Arc::new(Cubic),
+                Objective::Maximize,
+                j as u64 + 1,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let iters = cfg.iters(2_000);
+    println!(
+        "scheduler_throughput: {JOBS} jobs x {} iters each ({}), {} reps trimmed-mean\n",
+        iters,
+        cfg.scale_note(),
+        cfg.reps
+    );
+
+    let settings = ParallelSettings::with_workers(0);
+    // Quality is only asserted at scales with enough iterations to
+    // converge; smoke scale (2 iters) is a plumbing check, not a solve.
+    let quality_bar = if iters >= 40 { 890_000.0 } else { f64::NEG_INFINITY };
+    let mut table = Table::new(
+        &format!("Scheduler throughput — {JOBS} x 1-D Cubic, {iters} iters"),
+        &["Mode", "time (s)", "jobs/s", "steps/s", "vs sequential"],
+    );
+
+    // --- sequential one-shot baseline -----------------------------------
+    let job_specs = specs(iters);
+    let seq = measure_timed(&cfg, || {
+        for spec in &job_specs {
+            let out = engine::build_with(spec.engine, settings.clone())
+                .unwrap()
+                .run(&spec.params, &Cubic, spec.objective, spec.seed);
+            assert!(out.gbest_fit > quality_bar);
+        }
+    });
+    let seq_t = seq.trimmed_mean();
+    let total_steps = (JOBS as u64 * iters) as f64;
+    table.row(&[
+        "sequential one-shot".into(),
+        format!("{seq_t:.4}"),
+        format!("{:.1}", JOBS as f64 / seq_t),
+        format!("{:.0}", total_steps / seq_t),
+        "1.00x".into(),
+    ]);
+
+    // --- interleaved via the scheduler, both policies --------------------
+    for policy in [SchedPolicy::RoundRobin, SchedPolicy::EarliestDeadlineFirst] {
+        let scheduler = JobScheduler::new(settings.clone()).policy(policy);
+        let job_specs = specs(iters);
+        let s = measure_timed(&cfg, || {
+            let outcomes = scheduler.run(&job_specs).unwrap();
+            for o in &outcomes {
+                assert!(o.output.gbest_fit > quality_bar, "{}", o.name);
+            }
+        });
+        let t = s.trimmed_mean();
+        table.row(&[
+            format!("scheduler ({policy})"),
+            format!("{t:.4}"),
+            format!("{:.1}", JOBS as f64 / t),
+            format!("{:.0}", total_steps / t),
+            format!("{:.2}x", t / seq_t),
+        ]);
+    }
+
+    println!("{}", table.to_markdown());
+    table.emit(&results_dir(), "scheduler_throughput").unwrap();
+    println!(
+        "expectation: interleaved ~1x sequential (prepare-once buffers, no\n\
+         per-step allocation); the scheduler buys multi-tenancy and early\n\
+         termination, not raw speed."
+    );
+}

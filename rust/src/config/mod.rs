@@ -6,7 +6,7 @@
 
 mod toml;
 
-pub use toml::{parse_toml, TomlValue};
+pub use toml::{parse_toml, toml_sections, TomlValue};
 
 use crate::fitness::Objective;
 use crate::rng::RngKind;
@@ -60,6 +60,12 @@ impl EngineKind {
             "xlaasync" => Some(Self::XlaAsync),
             _ => None,
         }
+    }
+
+    /// Whether this kind runs on the Plane-A thread substrate (and is
+    /// therefore schedulable by [`crate::scheduler::JobScheduler`]).
+    pub fn is_plane_a(self) -> bool {
+        !matches!(self, Self::XlaSync | Self::XlaAsync)
     }
 
     /// Table-header label (matches the paper's column names).
@@ -252,6 +258,212 @@ impl RunConfig {
     }
 }
 
+/// One job entry of a multi-job batch file (a `[jobs.<name>]` section).
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Section name (job identifier in reports).
+    pub name: String,
+    /// Fitness function name.
+    pub fitness: String,
+    /// Optimization sense; `None` = the function's convention.
+    pub objective: Option<Objective>,
+    /// Swarm size.
+    pub particles: usize,
+    /// Dimensionality.
+    pub dim: usize,
+    /// Iteration budget (`max_iter` of the run).
+    pub iters: u64,
+    /// Engine kind (Plane-A only).
+    pub engine: EngineKind,
+    /// Master seed.
+    pub seed: u64,
+    /// Early stop: target fitness.
+    pub target_fitness: Option<f64>,
+    /// Early stop: consecutive non-improving steps.
+    pub stall_window: Option<u64>,
+    /// Early stop: scheduler-step cap (below `iters`).
+    pub max_steps: Option<u64>,
+    /// EDF deadline in scheduler steps.
+    pub deadline: Option<u64>,
+}
+
+impl JobConfig {
+    fn with_defaults(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            fitness: "cubic".into(),
+            objective: None,
+            particles: 1024,
+            dim: 1,
+            iters: 1000,
+            engine: EngineKind::QueueLock,
+            seed: 42,
+            target_fitness: None,
+            stall_window: None,
+            max_steps: None,
+            deadline: None,
+        }
+    }
+
+    /// Sanity-check ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.particles == 0 {
+            bail!("job {}: particles must be > 0", self.name);
+        }
+        if self.dim == 0 {
+            bail!("job {}: dim must be > 0", self.name);
+        }
+        if self.iters == 0 {
+            bail!("job {}: iters must be > 0", self.name);
+        }
+        if crate::fitness::by_name(&self.fitness).is_none() {
+            bail!("job {}: unknown fitness '{}'", self.name, self.fitness);
+        }
+        if !self.engine.is_plane_a() {
+            bail!(
+                "job {}: engine {} is not schedulable (Plane-A only)",
+                self.name,
+                self.engine
+            );
+        }
+        if self.stall_window == Some(0) {
+            bail!("job {}: stall_window must be > 0", self.name);
+        }
+        if self.max_steps == Some(0) {
+            bail!("job {}: max_steps must be > 0", self.name);
+        }
+        Ok(())
+    }
+}
+
+/// A multi-job batch configuration: `[scheduler]` knobs plus one
+/// `[jobs.<name>]` section per job, in file order.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Worker threads for the one shared pool (0 = machine default).
+    pub workers: usize,
+    /// Stepping policy name (`round-robin` | `edf`).
+    pub policy: String,
+    /// The jobs, in file order.
+    pub jobs: Vec<JobConfig>,
+}
+
+/// Coerce a TOML integer to u64, rejecting negatives (a plain `as u64`
+/// would wrap a config typo like `particles = -1` into 1.8e19 and blow
+/// past `validate()` into an allocation abort).
+fn as_uint(value: &TomlValue, ctx: &str) -> Result<u64> {
+    let v = value.as_int(ctx)?;
+    if v < 0 {
+        bail!("{ctx}: must be non-negative, got {v}");
+    }
+    Ok(v as u64)
+}
+
+impl BatchConfig {
+    /// Load from a TOML-subset file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading batch config {}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = Self {
+            workers: 0,
+            policy: "round-robin".into(),
+            jobs: Vec::new(),
+        };
+        // Materialize a job per `[jobs.<name>]` section header first, so a
+        // section with no overrides still declares an all-defaults job.
+        for section in toml_sections(text)? {
+            if let Some(name) = section.strip_prefix("jobs.") {
+                if name.is_empty() || name.contains('.') {
+                    bail!("bad job section [{section}]: job names must be a single segment");
+                }
+                if !cfg.jobs.iter().any(|j| j.name == name) {
+                    cfg.jobs.push(JobConfig::with_defaults(name));
+                }
+            }
+        }
+        for (key, value) in doc {
+            if let Some(rest) = key.strip_prefix("jobs.") {
+                // split_once (not rsplit): a dotted section like
+                // [jobs.alpha.limits] must surface as an unknown field of
+                // job "alpha", not materialize a phantom "alpha.limits" job.
+                let Some((name, field)) = rest.split_once('.') else {
+                    bail!("batch key {key:?}: expected [jobs.<name>] sections");
+                };
+                let idx = match cfg.jobs.iter().position(|j| j.name == name) {
+                    Some(i) => i,
+                    None => {
+                        cfg.jobs.push(JobConfig::with_defaults(name));
+                        cfg.jobs.len() - 1
+                    }
+                };
+                let job = &mut cfg.jobs[idx];
+                let ctx = format!("jobs.{name}.{field}");
+                match field {
+                    "fitness" => job.fitness = value.as_str(&ctx)?.to_string(),
+                    "objective" => {
+                        let v = value.as_str(&ctx)?;
+                        job.objective = Some(
+                            Objective::parse(v).with_context(|| format!("bad objective {v}"))?,
+                        );
+                    }
+                    "particles" => job.particles = as_uint(&value, &ctx)? as usize,
+                    "dim" => job.dim = as_uint(&value, &ctx)? as usize,
+                    "iters" => job.iters = as_uint(&value, &ctx)?,
+                    "engine" => {
+                        let v = value.as_str(&ctx)?;
+                        job.engine =
+                            EngineKind::parse(v).with_context(|| format!("bad engine {v}"))?;
+                    }
+                    "seed" => job.seed = as_uint(&value, &ctx)?,
+                    "target_fitness" => job.target_fitness = Some(value.as_float(&ctx)?),
+                    "stall_window" => job.stall_window = Some(as_uint(&value, &ctx)?),
+                    "max_steps" => job.max_steps = Some(as_uint(&value, &ctx)?),
+                    "deadline" => job.deadline = Some(as_uint(&value, &ctx)?),
+                    other => bail!("jobs.{name}: unknown field {other:?}"),
+                }
+            } else {
+                // Scheduler-level knobs: flat keys or under [scheduler]
+                // only — other sections must not silently reconfigure the
+                // pool.
+                let (section, field) = match key.rsplit_once('.') {
+                    Some((s, f)) => (s, f),
+                    None => ("", key.as_str()),
+                };
+                if !(section.is_empty() || section == "scheduler") {
+                    bail!("unknown batch section {section:?} (key {key:?})");
+                }
+                match field {
+                    "workers" => cfg.workers = as_uint(&value, &key)? as usize,
+                    "policy" => cfg.policy = value.as_str(&key)?.to_string(),
+                    other => bail!("unknown batch key {other:?} (in {key:?})"),
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check the batch as a whole.
+    pub fn validate(&self) -> Result<()> {
+        if crate::scheduler::SchedPolicy::parse(&self.policy).is_none() {
+            bail!("bad policy {:?} (round-robin|edf)", self.policy);
+        }
+        if self.jobs.is_empty() {
+            bail!("batch config declares no [jobs.<name>] sections");
+        }
+        for job in &self.jobs {
+            job.validate()?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +511,94 @@ mod tests {
         assert!(
             RunConfig::from_toml_str("min_pos = 5.0\nmax_pos = -5.0").is_err()
         );
+    }
+
+    #[test]
+    fn batch_config_parses_jobs_in_order() {
+        let cfg = BatchConfig::from_toml_str(
+            r#"
+            [scheduler]
+            workers = 4
+            policy = "edf"
+
+            [jobs.alpha]
+            fitness = "cubic"
+            engine = "queue"
+            particles = 256
+            iters = 500
+            seed = 1
+            target_fitness = 899_000.0
+            deadline = 500
+
+            [jobs.beta]
+            fitness = "sphere"
+            engine = "reduction"
+            particles = 128
+            dim = 3
+            iters = 300
+            seed = 2
+            stall_window = 50
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.policy, "edf");
+        assert_eq!(cfg.jobs.len(), 2);
+        let a = &cfg.jobs[0];
+        assert_eq!(a.name, "alpha");
+        assert_eq!(a.engine, EngineKind::Queue);
+        assert_eq!(a.target_fitness, Some(899_000.0));
+        assert_eq!(a.deadline, Some(500));
+        assert_eq!(a.dim, 1, "default dim");
+        let b = &cfg.jobs[1];
+        assert_eq!(b.name, "beta");
+        assert_eq!(b.fitness, "sphere");
+        assert_eq!(b.dim, 3);
+        assert_eq!(b.stall_window, Some(50));
+        assert_eq!(b.target_fitness, None);
+    }
+
+    #[test]
+    fn batch_config_rejects_bad_input() {
+        assert!(BatchConfig::from_toml_str("workers = 2").is_err(), "no jobs");
+        assert!(BatchConfig::from_toml_str("[jobs.x]\nengine = \"xla\"").is_err());
+        assert!(BatchConfig::from_toml_str("[jobs.x]\nparticles = 0").is_err());
+        assert!(BatchConfig::from_toml_str("[jobs.x]\nnope = 1").is_err());
+        assert!(BatchConfig::from_toml_str("[jobs.x]\nfitness = \"warp\"").is_err());
+        // Negative integers must be rejected, not wrapped.
+        assert!(BatchConfig::from_toml_str("[jobs.x]\nparticles = -1").is_err());
+        assert!(BatchConfig::from_toml_str("[jobs.x]\nseed = -7").is_err());
+        // Scheduler knobs only live at top level or under [scheduler].
+        assert!(BatchConfig::from_toml_str("[metadata]\nworkers = 1\n[jobs.x]\nseed = 1").is_err());
+        // Dotted job sections are typos, not phantom jobs.
+        assert!(BatchConfig::from_toml_str("[jobs.x.limits]\nmax_steps = 100").is_err());
+        // Unknown policy is a load-time error, not a CLI-only one.
+        assert!(BatchConfig::from_toml_str("policy = \"fifo\"\n[jobs.x]\nseed = 1").is_err());
+        // A valid minimal job fills every default.
+        let cfg = BatchConfig::from_toml_str("[jobs.x]\nseed = 9").unwrap();
+        assert_eq!(cfg.jobs[0].engine, EngineKind::QueueLock);
+        assert_eq!(cfg.jobs[0].seed, 9);
+    }
+
+    #[test]
+    fn batch_config_keeps_empty_job_sections() {
+        // A bare [jobs.<name>] header with no overrides is still a job.
+        let cfg = BatchConfig::from_toml_str("[jobs.defaults]\n[jobs.tuned]\nseed = 3").unwrap();
+        assert_eq!(cfg.jobs.len(), 2);
+        assert_eq!(cfg.jobs[0].name, "defaults");
+        assert_eq!(cfg.jobs[0].seed, 42);
+        assert_eq!(cfg.jobs[1].name, "tuned");
+        assert_eq!(cfg.jobs[1].seed, 3);
+    }
+
+    #[test]
+    fn engine_kind_is_plane_a() {
+        for k in EngineKind::TABLE3 {
+            assert!(k.is_plane_a());
+        }
+        assert!(EngineKind::AsyncPersistent.is_plane_a());
+        assert!(!EngineKind::XlaSync.is_plane_a());
+        assert!(!EngineKind::XlaAsync.is_plane_a());
     }
 
     #[test]

@@ -85,6 +85,27 @@ pub fn parse_toml(text: &str) -> Result<Vec<(String, TomlValue)>> {
     Ok(out)
 }
 
+/// List the `[section]` names of the subset, in file order (including
+/// sections with no keys — `parse_toml` cannot surface those, and the
+/// batch config needs them so an empty `[jobs.x]` still declares a job).
+pub fn toml_sections(text: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            let name = name.trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            out.push(name.to_string());
+        }
+    }
+    Ok(out)
+}
+
 /// Remove a `#` comment, respecting quoted strings.
 fn strip_comment(line: &str) -> &str {
     let mut in_str = false;
@@ -154,6 +175,13 @@ mod tests {
         let doc = parse_toml("[pso]\nparticles = 8\n[run]\nseed = 1").unwrap();
         assert_eq!(doc[0].0, "pso.particles");
         assert_eq!(doc[1].0, "run.seed");
+    }
+
+    #[test]
+    fn sections_listed_in_order_including_empty() {
+        let text = "[a]\nk = 1\n[b.c]\n# comment only\n[d]\n";
+        assert_eq!(toml_sections(text).unwrap(), vec!["a", "b.c", "d"]);
+        assert!(toml_sections("[unclosed\n").is_err());
     }
 
     #[test]

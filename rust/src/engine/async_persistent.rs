@@ -15,9 +15,17 @@
 //! asynchrony of [9]); still monotone, still bound-respecting, and
 //! empirically the same quality class (tests below + the property suite).
 //! Launch overhead drops from `max_iter` dispatches to **one**.
+//!
+//! **Step-wise caveat:** a persistent kernel is inherently one-shot, so
+//! [`Engine::prepare`] cannot preserve the barrier-free semantics — a
+//! `step()` boundary *is* a grid-wide barrier. [`AsyncStepRun`] therefore
+//! steps with Queue-Lock-style per-iteration launches (per-block gbest
+//! snapshots, lock-based publication, no queue). [`Engine::run`] keeps
+//! the true single-launch persistent kernel, overriding the default
+//! prepare/step loop.
 
 use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSwarm, StepScratch};
-use super::Engine;
+use super::{Engine, Run, StepReport};
 use crate::fitness::{Fitness, Objective};
 use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
 use crate::rng::PhiloxStream;
@@ -38,6 +46,41 @@ impl AsyncEngine {
 impl Engine for AsyncEngine {
     fn name(&self) -> &'static str {
         "Async Persistent"
+    }
+
+    fn prepare<'a>(
+        &mut self,
+        params: &PsoParams,
+        fitness: &'a dyn Fitness,
+        objective: Objective,
+        seed: u64,
+    ) -> Box<dyn Run + 'a> {
+        let stream = PhiloxStream::new(seed);
+        let mut init = SwarmState::init(params, &stream);
+        let (fit0, gi) = init.seed_fitness(fitness, objective);
+        let gbest = GlobalBest::new(fit0, &init.position_of(gi));
+        let state = SharedSwarm::new(init);
+
+        let blocks = self.settings.blocks_for(params.n);
+        let step_scratch =
+            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
+        let snapshots = PerBlock::from_fn(blocks, |_| vec![0.0; params.dim]);
+
+        Box::new(AsyncStepRun {
+            params: params.clone(),
+            fitness,
+            objective,
+            settings: self.settings.clone(),
+            stream,
+            state,
+            gbest,
+            snapshots,
+            step_scratch,
+            pbest_improvements: AtomicU64::new(0),
+            stride: history_stride(params.max_iter),
+            history: Vec::new(),
+            iter: 0,
+        })
     }
 
     fn run(
@@ -108,6 +151,128 @@ impl Engine for AsyncEngine {
     }
 }
 
+/// Step-wise adaptation of the async engine: one launch per step with
+/// per-block gbest snapshots and lock-based publication (see the module
+/// docs for why the persistent kernel itself cannot be stepped).
+pub struct AsyncStepRun<'a> {
+    params: PsoParams,
+    fitness: &'a dyn Fitness,
+    objective: Objective,
+    settings: ParallelSettings,
+    stream: PhiloxStream,
+    state: SharedSwarm,
+    gbest: GlobalBest,
+    snapshots: PerBlock<Vec<f64>>,
+    step_scratch: PerBlock<StepScratch>,
+    pbest_improvements: AtomicU64,
+    stride: u64,
+    history: Vec<(u64, f64)>,
+    iter: u64,
+}
+
+impl Run for AsyncStepRun<'_> {
+    fn iters_done(&self) -> u64 {
+        self.iter
+    }
+
+    fn max_iter(&self) -> u64 {
+        self.params.max_iter
+    }
+
+    fn gbest_fit(&self) -> f64 {
+        self.gbest.fit_relaxed()
+    }
+
+    fn gbest_pos(&self) -> Vec<f64> {
+        self.gbest.pos_vec()
+    }
+
+    fn step(&mut self) -> StepReport {
+        if self.iter >= self.params.max_iter {
+            return StepReport {
+                iter: self.iter,
+                gbest_fit: self.gbest.fit_relaxed(),
+                gbest_pos: None,
+                improved: false,
+                done: true,
+            };
+        }
+        let iter = self.iter;
+        let updates_before = self.gbest.update_count();
+        {
+            let settings = &self.settings;
+            let params = &self.params;
+            let fitness = self.fitness;
+            let objective = self.objective;
+            let stream = &self.stream;
+            let state = &self.state;
+            let step_scratch = &self.step_scratch;
+            let snapshots = &self.snapshots;
+            let gbest = &self.gbest;
+            let pbest_improvements = &self.pbest_improvements;
+            let blocks = settings.blocks_for(params.n);
+            settings.pool.launch(blocks, |ctx| {
+                let b = ctx.block_id;
+                let (lo, hi) = settings.block_range(b, params.n);
+                // SAFETY: per-block disjoint state/scratch (see common.rs).
+                let st = unsafe { state.get() };
+                let ss = unsafe { step_scratch.get(b) };
+                let frozen = unsafe { snapshots.get(b) };
+                gbest.load_pos(frozen);
+                let (best, best_i) = step_block(
+                    st, lo, hi, frozen, params, fitness, objective, stream, iter, ss,
+                );
+                if best_i != usize::MAX && objective.better(best, gbest.fit_relaxed()) {
+                    gbest.update_locked(objective, best, || st.position_of(best_i));
+                }
+                let improved = ss.improved[..hi - lo].iter().filter(|&&x| x).count() as u64;
+                pbest_improvements.fetch_add(improved, Ordering::Relaxed);
+            });
+        }
+        self.iter += 1;
+        if iter % self.stride == 0 {
+            self.history.push((iter, self.gbest.fit_relaxed()));
+        }
+        let improved = self.gbest.update_count() > updates_before;
+        StepReport {
+            iter: self.iter,
+            gbest_fit: self.gbest.fit_relaxed(),
+            gbest_pos: improved.then(|| self.gbest.pos_vec()),
+            improved,
+            done: self.iter >= self.params.max_iter,
+        }
+    }
+
+    fn finish(self: Box<Self>) -> RunOutput {
+        let this = *self;
+        let AsyncStepRun {
+            params,
+            state,
+            gbest,
+            pbest_improvements,
+            mut history,
+            iter,
+            ..
+        } = this;
+        history.push((iter, gbest.fit_relaxed()));
+        let swarm = state.into_inner();
+        debug_assert_eq!(swarm.check_bounds(&params), Ok(()));
+        let counters = Counters {
+            particle_updates: params.n as u64 * iter,
+            gbest_updates: gbest.update_count(),
+            pbest_improvements: pbest_improvements.load(Ordering::Relaxed),
+            ..Default::default()
+        };
+        RunOutput {
+            gbest_fit: gbest.fit_relaxed(),
+            gbest_pos: gbest.pos_vec(),
+            iters: iter,
+            history,
+            counters,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +310,20 @@ mod tests {
         let oracle = crate::pso::serial_sync::run(&params, &Cubic, Objective::Maximize, 7);
         let mut e = AsyncEngine::new(settings);
         let out = e.run(&params, &Cubic, Objective::Maximize, 7);
+        assert_eq!(out.gbest_fit, oracle.gbest_fit);
+        assert_eq!(out.gbest_pos, oracle.gbest_pos);
+    }
+
+    #[test]
+    fn stepwise_single_block_matches_oracle() {
+        // The step-wise adaptation barriers every iteration; with a single
+        // block it is bit-exact against the synchronous reference.
+        let params = PsoParams::paper_1d(200, 50);
+        let oracle = crate::pso::serial_sync::run(&params, &Cubic, Objective::Maximize, 7);
+        let mut e = AsyncEngine::new(ParallelSettings::with_workers(4));
+        let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 7);
+        while !run.step().done {}
+        let out = run.finish();
         assert_eq!(out.gbest_fit, oracle.gbest_fit);
         assert_eq!(out.gbest_pos, oracle.gbest_pos);
     }

@@ -19,6 +19,19 @@
 //! can deviate when several blocks improve concurrently (it remains
 //! monotone and converges to the same quality; with a single block it is
 //! bit-exact too).
+//!
+//! ## Execution model: prepare / step / finish
+//!
+//! Every engine is a **step-wise solver**: [`Engine::prepare`] allocates
+//! the run's entire working set once (swarm state, aux arrays, queues,
+//! scratch) and returns a [`Run`] handle; [`Run::step`] advances exactly
+//! one PSO iteration and reports progress; [`Run::finish`] consumes the
+//! handle into the final [`RunOutput`]. [`Engine::run`] is a convenience
+//! loop over that API, so one-shot callers are untouched while the
+//! [`crate::scheduler`] can multiplex many concurrent runs over one
+//! shared [`crate::exec::GridPool`]. Because a `Run` owns all of its
+//! mutable state, interleaving steps of different runs cannot perturb
+//! any run's trajectory (see `rust/tests/scheduler_determinism.rs`).
 
 mod async_persistent;
 mod common;
@@ -36,19 +49,81 @@ use crate::config::EngineKind;
 use crate::fitness::{Fitness, Objective};
 use crate::pso::{PsoParams, RunOutput};
 
+/// Progress report for one [`Run::step`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepReport {
+    /// Iterations completed so far (this step included).
+    pub iter: u64,
+    /// Global-best fitness after this step.
+    pub gbest_fit: f64,
+    /// Global-best position — populated when this step improved it; use
+    /// [`Run::gbest_pos`] to read it at any other time.
+    pub gbest_pos: Option<Vec<f64>>,
+    /// Whether this step improved the global best.
+    pub improved: bool,
+    /// Whether the run's iteration budget (`params.max_iter`) is spent.
+    pub done: bool,
+}
+
+/// A prepared, resumable PSO run: all per-run buffers are allocated, the
+/// swarm is seeded, and each [`step`](Run::step) advances one iteration.
+///
+/// Stepping a finished run is a no-op that reports `done = true`, so
+/// drivers may poll freely. Dropping a `Run` abandons the trajectory;
+/// [`finish`](Run::finish) yields the same [`RunOutput`] the one-shot
+/// [`Engine::run`] would have produced after the executed steps.
+pub trait Run: Send {
+    /// Iterations completed so far.
+    fn iters_done(&self) -> u64;
+
+    /// The run's iteration budget (`params.max_iter`).
+    fn max_iter(&self) -> u64;
+
+    /// Current global-best fitness.
+    fn gbest_fit(&self) -> f64;
+
+    /// Current global-best position (length = dim).
+    fn gbest_pos(&self) -> Vec<f64>;
+
+    /// Advance one PSO iteration (or report `done` if the budget is spent).
+    fn step(&mut self) -> StepReport;
+
+    /// Consume the run into its final output (valid after any number of
+    /// steps — early termination simply reports fewer `iters`).
+    fn finish(self: Box<Self>) -> RunOutput;
+}
+
 /// A PSO solver implementation (one of the paper's five columns).
 pub trait Engine: Send {
     /// Column label (matches the paper's tables).
     fn name(&self) -> &'static str;
 
+    /// Allocate and seed a run: swarm init + fitness seeding + every
+    /// per-run buffer, so the steady-state [`Run::step`] allocates
+    /// nothing beyond its improvement reports.
+    fn prepare<'a>(
+        &mut self,
+        params: &PsoParams,
+        fitness: &'a dyn Fitness,
+        objective: Objective,
+        seed: u64,
+    ) -> Box<dyn Run + 'a>;
+
     /// Solve: run `params.max_iter` iterations and return the best datum.
+    ///
+    /// Default: drive [`Engine::prepare`] / [`Run::step`] to exhaustion.
+    /// Bit-identical to stepping manually.
     fn run(
         &mut self,
         params: &PsoParams,
         fitness: &dyn Fitness,
         objective: Objective,
         seed: u64,
-    ) -> RunOutput;
+    ) -> RunOutput {
+        let mut run = self.prepare(params, fitness, objective, seed);
+        while !run.step().done {}
+        run.finish()
+    }
 }
 
 /// The serial Algorithm 1 as an [`Engine`] (the "CPU" column).
@@ -59,21 +134,31 @@ impl Engine for SerialEngine {
         "CPU"
     }
 
-    fn run(
+    fn prepare<'a>(
         &mut self,
         params: &PsoParams,
-        fitness: &dyn Fitness,
+        fitness: &'a dyn Fitness,
         objective: Objective,
         seed: u64,
-    ) -> RunOutput {
-        crate::pso::serial::run(params, fitness, objective, seed)
+    ) -> Box<dyn Run + 'a> {
+        Box::new(crate::pso::serial::SerialRun::new(
+            params, fitness, objective, seed,
+        ))
     }
 }
 
-/// Construct an engine by kind (Plane-A kinds only; the XLA kinds live in
-/// [`crate::coordinator`]).
+/// Construct an engine by kind on its own pool (Plane-A kinds only; the
+/// XLA kinds live in [`crate::coordinator`]).
 pub fn build(kind: EngineKind, workers: usize) -> Option<Box<dyn Engine>> {
-    let settings = ParallelSettings::with_workers(workers);
+    build_with(kind, ParallelSettings::with_workers(workers))
+}
+
+/// Construct an engine by kind on the given settings — the entry point
+/// the [`crate::scheduler`] uses so every job shares one [`GridPool`]
+/// (see [`ParallelSettings::with_pool`]).
+///
+/// [`GridPool`]: crate::exec::GridPool
+pub fn build_with(kind: EngineKind, settings: ParallelSettings) -> Option<Box<dyn Engine>> {
     match kind {
         EngineKind::SerialCpu => Some(Box::new(SerialEngine)),
         EngineKind::Reduction => Some(Box::new(ReductionEngine::new(settings))),
@@ -112,5 +197,52 @@ mod tests {
                 out.gbest_fit
             );
         }
+    }
+
+    #[test]
+    fn stepwise_reports_are_consistent() {
+        let params = PsoParams::paper_1d(64, 20);
+        for kind in EngineKind::TABLE3 {
+            let mut e = build(kind, 2).unwrap();
+            let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 3);
+            assert_eq!(run.iters_done(), 0);
+            assert_eq!(run.max_iter(), 20);
+            let mut last_fit = run.gbest_fit();
+            let mut steps = 0u64;
+            loop {
+                let rep = run.step();
+                steps += 1;
+                assert_eq!(rep.iter, steps, "{kind:?}");
+                assert!(rep.gbest_fit >= last_fit, "{kind:?}: gbest worsened");
+                assert_eq!(rep.improved, rep.gbest_pos.is_some(), "{kind:?}");
+                last_fit = rep.gbest_fit;
+                if rep.done {
+                    break;
+                }
+            }
+            assert_eq!(steps, 20);
+            // Stepping past the budget is a no-op.
+            let rep = run.step();
+            assert!(rep.done);
+            assert_eq!(rep.iter, 20);
+            assert!(!rep.improved);
+            let out = run.finish();
+            assert_eq!(out.iters, 20);
+            assert_eq!(out.gbest_fit, last_fit);
+        }
+    }
+
+    #[test]
+    fn early_finish_reports_partial_iters() {
+        let params = PsoParams::paper_1d(64, 50);
+        let mut e = build(EngineKind::Queue, 2).unwrap();
+        let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 9);
+        for _ in 0..7 {
+            run.step();
+        }
+        let out = run.finish();
+        assert_eq!(out.iters, 7);
+        assert_eq!(out.history.last().unwrap().0, 7);
+        assert_eq!(out.counters.particle_updates, 64 * 7);
     }
 }

@@ -13,9 +13,12 @@
 //! Versus the Reduction engine the per-iteration cost drops from
 //! `O(bs)` copies + `O(log bs)` reduction passes to a *predicate per
 //! particle* — the queue is only touched on improvement.
+//!
+//! Step-wise: [`Engine::prepare`] allocates the queues/aux/scratch once
+//! ([`QueueRun`]); each [`Run::step`] is the two launches above.
 
 use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSwarm, StepScratch};
-use super::Engine;
+use super::{Engine, Run, StepReport};
 use crate::exec::SharedQueue;
 use crate::fitness::{Fitness, Objective};
 use crate::pso::serial_sync::better_with_tie;
@@ -39,13 +42,13 @@ impl Engine for QueueEngine {
         "Queue"
     }
 
-    fn run(
+    fn prepare<'a>(
         &mut self,
         params: &PsoParams,
-        fitness: &dyn Fitness,
+        fitness: &'a dyn Fitness,
         objective: Objective,
         seed: u64,
-    ) -> RunOutput {
+    ) -> Box<dyn Run + 'a> {
         let stream = PhiloxStream::new(seed);
         let mut init = SwarmState::init(params, &stream);
         let (fit0, gi) = init.seed_fitness(fitness, objective);
@@ -62,25 +65,100 @@ impl Engine for QueueEngine {
         let step_scratch =
             PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
 
-        let stride = history_stride(params.max_iter);
-        let mut history = Vec::new();
-        let mut frozen = gbest.pos_vec();
+        let frozen = gbest.pos_vec();
+        Box::new(QueueRun {
+            params: params.clone(),
+            fitness,
+            objective,
+            settings: self.settings.clone(),
+            stream,
+            state,
+            gbest,
+            queues,
+            aux,
+            step_scratch,
+            frozen,
+            stride: history_stride(params.max_iter),
+            history: Vec::new(),
+            iter: 0,
+        })
+    }
+}
 
-        for iter in 0..params.max_iter {
-            gbest.load_pos(&mut frozen);
-            let frozen_ref = &frozen;
+/// A prepared Queue run: swarm, per-block queues, aux arrays and scratch
+/// allocated once, reused every step.
+pub struct QueueRun<'a> {
+    params: PsoParams,
+    fitness: &'a dyn Fitness,
+    objective: Objective,
+    settings: ParallelSettings,
+    stream: PhiloxStream,
+    state: SharedSwarm,
+    gbest: GlobalBest,
+    queues: Vec<SharedQueue<(f64, u32)>>,
+    aux: PerBlock<(f64, u32)>,
+    step_scratch: PerBlock<StepScratch>,
+    frozen: Vec<f64>,
+    stride: u64,
+    history: Vec<(u64, f64)>,
+    iter: u64,
+}
+
+impl Run for QueueRun<'_> {
+    fn iters_done(&self) -> u64 {
+        self.iter
+    }
+
+    fn max_iter(&self) -> u64 {
+        self.params.max_iter
+    }
+
+    fn gbest_fit(&self) -> f64 {
+        self.gbest.fit_relaxed()
+    }
+
+    fn gbest_pos(&self) -> Vec<f64> {
+        self.gbest.pos_vec()
+    }
+
+    fn step(&mut self) -> StepReport {
+        if self.iter >= self.params.max_iter {
+            return StepReport {
+                iter: self.iter,
+                gbest_fit: self.gbest.fit_relaxed(),
+                gbest_pos: None,
+                improved: false,
+                done: true,
+            };
+        }
+        let iter = self.iter;
+        let updates_before = self.gbest.update_count();
+        self.gbest.load_pos(&mut self.frozen);
+        {
+            let settings = &self.settings;
+            let params = &self.params;
+            let fitness = self.fitness;
+            let objective = self.objective;
+            let stream = &self.stream;
+            let state = &self.state;
+            let step_scratch = &self.step_scratch;
+            let queues = &self.queues;
+            let aux = &self.aux;
+            let gbest = &self.gbest;
+            let frozen_ref = &self.frozen;
             let threshold = gbest.fit_relaxed();
+            let blocks = settings.blocks_for(params.n);
             // ---- 1st kernel: step + conditional queue + thread-0 scan ----
-            self.settings.pool.launch(blocks, |ctx| {
+            settings.pool.launch(blocks, |ctx| {
                 let b = ctx.block_id;
-                let (lo, hi) = self.settings.block_range(b, params.n);
+                let (lo, hi) = settings.block_range(b, params.n);
                 let q = &queues[b];
                 q.reset();
                 // SAFETY: this block only touches particles [lo, hi).
                 let st = unsafe { state.get() };
                 let ss = unsafe { step_scratch.get(b) };
                 step_block(
-                    st, lo, hi, frozen_ref, params, fitness, objective, &stream, iter, ss,
+                    st, lo, hi, frozen_ref, params, fitness, objective, stream, iter, ss,
                 );
                 // Algorithm 2 lines 1–5: conditional atomic append.
                 for k in 0..(hi - lo) {
@@ -100,9 +178,9 @@ impl Engine for QueueEngine {
                 unsafe { *aux.get(b) = best };
             });
             // ---- 2nd kernel: single block scans aux -> global best ----
-            self.settings.pool.launch(1, |_| {
+            settings.pool.launch(1, |_| {
                 let mut best = (objective.worst(), u32::MAX);
-                for b in 0..blocks {
+                for b in 0..aux.len() {
                     // SAFETY: 1st kernel joined; exclusive read.
                     let (f, i) = unsafe { *aux.get(b) };
                     if better_with_tie(objective, f, i as usize, best.0, best.1 as usize) {
@@ -114,14 +192,37 @@ impl Engine for QueueEngine {
                     gbest.update_exclusive(objective, best.0, &st.position_of(best.1 as usize));
                 }
             });
-            if iter % stride == 0 {
-                history.push((iter, gbest.fit_relaxed()));
-            }
         }
-        history.push((params.max_iter, gbest.fit_relaxed()));
+        self.iter += 1;
+        if iter % self.stride == 0 {
+            self.history.push((iter, self.gbest.fit_relaxed()));
+        }
+        let improved = self.gbest.update_count() > updates_before;
+        StepReport {
+            iter: self.iter,
+            gbest_fit: self.gbest.fit_relaxed(),
+            gbest_pos: improved.then(|| self.gbest.pos_vec()),
+            improved,
+            done: self.iter >= self.params.max_iter,
+        }
+    }
 
+    fn finish(self: Box<Self>) -> RunOutput {
+        let this = *self;
+        let QueueRun {
+            params,
+            state,
+            gbest,
+            queues,
+            mut history,
+            iter,
+            ..
+        } = this;
+        history.push((iter, gbest.fit_relaxed()));
+        let swarm = state.into_inner();
+        debug_assert_eq!(swarm.check_bounds(&params), Ok(()));
         let counters = Counters {
-            particle_updates: params.n as u64 * params.max_iter,
+            particle_updates: params.n as u64 * iter,
             queue_pushes: queues.iter().map(|q| q.total_pushes()).sum(),
             gbest_updates: gbest.update_count(),
             ..Default::default()
@@ -129,7 +230,7 @@ impl Engine for QueueEngine {
         RunOutput {
             gbest_fit: gbest.fit_relaxed(),
             gbest_pos: gbest.pos_vec(),
-            iters: params.max_iter,
+            iters: iter,
             history,
             counters,
         }
@@ -163,5 +264,31 @@ mod tests {
         for w in out.history.windows(2) {
             assert!(w[1].1 >= w[0].1);
         }
+    }
+
+    #[test]
+    fn stepwise_reuses_buffers_across_steps() {
+        // Two interleaved runs on the same engine must not share state:
+        // prepare twice, step alternately, outputs equal two solo runs.
+        let params = PsoParams::paper_1d(100, 30);
+        let settings = ParallelSettings::with_workers(2);
+        let solo_a = QueueEngine::new(settings.clone()).run(&params, &Cubic, Objective::Maximize, 1);
+        let solo_b = QueueEngine::new(settings.clone()).run(&params, &Cubic, Objective::Maximize, 2);
+        let mut engine = QueueEngine::new(settings);
+        let mut ra = engine.prepare(&params, &Cubic, Objective::Maximize, 1);
+        let mut rb = engine.prepare(&params, &Cubic, Objective::Maximize, 2);
+        loop {
+            let da = ra.step().done;
+            let db = rb.step().done;
+            if da && db {
+                break;
+            }
+        }
+        let a = ra.finish();
+        let b = rb.finish();
+        assert_eq!(a.gbest_fit, solo_a.gbest_fit);
+        assert_eq!(a.history, solo_a.history);
+        assert_eq!(b.gbest_fit, solo_b.gbest_fit);
+        assert_eq!(b.history, solo_b.history);
     }
 }

@@ -10,9 +10,12 @@
 //! the aux-array traffic *and* the inter-kernel barrier; blocks of the
 //! same iteration run unsynchronized against each other, which is the
 //! paper's documented relaxation ("no bad side effect", best for 1-D).
+//!
+//! Step-wise: [`Engine::prepare`] allocates queues, snapshots and scratch
+//! once ([`QueueLockRun`]); each [`Run::step`] is the single fused launch.
 
-use super::common::{step_block, GlobalBest, ParallelSettings, SharedSwarm, StepScratch};
-use super::Engine;
+use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSwarm, StepScratch};
+use super::{Engine, Run, StepReport};
 use crate::exec::SharedQueue;
 use crate::fitness::{Fitness, Objective};
 use crate::pso::serial_sync::better_with_tie;
@@ -36,13 +39,13 @@ impl Engine for QueueLockEngine {
         "Queue Lock"
     }
 
-    fn run(
+    fn prepare<'a>(
         &mut self,
         params: &PsoParams,
-        fitness: &dyn Fitness,
+        fitness: &'a dyn Fitness,
         objective: Objective,
         seed: u64,
-    ) -> RunOutput {
+    ) -> Box<dyn Run + 'a> {
         let stream = PhiloxStream::new(seed);
         let mut init = SwarmState::init(params, &stream);
         let (fit0, gi) = init.seed_fitness(fitness, objective);
@@ -53,22 +56,93 @@ impl Engine for QueueLockEngine {
         let queues: Vec<SharedQueue<(f64, u32)>> = (0..blocks)
             .map(|_| SharedQueue::new(self.settings.block_size))
             .collect();
-
-        let stride = history_stride(params.max_iter);
-        let mut history = Vec::new();
         // Per-block gbest_pos snapshot buffer: in the fused kernel the
         // global position can be updated by another block mid-iteration
         // (the paper's benign race); each block snapshots at its start.
-        let snapshots = super::common::PerBlock::from_fn(blocks, |_| vec![0.0; params.dim]);
-        let step_scratch = super::common::PerBlock::from_fn(blocks, |_| {
-            StepScratch::new(self.settings.block_size)
-        });
+        let snapshots = PerBlock::from_fn(blocks, |_| vec![0.0; params.dim]);
+        let step_scratch =
+            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
 
-        for iter in 0..params.max_iter {
+        Box::new(QueueLockRun {
+            params: params.clone(),
+            fitness,
+            objective,
+            settings: self.settings.clone(),
+            stream,
+            state,
+            gbest,
+            queues,
+            snapshots,
+            step_scratch,
+            stride: history_stride(params.max_iter),
+            history: Vec::new(),
+            iter: 0,
+        })
+    }
+}
+
+/// A prepared Queue-Lock run (fused kernel, per-block snapshots).
+pub struct QueueLockRun<'a> {
+    params: PsoParams,
+    fitness: &'a dyn Fitness,
+    objective: Objective,
+    settings: ParallelSettings,
+    stream: PhiloxStream,
+    state: SharedSwarm,
+    gbest: GlobalBest,
+    queues: Vec<SharedQueue<(f64, u32)>>,
+    snapshots: PerBlock<Vec<f64>>,
+    step_scratch: PerBlock<StepScratch>,
+    stride: u64,
+    history: Vec<(u64, f64)>,
+    iter: u64,
+}
+
+impl Run for QueueLockRun<'_> {
+    fn iters_done(&self) -> u64 {
+        self.iter
+    }
+
+    fn max_iter(&self) -> u64 {
+        self.params.max_iter
+    }
+
+    fn gbest_fit(&self) -> f64 {
+        self.gbest.fit_relaxed()
+    }
+
+    fn gbest_pos(&self) -> Vec<f64> {
+        self.gbest.pos_vec()
+    }
+
+    fn step(&mut self) -> StepReport {
+        if self.iter >= self.params.max_iter {
+            return StepReport {
+                iter: self.iter,
+                gbest_fit: self.gbest.fit_relaxed(),
+                gbest_pos: None,
+                improved: false,
+                done: true,
+            };
+        }
+        let iter = self.iter;
+        let updates_before = self.gbest.update_count();
+        {
+            let settings = &self.settings;
+            let params = &self.params;
+            let fitness = self.fitness;
+            let objective = self.objective;
+            let stream = &self.stream;
+            let state = &self.state;
+            let step_scratch = &self.step_scratch;
+            let queues = &self.queues;
+            let snapshots = &self.snapshots;
+            let gbest = &self.gbest;
+            let blocks = settings.blocks_for(params.n);
             // ---- single fused kernel ----
-            self.settings.pool.launch(blocks, |ctx| {
+            settings.pool.launch(blocks, |ctx| {
                 let b = ctx.block_id;
-                let (lo, hi) = self.settings.block_range(b, params.n);
+                let (lo, hi) = settings.block_range(b, params.n);
                 let q = &queues[b];
                 q.reset();
                 // SAFETY: snapshot buffer b belongs to this block.
@@ -79,7 +153,7 @@ impl Engine for QueueLockEngine {
                 let st = unsafe { state.get() };
                 let ss = unsafe { step_scratch.get(b) };
                 step_block(
-                    st, lo, hi, frozen, params, fitness, objective, &stream, iter, ss,
+                    st, lo, hi, frozen, params, fitness, objective, stream, iter, ss,
                 );
                 for k in 0..(hi - lo) {
                     let fit = ss.fit[k];
@@ -102,14 +176,37 @@ impl Engine for QueueLockEngine {
                     });
                 }
             });
-            if iter % stride == 0 {
-                history.push((iter, gbest.fit_relaxed()));
-            }
         }
-        history.push((params.max_iter, gbest.fit_relaxed()));
+        self.iter += 1;
+        if iter % self.stride == 0 {
+            self.history.push((iter, self.gbest.fit_relaxed()));
+        }
+        let improved = self.gbest.update_count() > updates_before;
+        StepReport {
+            iter: self.iter,
+            gbest_fit: self.gbest.fit_relaxed(),
+            gbest_pos: improved.then(|| self.gbest.pos_vec()),
+            improved,
+            done: self.iter >= self.params.max_iter,
+        }
+    }
 
+    fn finish(self: Box<Self>) -> RunOutput {
+        let this = *self;
+        let QueueLockRun {
+            params,
+            state,
+            gbest,
+            queues,
+            mut history,
+            iter,
+            ..
+        } = this;
+        history.push((iter, gbest.fit_relaxed()));
+        let swarm = state.into_inner();
+        debug_assert_eq!(swarm.check_bounds(&params), Ok(()));
         let counters = Counters {
-            particle_updates: params.n as u64 * params.max_iter,
+            particle_updates: params.n as u64 * iter,
             queue_pushes: queues.iter().map(|q| q.total_pushes()).sum(),
             gbest_updates: gbest.update_count(),
             ..Default::default()
@@ -117,7 +214,7 @@ impl Engine for QueueLockEngine {
         RunOutput {
             gbest_fit: gbest.fit_relaxed(),
             gbest_pos: gbest.pos_vec(),
-            iters: params.max_iter,
+            iters: iter,
             history,
             counters,
         }

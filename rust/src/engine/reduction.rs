@@ -15,9 +15,12 @@
 //! (`s ≤ 32`) with straight-line code — the warp-unrolling optimization of
 //! the Harris notes, which removes loop/branch overhead but none of the
 //! memory traffic or the inter-kernel synchronization.
+//!
+//! Both variants are step-wise ([`Engine::prepare`] → [`ReductionRun`]):
+//! every buffer is allocated once in `prepare` and reused across steps.
 
 use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSwarm, StepScratch};
-use super::Engine;
+use super::{Engine, Run, StepReport};
 use crate::fitness::{Fitness, Objective};
 use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
 use crate::rng::PhiloxStream;
@@ -122,13 +125,13 @@ impl Engine for ReductionEngine {
         }
     }
 
-    fn run(
+    fn prepare<'a>(
         &mut self,
         params: &PsoParams,
-        fitness: &dyn Fitness,
+        fitness: &'a dyn Fitness,
         objective: Objective,
         seed: u64,
-    ) -> RunOutput {
+    ) -> Box<dyn Run + 'a> {
         let stream = PhiloxStream::new(seed);
         let mut init = SwarmState::init(params, &stream);
         let (fit0, gi) = init.seed_fitness(fitness, objective);
@@ -151,23 +154,103 @@ impl Engine for ReductionEngine {
             idxs: vec![u32::MAX; aux_pad],
         });
 
-        let stride = history_stride(params.max_iter);
-        let mut history = Vec::new();
-        let mut frozen = gbest.pos_vec();
-        let unrolled = self.unrolled;
+        let frozen = gbest.pos_vec();
+        Box::new(ReductionRun {
+            params: params.clone(),
+            fitness,
+            objective,
+            settings: self.settings.clone(),
+            unrolled: self.unrolled,
+            stream,
+            state,
+            gbest,
+            scratch,
+            step_scratch,
+            aux,
+            k2_scratch,
+            frozen,
+            stride: history_stride(params.max_iter),
+            history: Vec::new(),
+            iter: 0,
+        })
+    }
+}
 
-        for iter in 0..params.max_iter {
-            gbest.load_pos(&mut frozen);
-            let frozen_ref = &frozen;
+/// A prepared Reduction / Loop-Unrolling run: the swarm, both kernels'
+/// scratch, and the aux arrays live here for the run's whole lifetime.
+pub struct ReductionRun<'a> {
+    params: PsoParams,
+    fitness: &'a dyn Fitness,
+    objective: Objective,
+    settings: ParallelSettings,
+    unrolled: bool,
+    stream: PhiloxStream,
+    state: SharedSwarm,
+    gbest: GlobalBest,
+    scratch: PerBlock<Scratch>,
+    step_scratch: PerBlock<StepScratch>,
+    aux: PerBlock<(f64, u32)>,
+    k2_scratch: PerBlock<Scratch>,
+    frozen: Vec<f64>,
+    stride: u64,
+    history: Vec<(u64, f64)>,
+    iter: u64,
+}
+
+impl Run for ReductionRun<'_> {
+    fn iters_done(&self) -> u64 {
+        self.iter
+    }
+
+    fn max_iter(&self) -> u64 {
+        self.params.max_iter
+    }
+
+    fn gbest_fit(&self) -> f64 {
+        self.gbest.fit_relaxed()
+    }
+
+    fn gbest_pos(&self) -> Vec<f64> {
+        self.gbest.pos_vec()
+    }
+
+    fn step(&mut self) -> StepReport {
+        if self.iter >= self.params.max_iter {
+            return StepReport {
+                iter: self.iter,
+                gbest_fit: self.gbest.fit_relaxed(),
+                gbest_pos: None,
+                improved: false,
+                done: true,
+            };
+        }
+        let iter = self.iter;
+        let updates_before = self.gbest.update_count();
+        self.gbest.load_pos(&mut self.frozen);
+        {
+            let settings = &self.settings;
+            let params = &self.params;
+            let fitness = self.fitness;
+            let objective = self.objective;
+            let unrolled = self.unrolled;
+            let stream = &self.stream;
+            let state = &self.state;
+            let step_scratch = &self.step_scratch;
+            let scratch = &self.scratch;
+            let aux = &self.aux;
+            let k2_scratch = &self.k2_scratch;
+            let gbest = &self.gbest;
+            let frozen_ref = &self.frozen;
+            let blocks = settings.blocks_for(params.n);
             // ---- 1st kernel: step + intra-block reduction -> aux ----
-            self.settings.pool.launch(blocks, |ctx| {
+            settings.pool.launch(blocks, |ctx| {
                 let b = ctx.block_id;
-                let (lo, hi) = self.settings.block_range(b, params.n);
+                let (lo, hi) = settings.block_range(b, params.n);
                 // SAFETY: this block only touches particles [lo, hi).
                 let st = unsafe { state.get() };
                 let ss = unsafe { step_scratch.get(b) };
                 step_block(
-                    st, lo, hi, frozen_ref, params, fitness, objective, &stream, iter, ss,
+                    st, lo, hi, frozen_ref, params, fitness, objective, stream, iter, ss,
                 );
                 // Copy fits to shared-memory scratch and tree-reduce —
                 // the full O(bs) traffic + O(log bs) passes of the
@@ -189,9 +272,12 @@ impl Engine for ReductionEngine {
                 unsafe { *aux.get(b) = (bf, bi) };
             });
             // ---- 2nd kernel: single block reduces aux -> global best ----
-            self.settings.pool.launch(1, |_| {
+            settings.pool.launch(1, |_| {
+                debug_assert!(!aux.is_empty());
                 // SAFETY: all 1st-kernel blocks joined; single block here.
                 let sc = unsafe { k2_scratch.get(0) };
+                let blocks = aux.len();
+                let aux_pad = blocks.next_power_of_two();
                 for b in 0..blocks {
                     let (f, i) = unsafe { *aux.get(b) };
                     sc.fits[b] = f;
@@ -207,21 +293,43 @@ impl Engine for ReductionEngine {
                     gbest.update_exclusive(objective, bf, &st.position_of(bi as usize));
                 }
             });
-            if iter % stride == 0 {
-                history.push((iter, gbest.fit_relaxed()));
-            }
         }
-        history.push((params.max_iter, gbest.fit_relaxed()));
+        self.iter += 1;
+        if iter % self.stride == 0 {
+            self.history.push((iter, self.gbest.fit_relaxed()));
+        }
+        let improved = self.gbest.update_count() > updates_before;
+        StepReport {
+            iter: self.iter,
+            gbest_fit: self.gbest.fit_relaxed(),
+            gbest_pos: improved.then(|| self.gbest.pos_vec()),
+            improved,
+            done: self.iter >= self.params.max_iter,
+        }
+    }
 
+    fn finish(self: Box<Self>) -> RunOutput {
+        let this = *self;
+        let ReductionRun {
+            params,
+            state,
+            gbest,
+            mut history,
+            iter,
+            ..
+        } = this;
+        history.push((iter, gbest.fit_relaxed()));
+        let swarm = state.into_inner();
+        debug_assert_eq!(swarm.check_bounds(&params), Ok(()));
         let counters = Counters {
-            particle_updates: params.n as u64 * params.max_iter,
+            particle_updates: params.n as u64 * iter,
             gbest_updates: gbest.update_count(),
             ..Default::default()
         };
         RunOutput {
             gbest_fit: gbest.fit_relaxed(),
             gbest_pos: gbest.pos_vec(),
-            iters: params.max_iter,
+            iters: iter,
             history,
             counters,
         }
@@ -295,5 +403,21 @@ mod tests {
         assert_eq!(a.gbest_fit, b.gbest_fit, "unrolling must not change results");
         assert_eq!(a.gbest_pos, b.gbest_pos);
         assert!(a.gbest_fit > 890_000.0);
+    }
+
+    #[test]
+    fn stepwise_matches_one_shot() {
+        let params = PsoParams::paper_1d(300, 40);
+        let settings = ParallelSettings::with_workers(4);
+        let one_shot =
+            ReductionEngine::new(settings.clone()).run(&params, &Cubic, Objective::Maximize, 5);
+        let mut engine = ReductionEngine::new(settings);
+        let mut run = engine.prepare(&params, &Cubic, Objective::Maximize, 5);
+        while !run.step().done {}
+        let stepped = run.finish();
+        assert_eq!(stepped.gbest_fit, one_shot.gbest_fit);
+        assert_eq!(stepped.gbest_pos, one_shot.gbest_pos);
+        assert_eq!(stepped.history, one_shot.history);
+        assert_eq!(stepped.iters, one_shot.iters);
     }
 }

@@ -15,6 +15,12 @@
 //! * **Plane C** — an analytical GTX-1080Ti cost model that regenerates the
 //!   paper's absolute-shaped tables ([`gpusim`]).
 //!
+//! On top of Plane A sits the **execution stack**: every engine is a
+//! step-wise solver ([`engine::Engine::prepare`] → [`engine::Run`]), and
+//! the [`scheduler`] multiplexes many concurrent jobs over one shared
+//! worker pool with per-job termination criteria (the `cupso batch`
+//! subcommand drives it from a multi-job TOML).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -40,6 +46,7 @@ pub mod metrics;
 pub mod pso;
 pub mod rng;
 pub mod runtime;
+pub mod scheduler;
 pub mod testsupport;
 
 /// Crate-wide result alias.

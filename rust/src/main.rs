@@ -3,23 +3,27 @@
 //! Subcommands:
 //!   run       solve one PSO workload with a chosen engine
 //!   compare   run all five paper algorithms on one workload and rank them
+//!   batch     run a multi-job TOML through the shared-pool scheduler
 //!   simulate  print the Plane-C estimated-GPU tables (no execution)
 //!   xla       drive the three-layer AOT stack (sync or async coordinator)
 //!   info      platform, engines, fitness functions, artifact inventory
 //!
 //! `cupso <cmd> --help` lists options. A TOML config can seed any run:
-//! `cupso run --config run.toml [overrides...]`.
+//! `cupso run --config run.toml [overrides...]`; `cupso batch` reads a
+//! multi-job file (see `config/batch_demo.toml`).
 
 use anyhow::{bail, Context, Result};
 use cupso::cli::{split_subcommand, Command};
-use cupso::config::{EngineKind, RunConfig};
+use cupso::config::{BatchConfig, EngineKind, RunConfig};
 use cupso::coordinator::{AsyncScheduler, CoordinatorConfig, SyncScheduler};
+use cupso::engine::ParallelSettings;
 use cupso::fitness::{by_name, Objective};
 use cupso::gpusim;
 use cupso::metrics::{Stopwatch, Table};
 use cupso::pso::PsoParams;
 use cupso::rng::RngKind;
 use cupso::runtime::XlaRuntime;
+use cupso::scheduler::{JobScheduler, JobSpec, SchedPolicy};
 use std::path::Path;
 
 fn main() {
@@ -35,6 +39,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd {
         Some("run") => cmd_run(rest),
         Some("compare") => cmd_compare(rest),
+        Some("batch") => cmd_batch(rest),
         Some("simulate") => cmd_simulate(rest),
         Some("xla") => cmd_xla(rest),
         Some("info") => cmd_info(rest),
@@ -51,6 +56,7 @@ fn top_usage() -> String {
      Commands:\n\
      \x20 run       solve one workload with a chosen engine\n\
      \x20 compare   rank all five paper algorithms on one workload\n\
+     \x20 batch     run a multi-job TOML on one shared pool\n\
      \x20 simulate  print the estimated-GPU tables (Plane C)\n\
      \x20 xla       drive the AOT three-layer stack\n\
      \x20 info      platform + inventory\n\n\
@@ -190,6 +196,84 @@ fn cmd_compare(rest: &[String]) -> Result<()> {
         ]);
     }
     println!("{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_batch(rest: &[String]) -> Result<()> {
+    let spec = Command::new("batch", "run a multi-job TOML on one shared pool")
+        .opt("config", "multi-job TOML file", Some("config/batch_demo.toml"))
+        .opt("workers", "worker threads (0 = all cores; overrides the file)", None)
+        .opt("policy", "round-robin|edf (overrides the file)", None)
+        .switch("trace", "print every global-best improvement as it lands");
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        return Ok(());
+    }
+    let args = spec.parse(rest)?;
+    let mut cfg = BatchConfig::from_file(Path::new(args.get("config").unwrap()))?;
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--workers {w:?}: {e}"))?;
+    }
+    if let Some(p) = args.get("policy") {
+        cfg.policy = p.to_string();
+    }
+    let policy = SchedPolicy::parse(&cfg.policy)
+        .with_context(|| format!("bad policy {:?} (round-robin|edf)", cfg.policy))?;
+    let trace = args.flag("trace");
+
+    let specs: Vec<JobSpec> = cfg
+        .jobs
+        .iter()
+        .map(JobSpec::from_config)
+        .collect::<Result<_>>()?;
+    let scheduler = JobScheduler::new(ParallelSettings::with_workers(cfg.workers)).policy(policy);
+    println!(
+        "cupso batch: {} jobs, {} policy, {} pool workers",
+        specs.len(),
+        policy,
+        scheduler.pool().workers()
+    );
+
+    let mut total_steps = 0u64;
+    let mut improvements = 0u64;
+    let sw = Stopwatch::start();
+    let outcomes = scheduler.run_with(&specs, |r| {
+        total_steps += 1;
+        if r.improved {
+            improvements += 1;
+            if trace {
+                println!("  [{}] iter {:>6}  gbest {:.6}", r.name, r.iter, r.gbest_fit);
+            }
+        }
+    })?;
+    let elapsed = sw.elapsed_s();
+
+    let mut table = Table::new(
+        "Batch results",
+        &["Job", "Engine", "Workload", "Steps", "Stop", "gbest"],
+    );
+    for (o, s) in outcomes.iter().zip(&specs) {
+        table.row(&[
+            o.name.clone(),
+            o.engine.label().to_string(),
+            format!("{}x{}d", s.params.n, s.params.dim),
+            o.steps.to_string(),
+            o.stop.to_string(),
+            format!("{:.6}", o.output.gbest_fit),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "aggregate: {} jobs in {:.3}s — {:.1} jobs/s, {} steps ({:.0} steps/s), {} improvements",
+        outcomes.len(),
+        elapsed,
+        outcomes.len() as f64 / elapsed.max(1e-9),
+        total_steps,
+        total_steps as f64 / elapsed.max(1e-9),
+        improvements
+    );
     Ok(())
 }
 

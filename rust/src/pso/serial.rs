@@ -5,8 +5,13 @@
 //! iteration*. This asynchronous-within-sweep behaviour is the classic
 //! sequential SPSO; the parallel engines are synchronous instead
 //! (see [`super::serial_sync`]), exactly as in the paper.
+//!
+//! [`SerialRun`] is the step-wise form ([`crate::engine::Run`]): one
+//! `step()` = one full sweep over the swarm. [`run`] drives it to
+//! exhaustion, so the one-shot and step-wise paths are the same code.
 
 use super::{eval_and_pbest, history_stride, update_particle, PsoParams, RunOutput, SwarmState};
+use crate::engine::{Run, StepReport};
 use crate::fitness::{Fitness, Objective};
 use crate::rng::PhiloxStream;
 
@@ -17,48 +22,141 @@ pub fn run(
     objective: Objective,
     seed: u64,
 ) -> RunOutput {
-    let stream = PhiloxStream::new(seed);
-    let mut state = SwarmState::init(params, &stream);
+    let mut r = Box::new(SerialRun::new(params, fitness, objective, seed));
+    while !r.step().done {}
+    r.finish()
+}
 
-    // Step 1 tail: seed fitness/pbest and the initial global best.
-    let (mut gbest_fit, gi) = state.seed_fitness(fitness, objective);
-    let mut gbest_pos = state.position_of(gi);
+/// A prepared serial run: swarm state plus the in-loop global best.
+pub struct SerialRun<'a> {
+    params: PsoParams,
+    fitness: &'a dyn Fitness,
+    objective: Objective,
+    stream: PhiloxStream,
+    state: SwarmState,
+    gbest_fit: f64,
+    gbest_pos: Vec<f64>,
+    counters: super::Counters,
+    stride: u64,
+    history: Vec<(u64, f64)>,
+    iter: u64,
+}
 
-    let stride = history_stride(params.max_iter);
-    let mut history = Vec::with_capacity(super::HISTORY_SAMPLES as usize + 1);
-    let mut counters = super::Counters::default();
-
-    // Steps 2–5.
-    for iter in 0..params.max_iter {
-        for i in 0..params.n {
-            // Step 2: velocity + position (Eq. 1, Eq. 2, clamps).
-            update_particle(&mut state, i, &gbest_pos, params, &stream, iter);
-            // Step 3 + 4: fitness, local best.
-            let before = state.pbest_fit[i];
-            let fit = eval_and_pbest(&mut state, i, fitness, objective);
-            counters.particle_updates += 1;
-            if objective.better(fit, before) {
-                counters.pbest_improvements += 1;
-            }
-            // Step 5: global best — *inside* the particle loop.
-            if objective.better(state.pbest_fit[i], gbest_fit) {
-                gbest_fit = state.pbest_fit[i];
-                gbest_pos = state.pbest_of(i);
-                counters.gbest_updates += 1;
-            }
-        }
-        if iter % stride == 0 {
-            history.push((iter, gbest_fit));
+impl<'a> SerialRun<'a> {
+    /// Step-1 initialization: seed the swarm, fitness, pbest and the
+    /// initial global best (Algorithm 1 lines 1–6).
+    pub fn new(
+        params: &PsoParams,
+        fitness: &'a dyn Fitness,
+        objective: Objective,
+        seed: u64,
+    ) -> Self {
+        let stream = PhiloxStream::new(seed);
+        let mut state = SwarmState::init(params, &stream);
+        let (gbest_fit, gi) = state.seed_fitness(fitness, objective);
+        let gbest_pos = state.position_of(gi);
+        Self {
+            params: params.clone(),
+            fitness,
+            objective,
+            stream,
+            state,
+            gbest_fit,
+            gbest_pos,
+            counters: super::Counters::default(),
+            stride: history_stride(params.max_iter),
+            history: Vec::with_capacity(super::HISTORY_SAMPLES as usize + 1),
+            iter: 0,
         }
     }
-    history.push((params.max_iter, gbest_fit));
+}
 
-    RunOutput {
-        gbest_fit,
-        gbest_pos,
-        iters: params.max_iter,
-        history,
-        counters,
+impl Run for SerialRun<'_> {
+    fn iters_done(&self) -> u64 {
+        self.iter
+    }
+
+    fn max_iter(&self) -> u64 {
+        self.params.max_iter
+    }
+
+    fn gbest_fit(&self) -> f64 {
+        self.gbest_fit
+    }
+
+    fn gbest_pos(&self) -> Vec<f64> {
+        self.gbest_pos.clone()
+    }
+
+    fn step(&mut self) -> StepReport {
+        if self.iter >= self.params.max_iter {
+            return StepReport {
+                iter: self.iter,
+                gbest_fit: self.gbest_fit,
+                gbest_pos: None,
+                improved: false,
+                done: true,
+            };
+        }
+        let iter = self.iter;
+        let updates_before = self.counters.gbest_updates;
+        // Steps 2–5 for every particle (one sweep).
+        for i in 0..self.params.n {
+            // Step 2: velocity + position (Eq. 1, Eq. 2, clamps).
+            update_particle(
+                &mut self.state,
+                i,
+                &self.gbest_pos,
+                &self.params,
+                &self.stream,
+                iter,
+            );
+            // Step 3 + 4: fitness, local best.
+            let before = self.state.pbest_fit[i];
+            let fit = eval_and_pbest(&mut self.state, i, self.fitness, self.objective);
+            self.counters.particle_updates += 1;
+            if self.objective.better(fit, before) {
+                self.counters.pbest_improvements += 1;
+            }
+            // Step 5: global best — *inside* the particle loop.
+            if self.objective.better(self.state.pbest_fit[i], self.gbest_fit) {
+                self.gbest_fit = self.state.pbest_fit[i];
+                self.gbest_pos = self.state.pbest_of(i);
+                self.counters.gbest_updates += 1;
+            }
+        }
+        self.iter += 1;
+        if iter % self.stride == 0 {
+            self.history.push((iter, self.gbest_fit));
+        }
+        let improved = self.counters.gbest_updates > updates_before;
+        StepReport {
+            iter: self.iter,
+            gbest_fit: self.gbest_fit,
+            gbest_pos: improved.then(|| self.gbest_pos.clone()),
+            improved,
+            done: self.iter >= self.params.max_iter,
+        }
+    }
+
+    fn finish(self: Box<Self>) -> RunOutput {
+        let this = *self;
+        let SerialRun {
+            gbest_fit,
+            gbest_pos,
+            counters,
+            mut history,
+            iter,
+            ..
+        } = this;
+        history.push((iter, gbest_fit));
+        RunOutput {
+            gbest_fit,
+            gbest_pos,
+            iters: iter,
+            history,
+            counters,
+        }
     }
 }
 
@@ -123,5 +221,22 @@ mod tests {
         let out = run(&params, &Cubic, Objective::Maximize, 5);
         assert_eq!(out.counters.particle_updates, 32 * 20);
         assert!(out.counters.gbest_updates <= out.counters.pbest_improvements);
+    }
+
+    #[test]
+    fn stepwise_pauses_and_resumes_exactly() {
+        // Driving SerialRun step by step equals the one-shot run.
+        let params = PsoParams::paper_120d(16, 25);
+        let one_shot = run(&params, &Cubic, Objective::Maximize, 4);
+        let mut r = Box::new(SerialRun::new(&params, &Cubic, Objective::Maximize, 4));
+        for expected in 1..=25u64 {
+            let rep = r.step();
+            assert_eq!(rep.iter, expected);
+        }
+        assert!(r.step().done);
+        let out = r.finish();
+        assert_eq!(out.gbest_fit, one_shot.gbest_fit);
+        assert_eq!(out.gbest_pos, one_shot.gbest_pos);
+        assert_eq!(out.history, one_shot.history);
     }
 }

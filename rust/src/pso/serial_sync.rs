@@ -7,8 +7,14 @@
 //! is aggregated). The four Plane-A parallel engines must reproduce this
 //! trajectory **bit-exactly** — that equivalence is the core correctness
 //! test for the queue algorithms.
+//!
+//! [`SyncSerialRun`] is the step-wise form ([`crate::engine::Run`]): one
+//! `step()` = one frozen-gbest sweep + the end-of-iteration update.
+//! [`run`] drives it to exhaustion, so the oracle and its step-wise form
+//! cannot drift apart.
 
 use super::{eval_and_pbest, history_stride, update_particle, PsoParams, RunOutput, SwarmState};
+use crate::engine::{Run, StepReport};
 use crate::fitness::{Fitness, Objective};
 use crate::rng::PhiloxStream;
 
@@ -33,56 +39,150 @@ pub fn run(
     objective: Objective,
     seed: u64,
 ) -> RunOutput {
-    let stream = PhiloxStream::new(seed);
-    let mut state = SwarmState::init(params, &stream);
-    let (mut gbest_fit, gi) = state.seed_fitness(fitness, objective);
-    let mut gbest_pos = state.position_of(gi);
+    let mut r = Box::new(SyncSerialRun::new(params, fitness, objective, seed));
+    while !r.step().done {}
+    r.finish()
+}
 
-    let stride = history_stride(params.max_iter);
-    let mut history = Vec::with_capacity(super::HISTORY_SAMPLES as usize + 1);
-    let mut counters = super::Counters::default();
+/// A prepared synchronous-serial run (the oracle, resumable).
+pub struct SyncSerialRun<'a> {
+    params: PsoParams,
+    fitness: &'a dyn Fitness,
+    objective: Objective,
+    stream: PhiloxStream,
+    state: SwarmState,
+    gbest_fit: f64,
+    gbest_pos: Vec<f64>,
+    counters: super::Counters,
+    stride: u64,
+    history: Vec<(u64, f64)>,
+    iter: u64,
+}
 
-    for iter in 0..params.max_iter {
+impl<'a> SyncSerialRun<'a> {
+    /// Seed the swarm and the initial global best.
+    pub fn new(
+        params: &PsoParams,
+        fitness: &'a dyn Fitness,
+        objective: Objective,
+        seed: u64,
+    ) -> Self {
+        let stream = PhiloxStream::new(seed);
+        let mut state = SwarmState::init(params, &stream);
+        let (gbest_fit, gi) = state.seed_fitness(fitness, objective);
+        let gbest_pos = state.position_of(gi);
+        Self {
+            params: params.clone(),
+            fitness,
+            objective,
+            stream,
+            state,
+            gbest_fit,
+            gbest_pos,
+            counters: super::Counters::default(),
+            stride: history_stride(params.max_iter),
+            history: Vec::with_capacity(super::HISTORY_SAMPLES as usize + 1),
+            iter: 0,
+        }
+    }
+}
+
+impl Run for SyncSerialRun<'_> {
+    fn iters_done(&self) -> u64 {
+        self.iter
+    }
+
+    fn max_iter(&self) -> u64 {
+        self.params.max_iter
+    }
+
+    fn gbest_fit(&self) -> f64 {
+        self.gbest_fit
+    }
+
+    fn gbest_pos(&self) -> Vec<f64> {
+        self.gbest_pos.clone()
+    }
+
+    fn step(&mut self) -> StepReport {
+        if self.iter >= self.params.max_iter {
+            return StepReport {
+                iter: self.iter,
+                gbest_fit: self.gbest_fit,
+                gbest_pos: None,
+                improved: false,
+                done: true,
+            };
+        }
+        let iter = self.iter;
+        let objective = self.objective;
         // Sweep with frozen gbest.
         let mut iter_best_fit = objective.worst();
         let mut iter_best_idx = usize::MAX;
-        for i in 0..params.n {
-            update_particle(&mut state, i, &gbest_pos, params, &stream, iter);
-            let before = state.pbest_fit[i];
-            let fit = eval_and_pbest(&mut state, i, fitness, objective);
-            counters.particle_updates += 1;
+        for i in 0..self.params.n {
+            update_particle(
+                &mut self.state,
+                i,
+                &self.gbest_pos,
+                &self.params,
+                &self.stream,
+                iter,
+            );
+            let before = self.state.pbest_fit[i];
+            let fit = eval_and_pbest(&mut self.state, i, self.fitness, objective);
+            self.counters.particle_updates += 1;
             if objective.better(fit, before) {
-                counters.pbest_improvements += 1;
+                self.counters.pbest_improvements += 1;
             }
             // The GPU kernels aggregate this iteration's `fit` (Algorithm 2
             // pushes `fit`, not `pbest_fit`); the resulting gbest
             // trajectory is identical because gbest(t-1) already dominates
             // all older fits.
-            if better_with_tie(objective, state.fit[i], i, iter_best_fit, iter_best_idx) {
-                iter_best_fit = state.fit[i];
+            if better_with_tie(objective, self.state.fit[i], i, iter_best_fit, iter_best_idx) {
+                iter_best_fit = self.state.fit[i];
                 iter_best_idx = i;
             }
         }
         // Single end-of-iteration gbest update (the "2nd kernel").
-        if objective.better(iter_best_fit, gbest_fit) {
-            gbest_fit = iter_best_fit;
+        let improved = objective.better(iter_best_fit, self.gbest_fit);
+        if improved {
+            self.gbest_fit = iter_best_fit;
             // The winning particle just improved its pbest, so pos ==
             // pbest_pos for it; read pos for symmetry with the kernels.
-            gbest_pos = state.position_of(iter_best_idx);
-            counters.gbest_updates += 1;
+            self.gbest_pos = self.state.position_of(iter_best_idx);
+            self.counters.gbest_updates += 1;
         }
-        if iter % stride == 0 {
-            history.push((iter, gbest_fit));
+        self.iter += 1;
+        if iter % self.stride == 0 {
+            self.history.push((iter, self.gbest_fit));
+        }
+        StepReport {
+            iter: self.iter,
+            gbest_fit: self.gbest_fit,
+            gbest_pos: improved.then(|| self.gbest_pos.clone()),
+            improved,
+            done: self.iter >= self.params.max_iter,
         }
     }
-    history.push((params.max_iter, gbest_fit));
 
-    RunOutput {
-        gbest_fit,
-        gbest_pos,
-        iters: params.max_iter,
-        history,
-        counters,
+    fn finish(self: Box<Self>) -> RunOutput {
+        let this = *self;
+        let SyncSerialRun {
+            gbest_fit,
+            gbest_pos,
+            counters,
+            mut history,
+            iter,
+            ..
+        } = this;
+        history.push((iter, gbest_fit));
+        RunOutput {
+            gbest_fit,
+            gbest_pos,
+            iters: iter,
+            history,
+            counters,
+        }
     }
 }
 
@@ -134,5 +234,17 @@ mod tests {
         let b = run(&params, &Cubic, Objective::Maximize, 4);
         assert_eq!(a.gbest_fit, b.gbest_fit);
         assert_eq!(a.history, b.history);
+    }
+
+    #[test]
+    fn stepwise_oracle_matches_one_shot() {
+        let params = PsoParams::paper_120d(24, 20);
+        let one_shot = run(&params, &Cubic, Objective::Maximize, 8);
+        let mut r = Box::new(SyncSerialRun::new(&params, &Cubic, Objective::Maximize, 8));
+        while !r.step().done {}
+        let out = r.finish();
+        assert_eq!(out.gbest_fit, one_shot.gbest_fit);
+        assert_eq!(out.gbest_pos, one_shot.gbest_pos);
+        assert_eq!(out.history, one_shot.history);
     }
 }

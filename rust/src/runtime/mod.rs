@@ -10,6 +10,15 @@
 //!
 //! Interchange is HLO **text** (`HloModuleProto::from_text_file`), per the
 //! xla_extension 0.5.1 proto-id constraint (see DESIGN.md / aot.py).
+//!
+//! ## Feature gating
+//!
+//! The `xla` bindings need the XLA extension shared library, which the
+//! offline build environment cannot provide. The real implementation
+//! lives in `pjrt.rs` behind the `xla` cargo feature; the default build
+//! compiles an API-identical stub whose [`XlaRuntime::open`] fails with
+//! instructions, so every Plane-B caller (coordinator, CLI, benches)
+//! still compiles and degrades gracefully at runtime.
 
 mod manifest;
 mod state;
@@ -17,186 +26,93 @@ mod state;
 pub use manifest::{ArtifactMeta, Manifest};
 pub use state::XlaSwarmState;
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::{ChunkExec, XlaRuntime};
 
-/// A compiled executable, shareable across coordinator threads.
-///
-/// PJRT executables are internally thread-safe for execution; the `xla`
-/// crate just doesn't mark the wrapper Send/Sync, so we assert it here.
-struct SharedExe(xla::PjRtLoadedExecutable);
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::{ArtifactMeta, Manifest, XlaSwarmState};
+    use anyhow::{bail, Result};
+    use std::path::Path;
 
-impl std::fmt::Debug for SharedExe {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str("SharedExe(<pjrt loaded executable>)")
-    }
-}
-
-// SAFETY: PJRT's C API allows concurrent Execute calls on one loaded
-// executable; the wrapper holds no interior mutability of its own.
-unsafe impl Send for SharedExe {}
-unsafe impl Sync for SharedExe {}
-
-/// Runtime: PJRT client + artifact registry + executable cache.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<SharedExe>>>,
-}
-
-// SAFETY: same argument as SharedExe — the CPU client is thread-safe.
-unsafe impl Send for XlaRuntime {}
-unsafe impl Sync for XlaRuntime {}
-
-impl XlaRuntime {
-    /// Open the runtime over an artifact directory (must contain
-    /// `manifest.toml`; run `make artifacts` first).
-    pub fn open(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(&dir.join("manifest.toml"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self {
-            client,
-            dir: dir.to_path_buf(),
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
-
-    /// The parsed manifest.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Find an artifact by configuration.
-    pub fn find(&self, variant: &str, n: usize, dim: usize) -> Option<&ArtifactMeta> {
-        self.manifest.find(variant, n, dim)
-    }
-
-    /// Compile (or fetch the cached) executable for `name`.
-    pub fn load(&self, name: &str) -> Result<ChunkExec> {
-        let meta = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
-            .clone();
-        let exe = {
-            let mut cache = self.cache.lock().unwrap();
-            if let Some(e) = cache.get(name) {
-                e.clone()
-            } else {
-                let path = self.dir.join(&meta.file);
-                let path_str = path
-                    .to_str()
-                    .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
-                let proto = xla::HloModuleProto::from_text_file(path_str)
-                    .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = self
-                    .client
-                    .compile(&comp)
-                    .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-                let exe = Arc::new(SharedExe(exe));
-                cache.insert(name.to_string(), exe.clone());
-                exe
-            }
-        };
-        Ok(ChunkExec { exe, meta })
-    }
-
-    /// Compile the artifact for `(variant, n, dim)` or explain what exists.
-    pub fn load_config(&self, variant: &str, n: usize, dim: usize) -> Result<ChunkExec> {
-        match self.find(variant, n, dim) {
-            Some(meta) => {
-                let name = meta.name.clone();
-                self.load(&name)
-            }
-            None => bail!(
-                "no artifact for variant={variant} n={n} dim={dim}; available: {}",
-                self.manifest.names().join(", ")
-            ),
-        }
-    }
-}
-
-/// One compiled PSO chunk (K iterations per call).
-#[derive(Debug)]
-pub struct ChunkExec {
-    exe: Arc<SharedExe>,
-    /// The artifact's ABI description.
-    pub meta: ArtifactMeta,
-}
-
-impl ChunkExec {
-    /// Execute one chunk: advances `state` by `meta.iters` iterations and
-    /// returns the gbest-fitness trace (one entry per iteration).
+    /// Offline stand-in for the PJRT runtime: same API, but [`open`]
+    /// always fails (so no method past construction is reachable).
     ///
-    /// `key_bits` is the threefry key (stable across the whole run);
-    /// `iter0` the global iteration offset (chunks chain exactly — see
-    /// python/tests/test_model.py::TestChunkChaining).
-    pub fn run(
-        &self,
-        state: &mut XlaSwarmState,
-        key_bits: [u32; 2],
-        iter0: i64,
-    ) -> Result<Vec<f64>> {
-        let (d, n) = (self.meta.dim, self.meta.n);
-        if state.dim != d || state.n != n {
+    /// [`open`]: XlaRuntime::open
+    #[derive(Debug)]
+    pub struct XlaRuntime {
+        manifest: Manifest,
+    }
+
+    impl XlaRuntime {
+        /// Always fails: this build has no PJRT client.
+        pub fn open(dir: &Path) -> Result<Self> {
             bail!(
-                "state shape ({}, {}) does not match artifact {} ({d}, {n})",
-                state.dim,
-                state.n,
+                "cannot open artifacts at {}: cupso was built without the `xla` \
+                 feature (PJRT execution is unavailable offline); rebuild with \
+                 `--features xla` and a vendored `xla` dependency",
+                dir.display()
+            )
+        }
+
+        /// The parsed manifest.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// Find an artifact by configuration.
+        pub fn find(&self, variant: &str, n: usize, dim: usize) -> Option<&ArtifactMeta> {
+            self.manifest.find(variant, n, dim)
+        }
+
+        /// Unreachable in the stub (`open` never succeeds).
+        pub fn load(&self, name: &str) -> Result<ChunkExec> {
+            bail!("artifact {name}: cupso was built without the `xla` feature")
+        }
+
+        /// Unreachable in the stub (`open` never succeeds).
+        pub fn load_config(&self, variant: &str, n: usize, dim: usize) -> Result<ChunkExec> {
+            bail!(
+                "artifact variant={variant} n={n} dim={dim}: cupso was built \
+                 without the `xla` feature"
+            )
+        }
+    }
+
+    /// Stub chunk executable (never constructed — see [`XlaRuntime`]).
+    #[derive(Debug)]
+    pub struct ChunkExec {
+        /// The artifact's ABI description.
+        pub meta: ArtifactMeta,
+    }
+
+    impl ChunkExec {
+        /// Unreachable in the stub.
+        pub fn run(
+            &self,
+            _state: &mut XlaSwarmState,
+            _key_bits: [u32; 2],
+            _iter0: i64,
+        ) -> Result<Vec<f64>> {
+            bail!(
+                "artifact {}: cupso was built without the `xla` feature",
                 self.meta.name
-            );
+            )
         }
-        let dims = [d as i64, n as i64];
-        let args: Vec<xla::Literal> = vec![
-            xla::Literal::vec1(&state.pos).reshape(&dims).map_err(xe)?,
-            xla::Literal::vec1(&state.vel).reshape(&dims).map_err(xe)?,
-            xla::Literal::vec1(&state.pbest_pos)
-                .reshape(&dims)
-                .map_err(xe)?,
-            xla::Literal::vec1(&state.pbest_fit),
-            xla::Literal::vec1(&state.gbest_pos),
-            xla::Literal::scalar(state.gbest_fit),
-            xla::Literal::vec1(&key_bits[..]),
-            xla::Literal::scalar(iter0),
-        ];
-        let result = self.exe.0.execute::<xla::Literal>(&args).map_err(xe)?;
-        let mut out = result[0][0].to_literal_sync().map_err(xe)?;
-        let parts = out.decompose_tuple().map_err(xe)?;
-        if parts.len() != 7 {
-            bail!(
-                "artifact {} returned {} outputs, want 7",
-                self.meta.name,
-                parts.len()
-            );
-        }
-        state.pos = parts[0].to_vec::<f64>().map_err(xe)?;
-        state.vel = parts[1].to_vec::<f64>().map_err(xe)?;
-        state.pbest_pos = parts[2].to_vec::<f64>().map_err(xe)?;
-        state.pbest_fit = parts[3].to_vec::<f64>().map_err(xe)?;
-        state.gbest_pos = parts[4].to_vec::<f64>().map_err(xe)?;
-        state.gbest_fit = parts[5].get_first_element::<f64>().map_err(xe)?;
-        let trace = parts[6].to_vec::<f64>().map_err(xe)?;
-        Ok(trace)
-    }
 
-    /// Iterations this chunk advances per call.
-    pub fn iters_per_call(&self) -> u64 {
-        self.meta.iters
+        /// Iterations this chunk advances per call.
+        pub fn iters_per_call(&self) -> u64 {
+            self.meta.iters
+        }
     }
 }
 
-/// xla::Error → anyhow (stringified; the crate error type is unstable).
-fn xe(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e:?}")
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::{ChunkExec, XlaRuntime};

@@ -1,0 +1,535 @@
+//! Multi-job scheduler — many concurrent PSO jobs multiplexed over one
+//! shared [`GridPool`].
+//!
+//! The step-wise engine core ([`crate::engine::Run`]) makes a run a
+//! resumable object: all buffers live in the `Run`, a `step()` advances
+//! one iteration, and nothing about the trajectory depends on *when* the
+//! step executes. [`JobScheduler`] exploits exactly that: it prepares one
+//! `Run` per [`JobSpec`], then interleaves single steps over the shared
+//! worker pool under a [`SchedPolicy`] until every job hits a
+//! [`TerminationCriteria`] bound or exhausts its iteration budget.
+//!
+//! **Determinism.** Because a `Run` owns its whole mutable state and pool
+//! launches are serialized, a job's trajectory is bit-identical whether it
+//! runs alone or interleaved with any number of other jobs — for the
+//! bit-exact engines (CPU, Reduction, Loop-Unrolling, Queue). Queue-Lock
+//! and Async-Persistent carry their documented intra-run races, but those
+//! races are confined to the job's own `Run`: neighbours still cannot
+//! perturb each other. `rust/tests/scheduler_determinism.rs` enforces the
+//! bit-exact half.
+//!
+//! This is the ROADMAP's "many concurrent optimization jobs" seam: PSO-PS
+//! (arXiv:2009.03816) treats PSO as a long-lived service, and
+//! time-critical deployments (arXiv:1401.0546) need early termination and
+//! bounded per-step latency — both fall out of step-wise runs plus this
+//! scheduler.
+
+use crate::config::{EngineKind, JobConfig};
+use crate::engine::{self, ParallelSettings, Run};
+use crate::exec::GridPool;
+use crate::fitness::{by_name, Fitness, Objective};
+use crate::pso::{PsoParams, RunOutput};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// When to stop a job before its `params.max_iter` budget.
+///
+/// All bounds are optional and combined with OR: the first one hit wins.
+/// The run's own iteration budget always applies on top.
+#[derive(Debug, Clone, Default)]
+pub struct TerminationCriteria {
+    /// Hard cap on scheduler steps (iterations) for this job.
+    pub max_iter: Option<u64>,
+    /// Stop once the global best is at least this good (`>=` under
+    /// Maximize, `<=` under Minimize).
+    pub target_fit: Option<f64>,
+    /// Stop after this many consecutive steps without a global-best
+    /// improvement.
+    pub stall_window: Option<u64>,
+}
+
+impl TerminationCriteria {
+    /// No early termination: run to the iteration budget.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Builder: cap scheduler steps.
+    pub fn with_max_iter(mut self, steps: u64) -> Self {
+        self.max_iter = Some(steps);
+        self
+    }
+
+    /// Builder: stop at a target fitness.
+    pub fn with_target_fit(mut self, fit: f64) -> Self {
+        self.target_fit = Some(fit);
+        self
+    }
+
+    /// Builder: stop after a stall.
+    pub fn with_stall_window(mut self, steps: u64) -> Self {
+        self.stall_window = Some(steps);
+        self
+    }
+
+    /// Evaluate the criteria after a step. `steps` counts executed steps,
+    /// `stalled` counts consecutive non-improving steps, `gbest` is the
+    /// job's current best under `objective`.
+    pub fn check(
+        &self,
+        objective: Objective,
+        gbest: f64,
+        steps: u64,
+        stalled: u64,
+    ) -> Option<StopReason> {
+        if let Some(target) = self.target_fit {
+            // Reached when the target is not strictly better than gbest.
+            if !objective.better(target, gbest) {
+                return Some(StopReason::TargetReached);
+            }
+        }
+        if let Some(cap) = self.max_iter {
+            if steps >= cap {
+                return Some(StopReason::MaxIter);
+            }
+        }
+        if let Some(window) = self.stall_window {
+            if stalled >= window {
+                return Some(StopReason::Stalled);
+            }
+        }
+        None
+    }
+}
+
+/// Why a job stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The run's own `params.max_iter` budget is spent.
+    Exhausted,
+    /// [`TerminationCriteria::target_fit`] reached.
+    TargetReached,
+    /// [`TerminationCriteria::max_iter`] cap hit.
+    MaxIter,
+    /// [`TerminationCriteria::stall_window`] consecutive stale steps.
+    Stalled,
+}
+
+impl std::fmt::Display for StopReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            StopReason::Exhausted => "exhausted",
+            StopReason::TargetReached => "target-reached",
+            StopReason::MaxIter => "max-iter",
+            StopReason::Stalled => "stalled",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One tenant job: engine kind, workload, seed, and stop bounds.
+pub struct JobSpec {
+    /// Display name (batch-config section name).
+    pub name: String,
+    /// Plane-A engine kind driving this job.
+    pub engine: EngineKind,
+    /// The workload.
+    pub params: PsoParams,
+    /// Fitness function (shared, engines borrow it per step).
+    pub fitness: Arc<dyn Fitness + Send>,
+    /// Optimization sense.
+    pub objective: Objective,
+    /// Master seed.
+    pub seed: u64,
+    /// Early-termination bounds.
+    pub termination: TerminationCriteria,
+    /// Step budget this job would like to finish within — consumed by
+    /// [`SchedPolicy::EarliestDeadlineFirst`]; ignored by round-robin.
+    pub deadline: Option<u64>,
+}
+
+impl JobSpec {
+    /// A job with default objective/termination (run to budget).
+    pub fn new(
+        name: &str,
+        engine: EngineKind,
+        params: PsoParams,
+        fitness: Arc<dyn Fitness + Send>,
+        objective: Objective,
+        seed: u64,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            engine,
+            params,
+            fitness,
+            objective,
+            seed,
+            termination: TerminationCriteria::none(),
+            deadline: None,
+        }
+    }
+
+    /// Build a spec from a batch-config job entry.
+    pub fn from_config(cfg: &JobConfig) -> Result<Self> {
+        let fitness = by_name(&cfg.fitness)
+            .with_context(|| format!("job {}: unknown fitness {}", cfg.name, cfg.fitness))?;
+        if !cfg.engine.is_plane_a() {
+            bail!(
+                "job {}: engine {} is not schedulable (Plane-A only)",
+                cfg.name,
+                cfg.engine
+            );
+        }
+        let objective = cfg.objective.unwrap_or(fitness.default_objective());
+        let params =
+            PsoParams::for_fitness(fitness.as_ref(), cfg.particles, cfg.dim, cfg.iters, 0.5);
+        Ok(Self {
+            name: cfg.name.clone(),
+            engine: cfg.engine,
+            params,
+            fitness: Arc::from(fitness),
+            objective,
+            seed: cfg.seed,
+            termination: TerminationCriteria {
+                max_iter: cfg.max_steps,
+                target_fit: cfg.target_fitness,
+                stall_window: cfg.stall_window,
+            },
+            deadline: cfg.deadline,
+        })
+    }
+}
+
+/// Which live job gets the next step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Cycle through live jobs, one step each — fair progress, bounded
+    /// per-job latency between steps.
+    #[default]
+    RoundRobin,
+    /// Greedy EDF: always step the live job with the smallest remaining
+    /// deadline slack (`deadline - steps_done`; jobs without a deadline
+    /// rank last). Ties break on job index, so scheduling is fully
+    /// deterministic.
+    EarliestDeadlineFirst,
+}
+
+impl SchedPolicy {
+    /// Parse CLI/config text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+            "roundrobin" | "rr" => Some(Self::RoundRobin),
+            "edf" | "deadline" | "earliestdeadlinefirst" => Some(Self::EarliestDeadlineFirst),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SchedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedPolicy::RoundRobin => f.write_str("round-robin"),
+            SchedPolicy::EarliestDeadlineFirst => f.write_str("edf"),
+        }
+    }
+}
+
+/// Telemetry for one scheduler step of one job.
+#[derive(Debug, Clone)]
+pub struct JobReport<'a> {
+    /// Index of the job in the spec slice.
+    pub job: usize,
+    /// Job name.
+    pub name: &'a str,
+    /// Steps (iterations) the job has executed, this one included.
+    pub iter: u64,
+    /// The job's global-best fitness after the step.
+    pub gbest_fit: f64,
+    /// Whether the step improved the job's global best.
+    pub improved: bool,
+    /// Set on the job's final step.
+    pub finished: Option<StopReason>,
+}
+
+/// Final result of one scheduled job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    /// Job name.
+    pub name: String,
+    /// Engine kind that ran it.
+    pub engine: EngineKind,
+    /// Why it stopped.
+    pub stop: StopReason,
+    /// Steps (iterations) executed.
+    pub steps: u64,
+    /// The run's output — for the bit-exact engines, identical to the
+    /// same job run solo.
+    pub output: RunOutput,
+}
+
+/// Multiplexes N concurrent jobs over one shared [`GridPool`].
+pub struct JobScheduler {
+    settings: ParallelSettings,
+    policy: SchedPolicy,
+}
+
+struct LiveJob<'a> {
+    run: Box<dyn Run + 'a>,
+    steps: u64,
+    stalled: u64,
+    stop: Option<StopReason>,
+    deadline: Option<u64>,
+}
+
+impl JobScheduler {
+    /// Scheduler over the given pool/geometry (round-robin by default).
+    pub fn new(settings: ParallelSettings) -> Self {
+        Self {
+            settings,
+            policy: SchedPolicy::RoundRobin,
+        }
+    }
+
+    /// Scheduler on a fresh pool with `workers` threads (0 = all cores).
+    pub fn with_workers(workers: usize) -> Self {
+        Self::new(ParallelSettings::with_workers(workers))
+    }
+
+    /// Override the stepping policy.
+    pub fn policy(mut self, policy: SchedPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// The shared pool jobs are multiplexed over.
+    pub fn pool(&self) -> &Arc<GridPool> {
+        &self.settings.pool
+    }
+
+    /// Run all jobs to termination, discarding telemetry.
+    pub fn run(&self, specs: &[JobSpec]) -> Result<Vec<JobOutcome>> {
+        self.run_with(specs, |_| {})
+    }
+
+    /// Run all jobs to termination, streaming a [`JobReport`] per step.
+    ///
+    /// Outcomes are returned in spec order regardless of completion order.
+    pub fn run_with<F: FnMut(&JobReport<'_>)>(
+        &self,
+        specs: &[JobSpec],
+        mut telemetry: F,
+    ) -> Result<Vec<JobOutcome>> {
+        // Prepare every run up front: all allocation happens here, steps
+        // stay allocation-free on the hot path.
+        let mut engines = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let engine = engine::build_with(spec.engine, self.settings.clone())
+                .with_context(|| {
+                    format!("job {}: engine {} is not schedulable", spec.name, spec.engine)
+                })?;
+            engines.push(engine);
+        }
+        let mut live: Vec<LiveJob<'_>> = Vec::with_capacity(specs.len());
+        for (engine, spec) in engines.iter_mut().zip(specs) {
+            let fitness: &dyn Fitness = &*spec.fitness;
+            live.push(LiveJob {
+                run: engine.prepare(&spec.params, fitness, spec.objective, spec.seed),
+                steps: 0,
+                stalled: 0,
+                stop: None,
+                deadline: spec.deadline,
+            });
+        }
+
+        let mut finished = 0usize;
+        let mut cursor = 0usize;
+        while finished < live.len() {
+            let idx = match self.policy {
+                SchedPolicy::RoundRobin => {
+                    let idx = next_live(&live, cursor).expect("unfinished job exists");
+                    cursor = (idx + 1) % live.len();
+                    idx
+                }
+                SchedPolicy::EarliestDeadlineFirst => {
+                    earliest_deadline(&live).expect("unfinished job exists")
+                }
+            };
+            let job = &mut live[idx];
+            let spec = &specs[idx];
+            let report = job.run.step();
+            job.steps += 1;
+            if report.improved {
+                job.stalled = 0;
+            } else {
+                job.stalled += 1;
+            }
+            // Criteria outrank budget exhaustion so a target hit on the
+            // final iteration still reports TargetReached (matching the
+            // precedence TerminationCriteria::check documents).
+            let stop = spec
+                .termination
+                .check(spec.objective, report.gbest_fit, job.steps, job.stalled)
+                .or(report.done.then_some(StopReason::Exhausted));
+            telemetry(&JobReport {
+                job: idx,
+                name: &spec.name,
+                iter: job.steps,
+                gbest_fit: report.gbest_fit,
+                improved: report.improved,
+                finished: stop,
+            });
+            if stop.is_some() {
+                job.stop = stop;
+                finished += 1;
+            }
+        }
+
+        Ok(live
+            .into_iter()
+            .zip(specs)
+            .map(|(job, spec)| JobOutcome {
+                name: spec.name.clone(),
+                engine: spec.engine,
+                stop: job.stop.expect("every job terminated"),
+                steps: job.steps,
+                output: job.run.finish(),
+            })
+            .collect())
+    }
+}
+
+/// Next unfinished job at or after `cursor` (cyclic scan).
+fn next_live(live: &[LiveJob<'_>], cursor: usize) -> Option<usize> {
+    let n = live.len();
+    (0..n)
+        .map(|k| (cursor + k) % n)
+        .find(|&i| live[i].stop.is_none())
+}
+
+/// Unfinished job with the least deadline slack (ties → lowest index).
+fn earliest_deadline(live: &[LiveJob<'_>]) -> Option<usize> {
+    live.iter()
+        .enumerate()
+        .filter(|(_, j)| j.stop.is_none())
+        .min_by_key(|(i, j)| {
+            let slack = j
+                .deadline
+                .map(|d| d.saturating_sub(j.steps))
+                .unwrap_or(u64::MAX);
+            (slack, *i)
+        })
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::Cubic;
+
+    fn spec(name: &str, engine: EngineKind, n: usize, iters: u64, seed: u64) -> JobSpec {
+        JobSpec::new(
+            name,
+            engine,
+            PsoParams::paper_1d(n, iters),
+            Arc::new(Cubic),
+            Objective::Maximize,
+            seed,
+        )
+    }
+
+    #[test]
+    fn criteria_target_fit_respects_objective() {
+        let c = TerminationCriteria::none().with_target_fit(10.0);
+        let max = Objective::Maximize;
+        let min = Objective::Minimize;
+        assert_eq!(c.check(max, 9.0, 1, 0), None);
+        assert_eq!(c.check(max, 10.0, 1, 0), Some(StopReason::TargetReached));
+        assert_eq!(c.check(max, 11.0, 1, 0), Some(StopReason::TargetReached));
+        assert_eq!(c.check(min, 11.0, 1, 0), None);
+        assert_eq!(c.check(min, 9.0, 1, 0), Some(StopReason::TargetReached));
+    }
+
+    #[test]
+    fn criteria_max_iter_and_stall() {
+        let c = TerminationCriteria::none()
+            .with_max_iter(5)
+            .with_stall_window(3);
+        let max = Objective::Maximize;
+        assert_eq!(c.check(max, 0.0, 4, 0), None);
+        assert_eq!(c.check(max, 0.0, 5, 0), Some(StopReason::MaxIter));
+        assert_eq!(c.check(max, 0.0, 2, 3), Some(StopReason::Stalled));
+        // Target outranks the caps when several bounds trip at once.
+        let c = c.with_target_fit(f64::NEG_INFINITY);
+        assert_eq!(c.check(max, 0.0, 5, 3), Some(StopReason::TargetReached));
+    }
+
+    #[test]
+    fn policies_parse_and_display() {
+        assert_eq!(SchedPolicy::parse("round-robin"), Some(SchedPolicy::RoundRobin));
+        assert_eq!(SchedPolicy::parse("rr"), Some(SchedPolicy::RoundRobin));
+        assert_eq!(
+            SchedPolicy::parse("EDF"),
+            Some(SchedPolicy::EarliestDeadlineFirst)
+        );
+        assert_eq!(SchedPolicy::parse("fifo"), None);
+        assert_eq!(SchedPolicy::RoundRobin.to_string(), "round-robin");
+    }
+
+    #[test]
+    fn round_robin_interleaves_fairly() {
+        let scheduler = JobScheduler::with_workers(2);
+        let specs = vec![
+            spec("a", EngineKind::Queue, 64, 10, 1),
+            spec("b", EngineKind::Queue, 64, 10, 2),
+        ];
+        let mut order = Vec::new();
+        let outcomes = scheduler
+            .run_with(&specs, |r| order.push(r.job))
+            .unwrap();
+        // Strict alternation: a b a b …
+        for (k, &j) in order.iter().enumerate() {
+            assert_eq!(j, k % 2, "step {k} went to job {j}");
+        }
+        assert_eq!(outcomes.len(), 2);
+        for o in &outcomes {
+            assert_eq!(o.steps, 10);
+            assert_eq!(o.stop, StopReason::Exhausted);
+            assert_eq!(o.output.iters, 10);
+        }
+    }
+
+    #[test]
+    fn edf_runs_tight_deadlines_first() {
+        let scheduler = JobScheduler::with_workers(2).policy(SchedPolicy::EarliestDeadlineFirst);
+        let mut a = spec("loose", EngineKind::Queue, 64, 8, 1);
+        a.deadline = Some(100);
+        let mut b = spec("tight", EngineKind::Queue, 64, 8, 2);
+        b.deadline = Some(8);
+        let specs = vec![a, b];
+        let mut finish_order = Vec::new();
+        scheduler
+            .run_with(&specs, |r| {
+                if r.finished.is_some() {
+                    finish_order.push(r.job);
+                }
+            })
+            .unwrap();
+        assert_eq!(finish_order, vec![1, 0], "tight deadline must finish first");
+    }
+
+    #[test]
+    fn xla_kinds_are_rejected() {
+        let scheduler = JobScheduler::with_workers(1);
+        let mut s = spec("x", EngineKind::Queue, 8, 2, 1);
+        s.engine = EngineKind::XlaSync;
+        let err = scheduler.run(&[s]).unwrap_err().to_string();
+        assert!(err.contains("not schedulable"), "{err}");
+    }
+
+    #[test]
+    fn empty_spec_list_is_fine() {
+        let scheduler = JobScheduler::with_workers(1);
+        assert!(scheduler.run(&[]).unwrap().is_empty());
+    }
+}
