@@ -1,12 +1,22 @@
 //! Scheduler throughput — 16 concurrent 1-D paper jobs multiplexed over
-//! ONE shared pool vs the same 16 jobs run sequentially as one-shot
-//! `Engine::run` calls (each on the shared pool too, but exclusively).
+//! ONE shared pool: sequential one-shot runs vs the serialized scheduler
+//! vs concurrent-stream scheduling at S ∈ {1, 2, 4}.
 //!
-//! What this measures: the overhead of the step-wise multiplexing layer
-//! (per-step dispatch, policy pick, telemetry) against run-to-completion
-//! execution of an identical workload. Because the engines are step-wise
-//! and every buffer is allocated in `prepare`, the expected gap is small;
-//! large gaps would indicate per-step allocation or pool thrash.
+//! What this measures:
+//! * the overhead of the step-wise multiplexing layer (per-step dispatch,
+//!   policy pick, telemetry) against run-to-completion execution of an
+//!   identical workload — serialized scheduler vs sequential must stay
+//!   within noise;
+//! * the aggregate multi-job throughput gain from concurrent pool
+//!   streams: with S streams, up to S grids are in flight at once, so the
+//!   per-step dispatch/join "launch overhead" of independent tenants
+//!   overlaps instead of serializing. On a ≥ 4-core host S=4 should beat
+//!   S=1; on smaller hosts the streams time-slice and the table shows it.
+//!
+//! Batched stepping (`--batch-steps` analog) is swept alongside because
+//! it is the second half of the same optimization: fewer, fatter
+//! scheduling rounds amortize both the round bookkeeping and (for S > 1)
+//! the per-round thread handoff.
 //!
 //! Scale via CUPSO_BENCH_SCALE=ci|paper|smoke (see benchkit).
 
@@ -47,23 +57,31 @@ fn specs(iters: u64) -> Vec<JobSpec> {
 fn main() {
     let cfg = BenchConfig::from_env();
     let iters = cfg.iters(2_000);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
     println!(
-        "scheduler_throughput: {JOBS} jobs x {} iters each ({}), {} reps trimmed-mean\n",
+        "scheduler_throughput: {JOBS} jobs x {} iters each ({}), {} reps trimmed-mean, {} cores\n",
         iters,
         cfg.scale_note(),
-        cfg.reps
+        cfg.reps,
+        cores
     );
 
-    let settings = ParallelSettings::with_workers(0);
     // Quality is only asserted at scales with enough iterations to
     // converge; smoke scale (2 iters) is a plumbing check, not a solve.
     let quality_bar = if iters >= 40 { 890_000.0 } else { f64::NEG_INFINITY };
+    let total_steps = (JOBS as u64 * iters) as f64;
+    // "speedup vs seq" follows the repo's speedup convention
+    // (baseline / variant, higher = faster), matching the table4/5
+    // benches.
     let mut table = Table::new(
         &format!("Scheduler throughput — {JOBS} x 1-D Cubic, {iters} iters"),
-        &["Mode", "time (s)", "jobs/s", "steps/s", "vs sequential"],
+        &["Mode", "time (s)", "jobs/s", "steps/s", "speedup vs seq"],
     );
 
-    // --- sequential one-shot baseline -----------------------------------
+    // --- sequential one-shot baseline (single-stream pool) ---------------
+    let settings = ParallelSettings::with_workers(0);
     let job_specs = specs(iters);
     let seq = measure_timed(&cfg, || {
         for spec in &job_specs {
@@ -74,7 +92,6 @@ fn main() {
         }
     });
     let seq_t = seq.trimmed_mean();
-    let total_steps = (JOBS as u64 * iters) as f64;
     table.row(&[
         "sequential one-shot".into(),
         format!("{seq_t:.4}"),
@@ -82,10 +99,11 @@ fn main() {
         format!("{:.0}", total_steps / seq_t),
         "1.00x".into(),
     ]);
+    drop(settings);
 
-    // --- interleaved via the scheduler, both policies --------------------
-    for policy in [SchedPolicy::RoundRobin, SchedPolicy::EarliestDeadlineFirst] {
-        let scheduler = JobScheduler::new(settings.clone()).policy(policy);
+    // --- scheduler sweep: S streams × step batch, both policies for the
+    // serialized case, round-robin for the concurrent ones ---------------
+    let mut emit = |label: String, scheduler: &JobScheduler| {
         let job_specs = specs(iters);
         let s = measure_timed(&cfg, || {
             let outcomes = scheduler.run(&job_specs).unwrap();
@@ -95,19 +113,40 @@ fn main() {
         });
         let t = s.trimmed_mean();
         table.row(&[
-            format!("scheduler ({policy})"),
+            label,
             format!("{t:.4}"),
             format!("{:.1}", JOBS as f64 / t),
             format!("{:.0}", total_steps / t),
-            format!("{:.2}x", t / seq_t),
+            format!("{:.2}x", seq_t / t),
         ]);
+    };
+
+    // Serialized path (S=1, batch=1): must be within noise of PR 1's
+    // scheduler — the fast path takes no stepping threads.
+    for policy in [SchedPolicy::RoundRobin, SchedPolicy::EarliestDeadlineFirst] {
+        let scheduler = JobScheduler::with_streams(0, 1).policy(policy);
+        emit(format!("scheduler S=1 batch=1 ({policy})"), &scheduler);
+    }
+
+    // Concurrent streams. batch=16 amortizes the per-round stepping
+    // threads; batch=1 shows the unamortized handoff cost.
+    for streams in [1usize, 2, 4] {
+        for batch in [1u64, 16] {
+            if streams == 1 && batch == 1 {
+                continue; // already reported above
+            }
+            let scheduler = JobScheduler::with_streams(0, streams).batch_steps(batch);
+            emit(format!("scheduler S={streams} batch={batch}"), &scheduler);
+        }
     }
 
     println!("{}", table.to_markdown());
     table.emit(&results_dir(), "scheduler_throughput").unwrap();
     println!(
-        "expectation: interleaved ~1x sequential (prepare-once buffers, no\n\
-         per-step allocation); the scheduler buys multi-tenancy and early\n\
-         termination, not raw speed."
+        "expectation: serialized scheduler ~1x sequential (prepare-once\n\
+         buffers, no per-step allocation); S=4/batch=16 beats S=1 on hosts\n\
+         with >= 4 cores because up to 4 tenant grids overlap their\n\
+         dispatch/join launch overhead instead of serializing on one\n\
+         launch guard."
     );
 }

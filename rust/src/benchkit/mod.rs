@@ -13,6 +13,9 @@
 //! * `CUPSO_BENCH_SCALE=ci` (default) — iteration counts divided so every
 //!   table finishes in a few minutes while preserving the comparisons.
 //! * `CUPSO_BENCH_REPS=n` — override repetition count.
+//!
+//! Unrecognized values of either variable abort the bench loudly instead
+//! of silently falling back to CI scale (see [`BenchConfig::from_env`]).
 
 use crate::metrics::Summary;
 
@@ -50,22 +53,38 @@ impl BenchConfig {
         }
     }
 
-    /// Resolve from the environment (see module docs).
-    pub fn from_env() -> Self {
-        let mut cfg = match std::env::var("CUPSO_BENCH_SCALE").as_deref() {
-            Ok("paper") => Self::paper(),
-            Ok("smoke") => Self {
+    /// Resolve a scale name (`paper` | `ci` | `smoke`).
+    pub fn from_scale(scale: &str) -> Option<Self> {
+        match scale {
+            "paper" => Some(Self::paper()),
+            "ci" => Some(Self::ci()),
+            "smoke" => Some(Self {
                 reps: 2,
                 warmup: 0,
                 iter_divisor: 1000,
                 max_particles: 8192,
-            },
-            _ => Self::ci(),
+            }),
+            _ => None,
+        }
+    }
+
+    /// Resolve from the environment (see module docs).
+    ///
+    /// An *unset* `CUPSO_BENCH_SCALE` defaults to CI scale, but a set,
+    /// unrecognized value panics: a typo like `SCALE=papr` silently
+    /// benchmarking 1/50th of the paper workload would produce numbers
+    /// that look plausible and mean nothing.
+    pub fn from_env() -> Self {
+        let mut cfg = match std::env::var("CUPSO_BENCH_SCALE") {
+            Ok(v) => Self::from_scale(&v).unwrap_or_else(|| {
+                panic!("CUPSO_BENCH_SCALE={v:?} is not one of paper|ci|smoke")
+            }),
+            Err(_) => Self::ci(),
         };
         if let Ok(r) = std::env::var("CUPSO_BENCH_REPS") {
-            if let Ok(r) = r.parse() {
-                cfg.reps = r;
-            }
+            cfg.reps = r
+                .parse()
+                .unwrap_or_else(|e| panic!("CUPSO_BENCH_REPS={r:?}: {e}"));
         }
         cfg
     }
@@ -121,6 +140,18 @@ mod tests {
         assert_eq!(p.reps, 10);
         assert_eq!(p.iter_divisor, 1);
         assert_eq!(p.iters(100_000), 100_000);
+    }
+
+    #[test]
+    fn from_scale_resolves_known_names_and_rejects_typos() {
+        assert_eq!(BenchConfig::from_scale("paper").unwrap().iter_divisor, 1);
+        assert_eq!(BenchConfig::from_scale("ci").unwrap().iter_divisor, 50);
+        assert_eq!(BenchConfig::from_scale("smoke").unwrap().iter_divisor, 1000);
+        // Typos must be rejected, not silently mapped to CI scale —
+        // from_env turns this None into a panic.
+        assert!(BenchConfig::from_scale("papr").is_none());
+        assert!(BenchConfig::from_scale("PAPER").is_none());
+        assert!(BenchConfig::from_scale("").is_none());
     }
 
     #[test]

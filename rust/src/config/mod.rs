@@ -275,6 +275,8 @@ pub struct JobConfig {
     pub iters: u64,
     /// Engine kind (Plane-A only).
     pub engine: EngineKind,
+    /// Velocity clamp as a fraction of the position range.
+    pub vmax_frac: f64,
     /// Master seed.
     pub seed: u64,
     /// Early stop: target fitness.
@@ -297,6 +299,7 @@ impl JobConfig {
             dim: 1,
             iters: 1000,
             engine: EngineKind::QueueLock,
+            vmax_frac: 0.5,
             seed: 42,
             target_fitness: None,
             stall_window: None,
@@ -318,6 +321,13 @@ impl JobConfig {
         }
         if crate::fitness::by_name(&self.fitness).is_none() {
             bail!("job {}: unknown fitness '{}'", self.name, self.fitness);
+        }
+        if !(0.0 < self.vmax_frac && self.vmax_frac <= 1.0) {
+            bail!(
+                "job {}: vmax_frac must be in (0, 1], got {}",
+                self.name,
+                self.vmax_frac
+            );
         }
         if !self.engine.is_plane_a() {
             bail!(
@@ -344,6 +354,11 @@ pub struct BatchConfig {
     pub workers: usize,
     /// Stepping policy name (`round-robin` | `edf`).
     pub policy: String,
+    /// Concurrent pool streams: up to this many jobs step in parallel
+    /// per scheduling round (1 = the serialized scheduler).
+    pub streams: usize,
+    /// Iterations per job per scheduling round (1 = step-at-a-time).
+    pub batch_steps: u64,
     /// The jobs, in file order.
     pub jobs: Vec<JobConfig>,
 }
@@ -373,6 +388,8 @@ impl BatchConfig {
         let mut cfg = Self {
             workers: 0,
             policy: "round-robin".into(),
+            streams: 1,
+            batch_steps: 1,
             jobs: Vec::new(),
         };
         // Materialize a job per `[jobs.<name>]` section header first, so a
@@ -421,6 +438,7 @@ impl BatchConfig {
                             EngineKind::parse(v).with_context(|| format!("bad engine {v}"))?;
                     }
                     "seed" => job.seed = as_uint(&value, &ctx)?,
+                    "vmax_frac" => job.vmax_frac = value.as_float(&ctx)?,
                     "target_fitness" => job.target_fitness = Some(value.as_float(&ctx)?),
                     "stall_window" => job.stall_window = Some(as_uint(&value, &ctx)?),
                     "max_steps" => job.max_steps = Some(as_uint(&value, &ctx)?),
@@ -441,6 +459,8 @@ impl BatchConfig {
                 match field {
                     "workers" => cfg.workers = as_uint(&value, &key)? as usize,
                     "policy" => cfg.policy = value.as_str(&key)?.to_string(),
+                    "streams" => cfg.streams = as_uint(&value, &key)? as usize,
+                    "batch_steps" => cfg.batch_steps = as_uint(&value, &key)?,
                     other => bail!("unknown batch key {other:?} (in {key:?})"),
                 }
             }
@@ -453,6 +473,12 @@ impl BatchConfig {
     pub fn validate(&self) -> Result<()> {
         if crate::scheduler::SchedPolicy::parse(&self.policy).is_none() {
             bail!("bad policy {:?} (round-robin|edf)", self.policy);
+        }
+        if self.streams == 0 {
+            bail!("streams must be >= 1");
+        }
+        if self.batch_steps == 0 {
+            bail!("batch_steps must be >= 1");
         }
         if self.jobs.is_empty() {
             bail!("batch config declares no [jobs.<name>] sections");
@@ -556,6 +582,38 @@ mod tests {
         assert_eq!(b.dim, 3);
         assert_eq!(b.stall_window, Some(50));
         assert_eq!(b.target_fitness, None);
+    }
+
+    #[test]
+    fn batch_config_parses_scheduler_knobs_and_vmax_frac() {
+        let cfg = BatchConfig::from_toml_str(
+            r#"
+            [scheduler]
+            workers = 8
+            streams = 4
+            batch_steps = 16
+
+            [jobs.a]
+            seed = 1
+            vmax_frac = 0.1
+            [jobs.b]
+            seed = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.streams, 4);
+        assert_eq!(cfg.batch_steps, 16);
+        assert_eq!(cfg.jobs[0].vmax_frac, 0.1);
+        assert_eq!(cfg.jobs[1].vmax_frac, 0.5, "default preserved");
+        // Defaults when the keys are absent: the serialized scheduler.
+        let plain = BatchConfig::from_toml_str("[jobs.x]\nseed = 1").unwrap();
+        assert_eq!(plain.streams, 1);
+        assert_eq!(plain.batch_steps, 1);
+        // Out-of-range values are load-time errors.
+        assert!(BatchConfig::from_toml_str("streams = 0\n[jobs.x]\nseed = 1").is_err());
+        assert!(BatchConfig::from_toml_str("batch_steps = 0\n[jobs.x]\nseed = 1").is_err());
+        assert!(BatchConfig::from_toml_str("[jobs.x]\nvmax_frac = 0.0").is_err());
+        assert!(BatchConfig::from_toml_str("[jobs.x]\nvmax_frac = 1.5").is_err());
     }
 
     #[test]

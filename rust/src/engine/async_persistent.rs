@@ -108,7 +108,7 @@ impl Engine for AsyncEngine {
         let pbest_improvements = AtomicU64::new(0);
 
         // ---- the single persistent launch ----
-        self.settings.pool.launch(blocks, |ctx| {
+        self.settings.launch(blocks, |ctx| {
             let b = ctx.block_id;
             let (lo, hi) = self.settings.block_range(b, params.n);
             // SAFETY: per-block disjoint state/scratch (see common.rs).
@@ -211,7 +211,7 @@ impl Run for AsyncStepRun<'_> {
             let gbest = &self.gbest;
             let pbest_improvements = &self.pbest_improvements;
             let blocks = settings.blocks_for(params.n);
-            settings.pool.launch(blocks, |ctx| {
+            settings.launch(blocks, |ctx| {
                 let b = ctx.block_id;
                 let (lo, hi) = settings.block_range(b, params.n);
                 // SAFETY: per-block disjoint state/scratch (see common.rs).
@@ -232,6 +232,79 @@ impl Run for AsyncStepRun<'_> {
         self.iter += 1;
         if iter % self.stride == 0 {
             self.history.push((iter, self.gbest.fit_relaxed()));
+        }
+        let improved = self.gbest.update_count() > updates_before;
+        StepReport {
+            iter: self.iter,
+            gbest_fit: self.gbest.fit_relaxed(),
+            gbest_pos: improved.then(|| self.gbest.pos_vec()),
+            improved,
+            done: self.iter >= self.params.max_iter,
+        }
+    }
+
+    /// Batched stepping in the engine's native style: ONE launch in which
+    /// every block free-runs the batch's `k` iterations (re-reading the
+    /// global best at each iteration top, publishing through the lock) —
+    /// the per-iteration dispatch/join overhead is paid once per batch
+    /// instead of once per step. Blocks of the same batch drift apart
+    /// freely, which is exactly the asynchrony this engine documents for
+    /// its one-shot `run`; with a single block (or `k = 1`) it is
+    /// bit-identical to the default step loop. History is sampled at
+    /// batch, not step, granularity: stride marks crossed inside a batch
+    /// all record the post-batch global best.
+    fn step_many(&mut self, k: u64) -> StepReport {
+        if self.iter >= self.params.max_iter {
+            return StepReport {
+                iter: self.iter,
+                gbest_fit: self.gbest.fit_relaxed(),
+                gbest_pos: None,
+                improved: false,
+                done: true,
+            };
+        }
+        let start = self.iter;
+        let end = start.saturating_add(k.max(1)).min(self.params.max_iter);
+        let updates_before = self.gbest.update_count();
+        {
+            let settings = &self.settings;
+            let params = &self.params;
+            let fitness = self.fitness;
+            let objective = self.objective;
+            let stream = &self.stream;
+            let state = &self.state;
+            let step_scratch = &self.step_scratch;
+            let snapshots = &self.snapshots;
+            let gbest = &self.gbest;
+            let pbest_improvements = &self.pbest_improvements;
+            let blocks = settings.blocks_for(params.n);
+            settings.launch(blocks, |ctx| {
+                let b = ctx.block_id;
+                let (lo, hi) = settings.block_range(b, params.n);
+                // SAFETY: per-block disjoint state/scratch (see common.rs).
+                let st = unsafe { state.get() };
+                let ss = unsafe { step_scratch.get(b) };
+                let frozen = unsafe { snapshots.get(b) };
+                let mut improved = 0u64;
+                for iter in start..end {
+                    gbest.load_pos(frozen);
+                    let (best, best_i) = step_block(
+                        st, lo, hi, frozen, params, fitness, objective, stream, iter, ss,
+                    );
+                    if best_i != usize::MAX && objective.better(best, gbest.fit_relaxed()) {
+                        gbest.update_locked(objective, best, || st.position_of(best_i));
+                    }
+                    improved +=
+                        ss.improved[..hi - lo].iter().filter(|&&x| x).count() as u64;
+                }
+                pbest_improvements.fetch_add(improved, Ordering::Relaxed);
+            });
+        }
+        self.iter = end;
+        for mark in start..end {
+            if mark % self.stride == 0 {
+                self.history.push((mark, self.gbest.fit_relaxed()));
+            }
         }
         let improved = self.gbest.update_count() > updates_before;
         StepReport {

@@ -17,30 +17,41 @@ pub struct ParallelSettings {
     pub pool: Arc<GridPool>,
     /// Particles per logical block (the CUDA `blockDim.x`; paper-style 256).
     pub block_size: usize,
+    /// Which pool stream every grid launch of these settings targets
+    /// (wrapped modulo the pool's stream count). On a single-stream pool
+    /// this is always stream 0, i.e. the original serialized semantics;
+    /// the [`crate::scheduler`] pins each job to one stream so independent
+    /// jobs launch concurrently.
+    pub stream: usize,
 }
 
 impl ParallelSettings {
     /// Default block size, matching common CUDA practice for PPSO.
     pub const DEFAULT_BLOCK_SIZE: usize = 256;
 
-    /// Settings with `workers` pool threads (0 = machine default).
+    /// Settings with `workers` pool threads (0 = machine default) on a
+    /// single-stream pool.
     pub fn with_workers(workers: usize) -> Self {
-        let pool = if workers == 0 {
-            GridPool::with_default_parallelism()
-        } else {
-            GridPool::new(workers)
-        };
+        Self::with_streams(workers, 1)
+    }
+
+    /// Settings with `workers` pool threads (0 = machine default; the
+    /// pool owns that resolution) split into `streams` concurrent stream
+    /// groups, targeting stream 0.
+    pub fn with_streams(workers: usize, streams: usize) -> Self {
         Self {
-            pool: Arc::new(pool),
+            pool: Arc::new(GridPool::with_streams(workers, streams)),
             block_size: Self::DEFAULT_BLOCK_SIZE,
+            stream: 0,
         }
     }
 
-    /// Settings on an existing pool.
+    /// Settings on an existing pool (targeting stream 0).
     pub fn with_pool(pool: Arc<GridPool>) -> Self {
         Self {
             pool,
             block_size: Self::DEFAULT_BLOCK_SIZE,
+            stream: 0,
         }
     }
 
@@ -48,6 +59,20 @@ impl ParallelSettings {
     pub fn block_size(mut self, bs: usize) -> Self {
         self.block_size = bs.max(1);
         self
+    }
+
+    /// Pin every launch to pool stream `s % pool.streams()`.
+    pub fn on_stream(mut self, s: usize) -> Self {
+        self.stream = s % self.pool.streams();
+        self
+    }
+
+    /// Launch a grid on the pinned stream — the engines' single entry to
+    /// the pool, so a run's stream assignment is one field, not N call
+    /// sites.
+    #[inline]
+    pub fn launch<F: Fn(crate::exec::BlockCtx) + Sync>(&self, blocks: usize, kernel: F) {
+        self.pool.launch_on(self.stream, blocks, kernel);
     }
 
     /// Number of blocks covering `n` particles.

@@ -88,6 +88,36 @@ pub trait Run: Send {
     /// Advance one PSO iteration (or report `done` if the budget is spent).
     fn step(&mut self) -> StepReport;
 
+    /// Advance up to `k` iterations (stopping early at the budget) and
+    /// report the state after the batch: `iter`/`gbest_fit`/`done` are
+    /// those of the last executed step, while `improved` (and the
+    /// accompanying `gbest_pos`) covers the *whole* batch — true if any
+    /// step in it improved the global best. `k = 0` behaves like `k = 1`.
+    ///
+    /// The default loops over [`step`](Run::step) and is therefore
+    /// trajectory-identical to manual stepping; engines may override it to
+    /// amortize per-step overhead (e.g. one grid launch for the whole
+    /// batch), as long as a batch of `k` steps stays within the engine's
+    /// documented step semantics.
+    fn step_many(&mut self, k: u64) -> StepReport {
+        let mut report = self.step();
+        let mut improved = report.improved;
+        for _ in 1..k {
+            if report.done {
+                break;
+            }
+            report = self.step();
+            improved |= report.improved;
+        }
+        report.improved = improved;
+        if improved && report.gbest_pos.is_none() {
+            // The global best is monotone, so the current position is the
+            // one published by the batch's last improvement.
+            report.gbest_pos = Some(self.gbest_pos());
+        }
+        report
+    }
+
     /// Consume the run into its final output (valid after any number of
     /// steps — early termination simply reports fewer `iters`).
     fn finish(self: Box<Self>) -> RunOutput;

@@ -149,7 +149,7 @@ impl Run for QueueRun<'_> {
             let threshold = gbest.fit_relaxed();
             let blocks = settings.blocks_for(params.n);
             // ---- 1st kernel: step + conditional queue + thread-0 scan ----
-            settings.pool.launch(blocks, |ctx| {
+            settings.launch(blocks, |ctx| {
                 let b = ctx.block_id;
                 let (lo, hi) = settings.block_range(b, params.n);
                 let q = &queues[b];
@@ -178,7 +178,7 @@ impl Run for QueueRun<'_> {
                 unsafe { *aux.get(b) = best };
             });
             // ---- 2nd kernel: single block scans aux -> global best ----
-            settings.pool.launch(1, |_| {
+            settings.launch(1, |_| {
                 let mut best = (objective.worst(), u32::MAX);
                 for b in 0..aux.len() {
                     // SAFETY: 1st kernel joined; exclusive read.

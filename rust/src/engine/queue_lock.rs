@@ -140,7 +140,7 @@ impl Run for QueueLockRun<'_> {
             let gbest = &self.gbest;
             let blocks = settings.blocks_for(params.n);
             // ---- single fused kernel ----
-            settings.pool.launch(blocks, |ctx| {
+            settings.launch(blocks, |ctx| {
                 let b = ctx.block_id;
                 let (lo, hi) = settings.block_range(b, params.n);
                 let q = &queues[b];

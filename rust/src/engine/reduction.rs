@@ -39,7 +39,13 @@ fn reduce_tree(scratch: &mut Scratch, m: usize, objective: Objective, unrolled: 
     let len = m.next_power_of_two();
     let (fits, idxs) = (&mut scratch.fits, &mut scratch.idxs);
 
-    /// One reduction level: fold `[j + s]` into `[j]`.
+    /// One reduction level: fold `[j + s]` into `[j]`. A NaN incumbent
+    /// yields to any non-NaN candidate: the strict comparison alone would
+    /// silently *retain* NaN (both orderings are false against it) and
+    /// discard finite values folded into that slot — unlike the linear
+    /// scans of the serial references and the Queue engines, which NaN
+    /// can never enter. This keeps the tree's NaN behavior identical to
+    /// theirs (see the NaN policy in `crate::fitness`).
     macro_rules! level {
         ($s:expr) => {
             let s = $s;
@@ -50,7 +56,8 @@ fn reduce_tree(scratch: &mut Scratch, m: usize, objective: Objective, unrolled: 
                     idxs[j + s] as usize,
                     fits[j],
                     idxs[j] as usize,
-                ) {
+                ) || (fits[j].is_nan() && !fits[j + s].is_nan())
+                {
                     fits[j] = fits[j + s];
                     idxs[j] = idxs[j + s];
                 }
@@ -243,7 +250,7 @@ impl Run for ReductionRun<'_> {
             let frozen_ref = &self.frozen;
             let blocks = settings.blocks_for(params.n);
             // ---- 1st kernel: step + intra-block reduction -> aux ----
-            settings.pool.launch(blocks, |ctx| {
+            settings.launch(blocks, |ctx| {
                 let b = ctx.block_id;
                 let (lo, hi) = settings.block_range(b, params.n);
                 // SAFETY: this block only touches particles [lo, hi).
@@ -272,7 +279,7 @@ impl Run for ReductionRun<'_> {
                 unsafe { *aux.get(b) = (bf, bi) };
             });
             // ---- 2nd kernel: single block reduces aux -> global best ----
-            settings.pool.launch(1, |_| {
+            settings.launch(1, |_| {
                 debug_assert!(!aux.is_empty());
                 // SAFETY: all 1st-kernel blocks joined; single block here.
                 let sc = unsafe { k2_scratch.get(0) };
@@ -359,6 +366,23 @@ mod tests {
             let (f, i) = reduce_tree(&mut sc, 5, Objective::Maximize, unrolled);
             assert_eq!(f, 7.0);
             assert_eq!(i, 1, "tie must go to the lower index (unrolled={unrolled})");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_never_lets_nan_shadow_finite_values() {
+        // A NaN that lands in a fold slot must not eat the finite value
+        // folded into it (the strict comparison is false both ways
+        // against NaN, which would silently retain it).
+        for unrolled in [false, true] {
+            let mut sc = scratch_from(&[f64::NAN, 5.0, f64::NAN, 3.0]);
+            let (f, i) = reduce_tree(&mut sc, 4, Objective::Maximize, unrolled);
+            assert_eq!((f, i), (5.0, 1), "unrolled={unrolled}");
+            // All-NaN input: the winner is NaN (rejected downstream by
+            // the strict gbest comparison), never a fabricated number.
+            let mut sc = scratch_from(&[f64::NAN, f64::NAN]);
+            let (f, _) = reduce_tree(&mut sc, 2, Objective::Maximize, unrolled);
+            assert!(f.is_nan() || f == f64::NEG_INFINITY, "unrolled={unrolled}");
         }
     }
 

@@ -116,4 +116,15 @@ mod tests {
         assert!(a.fetch_max(-1e300));
         assert_eq!(a.load(Relaxed), -1e300);
     }
+
+    #[test]
+    fn nan_never_stores_via_fetch_max_or_min() {
+        // The gbest fast path's half of the NaN policy (see
+        // crate::fitness module docs): a NaN candidate never sticks.
+        let a = AtomicF64::new(2.0);
+        assert!(!a.fetch_max(f64::NAN));
+        assert_eq!(a.load(Relaxed), 2.0);
+        assert!(!a.fetch_min(f64::NAN));
+        assert_eq!(a.load(Relaxed), 2.0);
+    }
 }

@@ -1,4 +1,4 @@
-//! Persistent worker pool with a grid-launch API.
+//! Persistent worker pool with a grid-launch API and concurrent streams.
 //!
 //! [`GridPool::launch`] is the `kernel<<<blocks, ...>>>()` analog: it hands
 //! every logical *block* to a pool worker and returns only when all blocks
@@ -7,14 +7,30 @@
 //! Queue-Lock engine's whole advantage (one launch per iteration instead
 //! of two) is measured against exactly this cost, mirroring the paper.
 //!
+//! ## Streams
+//!
+//! A pool is partitioned into `S` disjoint **stream groups** (CUDA-stream
+//! analog): each stream owns its own slice of the workers and its own
+//! job slot / generation / claim counters / launch guard, so up to `S`
+//! independent grids can be in flight simultaneously —
+//! [`GridPool::launch_on`]`(s, …)` targets stream `s` and only ever
+//! synchronizes with other launches on the *same* stream. This is the
+//! paper's Algorithm-3 asynchrony idea lifted one level up: instead of
+//! relaxing the barrier between thread groups *inside* one grid, the
+//! stream groups relax the barrier between whole grids, so N tenant jobs
+//! no longer serialize on a single launch guard. [`GridPool::new`] builds
+//! a single-stream pool and [`GridPool::launch`] targets stream 0, which
+//! keeps the original one-grid-in-flight semantics for every existing
+//! caller.
+//!
 //! Workers spin briefly before parking on a condvar so back-to-back
 //! launches (100k iterations × 1–2 launches each) stay in the fast path,
 //! like a GPU's hardware dispatch queue.
 //!
 //! ## Handoff protocol (why this is race-free)
 //!
-//! The job slot is an `UnsafeCell<JobDesc>` guarded by a generation
-//! counter plus an active-worker count:
+//! Each stream's job slot is an `UnsafeCell<JobDesc>` guarded by a
+//! generation counter plus an active-worker count:
 //!
 //! * the launcher writes the slot **only while `active == 0`**, then bumps
 //!   `generation` (Release);
@@ -28,6 +44,12 @@
 //!   are reset together with the slot write, so a worker can never claim a
 //!   block of generation *N+1* while holding the descriptor of *N*: it is
 //!   inside `active > 0` for the whole window, which blocks the reset.
+//!
+//! Streams never share any of this state — a worker belongs to exactly
+//! one stream for its whole life — so the single-stream proof carries
+//! over unchanged: concurrent `launch_on` calls on *different* streams
+//! touch disjoint `Shared` instances, and calls on the *same* stream are
+//! serialized by that stream's launch guard.
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -41,9 +63,10 @@ pub struct BlockCtx {
     pub block_id: usize,
     /// `gridDim.x`.
     pub num_blocks: usize,
-    /// Which pool worker is running this block. Workers are `0..workers`;
-    /// the launching thread itself participates as id `workers`, so
-    /// per-worker scratch must be sized `workers() + 1`.
+    /// Which pool worker is running this block. Dedicated workers are
+    /// globally unique across streams (`0..workers`); the thread calling
+    /// `launch_on(s, …)` itself participates as id `workers() + s`, so
+    /// per-worker scratch must be sized `workers() + streams()`.
     pub worker_id: usize,
 }
 
@@ -85,20 +108,30 @@ struct Shared {
 unsafe impl Send for Shared {}
 unsafe impl Sync for Shared {}
 
-/// A fixed set of persistent OS-thread workers executing grid launches.
-///
-/// Launches are serialized (one grid in flight, like a single CUDA
-/// stream); kernels must not launch nested grids on the same pool.
-pub struct GridPool {
+/// One stream group: its shared handoff state, its dedicated workers,
+/// and the guard serializing launches *on this stream only*.
+struct StreamState {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
     launch_guard: Mutex<()>,
+    /// Dedicated workers in this group (excluding the helping launcher).
+    workers: usize,
+}
+
+/// A fixed set of persistent OS-thread workers executing grid launches,
+/// partitioned into one or more concurrent streams.
+///
+/// Launches on one stream are serialized (one grid in flight per stream,
+/// like a CUDA stream); launches on different streams run concurrently.
+/// Kernels must not launch nested grids on the same stream.
+pub struct GridPool {
+    streams: Vec<StreamState>,
     workers: usize,
 }
 
 /// Spin budget when cores are plentiful.
 const SPIN_ROUNDS_PARALLEL: u32 = 20_000;
-/// Spin budget when the pool (workers + launcher) oversubscribes the
+/// Spin budget when the pool (workers + launchers) oversubscribes the
 /// machine — effectively "yield immediately".
 const SPIN_ROUNDS_OVERSUB: u32 = 16;
 
@@ -116,73 +149,120 @@ fn spin_wait<F: Fn() -> bool>(budget: u32, cond: F) {
 }
 
 impl GridPool {
-    /// Pool with `workers` OS threads; 0 clamps to 1.
+    /// Single-stream pool with `workers` OS threads (0 = machine
+    /// default).
     pub fn new(workers: usize) -> Self {
-        let workers = workers.max(1);
+        Self::with_streams(workers, 1)
+    }
+
+    /// Pool with `workers` OS threads (0 = machine default, the single
+    /// source of that rule) split across `streams` disjoint groups
+    /// (clamped to ≥ 1). Workers are distributed as evenly as possible;
+    /// when `workers < streams` the surplus streams get no dedicated
+    /// workers and execute entirely on their launching thread (which
+    /// always helps drain its grid anyway).
+    pub fn with_streams(workers: usize, streams: usize) -> Self {
+        let n_streams = streams.max(1);
         let cores = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1);
-        // workers + the helping launcher must fit in the cores for
-        // spinning to be productive.
-        let spin_rounds = if cores > workers {
+        let workers = if workers == 0 { cores } else { workers };
+        // Workers plus the (up to) one helping launcher per stream must
+        // fit in the cores for spinning to be productive.
+        let spin_rounds = if cores >= workers + n_streams {
             SPIN_ROUNDS_PARALLEL
         } else {
             SPIN_ROUNDS_OVERSUB
         };
-        let shared = Arc::new(Shared {
-            generation: AtomicU64::new(0),
-            job: UnsafeCell::new(None),
-            next_block: AtomicUsize::new(0),
-            blocks_done: AtomicUsize::new(0),
-            active: AtomicUsize::new(0),
-            shutdown: AtomicBool::new(false),
-            idle: Mutex::new(()),
-            work_cv: Condvar::new(),
-            spin_rounds,
-        });
-        // On a single-core host extra worker threads only add context
-        // switches: the launcher (which always helps) executes the whole
-        // grid itself through the identical protocol, so semantics and
-        // the per-launch overhead structure are unchanged.
-        let spawn_workers = if cores == 1 { 0 } else { workers };
-        let handles = (0..spawn_workers)
-            .map(|wid| {
-                let sh = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("cupso-grid-{wid}"))
-                    .spawn(move || worker_loop(sh, wid))
-                    .expect("spawn grid worker")
+        let base = workers / n_streams;
+        let rem = workers % n_streams;
+        let mut next_worker_id = 0usize;
+        let streams = (0..n_streams)
+            .map(|s| {
+                let group_workers = base + usize::from(s < rem);
+                let shared = Arc::new(Shared {
+                    generation: AtomicU64::new(0),
+                    job: UnsafeCell::new(None),
+                    next_block: AtomicUsize::new(0),
+                    blocks_done: AtomicUsize::new(0),
+                    active: AtomicUsize::new(0),
+                    shutdown: AtomicBool::new(false),
+                    idle: Mutex::new(()),
+                    work_cv: Condvar::new(),
+                    spin_rounds,
+                });
+                // On a single-core host extra worker threads only add
+                // context switches: the launcher (which always helps)
+                // executes the whole grid itself through the identical
+                // protocol, so semantics and the per-launch overhead
+                // structure are unchanged.
+                let spawn_workers = if cores == 1 { 0 } else { group_workers };
+                let handles = (0..spawn_workers)
+                    .map(|_| {
+                        let wid = next_worker_id;
+                        next_worker_id += 1;
+                        let sh = shared.clone();
+                        std::thread::Builder::new()
+                            .name(format!("cupso-grid-{s}-{wid}"))
+                            .spawn(move || worker_loop(sh, wid))
+                            .expect("spawn grid worker")
+                    })
+                    .collect();
+                StreamState {
+                    shared,
+                    handles,
+                    launch_guard: Mutex::new(()),
+                    workers: group_workers,
+                }
             })
             .collect();
-        Self {
-            shared,
-            handles,
-            launch_guard: Mutex::new(()),
-            workers,
-        }
+        Self { streams, workers }
     }
 
-    /// Pool sized to the machine (`available_parallelism`).
+    /// Single-stream pool sized to the machine (`available_parallelism`).
     pub fn with_default_parallelism() -> Self {
-        let n = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4);
-        Self::new(n)
+        Self::new(0)
     }
 
-    /// Number of pool workers (excluding the helping launcher thread).
+    /// Total dedicated pool workers across all streams (excluding the
+    /// helping launcher threads).
     pub fn workers(&self) -> usize {
         self.workers
     }
 
-    /// Run `kernel` once per block and wait for every block — the
-    /// `<<<blocks>>>` launch plus its implicit barrier.
+    /// Number of concurrent stream groups.
+    pub fn streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Dedicated workers in stream `s` (may be 0 — the launcher still
+    /// drains such a stream's grids by itself).
+    pub fn stream_workers(&self, s: usize) -> usize {
+        self.streams[s].workers
+    }
+
+    /// Run `kernel` once per block on stream 0 and wait for every block —
+    /// the `<<<blocks>>>` launch plus its implicit barrier. On a
+    /// single-stream pool this is exactly the original serialized-pool
+    /// semantics.
     pub fn launch<F: Fn(BlockCtx) + Sync>(&self, blocks: usize, kernel: F) {
+        self.launch_on(0, blocks, kernel);
+    }
+
+    /// Run `kernel` once per block on stream `stream % streams()` and wait
+    /// for every block. Launches on the same stream serialize on that
+    /// stream's guard; launches on different streams proceed concurrently.
+    ///
+    /// The modulo wrap lets callers pin work by an arbitrary index (e.g.
+    /// a job number) without tracking the pool's stream count.
+    pub fn launch_on<F: Fn(BlockCtx) + Sync>(&self, stream: usize, blocks: usize, kernel: F) {
         if blocks == 0 {
             return;
         }
-        let _g = self.launch_guard.lock().unwrap();
-        let sh = &*self.shared;
+        let s = stream % self.streams.len();
+        let st = &self.streams[s];
+        let _g = st.launch_guard.lock().unwrap();
+        let sh = &*st.shared;
         // Quiesce: nobody may still be reading the previous descriptor.
         spin_wait(sh.spin_rounds, || sh.active.load(Ordering::SeqCst) == 0);
         // Erase the closure's lifetime: sound because this function joins
@@ -203,14 +283,15 @@ impl GridPool {
         sh.next_block.store(0, Ordering::Relaxed);
         sh.blocks_done.store(0, Ordering::Relaxed);
         sh.generation.fetch_add(1, Ordering::Release);
-        if !self.handles.is_empty() {
+        if !st.handles.is_empty() {
             let _idle = sh.idle.lock().unwrap();
             sh.work_cv.notify_all();
         }
         // The launcher helps drain the grid, then waits for stragglers and
         // for every worker to deregister (so the descriptor can be
-        // invalidated when `kernel` drops).
-        run_blocks(sh, desc, self.workers);
+        // invalidated when `kernel` drops). Its worker id is unique per
+        // stream so concurrent launchers never collide.
+        run_blocks(sh, desc, self.workers + s);
         spin_wait(sh.spin_rounds, || {
             sh.blocks_done.load(Ordering::Acquire) >= blocks
         });
@@ -220,13 +301,15 @@ impl GridPool {
 
 impl Drop for GridPool {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
-        {
-            let _idle = self.shared.idle.lock().unwrap();
-            self.shared.work_cv.notify_all();
+        for st in &self.streams {
+            st.shared.shutdown.store(true, Ordering::SeqCst);
+            let _idle = st.shared.idle.lock().unwrap();
+            st.shared.work_cv.notify_all();
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        for st in &mut self.streams {
+            for h in st.handles.drain(..) {
+                let _ = h.join();
+            }
         }
     }
 }

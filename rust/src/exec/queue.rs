@@ -52,16 +52,24 @@ impl<T: Copy> SharedQueue<T> {
     /// `None` if the queue is full (the paper sizes the queue = block size
     /// so overflow is impossible there; we keep the check for smaller
     /// capacities and count the drop).
+    ///
+    /// The claim is a saturating CAS (`fetch_update`) rather than a plain
+    /// `fetch_add` + back-out `fetch_sub`: the unconditional back-out
+    /// could interleave with a concurrent `reset` (or with other
+    /// overflowing pushers racing a reset) and drive `len` below zero —
+    /// wrapping it to a huge value and corrupting every later claim. With
+    /// the CAS claim, `len` is *never* written past `capacity`, so no
+    /// compensation exists to race with.
     #[inline]
     pub fn push(&self, value: T) -> Option<usize> {
-        let idx = self.len.fetch_add(1, Ordering::AcqRel);
-        if idx >= self.slots.len() {
-            // Back out the overshoot so len stays ≤ capacity-ish; the
-            // saturating semantic only matters for diagnostics.
-            self.len.fetch_sub(1, Ordering::AcqRel);
-            return None;
-        }
-        // SAFETY: idx was uniquely claimed by fetch_add.
+        let cap = self.slots.len();
+        let idx = self
+            .len
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < cap).then_some(n + 1)
+            })
+            .ok()?;
+        // SAFETY: idx was uniquely claimed by the successful CAS.
         unsafe { *self.slots[idx].get() = value };
         self.total_pushes.fetch_add(1, Ordering::Relaxed);
         Some(idx)
@@ -147,6 +155,49 @@ mod tests {
         assert!(q.push(2).is_some());
         assert!(q.push(3).is_none());
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_overflow_never_corrupts_len() {
+        // Many producers hammering a tiny queue: exactly `capacity` pushes
+        // may win per round, len must never exceed (or wrap below)
+        // capacity, and a reset between rounds must restore full capacity.
+        // The old fetch_add/fetch_sub back-out underflowed `len` when
+        // overflowing pushers raced a reset.
+        const CAP: usize = 16;
+        const THREADS: u64 = 8;
+        const PER_THREAD: u64 = 2_000;
+        let q: Arc<SharedQueue<u64>> = Arc::new(SharedQueue::new(CAP));
+        for round in 0..4u64 {
+            let mut handles = vec![];
+            for t in 0..THREADS {
+                let q = q.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut wins = 0u64;
+                    for i in 0..PER_THREAD {
+                        if q.push(t * PER_THREAD + i).is_some() {
+                            wins += 1;
+                        }
+                        // The *raw* counter (not the clamped len()) must
+                        // never overshoot capacity: the old fetch_add +
+                        // back-out claim left a window where it did, and
+                        // a reset in that window wrapped it below zero.
+                        let raw = q.len.load(Ordering::Acquire);
+                        assert!(raw <= CAP, "raw len {raw} overshot capacity");
+                    }
+                    wins
+                }));
+            }
+            let wins: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            assert_eq!(wins, CAP as u64, "round {round}: exactly CAP claims win");
+            assert_eq!(q.len(), CAP);
+            let mut seen = 0;
+            q.scan(|_| seen += 1);
+            assert_eq!(seen, CAP);
+            q.reset();
+            assert!(q.is_empty(), "round {round}: reset must restore the queue");
+        }
+        assert_eq!(q.total_pushes(), 4 * CAP as u64);
     }
 
     #[test]

@@ -6,6 +6,31 @@
 //! paper names as alternatives (Sphere, Rosenbrock, Griewank) and a few
 //! more that downstream users expect (Rastrigin, Ackley, Schwefel 2.26),
 //! each with its canonical search domain and optimization sense.
+//!
+//! ## NaN policy
+//!
+//! A fitness function may return `NaN` (domain violations, `0/0` in a
+//! user-supplied objective, …). The policy, uniform across the serial
+//! reference and every Plane-A engine, is: **a NaN candidate never
+//! wins**. Every best-datum comparison funnels through
+//! [`Objective::better`] (or tie-broken wrappers around it), whose strict
+//! `>` / `<` is false whenever either side is NaN — so NaN fitness never
+//! replaces a personal best, never enters a block best, and never reaches
+//! the global best; the same holds for the lock-free
+//! [`crate::exec::AtomicF64::fetch_max`] / `fetch_min` fast paths. If
+//! *every* evaluation is NaN the global best stays at the seed value
+//! [`Objective::worst`] (±∞) with zero improvements, identically in all
+//! engines.
+//!
+//! One asymmetry follows from "NaN never wins": the *personal*-best slots
+//! are seeded from the initial evaluation, so a particle whose very first
+//! fitness is NaN keeps that NaN pbest forever (a finite later fitness
+//! fails the strict comparison against it too). Such a particle still
+//! moves, and its per-iteration fitness still competes for block and
+//! global bests — only its pbest attractor is frozen at the spawn
+//! position. This too is identical across the serial references and every
+//! Plane-A engine, which is what the `nan_*` tests here and the NaN suite
+//! in `rust/tests/engine_equivalence.rs` pin down.
 
 mod functions;
 
@@ -26,6 +51,10 @@ pub enum Objective {
 
 impl Objective {
     /// Is `a` strictly better than `b` under this sense?
+    ///
+    /// Strict comparison, so it is false when either side is NaN: a NaN
+    /// candidate can never displace any incumbent (see the module-level
+    /// NaN policy).
     #[inline(always)]
     pub fn better(self, a: f64, b: f64) -> bool {
         match self {
@@ -153,6 +182,23 @@ mod tests {
         assert!(Objective::Minimize.better(1.0, 2.0));
         assert!(Objective::Maximize.better(0.0, Objective::Maximize.worst()));
         assert!(Objective::Minimize.better(0.0, Objective::Minimize.worst()));
+    }
+
+    #[test]
+    fn nan_never_wins_better() {
+        // The NaN policy's foundation: strict comparisons are false when
+        // either side is NaN, under both senses.
+        for obj in [Objective::Maximize, Objective::Minimize] {
+            assert!(!obj.better(f64::NAN, 1.0), "{obj:?}: NaN beat a number");
+            assert!(!obj.better(f64::NAN, obj.worst()), "{obj:?}: NaN beat worst");
+            assert!(!obj.better(f64::NAN, f64::NAN), "{obj:?}: NaN beat NaN");
+            // And an incumbent NaN is never *protected* either: finite
+            // candidates also fail the strict comparison against NaN, so
+            // comparisons against NaN resolve to "keep the incumbent"
+            // both ways — which is why NaN must be kept out of the
+            // incumbent slots in the first place (seeding uses worst()).
+            assert!(!obj.better(1.0, f64::NAN), "{obj:?}");
+        }
     }
 
     #[test]

@@ -204,6 +204,8 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
         .opt("config", "multi-job TOML file", Some("config/batch_demo.toml"))
         .opt("workers", "worker threads (0 = all cores; overrides the file)", None)
         .opt("policy", "round-robin|edf (overrides the file)", None)
+        .opt("streams", "concurrent pool streams (overrides the file)", None)
+        .opt("batch-steps", "iterations per job per round (overrides the file)", None)
         .switch("trace", "print every global-best improvement as it lands");
     if rest.iter().any(|a| a == "--help") {
         println!("{}", spec.usage());
@@ -219,6 +221,19 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
     if let Some(p) = args.get("policy") {
         cfg.policy = p.to_string();
     }
+    if let Some(s) = args.get("streams") {
+        cfg.streams = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--streams {s:?}: {e}"))?;
+    }
+    if let Some(b) = args.get("batch-steps") {
+        cfg.batch_steps = b
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--batch-steps {b:?}: {e}"))?;
+    }
+    if cfg.streams == 0 || cfg.batch_steps == 0 {
+        bail!("--streams and --batch-steps must be >= 1");
+    }
     let policy = SchedPolicy::parse(&cfg.policy)
         .with_context(|| format!("bad policy {:?} (round-robin|edf)", cfg.policy))?;
     let trace = args.flag("trace");
@@ -228,19 +243,25 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
         .iter()
         .map(JobSpec::from_config)
         .collect::<Result<_>>()?;
-    let scheduler = JobScheduler::new(ParallelSettings::with_workers(cfg.workers)).policy(policy);
+    let scheduler = JobScheduler::new(ParallelSettings::with_streams(cfg.workers, cfg.streams))
+        .policy(policy)
+        .batch_steps(cfg.batch_steps);
     println!(
-        "cupso batch: {} jobs, {} policy, {} pool workers",
+        "cupso batch: {} jobs, {} policy, {} pool workers, {} streams, {} steps/round",
         specs.len(),
         policy,
-        scheduler.pool().workers()
+        scheduler.pool().workers(),
+        scheduler.streams(),
+        cfg.batch_steps
     );
 
-    let mut total_steps = 0u64;
+    // One JobReport per stepped job per scheduling round (so with
+    // --streams > 1 several reports share a round).
+    let mut reports = 0u64;
     let mut improvements = 0u64;
     let sw = Stopwatch::start();
     let outcomes = scheduler.run_with(&specs, |r| {
-        total_steps += 1;
+        reports += 1;
         if r.improved {
             improvements += 1;
             if trace {
@@ -249,6 +270,10 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
         }
     })?;
     let elapsed = sw.elapsed_s();
+    // A telemetry report covers a whole round (batch_steps iterations),
+    // so iteration throughput comes from the outcomes, not the report
+    // count.
+    let total_steps: u64 = outcomes.iter().map(|o| o.steps).sum();
 
     let mut table = Table::new(
         "Batch results",
@@ -266,12 +291,14 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
     }
     println!("{}", table.to_markdown());
     println!(
-        "aggregate: {} jobs in {:.3}s — {:.1} jobs/s, {} steps ({:.0} steps/s), {} improvements",
+        "aggregate: {} jobs in {:.3}s — {:.1} jobs/s, {} steps ({:.0} steps/s), \
+         {} job-reports ({} improving)",
         outcomes.len(),
         elapsed,
         outcomes.len() as f64 / elapsed.max(1e-9),
         total_steps,
         total_steps as f64 / elapsed.max(1e-9),
+        reports,
         improvements
     );
     Ok(())

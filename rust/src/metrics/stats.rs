@@ -79,13 +79,23 @@ impl Summary {
         (ss / (n - 1) as f64).sqrt()
     }
 
-    /// Relative spread — stddev / mean (useful to flag noisy benches).
+    /// Relative spread — stddev / |mean| (useful to flag noisy benches).
+    ///
+    /// The magnitude of the mean is what normalizes the spread, so the
+    /// coefficient of variation is non-negative for negative-mean samples
+    /// too (a plain `stddev / mean` would report a negative "spread").
+    /// A zero mean with nonzero spread is maximal relative noise and
+    /// reports `+∞`, not the old misleading `0.0`.
     pub fn cv(&self) -> f64 {
+        let sd = self.stddev();
+        if sd == 0.0 {
+            return 0.0;
+        }
         let m = self.mean();
         if m == 0.0 {
-            0.0
+            f64::INFINITY
         } else {
-            self.stddev() / m
+            sd / m.abs()
         }
     }
 }
@@ -130,6 +140,22 @@ mod tests {
         let s = Summary::from_samples(&[4.0, 4.0, 4.0]);
         assert_eq!(s.stddev(), 0.0);
         assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    fn cv_is_nonnegative_for_negative_means() {
+        // Speedup *differences* or signed deltas can have negative means;
+        // the relative spread must still come out ≥ 0.
+        let neg = Summary::from_samples(&[-4.0, -5.0, -6.0]);
+        assert!(neg.mean() < 0.0);
+        assert!(neg.cv() > 0.0, "cv {}", neg.cv());
+        // Mirror-image samples have the same spread.
+        let pos = Summary::from_samples(&[4.0, 5.0, 6.0]);
+        assert_eq!(neg.cv(), pos.cv());
+        // All-zero samples stay well-defined.
+        assert_eq!(Summary::from_samples(&[0.0, 0.0]).cv(), 0.0);
+        // Zero mean + nonzero spread is maximal relative noise, not zero.
+        assert_eq!(Summary::from_samples(&[-1.0, 1.0]).cv(), f64::INFINITY);
     }
 
     #[test]

@@ -9,11 +9,27 @@
 //! worker pool under a [`SchedPolicy`] until every job hits a
 //! [`TerminationCriteria`] bound or exhausts its iteration budget.
 //!
-//! **Determinism.** Because a `Run` owns its whole mutable state and pool
-//! launches are serialized, a job's trajectory is bit-identical whether it
-//! runs alone or interleaved with any number of other jobs — for the
-//! bit-exact engines (CPU, Reduction, Loop-Unrolling, Queue). Queue-Lock
-//! and Async-Persistent carry their documented intra-run races, but those
+//! **Concurrent streams.** When the shared pool is built with `S > 1`
+//! stream groups ([`crate::exec::GridPool::with_streams`]), the scheduler
+//! runs in concurrent mode: each job is pinned to pool stream
+//! `job_index % S` at prepare time, and every scheduling round picks up
+//! to `S` live jobs — under the same policy, no two sharing a stream —
+//! and steps them in parallel, one stepping thread per job. This lifts
+//! the paper's Algorithm-3 asynchrony idea from intra-run (thread groups
+//! vs the barrier) to cross-job (grids vs the launch guard): N tenants no
+//! longer serialize on one grid-in-flight. [`JobScheduler::batch_steps`]
+//! additionally batches `k` iterations per scheduling round through
+//! [`Run::step_many`], amortizing per-step dispatch overhead at the cost
+//! of batch-granular telemetry and termination checks (the explicit
+//! `max_iter` step cap is still honored exactly — batches are clamped to
+//! it).
+//!
+//! **Determinism.** Because a `Run` owns its whole mutable state and a
+//! grid launch never spans runs, a job's trajectory is bit-identical
+//! whether it runs alone, interleaved on one stream, or concurrently
+//! across streams under any policy and batch size — for the bit-exact
+//! engines (CPU, Reduction, Loop-Unrolling, Queue). Queue-Lock and
+//! Async-Persistent carry their documented intra-run races, but those
 //! races are confined to the job's own `Run`: neighbours still cannot
 //! perturb each other. `rust/tests/scheduler_determinism.rs` enforces the
 //! bit-exact half.
@@ -25,7 +41,7 @@
 //! scheduler.
 
 use crate::config::{EngineKind, JobConfig};
-use crate::engine::{self, ParallelSettings, Run};
+use crate::engine::{self, ParallelSettings, Run, StepReport};
 use crate::exec::GridPool;
 use crate::fitness::{by_name, Fitness, Objective};
 use crate::pso::{PsoParams, RunOutput};
@@ -182,8 +198,13 @@ impl JobSpec {
             );
         }
         let objective = cfg.objective.unwrap_or(fitness.default_objective());
-        let params =
-            PsoParams::for_fitness(fitness.as_ref(), cfg.particles, cfg.dim, cfg.iters, 0.5);
+        let params = PsoParams::for_fitness(
+            fitness.as_ref(),
+            cfg.particles,
+            cfg.dim,
+            cfg.iters,
+            cfg.vmax_frac,
+        );
         Ok(Self {
             name: cfg.name.clone(),
             engine: cfg.engine,
@@ -204,8 +225,11 @@ impl JobSpec {
 /// Which live job gets the next step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SchedPolicy {
-    /// Cycle through live jobs, one step each — fair progress, bounded
-    /// per-job latency between steps.
+    /// Fair progress: schedule the least-progressed live jobs first
+    /// (ties → lowest index). With a single stream this is exactly the
+    /// classic cycle-through-live-jobs-one-step-each order; with S
+    /// streams it fills every round with up to S jobs while keeping the
+    /// jobs of a contended stream within one round of each other.
     #[default]
     RoundRobin,
     /// Greedy EDF: always step the live job with the smallest remaining
@@ -235,20 +259,21 @@ impl std::fmt::Display for SchedPolicy {
     }
 }
 
-/// Telemetry for one scheduler step of one job.
+/// Telemetry for one scheduling round of one job (with `batch_steps = 1`,
+/// one report per executed step).
 #[derive(Debug, Clone)]
 pub struct JobReport<'a> {
     /// Index of the job in the spec slice.
     pub job: usize,
     /// Job name.
     pub name: &'a str,
-    /// Steps (iterations) the job has executed, this one included.
+    /// Steps (iterations) the job has executed, this round included.
     pub iter: u64,
-    /// The job's global-best fitness after the step.
+    /// The job's global-best fitness after the round.
     pub gbest_fit: f64,
-    /// Whether the step improved the job's global best.
+    /// Whether any step of the round improved the job's global best.
     pub improved: bool,
-    /// Set on the job's final step.
+    /// Set on the job's final round.
     pub finished: Option<StopReason>,
 }
 
@@ -272,6 +297,7 @@ pub struct JobOutcome {
 pub struct JobScheduler {
     settings: ParallelSettings,
     policy: SchedPolicy,
+    batch_steps: u64,
 }
 
 struct LiveJob<'a> {
@@ -280,20 +306,32 @@ struct LiveJob<'a> {
     stalled: u64,
     stop: Option<StopReason>,
     deadline: Option<u64>,
+    /// Pool stream this job's launches are pinned to (`job_index % S`).
+    stream: usize,
 }
 
 impl JobScheduler {
-    /// Scheduler over the given pool/geometry (round-robin by default).
+    /// Scheduler over the given pool/geometry (round-robin by default,
+    /// one step per scheduling round). A multi-stream pool enables the
+    /// concurrent mode (see module docs).
     pub fn new(settings: ParallelSettings) -> Self {
         Self {
             settings,
             policy: SchedPolicy::RoundRobin,
+            batch_steps: 1,
         }
     }
 
-    /// Scheduler on a fresh pool with `workers` threads (0 = all cores).
+    /// Scheduler on a fresh single-stream pool with `workers` threads
+    /// (0 = all cores).
     pub fn with_workers(workers: usize) -> Self {
         Self::new(ParallelSettings::with_workers(workers))
+    }
+
+    /// Scheduler on a fresh pool with `workers` threads (0 = all cores)
+    /// split into `streams` concurrent stream groups.
+    pub fn with_streams(workers: usize, streams: usize) -> Self {
+        Self::new(ParallelSettings::with_streams(workers, streams))
     }
 
     /// Override the stepping policy.
@@ -302,9 +340,24 @@ impl JobScheduler {
         self
     }
 
+    /// Step each picked job `k` iterations per scheduling round (clamps
+    /// to ≥ 1). Batching amortizes per-step dispatch overhead; telemetry,
+    /// target-fitness and stall checks become batch-granular, while an
+    /// explicit `max_iter` step cap is still honored exactly.
+    pub fn batch_steps(mut self, k: u64) -> Self {
+        self.batch_steps = k.max(1);
+        self
+    }
+
     /// The shared pool jobs are multiplexed over.
     pub fn pool(&self) -> &Arc<GridPool> {
         &self.settings.pool
+    }
+
+    /// Jobs stepped in parallel per scheduling round (the pool's stream
+    /// count).
+    pub fn streams(&self) -> usize {
+        self.settings.pool.streams()
     }
 
     /// Run all jobs to termination, discarding telemetry.
@@ -312,26 +365,32 @@ impl JobScheduler {
         self.run_with(specs, |_| {})
     }
 
-    /// Run all jobs to termination, streaming a [`JobReport`] per step.
+    /// Run all jobs to termination, streaming a [`JobReport`] per
+    /// scheduling round and job (= per step when `batch_steps` is 1).
     ///
-    /// Outcomes are returned in spec order regardless of completion order.
+    /// Outcomes are returned in spec order regardless of completion
+    /// order. In concurrent mode (multi-stream pool) the reports of one
+    /// round are delivered in job-index order after the whole round
+    /// joined, so the telemetry stream stays deterministic.
     pub fn run_with<F: FnMut(&JobReport<'_>)>(
         &self,
         specs: &[JobSpec],
         mut telemetry: F,
     ) -> Result<Vec<JobOutcome>> {
+        let streams = self.settings.pool.streams();
         // Prepare every run up front: all allocation happens here, steps
-        // stay allocation-free on the hot path.
+        // stay allocation-free on the hot path. Each job is pinned to the
+        // pool stream `index % S` for its whole life.
         let mut engines = Vec::with_capacity(specs.len());
-        for spec in specs {
-            let engine = engine::build_with(spec.engine, self.settings.clone())
+        for (i, spec) in specs.iter().enumerate() {
+            let engine = engine::build_with(spec.engine, self.settings.clone().on_stream(i))
                 .with_context(|| {
                     format!("job {}: engine {} is not schedulable", spec.name, spec.engine)
                 })?;
             engines.push(engine);
         }
         let mut live: Vec<LiveJob<'_>> = Vec::with_capacity(specs.len());
-        for (engine, spec) in engines.iter_mut().zip(specs) {
+        for (i, (engine, spec)) in engines.iter_mut().zip(specs).enumerate() {
             let fitness: &dyn Fitness = &*spec.fitness;
             live.push(LiveJob {
                 run: engine.prepare(&spec.params, fitness, spec.objective, spec.seed),
@@ -339,49 +398,47 @@ impl JobScheduler {
                 stalled: 0,
                 stop: None,
                 deadline: spec.deadline,
+                stream: i % streams,
             });
         }
 
         let mut finished = 0usize;
-        let mut cursor = 0usize;
         while finished < live.len() {
-            let idx = match self.policy {
-                SchedPolicy::RoundRobin => {
-                    let idx = next_live(&live, cursor).expect("unfinished job exists");
-                    cursor = (idx + 1) % live.len();
-                    idx
-                }
-                SchedPolicy::EarliestDeadlineFirst => {
-                    earliest_deadline(&live).expect("unfinished job exists")
-                }
+            let picked = match self.policy {
+                SchedPolicy::RoundRobin => pick_round_robin(&live, streams),
+                SchedPolicy::EarliestDeadlineFirst => pick_edf(&live, streams),
             };
-            let job = &mut live[idx];
-            let spec = &specs[idx];
-            let report = job.run.step();
-            job.steps += 1;
-            if report.improved {
-                job.stalled = 0;
-            } else {
-                job.stalled += 1;
-            }
-            // Criteria outrank budget exhaustion so a target hit on the
-            // final iteration still reports TargetReached (matching the
-            // precedence TerminationCriteria::check documents).
-            let stop = spec
-                .termination
-                .check(spec.objective, report.gbest_fit, job.steps, job.stalled)
-                .or(report.done.then_some(StopReason::Exhausted));
-            telemetry(&JobReport {
-                job: idx,
-                name: &spec.name,
-                iter: job.steps,
-                gbest_fit: report.gbest_fit,
-                improved: report.improved,
-                finished: stop,
-            });
-            if stop.is_some() {
-                job.stop = stop;
-                finished += 1;
+            debug_assert!(!picked.is_empty(), "unfinished job exists");
+            let stepped = self.step_round(&mut live, specs, &picked);
+            for (idx, report) in stepped {
+                let job = &mut live[idx];
+                let spec = &specs[idx];
+                let executed = report.iter - job.steps;
+                job.steps = report.iter;
+                if report.improved {
+                    job.stalled = 0;
+                } else {
+                    job.stalled += executed;
+                }
+                // Criteria outrank budget exhaustion so a target hit on the
+                // final iteration still reports TargetReached (matching the
+                // precedence TerminationCriteria::check documents).
+                let stop = spec
+                    .termination
+                    .check(spec.objective, report.gbest_fit, job.steps, job.stalled)
+                    .or(report.done.then_some(StopReason::Exhausted));
+                telemetry(&JobReport {
+                    job: idx,
+                    name: &spec.name,
+                    iter: job.steps,
+                    gbest_fit: report.gbest_fit,
+                    improved: report.improved,
+                    finished: stop,
+                });
+                if stop.is_some() {
+                    job.stop = stop;
+                    finished += 1;
+                }
             }
         }
 
@@ -397,29 +454,109 @@ impl JobScheduler {
             })
             .collect())
     }
+
+    /// Step every picked job once (a batch of `batch_steps` iterations),
+    /// in parallel when the round holds several jobs — each job's
+    /// launches go to its own pool stream, so the grids genuinely
+    /// overlap. Returns `(index, report)` pairs sorted by job index.
+    fn step_round(
+        &self,
+        live: &mut [LiveJob<'_>],
+        specs: &[JobSpec],
+        picked: &[usize],
+    ) -> Vec<(usize, StepReport)> {
+        if let [idx] = *picked {
+            // Serialized fast path (always taken on a single-stream
+            // pool): no stepping threads, identical to the pre-stream
+            // scheduler loop.
+            let k = effective_batch(self.batch_steps, &specs[idx].termination, live[idx].steps);
+            return vec![(idx, live[idx].run.step_many(k))];
+        }
+        let tasks: Vec<(usize, u64, &mut LiveJob<'_>)> = live
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| picked.contains(i))
+            .map(|(i, job)| {
+                let k = effective_batch(self.batch_steps, &specs[i].termination, job.steps);
+                (i, k, job)
+            })
+            .collect();
+        let mut stepped = std::thread::scope(|scope| {
+            let mut it = tasks.into_iter();
+            let (i0, k0, job0) = it.next().expect("non-empty round");
+            let handles: Vec<_> = it
+                .map(|(i, k, job)| scope.spawn(move || (i, job.run.step_many(k))))
+                .collect();
+            // The scheduling thread steps the first job itself: a round of
+            // S jobs costs S − 1 spawns.
+            let mut out = vec![(i0, job0.run.step_many(k0))];
+            for h in handles {
+                out.push(h.join().expect("stepping thread panicked"));
+            }
+            out
+        });
+        stepped.sort_unstable_by_key(|&(i, _)| i);
+        stepped
+    }
 }
 
-/// Next unfinished job at or after `cursor` (cyclic scan).
-fn next_live(live: &[LiveJob<'_>], cursor: usize) -> Option<usize> {
-    let n = live.len();
-    (0..n)
-        .map(|k| (cursor + k) % n)
-        .find(|&i| live[i].stop.is_none())
+/// Batch size for one job's next round: the configured batch, clamped so
+/// an explicit `max_iter` step cap is never overshot (the run's own
+/// budget self-limits inside `step_many`).
+fn effective_batch(batch: u64, termination: &TerminationCriteria, steps_done: u64) -> u64 {
+    match termination.max_iter {
+        Some(cap) => batch.min(cap.saturating_sub(steps_done)).max(1),
+        None => batch,
+    }
 }
 
-/// Unfinished job with the least deadline slack (ties → lowest index).
-fn earliest_deadline(live: &[LiveJob<'_>]) -> Option<usize> {
-    live.iter()
-        .enumerate()
-        .filter(|(_, j)| j.stop.is_none())
-        .min_by_key(|(i, j)| {
-            let slack = j
-                .deadline
-                .map(|d| d.saturating_sub(j.steps))
-                .unwrap_or(u64::MAX);
-            (slack, *i)
-        })
-        .map(|(i, _)| i)
+/// Up to `want` live jobs, least-progressed first (ties → lowest index),
+/// no two sharing a pool stream. This is the fair-share generalization of
+/// one-step-each cycling to concurrent rounds: with a single stream it
+/// degenerates to exactly the classic cyclic order (all live jobs stay
+/// within one step of each other, and the least-stepped lowest index is
+/// the next cyclic pick), while under stream conflicts the lagging job of
+/// a contended stream always outranks its stream-mates, so nobody
+/// starves.
+fn pick_round_robin(live: &[LiveJob<'_>], want: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..live.len())
+        .filter(|&i| live[i].stop.is_none())
+        .collect();
+    order.sort_unstable_by_key(|&i| (live[i].steps, i));
+    take_distinct_streams(live, order, want)
+}
+
+/// Up to `want` live jobs by ascending deadline slack (`deadline -
+/// steps`; jobs without a deadline rank last, ties break on job index so
+/// scheduling is fully deterministic), no two sharing a pool stream.
+fn pick_edf(live: &[LiveJob<'_>], want: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..live.len())
+        .filter(|&i| live[i].stop.is_none())
+        .collect();
+    order.sort_unstable_by_key(|&i| {
+        let slack = live[i]
+            .deadline
+            .map(|d| d.saturating_sub(live[i].steps))
+            .unwrap_or(u64::MAX);
+        (slack, i)
+    });
+    take_distinct_streams(live, order, want)
+}
+
+/// Greedily keep the first `want` entries of `order` whose streams are
+/// pairwise distinct (one grid in flight per stream per round).
+fn take_distinct_streams(live: &[LiveJob<'_>], order: Vec<usize>, want: usize) -> Vec<usize> {
+    let mut picked: Vec<usize> = Vec::with_capacity(want);
+    for i in order {
+        if picked.iter().any(|&p| live[p].stream == live[i].stream) {
+            continue;
+        }
+        picked.push(i);
+        if picked.len() == want {
+            break;
+        }
+    }
+    picked
 }
 
 #[cfg(test)]
@@ -516,6 +653,109 @@ mod tests {
             })
             .unwrap();
         assert_eq!(finish_order, vec![1, 0], "tight deadline must finish first");
+    }
+
+    #[test]
+    fn from_config_respects_vmax_frac() {
+        // Regression: vmax_frac used to be hard-coded to 0.5, silently
+        // ignoring the batch TOML. A non-default value must change both
+        // the derived velocity clamp and the resulting trajectory.
+        let mk = |vmax_frac: f64, name: &str| JobConfig {
+            name: name.to_string(),
+            fitness: "sphere".into(),
+            objective: None,
+            particles: 64,
+            dim: 3,
+            iters: 25,
+            engine: EngineKind::Queue,
+            vmax_frac,
+            seed: 7,
+            target_fitness: None,
+            stall_window: None,
+            max_steps: None,
+            deadline: None,
+        };
+        let tight = JobSpec::from_config(&mk(0.05, "tight")).unwrap();
+        let wide = JobSpec::from_config(&mk(0.5, "wide")).unwrap();
+        // Sphere domain is [-100, 100] → range 200.
+        assert_eq!(tight.params.max_v, 10.0);
+        assert_eq!(wide.params.max_v, 100.0);
+        let scheduler = JobScheduler::with_workers(2);
+        let outs = scheduler.run(&[tight, wide]).unwrap();
+        assert_ne!(
+            outs[0].output.history, outs[1].output.history,
+            "vmax_frac did not reach the trajectory"
+        );
+    }
+
+    #[test]
+    fn concurrent_streams_complete_all_jobs() {
+        // Smoke for the concurrent mode: more jobs than streams, mixed
+        // shapes, both policies — everything must terminate correctly.
+        for policy in [SchedPolicy::RoundRobin, SchedPolicy::EarliestDeadlineFirst] {
+            let scheduler = JobScheduler::with_streams(2, 3).policy(policy);
+            assert_eq!(scheduler.streams(), 3);
+            let specs: Vec<JobSpec> = (0..7)
+                .map(|j| spec(&format!("j{j}"), EngineKind::Queue, 64, 5 + j as u64, j as u64))
+                .collect();
+            let outcomes = scheduler.run(&specs).unwrap();
+            for (j, o) in outcomes.iter().enumerate() {
+                assert_eq!(o.stop, StopReason::Exhausted, "{policy} {}", o.name);
+                assert_eq!(o.steps, 5 + j as u64, "{policy} {}", o.name);
+                assert_eq!(o.output.iters, o.steps);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_steps_amortize_but_honor_the_step_cap() {
+        // batch = 8 over a 20-iteration budget: three rounds, exact total.
+        let scheduler = JobScheduler::with_workers(2).batch_steps(8);
+        let specs = vec![spec("batched", EngineKind::Queue, 64, 20, 1)];
+        let mut rounds = Vec::new();
+        let outcomes = scheduler
+            .run_with(&specs, |r| rounds.push(r.iter))
+            .unwrap();
+        assert_eq!(rounds, vec![8, 16, 20], "batch boundaries");
+        assert_eq!(outcomes[0].steps, 20);
+        assert_eq!(outcomes[0].output.iters, 20);
+        // An explicit max_iter criterion is clamped to exactly, even
+        // mid-batch.
+        let mut capped = spec("capped", EngineKind::Queue, 64, 100, 2);
+        capped.termination = TerminationCriteria::none().with_max_iter(11);
+        let outcomes = JobScheduler::with_workers(2)
+            .batch_steps(8)
+            .run(&[capped])
+            .unwrap();
+        assert_eq!(outcomes[0].stop, StopReason::MaxIter);
+        assert_eq!(outcomes[0].steps, 11);
+        assert_eq!(outcomes[0].output.iters, 11);
+    }
+
+    #[test]
+    fn round_robin_with_streams_is_fair_within_a_contended_stream() {
+        // 3 jobs on 2 streams: jobs 0 and 2 share stream 0, so a round
+        // can schedule at most one of them. Least-progressed-first must
+        // keep the stream-mates within one step of each other for the
+        // whole run (job 1, alone on stream 1, legitimately runs every
+        // round).
+        let scheduler = JobScheduler::with_streams(2, 2);
+        let specs: Vec<JobSpec> = (0..3)
+            .map(|j| spec(&format!("j{j}"), EngineKind::Queue, 64, 12, j as u64))
+            .collect();
+        let mut steps = [0i64; 3];
+        let outcomes = scheduler
+            .run_with(&specs, |r| {
+                steps[r.job] += 1;
+                assert!(
+                    (steps[0] - steps[2]).abs() <= 1,
+                    "stream-0 mates drifted: {steps:?}"
+                );
+            })
+            .unwrap();
+        for o in &outcomes {
+            assert_eq!(o.steps, 12);
+        }
     }
 
     #[test]

@@ -178,6 +178,38 @@ fn batch_policy_override_edf() {
 }
 
 #[test]
+fn batch_streams_and_batch_steps_override() {
+    let (ok, text) = cupso(&[
+        "batch",
+        "--config",
+        "config/batch_demo.toml",
+        "--streams",
+        "4",
+        "--batch-steps",
+        "16",
+        "--workers",
+        "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("4 streams"), "{text}");
+    assert!(text.contains("16 steps/round"), "{text}");
+    assert!(text.contains("Batch results"), "{text}");
+    // The capped job still stops exactly at its step cap: batches are
+    // clamped to explicit max_steps criteria.
+    assert!(text.contains("max-iter"), "{text}");
+
+    let (ok, text) = cupso(&[
+        "batch",
+        "--config",
+        "config/batch_demo.toml",
+        "--streams",
+        "0",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("streams"), "{text}");
+}
+
+#[test]
 fn unknown_command_fails_with_usage() {
     let (ok, text) = cupso(&["frobnicate"]);
     assert!(!ok);

@@ -9,7 +9,7 @@
 //! quality-band behaviour in the general case.
 
 use cupso::engine::{Engine, ParallelSettings, QueueEngine, QueueLockEngine, ReductionEngine};
-use cupso::fitness::{by_name, Cubic, Objective};
+use cupso::fitness::{by_name, Cubic, Fitness, Objective};
 use cupso::pso::{serial_sync, PsoParams};
 use cupso::testsupport::{gen_usize, prop_check};
 
@@ -160,6 +160,119 @@ fn equivalence_holds_for_minimization_too() {
         assert_eq!(out.gbest_fit, oracle.gbest_fit, "{}", e.name());
         assert_eq!(out.gbest_pos, oracle.gbest_pos, "{}", e.name());
     }
+}
+
+/// Cubic everywhere except a NaN pocket for `x[0] > 50` — deterministic,
+/// hits both seeded-NaN and stepped-into-NaN particles.
+struct NanPocket;
+
+impl cupso::fitness::Fitness for NanPocket {
+    fn name(&self) -> &'static str {
+        "nan-pocket"
+    }
+    fn default_bounds(&self) -> (f64, f64) {
+        (-100.0, 100.0)
+    }
+    fn default_objective(&self) -> Objective {
+        Objective::Maximize
+    }
+    fn eval(&self, x: &[f64]) -> f64 {
+        if x[0] > 50.0 {
+            f64::NAN
+        } else {
+            Cubic.eval(x)
+        }
+    }
+}
+
+/// Always-NaN objective: nothing can ever improve.
+struct AlwaysNan;
+
+impl cupso::fitness::Fitness for AlwaysNan {
+    fn name(&self) -> &'static str {
+        "always-nan"
+    }
+    fn default_bounds(&self) -> (f64, f64) {
+        (-100.0, 100.0)
+    }
+    fn default_objective(&self) -> Objective {
+        Objective::Maximize
+    }
+    fn eval(&self, _x: &[f64]) -> f64 {
+        f64::NAN
+    }
+}
+
+#[test]
+fn nan_fitness_behaves_identically_across_all_engines() {
+    // The NaN policy (fitness module docs): NaN candidates never win, so
+    // a partially-NaN objective must leave the bit-exact engines, well,
+    // bit-exact against the synchronous oracle. A single-block workload
+    // (n ≤ 256) extends the guarantee to Queue-Lock and Async too.
+    use cupso::config::EngineKind;
+    let params = PsoParams::paper_1d(200, 40);
+    let oracle = serial_sync::run(&params, &NanPocket, Objective::Maximize, 11);
+    assert!(
+        oracle.gbest_fit.is_finite(),
+        "oracle best must be finite, got {}",
+        oracle.gbest_fit
+    );
+    for (_, f) in &oracle.history {
+        assert!(!f.is_nan(), "NaN leaked into the oracle history");
+    }
+    for kind in [
+        EngineKind::Reduction,
+        EngineKind::LoopUnrolling,
+        EngineKind::Queue,
+        EngineKind::QueueLock,
+        EngineKind::AsyncPersistent,
+    ] {
+        let mut e = cupso::engine::build(kind, 4).unwrap();
+        let out = e.run(&params, &NanPocket, Objective::Maximize, 11);
+        assert_eq!(out.gbest_fit, oracle.gbest_fit, "{kind:?}");
+        assert_eq!(out.gbest_pos, oracle.gbest_pos, "{kind:?}");
+        assert_eq!(out.history, oracle.history, "{kind:?}");
+    }
+    // Algorithm 1 (in-loop gbest) is not bit-comparable to the sync
+    // oracle, but the policy invariants must hold there too.
+    let serial = cupso::pso::serial::run(&params, &NanPocket, Objective::Maximize, 11);
+    assert!(serial.gbest_fit.is_finite());
+    assert!(!serial.gbest_pos[0].is_nan());
+    for (_, f) in &serial.history {
+        assert!(!f.is_nan(), "NaN leaked into the serial history");
+    }
+    // Sanity: the pocket is actually exercised — some seeded particle
+    // starts above x = 50 in [-100, 100] with 200 particles.
+    let mut fit = vec![0.0; 1];
+    NanPocket.eval_range(&[60.0], 1, 1, 0, 1, &mut fit);
+    assert!(fit[0].is_nan());
+}
+
+#[test]
+fn all_nan_fitness_never_improves_in_any_engine() {
+    // Degenerate case: every evaluation is NaN. The global best must stay
+    // at the seeding identity (worst = −∞ under Maximize) with zero
+    // gbest updates, identically everywhere, for multi-block shapes too.
+    use cupso::config::EngineKind;
+    let params = PsoParams::paper_1d(700, 15);
+    for kind in EngineKind::TABLE3
+        .into_iter()
+        .chain([EngineKind::AsyncPersistent])
+    {
+        let mut e = cupso::engine::build(kind, 4).unwrap();
+        let out = e.run(&params, &AlwaysNan, Objective::Maximize, 3);
+        assert_eq!(
+            out.gbest_fit,
+            f64::NEG_INFINITY,
+            "{kind:?}: NaN won the global best"
+        );
+        assert_eq!(out.counters.gbest_updates, 0, "{kind:?}");
+        for (_, f) in &out.history {
+            assert_eq!(*f, f64::NEG_INFINITY, "{kind:?}");
+        }
+    }
+    let oracle = serial_sync::run(&params, &AlwaysNan, Objective::Maximize, 3);
+    assert_eq!(oracle.gbest_fit, f64::NEG_INFINITY);
 }
 
 #[test]

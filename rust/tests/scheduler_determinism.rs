@@ -144,6 +144,146 @@ fn interleaving_is_policy_invariant_for_bit_exact_engines() {
 }
 
 #[test]
+fn step_many_matches_single_steps_for_all_plane_a_engines() {
+    // Batched stepping must be trajectory-identical to manual stepping
+    // for every bit-exact engine; the async engine's override (one
+    // free-running launch per batch) joins the guarantee on single-block
+    // workloads, where its relaxation has no room to bite.
+    let mut kinds = BIT_EXACT.to_vec();
+    kinds.push(EngineKind::QueueLock); // single block below → bit-exact
+    kinds.push(EngineKind::AsyncPersistent);
+    let params = PsoParams::paper_1d(200, 23);
+    for kind in kinds {
+        let mut e = engine::build(kind, 4).unwrap();
+        let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 5);
+        while !run.step().done {}
+        let stepped = run.finish();
+        for batch in [1u64, 4, 7, 23, 100] {
+            let mut e = engine::build(kind, 4).unwrap();
+            let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 5);
+            while !run.step_many(batch).done {}
+            let batched = run.finish();
+            let what = format!("{kind:?} batch={batch} vs single-step");
+            assert_eq!(batched.iters, 23, "{what}");
+            if kind == EngineKind::AsyncPersistent && batch > 1 {
+                // The async override documents batch-granular history
+                // sampling, so only the trajectory endpoint is comparable.
+                assert_eq!(batched.gbest_fit, stepped.gbest_fit, "{what}: fit");
+                assert_eq!(batched.gbest_pos, stepped.gbest_pos, "{what}: pos");
+            } else {
+                assert_outputs_equal(&batched, &stepped, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn step_many_reports_batch_improvement_and_stops_at_budget() {
+    let params = PsoParams::paper_1d(128, 10);
+    let mut e = engine::build(EngineKind::Queue, 2).unwrap();
+    let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 1);
+    // A 1-D Cubic swarm improves within the first few iterations, so the
+    // first batch must report improvement with a position attached.
+    let rep = run.step_many(4);
+    assert_eq!(rep.iter, 4);
+    assert!(rep.improved, "no improvement in the first 4 iterations");
+    assert!(rep.gbest_pos.is_some());
+    assert!(!rep.done);
+    // Over-long batch clamps at the budget.
+    let rep = run.step_many(100);
+    assert_eq!(rep.iter, 10);
+    assert!(rep.done);
+    // Stepping a finished run stays a no-op.
+    let rep = run.step_many(5);
+    assert_eq!(rep.iter, 10);
+    assert!(rep.done);
+    assert!(!rep.improved);
+    assert_eq!(run.finish().iters, 10);
+}
+
+/// The acceptance matrix: solo one-shot vs serialized interleaving vs
+/// concurrent streams — bit-identical per-job outputs for every
+/// bit-exact engine, at several stream counts, batch sizes and both
+/// policies.
+#[test]
+fn concurrent_streams_match_solo_runs_bit_exactly() {
+    let mk_specs = || -> Vec<JobSpec> {
+        let mut specs = vec![
+            cubic_spec("cpu", EngineKind::SerialCpu, PsoParams::paper_1d(150, 18), 21),
+            cubic_spec("r1", EngineKind::Reduction, PsoParams::paper_1d(300, 30), 1),
+            cubic_spec("r2", EngineKind::Reduction, PsoParams::paper_120d(64, 12), 2),
+            cubic_spec("u1", EngineKind::LoopUnrolling, PsoParams::paper_1d(257, 25), 3),
+            cubic_spec("q1", EngineKind::Queue, PsoParams::paper_1d(513, 20), 5),
+            cubic_spec("q2", EngineKind::Queue, PsoParams::paper_120d(100, 10), 6),
+        ];
+        // Deadlines change the EDF interleaving order; bit-exactness must
+        // survive any of it.
+        specs[1].deadline = Some(40);
+        specs[4].deadline = Some(15);
+        specs
+    };
+    let solo: Vec<cupso::pso::RunOutput> = mk_specs()
+        .iter()
+        .map(|s| {
+            engine::build(s.engine, 4)
+                .unwrap()
+                .run(&s.params, &Cubic, Objective::Maximize, s.seed)
+        })
+        .collect();
+    for (streams, batch, policy) in [
+        (1, 1, SchedPolicy::RoundRobin), // the serialized PR-1 path
+        (2, 1, SchedPolicy::RoundRobin),
+        (4, 3, SchedPolicy::RoundRobin),
+        (2, 5, SchedPolicy::EarliestDeadlineFirst),
+        (4, 1, SchedPolicy::EarliestDeadlineFirst),
+        (3, 7, SchedPolicy::EarliestDeadlineFirst),
+    ] {
+        let scheduler = JobScheduler::with_streams(4, streams)
+            .policy(policy)
+            .batch_steps(batch);
+        let outcomes = scheduler.run(&mk_specs()).unwrap();
+        for (outcome, reference) in outcomes.iter().zip(&solo) {
+            assert_eq!(outcome.stop, StopReason::Exhausted, "{}", outcome.name);
+            assert_outputs_equal(
+                &outcome.output,
+                reference,
+                &format!("S={streams} batch={batch} {policy} job {}", outcome.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn concurrent_telemetry_is_deterministic() {
+    // The same concurrent configuration run twice must produce the exact
+    // same report stream (rounds joined, reports in job-index order).
+    let mk_specs = || -> Vec<JobSpec> {
+        (0..5)
+            .map(|j| {
+                cubic_spec(
+                    &format!("t{j}"),
+                    EngineKind::Queue,
+                    PsoParams::paper_1d(100 + j * 50, 12),
+                    j as u64,
+                )
+            })
+            .collect()
+    };
+    let trace = |policy: SchedPolicy| -> Vec<(usize, u64, f64)> {
+        let mut t = Vec::new();
+        JobScheduler::with_streams(2, 3)
+            .policy(policy)
+            .batch_steps(2)
+            .run_with(&mk_specs(), |r| t.push((r.job, r.iter, r.gbest_fit)))
+            .unwrap();
+        t
+    };
+    for policy in [SchedPolicy::RoundRobin, SchedPolicy::EarliestDeadlineFirst] {
+        assert_eq!(trace(policy), trace(policy), "{policy}");
+    }
+}
+
+#[test]
 fn target_fitness_stops_early() {
     // 1-D Cubic reaches the optimum region fast; a target well below the
     // optimum must stop the job long before its 5000-iteration budget.
