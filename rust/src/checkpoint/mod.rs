@@ -1,0 +1,815 @@
+//! Checkpoint & restore — a run's full state as a versioned, serializable
+//! value.
+//!
+//! Every engine draws from counter-based Philox streams keyed by
+//! `(seed, particle, iteration, dim)` ([`crate::rng::PhiloxStream`]), so a
+//! run's complete state is its SoA arrays plus a handful of counters —
+//! no RNG tape, no in-flight kernel state. [`RunCheckpoint`] captures
+//! exactly that: swarm state, the global best, the convergence history and
+//! the instrumentation counters, keyed by the engine kind, workload
+//! parameters and master seed. For the bit-exact engines (CPU serial,
+//! the synchronous serial oracle, Reduction, Loop-Unrolling, Queue), a
+//! restored run continues **bit-identically** to the uninterrupted one —
+//! `rust/tests/checkpoint_resume.rs` proves it at every step boundary.
+//! Queue-Lock and Async-Persistent restore to a valid quiescent state
+//! (checkpoints are only ever taken between steps, when the grid has
+//! joined), but their documented intra-run races make the continuation
+//! trajectory theirs to choose.
+//!
+//! [`JobCheckpoint`] wraps a `RunCheckpoint` with the scheduler-level
+//! state of one job (name, fitness registry key, stall counter, stop
+//! reason, termination bounds) so a whole batch can be suspended to disk
+//! and resumed — possibly on a different stream layout — by
+//! [`crate::scheduler::JobScheduler::run_session`] and the `cupso resume`
+//! subcommand.
+//!
+//! ## Wire format (`version: 1`)
+//!
+//! A small self-contained binary codec — no serde offline. Little-endian
+//! throughout; `f64` values travel as their IEEE-754 bit patterns
+//! (`to_bits`/`from_bits`), so NaN payloads, signed zeros and infinities
+//! round-trip exactly. Layout:
+//!
+//! ```text
+//! magic  [8]   "CUPSOCKP" (run) / "CUPSOJOB" (job)
+//! version u32  1
+//! body    …    length-prefixed fields (see encode())
+//! check   u64  FNV-1a over everything before it
+//! ```
+//!
+//! Decoding is loud and total: a wrong magic, unsupported version,
+//! flipped byte, truncation or trailing garbage is an `Err`, never a
+//! panic, and never a silently-wrong checkpoint. The golden fixture under
+//! `rust/tests/fixtures/` pins the version-1 layout: today's decoder must
+//! keep reading it forever (bump `VERSION` for incompatible changes).
+
+use crate::config::EngineKind;
+use crate::fitness::Objective;
+use crate::pso::{Counters, PsoParams, SwarmState};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Current wire-format version.
+pub const VERSION: u32 = 1;
+
+const RUN_MAGIC: &[u8; 8] = b"CUPSOCKP";
+const JOB_MAGIC: &[u8; 8] = b"CUPSOJOB";
+
+/// Which `Run` implementation a checkpoint belongs to. This is
+/// [`EngineKind`] plus the synchronous serial oracle (which is a run type
+/// but not a launcher-selectable engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunKind {
+    /// [`crate::pso::serial::SerialRun`] (Algorithm 1, in-loop gbest).
+    SerialCpu,
+    /// [`crate::pso::serial_sync::SyncSerialRun`] (the PPSO oracle).
+    SerialSync,
+    /// [`crate::engine::ReductionEngine`], plain reduction.
+    Reduction,
+    /// [`crate::engine::ReductionEngine::unrolled`].
+    LoopUnrolling,
+    /// [`crate::engine::QueueEngine`].
+    Queue,
+    /// [`crate::engine::QueueLockEngine`].
+    QueueLock,
+    /// [`crate::engine::AsyncEngine`]'s step-wise run.
+    AsyncPersistent,
+}
+
+impl RunKind {
+    /// Stable wire code (part of the version-1 format — never renumber).
+    pub fn code(self) -> u8 {
+        match self {
+            RunKind::SerialCpu => 0,
+            RunKind::SerialSync => 1,
+            RunKind::Reduction => 2,
+            RunKind::LoopUnrolling => 3,
+            RunKind::Queue => 4,
+            RunKind::QueueLock => 5,
+            RunKind::AsyncPersistent => 6,
+        }
+    }
+
+    /// Inverse of [`code`](Self::code).
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => RunKind::SerialCpu,
+            1 => RunKind::SerialSync,
+            2 => RunKind::Reduction,
+            3 => RunKind::LoopUnrolling,
+            4 => RunKind::Queue,
+            5 => RunKind::QueueLock,
+            6 => RunKind::AsyncPersistent,
+            other => bail!("checkpoint: unknown run kind code {other}"),
+        })
+    }
+
+    /// The launcher-selectable engine kind, if any (`None` for the
+    /// synchronous serial oracle, which only exists as a reference).
+    pub fn engine_kind(self) -> Option<EngineKind> {
+        match self {
+            RunKind::SerialCpu => Some(EngineKind::SerialCpu),
+            RunKind::SerialSync => None,
+            RunKind::Reduction => Some(EngineKind::Reduction),
+            RunKind::LoopUnrolling => Some(EngineKind::LoopUnrolling),
+            RunKind::Queue => Some(EngineKind::Queue),
+            RunKind::QueueLock => Some(EngineKind::QueueLock),
+            RunKind::AsyncPersistent => Some(EngineKind::AsyncPersistent),
+        }
+    }
+
+    /// The run kind a scheduler job of `kind` checkpoints as.
+    pub fn from_engine(kind: EngineKind) -> Option<Self> {
+        match kind {
+            EngineKind::SerialCpu => Some(RunKind::SerialCpu),
+            EngineKind::Reduction => Some(RunKind::Reduction),
+            EngineKind::LoopUnrolling => Some(RunKind::LoopUnrolling),
+            EngineKind::Queue => Some(RunKind::Queue),
+            EngineKind::QueueLock => Some(RunKind::QueueLock),
+            EngineKind::AsyncPersistent => Some(RunKind::AsyncPersistent),
+            EngineKind::XlaSync | EngineKind::XlaAsync => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RunKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            RunKind::SerialCpu => "serial",
+            RunKind::SerialSync => "serial-sync",
+            RunKind::Reduction => "reduction",
+            RunKind::LoopUnrolling => "loop-unrolling",
+            RunKind::Queue => "queue",
+            RunKind::QueueLock => "queue-lock",
+            RunKind::AsyncPersistent => "async-persistent",
+        };
+        f.write_str(s)
+    }
+}
+
+/// The complete state of one run at a step boundary.
+///
+/// Captured by [`crate::engine::Run::checkpoint`] (grid quiescent by
+/// construction: `step` only returns after its launches joined) and
+/// turned back into a live run by [`crate::engine::Engine::restore`] /
+/// [`crate::engine::restore_with`].
+#[derive(Debug, Clone)]
+pub struct RunCheckpoint {
+    /// Wire-format version this checkpoint was captured as.
+    pub version: u32,
+    /// Which run implementation produced it.
+    pub kind: RunKind,
+    /// Optimization sense.
+    pub objective: Objective,
+    /// Master seed (rebuilds the Philox stream namespace exactly).
+    pub seed: u64,
+    /// Full workload parameters.
+    pub params: PsoParams,
+    /// Iterations completed.
+    pub iter: u64,
+    /// Global-best fitness.
+    pub gbest_fit: f64,
+    /// Global-best position (length = dim).
+    pub gbest_pos: Vec<f64>,
+    /// Sampled convergence history so far.
+    pub history: Vec<(u64, f64)>,
+    /// Instrumentation counters as they would appear in a `RunOutput`
+    /// finished right now.
+    pub counters: Counters,
+    /// The swarm's SoA arrays.
+    pub swarm: SwarmState,
+}
+
+impl RunCheckpoint {
+    /// Structural consistency: array lengths agree with `n`/`dim`, the
+    /// iteration counter is inside the budget. (Degenerate `n = 0`
+    /// checkpoints are codec-valid — engines reject them at restore.)
+    pub fn validate(&self) -> Result<()> {
+        let (n, dim) = (self.swarm.n, self.swarm.dim);
+        if n != self.params.n || dim != self.params.dim {
+            bail!(
+                "checkpoint: swarm {}x{} disagrees with params {}x{}",
+                n,
+                dim,
+                self.params.n,
+                self.params.dim
+            );
+        }
+        let rows = n * dim;
+        if self.swarm.pos.len() != rows
+            || self.swarm.vel.len() != rows
+            || self.swarm.pbest_pos.len() != rows
+            || self.swarm.fit.len() != n
+            || self.swarm.pbest_fit.len() != n
+        {
+            bail!("checkpoint: swarm array lengths inconsistent with {n}x{dim}");
+        }
+        if self.gbest_pos.len() != dim {
+            bail!(
+                "checkpoint: gbest_pos has {} entries, expected dim {dim}",
+                self.gbest_pos.len()
+            );
+        }
+        if self.iter > self.params.max_iter {
+            bail!(
+                "checkpoint: iter {} exceeds budget {}",
+                self.iter,
+                self.params.max_iter
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize to the version-1 wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new(RUN_MAGIC);
+        self.encode_body(&mut w);
+        w.seal()
+    }
+
+    fn encode_body(&self, w: &mut Writer) {
+        w.u8(self.kind.code());
+        w.u8(match self.objective {
+            Objective::Maximize => 0,
+            Objective::Minimize => 1,
+        });
+        w.u64(self.seed);
+        let p = &self.params;
+        w.u64(p.n as u64);
+        w.u64(p.dim as u64);
+        w.u64(p.max_iter);
+        for v in [p.w, p.c1, p.c2, p.min_pos, p.max_pos, p.max_v] {
+            w.f64(v);
+        }
+        w.u64(self.iter);
+        w.f64(self.gbest_fit);
+        w.f64_slice(&self.gbest_pos);
+        w.u64(self.history.len() as u64);
+        for &(it, fit) in &self.history {
+            w.u64(it);
+            w.f64(fit);
+        }
+        let c = &self.counters;
+        for v in [
+            c.pbest_improvements,
+            c.queue_pushes,
+            c.gbest_updates,
+            c.particle_updates,
+        ] {
+            w.u64(v);
+        }
+        let s = &self.swarm;
+        w.f64_slice(&s.pos);
+        w.f64_slice(&s.vel);
+        w.f64_slice(&s.fit);
+        w.f64_slice(&s.pbest_pos);
+        w.f64_slice(&s.pbest_fit);
+    }
+
+    /// Deserialize, verifying magic, version, checksum and consistency.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader::open(bytes, RUN_MAGIC)?;
+        let ckpt = Self::decode_body(&mut r)?;
+        r.close()?;
+        ckpt.validate()?;
+        Ok(ckpt)
+    }
+
+    fn decode_body(r: &mut Reader<'_>) -> Result<Self> {
+        let kind = RunKind::from_code(r.u8()?)?;
+        let objective = match r.u8()? {
+            0 => Objective::Maximize,
+            1 => Objective::Minimize,
+            other => bail!("checkpoint: bad objective code {other}"),
+        };
+        let seed = r.u64()?;
+        let n = r.usize()?;
+        let dim = r.usize()?;
+        let max_iter = r.u64()?;
+        let (w, c1, c2, min_pos, max_pos, max_v) =
+            (r.f64()?, r.f64()?, r.f64()?, r.f64()?, r.f64()?, r.f64()?);
+        let params = PsoParams {
+            w,
+            c1,
+            c2,
+            min_pos,
+            max_pos,
+            max_v,
+            max_iter,
+            n,
+            dim,
+        };
+        let iter = r.u64()?;
+        let gbest_fit = r.f64()?;
+        let gbest_pos = r.f64_slice()?;
+        let hist_len = r.usize()?;
+        // Each entry is 16 body bytes; a corrupt length cannot pass the
+        // checksum, but never allocate beyond what the body can hold.
+        if r.remaining() / 16 < hist_len {
+            bail!("checkpoint: history length {hist_len} exceeds remaining body");
+        }
+        let mut history = Vec::with_capacity(hist_len);
+        for _ in 0..hist_len {
+            let it = r.u64()?;
+            let fit = r.f64()?;
+            history.push((it, fit));
+        }
+        let counters = Counters {
+            pbest_improvements: r.u64()?,
+            queue_pushes: r.u64()?,
+            gbest_updates: r.u64()?,
+            particle_updates: r.u64()?,
+        };
+        let swarm = SwarmState {
+            n,
+            dim,
+            pos: r.f64_slice()?,
+            vel: r.f64_slice()?,
+            fit: r.f64_slice()?,
+            pbest_pos: r.f64_slice()?,
+            pbest_fit: r.f64_slice()?,
+        };
+        Ok(Self {
+            version: VERSION,
+            kind,
+            objective,
+            seed,
+            params,
+            iter,
+            gbest_fit,
+            gbest_pos,
+            history,
+            counters,
+            swarm,
+        })
+    }
+
+    /// Write to a file (atomic: temp + rename, so a crash mid-write never
+    /// leaves a torn checkpoint behind).
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.encode())
+    }
+
+    /// Read and decode a checkpoint file.
+    pub fn read_file(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::decode(&bytes).with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+}
+
+/// Scheduler-level state of one suspended job: the run checkpoint plus
+/// everything [`crate::scheduler::JobScheduler`] needs to rebuild the
+/// job's spec and termination bookkeeping.
+#[derive(Debug, Clone)]
+pub struct JobCheckpoint {
+    /// Job name (batch-config section name).
+    pub name: String,
+    /// Fitness registry key ([`crate::fitness::by_name`]).
+    pub fitness: String,
+    /// Consecutive non-improving steps at suspension.
+    pub stalled: u64,
+    /// Stop-reason code if the job already terminated (see
+    /// [`crate::scheduler::StopReason`]; stored as its wire code so the
+    /// codec stays self-contained).
+    pub stop: Option<u8>,
+    /// Early stop: target fitness.
+    pub target_fit: Option<f64>,
+    /// Early stop: stall window.
+    pub stall_window: Option<u64>,
+    /// Early stop: scheduler-step cap.
+    pub max_steps: Option<u64>,
+    /// EDF deadline in scheduler steps.
+    pub deadline: Option<u64>,
+    /// The run state itself.
+    pub run: RunCheckpoint,
+}
+
+impl JobCheckpoint {
+    /// Serialize to the version-1 wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new(JOB_MAGIC);
+        w.str(&self.name);
+        w.str(&self.fitness);
+        w.u64(self.stalled);
+        w.opt_u8(self.stop);
+        w.opt_f64(self.target_fit);
+        w.opt_u64(self.stall_window);
+        w.opt_u64(self.max_steps);
+        w.opt_u64(self.deadline);
+        self.run.encode_body(&mut w);
+        w.seal()
+    }
+
+    /// Deserialize, verifying magic, version, checksum and consistency.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader::open(bytes, JOB_MAGIC)?;
+        let name = r.str()?;
+        let fitness = r.str()?;
+        let stalled = r.u64()?;
+        let stop = r.opt_u8()?;
+        let target_fit = r.opt_f64()?;
+        let stall_window = r.opt_u64()?;
+        let max_steps = r.opt_u64()?;
+        let deadline = r.opt_u64()?;
+        let run = RunCheckpoint::decode_body(&mut r)?;
+        r.close()?;
+        run.validate()?;
+        Ok(Self {
+            name,
+            fitness,
+            stalled,
+            stop,
+            target_fit,
+            stall_window,
+            max_steps,
+            deadline,
+            run,
+        })
+    }
+
+    /// Write to a file (atomic temp + rename).
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.encode())
+    }
+
+    /// Read and decode a job-checkpoint file.
+    pub fn read_file(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading job checkpoint {}", path.display()))?;
+        Self::decode(&bytes)
+            .with_context(|| format!("decoding job checkpoint {}", path.display()))
+    }
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// FNV-1a 64-bit — tiny, dependency-free corruption detector (not a
+/// cryptographic signature).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Little-endian append-only encoder: magic + version up front, FNV seal
+/// at the end.
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn new(magic: &[u8; 8]) -> Self {
+        let mut buf = Vec::with_capacity(256);
+        buf.extend_from_slice(magic);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        Self(buf)
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn f64_slice(&mut self, vs: &[f64]) {
+        self.u64(vs.len() as u64);
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+
+    fn opt_u8(&mut self, v: Option<u8>) {
+        match v {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1);
+                self.u8(x);
+            }
+        }
+    }
+
+    fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+        }
+    }
+
+    fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+        }
+    }
+
+    fn seal(mut self) -> Vec<u8> {
+        let check = fnv1a(&self.0);
+        self.0.extend_from_slice(&check.to_le_bytes());
+        self.0
+    }
+}
+
+/// Bounds-checked little-endian decoder. Every accessor returns `Err` on
+/// underflow; `close` rejects trailing bytes. Never panics on any input.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Verify magic, version and checksum, then expose the body.
+    fn open(bytes: &'a [u8], magic: &[u8; 8]) -> Result<Self> {
+        if bytes.len() < 8 + 4 + 8 {
+            bail!("checkpoint: truncated ({} bytes)", bytes.len());
+        }
+        if &bytes[..8] != magic {
+            bail!(
+                "checkpoint: bad magic {:02x?} (expected {:?})",
+                &bytes[..8],
+                std::str::from_utf8(magic).unwrap_or("?")
+            );
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("checkpoint: unsupported version {version} (this build reads {VERSION})");
+        }
+        let body_end = bytes.len() - 8;
+        let stored = u64::from_le_bytes(bytes[body_end..].try_into().unwrap());
+        let actual = fnv1a(&bytes[..body_end]);
+        if stored != actual {
+            bail!("checkpoint: checksum mismatch (corrupted or torn file)");
+        }
+        Ok(Self {
+            buf: &bytes[..body_end],
+            pos: 12,
+        })
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "checkpoint: truncated body (need {n} bytes, have {})",
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("checkpoint: length {v} overflows usize"))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f64_slice(&mut self) -> Result<Vec<f64>> {
+        let len = self.usize()?;
+        // A corrupt length cannot pass the checksum, but stay defensive:
+        // the body must actually hold that many entries before allocating.
+        if self.remaining() / 8 < len {
+            bail!("checkpoint: array length {len} exceeds remaining body");
+        }
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.usize()?;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow::anyhow!("checkpoint: non-UTF8 string field"))
+    }
+
+    fn opt_u8(&mut self) -> Result<Option<u8>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u8()?)),
+            t => bail!("checkpoint: bad option tag {t}"),
+        }
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            t => bail!("checkpoint: bad option tag {t}"),
+        }
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            t => bail!("checkpoint: bad option tag {t}"),
+        }
+    }
+
+    fn close(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "checkpoint: {} trailing bytes after body",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample(n: usize, dim: usize) -> RunCheckpoint {
+        let params = PsoParams {
+            dim,
+            n,
+            ..PsoParams::paper_1d(n, 40)
+        };
+        let rows = n * dim;
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::Queue,
+            objective: Objective::Maximize,
+            seed: 7,
+            params,
+            iter: 13,
+            gbest_fit: 1.5,
+            gbest_pos: vec![0.25; dim],
+            history: vec![(0, -1.0), (10, 1.5)],
+            counters: Counters {
+                pbest_improvements: 3,
+                queue_pushes: 5,
+                gbest_updates: 2,
+                particle_updates: n as u64 * 13,
+            },
+            swarm: SwarmState {
+                n,
+                dim,
+                pos: (0..rows).map(|i| i as f64 * 0.5).collect(),
+                vel: vec![-0.0; rows],
+                fit: vec![f64::NAN; n],
+                pbest_pos: vec![1.0; rows],
+                pbest_fit: vec![f64::NEG_INFINITY; n],
+            },
+        }
+    }
+
+    fn assert_bit_equal(a: &RunCheckpoint, b: &RunCheckpoint) {
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.gbest_fit.to_bits(), b.gbest_fit.to_bits());
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.gbest_pos), bits(&b.gbest_pos));
+        assert_eq!(a.history.len(), b.history.len());
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits());
+        }
+        assert_eq!(bits(&a.swarm.pos), bits(&b.swarm.pos));
+        assert_eq!(bits(&a.swarm.vel), bits(&b.swarm.vel));
+        assert_eq!(bits(&a.swarm.fit), bits(&b.swarm.fit));
+        assert_eq!(bits(&a.swarm.pbest_pos), bits(&b.swarm.pbest_pos));
+        assert_eq!(bits(&a.swarm.pbest_fit), bits(&b.swarm.pbest_fit));
+    }
+
+    #[test]
+    fn roundtrip_preserves_bit_patterns() {
+        // NaN fits, -0.0 velocities and ±∞ pbest values must survive.
+        let ckpt = sample(6, 3);
+        let decoded = RunCheckpoint::decode(&ckpt.encode()).unwrap();
+        assert_bit_equal(&ckpt, &decoded);
+    }
+
+    #[test]
+    fn degenerate_empty_swarm_roundtrips() {
+        let ckpt = sample(0, 1);
+        let decoded = RunCheckpoint::decode(&ckpt.encode()).unwrap();
+        assert_bit_equal(&ckpt, &decoded);
+        assert!(decoded.swarm.pos.is_empty());
+    }
+
+    #[test]
+    fn bad_magic_version_and_truncation_fail_loudly() {
+        let bytes = sample(4, 2).encode();
+        // Wrong magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(RunCheckpoint::decode(&bad).unwrap_err().to_string().contains("magic"));
+        // Future version.
+        let mut bumped = bytes.clone();
+        bumped[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let err = RunCheckpoint::decode(&bumped).unwrap_err().to_string();
+        assert!(err.contains("version 2"), "{err}");
+        // Truncations at every prefix length: Err, never panic.
+        for cut in 0..bytes.len() {
+            assert!(RunCheckpoint::decode(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // Trailing garbage.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(RunCheckpoint::decode(&long).is_err());
+    }
+
+    #[test]
+    fn job_checkpoint_roundtrips_with_options() {
+        let job = JobCheckpoint {
+            name: "tenant-α".into(),
+            fitness: "cubic".into(),
+            stalled: 4,
+            stop: Some(2),
+            target_fit: Some(899_000.5),
+            stall_window: None,
+            max_steps: Some(100),
+            deadline: None,
+            run: sample(5, 2),
+        };
+        let decoded = JobCheckpoint::decode(&job.encode()).unwrap();
+        assert_eq!(decoded.name, "tenant-α");
+        assert_eq!(decoded.fitness, "cubic");
+        assert_eq!(decoded.stalled, 4);
+        assert_eq!(decoded.stop, Some(2));
+        assert_eq!(decoded.target_fit.map(f64::to_bits), Some(899_000.5f64.to_bits()));
+        assert_eq!(decoded.stall_window, None);
+        assert_eq!(decoded.max_steps, Some(100));
+        assert_eq!(decoded.deadline, None);
+        assert_bit_equal(&job.run, &decoded.run);
+        // A run checkpoint is not a job checkpoint.
+        assert!(JobCheckpoint::decode(&sample(2, 1).encode()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_is_atomic_and_exact() {
+        let dir = std::env::temp_dir().join("cupso-ckpt-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        let ckpt = sample(3, 2);
+        ckpt.write_file(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists(), "temp file leaked");
+        let back = RunCheckpoint::read_file(&path).unwrap();
+        assert_bit_equal(&ckpt, &back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_kind_codes_are_stable_and_total() {
+        for code in 0..7u8 {
+            let kind = RunKind::from_code(code).unwrap();
+            assert_eq!(kind.code(), code);
+        }
+        assert!(RunKind::from_code(7).is_err());
+        // Engine mapping round-trips for every Plane-A kind.
+        for kind in EngineKind::TABLE3 {
+            let rk = RunKind::from_engine(kind).unwrap();
+            assert_eq!(rk.engine_kind(), Some(kind));
+        }
+        assert_eq!(RunKind::SerialSync.engine_kind(), None);
+        assert!(RunKind::from_engine(EngineKind::XlaSync).is_none());
+    }
+}

@@ -359,6 +359,11 @@ pub struct BatchConfig {
     pub streams: usize,
     /// Iterations per job per scheduling round (1 = step-at-a-time).
     pub batch_steps: u64,
+    /// Preemption quantum in steps: when jobs outnumber streams, a job
+    /// that ran this many steps since activation is suspended to a
+    /// checkpoint and later restored on a free stream (0 = cooperative
+    /// scheduling, the default).
+    pub preempt_quantum: u64,
     /// The jobs, in file order.
     pub jobs: Vec<JobConfig>,
 }
@@ -390,6 +395,7 @@ impl BatchConfig {
             policy: "round-robin".into(),
             streams: 1,
             batch_steps: 1,
+            preempt_quantum: 0,
             jobs: Vec::new(),
         };
         // Materialize a job per `[jobs.<name>]` section header first, so a
@@ -461,6 +467,7 @@ impl BatchConfig {
                     "policy" => cfg.policy = value.as_str(&key)?.to_string(),
                     "streams" => cfg.streams = as_uint(&value, &key)? as usize,
                     "batch_steps" => cfg.batch_steps = as_uint(&value, &key)?,
+                    "preempt_quantum" => cfg.preempt_quantum = as_uint(&value, &key)?,
                     other => bail!("unknown batch key {other:?} (in {key:?})"),
                 }
             }
@@ -603,6 +610,10 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.streams, 4);
         assert_eq!(cfg.batch_steps, 16);
+        assert_eq!(cfg.preempt_quantum, 0, "preemption defaults off");
+        let preemptive =
+            BatchConfig::from_toml_str("preempt_quantum = 8\n[jobs.x]\nseed = 1").unwrap();
+        assert_eq!(preemptive.preempt_quantum, 8);
         assert_eq!(cfg.jobs[0].vmax_frac, 0.1);
         assert_eq!(cfg.jobs[1].vmax_frac, 0.5, "default preserved");
         // Defaults when the keys are absent: the serialized scheduler.

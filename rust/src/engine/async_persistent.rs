@@ -25,10 +25,12 @@
 //! prepare/step loop.
 
 use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSwarm, StepScratch};
-use super::{Engine, Run, StepReport};
+use super::{restore_guard, Engine, Run, StepReport};
+use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
 use crate::fitness::{Fitness, Objective};
 use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
 use crate::rng::PhiloxStream;
+use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Persistent-kernel asynchronous engine (one launch per run).
@@ -40,6 +42,45 @@ impl AsyncEngine {
     /// New engine on the given pool/geometry.
     pub fn new(settings: ParallelSettings) -> Self {
         Self { settings }
+    }
+
+    /// Allocate scratch/snapshots around an existing state — shared by
+    /// `prepare` and `restore` so the two paths cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    fn assemble<'a>(
+        &self,
+        params: &PsoParams,
+        fitness: &'a dyn Fitness,
+        objective: Objective,
+        seed: u64,
+        swarm: SwarmState,
+        gbest: GlobalBest,
+        history: Vec<(u64, f64)>,
+        iter: u64,
+        pbest_improvements: u64,
+    ) -> AsyncStepRun<'a> {
+        let state = SharedSwarm::new(swarm);
+        let blocks = self.settings.blocks_for(params.n);
+        let step_scratch =
+            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
+        let snapshots = PerBlock::from_fn(blocks, |_| vec![0.0; params.dim]);
+
+        AsyncStepRun {
+            params: params.clone(),
+            fitness,
+            objective,
+            settings: self.settings.clone(),
+            seed,
+            stream: PhiloxStream::new(seed),
+            state,
+            gbest,
+            snapshots,
+            step_scratch,
+            pbest_improvements: AtomicU64::new(pbest_improvements),
+            stride: history_stride(params.max_iter),
+            history,
+            iter,
+        }
     }
 }
 
@@ -59,28 +100,34 @@ impl Engine for AsyncEngine {
         let mut init = SwarmState::init(params, &stream);
         let (fit0, gi) = init.seed_fitness(fitness, objective);
         let gbest = GlobalBest::new(fit0, &init.position_of(gi));
-        let state = SharedSwarm::new(init);
+        Box::new(self.assemble(params, fitness, objective, seed, init, gbest, Vec::new(), 0, 0))
+    }
 
-        let blocks = self.settings.blocks_for(params.n);
-        let step_scratch =
-            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
-        let snapshots = PerBlock::from_fn(blocks, |_| vec![0.0; params.dim]);
-
-        Box::new(AsyncStepRun {
-            params: params.clone(),
+    /// Restore a suspended async step-run. **Relaxed-boundary caveat:**
+    /// checkpoints of this engine are taken at grid-quiescent points (a
+    /// `step`/`step_many` boundary — inside a batch the blocks free-run,
+    /// so there is no mid-batch state to capture). The restored state is
+    /// complete and valid, but as with any async run the continuation
+    /// trajectory is not replayable: blocks may interleave differently
+    /// than they would have in the uninterrupted run.
+    fn restore<'a>(
+        &mut self,
+        ckpt: &RunCheckpoint,
+        fitness: &'a dyn Fitness,
+    ) -> Result<Box<dyn Run + 'a>> {
+        restore_guard(ckpt, RunKind::AsyncPersistent)?;
+        let gbest = GlobalBest::restore(ckpt.gbest_fit, &ckpt.gbest_pos, ckpt.counters.gbest_updates);
+        Ok(Box::new(self.assemble(
+            &ckpt.params,
             fitness,
-            objective,
-            settings: self.settings.clone(),
-            stream,
-            state,
+            ckpt.objective,
+            ckpt.seed,
+            ckpt.swarm.clone(),
             gbest,
-            snapshots,
-            step_scratch,
-            pbest_improvements: AtomicU64::new(0),
-            stride: history_stride(params.max_iter),
-            history: Vec::new(),
-            iter: 0,
-        })
+            ckpt.history.clone(),
+            ckpt.iter,
+            ckpt.counters.pbest_improvements,
+        )))
     }
 
     fn run(
@@ -159,6 +206,7 @@ pub struct AsyncStepRun<'a> {
     fitness: &'a dyn Fitness,
     objective: Objective,
     settings: ParallelSettings,
+    seed: u64,
     stream: PhiloxStream,
     state: SharedSwarm,
     gbest: GlobalBest,
@@ -342,6 +390,31 @@ impl Run for AsyncStepRun<'_> {
             iters: iter,
             history,
             counters,
+        }
+    }
+
+    fn checkpoint(&self) -> RunCheckpoint {
+        // SAFETY: between steps/batches the grid has joined (that IS the
+        // quiescent boundary this engine documents for checkpoints), and
+        // `&mut self` stepping excludes this `&self` call.
+        let swarm = unsafe { self.state.get() }.clone();
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::AsyncPersistent,
+            objective: self.objective,
+            seed: self.seed,
+            params: self.params.clone(),
+            iter: self.iter,
+            gbest_fit: self.gbest.fit_relaxed(),
+            gbest_pos: self.gbest.pos_vec(),
+            history: self.history.clone(),
+            counters: Counters {
+                particle_updates: self.params.n as u64 * self.iter,
+                gbest_updates: self.gbest.update_count(),
+                pbest_improvements: self.pbest_improvements.load(Ordering::Relaxed),
+                ..Default::default()
+            },
+            swarm,
         }
     }
 }

@@ -173,11 +173,18 @@ pub struct GlobalBest {
 impl GlobalBest {
     /// Initialize from the seeded swarm's best.
     pub fn new(fit: f64, pos: &[f64]) -> Self {
+        Self::restore(fit, pos, 0)
+    }
+
+    /// Rebuild from a checkpoint: the best datum plus the improvement
+    /// counter accumulated before suspension, so a resumed run's
+    /// `gbest_updates` telemetry continues where it left off.
+    pub fn restore(fit: f64, pos: &[f64], updates: u64) -> Self {
         Self {
             fit: AtomicF64::new(fit),
             pos: pos.iter().map(|&p| AtomicF64::new(p)).collect(),
             lock: SpinLock::new(()),
-            updates: std::sync::atomic::AtomicU64::new(0),
+            updates: std::sync::atomic::AtomicU64::new(updates),
         }
     }
 

@@ -32,6 +32,20 @@
 //! shared [`crate::exec::GridPool`]. Because a `Run` owns all of its
 //! mutable state, interleaving steps of different runs cannot perturb
 //! any run's trajectory (see `rust/tests/scheduler_determinism.rs`).
+//!
+//! ## Checkpoint / restore
+//!
+//! A `Run` at a step boundary is grid-quiescent (every launch joined
+//! before `step` returned), and the Philox streams are counter-based, so
+//! [`Run::checkpoint`] can capture the *complete* run state as a
+//! [`RunCheckpoint`]; [`Engine::restore`] (or the kind-dispatching
+//! [`restore_with`]) turns it back into a live run — on any pool, any
+//! stream. For the bit-exact engines the resumed trajectory and final
+//! [`RunOutput`] are identical to the uninterrupted run, at *every*
+//! suspension step (`rust/tests/checkpoint_resume.rs`). The Async
+//! engine's relaxed intra-step semantics mean its checkpoints are merely
+//! valid quiescent states, not replayable trajectories — documented in
+//! [`AsyncEngine`].
 
 mod async_persistent;
 mod common;
@@ -45,9 +59,11 @@ pub use queue::QueueEngine;
 pub use queue_lock::QueueLockEngine;
 pub use reduction::ReductionEngine;
 
+use crate::checkpoint::{RunCheckpoint, RunKind};
 use crate::config::EngineKind;
 use crate::fitness::{Fitness, Objective};
 use crate::pso::{PsoParams, RunOutput};
+use anyhow::Result;
 
 /// Progress report for one [`Run::step`].
 #[derive(Debug, Clone, PartialEq)]
@@ -121,6 +137,16 @@ pub trait Run: Send {
     /// Consume the run into its final output (valid after any number of
     /// steps — early termination simply reports fewer `iters`).
     fn finish(self: Box<Self>) -> RunOutput;
+
+    /// Capture the run's complete state at the current step boundary.
+    ///
+    /// Always taken at a grid-quiescent point: `step`/`step_many` only
+    /// return after every launched block joined, and `&mut self` stepping
+    /// excludes a concurrent `&self` checkpoint, so the captured arrays
+    /// are never mid-kernel. Restoring the checkpoint (same or different
+    /// pool/stream/process) continues bit-identically for the bit-exact
+    /// engines; see the module docs for the Async caveat.
+    fn checkpoint(&self) -> RunCheckpoint;
 }
 
 /// A PSO solver implementation (one of the paper's five columns).
@@ -138,6 +164,20 @@ pub trait Engine: Send {
         objective: Objective,
         seed: u64,
     ) -> Box<dyn Run + 'a>;
+
+    /// Rebuild a live run from a checkpoint captured by
+    /// [`Run::checkpoint`]. The checkpoint must have been produced by a
+    /// run of this engine's kind (variant included — a Loop-Unrolling
+    /// checkpoint does not restore on the plain Reduction engine), and
+    /// must be structurally consistent; anything else is a loud error,
+    /// never a silently-wrong run. The restored run continues from
+    /// `ckpt.iter` with the identical RNG stream, swarm, global best,
+    /// history and counters.
+    fn restore<'a>(
+        &mut self,
+        ckpt: &RunCheckpoint,
+        fitness: &'a dyn Fitness,
+    ) -> Result<Box<dyn Run + 'a>>;
 
     /// Solve: run `params.max_iter` iterations and return the best datum.
     ///
@@ -174,6 +214,59 @@ impl Engine for SerialEngine {
         Box::new(crate::pso::serial::SerialRun::new(
             params, fitness, objective, seed,
         ))
+    }
+
+    fn restore<'a>(
+        &mut self,
+        ckpt: &RunCheckpoint,
+        fitness: &'a dyn Fitness,
+    ) -> Result<Box<dyn Run + 'a>> {
+        Ok(Box::new(crate::pso::serial::SerialRun::restore(
+            ckpt, fitness,
+        )?))
+    }
+}
+
+/// Shared restore preamble: the checkpoint must carry the expected run
+/// kind, be structurally consistent, and hold a non-empty swarm.
+pub(crate) fn restore_guard(ckpt: &RunCheckpoint, expected: RunKind) -> Result<()> {
+    if ckpt.kind != expected {
+        anyhow::bail!(
+            "cannot restore a {} checkpoint as a {} run",
+            ckpt.kind,
+            expected
+        );
+    }
+    ckpt.validate()?;
+    if ckpt.params.n == 0 {
+        anyhow::bail!("cannot restore a checkpoint with an empty swarm");
+    }
+    Ok(())
+}
+
+/// Restore any checkpoint by its recorded kind: builds the matching
+/// engine on `settings` (so the run can land on a different pool or
+/// stream than it was suspended from — the scheduler's migration path)
+/// and delegates to its [`Engine::restore`]. The synchronous serial
+/// oracle, which is a run type but not a launcher engine, is dispatched
+/// directly.
+pub fn restore_with<'a>(
+    ckpt: &RunCheckpoint,
+    settings: ParallelSettings,
+    fitness: &'a dyn Fitness,
+) -> Result<Box<dyn Run + 'a>> {
+    match ckpt.kind {
+        RunKind::SerialSync => Ok(Box::new(crate::pso::serial_sync::SyncSerialRun::restore(
+            ckpt, fitness,
+        )?)),
+        kind => {
+            let engine_kind = kind
+                .engine_kind()
+                .expect("every non-oracle run kind maps to an engine kind");
+            let mut engine = build_with(engine_kind, settings)
+                .ok_or_else(|| anyhow::anyhow!("engine {engine_kind} cannot be restored"))?;
+            engine.restore(ckpt, fitness)
+        }
     }
 }
 

@@ -18,12 +18,14 @@
 //! ([`QueueRun`]); each [`Run::step`] is the two launches above.
 
 use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSwarm, StepScratch};
-use super::{Engine, Run, StepReport};
+use super::{restore_guard, Engine, Run, StepReport};
+use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
 use crate::exec::SharedQueue;
 use crate::fitness::{Fitness, Objective};
 use crate::pso::serial_sync::better_with_tie;
 use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
 use crate::rng::PhiloxStream;
+use anyhow::Result;
 
 /// The Queue engine (two kernels, aux arrays, no global lock).
 pub struct QueueEngine {
@@ -34,6 +36,55 @@ impl QueueEngine {
     /// New engine on the given pool/geometry.
     pub fn new(settings: ParallelSettings) -> Self {
         Self { settings }
+    }
+
+    /// Allocate queues/aux/scratch around an existing state — shared by
+    /// `prepare` and `restore` so the two paths cannot drift. The queues
+    /// start empty either way (they are reset at the top of every step);
+    /// `push_base` carries pushes counted before a suspension.
+    #[allow(clippy::too_many_arguments)]
+    fn assemble<'a>(
+        &self,
+        params: &PsoParams,
+        fitness: &'a dyn Fitness,
+        objective: Objective,
+        seed: u64,
+        swarm: SwarmState,
+        gbest: GlobalBest,
+        history: Vec<(u64, f64)>,
+        iter: u64,
+        push_base: u64,
+    ) -> QueueRun<'a> {
+        let state = SharedSwarm::new(swarm);
+        let blocks = self.settings.blocks_for(params.n);
+        // One shared-memory queue per block, sized to the block (§5.3:
+        // store indices, not positions, to bound shared memory).
+        let queues: Vec<SharedQueue<(f64, u32)>> = (0..blocks)
+            .map(|_| SharedQueue::new(self.settings.block_size))
+            .collect();
+        let aux = PerBlock::from_fn(blocks, |_| (objective.worst(), u32::MAX));
+        let step_scratch =
+            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
+
+        let frozen = gbest.pos_vec();
+        QueueRun {
+            params: params.clone(),
+            fitness,
+            objective,
+            settings: self.settings.clone(),
+            seed,
+            stream: PhiloxStream::new(seed),
+            state,
+            gbest,
+            queues,
+            aux,
+            step_scratch,
+            push_base,
+            frozen,
+            stride: history_stride(params.max_iter),
+            history,
+            iter,
+        }
     }
 }
 
@@ -53,35 +104,27 @@ impl Engine for QueueEngine {
         let mut init = SwarmState::init(params, &stream);
         let (fit0, gi) = init.seed_fitness(fitness, objective);
         let gbest = GlobalBest::new(fit0, &init.position_of(gi));
-        let state = SharedSwarm::new(init);
+        Box::new(self.assemble(params, fitness, objective, seed, init, gbest, Vec::new(), 0, 0))
+    }
 
-        let blocks = self.settings.blocks_for(params.n);
-        // One shared-memory queue per block, sized to the block (§5.3:
-        // store indices, not positions, to bound shared memory).
-        let queues: Vec<SharedQueue<(f64, u32)>> = (0..blocks)
-            .map(|_| SharedQueue::new(self.settings.block_size))
-            .collect();
-        let aux = PerBlock::from_fn(blocks, |_| (objective.worst(), u32::MAX));
-        let step_scratch =
-            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
-
-        let frozen = gbest.pos_vec();
-        Box::new(QueueRun {
-            params: params.clone(),
+    fn restore<'a>(
+        &mut self,
+        ckpt: &RunCheckpoint,
+        fitness: &'a dyn Fitness,
+    ) -> Result<Box<dyn Run + 'a>> {
+        restore_guard(ckpt, RunKind::Queue)?;
+        let gbest = GlobalBest::restore(ckpt.gbest_fit, &ckpt.gbest_pos, ckpt.counters.gbest_updates);
+        Ok(Box::new(self.assemble(
+            &ckpt.params,
             fitness,
-            objective,
-            settings: self.settings.clone(),
-            stream,
-            state,
+            ckpt.objective,
+            ckpt.seed,
+            ckpt.swarm.clone(),
             gbest,
-            queues,
-            aux,
-            step_scratch,
-            frozen,
-            stride: history_stride(params.max_iter),
-            history: Vec::new(),
-            iter: 0,
-        })
+            ckpt.history.clone(),
+            ckpt.iter,
+            ckpt.counters.queue_pushes,
+        )))
     }
 }
 
@@ -92,12 +135,16 @@ pub struct QueueRun<'a> {
     fitness: &'a dyn Fitness,
     objective: Objective,
     settings: ParallelSettings,
+    seed: u64,
     stream: PhiloxStream,
     state: SharedSwarm,
     gbest: GlobalBest,
     queues: Vec<SharedQueue<(f64, u32)>>,
     aux: PerBlock<(f64, u32)>,
     step_scratch: PerBlock<StepScratch>,
+    /// Queue pushes accumulated before the last restore (the live queues
+    /// only count pushes since then).
+    push_base: u64,
     frozen: Vec<f64>,
     stride: u64,
     history: Vec<(u64, f64)>,
@@ -214,6 +261,7 @@ impl Run for QueueRun<'_> {
             state,
             gbest,
             queues,
+            push_base,
             mut history,
             iter,
             ..
@@ -223,7 +271,7 @@ impl Run for QueueRun<'_> {
         debug_assert_eq!(swarm.check_bounds(&params), Ok(()));
         let counters = Counters {
             particle_updates: params.n as u64 * iter,
-            queue_pushes: queues.iter().map(|q| q.total_pushes()).sum(),
+            queue_pushes: push_base + queues.iter().map(|q| q.total_pushes()).sum::<u64>(),
             gbest_updates: gbest.update_count(),
             ..Default::default()
         };
@@ -233,6 +281,32 @@ impl Run for QueueRun<'_> {
             iters: iter,
             history,
             counters,
+        }
+    }
+
+    fn checkpoint(&self) -> RunCheckpoint {
+        // SAFETY: between steps every launched block has joined, and
+        // `&mut self` stepping excludes this `&self` call, so the swarm is
+        // quiescent and fully visible.
+        let swarm = unsafe { self.state.get() }.clone();
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::Queue,
+            objective: self.objective,
+            seed: self.seed,
+            params: self.params.clone(),
+            iter: self.iter,
+            gbest_fit: self.gbest.fit_relaxed(),
+            gbest_pos: self.gbest.pos_vec(),
+            history: self.history.clone(),
+            counters: Counters {
+                particle_updates: self.params.n as u64 * self.iter,
+                queue_pushes: self.push_base
+                    + self.queues.iter().map(|q| q.total_pushes()).sum::<u64>(),
+                gbest_updates: self.gbest.update_count(),
+                ..Default::default()
+            },
+            swarm,
         }
     }
 }

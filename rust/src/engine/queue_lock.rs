@@ -15,12 +15,14 @@
 //! once ([`QueueLockRun`]); each [`Run::step`] is the single fused launch.
 
 use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSwarm, StepScratch};
-use super::{Engine, Run, StepReport};
+use super::{restore_guard, Engine, Run, StepReport};
+use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
 use crate::exec::SharedQueue;
 use crate::fitness::{Fitness, Objective};
 use crate::pso::serial_sync::better_with_tie;
 use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
 use crate::rng::PhiloxStream;
+use anyhow::Result;
 
 /// The fused Queue-Lock engine (one kernel per iteration).
 pub struct QueueLockEngine {
@@ -31,6 +33,52 @@ impl QueueLockEngine {
     /// New engine on the given pool/geometry.
     pub fn new(settings: ParallelSettings) -> Self {
         Self { settings }
+    }
+
+    /// Allocate queues/snapshots/scratch around an existing state —
+    /// shared by `prepare` and `restore` so the two paths cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    fn assemble<'a>(
+        &self,
+        params: &PsoParams,
+        fitness: &'a dyn Fitness,
+        objective: Objective,
+        seed: u64,
+        swarm: SwarmState,
+        gbest: GlobalBest,
+        history: Vec<(u64, f64)>,
+        iter: u64,
+        push_base: u64,
+    ) -> QueueLockRun<'a> {
+        let state = SharedSwarm::new(swarm);
+        let blocks = self.settings.blocks_for(params.n);
+        let queues: Vec<SharedQueue<(f64, u32)>> = (0..blocks)
+            .map(|_| SharedQueue::new(self.settings.block_size))
+            .collect();
+        // Per-block gbest_pos snapshot buffer: in the fused kernel the
+        // global position can be updated by another block mid-iteration
+        // (the paper's benign race); each block snapshots at its start.
+        let snapshots = PerBlock::from_fn(blocks, |_| vec![0.0; params.dim]);
+        let step_scratch =
+            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
+
+        QueueLockRun {
+            params: params.clone(),
+            fitness,
+            objective,
+            settings: self.settings.clone(),
+            seed,
+            stream: PhiloxStream::new(seed),
+            state,
+            gbest,
+            queues,
+            snapshots,
+            step_scratch,
+            push_base,
+            stride: history_stride(params.max_iter),
+            history,
+            iter,
+        }
     }
 }
 
@@ -50,34 +98,32 @@ impl Engine for QueueLockEngine {
         let mut init = SwarmState::init(params, &stream);
         let (fit0, gi) = init.seed_fitness(fitness, objective);
         let gbest = GlobalBest::new(fit0, &init.position_of(gi));
-        let state = SharedSwarm::new(init);
+        Box::new(self.assemble(params, fitness, objective, seed, init, gbest, Vec::new(), 0, 0))
+    }
 
-        let blocks = self.settings.blocks_for(params.n);
-        let queues: Vec<SharedQueue<(f64, u32)>> = (0..blocks)
-            .map(|_| SharedQueue::new(self.settings.block_size))
-            .collect();
-        // Per-block gbest_pos snapshot buffer: in the fused kernel the
-        // global position can be updated by another block mid-iteration
-        // (the paper's benign race); each block snapshots at its start.
-        let snapshots = PerBlock::from_fn(blocks, |_| vec![0.0; params.dim]);
-        let step_scratch =
-            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
-
-        Box::new(QueueLockRun {
-            params: params.clone(),
+    /// Restore a suspended Queue-Lock run. Checkpoints are only ever
+    /// taken at step boundaries (grid quiescent), so the captured state
+    /// is complete and consistent; the engine's documented intra-run race
+    /// means the *continuation* may differ run-to-run, exactly as an
+    /// uninterrupted Queue-Lock run may.
+    fn restore<'a>(
+        &mut self,
+        ckpt: &RunCheckpoint,
+        fitness: &'a dyn Fitness,
+    ) -> Result<Box<dyn Run + 'a>> {
+        restore_guard(ckpt, RunKind::QueueLock)?;
+        let gbest = GlobalBest::restore(ckpt.gbest_fit, &ckpt.gbest_pos, ckpt.counters.gbest_updates);
+        Ok(Box::new(self.assemble(
+            &ckpt.params,
             fitness,
-            objective,
-            settings: self.settings.clone(),
-            stream,
-            state,
+            ckpt.objective,
+            ckpt.seed,
+            ckpt.swarm.clone(),
             gbest,
-            queues,
-            snapshots,
-            step_scratch,
-            stride: history_stride(params.max_iter),
-            history: Vec::new(),
-            iter: 0,
-        })
+            ckpt.history.clone(),
+            ckpt.iter,
+            ckpt.counters.queue_pushes,
+        )))
     }
 }
 
@@ -87,12 +133,15 @@ pub struct QueueLockRun<'a> {
     fitness: &'a dyn Fitness,
     objective: Objective,
     settings: ParallelSettings,
+    seed: u64,
     stream: PhiloxStream,
     state: SharedSwarm,
     gbest: GlobalBest,
     queues: Vec<SharedQueue<(f64, u32)>>,
     snapshots: PerBlock<Vec<f64>>,
     step_scratch: PerBlock<StepScratch>,
+    /// Queue pushes accumulated before the last restore.
+    push_base: u64,
     stride: u64,
     history: Vec<(u64, f64)>,
     iter: u64,
@@ -198,6 +247,7 @@ impl Run for QueueLockRun<'_> {
             state,
             gbest,
             queues,
+            push_base,
             mut history,
             iter,
             ..
@@ -207,7 +257,7 @@ impl Run for QueueLockRun<'_> {
         debug_assert_eq!(swarm.check_bounds(&params), Ok(()));
         let counters = Counters {
             particle_updates: params.n as u64 * iter,
-            queue_pushes: queues.iter().map(|q| q.total_pushes()).sum(),
+            queue_pushes: push_base + queues.iter().map(|q| q.total_pushes()).sum::<u64>(),
             gbest_updates: gbest.update_count(),
             ..Default::default()
         };
@@ -217,6 +267,32 @@ impl Run for QueueLockRun<'_> {
             iters: iter,
             history,
             counters,
+        }
+    }
+
+    fn checkpoint(&self) -> RunCheckpoint {
+        // SAFETY: between steps the fused kernel's grid has joined, and
+        // `&mut self` stepping excludes this `&self` call — the paper's
+        // intra-iteration race is quiesced at every step boundary.
+        let swarm = unsafe { self.state.get() }.clone();
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::QueueLock,
+            objective: self.objective,
+            seed: self.seed,
+            params: self.params.clone(),
+            iter: self.iter,
+            gbest_fit: self.gbest.fit_relaxed(),
+            gbest_pos: self.gbest.pos_vec(),
+            history: self.history.clone(),
+            counters: Counters {
+                particle_updates: self.params.n as u64 * self.iter,
+                queue_pushes: self.push_base
+                    + self.queues.iter().map(|q| q.total_pushes()).sum::<u64>(),
+                gbest_updates: self.gbest.update_count(),
+                ..Default::default()
+            },
+            swarm,
         }
     }
 }

@@ -20,10 +20,12 @@
 //! every buffer is allocated once in `prepare` and reused across steps.
 
 use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSwarm, StepScratch};
-use super::{Engine, Run, StepReport};
+use super::{restore_guard, Engine, Run, StepReport};
+use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
 use crate::fitness::{Fitness, Objective};
 use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
 use crate::rng::PhiloxStream;
+use anyhow::Result;
 
 /// Per-block reduction scratch (`bestFit` / index arrays in shared memory).
 struct Scratch {
@@ -121,6 +123,69 @@ impl ReductionEngine {
             unrolled: true,
         }
     }
+
+    /// The checkpoint kind this engine variant produces/restores.
+    fn kind(&self) -> RunKind {
+        if self.unrolled {
+            RunKind::LoopUnrolling
+        } else {
+            RunKind::Reduction
+        }
+    }
+
+    /// Allocate every per-run buffer around an existing swarm/global-best
+    /// state — shared by `prepare` (freshly seeded state) and `restore`
+    /// (state from a checkpoint), so the two paths cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    fn assemble<'a>(
+        &self,
+        params: &PsoParams,
+        fitness: &'a dyn Fitness,
+        objective: Objective,
+        seed: u64,
+        swarm: SwarmState,
+        gbest: GlobalBest,
+        history: Vec<(u64, f64)>,
+        iter: u64,
+    ) -> ReductionRun<'a> {
+        let state = SharedSwarm::new(swarm);
+        let blocks = self.settings.blocks_for(params.n);
+        let pad = self.settings.block_size.next_power_of_two();
+        let scratch = PerBlock::from_fn(blocks, |_| Scratch {
+            fits: vec![objective.worst(); pad],
+            idxs: vec![u32::MAX; pad],
+        });
+        let step_scratch =
+            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
+        // aux arrays: (auxFit[b], auxIdx[b]) + 2nd-kernel scratch.
+        let aux = PerBlock::from_fn(blocks, |_| (objective.worst(), u32::MAX));
+        let aux_pad = blocks.next_power_of_two();
+        let k2_scratch = PerBlock::from_fn(1, |_| Scratch {
+            fits: vec![objective.worst(); aux_pad],
+            idxs: vec![u32::MAX; aux_pad],
+        });
+
+        let frozen = gbest.pos_vec();
+        ReductionRun {
+            params: params.clone(),
+            fitness,
+            objective,
+            settings: self.settings.clone(),
+            unrolled: self.unrolled,
+            seed,
+            stream: PhiloxStream::new(seed),
+            state,
+            gbest,
+            scratch,
+            step_scratch,
+            aux,
+            k2_scratch,
+            frozen,
+            stride: history_stride(params.max_iter),
+            history,
+            iter,
+        }
+    }
 }
 
 impl Engine for ReductionEngine {
@@ -143,43 +208,26 @@ impl Engine for ReductionEngine {
         let mut init = SwarmState::init(params, &stream);
         let (fit0, gi) = init.seed_fitness(fitness, objective);
         let gbest = GlobalBest::new(fit0, &init.position_of(gi));
-        let state = SharedSwarm::new(init);
+        Box::new(self.assemble(params, fitness, objective, seed, init, gbest, Vec::new(), 0))
+    }
 
-        let blocks = self.settings.blocks_for(params.n);
-        let pad = self.settings.block_size.next_power_of_two();
-        let scratch = PerBlock::from_fn(blocks, |_| Scratch {
-            fits: vec![objective.worst(); pad],
-            idxs: vec![u32::MAX; pad],
-        });
-        let step_scratch =
-            PerBlock::from_fn(blocks, |_| StepScratch::new(self.settings.block_size));
-        // aux arrays: (auxFit[b], auxIdx[b]) + 2nd-kernel scratch.
-        let aux = PerBlock::from_fn(blocks, |_| (objective.worst(), u32::MAX));
-        let aux_pad = blocks.next_power_of_two();
-        let k2_scratch = PerBlock::from_fn(1, |_| Scratch {
-            fits: vec![objective.worst(); aux_pad],
-            idxs: vec![u32::MAX; aux_pad],
-        });
-
-        let frozen = gbest.pos_vec();
-        Box::new(ReductionRun {
-            params: params.clone(),
+    fn restore<'a>(
+        &mut self,
+        ckpt: &RunCheckpoint,
+        fitness: &'a dyn Fitness,
+    ) -> Result<Box<dyn Run + 'a>> {
+        restore_guard(ckpt, self.kind())?;
+        let gbest = GlobalBest::restore(ckpt.gbest_fit, &ckpt.gbest_pos, ckpt.counters.gbest_updates);
+        Ok(Box::new(self.assemble(
+            &ckpt.params,
             fitness,
-            objective,
-            settings: self.settings.clone(),
-            unrolled: self.unrolled,
-            stream,
-            state,
+            ckpt.objective,
+            ckpt.seed,
+            ckpt.swarm.clone(),
             gbest,
-            scratch,
-            step_scratch,
-            aux,
-            k2_scratch,
-            frozen,
-            stride: history_stride(params.max_iter),
-            history: Vec::new(),
-            iter: 0,
-        })
+            ckpt.history.clone(),
+            ckpt.iter,
+        )))
     }
 }
 
@@ -191,6 +239,7 @@ pub struct ReductionRun<'a> {
     objective: Objective,
     settings: ParallelSettings,
     unrolled: bool,
+    seed: u64,
     stream: PhiloxStream,
     state: SharedSwarm,
     gbest: GlobalBest,
@@ -339,6 +388,34 @@ impl Run for ReductionRun<'_> {
             iters: iter,
             history,
             counters,
+        }
+    }
+
+    fn checkpoint(&self) -> RunCheckpoint {
+        // SAFETY: between steps every launched block has joined, and
+        // `&mut self` stepping excludes this `&self` call, so the swarm is
+        // quiescent and fully visible.
+        let swarm = unsafe { self.state.get() }.clone();
+        RunCheckpoint {
+            version: VERSION,
+            kind: if self.unrolled {
+                RunKind::LoopUnrolling
+            } else {
+                RunKind::Reduction
+            },
+            objective: self.objective,
+            seed: self.seed,
+            params: self.params.clone(),
+            iter: self.iter,
+            gbest_fit: self.gbest.fit_relaxed(),
+            gbest_pos: self.gbest.pos_vec(),
+            history: self.history.clone(),
+            counters: Counters {
+                particle_updates: self.params.n as u64 * self.iter,
+                gbest_updates: self.gbest.update_count(),
+                ..Default::default()
+            },
+            swarm,
         }
     }
 }

@@ -19,7 +19,13 @@
 //! step-wise solver ([`engine::Engine::prepare`] → [`engine::Run`]), and
 //! the [`scheduler`] multiplexes many concurrent jobs over one shared
 //! worker pool with per-job termination criteria (the `cupso batch`
-//! subcommand drives it from a multi-job TOML).
+//! subcommand drives it from a multi-job TOML). Runs are additionally
+//! **checkpointable** ([`engine::Run::checkpoint`] /
+//! [`engine::Engine::restore`], serialized by [`checkpoint`]): the
+//! scheduler can preempt a live job to a checkpoint and resume it later —
+//! on a different stream, or in a different process via
+//! `cupso batch --checkpoint-dir` + `cupso resume` — bit-identically for
+//! the bit-exact engines.
 //!
 //! ## Quickstart
 //!
@@ -35,6 +41,7 @@
 //! ```
 
 pub mod benchkit;
+pub mod checkpoint;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

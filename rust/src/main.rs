@@ -4,6 +4,8 @@
 //!   run       solve one PSO workload with a chosen engine
 //!   compare   run all five paper algorithms on one workload and rank them
 //!   batch     run a multi-job TOML through the shared-pool scheduler
+//!             (optionally checkpointing every job into --checkpoint-dir)
+//!   resume    continue a suspended/checkpointed batch from its directory
 //!   simulate  print the Plane-C estimated-GPU tables (no execution)
 //!   xla       drive the three-layer AOT stack (sync or async coordinator)
 //!   info      platform, engines, fitness functions, artifact inventory
@@ -13,8 +15,9 @@
 //! multi-job file (see `config/batch_demo.toml`).
 
 use anyhow::{bail, Context, Result};
+use cupso::checkpoint::JobCheckpoint;
 use cupso::cli::{split_subcommand, Command};
-use cupso::config::{BatchConfig, EngineKind, RunConfig};
+use cupso::config::{parse_toml, BatchConfig, EngineKind, RunConfig, TomlValue};
 use cupso::coordinator::{AsyncScheduler, CoordinatorConfig, SyncScheduler};
 use cupso::engine::ParallelSettings;
 use cupso::fitness::{by_name, Objective};
@@ -23,8 +26,12 @@ use cupso::metrics::{Stopwatch, Table};
 use cupso::pso::PsoParams;
 use cupso::rng::RngKind;
 use cupso::runtime::XlaRuntime;
-use cupso::scheduler::{JobScheduler, JobSpec, SchedPolicy};
-use std::path::Path;
+use cupso::scheduler::{
+    BatchRun, JobOutcome, JobReport, JobScheduler, JobSpec, SchedPolicy, TerminationCriteria,
+};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -40,6 +47,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         Some("run") => cmd_run(rest),
         Some("compare") => cmd_compare(rest),
         Some("batch") => cmd_batch(rest),
+        Some("resume") => cmd_resume(rest),
         Some("simulate") => cmd_simulate(rest),
         Some("xla") => cmd_xla(rest),
         Some("info") => cmd_info(rest),
@@ -57,6 +65,7 @@ fn top_usage() -> String {
      \x20 run       solve one workload with a chosen engine\n\
      \x20 compare   rank all five paper algorithms on one workload\n\
      \x20 batch     run a multi-job TOML on one shared pool\n\
+     \x20 resume    continue a checkpointed batch from its directory\n\
      \x20 simulate  print the estimated-GPU tables (Plane C)\n\
      \x20 xla       drive the AOT three-layer stack\n\
      \x20 info      platform + inventory\n\n\
@@ -206,6 +215,27 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
         .opt("policy", "round-robin|edf (overrides the file)", None)
         .opt("streams", "concurrent pool streams (overrides the file)", None)
         .opt("batch-steps", "iterations per job per round (overrides the file)", None)
+        .opt(
+            "preempt-quantum",
+            "suspend a job to a checkpoint after this many steps when jobs \
+             outnumber streams; 0 = cooperative (overrides the file)",
+            None,
+        )
+        .opt(
+            "checkpoint-dir",
+            "write periodic per-job checkpoints here (enables `cupso resume`)",
+            None,
+        )
+        .opt(
+            "checkpoint-every",
+            "scheduling rounds between periodic checkpoints",
+            Some("64"),
+        )
+        .opt(
+            "suspend-after",
+            "suspend the whole batch to --checkpoint-dir after this many rounds and exit",
+            None,
+        )
         .switch("trace", "print every global-best improvement as it lands");
     if rest.iter().any(|a| a == "--help") {
         println!("{}", spec.usage());
@@ -231,12 +261,32 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
             .parse()
             .map_err(|e| anyhow::anyhow!("--batch-steps {b:?}: {e}"))?;
     }
+    if let Some(q) = args.get("preempt-quantum") {
+        cfg.preempt_quantum = q
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--preempt-quantum {q:?}: {e}"))?;
+    }
     if cfg.streams == 0 || cfg.batch_steps == 0 {
         bail!("--streams and --batch-steps must be >= 1");
     }
     let policy = SchedPolicy::parse(&cfg.policy)
         .with_context(|| format!("bad policy {:?} (round-robin|edf)", cfg.policy))?;
     let trace = args.flag("trace");
+    let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
+    let every: u64 = args.get_parse("checkpoint-every", 64u64)?;
+    let suspend_after: Option<u64> = args
+        .get("suspend-after")
+        .map(|s| {
+            s.parse()
+                .map_err(|e| anyhow::anyhow!("--suspend-after {s:?}: {e}"))
+        })
+        .transpose()?;
+    if every == 0 {
+        bail!("--checkpoint-every must be >= 1");
+    }
+    if suspend_after.is_some() && ckpt_dir.is_none() {
+        bail!("--suspend-after requires --checkpoint-dir");
+    }
 
     let specs: Vec<JobSpec> = cfg
         .jobs
@@ -245,14 +295,20 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
         .collect::<Result<_>>()?;
     let scheduler = JobScheduler::new(ParallelSettings::with_streams(cfg.workers, cfg.streams))
         .policy(policy)
-        .batch_steps(cfg.batch_steps);
+        .batch_steps(cfg.batch_steps)
+        .preempt_quantum(cfg.preempt_quantum);
     println!(
-        "cupso batch: {} jobs, {} policy, {} pool workers, {} streams, {} steps/round",
+        "cupso batch: {} jobs, {} policy, {} pool workers, {} streams, {} steps/round{}",
         specs.len(),
         policy,
         scheduler.pool().workers(),
         scheduler.streams(),
-        cfg.batch_steps
+        cfg.batch_steps,
+        if cfg.preempt_quantum > 0 {
+            format!(", preemption quantum {}", cfg.preempt_quantum)
+        } else {
+            String::new()
+        }
     );
 
     // One JobReport per stepped job per scheduling round (so with
@@ -260,7 +316,7 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
     let mut reports = 0u64;
     let mut improvements = 0u64;
     let sw = Stopwatch::start();
-    let outcomes = scheduler.run_with(&specs, |r| {
+    let mut telemetry = |r: &JobReport<'_>| {
         reports += 1;
         if r.improved {
             improvements += 1;
@@ -268,18 +324,288 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
                 println!("  [{}] iter {:>6}  gbest {:.6}", r.name, r.iter, r.gbest_fit);
             }
         }
-    })?;
+    };
+    let outcomes = match &ckpt_dir {
+        None => scheduler.run_with(&specs, &mut telemetry)?,
+        Some(dir) => {
+            let completed = drive_sessions(
+                &scheduler,
+                &specs,
+                &cfg,
+                dir,
+                every,
+                suspend_after,
+                None,
+                &mut telemetry,
+            )?;
+            match completed {
+                Some(outcomes) => outcomes,
+                None => return Ok(()), // suspended on request; message printed
+            }
+        }
+    };
     let elapsed = sw.elapsed_s();
+    print_batch_results(&outcomes, &specs, elapsed, reports, improvements);
+    Ok(())
+}
+
+/// Continue a checkpointed batch: `cupso resume <dir>` reconstructs the
+/// jobs and scheduler from the directory `cupso batch --checkpoint-dir`
+/// wrote, restores every job and runs the batch to termination —
+/// bit-identically to the never-interrupted batch for the deterministic
+/// engines.
+fn cmd_resume(rest: &[String]) -> Result<()> {
+    let spec = Command::new("resume", "continue a checkpointed batch from its directory")
+        .opt(
+            "checkpoint-every",
+            "scheduling rounds between refreshed checkpoints",
+            Some("64"),
+        )
+        .switch("trace", "print every global-best improvement as it lands");
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        println!("usage: cupso resume <checkpoint-dir>");
+        return Ok(());
+    }
+    let args = spec.parse(rest)?;
+    let dir = args
+        .positional
+        .first()
+        .map(PathBuf::from)
+        .context("usage: cupso resume <checkpoint-dir>")?;
+    let every: u64 = args.get_parse("checkpoint-every", 64u64)?;
+    if every == 0 {
+        bail!("--checkpoint-every must be >= 1");
+    }
+    let trace = args.flag("trace");
+
+    let (knobs, ckpts) = read_snapshot(&dir)?;
+    let specs = specs_from_checkpoints(&ckpts)?;
+    let policy = SchedPolicy::parse(&knobs.policy)
+        .with_context(|| format!("manifest: bad policy {:?}", knobs.policy))?;
+    let scheduler = JobScheduler::new(ParallelSettings::with_streams(knobs.workers, knobs.streams))
+        .policy(policy)
+        .batch_steps(knobs.batch_steps)
+        .preempt_quantum(knobs.preempt_quantum);
+    let done = ckpts.iter().filter(|c| c.stop.is_some()).count();
+    println!(
+        "cupso resume: {} jobs from {} ({} already finished), {} policy, {} streams",
+        specs.len(),
+        dir.display(),
+        done,
+        policy,
+        scheduler.streams()
+    );
+
+    let mut reports = 0u64;
+    let mut improvements = 0u64;
+    let sw = Stopwatch::start();
+    let mut telemetry = |r: &JobReport<'_>| {
+        reports += 1;
+        if r.improved {
+            improvements += 1;
+            if trace {
+                println!("  [{}] iter {:>6}  gbest {:.6}", r.name, r.iter, r.gbest_fit);
+            }
+        }
+    };
+    let outcomes = drive_sessions(
+        &scheduler,
+        &specs,
+        &knobs,
+        &dir,
+        every,
+        None,
+        Some(ckpts),
+        &mut telemetry,
+    )?
+    .expect("resume without --suspend-after runs to completion");
+    let elapsed = sw.elapsed_s();
+    print_batch_results(&outcomes, &specs, elapsed, reports, improvements);
+    Ok(())
+}
+
+/// Session loop shared by `batch --checkpoint-dir` and `resume`: run the
+/// scheduler in bounded sessions, persisting a full snapshot after every
+/// session. `Ok(None)` means the batch was deliberately suspended
+/// (`suspend_after`); `Ok(Some(outcomes))` means it completed.
+#[allow(clippy::too_many_arguments)]
+fn drive_sessions<F: FnMut(&JobReport<'_>)>(
+    scheduler: &JobScheduler,
+    specs: &[JobSpec],
+    cfg: &BatchConfig,
+    dir: &Path,
+    every: u64,
+    suspend_after: Option<u64>,
+    mut resume: Option<Vec<JobCheckpoint>>,
+    mut telemetry: F,
+) -> Result<Option<Vec<JobOutcome>>> {
+    // Periodic checkpoints keep their cadence even under --suspend-after:
+    // each session runs at most `every` rounds, and the suspend budget
+    // counts down across sessions.
+    let mut to_suspend = suspend_after;
+    loop {
+        let cap = to_suspend.map_or(every, |rem| rem.min(every));
+        match scheduler.run_session(specs, resume.as_deref(), Some(cap), &mut telemetry)? {
+            BatchRun::Complete(outcomes) => return Ok(Some(outcomes)),
+            BatchRun::Suspended(snap) => {
+                write_snapshot(dir, cfg, &snap)?;
+                if let Some(rem) = &mut to_suspend {
+                    // A suspended session ran exactly `cap` rounds.
+                    *rem = rem.saturating_sub(cap);
+                    if *rem == 0 {
+                        println!(
+                            "suspended {} jobs into {} — continue with `cupso resume {}`",
+                            snap.len(),
+                            dir.display(),
+                            dir.display()
+                        );
+                        return Ok(None);
+                    }
+                }
+                resume = Some(snap);
+            }
+        }
+    }
+}
+
+/// Persist a batch snapshot: one `job_<i>.ckpt` per job plus a
+/// `manifest.toml` recording the scheduler knobs and job count.
+fn write_snapshot(dir: &Path, cfg: &BatchConfig, snap: &[JobCheckpoint]) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    for (i, job) in snap.iter().enumerate() {
+        job.write_file(&dir.join(format!("job_{i}.ckpt")))?;
+    }
+    let manifest = format!(
+        "# cupso batch snapshot — continue with `cupso resume {}`\n\
+         version = {}\n\
+         workers = {}\n\
+         policy = \"{}\"\n\
+         streams = {}\n\
+         batch_steps = {}\n\
+         preempt_quantum = {}\n\
+         jobs = {}\n",
+        dir.display(),
+        cupso::checkpoint::VERSION,
+        cfg.workers,
+        cfg.policy,
+        cfg.streams,
+        cfg.batch_steps,
+        cfg.preempt_quantum,
+        snap.len()
+    );
+    // Atomic like the job checkpoints: a crash mid-write must never tear
+    // the manifest, or the whole snapshot becomes unresumable.
+    let tmp = dir.join("manifest.toml.tmp");
+    std::fs::write(&tmp, manifest)
+        .with_context(|| format!("writing manifest in {}", dir.display()))?;
+    std::fs::rename(&tmp, dir.join("manifest.toml"))
+        .with_context(|| format!("publishing manifest in {}", dir.display()))?;
+    Ok(())
+}
+
+/// Load a batch snapshot directory: scheduler knobs (as a job-less
+/// `BatchConfig`) plus every job checkpoint in manifest order.
+fn read_snapshot(dir: &Path) -> Result<(BatchConfig, Vec<JobCheckpoint>)> {
+    let manifest_path = dir.join("manifest.toml");
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let doc: BTreeMap<String, TomlValue> = parse_toml(&text)?.into_iter().collect();
+    // Loud on anything out of range — a hand-edited or torn manifest must
+    // never wrap into a huge thread count or silently clamp a knob. The
+    // caps are per-key: resource-shaped knobs (workers/streams/jobs) get
+    // tight plausibility bounds, step-denominated knobs only reject
+    // negatives (batch wrote whatever the user asked for).
+    let get_uint = |key: &str, max: u64| -> Result<u64> {
+        let v = doc
+            .get(key)
+            .with_context(|| format!("manifest: missing key {key:?}"))?
+            .as_int(key)?;
+        if v < 0 || v as u64 > max {
+            bail!("manifest: {key} = {v} out of range");
+        }
+        Ok(v as u64)
+    };
+    let version = get_uint("version", u32::MAX as u64)?;
+    if version != cupso::checkpoint::VERSION as u64 {
+        bail!(
+            "manifest: snapshot version {version} unsupported (this build reads {})",
+            cupso::checkpoint::VERSION
+        );
+    }
+    let streams = get_uint("streams", 1_000_000)?;
+    let batch_steps = get_uint("batch_steps", u64::MAX)?;
+    if streams == 0 || batch_steps == 0 {
+        bail!("manifest: streams and batch_steps must be >= 1");
+    }
+    let knobs = BatchConfig {
+        workers: get_uint("workers", 1_000_000)? as usize,
+        policy: doc
+            .get("policy")
+            .context("manifest: missing key \"policy\"")?
+            .as_str("policy")?
+            .to_string(),
+        streams: streams as usize,
+        batch_steps,
+        preempt_quantum: get_uint("preempt_quantum", u64::MAX)?,
+        jobs: Vec::new(),
+    };
+    let job_count = get_uint("jobs", 100_000)?;
+    let mut ckpts = Vec::with_capacity(job_count as usize);
+    for i in 0..job_count {
+        ckpts.push(JobCheckpoint::read_file(&dir.join(format!("job_{i}.ckpt")))?);
+    }
+    Ok((knobs, ckpts))
+}
+
+/// Rebuild scheduler job specs from suspended checkpoints: workload,
+/// engine, seed and objective come from the run state; fitness and the
+/// termination bounds from the job wrapper.
+fn specs_from_checkpoints(ckpts: &[JobCheckpoint]) -> Result<Vec<JobSpec>> {
+    ckpts
+        .iter()
+        .map(|c| {
+            let fitness = by_name(&c.fitness)
+                .with_context(|| format!("job {}: unknown fitness {:?}", c.name, c.fitness))?;
+            let engine = c.run.kind.engine_kind().with_context(|| {
+                format!("job {}: run kind {} is not schedulable", c.name, c.run.kind)
+            })?;
+            let mut spec = JobSpec::new(
+                &c.name,
+                engine,
+                c.run.params.clone(),
+                Arc::from(fitness),
+                c.run.objective,
+                c.run.seed,
+            );
+            spec.termination = TerminationCriteria {
+                max_iter: c.max_steps,
+                target_fit: c.target_fit,
+                stall_window: c.stall_window,
+            };
+            spec.deadline = c.deadline;
+            Ok(spec)
+        })
+        .collect()
+}
+
+fn print_batch_results(
+    outcomes: &[JobOutcome],
+    specs: &[JobSpec],
+    elapsed: f64,
+    reports: u64,
+    improvements: u64,
+) {
     // A telemetry report covers a whole round (batch_steps iterations),
     // so iteration throughput comes from the outcomes, not the report
     // count.
     let total_steps: u64 = outcomes.iter().map(|o| o.steps).sum();
-
     let mut table = Table::new(
         "Batch results",
         &["Job", "Engine", "Workload", "Steps", "Stop", "gbest"],
     );
-    for (o, s) in outcomes.iter().zip(&specs) {
+    for (o, s) in outcomes.iter().zip(specs) {
         table.row(&[
             o.name.clone(),
             o.engine.label().to_string(),
@@ -301,7 +627,6 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
         reports,
         improvements
     );
-    Ok(())
 }
 
 fn cmd_simulate(rest: &[String]) -> Result<()> {

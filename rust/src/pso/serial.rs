@@ -11,9 +11,11 @@
 //! exhaustion, so the one-shot and step-wise paths are the same code.
 
 use super::{eval_and_pbest, history_stride, update_particle, PsoParams, RunOutput, SwarmState};
-use crate::engine::{Run, StepReport};
+use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
+use crate::engine::{restore_guard, Run, StepReport};
 use crate::fitness::{Fitness, Objective};
 use crate::rng::PhiloxStream;
+use anyhow::Result;
 
 /// Run the sequential SPSO (Algorithm 1).
 pub fn run(
@@ -32,6 +34,7 @@ pub struct SerialRun<'a> {
     params: PsoParams,
     fitness: &'a dyn Fitness,
     objective: Objective,
+    seed: u64,
     stream: PhiloxStream,
     state: SwarmState,
     gbest_fit: f64,
@@ -59,6 +62,7 @@ impl<'a> SerialRun<'a> {
             params: params.clone(),
             fitness,
             objective,
+            seed,
             stream,
             state,
             gbest_fit,
@@ -68,6 +72,27 @@ impl<'a> SerialRun<'a> {
             history: Vec::with_capacity(super::HISTORY_SAMPLES as usize + 1),
             iter: 0,
         }
+    }
+
+    /// Rebuild a suspended serial run from its checkpoint — bit-exact:
+    /// the counter-based RNG plus the restored swarm/gbest/counters make
+    /// the continuation identical to the uninterrupted run.
+    pub fn restore(ckpt: &RunCheckpoint, fitness: &'a dyn Fitness) -> Result<Self> {
+        restore_guard(ckpt, RunKind::SerialCpu)?;
+        Ok(Self {
+            params: ckpt.params.clone(),
+            fitness,
+            objective: ckpt.objective,
+            seed: ckpt.seed,
+            stream: PhiloxStream::new(ckpt.seed),
+            state: ckpt.swarm.clone(),
+            gbest_fit: ckpt.gbest_fit,
+            gbest_pos: ckpt.gbest_pos.clone(),
+            counters: ckpt.counters.clone(),
+            stride: history_stride(ckpt.params.max_iter),
+            history: ckpt.history.clone(),
+            iter: ckpt.iter,
+        })
     }
 }
 
@@ -156,6 +181,22 @@ impl Run for SerialRun<'_> {
             iters: iter,
             history,
             counters,
+        }
+    }
+
+    fn checkpoint(&self) -> RunCheckpoint {
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::SerialCpu,
+            objective: self.objective,
+            seed: self.seed,
+            params: self.params.clone(),
+            iter: self.iter,
+            gbest_fit: self.gbest_fit,
+            gbest_pos: self.gbest_pos.clone(),
+            history: self.history.clone(),
+            counters: self.counters.clone(),
+            swarm: self.state.clone(),
         }
     }
 }

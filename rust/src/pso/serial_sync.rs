@@ -14,9 +14,11 @@
 //! cannot drift apart.
 
 use super::{eval_and_pbest, history_stride, update_particle, PsoParams, RunOutput, SwarmState};
-use crate::engine::{Run, StepReport};
+use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
+use crate::engine::{restore_guard, Run, StepReport};
 use crate::fitness::{Fitness, Objective};
 use crate::rng::PhiloxStream;
+use anyhow::Result;
 
 /// Tie-break rule shared with every parallel engine: on equal fitness the
 /// smaller particle index wins. This makes the argmax total so engines
@@ -49,6 +51,7 @@ pub struct SyncSerialRun<'a> {
     params: PsoParams,
     fitness: &'a dyn Fitness,
     objective: Objective,
+    seed: u64,
     stream: PhiloxStream,
     state: SwarmState,
     gbest_fit: f64,
@@ -75,6 +78,7 @@ impl<'a> SyncSerialRun<'a> {
             params: params.clone(),
             fitness,
             objective,
+            seed,
             stream,
             state,
             gbest_fit,
@@ -84,6 +88,26 @@ impl<'a> SyncSerialRun<'a> {
             history: Vec::with_capacity(super::HISTORY_SAMPLES as usize + 1),
             iter: 0,
         }
+    }
+
+    /// Rebuild a suspended oracle run from its checkpoint — bit-exact,
+    /// like the serial reference.
+    pub fn restore(ckpt: &RunCheckpoint, fitness: &'a dyn Fitness) -> Result<Self> {
+        restore_guard(ckpt, RunKind::SerialSync)?;
+        Ok(Self {
+            params: ckpt.params.clone(),
+            fitness,
+            objective: ckpt.objective,
+            seed: ckpt.seed,
+            stream: PhiloxStream::new(ckpt.seed),
+            state: ckpt.swarm.clone(),
+            gbest_fit: ckpt.gbest_fit,
+            gbest_pos: ckpt.gbest_pos.clone(),
+            counters: ckpt.counters.clone(),
+            stride: history_stride(ckpt.params.max_iter),
+            history: ckpt.history.clone(),
+            iter: ckpt.iter,
+        })
     }
 }
 
@@ -182,6 +206,22 @@ impl Run for SyncSerialRun<'_> {
             iters: iter,
             history,
             counters,
+        }
+    }
+
+    fn checkpoint(&self) -> RunCheckpoint {
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::SerialSync,
+            objective: self.objective,
+            seed: self.seed,
+            params: self.params.clone(),
+            iter: self.iter,
+            gbest_fit: self.gbest_fit,
+            gbest_pos: self.gbest_pos.clone(),
+            history: self.history.clone(),
+            counters: self.counters.clone(),
+            swarm: self.state.clone(),
         }
     }
 }

@@ -34,12 +34,29 @@
 //! perturb each other. `rust/tests/scheduler_determinism.rs` enforces the
 //! bit-exact half.
 //!
+//! **Preemption & migration.** Runs are checkpointable
+//! ([`crate::engine::Run::checkpoint`]), which upgrades the scheduler
+//! from cooperative interleaving to true preemptive multi-tenancy: with
+//! [`JobScheduler::preempt_quantum`] set and more live jobs than
+//! streams, a job that has run its quantum is **suspended** to a
+//! [`RunCheckpoint`] (its buffers freed), and when the policy next picks
+//! it, it is **restored onto whichever stream is free that round** —
+//! migration. [`JobScheduler::run_session`] additionally bounds a whole
+//! batch to `max_rounds` scheduling rounds and returns a
+//! [`BatchRun::Suspended`] snapshot of every job ([`JobCheckpoint`]),
+//! which a later session — same process or another one, via the
+//! `cupso batch --checkpoint-dir` / `cupso resume` round-trip — resumes.
+//! Because restore is bit-exact for the bit-exact engines, *any*
+//! suspend/restore/migrate schedule yields bit-identical per-job results
+//! (`rust/tests/checkpoint_resume.rs`).
+//!
 //! This is the ROADMAP's "many concurrent optimization jobs" seam: PSO-PS
 //! (arXiv:2009.03816) treats PSO as a long-lived service, and
 //! time-critical deployments (arXiv:1401.0546) need early termination and
 //! bounded per-step latency — both fall out of step-wise runs plus this
 //! scheduler.
 
+use crate::checkpoint::{JobCheckpoint, RunCheckpoint};
 use crate::config::{EngineKind, JobConfig};
 use crate::engine::{self, ParallelSettings, Run, StepReport};
 use crate::exec::GridPool;
@@ -129,6 +146,30 @@ pub enum StopReason {
     MaxIter,
     /// [`TerminationCriteria::stall_window`] consecutive stale steps.
     Stalled,
+}
+
+impl StopReason {
+    /// Stable wire code for [`JobCheckpoint::stop`] (version-1 format —
+    /// never renumber).
+    pub fn code(self) -> u8 {
+        match self {
+            StopReason::Exhausted => 0,
+            StopReason::TargetReached => 1,
+            StopReason::MaxIter => 2,
+            StopReason::Stalled => 3,
+        }
+    }
+
+    /// Inverse of [`code`](Self::code).
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => StopReason::Exhausted,
+            1 => StopReason::TargetReached,
+            2 => StopReason::MaxIter,
+            3 => StopReason::Stalled,
+            other => bail!("unknown stop-reason code {other}"),
+        })
+    }
 }
 
 impl std::fmt::Display for StopReason {
@@ -293,21 +334,41 @@ pub struct JobOutcome {
     pub output: RunOutput,
 }
 
+/// Result of one scheduling session ([`JobScheduler::run_session`]).
+pub enum BatchRun {
+    /// Every job terminated; outcomes in spec order.
+    Complete(Vec<JobOutcome>),
+    /// The round cap fired first: one [`JobCheckpoint`] per job (spec
+    /// order, finished jobs included with their stop reason), ready to be
+    /// persisted and resumed — in this process or another.
+    Suspended(Vec<JobCheckpoint>),
+}
+
 /// Multiplexes N concurrent jobs over one shared [`GridPool`].
 pub struct JobScheduler {
     settings: ParallelSettings,
     policy: SchedPolicy,
     batch_steps: u64,
+    /// Preemption quantum in steps (`None` = cooperative scheduling).
+    preempt_quantum: Option<u64>,
 }
 
 struct LiveJob<'a> {
-    run: Box<dyn Run + 'a>,
+    /// The live run — `None` while the job is suspended to `parked`.
+    run: Option<Box<dyn Run + 'a>>,
+    /// The suspension checkpoint of an inactive job.
+    parked: Option<RunCheckpoint>,
     steps: u64,
     stalled: u64,
     stop: Option<StopReason>,
     deadline: Option<u64>,
-    /// Pool stream this job's launches are pinned to (`job_index % S`).
+    /// Pool stream the job's launches are currently pinned to. A
+    /// suspended job loses its pinning and may be restored onto any free
+    /// stream (migration).
     stream: usize,
+    /// Steps executed since the last (re)activation — the preemption
+    /// quantum counts against this, not lifetime steps.
+    active_steps: u64,
 }
 
 impl JobScheduler {
@@ -319,6 +380,7 @@ impl JobScheduler {
             settings,
             policy: SchedPolicy::RoundRobin,
             batch_steps: 1,
+            preempt_quantum: None,
         }
     }
 
@@ -349,6 +411,18 @@ impl JobScheduler {
         self
     }
 
+    /// Enable preemptive scheduling: when live jobs outnumber streams, a
+    /// job that has executed `quantum` steps since its last activation is
+    /// suspended to a checkpoint after its round, freeing its buffers;
+    /// the policy later restores it onto whichever stream is free
+    /// (migration). `0` disables preemption (the default, cooperative
+    /// mode). Bit-exact engines produce bit-identical results under any
+    /// quantum — preemption only changes *where and when* work happens.
+    pub fn preempt_quantum(mut self, quantum: u64) -> Self {
+        self.preempt_quantum = (quantum > 0).then_some(quantum);
+        self
+    }
+
     /// The shared pool jobs are multiplexed over.
     pub fn pool(&self) -> &Arc<GridPool> {
         &self.settings.pool
@@ -375,46 +449,136 @@ impl JobScheduler {
     pub fn run_with<F: FnMut(&JobReport<'_>)>(
         &self,
         specs: &[JobSpec],
-        mut telemetry: F,
+        telemetry: F,
     ) -> Result<Vec<JobOutcome>> {
-        let streams = self.settings.pool.streams();
-        // Prepare every run up front: all allocation happens here, steps
-        // stay allocation-free on the hot path. Each job is pinned to the
-        // pool stream `index % S` for its whole life.
-        let mut engines = Vec::with_capacity(specs.len());
-        for (i, spec) in specs.iter().enumerate() {
-            let engine = engine::build_with(spec.engine, self.settings.clone().on_stream(i))
-                .with_context(|| {
-                    format!("job {}: engine {} is not schedulable", spec.name, spec.engine)
-                })?;
-            engines.push(engine);
+        match self.run_session(specs, None, None, telemetry)? {
+            BatchRun::Complete(outcomes) => Ok(outcomes),
+            BatchRun::Suspended(_) => unreachable!("an uncapped session cannot suspend"),
         }
+    }
+
+    /// The general scheduling entry: run at most `max_rounds` scheduling
+    /// rounds (`None` = to termination), optionally continuing from a
+    /// prior session's `resume` snapshot (one [`JobCheckpoint`] per spec,
+    /// same order and names).
+    ///
+    /// Resumed jobs start suspended and are restored lazily when the
+    /// policy first picks them — onto whichever stream is free that
+    /// round, which may differ from their pre-suspension pinning
+    /// (migration; also across *sessions* the stream layout may change
+    /// entirely, e.g. a different `streams` count). For the bit-exact
+    /// engines none of this is observable in the results.
+    pub fn run_session<F: FnMut(&JobReport<'_>)>(
+        &self,
+        specs: &[JobSpec],
+        resume: Option<&[JobCheckpoint]>,
+        max_rounds: Option<u64>,
+        mut telemetry: F,
+    ) -> Result<BatchRun> {
+        let streams = self.settings.pool.streams();
         let mut live: Vec<LiveJob<'_>> = Vec::with_capacity(specs.len());
-        for (i, (engine, spec)) in engines.iter_mut().zip(specs).enumerate() {
-            let fitness: &dyn Fitness = &*spec.fitness;
-            live.push(LiveJob {
-                run: engine.prepare(&spec.params, fitness, spec.objective, spec.seed),
-                steps: 0,
-                stalled: 0,
-                stop: None,
-                deadline: spec.deadline,
-                stream: i % streams,
-            });
+        let mut finished = 0usize;
+        match resume {
+            None => {
+                // Fresh batch: prepare every run up front — all allocation
+                // happens here, steps stay allocation-free on the hot
+                // path. Each job starts pinned to pool stream `i % S`.
+                for (i, spec) in specs.iter().enumerate() {
+                    let mut engine =
+                        engine::build_with(spec.engine, self.settings.clone().on_stream(i))
+                            .with_context(|| {
+                                format!(
+                                    "job {}: engine {} is not schedulable",
+                                    spec.name, spec.engine
+                                )
+                            })?;
+                    let fitness: &dyn Fitness = &*spec.fitness;
+                    live.push(LiveJob {
+                        run: Some(engine.prepare(&spec.params, fitness, spec.objective, spec.seed)),
+                        parked: None,
+                        steps: 0,
+                        stalled: 0,
+                        stop: None,
+                        deadline: spec.deadline,
+                        stream: i % streams,
+                        active_steps: 0,
+                    });
+                }
+            }
+            Some(ckpts) => {
+                if ckpts.len() != specs.len() {
+                    bail!(
+                        "resume snapshot has {} jobs, specs have {}",
+                        ckpts.len(),
+                        specs.len()
+                    );
+                }
+                for (i, (spec, ckpt)) in specs.iter().zip(ckpts).enumerate() {
+                    if ckpt.name != spec.name {
+                        bail!(
+                            "resume snapshot job {i} is {:?}, spec says {:?}",
+                            ckpt.name,
+                            spec.name
+                        );
+                    }
+                    ckpt.run
+                        .validate()
+                        .with_context(|| format!("resuming job {}", spec.name))?;
+                    if crate::checkpoint::RunKind::from_engine(spec.engine) != Some(ckpt.run.kind) {
+                        bail!(
+                            "resuming job {}: checkpoint is a {} run, spec wants engine {}",
+                            spec.name,
+                            ckpt.run.kind,
+                            spec.engine
+                        );
+                    }
+                    // The swarm's fit/pbest arrays were computed under the
+                    // recorded fitness — continuing under a different one
+                    // would be silently wrong, never do it.
+                    if ckpt.fitness != spec.fitness.name() {
+                        bail!(
+                            "resuming job {}: checkpoint was taken under fitness {:?}, spec uses {:?}",
+                            spec.name,
+                            ckpt.fitness,
+                            spec.fitness.name()
+                        );
+                    }
+                    let stop = ckpt.stop.map(StopReason::from_code).transpose()?;
+                    if stop.is_some() {
+                        finished += 1;
+                    }
+                    live.push(LiveJob {
+                        run: None,
+                        parked: Some(ckpt.run.clone()),
+                        steps: ckpt.run.iter,
+                        stalled: ckpt.stalled,
+                        stop,
+                        deadline: spec.deadline,
+                        stream: i % streams,
+                        active_steps: 0,
+                    });
+                }
+            }
         }
 
-        let mut finished = 0usize;
+        let mut rounds = 0u64;
         while finished < live.len() {
+            if max_rounds.is_some_and(|cap| rounds >= cap) {
+                return Ok(BatchRun::Suspended(snapshot(specs, &live)));
+            }
+            rounds += 1;
             let picked = match self.policy {
                 SchedPolicy::RoundRobin => pick_round_robin(&live, streams),
                 SchedPolicy::EarliestDeadlineFirst => pick_edf(&live, streams),
             };
             debug_assert!(!picked.is_empty(), "unfinished job exists");
-            let stepped = self.step_round(&mut live, specs, &picked);
+            let stepped = self.step_round(&mut live, specs, &picked)?;
             for (idx, report) in stepped {
                 let job = &mut live[idx];
                 let spec = &specs[idx];
                 let executed = report.iter - job.steps;
                 job.steps = report.iter;
+                job.active_steps += executed;
                 if report.improved {
                     job.stalled = 0;
                 } else {
@@ -440,42 +604,85 @@ impl JobScheduler {
                     finished += 1;
                 }
             }
+            // Preemption: once a picked job has spent its quantum and the
+            // live set still outnumbers the streams, suspend it — its
+            // buffers collapse to a checkpoint and its stream frees up for
+            // a neighbour next round.
+            if let Some(quantum) = self.preempt_quantum {
+                let unfinished = live.iter().filter(|j| j.stop.is_none()).count();
+                if unfinished > streams {
+                    for &(idx, _) in &picked {
+                        let job = &mut live[idx];
+                        if job.stop.is_none() && job.active_steps >= quantum {
+                            if let Some(run) = job.run.take() {
+                                job.parked = Some(run.checkpoint());
+                            }
+                        }
+                    }
+                }
+            }
         }
 
-        Ok(live
-            .into_iter()
-            .zip(specs)
-            .map(|(job, spec)| JobOutcome {
+        let mut outcomes = Vec::with_capacity(live.len());
+        for (i, (job, spec)) in live.into_iter().zip(specs).enumerate() {
+            let run = match job.run {
+                Some(run) => run,
+                None => {
+                    // Job finished in a *previous* session (or was never
+                    // reactivated): restore once, just to finish.
+                    let ckpt = job.parked.expect("inactive job holds its checkpoint");
+                    let fitness: &dyn Fitness = &*spec.fitness;
+                    engine::restore_with(&ckpt, self.settings.clone().on_stream(i), fitness)
+                        .with_context(|| format!("finishing job {}", spec.name))?
+                }
+            };
+            outcomes.push(JobOutcome {
                 name: spec.name.clone(),
                 engine: spec.engine,
                 stop: job.stop.expect("every job terminated"),
                 steps: job.steps,
-                output: job.run.finish(),
-            })
-            .collect())
+                output: run.finish(),
+            });
+        }
+        Ok(BatchRun::Complete(outcomes))
     }
 
     /// Step every picked job once (a batch of `batch_steps` iterations),
     /// in parallel when the round holds several jobs — each job's
-    /// launches go to its own pool stream, so the grids genuinely
-    /// overlap. Returns `(index, report)` pairs sorted by job index.
+    /// launches go to its assigned pool stream, so the grids genuinely
+    /// overlap. Suspended picks are restored first, onto the stream the
+    /// round assigned them (migration when it differs from their last
+    /// pinning). Returns `(index, report)` pairs sorted by job index.
     fn step_round(
         &self,
         live: &mut [LiveJob<'_>],
         specs: &[JobSpec],
-        picked: &[usize],
-    ) -> Vec<(usize, StepReport)> {
-        if let [idx] = *picked {
+        picked: &[(usize, usize)],
+    ) -> Result<Vec<(usize, StepReport)>> {
+        for &(idx, stream) in picked {
+            if live[idx].run.is_none() {
+                let ckpt = live[idx].parked.take().expect("parked job has a checkpoint");
+                let fitness: &dyn Fitness = &*specs[idx].fitness;
+                let run =
+                    engine::restore_with(&ckpt, self.settings.clone().on_stream(stream), fitness)
+                        .with_context(|| format!("restoring job {}", specs[idx].name))?;
+                live[idx].run = Some(run);
+                live[idx].stream = stream;
+                live[idx].active_steps = 0;
+            }
+        }
+        if let [(idx, _)] = *picked {
             // Serialized fast path (always taken on a single-stream
             // pool): no stepping threads, identical to the pre-stream
             // scheduler loop.
             let k = effective_batch(self.batch_steps, &specs[idx].termination, live[idx].steps);
-            return vec![(idx, live[idx].run.step_many(k))];
+            let run = live[idx].run.as_mut().expect("picked job is active");
+            return Ok(vec![(idx, run.step_many(k))]);
         }
         let tasks: Vec<(usize, u64, &mut LiveJob<'_>)> = live
             .iter_mut()
             .enumerate()
-            .filter(|(i, _)| picked.contains(i))
+            .filter(|(i, _)| picked.iter().any(|&(p, _)| p == *i))
             .map(|(i, job)| {
                 let k = effective_batch(self.batch_steps, &specs[i].termination, job.steps);
                 (i, k, job)
@@ -485,19 +692,47 @@ impl JobScheduler {
             let mut it = tasks.into_iter();
             let (i0, k0, job0) = it.next().expect("non-empty round");
             let handles: Vec<_> = it
-                .map(|(i, k, job)| scope.spawn(move || (i, job.run.step_many(k))))
+                .map(|(i, k, job)| {
+                    scope.spawn(move || {
+                        let run = job.run.as_mut().expect("picked job is active");
+                        (i, run.step_many(k))
+                    })
+                })
                 .collect();
             // The scheduling thread steps the first job itself: a round of
             // S jobs costs S − 1 spawns.
-            let mut out = vec![(i0, job0.run.step_many(k0))];
+            let run0 = job0.run.as_mut().expect("picked job is active");
+            let mut out = vec![(i0, run0.step_many(k0))];
             for h in handles {
                 out.push(h.join().expect("stepping thread panicked"));
             }
             out
         });
         stepped.sort_unstable_by_key(|&(i, _)| i);
-        stepped
+        Ok(stepped)
     }
+}
+
+/// One [`JobCheckpoint`] per job, in spec order — active jobs checkpoint
+/// their live runs, suspended jobs reuse their parked state.
+fn snapshot(specs: &[JobSpec], live: &[LiveJob<'_>]) -> Vec<JobCheckpoint> {
+    live.iter()
+        .zip(specs)
+        .map(|(job, spec)| JobCheckpoint {
+            name: spec.name.clone(),
+            fitness: spec.fitness.name().to_string(),
+            stalled: job.stalled,
+            stop: job.stop.map(StopReason::code),
+            target_fit: spec.termination.target_fit,
+            stall_window: spec.termination.stall_window,
+            max_steps: spec.termination.max_iter,
+            deadline: spec.deadline,
+            run: match &job.run {
+                Some(run) => run.checkpoint(),
+                None => job.parked.clone().expect("inactive job holds its checkpoint"),
+            },
+        })
+        .collect()
 }
 
 /// Batch size for one job's next round: the configured batch, clamped so
@@ -510,26 +745,26 @@ fn effective_batch(batch: u64, termination: &TerminationCriteria, steps_done: u6
     }
 }
 
-/// Up to `want` live jobs, least-progressed first (ties → lowest index),
-/// no two sharing a pool stream. This is the fair-share generalization of
-/// one-step-each cycling to concurrent rounds: with a single stream it
-/// degenerates to exactly the classic cyclic order (all live jobs stay
-/// within one step of each other, and the least-stepped lowest index is
-/// the next cyclic pick), while under stream conflicts the lagging job of
-/// a contended stream always outranks its stream-mates, so nobody
-/// starves.
-fn pick_round_robin(live: &[LiveJob<'_>], want: usize) -> Vec<usize> {
+/// Up to `streams` live jobs, least-progressed first (ties → lowest
+/// index), no two sharing a pool stream. This is the fair-share
+/// generalization of one-step-each cycling to concurrent rounds: with a
+/// single stream it degenerates to exactly the classic cyclic order (all
+/// live jobs stay within one step of each other, and the least-stepped
+/// lowest index is the next cyclic pick), while under stream conflicts
+/// the lagging job of a contended stream always outranks its
+/// stream-mates, so nobody starves.
+fn pick_round_robin(live: &[LiveJob<'_>], streams: usize) -> Vec<(usize, usize)> {
     let mut order: Vec<usize> = (0..live.len())
         .filter(|&i| live[i].stop.is_none())
         .collect();
     order.sort_unstable_by_key(|&i| (live[i].steps, i));
-    take_distinct_streams(live, order, want)
+    assign_streams(live, order, streams)
 }
 
-/// Up to `want` live jobs by ascending deadline slack (`deadline -
+/// Up to `streams` live jobs by ascending deadline slack (`deadline -
 /// steps`; jobs without a deadline rank last, ties break on job index so
 /// scheduling is fully deterministic), no two sharing a pool stream.
-fn pick_edf(live: &[LiveJob<'_>], want: usize) -> Vec<usize> {
+fn pick_edf(live: &[LiveJob<'_>], streams: usize) -> Vec<(usize, usize)> {
     let mut order: Vec<usize> = (0..live.len())
         .filter(|&i| live[i].stop.is_none())
         .collect();
@@ -540,19 +775,34 @@ fn pick_edf(live: &[LiveJob<'_>], want: usize) -> Vec<usize> {
             .unwrap_or(u64::MAX);
         (slack, i)
     });
-    take_distinct_streams(live, order, want)
+    assign_streams(live, order, streams)
 }
 
-/// Greedily keep the first `want` entries of `order` whose streams are
-/// pairwise distinct (one grid in flight per stream per round).
-fn take_distinct_streams(live: &[LiveJob<'_>], order: Vec<usize>, want: usize) -> Vec<usize> {
-    let mut picked: Vec<usize> = Vec::with_capacity(want);
+/// Greedily assign the policy-ordered jobs to pairwise-distinct streams
+/// (one grid in flight per stream per round). An active job keeps its
+/// pinning — its buffers already target that stream — and is skipped if
+/// the stream is taken this round; a suspended job has no pinning and
+/// takes the lowest free stream (that restore-time re-pinning is the
+/// migration path). Fully deterministic.
+fn assign_streams(live: &[LiveJob<'_>], order: Vec<usize>, streams: usize) -> Vec<(usize, usize)> {
+    let mut used = vec![false; streams];
+    let mut picked: Vec<(usize, usize)> = Vec::with_capacity(streams);
     for i in order {
-        if picked.iter().any(|&p| live[p].stream == live[i].stream) {
-            continue;
-        }
-        picked.push(i);
-        if picked.len() == want {
+        let stream = if live[i].run.is_some() {
+            let s = live[i].stream;
+            if used[s] {
+                continue;
+            }
+            s
+        } else {
+            match used.iter().position(|&u| !u) {
+                Some(s) => s,
+                None => break,
+            }
+        };
+        used[stream] = true;
+        picked.push((i, stream));
+        if picked.len() == streams {
             break;
         }
     }
@@ -756,6 +1006,113 @@ mod tests {
         for o in &outcomes {
             assert_eq!(o.steps, 12);
         }
+    }
+
+    #[test]
+    fn preemptive_scheduling_matches_cooperative() {
+        // Any quantum, jobs > streams: bit-exact engines must produce the
+        // exact cooperative results despite suspend/restore churn.
+        let mk = || {
+            vec![
+                spec("a", EngineKind::Queue, 64, 15, 1),
+                spec("b", EngineKind::Queue, 64, 15, 2),
+                spec("c", EngineKind::Reduction, 100, 12, 3),
+            ]
+        };
+        let coop = JobScheduler::with_workers(2).run(&mk()).unwrap();
+        for quantum in [1u64, 4, 100] {
+            let preempted = JobScheduler::with_workers(2)
+                .preempt_quantum(quantum)
+                .run(&mk())
+                .unwrap();
+            for (a, b) in coop.iter().zip(&preempted) {
+                assert_eq!(a.output.gbest_fit, b.output.gbest_fit, "q={quantum} {}", a.name);
+                assert_eq!(a.output.gbest_pos, b.output.gbest_pos, "q={quantum} {}", a.name);
+                assert_eq!(a.output.history, b.output.history, "q={quantum} {}", a.name);
+                assert_eq!(a.steps, b.steps, "q={quantum} {}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn session_round_cap_suspends_then_resume_completes_identically() {
+        let mk = || {
+            vec![
+                spec("s1", EngineKind::Queue, 64, 20, 1),
+                spec("s2", EngineKind::Queue, 64, 20, 2),
+            ]
+        };
+        let reference = JobScheduler::with_workers(2).run(&mk()).unwrap();
+        let scheduler = JobScheduler::with_workers(2);
+        let specs = mk();
+        let snap = match scheduler.run_session(&specs, None, Some(5), |_| {}).unwrap() {
+            BatchRun::Suspended(snap) => snap,
+            BatchRun::Complete(_) => panic!("40 job-steps cannot fit in 5 rounds"),
+        };
+        assert_eq!(snap.len(), 2);
+        assert!(snap.iter().all(|j| j.stop.is_none()));
+        let resumed = match scheduler.run_session(&specs, Some(&snap), None, |_| {}).unwrap() {
+            BatchRun::Complete(outcomes) => outcomes,
+            BatchRun::Suspended(_) => panic!("uncapped resume must complete"),
+        };
+        for (a, b) in reference.iter().zip(&resumed) {
+            assert_eq!(a.output.gbest_fit, b.output.gbest_fit, "{}", a.name);
+            assert_eq!(a.output.history, b.output.history, "{}", a.name);
+            assert_eq!(a.steps, b.steps, "{}", a.name);
+            assert_eq!(a.stop, b.stop, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn session_resume_rejects_mismatched_snapshots() {
+        let specs = vec![spec("x", EngineKind::Queue, 32, 6, 1)];
+        let scheduler = JobScheduler::with_workers(1);
+        let snap = match scheduler.run_session(&specs, None, Some(1), |_| {}).unwrap() {
+            BatchRun::Suspended(snap) => snap,
+            BatchRun::Complete(_) => panic!("must suspend"),
+        };
+        // Length mismatch.
+        let err = scheduler
+            .run_session(&specs, Some(&[]), None, |_| {})
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("0 jobs"), "{err}");
+        // Name mismatch.
+        let renamed = vec![spec("y", EngineKind::Queue, 32, 6, 1)];
+        let err = scheduler
+            .run_session(&renamed, Some(&snap), None, |_| {})
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("\"x\""), "{err}");
+        // Engine-kind mismatch.
+        let rekind = vec![spec("x", EngineKind::Reduction, 32, 6, 1)];
+        let err = scheduler
+            .run_session(&rekind, Some(&snap), None, |_| {})
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("queue"), "{err}");
+        // Fitness mismatch: the swarm state is meaningless under another
+        // function — must be a loud error, not a silently-wrong resume.
+        let mut refit = spec("x", EngineKind::Queue, 32, 6, 1);
+        refit.fitness = Arc::new(crate::fitness::Sphere);
+        let err = scheduler
+            .run_session(&[refit], Some(&snap), None, |_| {})
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cubic") && err.contains("sphere"), "{err}");
+    }
+
+    #[test]
+    fn stop_reason_codes_roundtrip() {
+        for reason in [
+            StopReason::Exhausted,
+            StopReason::TargetReached,
+            StopReason::MaxIter,
+            StopReason::Stalled,
+        ] {
+            assert_eq!(StopReason::from_code(reason.code()).unwrap(), reason);
+        }
+        assert!(StopReason::from_code(9).is_err());
     }
 
     #[test]

@@ -1,0 +1,555 @@
+//! Resume-equivalence tier: suspending a run to a [`RunCheckpoint`] and
+//! restoring it — through the codec, onto a different pool/stream, or
+//! inside a preemptive scheduler — must be invisible to the numerics of
+//! the bit-exact engines.
+//!
+//! Mirrors the structure of `scheduler_determinism.rs`: a reference
+//! trajectory is recorded once, then every suspension point / scheduling
+//! configuration is replayed against it. The invariant under test is the
+//! tentpole's: **bit-identical across any suspend/restore/migrate
+//! schedule** — interrupting a job at any step k, restoring it (same or
+//! different stream), and finishing yields a `RunOutput` identical to the
+//! never-interrupted run, counters included.
+
+use cupso::checkpoint::{JobCheckpoint, RunCheckpoint, RunKind};
+use cupso::config::EngineKind;
+use cupso::engine::{self, Engine, ParallelSettings, Run, StepReport};
+use cupso::fitness::{Cubic, Objective};
+use cupso::pso::{serial_sync, Counters, PsoParams, RunOutput};
+use cupso::scheduler::{BatchRun, JobScheduler, JobSpec, SchedPolicy, StopReason};
+use std::path::Path;
+use std::sync::Arc;
+
+/// The engines held to bit-exact resume equivalence.
+const BIT_EXACT: [EngineKind; 4] = [
+    EngineKind::SerialCpu,
+    EngineKind::Reduction,
+    EngineKind::LoopUnrolling,
+    EngineKind::Queue,
+];
+
+fn assert_outputs_equal(a: &RunOutput, b: &RunOutput, what: &str) {
+    assert_eq!(a.gbest_fit, b.gbest_fit, "{what}: fit");
+    assert_eq!(a.gbest_pos, b.gbest_pos, "{what}: pos");
+    assert_eq!(a.history, b.history, "{what}: history");
+    assert_eq!(a.iters, b.iters, "{what}: iters");
+    assert_counters_equal(&a.counters, &b.counters, what);
+}
+
+fn assert_counters_equal(a: &Counters, b: &Counters, what: &str) {
+    assert_eq!(
+        a.particle_updates, b.particle_updates,
+        "{what}: particle_updates"
+    );
+    assert_eq!(a.queue_pushes, b.queue_pushes, "{what}: queue_pushes");
+    assert_eq!(a.gbest_updates, b.gbest_updates, "{what}: gbest_updates");
+    assert_eq!(
+        a.pbest_improvements, b.pbest_improvements,
+        "{what}: pbest_improvements"
+    );
+}
+
+/// Drive a fresh run of `kind`, recording every step report and the final
+/// output — the uninterrupted reference.
+fn reference_trajectory(
+    kind: EngineKind,
+    params: &PsoParams,
+    seed: u64,
+) -> (Vec<StepReport>, RunOutput) {
+    let mut e = engine::build(kind, 4).unwrap();
+    let mut run = e.prepare(params, &Cubic, Objective::Maximize, seed);
+    let mut reports = Vec::new();
+    loop {
+        let rep = run.step();
+        let done = rep.done;
+        reports.push(rep);
+        if done {
+            break;
+        }
+    }
+    (reports, run.finish())
+}
+
+/// The tentpole assertion: for every bit-exact engine and every
+/// suspension step k (0 = before the first step, max_iter = after the
+/// last), checkpoint → codec round-trip → restore → continue is
+/// bit-identical to the uninterrupted run — reports, final output and
+/// counters.
+#[test]
+fn checkpoint_at_every_step_resumes_bit_exactly() {
+    for params in [PsoParams::paper_1d(300, 12), PsoParams::paper_120d(40, 8)] {
+        for kind in BIT_EXACT {
+            let what = format!("{kind:?} n={} d={}", params.n, params.dim);
+            let (reports, reference) = reference_trajectory(kind, &params, 42);
+            for k in 0..=params.max_iter {
+                // Fresh run, suspended after k steps.
+                let mut e = engine::build(kind, 4).unwrap();
+                let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 42);
+                for _ in 0..k {
+                    run.step();
+                }
+                let ckpt = run.checkpoint();
+                assert_eq!(ckpt.iter, k, "{what}: checkpoint iter");
+                drop(run);
+                // Through the wire format (proves the codec carries the
+                // full state, not just the in-memory struct).
+                let ckpt = RunCheckpoint::decode(&ckpt.encode())
+                    .unwrap_or_else(|e| panic!("{what} k={k}: decode failed: {e}"));
+                // Restore on a *different* pool (2 workers vs 4 — the
+                // engines' numerics must not depend on the substrate).
+                let mut resumed =
+                    engine::restore_with(&ckpt, ParallelSettings::with_workers(2), &Cubic)
+                        .unwrap_or_else(|e| panic!("{what} k={k}: restore failed: {e}"));
+                assert_eq!(resumed.iters_done(), k, "{what} k={k}");
+                for expected in &reports[k as usize..] {
+                    let rep = resumed.step();
+                    assert_eq!(&rep, expected, "{what} k={k}: continued step diverged");
+                }
+                let out = resumed.finish();
+                assert_outputs_equal(&out, &reference, &format!("{what} k={k}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sync_serial_oracle_checkpoints_and_resumes() {
+    // The second serial reference (the PPSO oracle) round-trips too, via
+    // the kind-dispatching restore path.
+    let params = PsoParams::paper_120d(24, 15);
+    let reference = serial_sync::run(&params, &Cubic, Objective::Maximize, 9);
+    let mut run = Box::new(serial_sync::SyncSerialRun::new(
+        &params,
+        &Cubic,
+        Objective::Maximize,
+        9,
+    ));
+    for _ in 0..7 {
+        run.step();
+    }
+    let ckpt = RunCheckpoint::decode(&run.checkpoint().encode()).unwrap();
+    assert_eq!(ckpt.kind, RunKind::SerialSync);
+    let mut resumed =
+        engine::restore_with(&ckpt, ParallelSettings::with_workers(1), &Cubic).unwrap();
+    while !resumed.step().done {}
+    let out = resumed.finish();
+    assert_outputs_equal(&out, &reference, "sync-serial oracle resume");
+}
+
+#[test]
+fn queue_lock_and_async_restore_to_valid_states() {
+    // The relaxed engines: checkpoints are taken at grid-quiescent
+    // boundaries, so a restored run must be a *valid* continuation
+    // (monotone, bound-respecting, full budget) even though the exact
+    // trajectory is not replayable.
+    for kind in [EngineKind::QueueLock, EngineKind::AsyncPersistent] {
+        let params = PsoParams::paper_1d(512, 30);
+        let mut e = engine::build(kind, 4).unwrap();
+        let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 3);
+        for _ in 0..11 {
+            run.step();
+        }
+        let fit_at_suspend = run.gbest_fit();
+        let ckpt = RunCheckpoint::decode(&run.checkpoint().encode()).unwrap();
+        assert_eq!(ckpt.iter, 11);
+        let mut resumed =
+            engine::restore_with(&ckpt, ParallelSettings::with_workers(4), &Cubic).unwrap();
+        assert_eq!(resumed.gbest_fit(), fit_at_suspend, "{kind:?}");
+        while !resumed.step().done {}
+        let out = resumed.finish();
+        assert_eq!(out.iters, 30, "{kind:?}");
+        for w in out.history.windows(2) {
+            assert!(w[1].1 >= w[0].1, "{kind:?}: gbest worsened across resume");
+        }
+        assert!(
+            out.gbest_fit >= fit_at_suspend,
+            "{kind:?}: resume lost progress"
+        );
+        // With a single block the async step-run has no room to race:
+        // resume is bit-exact against the synchronous oracle there.
+        if kind == EngineKind::AsyncPersistent {
+            let small = PsoParams::paper_1d(200, 20);
+            let oracle = serial_sync::run(&small, &Cubic, Objective::Maximize, 7);
+            let mut e = engine::build(kind, 4).unwrap();
+            let mut run = e.prepare(&small, &Cubic, Objective::Maximize, 7);
+            for _ in 0..9 {
+                run.step();
+            }
+            let ckpt = run.checkpoint();
+            let mut resumed =
+                engine::restore_with(&ckpt, ParallelSettings::with_workers(4), &Cubic).unwrap();
+            while !resumed.step().done {}
+            let out = resumed.finish();
+            assert_eq!(out.gbest_fit, oracle.gbest_fit, "single-block async resume");
+            assert_eq!(out.gbest_pos, oracle.gbest_pos, "single-block async resume");
+        }
+    }
+}
+
+#[test]
+fn restore_rejects_kind_mismatch_and_inconsistency() {
+    let params = PsoParams::paper_1d(64, 6);
+    let mut e = engine::build(EngineKind::Queue, 2).unwrap();
+    let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 1);
+    run.step();
+    let ckpt = run.checkpoint();
+
+    // A Queue checkpoint does not restore on Reduction — and the
+    // unrolled variant is likewise its own kind.
+    let mut reduction = engine::build(EngineKind::Reduction, 2).unwrap();
+    let err = reduction.restore(&ckpt, &Cubic).unwrap_err().to_string();
+    assert!(err.contains("queue"), "{err}");
+    assert!(err.contains("reduction"), "{err}");
+    let mut unrolled = engine::build(EngineKind::LoopUnrolling, 2).unwrap();
+    assert!(unrolled.restore(&ckpt, &Cubic).is_err());
+
+    // Structural inconsistency is a loud error, not a corrupt run.
+    let mut torn = ckpt.clone();
+    torn.gbest_pos.push(0.0);
+    let mut queue = engine::build(EngineKind::Queue, 2).unwrap();
+    assert!(queue.restore(&torn, &Cubic).is_err());
+    let mut overrun = ckpt.clone();
+    overrun.iter = params.max_iter + 1;
+    assert!(queue.restore(&overrun, &Cubic).is_err());
+}
+
+/// The scheduler half of the tentpole: preemption (suspend after a
+/// quantum) and migration (restore on whichever stream is free) under
+/// both policies, several stream counts and batch sizes — per-job
+/// results bit-identical to solo one-shot runs.
+#[test]
+fn preemptive_scheduling_with_migration_matches_solo() {
+    let mk_specs = || -> Vec<JobSpec> {
+        let mut specs = vec![
+            JobSpec::new(
+                "cpu",
+                EngineKind::SerialCpu,
+                PsoParams::paper_1d(150, 18),
+                Arc::new(Cubic),
+                Objective::Maximize,
+                21,
+            ),
+            JobSpec::new(
+                "r1",
+                EngineKind::Reduction,
+                PsoParams::paper_1d(300, 25),
+                Arc::new(Cubic),
+                Objective::Maximize,
+                1,
+            ),
+            JobSpec::new(
+                "u1",
+                EngineKind::LoopUnrolling,
+                PsoParams::paper_120d(40, 12),
+                Arc::new(Cubic),
+                Objective::Maximize,
+                3,
+            ),
+            JobSpec::new(
+                "q1",
+                EngineKind::Queue,
+                PsoParams::paper_1d(513, 20),
+                Arc::new(Cubic),
+                Objective::Maximize,
+                5,
+            ),
+            JobSpec::new(
+                "q2",
+                EngineKind::Queue,
+                PsoParams::paper_120d(100, 10),
+                Arc::new(Cubic),
+                Objective::Maximize,
+                6,
+            ),
+        ];
+        specs[1].deadline = Some(30);
+        specs[3].deadline = Some(15);
+        specs
+    };
+    let solo: Vec<RunOutput> = mk_specs()
+        .iter()
+        .map(|s| {
+            engine::build(s.engine, 4)
+                .unwrap()
+                .run(&s.params, &Cubic, Objective::Maximize, s.seed)
+        })
+        .collect();
+    for (streams, batch, quantum, policy) in [
+        (1, 1, 1, SchedPolicy::RoundRobin), // suspend/restore every step
+        (2, 1, 3, SchedPolicy::RoundRobin),
+        (2, 4, 2, SchedPolicy::RoundRobin), // quantum < batch: park every round
+        (3, 2, 5, SchedPolicy::EarliestDeadlineFirst),
+        (2, 1, 1, SchedPolicy::EarliestDeadlineFirst),
+    ] {
+        let scheduler = JobScheduler::with_streams(4, streams)
+            .policy(policy)
+            .batch_steps(batch)
+            .preempt_quantum(quantum);
+        let outcomes = scheduler.run(&mk_specs()).unwrap();
+        for (outcome, reference) in outcomes.iter().zip(&solo) {
+            assert_eq!(outcome.stop, StopReason::Exhausted, "{}", outcome.name);
+            assert_outputs_equal(
+                &outcome.output,
+                reference,
+                &format!(
+                    "S={streams} batch={batch} q={quantum} {policy} job {}",
+                    outcome.name
+                ),
+            );
+        }
+    }
+}
+
+/// Suspend a whole batch mid-flight, serialize every job checkpoint
+/// through the codec, and resume it on a scheduler with a *different
+/// stream layout* (cross-session migration): identical results.
+#[test]
+fn batch_suspend_codec_roundtrip_resume_on_different_streams() {
+    let mk_specs = || -> Vec<JobSpec> {
+        (0..5)
+            .map(|j| {
+                JobSpec::new(
+                    &format!("t{j}"),
+                    [
+                        EngineKind::Queue,
+                        EngineKind::Reduction,
+                        EngineKind::LoopUnrolling,
+                    ][j % 3],
+                    PsoParams::paper_1d(100 + j * 50, 14 + j as u64),
+                    Arc::new(Cubic),
+                    Objective::Maximize,
+                    j as u64,
+                )
+            })
+            .collect()
+    };
+    let reference = JobScheduler::with_streams(4, 2).run(&mk_specs()).unwrap();
+    for policy in [SchedPolicy::RoundRobin, SchedPolicy::EarliestDeadlineFirst] {
+        // Phase 1: 2 streams, cap after 6 rounds.
+        let specs = mk_specs();
+        let first = JobScheduler::with_streams(4, 2).policy(policy);
+        let snap = match first.run_session(&specs, None, Some(6), |_| {}).unwrap() {
+            BatchRun::Suspended(snap) => snap,
+            BatchRun::Complete(_) => panic!("{policy}: batch cannot finish in 6 rounds"),
+        };
+        // Serialize every job through the wire format.
+        let snap: Vec<JobCheckpoint> = snap
+            .iter()
+            .map(|j| JobCheckpoint::decode(&j.encode()).unwrap())
+            .collect();
+        // Phase 2: resumed on 3 streams with preemption enabled — every
+        // job migrates relative to its old pinning at some point.
+        let second = JobScheduler::with_streams(4, 3)
+            .policy(policy)
+            .preempt_quantum(2);
+        let outcomes = match second.run_session(&specs, Some(&snap), None, |_| {}).unwrap() {
+            BatchRun::Complete(outcomes) => outcomes,
+            BatchRun::Suspended(_) => panic!("uncapped session must complete"),
+        };
+        for (outcome, reference) in outcomes.iter().zip(&reference) {
+            assert_eq!(outcome.steps, reference.steps, "{policy} {}", outcome.name);
+            assert_eq!(outcome.stop, reference.stop, "{policy} {}", outcome.name);
+            assert_outputs_equal(
+                &outcome.output,
+                &reference.output,
+                &format!("{policy} resumed job {}", outcome.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn suspended_snapshot_carries_finished_jobs_through_resume() {
+    // A job that terminates before the round cap must survive the
+    // suspend/resume cycle with its stop reason and exact output.
+    let mk_specs = || {
+        vec![
+            JobSpec::new(
+                "short",
+                EngineKind::Queue,
+                PsoParams::paper_1d(64, 3),
+                Arc::new(Cubic),
+                Objective::Maximize,
+                1,
+            ),
+            JobSpec::new(
+                "long",
+                EngineKind::Queue,
+                PsoParams::paper_1d(64, 30),
+                Arc::new(Cubic),
+                Objective::Maximize,
+                2,
+            ),
+        ]
+    };
+    let reference = JobScheduler::with_workers(2).run(&mk_specs()).unwrap();
+    let scheduler = JobScheduler::with_workers(2);
+    let specs = mk_specs();
+    // 10 rounds: "short" (3 steps) finished, "long" (30) still live.
+    let snap = match scheduler.run_session(&specs, None, Some(10), |_| {}).unwrap() {
+        BatchRun::Suspended(snap) => snap,
+        BatchRun::Complete(_) => panic!("long job cannot finish in 10 rounds"),
+    };
+    assert_eq!(snap[0].stop, Some(StopReason::Exhausted.code()));
+    assert_eq!(snap[0].run.iter, 3);
+    assert_eq!(snap[1].stop, None);
+    let outcomes = match scheduler.run_session(&specs, Some(&snap), None, |_| {}).unwrap() {
+        BatchRun::Complete(outcomes) => outcomes,
+        BatchRun::Suspended(_) => panic!("uncapped session must complete"),
+    };
+    for (outcome, reference) in outcomes.iter().zip(&reference) {
+        assert_eq!(outcome.stop, reference.stop, "{}", outcome.name);
+        assert_eq!(outcome.steps, reference.steps, "{}", outcome.name);
+        assert_outputs_equal(&outcome.output, &reference.output, &outcome.name);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden fixture: pins the version-1 wire format. The files under
+// rust/tests/fixtures/ are committed artifacts; today's decoder must keep
+// reading them forever. Regenerate (only on a deliberate, compatible
+// format change) with:
+//   cargo test --test checkpoint_resume regenerate_golden_fixtures -- --ignored
+// ---------------------------------------------------------------------
+
+fn fixture_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures")
+}
+
+/// The exact checkpoint the golden fixture encodes — hand-built so the
+/// expected values below are self-evident.
+fn golden_run_checkpoint() -> RunCheckpoint {
+    RunCheckpoint {
+        version: cupso::checkpoint::VERSION,
+        kind: RunKind::Queue,
+        objective: Objective::Maximize,
+        seed: 7,
+        params: PsoParams {
+            w: 1.0,
+            c1: 2.0,
+            c2: 2.0,
+            min_pos: -100.0,
+            max_pos: 100.0,
+            max_v: 100.0,
+            max_iter: 6,
+            n: 4,
+            dim: 2,
+        },
+        iter: 3,
+        gbest_fit: 123.456,
+        gbest_pos: vec![1.5, -2.5],
+        history: vec![(0, 50.0), (2, 123.456)],
+        counters: Counters {
+            pbest_improvements: 5,
+            queue_pushes: 4,
+            gbest_updates: 2,
+            particle_updates: 12,
+        },
+        swarm: cupso::pso::SwarmState {
+            n: 4,
+            dim: 2,
+            pos: vec![1.5, -2.5, 3.0, 4.0, 5.0, -6.0, 7.0, 8.0],
+            vel: vec![0.5, -0.5, 0.25, -0.0, 1.0, -1.0, 2.0, -2.0],
+            fit: vec![123.456, -1.0, f64::from_bits(0x7ff8000000000000), 0.0],
+            pbest_pos: vec![1.5, -2.5, 3.0, 4.0, 5.0, -6.0, 7.0, 8.0],
+            pbest_fit: vec![123.456, -1.0, -2.0, 0.0],
+        },
+    }
+}
+
+fn golden_job_checkpoint() -> JobCheckpoint {
+    JobCheckpoint {
+        name: "golden".into(),
+        fitness: "cubic".into(),
+        stalled: 1,
+        stop: None,
+        target_fit: Some(899000.0),
+        stall_window: None,
+        max_steps: Some(100),
+        deadline: Some(50),
+        run: golden_run_checkpoint(),
+    }
+}
+
+#[test]
+fn golden_fixture_v1_still_decodes() {
+    let bytes = std::fs::read(fixture_dir().join("run_v1.ckpt"))
+        .expect("committed fixture rust/tests/fixtures/run_v1.ckpt");
+    let ckpt = RunCheckpoint::decode(&bytes).expect("version-1 fixture must decode forever");
+    let expected = golden_run_checkpoint();
+    assert_eq!(ckpt.kind, RunKind::Queue);
+    assert_eq!(ckpt.objective, Objective::Maximize);
+    assert_eq!(ckpt.seed, 7);
+    assert_eq!(ckpt.iter, 3);
+    assert_eq!(ckpt.params.n, 4);
+    assert_eq!(ckpt.params.dim, 2);
+    assert_eq!(ckpt.params.max_iter, 6);
+    assert_eq!(ckpt.params.max_v, 100.0);
+    assert_eq!(ckpt.gbest_fit, 123.456);
+    assert_eq!(ckpt.gbest_pos, vec![1.5, -2.5]);
+    assert_eq!(ckpt.history, expected.history);
+    assert_eq!(ckpt.counters.queue_pushes, 4);
+    assert_eq!(ckpt.counters.gbest_updates, 2);
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&ckpt.swarm.pos), bits(&expected.swarm.pos));
+    assert_eq!(bits(&ckpt.swarm.vel), bits(&expected.swarm.vel), "-0.0 sign");
+    assert_eq!(bits(&ckpt.swarm.fit), bits(&expected.swarm.fit), "NaN bits");
+    assert_eq!(bits(&ckpt.swarm.pbest_fit), bits(&expected.swarm.pbest_fit));
+
+    // And it is live state, not just bytes: restoring it yields a
+    // deterministic Queue run that completes its remaining 3 iterations.
+    let restore = || {
+        let mut run =
+            engine::restore_with(&ckpt, ParallelSettings::with_workers(2), &Cubic).unwrap();
+        while !run.step().done {}
+        run.finish()
+    };
+    let a = restore();
+    let b = restore();
+    assert_eq!(a.iters, 6);
+    assert_eq!(a.gbest_fit, b.gbest_fit, "restored continuation must be deterministic");
+    assert_eq!(a.gbest_pos, b.gbest_pos);
+    assert_eq!(a.history, b.history);
+    assert!(a.gbest_fit >= 123.456, "gbest is monotone across restore");
+}
+
+#[test]
+fn golden_job_fixture_v1_still_decodes() {
+    let bytes = std::fs::read(fixture_dir().join("job_v1.ckpt"))
+        .expect("committed fixture rust/tests/fixtures/job_v1.ckpt");
+    let job = JobCheckpoint::decode(&bytes).expect("version-1 job fixture must decode forever");
+    assert_eq!(job.name, "golden");
+    assert_eq!(job.fitness, "cubic");
+    assert_eq!(job.stalled, 1);
+    assert_eq!(job.stop, None);
+    assert_eq!(job.target_fit, Some(899000.0));
+    assert_eq!(job.stall_window, None);
+    assert_eq!(job.max_steps, Some(100));
+    assert_eq!(job.deadline, Some(50));
+    assert_eq!(job.run.kind, RunKind::Queue);
+    assert_eq!(job.run.iter, 3);
+}
+
+#[test]
+fn fixture_bytes_match_current_encoder() {
+    // The committed fixtures are byte-for-byte what today's encoder
+    // produces for the same state — encoder and decoder pin the same
+    // format. (If this fails but the decode tests pass, the encoder
+    // changed silently: bump the version.)
+    let run_bytes = std::fs::read(fixture_dir().join("run_v1.ckpt")).unwrap();
+    assert_eq!(run_bytes, golden_run_checkpoint().encode(), "run fixture drifted");
+    let job_bytes = std::fs::read(fixture_dir().join("job_v1.ckpt")).unwrap();
+    assert_eq!(job_bytes, golden_job_checkpoint().encode(), "job fixture drifted");
+}
+
+/// Writes the golden fixtures. Ignored: run only on a deliberate format
+/// revision (with a version bump and a new `_v<N>` file — never
+/// overwrite `_v1`, old versions must stay covered).
+#[test]
+#[ignore]
+fn regenerate_golden_fixtures() {
+    let dir = fixture_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("run_v1.ckpt"), golden_run_checkpoint().encode()).unwrap();
+    std::fs::write(dir.join("job_v1.ckpt"), golden_job_checkpoint().encode()).unwrap();
+}

@@ -215,3 +215,165 @@ fn unknown_command_fails_with_usage() {
     assert!(!ok);
     assert!(text.contains("unknown command"), "{text}");
 }
+
+/// A deterministic-engines-only batch (no queuelock/async), so the
+/// per-job results table is bit-reproducible across interruption.
+const DETERMINISTIC_BATCH: &str = r#"
+[scheduler]
+workers = 2
+policy = "round-robin"
+streams = 2
+batch_steps = 3
+preempt_quantum = 4
+
+[jobs.alpha]
+fitness = "cubic"
+engine = "queue"
+particles = 128
+dim = 1
+iters = 40
+seed = 11
+
+[jobs.beta]
+fitness = "sphere"
+engine = "reduction"
+particles = 96
+dim = 3
+iters = 50
+seed = 12
+
+[jobs.gamma]
+fitness = "cubic"
+engine = "unroll"
+particles = 130
+dim = 1
+iters = 30
+seed = 13
+max_steps = 25
+
+[jobs.delta]
+fitness = "rastrigin"
+engine = "cpu"
+particles = 64
+dim = 2
+iters = 35
+seed = 14
+"#;
+
+/// Pull the per-job rows out of the "Batch results" markdown table —
+/// every stable field (job, engine, workload, steps, stop reason, gbest)
+/// lives on these lines.
+fn batch_result_rows(text: &str) -> Vec<String> {
+    let rows: Vec<String> = text
+        .lines()
+        .filter(|l| {
+            ["alpha", "beta", "gamma", "delta"]
+                .iter()
+                .any(|job| l.starts_with(&format!("| {job}")))
+        })
+        .map(|l| l.to_string())
+        .collect();
+    assert_eq!(rows.len(), 4, "expected 4 result rows in:\n{text}");
+    rows
+}
+
+#[test]
+fn batch_checkpoint_suspend_then_resume_reproduces_results() {
+    let dir = std::env::temp_dir().join("cupso-cli-ckpt-e2e");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("batch.toml");
+    std::fs::write(&cfg, DETERMINISTIC_BATCH).unwrap();
+    let ckpt_dir = dir.join("snap");
+
+    // Reference: the never-interrupted batch.
+    let (ok, reference) = cupso(&["batch", "--config", cfg.to_str().unwrap()]);
+    assert!(ok, "{reference}");
+    let expected_rows = batch_result_rows(&reference);
+
+    // Interrupted: suspend after 4 scheduling rounds…
+    let (ok, text) = cupso(&[
+        "batch",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--checkpoint-dir",
+        ckpt_dir.to_str().unwrap(),
+        "--suspend-after",
+        "4",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("suspended 4 jobs"), "{text}");
+    assert!(
+        !text.contains("Batch results"),
+        "suspended batch must not print results: {text}"
+    );
+    assert!(ckpt_dir.join("manifest.toml").exists());
+    for i in 0..4 {
+        assert!(ckpt_dir.join(format!("job_{i}.ckpt")).exists(), "job_{i}");
+    }
+
+    // …then resume reproduces the reference per-job results exactly.
+    let (ok, resumed) = cupso(&["resume", ckpt_dir.to_str().unwrap()]);
+    assert!(ok, "{resumed}");
+    assert!(resumed.contains("cupso resume: 4 jobs"), "{resumed}");
+    let resumed_rows = batch_result_rows(&resumed);
+    assert_eq!(
+        resumed_rows, expected_rows,
+        "resumed batch diverged from the uninterrupted run"
+    );
+    // The capped job still stops at its exact cap across the boundary.
+    assert!(resumed.contains("max-iter"), "{resumed}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batch_periodic_checkpointing_completes_with_identical_results() {
+    // --checkpoint-dir without --suspend-after: the batch runs to
+    // completion through suspend/restore cycles every N rounds, leaving a
+    // resumable snapshot behind — results identical to the plain run.
+    let dir = std::env::temp_dir().join("cupso-cli-ckpt-periodic");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("batch.toml");
+    std::fs::write(&cfg, DETERMINISTIC_BATCH).unwrap();
+    let ckpt_dir = dir.join("snap");
+
+    let (ok, reference) = cupso(&["batch", "--config", cfg.to_str().unwrap()]);
+    assert!(ok, "{reference}");
+    let (ok, text) = cupso(&[
+        "batch",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--checkpoint-dir",
+        ckpt_dir.to_str().unwrap(),
+        "--checkpoint-every",
+        "3",
+    ]);
+    assert!(ok, "{text}");
+    assert_eq!(batch_result_rows(&text), batch_result_rows(&reference));
+    assert!(ckpt_dir.join("manifest.toml").exists(), "periodic snapshot");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_rejects_missing_or_bad_directories() {
+    let (ok, text) = cupso(&["resume"]);
+    assert!(!ok);
+    assert!(text.contains("checkpoint-dir"), "{text}");
+    let (ok, text) = cupso(&["resume", "/nonexistent/cupso-snap"]);
+    assert!(!ok);
+    assert!(text.contains("manifest"), "{text}");
+}
+
+#[test]
+fn batch_suspend_requires_checkpoint_dir() {
+    let (ok, text) = cupso(&[
+        "batch",
+        "--config",
+        "config/batch_demo.toml",
+        "--suspend-after",
+        "2",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--checkpoint-dir"), "{text}");
+}

@@ -6,14 +6,19 @@
 //! * **gbest-dominates invariant** — the final gbest is ≥ every particle's
 //!   pbest (maximize sense);
 //! * **substrate stress** — GridPool under irregular grids and nested
-//!   state, SharedQueue under concurrent churn.
+//!   state, SharedQueue under concurrent churn;
+//! * **checkpoint codec** — encode→decode round-trips every f64 bit
+//!   pattern exactly (NaN payloads, ±0, ±∞), including empty/degenerate
+//!   swarms, and corrupted/truncated/version-bumped inputs fail loudly,
+//!   never panic.
 
+use cupso::checkpoint::{RunCheckpoint, RunKind};
 use cupso::config::EngineKind;
 use cupso::engine::{Engine, ParallelSettings};
 use cupso::exec::{GridPool, SharedQueue};
 use cupso::fitness::{Cubic, Objective};
-use cupso::pso::{PsoParams, SwarmState};
-use cupso::rng::PhiloxStream;
+use cupso::pso::{Counters, PsoParams, SwarmState};
+use cupso::rng::{PhiloxStream, RngEngine, Xoshiro256pp};
 use cupso::testsupport::{gen_usize, prop_check};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -155,6 +160,171 @@ fn engines_survive_degenerate_workloads() {
             assert_eq!(out.gbest_pos.len(), 1);
         }
     }
+}
+
+/// Arbitrary f64 bit patterns (quiet/signaling NaNs, ±0, ±∞, subnormals
+/// — whatever the RNG produces).
+fn rand_bits_vec(rng: &mut dyn RngEngine, len: usize) -> Vec<f64> {
+    (0..len).map(|_| f64::from_bits(rng.next_u64())).collect()
+}
+
+/// A structurally-consistent checkpoint whose every f64 is an arbitrary
+/// bit pattern. Exercises the codec, not the engines.
+fn random_checkpoint(rng: &mut dyn RngEngine, n: usize, dim: usize) -> RunCheckpoint {
+    let kind = RunKind::from_code((rng.next_u64() % 7) as u8).unwrap();
+    let objective = if rng.next_u64() % 2 == 0 {
+        Objective::Maximize
+    } else {
+        Objective::Minimize
+    };
+    let iter = rng.next_u64() % 50;
+    let rows = n * dim;
+    let hist_len = gen_usize(rng, 0, 5) as u64;
+    RunCheckpoint {
+        version: cupso::checkpoint::VERSION,
+        kind,
+        objective,
+        seed: rng.next_u64(),
+        params: PsoParams {
+            w: f64::from_bits(rng.next_u64()),
+            c1: f64::from_bits(rng.next_u64()),
+            c2: f64::from_bits(rng.next_u64()),
+            min_pos: f64::from_bits(rng.next_u64()),
+            max_pos: f64::from_bits(rng.next_u64()),
+            max_v: f64::from_bits(rng.next_u64()),
+            max_iter: iter + rng.next_u64() % 50,
+            n,
+            dim,
+        },
+        iter,
+        gbest_fit: f64::from_bits(rng.next_u64()),
+        gbest_pos: rand_bits_vec(rng, dim),
+        history: (0..hist_len)
+            .map(|i| (i, f64::from_bits(rng.next_u64())))
+            .collect(),
+        counters: Counters {
+            pbest_improvements: rng.next_u64(),
+            queue_pushes: rng.next_u64(),
+            gbest_updates: rng.next_u64(),
+            particle_updates: rng.next_u64(),
+        },
+        swarm: SwarmState {
+            n,
+            dim,
+            pos: rand_bits_vec(rng, rows),
+            vel: rand_bits_vec(rng, rows),
+            fit: rand_bits_vec(rng, n),
+            pbest_pos: rand_bits_vec(rng, rows),
+            pbest_fit: rand_bits_vec(rng, n),
+        },
+    }
+}
+
+fn bits_equal(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn checkpoint_codec_roundtrips_every_bit_pattern() {
+    prop_check(
+        0xC0DE,
+        60,
+        |rng| {
+            // Degenerate shapes on purpose: empty swarm (n = 0), single
+            // particle, dim 1 — the codec must carry them all.
+            let n = [0usize, 1, 2, 7, 64][gen_usize(rng, 0, 4)];
+            let dim = [1usize, 2, 17][gen_usize(rng, 0, 2)];
+            (n, dim, rng.next_u64())
+        },
+        |_| vec![],
+        |&(n, dim, seed)| {
+            let mut rng = Xoshiro256pp::seeded(seed);
+            let ckpt = random_checkpoint(&mut rng, n, dim);
+            let bytes = ckpt.encode();
+            let back = RunCheckpoint::decode(&bytes)
+                .map_err(|e| format!("decode of own encoding failed: {e}"))?;
+            if back.kind != ckpt.kind
+                || back.objective != ckpt.objective
+                || back.seed != ckpt.seed
+                || back.iter != ckpt.iter
+                || back.params.max_iter != ckpt.params.max_iter
+                || back.params.n != n
+                || back.params.dim != dim
+            {
+                return Err("scalar fields drifted through the codec".into());
+            }
+            if back.gbest_fit.to_bits() != ckpt.gbest_fit.to_bits()
+                || !bits_equal(&back.gbest_pos, &ckpt.gbest_pos)
+                || !bits_equal(&back.swarm.pos, &ckpt.swarm.pos)
+                || !bits_equal(&back.swarm.vel, &ckpt.swarm.vel)
+                || !bits_equal(&back.swarm.fit, &ckpt.swarm.fit)
+                || !bits_equal(&back.swarm.pbest_pos, &ckpt.swarm.pbest_pos)
+                || !bits_equal(&back.swarm.pbest_fit, &ckpt.swarm.pbest_fit)
+            {
+                return Err("f64 bit patterns drifted through the codec".into());
+            }
+            if back.history.len() != ckpt.history.len()
+                || back
+                    .history
+                    .iter()
+                    .zip(&ckpt.history)
+                    .any(|(a, b)| a.0 != b.0 || a.1.to_bits() != b.1.to_bits())
+            {
+                return Err("history drifted through the codec".into());
+            }
+            if back.counters.queue_pushes != ckpt.counters.queue_pushes
+                || back.counters.gbest_updates != ckpt.counters.gbest_updates
+                || back.counters.pbest_improvements != ckpt.counters.pbest_improvements
+                || back.counters.particle_updates != ckpt.counters.particle_updates
+            {
+                return Err("counters drifted through the codec".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn checkpoint_decoder_fails_loudly_never_panics() {
+    prop_check(
+        0xDEAD,
+        40,
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let mut rng = Xoshiro256pp::seeded(seed);
+            let n = gen_usize(&mut rng, 0, 8);
+            let bytes = random_checkpoint(&mut rng, n, 2).encode();
+            // Any single-byte flip breaks the checksum (or the header):
+            // always Err, never panic, never a silently-wrong checkpoint.
+            for _ in 0..16 {
+                let at = gen_usize(&mut rng, 0, bytes.len() - 1);
+                let mut bad = bytes.clone();
+                bad[at] ^= 1 + (rng.next_u64() % 255) as u8;
+                if bad != bytes && RunCheckpoint::decode(&bad).is_ok() {
+                    return Err(format!("flipped byte {at} decoded successfully"));
+                }
+            }
+            // Every truncation fails.
+            for _ in 0..8 {
+                let cut = gen_usize(&mut rng, 0, bytes.len() - 1);
+                if RunCheckpoint::decode(&bytes[..cut]).is_ok() {
+                    return Err(format!("truncation at {cut} decoded successfully"));
+                }
+            }
+            // A future version is refused by today's decoder, loudly.
+            let mut bumped = bytes.clone();
+            bumped[8..12].copy_from_slice(&7u32.to_le_bytes());
+            match RunCheckpoint::decode(&bumped) {
+                Ok(_) => Err("version-7 header decoded".into()),
+                Err(e) if e.to_string().contains("version") => Ok(()),
+                Err(e) => Err(format!("version bump reported as {e} (want a version error)")),
+            }
+        },
+    );
 }
 
 #[test]
