@@ -1,0 +1,168 @@
+//! Per-round scheduler overhead — persistent stream executors vs the
+//! legacy spawn-per-round baseline.
+//!
+//! The scheduler's fixed cost per concurrent round used to be S−1 OS
+//! thread spawns + joins; the persistent executors replace that with a
+//! command-slot publish + wake (see `rust/src/scheduler/executor.rs`).
+//! This bench isolates that fixed cost with deliberately tiny jobs
+//! (64 particles, 1-D — arithmetic is negligible, the round machinery
+//! dominates) swept over `batch_steps ∈ {1, 16}` × `S ∈ {1, 4}`:
+//!
+//! * `per_round_ns` — wall time divided by scheduling rounds;
+//! * `overhead_ns` — `per_round` minus the S=1 fast-path `per_round` at
+//!   the same batch (the fast path steps inline with no stepping threads
+//!   in either mode, so the difference is the round's thread handoff);
+//! * `speedup` — spawn-mode overhead / executor-mode overhead at the
+//!   same (S, batch). The acceptance bar (ISSUE 4) is ≥ 2× at
+//!   `batch=1, S=4`.
+//!
+//! Scale via CUPSO_BENCH_SCALE=ci|paper|smoke; set CUPSO_BENCH_JSON to
+//! also write `BENCH_scheduler.json` (the committed baseline at the repo
+//! root was produced at ci scale).
+
+use cupso::benchkit::json::{BenchJson, JsonObj};
+use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
+use cupso::config::EngineKind;
+use cupso::fitness::{Cubic, Objective};
+use cupso::metrics::Table;
+use cupso::pso::PsoParams;
+use cupso::scheduler::{JobScheduler, JobSpec};
+use std::sync::Arc;
+
+/// One tiny job per stream so every round fills all S streams.
+fn specs(jobs: usize, iters: u64) -> Vec<JobSpec> {
+    (0..jobs)
+        .map(|j| {
+            JobSpec::new(
+                &format!("lat{j}"),
+                EngineKind::Queue,
+                PsoParams::paper_1d(64, iters),
+                Arc::new(Cubic),
+                Objective::Maximize,
+                j as u64 + 1,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let iters = cfg.iters(100_000);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "scheduler_latency: 64-particle 1-D jobs, {iters} iters each ({}), \
+         {} reps trimmed-mean, {cores} cores\n",
+        cfg.scale_note(),
+        cfg.reps
+    );
+
+    let mut table = Table::new(
+        "Scheduler per-round overhead — executors vs spawn-per-round",
+        &["Mode", "S", "batch", "rounds", "time (s)", "ns/round", "overhead ns/round"],
+    );
+    let mut doc = BenchJson::new("scheduler", &cfg);
+
+    // (streams, batch, spawn_mode) -> per-round seconds; the S=1 entry per
+    // batch is the shared fast-path baseline both modes are charged
+    // against.
+    let mut measure = |streams: usize, batch: u64, spawn: bool| -> (u64, f64, f64) {
+        let rounds = iters.div_ceil(batch);
+        let job_specs = specs(streams, iters);
+        let scheduler = JobScheduler::with_streams(streams, streams)
+            .batch_steps(batch)
+            .spawn_per_round(spawn);
+        let s = measure_timed(&cfg, || {
+            let outcomes = scheduler.run(&job_specs).unwrap();
+            for o in &outcomes {
+                assert_eq!(o.steps, iters, "{}", o.name);
+            }
+        });
+        let wall = s.trimmed_mean();
+        (rounds, wall, wall / rounds as f64)
+    };
+
+    for batch in [1u64, 16] {
+        // S=1 takes the no-thread fast path in both modes: the common
+        // baseline for this batch size.
+        let (base_rounds, base_wall, base_round) = measure(1, batch, false);
+        table.row(&[
+            "fast-path".into(),
+            "1".into(),
+            batch.to_string(),
+            base_rounds.to_string(),
+            format!("{base_wall:.4}"),
+            format!("{:.0}", base_round * 1e9),
+            "0".into(),
+        ]);
+        doc.push(
+            JsonObj::new()
+                .str("mode", "fast-path")
+                .int("streams", 1)
+                .int("batch_steps", batch)
+                .int("rounds", base_rounds)
+                .num("wall_s", base_wall)
+                .num("per_round_ns", base_round * 1e9)
+                .num("overhead_ns", 0.0),
+        );
+
+        let mut overheads = [0.0f64; 2]; // [executor, spawn]
+        for (slot, (mode, spawn)) in [("executor", false), ("spawn-per-round", true)]
+            .into_iter()
+            .enumerate()
+        {
+            let (rounds, wall, per_round) = measure(4, batch, spawn);
+            let overhead = (per_round - base_round).max(0.0);
+            overheads[slot] = overhead;
+            table.row(&[
+                mode.into(),
+                "4".into(),
+                batch.to_string(),
+                rounds.to_string(),
+                format!("{wall:.4}"),
+                format!("{:.0}", per_round * 1e9),
+                format!("{:.0}", overhead * 1e9),
+            ]);
+            doc.push(
+                JsonObj::new()
+                    .str("mode", mode)
+                    .int("streams", 4)
+                    .int("batch_steps", batch)
+                    .int("rounds", rounds)
+                    .num("wall_s", wall)
+                    .num("per_round_ns", per_round * 1e9)
+                    .num("overhead_ns", overhead * 1e9),
+            );
+        }
+        let speedup = if overheads[0] > 0.0 {
+            overheads[1] / overheads[0]
+        } else {
+            f64::INFINITY
+        };
+        println!(
+            "S=4 batch={batch}: spawn-per-round overhead is {speedup:.1}x the \
+             executor overhead"
+        );
+        doc.push(
+            JsonObj::new()
+                .str("mode", "summary")
+                .int("streams", 4)
+                .int("batch_steps", batch)
+                .num("spawn_overhead_ns", overheads[1] * 1e9)
+                .num("executor_overhead_ns", overheads[0] * 1e9)
+                .num("spawn_vs_executor_overhead", speedup),
+        );
+    }
+
+    println!("\n{}", table.to_markdown());
+    table.emit(&results_dir(), "scheduler_latency").unwrap();
+    if let Some(path) = doc.emit().unwrap() {
+        println!("wrote {}", path.display());
+    }
+    println!(
+        "expectation: executor rounds pay a slot publish + wake (~1 µs class)\n\
+         where spawn rounds pay S-1 thread spawns + joins (~10-100 µs class);\n\
+         the acceptance bar is >= 2x lower overhead at batch=1, S=4."
+    );
+}

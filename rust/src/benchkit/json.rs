@@ -1,0 +1,260 @@
+//! Machine-readable bench output — the repo's perf trajectory format.
+//!
+//! Every bench target can publish its measurements as a `BENCH_<name>.json`
+//! document via the `CUPSO_BENCH_JSON` environment variable:
+//!
+//! * unset — no JSON is written (stdout tables only, the old behavior);
+//! * `CUPSO_BENCH_JSON=path/to/file.json` — write exactly there;
+//! * `CUPSO_BENCH_JSON=some/dir` — write `some/dir/BENCH_<name>.json`.
+//!
+//! The document records the bench name, scale, repetition protocol, the
+//! git revision the numbers were taken at, and one record per measured
+//! configuration (label, config fields, wall-clock samples and derived
+//! metrics). Serialization is a small hand-rolled writer — serde is
+//! unavailable offline — emitting a stable, diff-friendly layout so
+//! committed baselines (e.g. `BENCH_scheduler.json`) review like text.
+
+use super::BenchConfig;
+use std::path::PathBuf;
+
+/// Escape a string for a JSON string literal.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an `f64` as a JSON value (non-finite values become `null` —
+/// JSON has no NaN/∞).
+fn number(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// One JSON object, built key by key (insertion order preserved).
+#[derive(Default)]
+pub struct JsonObj {
+    parts: Vec<String>,
+}
+
+impl JsonObj {
+    /// Empty object.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a string field.
+    pub fn str(mut self, key: &str, value: &str) -> Self {
+        self.parts
+            .push(format!("\"{}\": \"{}\"", escape(key), escape(value)));
+        self
+    }
+
+    /// Add a numeric field.
+    pub fn num(mut self, key: &str, value: f64) -> Self {
+        self.parts
+            .push(format!("\"{}\": {}", escape(key), number(value)));
+        self
+    }
+
+    /// Add an integer field.
+    pub fn int(mut self, key: &str, value: u64) -> Self {
+        self.parts.push(format!("\"{}\": {value}", escape(key)));
+        self
+    }
+
+    /// Add an array-of-numbers field (e.g. the raw wall-time samples).
+    pub fn nums(mut self, key: &str, values: &[f64]) -> Self {
+        let body: Vec<String> = values.iter().map(|&v| number(v)).collect();
+        self.parts
+            .push(format!("\"{}\": [{}]", escape(key), body.join(", ")));
+        self
+    }
+
+    fn render(&self, indent: &str) -> String {
+        if self.parts.is_empty() {
+            return "{}".to_string();
+        }
+        let inner = self
+            .parts
+            .iter()
+            .map(|p| format!("{indent}  {p}"))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!("{{\n{inner}\n{indent}}}")
+    }
+}
+
+/// A bench run's JSON document: shared metadata plus one record per
+/// measured configuration.
+pub struct BenchJson {
+    bench: String,
+    scale: String,
+    reps: usize,
+    iter_divisor: u64,
+    git_rev: String,
+    records: Vec<JsonObj>,
+}
+
+impl BenchJson {
+    /// Start a document for bench `name` under the given protocol.
+    pub fn new(name: &str, cfg: &BenchConfig) -> Self {
+        Self {
+            bench: name.to_string(),
+            scale: std::env::var("CUPSO_BENCH_SCALE").unwrap_or_else(|_| "ci".to_string()),
+            reps: cfg.reps,
+            iter_divisor: cfg.iter_divisor,
+            git_rev: git_rev(),
+            records: Vec::new(),
+        }
+    }
+
+    /// Append one measured configuration.
+    pub fn push(&mut self, record: JsonObj) {
+        self.records.push(record);
+    }
+
+    /// Render the whole document.
+    pub fn render(&self) -> String {
+        let records = self
+            .records
+            .iter()
+            .map(|r| format!("    {}", r.render("    ")))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!(
+            "{{\n  \"bench\": \"{}\",\n  \"scale\": \"{}\",\n  \"reps\": {},\n  \
+             \"iter_divisor\": {},\n  \"git_rev\": \"{}\",\n  \"records\": [\n{}\n  ]\n}}\n",
+            escape(&self.bench),
+            escape(&self.scale),
+            self.reps,
+            self.iter_divisor,
+            escape(&self.git_rev),
+            records
+        )
+    }
+
+    /// Write the document if `CUPSO_BENCH_JSON` is set (see the module
+    /// docs for path resolution). Returns the path written, if any.
+    pub fn emit(&self) -> std::io::Result<Option<PathBuf>> {
+        let Some(raw) = std::env::var_os("CUPSO_BENCH_JSON") else {
+            return Ok(None);
+        };
+        let raw = PathBuf::from(raw);
+        let path = if raw.extension().is_some_and(|e| e == "json") {
+            if let Some(parent) = raw.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            raw
+        } else {
+            std::fs::create_dir_all(&raw)?;
+            raw.join(format!("BENCH_{}.json", self.bench))
+        };
+        std::fs::write(&path, self.render())?;
+        Ok(Some(path))
+    }
+}
+
+/// The current git revision (short), or `"unknown"` outside a repo.
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objects_render_in_insertion_order_with_escaping() {
+        let obj = JsonObj::new()
+            .str("label", "S=4 \"batch\"=1\n")
+            .int("rounds", 2000)
+            .num("per_round_ns", 1234.5)
+            .num("bad", f64::NAN)
+            .nums("samples", &[0.25, 0.5]);
+        let s = obj.render("");
+        assert!(s.contains("\"label\": \"S=4 \\\"batch\\\"=1\\n\""), "{s}");
+        assert!(s.contains("\"rounds\": 2000"), "{s}");
+        assert!(s.contains("\"per_round_ns\": 1234.5"), "{s}");
+        assert!(s.contains("\"bad\": null"), "{s}");
+        assert!(s.contains("\"samples\": [0.25, 0.5]"), "{s}");
+        // Insertion order is preserved.
+        assert!(s.find("label").unwrap() < s.find("rounds").unwrap());
+    }
+
+    #[test]
+    fn document_renders_metadata_and_records() {
+        let cfg = BenchConfig {
+            reps: 3,
+            warmup: 1,
+            iter_divisor: 50,
+            max_particles: 1,
+        };
+        let mut doc = BenchJson::new("unit", &cfg);
+        doc.push(JsonObj::new().str("label", "a").int("n", 1));
+        doc.push(JsonObj::new().str("label", "b").int("n", 2));
+        let s = doc.render();
+        assert!(s.contains("\"bench\": \"unit\""), "{s}");
+        assert!(s.contains("\"reps\": 3"), "{s}");
+        assert!(s.contains("\"iter_divisor\": 50"), "{s}");
+        assert!(s.contains("\"git_rev\": "), "{s}");
+        assert!(s.contains("\"label\": \"a\""), "{s}");
+        assert!(s.contains("\"label\": \"b\""), "{s}");
+        // Crude structural sanity: balanced braces and brackets.
+        assert_eq!(
+            s.matches('{').count(),
+            s.matches('}').count(),
+            "unbalanced braces:\n{s}"
+        );
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn emit_writes_to_dir_and_explicit_file() {
+        let dir = std::env::temp_dir().join("cupso-bench-json-unit");
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = BenchConfig::ci();
+        let mut doc = BenchJson::new("emitter", &cfg);
+        doc.push(JsonObj::new().str("label", "x"));
+        // Unset: no write.
+        std::env::remove_var("CUPSO_BENCH_JSON");
+        assert_eq!(doc.emit().unwrap(), None);
+        // Directory form.
+        std::env::set_var("CUPSO_BENCH_JSON", &dir);
+        let path = doc.emit().unwrap().expect("path written");
+        assert_eq!(path, dir.join("BENCH_emitter.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"emitter\""));
+        // Explicit-file form.
+        let file = dir.join("custom.json");
+        std::env::set_var("CUPSO_BENCH_JSON", &file);
+        let path = doc.emit().unwrap().expect("path written");
+        assert_eq!(path, file);
+        assert!(file.exists());
+        std::env::remove_var("CUPSO_BENCH_JSON");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

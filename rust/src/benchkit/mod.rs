@@ -16,6 +16,12 @@
 //!
 //! Unrecognized values of either variable abort the bench loudly instead
 //! of silently falling back to CI scale (see [`BenchConfig::from_env`]).
+//!
+//! Machine-readable output: set `CUPSO_BENCH_JSON=<path>` and bench
+//! targets additionally write a `BENCH_<name>.json` document (wall
+//! times, derived metrics, config, git revision) — see [`json`].
+
+pub mod json;
 
 use crate::metrics::Summary;
 

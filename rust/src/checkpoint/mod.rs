@@ -222,12 +222,21 @@ impl RunCheckpoint {
 
     /// Serialize to the version-1 wire format.
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::new(RUN_MAGIC);
-        self.encode_body(&mut w);
-        w.seal()
+        let mut buf = Vec::new();
+        self.encode_into(&mut buf);
+        buf
     }
 
-    fn encode_body(&self, w: &mut Writer) {
+    /// Serialize into a caller-owned buffer (cleared first), so periodic
+    /// persistence reuses one allocation across snapshots instead of
+    /// building a fresh `Vec` per checkpoint per round.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        let mut w = Writer::open(buf, RUN_MAGIC);
+        self.encode_body(&mut w);
+        w.seal();
+    }
+
+    fn encode_body(&self, w: &mut Writer<'_>) {
         w.u8(self.kind.code());
         w.u8(match self.objective {
             Objective::Maximize => 0,
@@ -350,6 +359,13 @@ impl RunCheckpoint {
         write_atomic(path, &self.encode())
     }
 
+    /// Like [`write_file`](Self::write_file), encoding through a reusable
+    /// buffer (see [`encode_into`](Self::encode_into)).
+    pub fn write_file_with(&self, path: &Path, buf: &mut Vec<u8>) -> Result<()> {
+        self.encode_into(buf);
+        write_atomic(path, buf)
+    }
+
     /// Read and decode a checkpoint file.
     pub fn read_file(path: &Path) -> Result<Self> {
         let bytes = std::fs::read(path)
@@ -363,8 +379,10 @@ impl RunCheckpoint {
 /// job's spec and termination bookkeeping.
 #[derive(Debug, Clone)]
 pub struct JobCheckpoint {
-    /// Job name (batch-config section name).
-    pub name: String,
+    /// Job name (batch-config section name). Interned (`Arc<str>`) so the
+    /// scheduler's snapshots share one allocation with the spec instead
+    /// of cloning the string per persist.
+    pub name: std::sync::Arc<str>,
     /// Fitness registry key ([`crate::fitness::by_name`]).
     pub fitness: String,
     /// Consecutive non-improving steps at suspension.
@@ -381,14 +399,24 @@ pub struct JobCheckpoint {
     pub max_steps: Option<u64>,
     /// EDF deadline in scheduler steps.
     pub deadline: Option<u64>,
-    /// The run state itself.
-    pub run: RunCheckpoint,
+    /// The run state itself. Shared (`Arc`) so suspension hands the same
+    /// checkpoint from a live run to the scheduler's parked slot and to a
+    /// persisted snapshot without deep-copying the swarm arrays.
+    pub run: std::sync::Arc<RunCheckpoint>,
 }
 
 impl JobCheckpoint {
     /// Serialize to the version-1 wire format.
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::new(JOB_MAGIC);
+        let mut buf = Vec::new();
+        self.encode_into(&mut buf);
+        buf
+    }
+
+    /// Serialize into a caller-owned buffer (cleared first) — the
+    /// reusable-allocation form of [`encode`](Self::encode).
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        let mut w = Writer::open(buf, JOB_MAGIC);
         w.str(&self.name);
         w.str(&self.fitness);
         w.u64(self.stalled);
@@ -398,7 +426,7 @@ impl JobCheckpoint {
         w.opt_u64(self.max_steps);
         w.opt_u64(self.deadline);
         self.run.encode_body(&mut w);
-        w.seal()
+        w.seal();
     }
 
     /// Deserialize, verifying magic, version, checksum and consistency.
@@ -416,7 +444,7 @@ impl JobCheckpoint {
         r.close()?;
         run.validate()?;
         Ok(Self {
-            name,
+            name: name.into(),
             fitness,
             stalled,
             stop,
@@ -424,13 +452,20 @@ impl JobCheckpoint {
             stall_window,
             max_steps,
             deadline,
-            run,
+            run: std::sync::Arc::new(run),
         })
     }
 
     /// Write to a file (atomic temp + rename).
     pub fn write_file(&self, path: &Path) -> Result<()> {
         write_atomic(path, &self.encode())
+    }
+
+    /// Like [`write_file`](Self::write_file), encoding through a reusable
+    /// buffer.
+    pub fn write_file_with(&self, path: &Path, buf: &mut Vec<u8>) -> Result<()> {
+        self.encode_into(buf);
+        write_atomic(path, buf)
     }
 
     /// Read and decode a job-checkpoint file.
@@ -462,13 +497,15 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Little-endian append-only encoder: magic + version up front, FNV seal
-/// at the end.
-struct Writer(Vec<u8>);
+/// Little-endian append-only encoder over a caller-owned buffer: magic +
+/// version up front, FNV seal at the end. Borrowing (rather than owning)
+/// the buffer lets periodic persistence reuse one allocation across
+/// every checkpoint it writes.
+struct Writer<'b>(&'b mut Vec<u8>);
 
-impl Writer {
-    fn new(magic: &[u8; 8]) -> Self {
-        let mut buf = Vec::with_capacity(256);
+impl<'b> Writer<'b> {
+    fn open(buf: &'b mut Vec<u8>, magic: &[u8; 8]) -> Self {
+        buf.clear();
         buf.extend_from_slice(magic);
         buf.extend_from_slice(&VERSION.to_le_bytes());
         Self(buf)
@@ -528,10 +565,9 @@ impl Writer {
         }
     }
 
-    fn seal(mut self) -> Vec<u8> {
-        let check = fnv1a(&self.0);
+    fn seal(self) {
+        let check = fnv1a(self.0);
         self.0.extend_from_slice(&check.to_le_bytes());
-        self.0
     }
 }
 
@@ -768,10 +804,10 @@ mod tests {
             stall_window: None,
             max_steps: Some(100),
             deadline: None,
-            run: sample(5, 2),
+            run: std::sync::Arc::new(sample(5, 2)),
         };
         let decoded = JobCheckpoint::decode(&job.encode()).unwrap();
-        assert_eq!(decoded.name, "tenant-α");
+        assert_eq!(&*decoded.name, "tenant-α");
         assert_eq!(decoded.fitness, "cubic");
         assert_eq!(decoded.stalled, 4);
         assert_eq!(decoded.stop, Some(2));

@@ -28,7 +28,7 @@ use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSw
 use super::{restore_guard, Engine, Run, StepReport};
 use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
 use crate::fitness::{Fitness, Objective};
-use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
+use crate::pso::{history_capacity, history_stride, Counters, PsoParams, RunOutput, SwarmState};
 use crate::rng::PhiloxStream;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -55,10 +55,11 @@ impl AsyncEngine {
         seed: u64,
         swarm: SwarmState,
         gbest: GlobalBest,
-        history: Vec<(u64, f64)>,
+        mut history: Vec<(u64, f64)>,
         iter: u64,
         pbest_improvements: u64,
     ) -> AsyncStepRun<'a> {
+        history.reserve(history_capacity(params.max_iter).saturating_sub(history.len()));
         let state = SharedSwarm::new(swarm);
         let blocks = self.settings.blocks_for(params.n);
         let step_scratch =
@@ -168,7 +169,7 @@ impl Engine for AsyncEngine {
                     st, lo, hi, frozen, params, fitness, objective, &stream, iter, ss,
                 );
                 if best_i != usize::MAX && objective.better(best, gbest.fit_relaxed()) {
-                    gbest.update_locked(objective, best, || st.position_of(best_i));
+                    gbest.update_locked(objective, best, |dst| st.position_into(best_i, dst));
                 }
                 if b == 0 && iter % stride == 0 {
                     // SAFETY: only block 0 touches the history cell.
@@ -271,7 +272,7 @@ impl Run for AsyncStepRun<'_> {
                     st, lo, hi, frozen, params, fitness, objective, stream, iter, ss,
                 );
                 if best_i != usize::MAX && objective.better(best, gbest.fit_relaxed()) {
-                    gbest.update_locked(objective, best, || st.position_of(best_i));
+                    gbest.update_locked(objective, best, |dst| st.position_into(best_i, dst));
                 }
                 let improved = ss.improved[..hi - lo].iter().filter(|&&x| x).count() as u64;
                 pbest_improvements.fetch_add(improved, Ordering::Relaxed);
@@ -340,7 +341,7 @@ impl Run for AsyncStepRun<'_> {
                         st, lo, hi, frozen, params, fitness, objective, stream, iter, ss,
                     );
                     if best_i != usize::MAX && objective.better(best, gbest.fit_relaxed()) {
-                        gbest.update_locked(objective, best, || st.position_of(best_i));
+                        gbest.update_locked(objective, best, |dst| st.position_into(best_i, dst));
                     }
                     improved +=
                         ss.improved[..hi - lo].iter().filter(|&&x| x).count() as u64;
@@ -415,6 +416,31 @@ impl Run for AsyncStepRun<'_> {
                 ..Default::default()
             },
             swarm,
+        }
+    }
+
+    fn into_checkpoint(self: Box<Self>) -> RunCheckpoint {
+        // Suspension path: swarm and history are MOVED, never deep-copied
+        // (rust/tests/zero_alloc.rs pins this).
+        let this = *self;
+        let counters = Counters {
+            particle_updates: this.params.n as u64 * this.iter,
+            gbest_updates: this.gbest.update_count(),
+            pbest_improvements: this.pbest_improvements.load(Ordering::Relaxed),
+            ..Default::default()
+        };
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::AsyncPersistent,
+            objective: this.objective,
+            seed: this.seed,
+            iter: this.iter,
+            gbest_fit: this.gbest.fit_relaxed(),
+            gbest_pos: this.gbest.pos_vec(),
+            history: this.history,
+            counters,
+            params: this.params,
+            swarm: this.state.into_inner(),
         }
     }
 }

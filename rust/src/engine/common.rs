@@ -167,8 +167,19 @@ pub struct GlobalBest {
     pos: Vec<AtomicF64>,
     /// Serializes compound updates (Algorithm 3's lock).
     lock: SpinLock<()>,
+    /// Reusable gather buffer for winning updates, so publishing an
+    /// improvement allocates nothing (perf pass, EXPERIMENTS.md §Perf).
+    /// Writers are exclusive by construction: `update_locked` touches it
+    /// only under `lock`, `update_exclusive` only from the single-block
+    /// 2nd kernel, and no engine mixes the two entry points.
+    gather: UnsafeCell<Vec<f64>>,
     updates: std::sync::atomic::AtomicU64,
 }
+
+// SAFETY: every field but `gather` is atomic/lock; `gather` is only
+// written by mutually-exclusive writers (see its field docs) and never
+// read outside the writing call.
+unsafe impl Sync for GlobalBest {}
 
 impl GlobalBest {
     /// Initialize from the seeded swarm's best.
@@ -184,6 +195,7 @@ impl GlobalBest {
             fit: AtomicF64::new(fit),
             pos: pos.iter().map(|&p| AtomicF64::new(p)).collect(),
             lock: SpinLock::new(()),
+            gather: UnsafeCell::new(vec![0.0; pos.len()]),
             updates: std::sync::atomic::AtomicU64::new(updates),
         }
     }
@@ -210,10 +222,11 @@ impl GlobalBest {
     }
 
     /// Algorithm 3 verbatim: take the CAS lock, re-check, update
-    /// `(gbest_fit, gbest_pos)`, fence, release. `pos_src` yields the
-    /// candidate position only if the re-check passes (so losers don't pay
-    /// the gather).
-    pub fn update_locked<F: FnOnce() -> Vec<f64>>(
+    /// `(gbest_fit, gbest_pos)`, fence, release. `pos_src` gathers the
+    /// candidate position into the internal scratch buffer only if the
+    /// re-check passes (so losers don't pay the gather, and winners don't
+    /// allocate).
+    pub fn update_locked<F: FnOnce(&mut [f64])>(
         &self,
         objective: Objective,
         fit: f64,
@@ -227,8 +240,10 @@ impl GlobalBest {
         if !objective.better(fit, self.fit.load(Ordering::Acquire)) {
             return false;
         }
-        let pos = pos_src();
-        for (slot, &p) in self.pos.iter().zip(&pos) {
+        // SAFETY: exclusive under `lock` (see the field docs).
+        let pos = unsafe { &mut *self.gather.get() };
+        pos_src(pos);
+        for (slot, &p) in self.pos.iter().zip(pos.iter()) {
             slot.store(p, Ordering::Relaxed);
         }
         self.fit.store(fit, Ordering::Release);
@@ -237,12 +252,23 @@ impl GlobalBest {
     }
 
     /// Exclusive (single-block 2nd kernel) update — no lock needed, but
-    /// kept atomic so concurrent relaxed readers stay defined.
-    pub fn update_exclusive(&self, objective: Objective, fit: f64, pos: &[f64]) -> bool {
+    /// kept atomic so concurrent relaxed readers stay defined. `pos_src`
+    /// gathers into the internal scratch only on acceptance; exclusivity
+    /// of the caller (a single-block kernel) guards the scratch.
+    pub fn update_exclusive<F: FnOnce(&mut [f64])>(
+        &self,
+        objective: Objective,
+        fit: f64,
+        pos_src: F,
+    ) -> bool {
         if !objective.better(fit, self.fit.load(Ordering::Acquire)) {
             return false;
         }
-        for (slot, &p) in self.pos.iter().zip(pos) {
+        // SAFETY: the caller is the only writer (single-block 2nd kernel);
+        // engines never mix this entry with `update_locked`.
+        let pos = unsafe { &mut *self.gather.get() };
+        pos_src(pos);
+        for (slot, &p) in self.pos.iter().zip(pos.iter()) {
             slot.store(p, Ordering::Relaxed);
         }
         self.fit.store(fit, Ordering::Release);
@@ -406,10 +432,12 @@ mod tests {
     fn global_best_lock_update_semantics() {
         let g = GlobalBest::new(10.0, &[1.0, 2.0]);
         // Worse candidate: rejected without calling pos_src.
-        let updated = g.update_locked(Objective::Maximize, 5.0, || panic!("must not gather"));
+        let updated = g.update_locked(Objective::Maximize, 5.0, |_| panic!("must not gather"));
         assert!(!updated);
         // Better candidate: accepted.
-        assert!(g.update_locked(Objective::Maximize, 20.0, || vec![3.0, 4.0]));
+        assert!(g.update_locked(Objective::Maximize, 20.0, |dst| {
+            dst.copy_from_slice(&[3.0, 4.0])
+        }));
         assert_eq!(g.fit_relaxed(), 20.0);
         assert_eq!(g.pos_vec(), vec![3.0, 4.0]);
         assert_eq!(g.update_count(), 1);
@@ -424,7 +452,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 for i in 0..5000u64 {
                     let v = (t * 5000 + i) as f64;
-                    g.update_locked(Objective::Maximize, v, || vec![v]);
+                    g.update_locked(Objective::Maximize, v, |dst| dst[0] = v);
                 }
             }));
         }

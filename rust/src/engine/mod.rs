@@ -147,6 +147,16 @@ pub trait Run: Send {
     /// pool/stream/process) continues bit-identically for the bit-exact
     /// engines; see the module docs for the Async caveat.
     fn checkpoint(&self) -> RunCheckpoint;
+
+    /// Consume the run into its checkpoint — the suspension path. Every
+    /// engine overrides the default to MOVE its swarm arrays (and
+    /// history) into the checkpoint instead of deep-copying them, so
+    /// preempting a job costs O(1) heap traffic, not O(n·dim)
+    /// (`rust/tests/zero_alloc.rs` enforces this). Semantically identical
+    /// to `checkpoint()` followed by dropping the run.
+    fn into_checkpoint(self: Box<Self>) -> RunCheckpoint {
+        self.checkpoint()
+    }
 }
 
 /// A PSO solver implementation (one of the paper's five columns).

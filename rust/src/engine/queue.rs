@@ -23,7 +23,7 @@ use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
 use crate::exec::SharedQueue;
 use crate::fitness::{Fitness, Objective};
 use crate::pso::serial_sync::better_with_tie;
-use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
+use crate::pso::{history_capacity, history_stride, Counters, PsoParams, RunOutput, SwarmState};
 use crate::rng::PhiloxStream;
 use anyhow::Result;
 
@@ -51,10 +51,11 @@ impl QueueEngine {
         seed: u64,
         swarm: SwarmState,
         gbest: GlobalBest,
-        history: Vec<(u64, f64)>,
+        mut history: Vec<(u64, f64)>,
         iter: u64,
         push_base: u64,
     ) -> QueueRun<'a> {
+        history.reserve(history_capacity(params.max_iter).saturating_sub(history.len()));
         let state = SharedSwarm::new(swarm);
         let blocks = self.settings.blocks_for(params.n);
         // One shared-memory queue per block, sized to the block (§5.3:
@@ -236,7 +237,9 @@ impl Run for QueueRun<'_> {
                 }
                 if best.1 != u32::MAX {
                     let st = unsafe { state.get() };
-                    gbest.update_exclusive(objective, best.0, &st.position_of(best.1 as usize));
+                    gbest.update_exclusive(objective, best.0, |dst| {
+                        st.position_into(best.1 as usize, dst)
+                    });
                 }
             });
         }
@@ -307,6 +310,33 @@ impl Run for QueueRun<'_> {
                 ..Default::default()
             },
             swarm,
+        }
+    }
+
+    fn into_checkpoint(self: Box<Self>) -> RunCheckpoint {
+        // Suspension path: the run is being torn down, so the swarm and
+        // history are MOVED into the checkpoint — no deep copy of the SoA
+        // arrays (the zero-alloc suspension invariant, rust/tests/zero_alloc.rs).
+        let this = *self;
+        let counters = Counters {
+            particle_updates: this.params.n as u64 * this.iter,
+            queue_pushes: this.push_base
+                + this.queues.iter().map(|q| q.total_pushes()).sum::<u64>(),
+            gbest_updates: this.gbest.update_count(),
+            ..Default::default()
+        };
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::Queue,
+            objective: this.objective,
+            seed: this.seed,
+            iter: this.iter,
+            gbest_fit: this.gbest.fit_relaxed(),
+            gbest_pos: this.gbest.pos_vec(),
+            history: this.history,
+            counters,
+            params: this.params,
+            swarm: this.state.into_inner(),
         }
     }
 }

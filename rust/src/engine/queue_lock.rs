@@ -20,7 +20,7 @@ use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
 use crate::exec::SharedQueue;
 use crate::fitness::{Fitness, Objective};
 use crate::pso::serial_sync::better_with_tie;
-use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
+use crate::pso::{history_capacity, history_stride, Counters, PsoParams, RunOutput, SwarmState};
 use crate::rng::PhiloxStream;
 use anyhow::Result;
 
@@ -46,10 +46,11 @@ impl QueueLockEngine {
         seed: u64,
         swarm: SwarmState,
         gbest: GlobalBest,
-        history: Vec<(u64, f64)>,
+        mut history: Vec<(u64, f64)>,
         iter: u64,
         push_base: u64,
     ) -> QueueLockRun<'a> {
+        history.reserve(history_capacity(params.max_iter).saturating_sub(history.len()));
         let state = SharedSwarm::new(swarm);
         let blocks = self.settings.blocks_for(params.n);
         let queues: Vec<SharedQueue<(f64, u32)>> = (0..blocks)
@@ -220,8 +221,8 @@ impl Run for QueueLockRun<'_> {
                 // …then Algorithm 3: lock + re-check + in-place update,
                 // replacing the aux-array write and the 2nd kernel.
                 if best.1 != u32::MAX {
-                    gbest.update_locked(objective, best.0, || {
-                        st.position_of(best.1 as usize)
+                    gbest.update_locked(objective, best.0, |dst| {
+                        st.position_into(best.1 as usize, dst)
                     });
                 }
             });
@@ -293,6 +294,32 @@ impl Run for QueueLockRun<'_> {
                 ..Default::default()
             },
             swarm,
+        }
+    }
+
+    fn into_checkpoint(self: Box<Self>) -> RunCheckpoint {
+        // Suspension path: swarm and history are MOVED, never deep-copied
+        // (rust/tests/zero_alloc.rs pins this).
+        let this = *self;
+        let counters = Counters {
+            particle_updates: this.params.n as u64 * this.iter,
+            queue_pushes: this.push_base
+                + this.queues.iter().map(|q| q.total_pushes()).sum::<u64>(),
+            gbest_updates: this.gbest.update_count(),
+            ..Default::default()
+        };
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::QueueLock,
+            objective: this.objective,
+            seed: this.seed,
+            iter: this.iter,
+            gbest_fit: this.gbest.fit_relaxed(),
+            gbest_pos: this.gbest.pos_vec(),
+            history: this.history,
+            counters,
+            params: this.params,
+            swarm: this.state.into_inner(),
         }
     }
 }

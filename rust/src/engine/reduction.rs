@@ -23,7 +23,7 @@ use super::common::{step_block, GlobalBest, ParallelSettings, PerBlock, SharedSw
 use super::{restore_guard, Engine, Run, StepReport};
 use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
 use crate::fitness::{Fitness, Objective};
-use crate::pso::{history_stride, Counters, PsoParams, RunOutput, SwarmState};
+use crate::pso::{history_capacity, history_stride, Counters, PsoParams, RunOutput, SwarmState};
 use crate::rng::PhiloxStream;
 use anyhow::Result;
 
@@ -145,9 +145,10 @@ impl ReductionEngine {
         seed: u64,
         swarm: SwarmState,
         gbest: GlobalBest,
-        history: Vec<(u64, f64)>,
+        mut history: Vec<(u64, f64)>,
         iter: u64,
     ) -> ReductionRun<'a> {
+        history.reserve(history_capacity(params.max_iter).saturating_sub(history.len()));
         let state = SharedSwarm::new(swarm);
         let blocks = self.settings.blocks_for(params.n);
         let pad = self.settings.block_size.next_power_of_two();
@@ -346,7 +347,9 @@ impl Run for ReductionRun<'_> {
                 let (bf, bi) = reduce_tree(sc, blocks, objective, unrolled);
                 if bi != u32::MAX {
                     let st = unsafe { state.get() };
-                    gbest.update_exclusive(objective, bf, &st.position_of(bi as usize));
+                    gbest.update_exclusive(objective, bf, |dst| {
+                        st.position_into(bi as usize, dst)
+                    });
                 }
             });
         }
@@ -416,6 +419,34 @@ impl Run for ReductionRun<'_> {
                 ..Default::default()
             },
             swarm,
+        }
+    }
+
+    fn into_checkpoint(self: Box<Self>) -> RunCheckpoint {
+        // Suspension path: swarm and history are MOVED, never deep-copied
+        // (rust/tests/zero_alloc.rs pins this).
+        let this = *self;
+        let counters = Counters {
+            particle_updates: this.params.n as u64 * this.iter,
+            gbest_updates: this.gbest.update_count(),
+            ..Default::default()
+        };
+        RunCheckpoint {
+            version: VERSION,
+            kind: if this.unrolled {
+                RunKind::LoopUnrolling
+            } else {
+                RunKind::Reduction
+            },
+            objective: this.objective,
+            seed: this.seed,
+            iter: this.iter,
+            gbest_fit: this.gbest.fit_relaxed(),
+            gbest_pos: this.gbest.pos_vec(),
+            history: this.history,
+            counters,
+            params: this.params,
+            swarm: this.state.into_inner(),
         }
     }
 }

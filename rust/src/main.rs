@@ -232,6 +232,12 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
             Some("64"),
         )
         .opt(
+            "checkpoint-keep",
+            "retained snapshots: 1 = overwrite in place, N > 1 = rotate \
+             snap_<seq>/ directories keeping the latest N",
+            Some("1"),
+        )
+        .opt(
             "suspend-after",
             "suspend the whole batch to --checkpoint-dir after this many rounds and exit",
             None,
@@ -274,6 +280,7 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
     let trace = args.flag("trace");
     let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
     let every: u64 = args.get_parse("checkpoint-every", 64u64)?;
+    let keep: usize = args.get_parse("checkpoint-keep", 1usize)?;
     let suspend_after: Option<u64> = args
         .get("suspend-after")
         .map(|s| {
@@ -283,6 +290,9 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
         .transpose()?;
     if every == 0 {
         bail!("--checkpoint-every must be >= 1");
+    }
+    if keep == 0 {
+        bail!("--checkpoint-keep must be >= 1");
     }
     if suspend_after.is_some() && ckpt_dir.is_none() {
         bail!("--suspend-after requires --checkpoint-dir");
@@ -328,12 +338,13 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
     let outcomes = match &ckpt_dir {
         None => scheduler.run_with(&specs, &mut telemetry)?,
         Some(dir) => {
-            let completed = drive_sessions(
+            let completed = drive_session(
                 &scheduler,
                 &specs,
                 &cfg,
                 dir,
                 every,
+                keep,
                 suspend_after,
                 None,
                 &mut telemetry,
@@ -379,7 +390,8 @@ fn cmd_resume(rest: &[String]) -> Result<()> {
     }
     let trace = args.flag("trace");
 
-    let (knobs, ckpts) = read_snapshot(&dir)?;
+    let snap_dir = resolve_snapshot_dir(&dir)?;
+    let (knobs, keep, ckpts) = read_snapshot(&snap_dir)?;
     let specs = specs_from_checkpoints(&ckpts)?;
     let policy = SchedPolicy::parse(&knobs.policy)
         .with_context(|| format!("manifest: bad policy {:?}", knobs.policy))?;
@@ -409,12 +421,13 @@ fn cmd_resume(rest: &[String]) -> Result<()> {
             }
         }
     };
-    let outcomes = drive_sessions(
+    let outcomes = drive_session(
         &scheduler,
         &specs,
         &knobs,
         &dir,
         every,
+        keep,
         None,
         Some(ckpts),
         &mut telemetry,
@@ -425,57 +438,144 @@ fn cmd_resume(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Session loop shared by `batch --checkpoint-dir` and `resume`: run the
-/// scheduler in bounded sessions, persisting a full snapshot after every
-/// session. `Ok(None)` means the batch was deliberately suspended
-/// (`suspend_after`); `Ok(Some(outcomes))` means it completed.
+/// Single-session driver shared by `batch --checkpoint-dir` and `resume`:
+/// run ONE scheduler session with the in-place persistence hook — every
+/// `every` rounds a full snapshot is written while the batch keeps
+/// running (no suspend/restore churn, no buffer reallocation). `Ok(None)`
+/// means the batch was deliberately suspended (`suspend_after`, final
+/// snapshot written); `Ok(Some(outcomes))` means it completed.
 #[allow(clippy::too_many_arguments)]
-fn drive_sessions<F: FnMut(&JobReport<'_>)>(
+fn drive_session<F: FnMut(&JobReport<'_>)>(
     scheduler: &JobScheduler,
     specs: &[JobSpec],
     cfg: &BatchConfig,
     dir: &Path,
     every: u64,
+    keep: usize,
     suspend_after: Option<u64>,
-    mut resume: Option<Vec<JobCheckpoint>>,
-    mut telemetry: F,
+    resume: Option<Vec<JobCheckpoint>>,
+    telemetry: F,
 ) -> Result<Option<Vec<JobOutcome>>> {
-    // Periodic checkpoints keep their cadence even under --suspend-after:
-    // each session runs at most `every` rounds, and the suspend budget
-    // counts down across sessions.
-    let mut to_suspend = suspend_after;
-    loop {
-        let cap = to_suspend.map_or(every, |rem| rem.min(every));
-        match scheduler.run_session(specs, resume.as_deref(), Some(cap), &mut telemetry)? {
-            BatchRun::Complete(outcomes) => return Ok(Some(outcomes)),
-            BatchRun::Suspended(snap) => {
-                write_snapshot(dir, cfg, &snap)?;
-                if let Some(rem) = &mut to_suspend {
-                    // A suspended session ran exactly `cap` rounds.
-                    *rem = rem.saturating_sub(cap);
-                    if *rem == 0 {
-                        println!(
-                            "suspended {} jobs into {} — continue with `cupso resume {}`",
-                            snap.len(),
-                            dir.display(),
-                            dir.display()
-                        );
-                        return Ok(None);
-                    }
-                }
-                resume = Some(snap);
-            }
+    let mut sink = SnapshotSink::new(dir, cfg, keep)?;
+    let batch = scheduler.run_session_with(
+        specs,
+        resume.as_deref(),
+        suspend_after,
+        Some(every),
+        |snap| sink.persist(snap),
+        telemetry,
+    )?;
+    match batch {
+        BatchRun::Complete(outcomes) => Ok(Some(outcomes)),
+        BatchRun::Suspended(snap) => {
+            sink.persist(&snap)?;
+            println!(
+                "suspended {} jobs into {} — continue with `cupso resume {}`",
+                snap.len(),
+                dir.display(),
+                dir.display()
+            );
+            Ok(None)
         }
     }
 }
 
+/// Writes batch snapshots under a checkpoint directory, with retention.
+///
+/// `keep == 1` (the default) overwrites the directory in place — the
+/// layout `cupso resume` has always read. `keep > 1` rotates numbered
+/// `snap_<seq>/` subdirectories, pruning so the latest `keep` survive
+/// (ROADMAP retention item); `resolve_snapshot_dir` picks the newest on
+/// resume. One encode buffer is reused across every checkpoint written.
+struct SnapshotSink<'a> {
+    dir: &'a Path,
+    cfg: &'a BatchConfig,
+    keep: usize,
+    seq: u64,
+    buf: Vec<u8>,
+}
+
+impl<'a> SnapshotSink<'a> {
+    fn new(dir: &'a Path, cfg: &'a BatchConfig, keep: usize) -> Result<Self> {
+        // Continue numbering after any snapshots a previous run left.
+        let seq = match list_rotated(dir) {
+            Ok(existing) => existing.last().map_or(0, |&(s, _)| s + 1),
+            Err(_) => 0, // directory does not exist yet
+        };
+        Ok(Self {
+            dir,
+            cfg,
+            keep,
+            seq,
+            buf: Vec::new(),
+        })
+    }
+
+    fn persist(&mut self, snap: &[JobCheckpoint]) -> Result<()> {
+        if self.keep <= 1 {
+            return write_snapshot(self.dir, self.cfg, self.keep, snap, &mut self.buf);
+        }
+        let target = self.dir.join(format!("snap_{:06}", self.seq));
+        write_snapshot(&target, self.cfg, self.keep, snap, &mut self.buf)?;
+        self.seq += 1;
+        // Prune: keep the latest `keep` rotated snapshots.
+        let existing = list_rotated(self.dir)?;
+        for (_, path) in existing.iter().rev().skip(self.keep) {
+            std::fs::remove_dir_all(path)
+                .with_context(|| format!("pruning old snapshot {}", path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Numbered `snap_<seq>/` subdirectories holding a manifest, ascending.
+fn list_rotated(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut found = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if let Some(seq) = name.strip_prefix("snap_").and_then(|s| s.parse::<u64>().ok()) {
+            if path.join("manifest.toml").exists() {
+                found.push((seq, path));
+            }
+        }
+    }
+    found.sort_unstable_by_key(|&(s, _)| s);
+    Ok(found)
+}
+
+/// The snapshot directory `cupso resume` should read: the directory
+/// itself when it holds a manifest (keep = 1 layout), otherwise the
+/// newest rotated `snap_<seq>/` subdirectory.
+fn resolve_snapshot_dir(dir: &Path) -> Result<PathBuf> {
+    if dir.join("manifest.toml").exists() {
+        return Ok(dir.to_path_buf());
+    }
+    let mut rotated = list_rotated(dir).unwrap_or_default();
+    rotated.pop().map(|(_, p)| p).with_context(|| {
+        format!(
+            "no manifest.toml or snap_*/ snapshot under {}",
+            dir.display()
+        )
+    })
+}
+
 /// Persist a batch snapshot: one `job_<i>.ckpt` per job plus a
-/// `manifest.toml` recording the scheduler knobs and job count.
-fn write_snapshot(dir: &Path, cfg: &BatchConfig, snap: &[JobCheckpoint]) -> Result<()> {
+/// `manifest.toml` recording the scheduler knobs and job count. `buf` is
+/// the reusable encode buffer.
+fn write_snapshot(
+    dir: &Path,
+    cfg: &BatchConfig,
+    keep: usize,
+    snap: &[JobCheckpoint],
+    buf: &mut Vec<u8>,
+) -> Result<()> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
     for (i, job) in snap.iter().enumerate() {
-        job.write_file(&dir.join(format!("job_{i}.ckpt")))?;
+        job.write_file_with(&dir.join(format!("job_{i}.ckpt")), buf)?;
     }
     let manifest = format!(
         "# cupso batch snapshot — continue with `cupso resume {}`\n\
@@ -485,6 +585,7 @@ fn write_snapshot(dir: &Path, cfg: &BatchConfig, snap: &[JobCheckpoint]) -> Resu
          streams = {}\n\
          batch_steps = {}\n\
          preempt_quantum = {}\n\
+         keep = {}\n\
          jobs = {}\n",
         dir.display(),
         cupso::checkpoint::VERSION,
@@ -493,6 +594,7 @@ fn write_snapshot(dir: &Path, cfg: &BatchConfig, snap: &[JobCheckpoint]) -> Resu
         cfg.streams,
         cfg.batch_steps,
         cfg.preempt_quantum,
+        keep,
         snap.len()
     );
     // Atomic like the job checkpoints: a crash mid-write must never tear
@@ -506,8 +608,9 @@ fn write_snapshot(dir: &Path, cfg: &BatchConfig, snap: &[JobCheckpoint]) -> Resu
 }
 
 /// Load a batch snapshot directory: scheduler knobs (as a job-less
-/// `BatchConfig`) plus every job checkpoint in manifest order.
-fn read_snapshot(dir: &Path) -> Result<(BatchConfig, Vec<JobCheckpoint>)> {
+/// `BatchConfig`) plus the retention count and every job checkpoint in
+/// manifest order.
+fn read_snapshot(dir: &Path) -> Result<(BatchConfig, usize, Vec<JobCheckpoint>)> {
     let manifest_path = dir.join("manifest.toml");
     let text = std::fs::read_to_string(&manifest_path)
         .with_context(|| format!("reading {}", manifest_path.display()))?;
@@ -551,12 +654,23 @@ fn read_snapshot(dir: &Path) -> Result<(BatchConfig, Vec<JobCheckpoint>)> {
         preempt_quantum: get_uint("preempt_quantum", u64::MAX)?,
         jobs: Vec::new(),
     };
+    // Optional for compatibility with pre-rotation snapshots.
+    let keep = match doc.get("keep") {
+        Some(v) => {
+            let k = v.as_int("keep")?;
+            if !(1..=1_000_000).contains(&k) {
+                bail!("manifest: keep = {k} out of range");
+            }
+            k as usize
+        }
+        None => 1,
+    };
     let job_count = get_uint("jobs", 100_000)?;
     let mut ckpts = Vec::with_capacity(job_count as usize);
     for i in 0..job_count {
         ckpts.push(JobCheckpoint::read_file(&dir.join(format!("job_{i}.ckpt")))?);
     }
-    Ok((knobs, ckpts))
+    Ok((knobs, keep, ckpts))
 }
 
 /// Rebuild scheduler job specs from suspended checkpoints: workload,
@@ -607,7 +721,7 @@ fn print_batch_results(
     );
     for (o, s) in outcomes.iter().zip(specs) {
         table.row(&[
-            o.name.clone(),
+            o.name.to_string(),
             o.engine.label().to_string(),
             format!("{}x{}d", s.params.n, s.params.dim),
             o.steps.to_string(),

@@ -71,6 +71,13 @@ pub fn history_stride(iters: u64) -> u64 {
     (iters / HISTORY_SAMPLES).max(1)
 }
 
+/// Upper bound on the history entries a run of `iters` can record
+/// (stride marks plus the `finish` sample). Runs reserve this up front so
+/// steady-state stepping never reallocates the history vector.
+pub fn history_capacity(iters: u64) -> usize {
+    (iters / history_stride(iters)) as usize + 2
+}
+
 /// One velocity+position update for particle `i`, dimension-major SoA —
 /// Eq. (1) and Eq. (2) plus the clamps of Algorithm 1 lines 9–12.
 ///

@@ -69,7 +69,7 @@ impl<'a> SerialRun<'a> {
             gbest_pos,
             counters: super::Counters::default(),
             stride: history_stride(params.max_iter),
-            history: Vec::with_capacity(super::HISTORY_SAMPLES as usize + 1),
+            history: Vec::with_capacity(super::history_capacity(params.max_iter)),
             iter: 0,
         }
     }
@@ -79,6 +79,9 @@ impl<'a> SerialRun<'a> {
     /// the continuation identical to the uninterrupted run.
     pub fn restore(ckpt: &RunCheckpoint, fitness: &'a dyn Fitness) -> Result<Self> {
         restore_guard(ckpt, RunKind::SerialCpu)?;
+        let mut history = ckpt.history.clone();
+        history
+            .reserve(super::history_capacity(ckpt.params.max_iter).saturating_sub(history.len()));
         Ok(Self {
             params: ckpt.params.clone(),
             fitness,
@@ -90,7 +93,7 @@ impl<'a> SerialRun<'a> {
             gbest_pos: ckpt.gbest_pos.clone(),
             counters: ckpt.counters.clone(),
             stride: history_stride(ckpt.params.max_iter),
-            history: ckpt.history.clone(),
+            history,
             iter: ckpt.iter,
         })
     }
@@ -146,7 +149,7 @@ impl Run for SerialRun<'_> {
             // Step 5: global best — *inside* the particle loop.
             if self.objective.better(self.state.pbest_fit[i], self.gbest_fit) {
                 self.gbest_fit = self.state.pbest_fit[i];
-                self.gbest_pos = self.state.pbest_of(i);
+                self.state.pbest_into(i, &mut self.gbest_pos);
                 self.counters.gbest_updates += 1;
             }
         }
@@ -197,6 +200,25 @@ impl Run for SerialRun<'_> {
             history: self.history.clone(),
             counters: self.counters.clone(),
             swarm: self.state.clone(),
+        }
+    }
+
+    fn into_checkpoint(self: Box<Self>) -> RunCheckpoint {
+        // Suspension path: swarm, gbest position and history are MOVED,
+        // never deep-copied (rust/tests/zero_alloc.rs pins this).
+        let this = *self;
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::SerialCpu,
+            objective: this.objective,
+            seed: this.seed,
+            iter: this.iter,
+            gbest_fit: this.gbest_fit,
+            gbest_pos: this.gbest_pos,
+            history: this.history,
+            counters: this.counters,
+            params: this.params,
+            swarm: this.state,
         }
     }
 }

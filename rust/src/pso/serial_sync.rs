@@ -85,7 +85,7 @@ impl<'a> SyncSerialRun<'a> {
             gbest_pos,
             counters: super::Counters::default(),
             stride: history_stride(params.max_iter),
-            history: Vec::with_capacity(super::HISTORY_SAMPLES as usize + 1),
+            history: Vec::with_capacity(super::history_capacity(params.max_iter)),
             iter: 0,
         }
     }
@@ -94,6 +94,9 @@ impl<'a> SyncSerialRun<'a> {
     /// like the serial reference.
     pub fn restore(ckpt: &RunCheckpoint, fitness: &'a dyn Fitness) -> Result<Self> {
         restore_guard(ckpt, RunKind::SerialSync)?;
+        let mut history = ckpt.history.clone();
+        history
+            .reserve(super::history_capacity(ckpt.params.max_iter).saturating_sub(history.len()));
         Ok(Self {
             params: ckpt.params.clone(),
             fitness,
@@ -105,7 +108,7 @@ impl<'a> SyncSerialRun<'a> {
             gbest_pos: ckpt.gbest_pos.clone(),
             counters: ckpt.counters.clone(),
             stride: history_stride(ckpt.params.max_iter),
-            history: ckpt.history.clone(),
+            history,
             iter: ckpt.iter,
         })
     }
@@ -173,7 +176,7 @@ impl Run for SyncSerialRun<'_> {
             self.gbest_fit = iter_best_fit;
             // The winning particle just improved its pbest, so pos ==
             // pbest_pos for it; read pos for symmetry with the kernels.
-            self.gbest_pos = self.state.position_of(iter_best_idx);
+            self.state.position_into(iter_best_idx, &mut self.gbest_pos);
             self.counters.gbest_updates += 1;
         }
         self.iter += 1;
@@ -222,6 +225,25 @@ impl Run for SyncSerialRun<'_> {
             history: self.history.clone(),
             counters: self.counters.clone(),
             swarm: self.state.clone(),
+        }
+    }
+
+    fn into_checkpoint(self: Box<Self>) -> RunCheckpoint {
+        // Suspension path: swarm, gbest position and history are MOVED,
+        // never deep-copied (rust/tests/zero_alloc.rs pins this).
+        let this = *self;
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::SerialSync,
+            objective: this.objective,
+            seed: this.seed,
+            iter: this.iter,
+            gbest_fit: this.gbest_fit,
+            gbest_pos: this.gbest_pos,
+            history: this.history,
+            counters: this.counters,
+            params: this.params,
+            swarm: this.state,
         }
     }
 }

@@ -86,14 +86,37 @@ impl SwarmState {
 
     /// Copy particle `i`'s position out (length-dim row gather).
     pub fn position_of(&self, i: usize) -> Vec<f64> {
-        (0..self.dim).map(|d| self.pos[d * self.n + i]).collect()
+        let mut out = vec![0.0; self.dim];
+        self.position_into(i, &mut out);
+        out
+    }
+
+    /// Gather particle `i`'s position into `out` (length = dim) without
+    /// allocating — the hot-path form of [`position_of`](Self::position_of)
+    /// used by the engines' global-best updates.
+    #[inline]
+    pub fn position_into(&self, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (d, slot) in out.iter_mut().enumerate() {
+            *slot = self.pos[d * self.n + i];
+        }
     }
 
     /// Copy particle `i`'s pbest position out.
     pub fn pbest_of(&self, i: usize) -> Vec<f64> {
-        (0..self.dim)
-            .map(|d| self.pbest_pos[d * self.n + i])
-            .collect()
+        let mut out = vec![0.0; self.dim];
+        self.pbest_into(i, &mut out);
+        out
+    }
+
+    /// Gather particle `i`'s pbest position into `out` (length = dim)
+    /// without allocating.
+    #[inline]
+    pub fn pbest_into(&self, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (d, slot) in out.iter_mut().enumerate() {
+            *slot = self.pbest_pos[d * self.n + i];
+        }
     }
 
     /// Invariant check used by property tests: all positions and

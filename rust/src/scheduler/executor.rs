@@ -1,0 +1,314 @@
+//! Persistent per-stream executor threads — the scheduler's answer to its
+//! own "launch overhead".
+//!
+//! Before this module the scheduler stepped a concurrent round by
+//! spawning and joining S−1 scoped OS threads *per scheduling round*: at
+//! `batch_steps = 1` a 100k-iteration batch paid ~100k thread spawns per
+//! stream — exactly the dispatch/join fixed cost the paper measures one
+//! level down in [`crate::exec::GridPool::launch`]. An executor makes the
+//! round a **publish + wake** instead: one long-lived thread per extra
+//! stream parks on a command slot, the scheduler writes `(run, k)` into
+//! the slot and bumps a generation counter, and the executor echoes the
+//! generation when the batch of steps is done.
+//!
+//! ## Handoff protocol (single producer, single consumer per slot)
+//!
+//! This reuses the spin-then-park discipline of [`crate::exec::pool`],
+//! simplified because each slot has exactly one producer (the scheduling
+//! thread) and one consumer (its executor):
+//!
+//! * the producer writes the command slot only while `done == gen` (the
+//!   previous round fully echoed), then bumps `gen` (Release) and
+//!   notifies the condvar;
+//! * the executor spins briefly for a new generation, parks on the
+//!   condvar after its spin budget, and on wake re-loads `gen` (Acquire)
+//!   — ordered after the Release bump, so the slot write is visible;
+//! * the executor runs `run.step_many(k)`, moves the [`StepReport`] into
+//!   its report cell, and stores `done = gen` (Release); the producer
+//!   spin-waits for the echo (Acquire) before touching the run, the
+//!   report, or the slot again.
+//!
+//! The `*mut dyn Run` in the slot is lifetime-erased exactly like the
+//! pool's kernel pointer: it is only ever dereferenced between publish
+//! and echo, and [`StreamExecutors::wait`] must be called for every
+//! submitted slot before the round's borrows end (the scheduler's
+//! `step_round` upholds this; `Drop` shuts the threads down without
+//! touching any command).
+//!
+//! Steady-state cost per round and slot: one slot write, one atomic bump,
+//! one uncontended mutex lock + notify, one spin-wait — and **zero heap
+//! allocations** (`rust/tests/zero_alloc.rs`).
+
+use crate::engine::{Run, StepReport};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Spin budget before parking when cores are plentiful (matches the
+/// pool's discipline).
+const SPIN_ROUNDS_PARALLEL: u32 = 20_000;
+/// Effectively "yield immediately" when the machine is oversubscribed.
+const SPIN_ROUNDS_OVERSUB: u32 = 16;
+
+/// Pick the executor spin budget: spinning only pays when the pool
+/// workers, the helping launchers and the executors all fit on distinct
+/// cores.
+pub(crate) fn spin_budget(total_threads: usize) -> u32 {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cores >= total_threads {
+        SPIN_ROUNDS_PARALLEL
+    } else {
+        SPIN_ROUNDS_OVERSUB
+    }
+}
+
+/// Type-erased stepping command; the raw run pointer is valid exactly
+/// while its round is in flight (publish → echo).
+#[derive(Clone, Copy)]
+struct Cmd {
+    run: *mut (dyn Run + 'static),
+    k: u64,
+}
+
+// SAFETY: the pointee is only dereferenced inside the publish→echo window
+// (module docs), during which the producer relinquishes the borrow.
+unsafe impl Send for Cmd {}
+
+struct Slot {
+    /// Command generation: bumped (Release) after the slot is written.
+    gen: AtomicU64,
+    /// Completion echo: the executor stores the finished generation
+    /// (Release) after moving the report out.
+    done: AtomicU64,
+    /// Written by the producer only while `done == gen`.
+    cmd: UnsafeCell<Option<Cmd>>,
+    /// The stepped report, written by the executor before the echo and
+    /// taken by the producer after it.
+    report: UnsafeCell<Option<StepReport>>,
+    /// Set when a command panicked: the echo still arrives (so `wait`
+    /// cannot hang), and `take_report` re-raises on the scheduling
+    /// thread — matching the legacy scoped-thread `join().expect(…)`
+    /// behavior.
+    poisoned: AtomicBool,
+    shutdown: AtomicBool,
+    idle: Mutex<()>,
+    cv: Condvar,
+    spin_rounds: u32,
+}
+
+// SAFETY: `cmd` and `report` are guarded by the gen/done protocol in the
+// module docs; everything else is atomic or a sync primitive.
+unsafe impl Send for Slot {}
+unsafe impl Sync for Slot {}
+
+/// A fixed set of persistent executor threads, one command slot each.
+pub(crate) struct StreamExecutors {
+    slots: Vec<Arc<Slot>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl StreamExecutors {
+    /// Spawn `count` executors (the scheduler sizes this to the extra
+    /// concurrent jobs a round can hold: `min(streams, jobs) - 1`).
+    pub fn new(count: usize, spin_rounds: u32) -> Self {
+        let slots: Vec<Arc<Slot>> = (0..count)
+            .map(|_| {
+                Arc::new(Slot {
+                    gen: AtomicU64::new(0),
+                    done: AtomicU64::new(0),
+                    cmd: UnsafeCell::new(None),
+                    report: UnsafeCell::new(None),
+                    poisoned: AtomicBool::new(false),
+                    shutdown: AtomicBool::new(false),
+                    idle: Mutex::new(()),
+                    cv: Condvar::new(),
+                    spin_rounds,
+                })
+            })
+            .collect();
+        let handles = slots
+            .iter()
+            .enumerate()
+            .map(|(e, slot)| {
+                let slot = slot.clone();
+                std::thread::Builder::new()
+                    .name(format!("cupso-exec-{e}"))
+                    .spawn(move || executor_loop(&slot))
+                    .expect("spawn stream executor")
+            })
+            .collect();
+        Self { slots, handles }
+    }
+
+    /// Publish `(run, k)` to executor `e` and wake it. The executor will
+    /// run `run.step_many(k)` and park the report for [`take_report`].
+    ///
+    /// # Safety
+    /// The caller must call [`wait`](Self::wait)`(e)` before `run`'s
+    /// borrow ends or the run is touched again, and must not submit to
+    /// `e` again before that wait. One round must submit each run to at
+    /// most one executor.
+    pub unsafe fn submit(&self, e: usize, run: &mut (dyn Run + '_), k: u64) {
+        let slot = &*self.slots[e];
+        debug_assert_eq!(
+            slot.done.load(Ordering::SeqCst),
+            slot.gen.load(Ordering::SeqCst),
+            "submit while a command is still in flight"
+        );
+        // Erase the run's borrow lifetime: sound because wait(e) happens
+        // before the borrow ends (the safety contract above).
+        let ptr: *mut (dyn Run + '_) = run;
+        let run: *mut (dyn Run + 'static) =
+            std::mem::transmute::<*mut (dyn Run + '_), *mut (dyn Run + 'static)>(ptr);
+        // Slot write is safe per the handoff protocol: `done == gen`
+        // (asserted above), so the executor is not reading the cell.
+        *slot.cmd.get() = Some(Cmd { run, k });
+        slot.gen.fetch_add(1, Ordering::Release);
+        let _idle = slot.idle.lock().unwrap();
+        slot.cv.notify_one();
+    }
+
+    /// Block until executor `e` echoed its latest submitted command.
+    pub fn wait(&self, e: usize) {
+        let slot = &*self.slots[e];
+        let target = slot.gen.load(Ordering::Relaxed);
+        let mut spins = 0u32;
+        while slot.done.load(Ordering::Acquire) != target {
+            spins += 1;
+            if spins < slot.spin_rounds {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    /// Move executor `e`'s report out (valid after [`wait`](Self::wait)).
+    /// Panics if the command panicked on the executor thread, exactly as
+    /// the legacy scoped-thread join did.
+    pub fn take_report(&self, e: usize) -> StepReport {
+        let slot = &*self.slots[e];
+        debug_assert_eq!(
+            slot.done.load(Ordering::SeqCst),
+            slot.gen.load(Ordering::SeqCst)
+        );
+        if slot.poisoned.load(Ordering::Acquire) {
+            panic!("stepping executor panicked");
+        }
+        // SAFETY: the echo ordered the executor's write before this read,
+        // and the executor will not touch the cell again until the next
+        // submit.
+        unsafe { (*slot.report.get()).take() }.expect("executor echoed without a report")
+    }
+}
+
+impl Drop for StreamExecutors {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            slot.shutdown.store(true, Ordering::SeqCst);
+            let _idle = slot.idle.lock().unwrap();
+            slot.cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(slot: &Slot) {
+    let mut seen = 0u64;
+    loop {
+        // Spin for a new generation; park after the spin budget.
+        let mut spins = 0u32;
+        loop {
+            if slot.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            if slot.gen.load(Ordering::Acquire) != seen {
+                break;
+            }
+            spins += 1;
+            if spins >= slot.spin_rounds {
+                let mut idle = slot.idle.lock().unwrap();
+                while !slot.shutdown.load(Ordering::SeqCst)
+                    && slot.gen.load(Ordering::Acquire) == seen
+                {
+                    idle = slot.cv.wait(idle).unwrap();
+                }
+                break;
+            }
+            std::hint::spin_loop();
+        }
+        if slot.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let g = slot.gen.load(Ordering::Acquire);
+        // SAFETY: the slot for `g` was fully published before the Release
+        // bump this Acquire load observed, and the producer cannot
+        // rewrite it until we echo `done = g`.
+        if let Some(cmd) = unsafe { *slot.cmd.get() } {
+            // A panicking step must still echo, or the producer's `wait`
+            // would spin forever; the poison flag re-raises the panic on
+            // the scheduling thread at `take_report`.
+            let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // SAFETY: the producer holds the run exclusively for us
+                // until the echo (the submit safety contract).
+                let run = unsafe { &mut *cmd.run };
+                run.step_many(cmd.k)
+            }));
+            match stepped {
+                Ok(report) => unsafe { *slot.report.get() = Some(report) },
+                Err(_) => slot.poisoned.store(true, Ordering::Release),
+            }
+        }
+        seen = g;
+        slot.done.store(g, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::engine::{self, Engine, ParallelSettings};
+    use crate::fitness::{Cubic, Objective};
+    use crate::pso::PsoParams;
+
+    #[test]
+    fn executors_step_runs_identically_to_inline_stepping() {
+        let params = PsoParams::paper_1d(128, 24);
+        let settings = ParallelSettings::with_workers(2);
+        let mut reference = engine::build_with(EngineKind::Queue, settings.clone()).unwrap();
+        let mut r = reference.prepare(&params, &Cubic, Objective::Maximize, 3);
+        while !r.step_many(4).done {}
+        let expect = r.finish();
+
+        let mut e = engine::build_with(EngineKind::Queue, settings).unwrap();
+        let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 3);
+        let execs = StreamExecutors::new(1, spin_budget(8));
+        loop {
+            // SAFETY: wait(0) below precedes every further use of `run`.
+            unsafe { execs.submit(0, &mut *run, 4) };
+            execs.wait(0);
+            if execs.take_report(0).done {
+                break;
+            }
+        }
+        let out = run.finish();
+        assert_eq!(out.gbest_fit, expect.gbest_fit);
+        assert_eq!(out.history, expect.history);
+        assert_eq!(out.iters, expect.iters);
+    }
+
+    #[test]
+    fn executors_shut_down_cleanly_when_idle_or_mid_park() {
+        // Dropping without ever submitting must join promptly (threads are
+        // parked on the condvar by then).
+        let execs = StreamExecutors::new(3, 4);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        drop(execs);
+    }
+}

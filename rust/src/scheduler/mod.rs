@@ -14,15 +14,28 @@
 //! runs in concurrent mode: each job is pinned to pool stream
 //! `job_index % S` at prepare time, and every scheduling round picks up
 //! to `S` live jobs — under the same policy, no two sharing a stream —
-//! and steps them in parallel, one stepping thread per job. This lifts
-//! the paper's Algorithm-3 asynchrony idea from intra-run (thread groups
-//! vs the barrier) to cross-job (grids vs the launch guard): N tenants no
-//! longer serialize on one grid-in-flight. [`JobScheduler::batch_steps`]
-//! additionally batches `k` iterations per scheduling round through
+//! and steps them in parallel. This lifts the paper's Algorithm-3
+//! asynchrony idea from intra-run (thread groups vs the barrier) to
+//! cross-job (grids vs the launch guard): N tenants no longer serialize
+//! on one grid-in-flight. [`JobScheduler::batch_steps`] additionally
+//! batches `k` iterations per scheduling round through
 //! [`Run::step_many`], amortizing per-step dispatch overhead at the cost
 //! of batch-granular telemetry and termination checks (the explicit
 //! `max_iter` step cap is still honored exactly — batches are clamped to
 //! it).
+//!
+//! **Persistent executors & the allocation-free steady state.** A
+//! concurrent round is stepped by S−1 long-lived per-stream executor
+//! threads (`executor`-module docs) that receive `(run, k)` commands
+//! over command slots with the pool's spin-then-park discipline — a
+//! round is a publish + wake, not a spawn + join, removing the
+//! scheduler-level "launch overhead" (`benches/scheduler_latency.rs`
+//! measures the difference against the legacy
+//! [`JobScheduler::spawn_per_round`] path, which is kept as the
+//! baseline). All round bookkeeping lives in buffers allocated once per
+//! session, so a warmed-up scheduling round performs **zero heap
+//! allocations** when nothing improves and nothing is preempted
+//! (`rust/tests/zero_alloc.rs`).
 //!
 //! **Determinism.** Because a `Run` owns its whole mutable state and a
 //! grid launch never spans runs, a job's trajectory is bit-identical
@@ -56,6 +69,8 @@
 //! bounded per-step latency — both fall out of step-wise runs plus this
 //! scheduler.
 
+mod executor;
+
 use crate::checkpoint::{JobCheckpoint, RunCheckpoint};
 use crate::config::{EngineKind, JobConfig};
 use crate::engine::{self, ParallelSettings, Run, StepReport};
@@ -63,6 +78,7 @@ use crate::exec::GridPool;
 use crate::fitness::{by_name, Fitness, Objective};
 use crate::pso::{PsoParams, RunOutput};
 use anyhow::{bail, Context, Result};
+use executor::{spin_budget, StreamExecutors};
 use std::sync::Arc;
 
 /// When to stop a job before its `params.max_iter` budget.
@@ -186,8 +202,10 @@ impl std::fmt::Display for StopReason {
 
 /// One tenant job: engine kind, workload, seed, and stop bounds.
 pub struct JobSpec {
-    /// Display name (batch-config section name).
-    pub name: String,
+    /// Display name (batch-config section name). Interned (`Arc<str>`) so
+    /// telemetry, outcomes and checkpoint snapshots share one allocation
+    /// instead of cloning the string per round/persist.
+    pub name: Arc<str>,
     /// Plane-A engine kind driving this job.
     pub engine: EngineKind,
     /// The workload.
@@ -216,7 +234,7 @@ impl JobSpec {
         seed: u64,
     ) -> Self {
         Self {
-            name: name.to_string(),
+            name: Arc::from(name),
             engine,
             params,
             fitness,
@@ -247,7 +265,7 @@ impl JobSpec {
             cfg.vmax_frac,
         );
         Ok(Self {
-            name: cfg.name.clone(),
+            name: cfg.name.as_str().into(),
             engine: cfg.engine,
             params,
             fitness: Arc::from(fitness),
@@ -321,8 +339,8 @@ pub struct JobReport<'a> {
 /// Final result of one scheduled job.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
-    /// Job name.
-    pub name: String,
+    /// Job name (shared with the spec's interned name).
+    pub name: Arc<str>,
     /// Engine kind that ran it.
     pub engine: EngineKind,
     /// Why it stopped.
@@ -351,13 +369,18 @@ pub struct JobScheduler {
     batch_steps: u64,
     /// Preemption quantum in steps (`None` = cooperative scheduling).
     preempt_quantum: Option<u64>,
+    /// Step concurrent rounds with per-round scoped threads instead of
+    /// the persistent executors (the legacy baseline; see
+    /// [`JobScheduler::spawn_per_round`]).
+    spawn_per_round: bool,
 }
 
 struct LiveJob<'a> {
     /// The live run — `None` while the job is suspended to `parked`.
     run: Option<Box<dyn Run + 'a>>,
-    /// The suspension checkpoint of an inactive job.
-    parked: Option<RunCheckpoint>,
+    /// The suspension checkpoint of an inactive job (shared, so snapshot
+    /// persistence never deep-copies a parked swarm).
+    parked: Option<Arc<RunCheckpoint>>,
     steps: u64,
     stalled: u64,
     stop: Option<StopReason>,
@@ -381,6 +404,7 @@ impl JobScheduler {
             policy: SchedPolicy::RoundRobin,
             batch_steps: 1,
             preempt_quantum: None,
+            spawn_per_round: false,
         }
     }
 
@@ -420,6 +444,17 @@ impl JobScheduler {
     /// quantum — preemption only changes *where and when* work happens.
     pub fn preempt_quantum(mut self, quantum: u64) -> Self {
         self.preempt_quantum = (quantum > 0).then_some(quantum);
+        self
+    }
+
+    /// Step concurrent rounds by spawning one scoped OS thread per extra
+    /// job per round (the pre-executor behavior) instead of publishing to
+    /// the persistent stream executors. The two paths are bit-identical
+    /// for every engine (`rust/tests/scheduler_determinism.rs`); this
+    /// knob exists so `benches/scheduler_latency.rs` can measure the
+    /// per-round fixed cost the executors remove. Off by default.
+    pub fn spawn_per_round(mut self, enabled: bool) -> Self {
+        self.spawn_per_round = enabled;
         self
     }
 
@@ -473,8 +508,36 @@ impl JobScheduler {
         specs: &[JobSpec],
         resume: Option<&[JobCheckpoint]>,
         max_rounds: Option<u64>,
-        mut telemetry: F,
+        telemetry: F,
     ) -> Result<BatchRun> {
+        self.run_session_with(specs, resume, max_rounds, None, |_| Ok(()), telemetry)
+    }
+
+    /// [`run_session`](Self::run_session) plus an **in-place periodic
+    /// persistence hook**: every `persist_every` rounds the session hands
+    /// a full batch snapshot (same shape as [`BatchRun::Suspended`]) to
+    /// `persist` and *keeps running* — the run buffers stay live, nothing
+    /// is suspended or reallocated, and the relaxed engines'
+    /// interleavings are not perturbed. This is what
+    /// `cupso batch --checkpoint-dir --checkpoint-every` uses; the old
+    /// behavior (suspend the whole batch per period, then resume it) paid
+    /// a full teardown + restore per checkpoint.
+    ///
+    /// A `persist` error aborts the session (the batch state is lost to
+    /// this process but the last persisted snapshot survives on disk).
+    pub fn run_session_with<F, P>(
+        &self,
+        specs: &[JobSpec],
+        resume: Option<&[JobCheckpoint]>,
+        max_rounds: Option<u64>,
+        persist_every: Option<u64>,
+        mut persist: P,
+        mut telemetry: F,
+    ) -> Result<BatchRun>
+    where
+        F: FnMut(&JobReport<'_>),
+        P: FnMut(&[JobCheckpoint]) -> Result<()>,
+    {
         let streams = self.settings.pool.streams();
         let mut live: Vec<LiveJob<'_>> = Vec::with_capacity(specs.len());
         let mut finished = 0usize;
@@ -547,9 +610,11 @@ impl JobScheduler {
                     if stop.is_some() {
                         finished += 1;
                     }
+                    // Arc clone: resuming shares the caller's checkpoint
+                    // instead of deep-copying the swarm arrays.
                     live.push(LiveJob {
                         run: None,
-                        parked: Some(ckpt.run.clone()),
+                        parked: Some(Arc::clone(&ckpt.run)),
                         steps: ckpt.run.iter,
                         stalled: ckpt.stalled,
                         stop,
@@ -561,19 +626,30 @@ impl JobScheduler {
             }
         }
 
+        // Round state and executors are allocated once per session: the
+        // steady-state loop below is allocation-free per round
+        // (rust/tests/zero_alloc.rs pins this for the bit-exact engines).
+        let mut rs = RoundState::new(streams, live.len());
+        let executors = (!self.spawn_per_round && streams > 1 && live.len() > 1).then(|| {
+            let count = streams.min(live.len()) - 1;
+            let total = self.settings.pool.workers() + streams + count;
+            StreamExecutors::new(count, spin_budget(total))
+        });
+
         let mut rounds = 0u64;
         while finished < live.len() {
             if max_rounds.is_some_and(|cap| rounds >= cap) {
                 return Ok(BatchRun::Suspended(snapshot(specs, &live)));
             }
             rounds += 1;
-            let picked = match self.policy {
-                SchedPolicy::RoundRobin => pick_round_robin(&live, streams),
-                SchedPolicy::EarliestDeadlineFirst => pick_edf(&live, streams),
+            match self.policy {
+                SchedPolicy::RoundRobin => pick_round_robin(&live, streams, &mut rs),
+                SchedPolicy::EarliestDeadlineFirst => pick_edf(&live, streams, &mut rs),
             };
-            debug_assert!(!picked.is_empty(), "unfinished job exists");
-            let stepped = self.step_round(&mut live, specs, &picked)?;
-            for (idx, report) in stepped {
+            debug_assert!(!rs.picked.is_empty(), "unfinished job exists");
+            self.step_round(&mut live, specs, executors.as_ref(), &mut rs)?;
+            for (idx, report) in rs.reports.iter() {
+                let idx = *idx;
                 let job = &mut live[idx];
                 let spec = &specs[idx];
                 let executed = report.iter - job.steps;
@@ -606,20 +682,30 @@ impl JobScheduler {
             }
             // Preemption: once a picked job has spent its quantum and the
             // live set still outnumbers the streams, suspend it — its
-            // buffers collapse to a checkpoint and its stream frees up for
-            // a neighbour next round.
+            // buffers are MOVED into a checkpoint (no deep copy) and its
+            // stream frees up for a neighbour next round.
             if let Some(quantum) = self.preempt_quantum {
                 let unfinished = live.iter().filter(|j| j.stop.is_none()).count();
                 if unfinished > streams {
-                    for &(idx, _) in &picked {
+                    for &(idx, _) in &rs.picked {
                         let job = &mut live[idx];
                         if job.stop.is_none() && job.active_steps >= quantum {
                             if let Some(run) = job.run.take() {
-                                job.parked = Some(run.checkpoint());
+                                job.parked = Some(Arc::new(run.into_checkpoint()));
                             }
                         }
                     }
                 }
+            }
+            // Skip the hook when the next iteration will suspend anyway:
+            // the suspension snapshot captures the identical state, and a
+            // back-to-back duplicate would waste a retention slot.
+            let suspending_next = max_rounds.is_some_and(|cap| rounds >= cap);
+            if persist_every.is_some_and(|n| rounds % n == 0)
+                && finished < live.len()
+                && !suspending_next
+            {
+                persist(&snapshot(specs, &live))?;
             }
         }
 
@@ -652,14 +738,21 @@ impl JobScheduler {
     /// launches go to its assigned pool stream, so the grids genuinely
     /// overlap. Suspended picks are restored first, onto the stream the
     /// round assigned them (migration when it differs from their last
-    /// pinning). Returns `(index, report)` pairs sorted by job index.
+    /// pinning). Leaves `(index, report)` pairs sorted by job index in
+    /// `rs.reports`.
+    ///
+    /// Concurrent rounds default to the persistent executors (publish +
+    /// wake per extra job); `executors` is `None` in spawn-per-round mode,
+    /// which falls back to one scoped OS thread per extra job — the
+    /// legacy baseline `benches/scheduler_latency.rs` measures against.
     fn step_round(
         &self,
         live: &mut [LiveJob<'_>],
         specs: &[JobSpec],
-        picked: &[(usize, usize)],
-    ) -> Result<Vec<(usize, StepReport)>> {
-        for &(idx, stream) in picked {
+        executors: Option<&StreamExecutors>,
+        rs: &mut RoundState,
+    ) -> Result<()> {
+        for &(idx, stream) in &rs.picked {
             if live[idx].run.is_none() {
                 let ckpt = live[idx].parked.take().expect("parked job has a checkpoint");
                 let fitness: &dyn Fitness = &*specs[idx].fitness;
@@ -671,50 +764,116 @@ impl JobScheduler {
                 live[idx].active_steps = 0;
             }
         }
-        if let [(idx, _)] = *picked {
+        rs.reports.clear();
+        if let [(idx, _)] = *rs.picked {
             // Serialized fast path (always taken on a single-stream
             // pool): no stepping threads, identical to the pre-stream
             // scheduler loop.
             let k = effective_batch(self.batch_steps, &specs[idx].termination, live[idx].steps);
             let run = live[idx].run.as_mut().expect("picked job is active");
-            return Ok(vec![(idx, run.step_many(k))]);
+            rs.reports.push((idx, run.step_many(k)));
+            return Ok(());
         }
-        let tasks: Vec<(usize, u64, &mut LiveJob<'_>)> = live
-            .iter_mut()
-            .enumerate()
-            .filter(|(i, _)| picked.iter().any(|&(p, _)| p == *i))
-            .map(|(i, job)| {
+        if let Some(execs) = executors {
+            // Persistent-executor path: publish every pick but the first
+            // to an executor slot, step the first inline on the
+            // scheduling thread, then collect the echoes — no spawn, no
+            // join, no allocation.
+            rs.inflight.clear();
+            let mut first: Option<(usize, u64, &mut Box<dyn Run + '_>)> = None;
+            for (i, job) in live.iter_mut().enumerate() {
+                if !rs.picked.iter().any(|&(p, _)| p == i) {
+                    continue;
+                }
                 let k = effective_batch(self.batch_steps, &specs[i].termination, job.steps);
-                (i, k, job)
-            })
-            .collect();
-        let mut stepped = std::thread::scope(|scope| {
-            let mut it = tasks.into_iter();
-            let (i0, k0, job0) = it.next().expect("non-empty round");
-            let handles: Vec<_> = it
-                .map(|(i, k, job)| {
-                    scope.spawn(move || {
-                        let run = job.run.as_mut().expect("picked job is active");
-                        (i, run.step_many(k))
-                    })
+                let run = job.run.as_mut().expect("picked job is active");
+                if first.is_none() {
+                    first = Some((i, k, run));
+                } else {
+                    let e = rs.inflight.len();
+                    // SAFETY: every submitted slot is waited on below,
+                    // before the runs are touched again and before this
+                    // function returns; each run goes to one slot.
+                    unsafe { execs.submit(e, &mut **run, k) };
+                    rs.inflight.push(i);
+                }
+            }
+            let (i0, k0, run0) = first.expect("non-empty round");
+            rs.reports.push((i0, run0.step_many(k0)));
+            for (e, &i) in rs.inflight.iter().enumerate() {
+                execs.wait(e);
+                rs.reports.push((i, execs.take_report(e)));
+            }
+        } else {
+            // Legacy spawn-per-round path: S − 1 scoped threads per round.
+            let tasks: Vec<(usize, u64, &mut LiveJob<'_>)> = live
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| rs.picked.iter().any(|&(p, _)| p == *i))
+                .map(|(i, job)| {
+                    let k = effective_batch(self.batch_steps, &specs[i].termination, job.steps);
+                    (i, k, job)
                 })
                 .collect();
-            // The scheduling thread steps the first job itself: a round of
-            // S jobs costs S − 1 spawns.
-            let run0 = job0.run.as_mut().expect("picked job is active");
-            let mut out = vec![(i0, run0.step_many(k0))];
-            for h in handles {
-                out.push(h.join().expect("stepping thread panicked"));
-            }
-            out
-        });
-        stepped.sort_unstable_by_key(|&(i, _)| i);
-        Ok(stepped)
+            let stepped = std::thread::scope(|scope| {
+                let mut it = tasks.into_iter();
+                let (i0, k0, job0) = it.next().expect("non-empty round");
+                let handles: Vec<_> = it
+                    .map(|(i, k, job)| {
+                        scope.spawn(move || {
+                            let run = job.run.as_mut().expect("picked job is active");
+                            (i, run.step_many(k))
+                        })
+                    })
+                    .collect();
+                // The scheduling thread steps the first job itself: a
+                // round of S jobs costs S − 1 spawns.
+                let run0 = job0.run.as_mut().expect("picked job is active");
+                let mut out = vec![(i0, run0.step_many(k0))];
+                for h in handles {
+                    out.push(h.join().expect("stepping thread panicked"));
+                }
+                out
+            });
+            rs.reports.extend(stepped);
+        }
+        rs.reports.sort_unstable_by_key(|&(i, _)| i);
+        Ok(())
+    }
+}
+
+/// Reusable per-session scheduling buffers, allocated once so the
+/// steady-state loop performs zero heap allocations per round.
+struct RoundState {
+    /// Policy-ordering scratch (live job indices).
+    order: Vec<usize>,
+    /// Streams taken this round.
+    used: Vec<bool>,
+    /// The round's picks: `(job index, stream)`.
+    picked: Vec<(usize, usize)>,
+    /// Job index per submitted executor slot, in submission order.
+    inflight: Vec<usize>,
+    /// The round's step reports, sorted by job index before delivery.
+    reports: Vec<(usize, StepReport)>,
+}
+
+impl RoundState {
+    fn new(streams: usize, jobs: usize) -> Self {
+        let width = streams.min(jobs.max(1));
+        Self {
+            order: Vec::with_capacity(jobs),
+            used: vec![false; streams],
+            picked: Vec::with_capacity(width),
+            inflight: Vec::with_capacity(width),
+            reports: Vec::with_capacity(width),
+        }
     }
 }
 
 /// One [`JobCheckpoint`] per job, in spec order — active jobs checkpoint
-/// their live runs, suspended jobs reuse their parked state.
+/// their live runs (a copy is unavoidable: the run keeps stepping), while
+/// suspended jobs share their parked checkpoint via `Arc` instead of
+/// deep-copying it.
 fn snapshot(specs: &[JobSpec], live: &[LiveJob<'_>]) -> Vec<JobCheckpoint> {
     live.iter()
         .zip(specs)
@@ -728,8 +887,8 @@ fn snapshot(specs: &[JobSpec], live: &[LiveJob<'_>]) -> Vec<JobCheckpoint> {
             max_steps: spec.termination.max_iter,
             deadline: spec.deadline,
             run: match &job.run {
-                Some(run) => run.checkpoint(),
-                None => job.parked.clone().expect("inactive job holds its checkpoint"),
+                Some(run) => Arc::new(run.checkpoint()),
+                None => Arc::clone(job.parked.as_ref().expect("inactive job holds its checkpoint")),
             },
         })
         .collect()
@@ -753,60 +912,61 @@ fn effective_batch(batch: u64, termination: &TerminationCriteria, steps_done: u6
 /// lowest index is the next cyclic pick), while under stream conflicts
 /// the lagging job of a contended stream always outranks its
 /// stream-mates, so nobody starves.
-fn pick_round_robin(live: &[LiveJob<'_>], streams: usize) -> Vec<(usize, usize)> {
-    let mut order: Vec<usize> = (0..live.len())
-        .filter(|&i| live[i].stop.is_none())
-        .collect();
-    order.sort_unstable_by_key(|&i| (live[i].steps, i));
-    assign_streams(live, order, streams)
+fn pick_round_robin(live: &[LiveJob<'_>], streams: usize, rs: &mut RoundState) {
+    rs.order.clear();
+    rs.order
+        .extend((0..live.len()).filter(|&i| live[i].stop.is_none()));
+    rs.order.sort_unstable_by_key(|&i| (live[i].steps, i));
+    assign_streams(live, streams, rs);
 }
 
 /// Up to `streams` live jobs by ascending deadline slack (`deadline -
 /// steps`; jobs without a deadline rank last, ties break on job index so
 /// scheduling is fully deterministic), no two sharing a pool stream.
-fn pick_edf(live: &[LiveJob<'_>], streams: usize) -> Vec<(usize, usize)> {
-    let mut order: Vec<usize> = (0..live.len())
-        .filter(|&i| live[i].stop.is_none())
-        .collect();
-    order.sort_unstable_by_key(|&i| {
+fn pick_edf(live: &[LiveJob<'_>], streams: usize, rs: &mut RoundState) {
+    rs.order.clear();
+    rs.order
+        .extend((0..live.len()).filter(|&i| live[i].stop.is_none()));
+    rs.order.sort_unstable_by_key(|&i| {
         let slack = live[i]
             .deadline
             .map(|d| d.saturating_sub(live[i].steps))
             .unwrap_or(u64::MAX);
         (slack, i)
     });
-    assign_streams(live, order, streams)
+    assign_streams(live, streams, rs);
 }
 
-/// Greedily assign the policy-ordered jobs to pairwise-distinct streams
-/// (one grid in flight per stream per round). An active job keeps its
-/// pinning — its buffers already target that stream — and is skipped if
-/// the stream is taken this round; a suspended job has no pinning and
-/// takes the lowest free stream (that restore-time re-pinning is the
-/// migration path). Fully deterministic.
-fn assign_streams(live: &[LiveJob<'_>], order: Vec<usize>, streams: usize) -> Vec<(usize, usize)> {
-    let mut used = vec![false; streams];
-    let mut picked: Vec<(usize, usize)> = Vec::with_capacity(streams);
-    for i in order {
+/// Greedily assign the policy-ordered jobs (`rs.order`) to
+/// pairwise-distinct streams, into `rs.picked` (one grid in flight per
+/// stream per round). An active job keeps its pinning — its buffers
+/// already target that stream — and is skipped if the stream is taken
+/// this round; a suspended job has no pinning and takes the lowest free
+/// stream (that restore-time re-pinning is the migration path). Fully
+/// deterministic, and allocation-free: every buffer lives in
+/// [`RoundState`].
+fn assign_streams(live: &[LiveJob<'_>], streams: usize, rs: &mut RoundState) {
+    rs.used.iter_mut().for_each(|u| *u = false);
+    rs.picked.clear();
+    for &i in &rs.order {
         let stream = if live[i].run.is_some() {
             let s = live[i].stream;
-            if used[s] {
+            if rs.used[s] {
                 continue;
             }
             s
         } else {
-            match used.iter().position(|&u| !u) {
+            match rs.used.iter().position(|&u| !u) {
                 Some(s) => s,
                 None => break,
             }
         };
-        used[stream] = true;
-        picked.push((i, stream));
-        if picked.len() == streams {
+        rs.used[stream] = true;
+        rs.picked.push((i, stream));
+        if rs.picked.len() == streams {
             break;
         }
     }
-    picked
 }
 
 #[cfg(test)]

@@ -467,7 +467,7 @@ fn golden_job_checkpoint() -> JobCheckpoint {
         stall_window: None,
         max_steps: Some(100),
         deadline: Some(50),
-        run: golden_run_checkpoint(),
+        run: std::sync::Arc::new(golden_run_checkpoint()),
     }
 }
 
@@ -518,7 +518,7 @@ fn golden_job_fixture_v1_still_decodes() {
     let bytes = std::fs::read(fixture_dir().join("job_v1.ckpt"))
         .expect("committed fixture rust/tests/fixtures/job_v1.ckpt");
     let job = JobCheckpoint::decode(&bytes).expect("version-1 job fixture must decode forever");
-    assert_eq!(job.name, "golden");
+    assert_eq!(&*job.name, "golden");
     assert_eq!(job.fitness, "cubic");
     assert_eq!(job.stalled, 1);
     assert_eq!(job.stop, None);

@@ -356,6 +356,80 @@ fn batch_periodic_checkpointing_completes_with_identical_results() {
 }
 
 #[test]
+fn batch_checkpoint_keep_rotates_snapshots_and_resume_picks_latest() {
+    // --checkpoint-keep N > 1: periodic snapshots land in numbered
+    // snap_<seq>/ subdirectories, pruned to the latest N, and `cupso
+    // resume <dir>` resolves the newest one — reproducing the
+    // uninterrupted batch exactly.
+    let dir = std::env::temp_dir().join("cupso-cli-ckpt-rotate");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("batch.toml");
+    std::fs::write(&cfg, DETERMINISTIC_BATCH).unwrap();
+    let ckpt_dir = dir.join("snap");
+
+    let (ok, reference) = cupso(&["batch", "--config", cfg.to_str().unwrap()]);
+    assert!(ok, "{reference}");
+    let expected_rows = batch_result_rows(&reference);
+
+    let (ok, text) = cupso(&[
+        "batch",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--checkpoint-dir",
+        ckpt_dir.to_str().unwrap(),
+        "--checkpoint-every",
+        "2",
+        "--checkpoint-keep",
+        "2",
+        "--suspend-after",
+        "6",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("suspended 4 jobs"), "{text}");
+    // Rotated layout: no root manifest, at most 2 snap_* dirs retained
+    // (6 rounds at every=2 plus the suspension snapshot = 4 written).
+    assert!(
+        !ckpt_dir.join("manifest.toml").exists(),
+        "keep > 1 must not write the flat layout"
+    );
+    let snaps: Vec<String> = std::fs::read_dir(&ckpt_dir)
+        .unwrap()
+        .filter_map(|e| e.unwrap().file_name().into_string().ok())
+        .filter(|n| n.starts_with("snap_"))
+        .collect();
+    assert!(
+        !snaps.is_empty() && snaps.len() <= 2,
+        "expected 1..=2 retained snapshots, got {snaps:?}"
+    );
+    for snap in &snaps {
+        assert!(ckpt_dir.join(snap).join("manifest.toml").exists(), "{snap}");
+    }
+
+    let (ok, resumed) = cupso(&["resume", ckpt_dir.to_str().unwrap()]);
+    assert!(ok, "{resumed}");
+    assert_eq!(
+        batch_result_rows(&resumed),
+        expected_rows,
+        "resume from rotated snapshot diverged from the uninterrupted run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batch_rejects_zero_checkpoint_keep() {
+    let (ok, text) = cupso(&[
+        "batch",
+        "--config",
+        "config/batch_demo.toml",
+        "--checkpoint-keep",
+        "0",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("checkpoint-keep"), "{text}");
+}
+
+#[test]
 fn resume_rejects_missing_or_bad_directories() {
     let (ok, text) = cupso(&["resume"]);
     assert!(!ok);

@@ -253,6 +253,52 @@ fn concurrent_streams_match_solo_runs_bit_exactly() {
     }
 }
 
+/// ISSUE 4 determinism extension: the persistent-executor stepping path
+/// (the default) and the legacy spawn-per-round path must be
+/// indistinguishable — identical per-job outputs AND an identical
+/// telemetry stream, across stream counts, batch sizes and preemption.
+#[test]
+fn executor_rounds_match_scoped_thread_rounds_bit_exactly() {
+    let mk_specs = || -> Vec<JobSpec> {
+        vec![
+            cubic_spec("e1", EngineKind::Queue, PsoParams::paper_1d(300, 24), 1),
+            cubic_spec("e2", EngineKind::Reduction, PsoParams::paper_1d(257, 30), 2),
+            cubic_spec("e3", EngineKind::LoopUnrolling, PsoParams::paper_120d(64, 16), 3),
+            cubic_spec("e4", EngineKind::SerialCpu, PsoParams::paper_1d(100, 20), 4),
+            cubic_spec("e5", EngineKind::Queue, PsoParams::paper_120d(80, 12), 5),
+        ]
+    };
+    for (streams, batch, quantum) in [(2usize, 1u64, 0u64), (3, 4, 0), (4, 1, 0), (2, 2, 3)] {
+        let run_mode = |spawn: bool| {
+            let mut trace = Vec::new();
+            let outcomes = JobScheduler::with_streams(4, streams)
+                .batch_steps(batch)
+                .preempt_quantum(quantum)
+                .spawn_per_round(spawn)
+                .run_with(&mk_specs(), |r| {
+                    trace.push((r.job, r.iter, r.gbest_fit, r.improved))
+                })
+                .unwrap();
+            (outcomes, trace)
+        };
+        let (exec_outcomes, exec_trace) = run_mode(false);
+        let (spawn_outcomes, spawn_trace) = run_mode(true);
+        assert_eq!(
+            exec_trace, spawn_trace,
+            "telemetry diverged at S={streams} batch={batch} q={quantum}"
+        );
+        for (a, b) in exec_outcomes.iter().zip(&spawn_outcomes) {
+            assert_eq!(a.stop, b.stop, "{}", a.name);
+            assert_eq!(a.steps, b.steps, "{}", a.name);
+            assert_outputs_equal(
+                &a.output,
+                &b.output,
+                &format!("executor-vs-spawn S={streams} batch={batch} q={quantum} {}", a.name),
+            );
+        }
+    }
+}
+
 #[test]
 fn concurrent_telemetry_is_deterministic() {
     // The same concurrent configuration run twice must produce the exact

@@ -1,0 +1,266 @@
+//! Allocation-accounting tier: the scheduler hot path and the suspension
+//! path must not touch the heap where the design says they don't.
+//!
+//! A counting [`GlobalAlloc`] wrapper tallies every allocation in the
+//! process, which proves two invariants of ISSUE 4:
+//!
+//! 1. **Zero-allocation steady state** — a warmed-up `run_session` round
+//!    (no global-best improvement, no preemption) performs ZERO heap
+//!    allocations per step for the bit-exact engines (CPU, Reduction,
+//!    Loop-Unrolling, Queue), on both the single-stream fast path and the
+//!    executor-stepped concurrent path. The workload is a constant
+//!    ("flat") fitness: the seeded global best can never be strictly
+//!    improved, so every step exercises exactly the steady-state code.
+//! 2. **Move-based suspension** — `Run::into_checkpoint` MOVES the swarm
+//!    arrays into the checkpoint; suspending a job must allocate far less
+//!    than one swarm array's worth of bytes (a deep copy would cost
+//!    several arrays).
+//!
+//! The counter is process-global, so every test here serializes on one
+//! mutex; this file must contain only allocation-accounting tests.
+
+use cupso::config::EngineKind;
+use cupso::engine::{self, Engine, Run};
+use cupso::fitness::{Fitness, Objective};
+use cupso::pso::PsoParams;
+use cupso::scheduler::{JobScheduler, JobSpec};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: delegates everything to `System`; only adds relaxed counters.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Serializes the accounting tests (the counters are process-global).
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+fn bytes() -> u64 {
+    BYTES.load(Ordering::SeqCst)
+}
+
+/// A constant fitness: every evaluation is 0.0, so after seeding the
+/// global best can never strictly improve — every subsequent step is pure
+/// steady state. The batch/range entries are overridden to write the
+/// constant without the default implementations' scratch vector.
+struct Flat;
+
+impl Fitness for Flat {
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+
+    fn default_bounds(&self) -> (f64, f64) {
+        (-1.0, 1.0)
+    }
+
+    fn default_objective(&self) -> Objective {
+        Objective::Maximize
+    }
+
+    fn eval(&self, _x: &[f64]) -> f64 {
+        0.0
+    }
+
+    fn eval_batch(&self, _pos: &[f64], _n: usize, _dim: usize, fit: &mut [f64]) {
+        for f in fit.iter_mut() {
+            *f = 0.0;
+        }
+    }
+
+    fn eval_range(
+        &self,
+        _pos: &[f64],
+        _n: usize,
+        _dim: usize,
+        _lo: usize,
+        _hi: usize,
+        fit: &mut [f64],
+    ) {
+        for f in fit.iter_mut() {
+            *f = 0.0;
+        }
+    }
+}
+
+/// The engines held to the zero-allocation steady-state bar.
+const BIT_EXACT: [EngineKind; 4] = [
+    EngineKind::SerialCpu,
+    EngineKind::Reduction,
+    EngineKind::LoopUnrolling,
+    EngineKind::Queue,
+];
+
+fn flat_specs(kind: EngineKind, jobs: usize, iters: u64) -> Vec<JobSpec> {
+    (0..jobs)
+        .map(|j| {
+            JobSpec::new(
+                &format!("flat{j}"),
+                kind,
+                PsoParams::for_fitness(&Flat, 64, 1, iters, 0.5),
+                Arc::new(Flat),
+                Objective::Maximize,
+                j as u64 + 1,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn warmed_up_rounds_allocate_nothing_for_bit_exact_engines() {
+    let _g = LOCK.lock().unwrap();
+    // S=1 exercises the inline fast path; S=2 exercises the persistent
+    // executor path (publish + wake per round).
+    for kind in BIT_EXACT {
+        for streams in [1usize, 2] {
+            let iters = 600u64;
+            let specs = flat_specs(kind, 2, iters);
+            let scheduler = JobScheduler::with_streams(2, streams);
+            // Warm up for 50 telemetry reports (runs, executors, pool and
+            // history buffers all allocated by then), measure across the
+            // next 400, ignore the tail (termination + finish may
+            // allocate legitimately).
+            let (warm, upto) = (50u64, 450u64);
+            let mut calls = 0u64;
+            let mut start = 0u64;
+            let mut end = 0u64;
+            let outcomes = scheduler
+                .run_with(&specs, |_| {
+                    calls += 1;
+                    if calls == warm {
+                        start = allocs();
+                    }
+                    if calls == upto {
+                        end = allocs();
+                    }
+                })
+                .unwrap();
+            assert!(calls >= upto, "{kind:?} S={streams}: too few rounds ({calls})");
+            assert_eq!(
+                end - start,
+                0,
+                "{kind:?} S={streams}: steady-state rounds allocated {} times",
+                end - start
+            );
+            // Sanity: the jobs really ran their budget with no improvement
+            // (constant fitness ⇒ gbest stays at the seeded 0.0).
+            for o in &outcomes {
+                assert_eq!(o.steps, iters);
+                assert_eq!(o.output.gbest_fit, 0.0);
+                assert_eq!(o.output.counters.gbest_updates, 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn suspension_moves_the_swarm_instead_of_deep_copying() {
+    let _g = LOCK.lock().unwrap();
+    // Big swarm: each SoA position/velocity/pbest array is n*dim*8 =
+    // 512 KiB, so a deep copy would show up as ≥ 1.5 MiB. The suspension
+    // path may allocate small things (gbest_pos, checkpoint struct), but
+    // never an array's worth.
+    let (n, dim) = (8192usize, 8usize);
+    let swarm_array_bytes = (n * dim * 8) as u64;
+    for kind in [
+        EngineKind::SerialCpu,
+        EngineKind::Reduction,
+        EngineKind::LoopUnrolling,
+        EngineKind::Queue,
+        EngineKind::QueueLock,
+        EngineKind::AsyncPersistent,
+    ] {
+        let params = PsoParams::for_fitness(&Flat, n, dim, 50, 0.5);
+        let mut eng = engine::build(kind, 2).unwrap();
+        let mut run = eng.prepare(&params, &Flat, Objective::Maximize, 1);
+        run.step();
+        let before = bytes();
+        let ckpt = run.into_checkpoint();
+        let copied = bytes() - before;
+        assert!(
+            copied < swarm_array_bytes,
+            "{kind:?}: into_checkpoint allocated {copied} bytes (≥ one \
+             {swarm_array_bytes}-byte swarm array ⇒ deep copy regression)"
+        );
+        // And it is a real checkpoint: full swarm, correct progress.
+        assert_eq!(ckpt.iter, 1);
+        assert_eq!(ckpt.swarm.pos.len(), n * dim);
+        ckpt.validate().unwrap();
+    }
+}
+
+#[test]
+fn preemptive_suspension_in_the_scheduler_stays_cheap() {
+    let _g = LOCK.lock().unwrap();
+    // Scheduler-level regression: with more jobs than streams and a
+    // 1-step quantum, every round suspends a job. The whole session's
+    // allocation traffic must stay far below "one swarm deep-copy per
+    // suspension" (the old clone-twice behavior).
+    let (n, dim, iters) = (4096usize, 4usize, 12u64);
+    let swarm_array_bytes = (n * dim * 8) as u64;
+    let specs: Vec<JobSpec> = (0..3)
+        .map(|j| {
+            JobSpec::new(
+                &format!("p{j}"),
+                EngineKind::Queue,
+                PsoParams::for_fitness(&Flat, n, dim, iters, 0.5),
+                Arc::new(Flat),
+                Objective::Maximize,
+                j as u64 + 1,
+            )
+        })
+        .collect();
+    let scheduler = JobScheduler::with_streams(2, 1).preempt_quantum(1);
+    let before = bytes();
+    let outcomes = scheduler.run(&specs).unwrap();
+    let total = bytes() - before;
+    for o in &outcomes {
+        assert_eq!(o.steps, iters);
+    }
+    // 3 jobs × 12 steps with quantum 1 ⇒ 36 suspensions and 36 restores.
+    // Each restore legitimately allocates a fresh run (~4.3 swarm-array
+    // units: swarm copy + queues + scratch ≈ 155 units total, plus ~20
+    // for the initial prepares); each suspension must NOT add a swarm
+    // deep-copy on top of the move. A clone-based suspension costs ~3.5
+    // extra units × 36 ≈ +126 units, so a 250-unit budget separates the
+    // two behaviors with ≥ 30% margin on both sides.
+    let budget = 250 * swarm_array_bytes;
+    assert!(
+        total < budget,
+        "preemptive session allocated {total} bytes (budget {budget}; \
+         a deep-copy-per-suspension regression lands well above it)"
+    );
+}
