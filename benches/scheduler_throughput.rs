@@ -20,6 +20,7 @@
 //!
 //! Scale via CUPSO_BENCH_SCALE=ci|paper|smoke (see benchkit).
 
+use cupso::benchkit::json::{BenchJson, JsonObj};
 use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
 use cupso::config::EngineKind;
 use cupso::engine::{self, Engine, ParallelSettings};
@@ -80,6 +81,10 @@ fn main() {
         &["Mode", "time (s)", "jobs/s", "steps/s", "speedup vs seq"],
     );
 
+    // Machine-readable record of the same numbers (BENCH_<name>.json via
+    // CUPSO_BENCH_JSON — CI uploads it next to the latency bench's).
+    let mut doc = BenchJson::new("scheduler_throughput", &cfg);
+
     // --- sequential one-shot baseline (single-stream pool) ---------------
     let settings = ParallelSettings::with_workers(0);
     let job_specs = specs(iters);
@@ -99,6 +104,17 @@ fn main() {
         format!("{:.0}", total_steps / seq_t),
         "1.00x".into(),
     ]);
+    doc.push(
+        JsonObj::new()
+            .str("label", "sequential one-shot")
+            .int("jobs", JOBS as u64)
+            .int("iters", iters)
+            .num("time_s", seq_t)
+            .num("jobs_per_s", JOBS as f64 / seq_t)
+            .num("steps_per_s", total_steps / seq_t)
+            .num("speedup_vs_seq", 1.0)
+            .nums("samples_s", seq.samples()),
+    );
     drop(settings);
 
     // --- scheduler sweep: S streams × step batch, both policies for the
@@ -113,12 +129,24 @@ fn main() {
         });
         let t = s.trimmed_mean();
         table.row(&[
-            label,
+            label.clone(),
             format!("{t:.4}"),
             format!("{:.1}", JOBS as f64 / t),
             format!("{:.0}", total_steps / t),
             format!("{:.2}x", seq_t / t),
         ]);
+        doc.push(
+            JsonObj::new()
+                .str("label", &label)
+                .int("jobs", JOBS as u64)
+                .int("iters", iters)
+                .int("streams", scheduler.streams() as u64)
+                .num("time_s", t)
+                .num("jobs_per_s", JOBS as f64 / t)
+                .num("steps_per_s", total_steps / t)
+                .num("speedup_vs_seq", seq_t / t)
+                .nums("samples_s", s.samples()),
+        );
     };
 
     // Serialized path (S=1, batch=1): must be within noise of PR 1's
@@ -142,6 +170,9 @@ fn main() {
 
     println!("{}", table.to_markdown());
     table.emit(&results_dir(), "scheduler_throughput").unwrap();
+    if let Some(path) = doc.emit().unwrap() {
+        println!("bench JSON → {}", path.display());
+    }
     println!(
         "expectation: serialized scheduler ~1x sequential (prepare-once\n\
          buffers, no per-step allocation); S=4/batch=16 beats S=1 on hosts\n\

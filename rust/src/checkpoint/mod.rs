@@ -43,6 +43,8 @@
 //! `rust/tests/fixtures/` pins the version-1 layout: today's decoder must
 //! keep reading it forever (bump `VERSION` for incompatible changes).
 
+pub mod store;
+
 use crate::config::EngineKind;
 use crate::fitness::Objective;
 use crate::pso::{Counters, PsoParams, SwarmState};

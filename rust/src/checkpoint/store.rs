@@ -1,0 +1,236 @@
+//! Batch-snapshot persistence: the on-disk layout shared by
+//! `cupso batch --checkpoint-dir`, `cupso resume` and the service
+//! daemon's drain-to-snapshot path.
+//!
+//! A snapshot directory holds one `job_<i>.ckpt` per job (the
+//! [`JobCheckpoint`] wire format) plus a `manifest.toml` recording the
+//! scheduler knobs, snapshot source and job count. Two layouts exist:
+//!
+//! * **flat** (`keep == 1`, the default): the directory itself holds the
+//!   manifest and is overwritten in place per persist;
+//! * **rotated** (`keep > 1`): numbered `snap_<seq>/` subdirectories,
+//!   pruned so the latest `keep` survive; [`resolve_snapshot_dir`] picks
+//!   the newest on resume.
+//!
+//! The job list is whatever the session held when the snapshot was
+//! taken — for a drained service that includes every dynamically
+//! admitted job (minus reaped/cancelled ones), which is exactly why the
+//! store lives in the library now: `cupso resume` reconstructs the batch
+//! purely from the snapshot, so a drained service resumes through the
+//! identical path as a suspended batch.
+//!
+//! This module used to live inside the launcher binary; it moved into
+//! the library so the service layer (and tests) can drive it directly.
+
+use super::JobCheckpoint;
+use crate::config::{parse_toml, BatchConfig, TomlValue};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Writes batch snapshots under a checkpoint directory, with retention.
+///
+/// `keep == 1` (the default) overwrites the directory in place — the
+/// layout `cupso resume` has always read. `keep > 1` rotates numbered
+/// `snap_<seq>/` subdirectories, pruning so the latest `keep` survive
+/// (ROADMAP retention item); [`resolve_snapshot_dir`] picks the newest on
+/// resume. One encode buffer is reused across every checkpoint written.
+pub struct SnapshotSink<'a> {
+    dir: &'a Path,
+    cfg: &'a BatchConfig,
+    keep: usize,
+    /// Who wrote the snapshot (`"batch"` | `"serve"`), recorded in the
+    /// manifest for provenance.
+    source: &'static str,
+    seq: u64,
+    buf: Vec<u8>,
+}
+
+impl<'a> SnapshotSink<'a> {
+    /// A sink over `dir` with the given retention and provenance tag.
+    pub fn new(
+        dir: &'a Path,
+        cfg: &'a BatchConfig,
+        keep: usize,
+        source: &'static str,
+    ) -> Result<Self> {
+        // Continue numbering after any snapshots a previous run left.
+        let seq = match list_rotated(dir) {
+            Ok(existing) => existing.last().map_or(0, |&(s, _)| s + 1),
+            Err(_) => 0, // directory does not exist yet
+        };
+        Ok(Self {
+            dir,
+            cfg,
+            keep,
+            source,
+            seq,
+            buf: Vec::new(),
+        })
+    }
+
+    /// Persist one snapshot under the sink's retention policy.
+    pub fn persist(&mut self, snap: &[JobCheckpoint]) -> Result<()> {
+        if self.keep <= 1 {
+            return write_snapshot(self.dir, self.cfg, self.keep, self.source, snap, &mut self.buf);
+        }
+        let target = self.dir.join(format!("snap_{:06}", self.seq));
+        write_snapshot(&target, self.cfg, self.keep, self.source, snap, &mut self.buf)?;
+        self.seq += 1;
+        // Prune: keep the latest `keep` rotated snapshots.
+        let existing = list_rotated(self.dir)?;
+        for (_, path) in existing.iter().rev().skip(self.keep) {
+            std::fs::remove_dir_all(path)
+                .with_context(|| format!("pruning old snapshot {}", path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Numbered `snap_<seq>/` subdirectories holding a manifest, ascending.
+pub fn list_rotated(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut found = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if let Some(seq) = name.strip_prefix("snap_").and_then(|s| s.parse::<u64>().ok()) {
+            if path.join("manifest.toml").exists() {
+                found.push((seq, path));
+            }
+        }
+    }
+    found.sort_unstable_by_key(|&(s, _)| s);
+    Ok(found)
+}
+
+/// The snapshot directory `cupso resume` should read: the directory
+/// itself when it holds a manifest (keep = 1 layout), otherwise the
+/// newest rotated `snap_<seq>/` subdirectory.
+pub fn resolve_snapshot_dir(dir: &Path) -> Result<PathBuf> {
+    if dir.join("manifest.toml").exists() {
+        return Ok(dir.to_path_buf());
+    }
+    let mut rotated = list_rotated(dir).unwrap_or_default();
+    rotated.pop().map(|(_, p)| p).with_context(|| {
+        format!(
+            "no manifest.toml or snap_*/ snapshot under {}",
+            dir.display()
+        )
+    })
+}
+
+/// Persist a batch snapshot: one `job_<i>.ckpt` per job plus a
+/// `manifest.toml` recording the scheduler knobs, provenance and job
+/// count. `buf` is the reusable encode buffer.
+pub fn write_snapshot(
+    dir: &Path,
+    cfg: &BatchConfig,
+    keep: usize,
+    source: &str,
+    snap: &[JobCheckpoint],
+    buf: &mut Vec<u8>,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    for (i, job) in snap.iter().enumerate() {
+        job.write_file_with(&dir.join(format!("job_{i}.ckpt")), buf)?;
+    }
+    let manifest = format!(
+        "# cupso batch snapshot — continue with `cupso resume {}`\n\
+         version = {}\n\
+         source = \"{}\"\n\
+         workers = {}\n\
+         policy = \"{}\"\n\
+         streams = {}\n\
+         batch_steps = {}\n\
+         preempt_quantum = {}\n\
+         keep = {}\n\
+         jobs = {}\n",
+        dir.display(),
+        super::VERSION,
+        source,
+        cfg.workers,
+        cfg.policy,
+        cfg.streams,
+        cfg.batch_steps,
+        cfg.preempt_quantum,
+        keep,
+        snap.len()
+    );
+    // Atomic like the job checkpoints: a crash mid-write must never tear
+    // the manifest, or the whole snapshot becomes unresumable.
+    let tmp = dir.join("manifest.toml.tmp");
+    std::fs::write(&tmp, manifest)
+        .with_context(|| format!("writing manifest in {}", dir.display()))?;
+    std::fs::rename(&tmp, dir.join("manifest.toml"))
+        .with_context(|| format!("publishing manifest in {}", dir.display()))?;
+    Ok(())
+}
+
+/// Load a batch snapshot directory: scheduler knobs (as a job-less
+/// [`BatchConfig`]) plus the retention count and every job checkpoint in
+/// manifest order.
+pub fn read_snapshot(dir: &Path) -> Result<(BatchConfig, usize, Vec<JobCheckpoint>)> {
+    let manifest_path = dir.join("manifest.toml");
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let doc: BTreeMap<String, TomlValue> = parse_toml(&text)?.into_iter().collect();
+    // Loud on anything out of range — a hand-edited or torn manifest must
+    // never wrap into a huge thread count or silently clamp a knob. The
+    // caps are per-key: resource-shaped knobs (workers/streams/jobs) get
+    // tight plausibility bounds, step-denominated knobs only reject
+    // negatives (the writer recorded whatever the user asked for).
+    let get_uint = |key: &str, max: u64| -> Result<u64> {
+        let v = doc
+            .get(key)
+            .with_context(|| format!("manifest: missing key {key:?}"))?
+            .as_int(key)?;
+        if v < 0 || v as u64 > max {
+            bail!("manifest: {key} = {v} out of range");
+        }
+        Ok(v as u64)
+    };
+    let version = get_uint("version", u32::MAX as u64)?;
+    if version != super::VERSION as u64 {
+        bail!(
+            "manifest: snapshot version {version} unsupported (this build reads {})",
+            super::VERSION
+        );
+    }
+    let streams = get_uint("streams", 1_000_000)?;
+    let batch_steps = get_uint("batch_steps", u64::MAX)?;
+    if streams == 0 || batch_steps == 0 {
+        bail!("manifest: streams and batch_steps must be >= 1");
+    }
+    let knobs = BatchConfig {
+        workers: get_uint("workers", 1_000_000)? as usize,
+        policy: doc
+            .get("policy")
+            .context("manifest: missing key \"policy\"")?
+            .as_str("policy")?
+            .to_string(),
+        streams: streams as usize,
+        batch_steps,
+        preempt_quantum: get_uint("preempt_quantum", u64::MAX)?,
+        jobs: Vec::new(),
+    };
+    // Optional for compatibility with pre-rotation snapshots.
+    let keep = match doc.get("keep") {
+        Some(v) => {
+            let k = v.as_int("keep")?;
+            if !(1..=1_000_000).contains(&k) {
+                bail!("manifest: keep = {k} out of range");
+            }
+            k as usize
+        }
+        None => 1,
+    };
+    let job_count = get_uint("jobs", 100_000)?;
+    let mut ckpts = Vec::with_capacity(job_count as usize);
+    for i in 0..job_count {
+        ckpts.push(JobCheckpoint::read_file(&dir.join(format!("job_{i}.ckpt")))?);
+    }
+    Ok((knobs, keep, ckpts))
+}

@@ -259,7 +259,7 @@ impl RunConfig {
 }
 
 /// One job entry of a multi-job batch file (a `[jobs.<name>]` section).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobConfig {
     /// Section name (job identifier in reports).
     pub name: String,
@@ -290,7 +290,10 @@ pub struct JobConfig {
 }
 
 impl JobConfig {
-    fn with_defaults(name: &str) -> Self {
+    /// An all-defaults job named `name` (the starting point for a bare
+    /// `[jobs.<name>]` section, a service `submit` request, and the
+    /// `cupso submit` flag parser).
+    pub fn with_defaults(name: &str) -> Self {
         Self {
             name: name.to_string(),
             fitness: "cubic".into(),
@@ -387,8 +390,24 @@ impl BatchConfig {
         Self::from_toml_str(&text)
     }
 
+    /// Load for `cupso serve`: identical parsing and validation except
+    /// that a file with zero `[jobs.<name>]` sections is legal — a
+    /// daemon's jobs may all arrive live via `submit`, so a
+    /// scheduler-knobs-only config is a perfectly sensible service
+    /// seed (it is a batch-file error, where no jobs means no work).
+    pub fn from_file_for_service(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading service config {}", path.display()))?;
+        let cfg = Self::from_toml_str_with(&text, false)?;
+        Ok(cfg)
+    }
+
     /// Parse from TOML-subset text.
     pub fn from_toml_str(text: &str) -> Result<Self> {
+        Self::from_toml_str_with(text, true)
+    }
+
+    fn from_toml_str_with(text: &str, require_jobs: bool) -> Result<Self> {
         let doc = parse_toml(text)?;
         let mut cfg = Self {
             workers: 0,
@@ -405,9 +424,15 @@ impl BatchConfig {
                 if name.is_empty() || name.contains('.') {
                     bail!("bad job section [{section}]: job names must be a single segment");
                 }
-                if !cfg.jobs.iter().any(|j| j.name == name) {
-                    cfg.jobs.push(JobConfig::with_defaults(name));
+                // Names are identity keys (the scheduler and the service
+                // address jobs by name): a repeated section used to merge
+                // silently, with later fields shadowing earlier ones.
+                if cfg.jobs.iter().any(|j| j.name == name) {
+                    bail!(
+                        "duplicate job section [jobs.{name}]: job names are unique identity keys"
+                    );
                 }
+                cfg.jobs.push(JobConfig::with_defaults(name));
             }
         }
         for (key, value) in doc {
@@ -472,12 +497,25 @@ impl BatchConfig {
                 }
             }
         }
-        cfg.validate()?;
+        if require_jobs && cfg.jobs.is_empty() {
+            bail!("batch config declares no [jobs.<name>] sections");
+        }
+        cfg.validate_allowing_no_jobs()?;
         Ok(cfg)
     }
 
-    /// Sanity-check the batch as a whole.
+    /// Sanity-check the batch as a whole (a batch without jobs is an
+    /// error; the service path uses [`from_file_for_service`](Self::from_file_for_service)).
     pub fn validate(&self) -> Result<()> {
+        if self.jobs.is_empty() {
+            bail!("batch config declares no [jobs.<name>] sections");
+        }
+        self.validate_allowing_no_jobs()
+    }
+
+    /// The knob and per-job checks shared by the batch and service
+    /// intake paths.
+    fn validate_allowing_no_jobs(&self) -> Result<()> {
         if crate::scheduler::SchedPolicy::parse(&self.policy).is_none() {
             bail!("bad policy {:?} (round-robin|edf)", self.policy);
         }
@@ -487,11 +525,16 @@ impl BatchConfig {
         if self.batch_steps == 0 {
             bail!("batch_steps must be >= 1");
         }
-        if self.jobs.is_empty() {
-            bail!("batch config declares no [jobs.<name>] sections");
-        }
-        for job in &self.jobs {
+        for (i, job) in self.jobs.iter().enumerate() {
             job.validate()?;
+            // Defense in depth for programmatic construction — the TOML
+            // path already rejects repeated [jobs.<name>] sections.
+            if self.jobs[..i].iter().any(|j| j.name == job.name) {
+                bail!(
+                    "duplicate job name {:?}: job names are unique identity keys",
+                    job.name
+                );
+            }
         }
         Ok(())
     }
@@ -641,12 +684,38 @@ mod tests {
         assert!(BatchConfig::from_toml_str("[metadata]\nworkers = 1\n[jobs.x]\nseed = 1").is_err());
         // Dotted job sections are typos, not phantom jobs.
         assert!(BatchConfig::from_toml_str("[jobs.x.limits]\nmax_steps = 100").is_err());
+        // A repeated [jobs.<name>] section used to merge silently (later
+        // fields shadowing earlier ones); names are identity keys now.
+        let err = BatchConfig::from_toml_str("[jobs.x]\nseed = 1\n[jobs.x]\nseed = 2")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate job section"), "{err}");
         // Unknown policy is a load-time error, not a CLI-only one.
         assert!(BatchConfig::from_toml_str("policy = \"fifo\"\n[jobs.x]\nseed = 1").is_err());
         // A valid minimal job fills every default.
         let cfg = BatchConfig::from_toml_str("[jobs.x]\nseed = 9").unwrap();
         assert_eq!(cfg.jobs[0].engine, EngineKind::QueueLock);
         assert_eq!(cfg.jobs[0].seed, 9);
+    }
+
+    #[test]
+    fn service_config_may_omit_jobs_but_batch_may_not() {
+        let knobs_only = "[scheduler]\nworkers = 2\nstreams = 4\nbatch_steps = 8\n";
+        // Batch path: no jobs = no work = error.
+        assert!(BatchConfig::from_toml_str(knobs_only).is_err());
+        // Service path: jobs arrive live; the knobs must load fine.
+        let dir = std::env::temp_dir().join("cupso-service-cfg-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("knobs.toml");
+        std::fs::write(&path, knobs_only).unwrap();
+        let cfg = BatchConfig::from_file_for_service(&path).unwrap();
+        assert_eq!(cfg.streams, 4);
+        assert_eq!(cfg.batch_steps, 8);
+        assert!(cfg.jobs.is_empty());
+        // Bad knobs still fail loudly on the service path.
+        std::fs::write(&path, "[scheduler]\nstreams = 0\n").unwrap();
+        assert!(BatchConfig::from_file_for_service(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -25,7 +25,11 @@
 //! scheduler can preempt a live job to a checkpoint and resume it later —
 //! on a different stream, or in a different process via
 //! `cupso batch --checkpoint-dir` + `cupso resume` — bit-identically for
-//! the bit-exact engines.
+//! the bit-exact engines. The [`service`] layer turns that scheduler
+//! into a long-lived daemon (`cupso serve`): jobs are submitted,
+//! cancelled and watched over a Unix-socket JSON protocol while the
+//! session runs, and `drain` checkpoints all live work into a snapshot
+//! that `cupso resume` continues.
 //!
 //! ## Quickstart
 //!
@@ -54,6 +58,7 @@ pub mod pso;
 pub mod rng;
 pub mod runtime;
 pub mod scheduler;
+pub mod service;
 pub mod testsupport;
 
 /// Crate-wide result alias.

@@ -6,18 +6,27 @@
 //!   batch     run a multi-job TOML through the shared-pool scheduler
 //!             (optionally checkpointing every job into --checkpoint-dir)
 //!   resume    continue a suspended/checkpointed batch from its directory
+//!   serve     run the scheduler as a live job-service daemon on a Unix
+//!             socket (dynamic admission / cancellation / drain)
+//!   submit    submit job(s) to a running service
+//!   status    show a running service's live jobs and finished results
+//!   cancel    cancel a live job on a running service
+//!   drain     checkpoint a running service's live jobs and stop it
 //!   simulate  print the Plane-C estimated-GPU tables (no execution)
 //!   xla       drive the three-layer AOT stack (sync or async coordinator)
 //!   info      platform, engines, fitness functions, artifact inventory
 //!
 //! `cupso <cmd> --help` lists options. A TOML config can seed any run:
 //! `cupso run --config run.toml [overrides...]`; `cupso batch` reads a
-//! multi-job file (see `config/batch_demo.toml`).
+//! multi-job file (see `config/batch_demo.toml`); `cupso serve` accepts
+//! the same file for its scheduler knobs and initial jobs (see
+//! `config/service_demo.toml`).
 
 use anyhow::{bail, Context, Result};
+use cupso::checkpoint::store::{read_snapshot, resolve_snapshot_dir, SnapshotSink};
 use cupso::checkpoint::JobCheckpoint;
-use cupso::cli::{split_subcommand, Command};
-use cupso::config::{parse_toml, BatchConfig, EngineKind, RunConfig, TomlValue};
+use cupso::cli::{split_subcommand, Args, Command};
+use cupso::config::{BatchConfig, EngineKind, JobConfig, RunConfig};
 use cupso::coordinator::{AsyncScheduler, CoordinatorConfig, SyncScheduler};
 use cupso::engine::ParallelSettings;
 use cupso::fitness::{by_name, Objective};
@@ -26,12 +35,10 @@ use cupso::metrics::{Stopwatch, Table};
 use cupso::pso::PsoParams;
 use cupso::rng::RngKind;
 use cupso::runtime::XlaRuntime;
-use cupso::scheduler::{
-    BatchRun, JobOutcome, JobReport, JobScheduler, JobSpec, SchedPolicy, TerminationCriteria,
-};
-use std::collections::BTreeMap;
+use cupso::scheduler::{BatchRun, JobOutcome, JobReport, JobScheduler, JobSpec, SchedPolicy};
+use cupso::service::proto::{Json, Request};
+use cupso::service::{ServiceEnd, ServiceSession};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -48,6 +55,11 @@ fn dispatch(argv: &[String]) -> Result<()> {
         Some("compare") => cmd_compare(rest),
         Some("batch") => cmd_batch(rest),
         Some("resume") => cmd_resume(rest),
+        Some("serve") => cmd_serve(rest),
+        Some("submit") => cmd_submit(rest),
+        Some("status") => cmd_status(rest),
+        Some("cancel") => cmd_cancel(rest),
+        Some("drain") => cmd_drain(rest),
         Some("simulate") => cmd_simulate(rest),
         Some("xla") => cmd_xla(rest),
         Some("info") => cmd_info(rest),
@@ -66,6 +78,11 @@ fn top_usage() -> String {
      \x20 compare   rank all five paper algorithms on one workload\n\
      \x20 batch     run a multi-job TOML on one shared pool\n\
      \x20 resume    continue a checkpointed batch from its directory\n\
+     \x20 serve     run the scheduler as a live job-service daemon\n\
+     \x20 submit    submit job(s) to a running service\n\
+     \x20 status    show a running service's jobs and results\n\
+     \x20 cancel    cancel a live job on a running service\n\
+     \x20 drain     checkpoint a running service and stop it\n\
      \x20 simulate  print the estimated-GPU tables (Plane C)\n\
      \x20 xla       drive the AOT three-layer stack\n\
      \x20 info      platform + inventory\n\n\
@@ -208,6 +225,48 @@ fn cmd_compare(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Apply the scheduler-knob CLI overrides shared by `batch` and `serve`.
+fn apply_scheduler_overrides(cfg: &mut BatchConfig, args: &Args) -> Result<()> {
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--workers {w:?}: {e}"))?;
+    }
+    if let Some(p) = args.get("policy") {
+        cfg.policy = p.to_string();
+    }
+    if let Some(s) = args.get("streams") {
+        cfg.streams = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--streams {s:?}: {e}"))?;
+    }
+    if let Some(b) = args.get("batch-steps") {
+        cfg.batch_steps = b
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--batch-steps {b:?}: {e}"))?;
+    }
+    if let Some(q) = args.get("preempt-quantum") {
+        cfg.preempt_quantum = q
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--preempt-quantum {q:?}: {e}"))?;
+    }
+    if cfg.streams == 0 || cfg.batch_steps == 0 {
+        bail!("--streams and --batch-steps must be >= 1");
+    }
+    Ok(())
+}
+
+/// Build a scheduler from batch-config knobs.
+fn scheduler_from_knobs(cfg: &BatchConfig) -> Result<(JobScheduler, SchedPolicy)> {
+    let policy = SchedPolicy::parse(&cfg.policy)
+        .with_context(|| format!("bad policy {:?} (round-robin|edf)", cfg.policy))?;
+    let scheduler = JobScheduler::new(ParallelSettings::with_streams(cfg.workers, cfg.streams))
+        .policy(policy)
+        .batch_steps(cfg.batch_steps)
+        .preempt_quantum(cfg.preempt_quantum);
+    Ok((scheduler, policy))
+}
+
 fn cmd_batch(rest: &[String]) -> Result<()> {
     let spec = Command::new("batch", "run a multi-job TOML on one shared pool")
         .opt("config", "multi-job TOML file", Some("config/batch_demo.toml"))
@@ -249,34 +308,7 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
     }
     let args = spec.parse(rest)?;
     let mut cfg = BatchConfig::from_file(Path::new(args.get("config").unwrap()))?;
-    if let Some(w) = args.get("workers") {
-        cfg.workers = w
-            .parse()
-            .map_err(|e| anyhow::anyhow!("--workers {w:?}: {e}"))?;
-    }
-    if let Some(p) = args.get("policy") {
-        cfg.policy = p.to_string();
-    }
-    if let Some(s) = args.get("streams") {
-        cfg.streams = s
-            .parse()
-            .map_err(|e| anyhow::anyhow!("--streams {s:?}: {e}"))?;
-    }
-    if let Some(b) = args.get("batch-steps") {
-        cfg.batch_steps = b
-            .parse()
-            .map_err(|e| anyhow::anyhow!("--batch-steps {b:?}: {e}"))?;
-    }
-    if let Some(q) = args.get("preempt-quantum") {
-        cfg.preempt_quantum = q
-            .parse()
-            .map_err(|e| anyhow::anyhow!("--preempt-quantum {q:?}: {e}"))?;
-    }
-    if cfg.streams == 0 || cfg.batch_steps == 0 {
-        bail!("--streams and --batch-steps must be >= 1");
-    }
-    let policy = SchedPolicy::parse(&cfg.policy)
-        .with_context(|| format!("bad policy {:?} (round-robin|edf)", cfg.policy))?;
+    apply_scheduler_overrides(&mut cfg, &args)?;
     let trace = args.flag("trace");
     let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
     let every: u64 = args.get_parse("checkpoint-every", 64u64)?;
@@ -303,10 +335,7 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
         .iter()
         .map(JobSpec::from_config)
         .collect::<Result<_>>()?;
-    let scheduler = JobScheduler::new(ParallelSettings::with_streams(cfg.workers, cfg.streams))
-        .policy(policy)
-        .batch_steps(cfg.batch_steps)
-        .preempt_quantum(cfg.preempt_quantum);
+    let (scheduler, policy) = scheduler_from_knobs(&cfg)?;
     println!(
         "cupso batch: {} jobs, {} policy, {} pool workers, {} streams, {} steps/round{}",
         specs.len(),
@@ -362,9 +391,9 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
 
 /// Continue a checkpointed batch: `cupso resume <dir>` reconstructs the
 /// jobs and scheduler from the directory `cupso batch --checkpoint-dir`
-/// wrote, restores every job and runs the batch to termination —
-/// bit-identically to the never-interrupted batch for the deterministic
-/// engines.
+/// (or a drained `cupso serve`) wrote, restores every job and runs the
+/// batch to termination — bit-identically to the never-interrupted batch
+/// for the deterministic engines.
 fn cmd_resume(rest: &[String]) -> Result<()> {
     let spec = Command::new("resume", "continue a checkpointed batch from its directory")
         .opt(
@@ -392,13 +421,12 @@ fn cmd_resume(rest: &[String]) -> Result<()> {
 
     let snap_dir = resolve_snapshot_dir(&dir)?;
     let (knobs, keep, ckpts) = read_snapshot(&snap_dir)?;
-    let specs = specs_from_checkpoints(&ckpts)?;
-    let policy = SchedPolicy::parse(&knobs.policy)
-        .with_context(|| format!("manifest: bad policy {:?}", knobs.policy))?;
-    let scheduler = JobScheduler::new(ParallelSettings::with_streams(knobs.workers, knobs.streams))
-        .policy(policy)
-        .batch_steps(knobs.batch_steps)
-        .preempt_quantum(knobs.preempt_quantum);
+    let specs = ckpts
+        .iter()
+        .map(JobSpec::from_checkpoint)
+        .collect::<Result<Vec<_>>>()?;
+    let (scheduler, policy) = scheduler_from_knobs(&knobs)
+        .with_context(|| format!("manifest of {}", snap_dir.display()))?;
     let done = ckpts.iter().filter(|c| c.stop.is_some()).count();
     println!(
         "cupso resume: {} jobs from {} ({} already finished), {} policy, {} streams",
@@ -456,7 +484,7 @@ fn drive_session<F: FnMut(&JobReport<'_>)>(
     resume: Option<Vec<JobCheckpoint>>,
     telemetry: F,
 ) -> Result<Option<Vec<JobOutcome>>> {
-    let mut sink = SnapshotSink::new(dir, cfg, keep)?;
+    let mut sink = SnapshotSink::new(dir, cfg, keep, "batch")?;
     let batch = scheduler.run_session_with(
         specs,
         resume.as_deref(),
@@ -478,230 +506,6 @@ fn drive_session<F: FnMut(&JobReport<'_>)>(
             Ok(None)
         }
     }
-}
-
-/// Writes batch snapshots under a checkpoint directory, with retention.
-///
-/// `keep == 1` (the default) overwrites the directory in place — the
-/// layout `cupso resume` has always read. `keep > 1` rotates numbered
-/// `snap_<seq>/` subdirectories, pruning so the latest `keep` survive
-/// (ROADMAP retention item); `resolve_snapshot_dir` picks the newest on
-/// resume. One encode buffer is reused across every checkpoint written.
-struct SnapshotSink<'a> {
-    dir: &'a Path,
-    cfg: &'a BatchConfig,
-    keep: usize,
-    seq: u64,
-    buf: Vec<u8>,
-}
-
-impl<'a> SnapshotSink<'a> {
-    fn new(dir: &'a Path, cfg: &'a BatchConfig, keep: usize) -> Result<Self> {
-        // Continue numbering after any snapshots a previous run left.
-        let seq = match list_rotated(dir) {
-            Ok(existing) => existing.last().map_or(0, |&(s, _)| s + 1),
-            Err(_) => 0, // directory does not exist yet
-        };
-        Ok(Self {
-            dir,
-            cfg,
-            keep,
-            seq,
-            buf: Vec::new(),
-        })
-    }
-
-    fn persist(&mut self, snap: &[JobCheckpoint]) -> Result<()> {
-        if self.keep <= 1 {
-            return write_snapshot(self.dir, self.cfg, self.keep, snap, &mut self.buf);
-        }
-        let target = self.dir.join(format!("snap_{:06}", self.seq));
-        write_snapshot(&target, self.cfg, self.keep, snap, &mut self.buf)?;
-        self.seq += 1;
-        // Prune: keep the latest `keep` rotated snapshots.
-        let existing = list_rotated(self.dir)?;
-        for (_, path) in existing.iter().rev().skip(self.keep) {
-            std::fs::remove_dir_all(path)
-                .with_context(|| format!("pruning old snapshot {}", path.display()))?;
-        }
-        Ok(())
-    }
-}
-
-/// Numbered `snap_<seq>/` subdirectories holding a manifest, ascending.
-fn list_rotated(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
-    let mut found = Vec::new();
-    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
-        let path = entry?.path();
-        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
-            continue;
-        };
-        if let Some(seq) = name.strip_prefix("snap_").and_then(|s| s.parse::<u64>().ok()) {
-            if path.join("manifest.toml").exists() {
-                found.push((seq, path));
-            }
-        }
-    }
-    found.sort_unstable_by_key(|&(s, _)| s);
-    Ok(found)
-}
-
-/// The snapshot directory `cupso resume` should read: the directory
-/// itself when it holds a manifest (keep = 1 layout), otherwise the
-/// newest rotated `snap_<seq>/` subdirectory.
-fn resolve_snapshot_dir(dir: &Path) -> Result<PathBuf> {
-    if dir.join("manifest.toml").exists() {
-        return Ok(dir.to_path_buf());
-    }
-    let mut rotated = list_rotated(dir).unwrap_or_default();
-    rotated.pop().map(|(_, p)| p).with_context(|| {
-        format!(
-            "no manifest.toml or snap_*/ snapshot under {}",
-            dir.display()
-        )
-    })
-}
-
-/// Persist a batch snapshot: one `job_<i>.ckpt` per job plus a
-/// `manifest.toml` recording the scheduler knobs and job count. `buf` is
-/// the reusable encode buffer.
-fn write_snapshot(
-    dir: &Path,
-    cfg: &BatchConfig,
-    keep: usize,
-    snap: &[JobCheckpoint],
-    buf: &mut Vec<u8>,
-) -> Result<()> {
-    std::fs::create_dir_all(dir)
-        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
-    for (i, job) in snap.iter().enumerate() {
-        job.write_file_with(&dir.join(format!("job_{i}.ckpt")), buf)?;
-    }
-    let manifest = format!(
-        "# cupso batch snapshot — continue with `cupso resume {}`\n\
-         version = {}\n\
-         workers = {}\n\
-         policy = \"{}\"\n\
-         streams = {}\n\
-         batch_steps = {}\n\
-         preempt_quantum = {}\n\
-         keep = {}\n\
-         jobs = {}\n",
-        dir.display(),
-        cupso::checkpoint::VERSION,
-        cfg.workers,
-        cfg.policy,
-        cfg.streams,
-        cfg.batch_steps,
-        cfg.preempt_quantum,
-        keep,
-        snap.len()
-    );
-    // Atomic like the job checkpoints: a crash mid-write must never tear
-    // the manifest, or the whole snapshot becomes unresumable.
-    let tmp = dir.join("manifest.toml.tmp");
-    std::fs::write(&tmp, manifest)
-        .with_context(|| format!("writing manifest in {}", dir.display()))?;
-    std::fs::rename(&tmp, dir.join("manifest.toml"))
-        .with_context(|| format!("publishing manifest in {}", dir.display()))?;
-    Ok(())
-}
-
-/// Load a batch snapshot directory: scheduler knobs (as a job-less
-/// `BatchConfig`) plus the retention count and every job checkpoint in
-/// manifest order.
-fn read_snapshot(dir: &Path) -> Result<(BatchConfig, usize, Vec<JobCheckpoint>)> {
-    let manifest_path = dir.join("manifest.toml");
-    let text = std::fs::read_to_string(&manifest_path)
-        .with_context(|| format!("reading {}", manifest_path.display()))?;
-    let doc: BTreeMap<String, TomlValue> = parse_toml(&text)?.into_iter().collect();
-    // Loud on anything out of range — a hand-edited or torn manifest must
-    // never wrap into a huge thread count or silently clamp a knob. The
-    // caps are per-key: resource-shaped knobs (workers/streams/jobs) get
-    // tight plausibility bounds, step-denominated knobs only reject
-    // negatives (batch wrote whatever the user asked for).
-    let get_uint = |key: &str, max: u64| -> Result<u64> {
-        let v = doc
-            .get(key)
-            .with_context(|| format!("manifest: missing key {key:?}"))?
-            .as_int(key)?;
-        if v < 0 || v as u64 > max {
-            bail!("manifest: {key} = {v} out of range");
-        }
-        Ok(v as u64)
-    };
-    let version = get_uint("version", u32::MAX as u64)?;
-    if version != cupso::checkpoint::VERSION as u64 {
-        bail!(
-            "manifest: snapshot version {version} unsupported (this build reads {})",
-            cupso::checkpoint::VERSION
-        );
-    }
-    let streams = get_uint("streams", 1_000_000)?;
-    let batch_steps = get_uint("batch_steps", u64::MAX)?;
-    if streams == 0 || batch_steps == 0 {
-        bail!("manifest: streams and batch_steps must be >= 1");
-    }
-    let knobs = BatchConfig {
-        workers: get_uint("workers", 1_000_000)? as usize,
-        policy: doc
-            .get("policy")
-            .context("manifest: missing key \"policy\"")?
-            .as_str("policy")?
-            .to_string(),
-        streams: streams as usize,
-        batch_steps,
-        preempt_quantum: get_uint("preempt_quantum", u64::MAX)?,
-        jobs: Vec::new(),
-    };
-    // Optional for compatibility with pre-rotation snapshots.
-    let keep = match doc.get("keep") {
-        Some(v) => {
-            let k = v.as_int("keep")?;
-            if !(1..=1_000_000).contains(&k) {
-                bail!("manifest: keep = {k} out of range");
-            }
-            k as usize
-        }
-        None => 1,
-    };
-    let job_count = get_uint("jobs", 100_000)?;
-    let mut ckpts = Vec::with_capacity(job_count as usize);
-    for i in 0..job_count {
-        ckpts.push(JobCheckpoint::read_file(&dir.join(format!("job_{i}.ckpt")))?);
-    }
-    Ok((knobs, keep, ckpts))
-}
-
-/// Rebuild scheduler job specs from suspended checkpoints: workload,
-/// engine, seed and objective come from the run state; fitness and the
-/// termination bounds from the job wrapper.
-fn specs_from_checkpoints(ckpts: &[JobCheckpoint]) -> Result<Vec<JobSpec>> {
-    ckpts
-        .iter()
-        .map(|c| {
-            let fitness = by_name(&c.fitness)
-                .with_context(|| format!("job {}: unknown fitness {:?}", c.name, c.fitness))?;
-            let engine = c.run.kind.engine_kind().with_context(|| {
-                format!("job {}: run kind {} is not schedulable", c.name, c.run.kind)
-            })?;
-            let mut spec = JobSpec::new(
-                &c.name,
-                engine,
-                c.run.params.clone(),
-                Arc::from(fitness),
-                c.run.objective,
-                c.run.seed,
-            );
-            spec.termination = TerminationCriteria {
-                max_iter: c.max_steps,
-                target_fit: c.target_fit,
-                stall_window: c.stall_window,
-            };
-            spec.deadline = c.deadline;
-            Ok(spec)
-        })
-        .collect()
 }
 
 fn print_batch_results(
@@ -741,6 +545,395 @@ fn print_batch_results(
         reports,
         improvements
     );
+}
+
+// --------------------------------------------------------------------
+// The service verbs: serve (daemon) + submit/status/cancel/drain
+// (clients of the line-JSON Unix-socket protocol; see service/proto.rs).
+// --------------------------------------------------------------------
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let spec = Command::new("serve", "run the scheduler as a live job-service daemon")
+        .opt("socket", "Unix socket path to listen on (required)", None)
+        .opt(
+            "config",
+            "batch TOML seeding the scheduler knobs and initial jobs",
+            None,
+        )
+        .opt("workers", "worker threads (0 = all cores; overrides the file)", None)
+        .opt("policy", "round-robin|edf (overrides the file)", None)
+        .opt("streams", "concurrent pool streams (overrides the file)", None)
+        .opt("batch-steps", "iterations per job per round (overrides the file)", None)
+        .opt(
+            "preempt-quantum",
+            "preemption quantum in steps; 0 = cooperative (overrides the file)",
+            None,
+        )
+        .opt(
+            "checkpoint-dir",
+            "where `cupso drain` snapshots live jobs (enables `cupso resume`)",
+            None,
+        )
+        .switch("trace", "print every global-best improvement as it lands");
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        return Ok(());
+    }
+    let args = spec.parse(rest)?;
+    let socket = PathBuf::from(
+        args.get("socket")
+            .context("--socket is required (e.g. --socket /tmp/cupso.sock)")?,
+    );
+    let mut cfg = match args.get("config") {
+        // Service configs may be scheduler-knobs-only: every job can
+        // arrive live through `cupso submit`.
+        Some(path) => BatchConfig::from_file_for_service(Path::new(path))?,
+        None => BatchConfig {
+            workers: 0,
+            policy: "round-robin".into(),
+            streams: 1,
+            batch_steps: 1,
+            preempt_quantum: 0,
+            jobs: Vec::new(),
+        },
+    };
+    apply_scheduler_overrides(&mut cfg, &args)?;
+    let initial: Vec<JobSpec> = cfg
+        .jobs
+        .iter()
+        .map(JobSpec::from_config)
+        .collect::<Result<_>>()?;
+    let (scheduler, policy) = scheduler_from_knobs(&cfg)?;
+    let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
+    let knobs = BatchConfig {
+        jobs: Vec::new(),
+        ..cfg.clone()
+    };
+
+    let (service, handle) =
+        ServiceSession::new(&scheduler, knobs, ckpt_dir.clone(), initial)?;
+    let listener = cupso::service::bind(&socket)?;
+    let _accept = cupso::service::spawn_server(listener, handle);
+    println!(
+        "cupso serve: listening on {} — {} initial jobs, {} policy, {} streams, {} steps/round{}{}",
+        socket.display(),
+        cfg.jobs.len(),
+        policy,
+        scheduler.streams(),
+        cfg.batch_steps,
+        if cfg.preempt_quantum > 0 {
+            format!(", preemption quantum {}", cfg.preempt_quantum)
+        } else {
+            String::new()
+        },
+        match &ckpt_dir {
+            Some(d) => format!(", drain dir {}", d.display()),
+            None => ", no drain dir (drain of live jobs refused)".to_string(),
+        }
+    );
+    println!("  submit with `cupso submit --socket {} --name my-job ...`", socket.display());
+
+    let trace = args.flag("trace");
+    let end = service.run_with(|r| {
+        if trace && r.improved {
+            println!("  [{}] iter {:>6}  gbest {:.6}", r.name, r.iter, r.gbest_fit);
+        }
+    })?;
+    // Best-effort socket cleanup: a stale file is also handled at the
+    // next bind, but leaving none behind is tidier.
+    let _ = std::fs::remove_file(&socket);
+    print_service_results(&end);
+    Ok(())
+}
+
+fn print_service_results(end: &ServiceEnd) {
+    if !end.results.is_empty() {
+        let mut table = Table::new(
+            "Service results",
+            &["Job", "Engine", "Steps", "Stop", "gbest"],
+        );
+        for o in &end.results {
+            table.row(&[
+                o.name.clone(),
+                o.engine.label().to_string(),
+                o.steps.to_string(),
+                o.stop.to_string(),
+                format!("{:.6}", o.gbest_fit),
+            ]);
+        }
+        println!("{}", table.to_markdown());
+    }
+    match &end.snapshot_dir {
+        Some(dir) => println!(
+            "drained {} live jobs into {} — continue with `cupso resume {}`",
+            end.drained,
+            dir.display(),
+            dir.display()
+        ),
+        None => println!(
+            "service stopped: {} finished jobs, no live jobs to drain",
+            end.finished_total
+        ),
+    }
+}
+
+/// Send one request line to a running service and parse its response,
+/// failing loudly on transport problems or an `"ok": false` reply.
+fn service_roundtrip(socket: &Path, request: &Request) -> Result<Json> {
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::os::unix::net::UnixStream::connect(socket).with_context(|| {
+        format!(
+            "connecting to {} (is `cupso serve` running there?)",
+            socket.display()
+        )
+    })?;
+    let mut writer = stream.try_clone().context("cloning socket")?;
+    writeln!(writer, "{}", request.render()).context("sending request")?;
+    writer.flush().context("flushing request")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading response")?;
+    if line.trim().is_empty() {
+        bail!("service closed the connection without a response");
+    }
+    let doc = Json::parse(line.trim())?;
+    let ok = doc
+        .get("ok")
+        .context("response carries no \"ok\" field")?
+        .as_bool("ok")?;
+    if !ok {
+        bail!(
+            "service error: {}",
+            doc.str_field("error").unwrap_or("unknown")
+        );
+    }
+    Ok(doc)
+}
+
+fn socket_arg(args: &Args) -> Result<PathBuf> {
+    Ok(PathBuf::from(
+        args.get("socket").context("--socket is required")?,
+    ))
+}
+
+fn cmd_submit(rest: &[String]) -> Result<()> {
+    let spec = Command::new("submit", "submit job(s) to a running service")
+        .opt("socket", "service socket path (required)", None)
+        .opt(
+            "config",
+            "batch TOML whose [jobs.*] sections are all submitted (per-job flags ignored)",
+            None,
+        )
+        .opt("name", "job name (unique identity key; required without --config)", None)
+        .opt("fitness", "fitness function", Some("cubic"))
+        .opt("particles", "swarm size", Some("1024"))
+        .opt("dim", "dimensionality", Some("1"))
+        .opt("iters", "iteration budget", Some("1000"))
+        .opt("engine", "cpu|reduction|unroll|queue|queuelock|async", Some("queuelock"))
+        .opt("vmax-frac", "velocity clamp fraction", Some("0.5"))
+        .opt("seed", "master seed", Some("42"))
+        .opt("objective", "max|min (default: function's convention)", None)
+        .opt("target-fitness", "early stop: target fitness", None)
+        .opt("stall-window", "early stop: non-improving steps", None)
+        .opt("max-steps", "early stop: scheduler-step cap", None)
+        .opt("deadline", "EDF deadline in steps", None);
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        return Ok(());
+    }
+    let args = spec.parse(rest)?;
+    let socket = socket_arg(&args)?;
+    let jobs: Vec<JobConfig> = match args.get("config") {
+        Some(path) => BatchConfig::from_file(Path::new(path))?.jobs,
+        None => {
+            let name = args
+                .get("name")
+                .context("--name is required (or use --config)")?;
+            let mut job = JobConfig::with_defaults(name);
+            if let Some(v) = args.get("fitness") {
+                job.fitness = v.to_string();
+            }
+            job.particles = args.get_parse("particles", job.particles)?;
+            job.dim = args.get_parse("dim", job.dim)?;
+            job.iters = args.get_parse("iters", job.iters)?;
+            if let Some(v) = args.get("engine") {
+                job.engine = EngineKind::parse(v).with_context(|| format!("bad engine {v}"))?;
+            }
+            job.vmax_frac = args.get_parse("vmax-frac", job.vmax_frac)?;
+            job.seed = args.get_parse("seed", job.seed)?;
+            if let Some(v) = args.get("objective") {
+                job.objective =
+                    Some(Objective::parse(v).with_context(|| format!("bad objective {v}"))?);
+            }
+            if let Some(v) = args.get("target-fitness") {
+                job.target_fitness = Some(
+                    v.parse()
+                        .map_err(|e| anyhow::anyhow!("--target-fitness {v:?}: {e}"))?,
+                );
+            }
+            if let Some(v) = args.get("stall-window") {
+                job.stall_window = Some(
+                    v.parse()
+                        .map_err(|e| anyhow::anyhow!("--stall-window {v:?}: {e}"))?,
+                );
+            }
+            if let Some(v) = args.get("max-steps") {
+                job.max_steps = Some(
+                    v.parse()
+                        .map_err(|e| anyhow::anyhow!("--max-steps {v:?}: {e}"))?,
+                );
+            }
+            if let Some(v) = args.get("deadline") {
+                job.deadline = Some(
+                    v.parse()
+                        .map_err(|e| anyhow::anyhow!("--deadline {v:?}: {e}"))?,
+                );
+            }
+            job.validate()?;
+            vec![job]
+        }
+    };
+    for job in &jobs {
+        let doc = service_roundtrip(&socket, &Request::Submit(job.clone()))?;
+        println!(
+            "submitted {} → slot {}, stream {}",
+            doc.str_field("name")?,
+            doc.get("slot").context("missing slot")?.as_u64("slot")?,
+            doc.get("stream").context("missing stream")?.as_u64("stream")?,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_status(rest: &[String]) -> Result<()> {
+    let spec = Command::new("status", "show a running service's jobs and results")
+        .opt("socket", "service socket path (required)", None)
+        .switch("json", "print the raw JSON response line");
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        return Ok(());
+    }
+    let args = spec.parse(rest)?;
+    let socket = socket_arg(&args)?;
+    let doc = service_roundtrip(&socket, &Request::Status)?;
+    if args.flag("json") {
+        // Re-render the parsed document for scripting (same writer the
+        // daemon used, so the line cannot drift from the wire format).
+        println!("{}", doc.render());
+        return Ok(());
+    }
+    let rounds = doc.get("rounds").context("missing rounds")?.as_u64("rounds")?;
+    let streams = doc.get("streams").context("missing streams")?.as_u64("streams")?;
+    let finished_total = doc
+        .get("finished_total")
+        .context("missing finished_total")?
+        .as_u64("finished_total")?;
+    let live = json_rows(&doc, "live")?;
+    let finished = json_rows(&doc, "finished")?;
+    println!(
+        "cupso status: round {rounds}, {streams} streams, {} live, {finished_total} finished",
+        live.len()
+    );
+    if !live.is_empty() {
+        let mut t = Table::new(
+            "Live jobs",
+            &["Job", "Engine", "Steps", "Budget", "gbest", "Stream"],
+        );
+        for j in &live {
+            t.row(&[
+                j.str_field("name")?.to_string(),
+                j.str_field("engine")?.to_string(),
+                j.get("steps").context("steps")?.as_u64("steps")?.to_string(),
+                j.get("max_iter").context("max_iter")?.as_u64("max_iter")?.to_string(),
+                format!("{:.6}", j.get("gbest").context("gbest")?.as_f64("gbest")?),
+                j.get("stream").context("stream")?.as_u64("stream")?.to_string(),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+    }
+    if !finished.is_empty() {
+        let mut t = Table::new("Finished jobs", &["Job", "Engine", "Steps", "Stop", "gbest"]);
+        for j in &finished {
+            t.row(&[
+                j.str_field("name")?.to_string(),
+                j.str_field("engine")?.to_string(),
+                j.get("steps").context("steps")?.as_u64("steps")?.to_string(),
+                j.str_field("stop")?.to_string(),
+                format!("{:.6}", j.get("gbest").context("gbest")?.as_f64("gbest")?),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+    }
+    Ok(())
+}
+
+/// Rows of an array field of a parsed response.
+fn json_rows<'a>(doc: &'a Json, key: &str) -> Result<Vec<&'a Json>> {
+    match doc.get(key) {
+        Some(Json::Arr(items)) => Ok(items.iter().collect()),
+        Some(other) => bail!("{key}: expected array, got {other:?}"),
+        None => bail!("response missing {key:?}"),
+    }
+}
+
+fn cmd_cancel(rest: &[String]) -> Result<()> {
+    let spec = Command::new("cancel", "cancel a live job on a running service")
+        .opt("socket", "service socket path (required)", None)
+        .opt("name", "job name (also accepted as a positional argument)", None);
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        println!("usage: cupso cancel --socket <path> <job-name>");
+        return Ok(());
+    }
+    let args = spec.parse(rest)?;
+    let socket = socket_arg(&args)?;
+    let name = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .or_else(|| args.get("name"))
+        .context("usage: cupso cancel --socket <path> <job-name>")?
+        .to_string();
+    let doc = service_roundtrip(&socket, &Request::Cancel { name })?;
+    let job = doc.get("job").context("missing job")?;
+    println!(
+        "cancelled {} after {} steps (gbest {:.6})",
+        job.str_field("name")?,
+        job.get("steps").context("steps")?.as_u64("steps")?,
+        job.get("gbest").context("gbest")?.as_f64("gbest")?,
+    );
+    Ok(())
+}
+
+fn cmd_drain(rest: &[String]) -> Result<()> {
+    let spec = Command::new("drain", "checkpoint a running service's live jobs and stop it")
+        .opt("socket", "service socket path (required)", None);
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        return Ok(());
+    }
+    let args = spec.parse(rest)?;
+    let socket = socket_arg(&args)?;
+    let doc = service_roundtrip(&socket, &Request::Drain)?;
+    let snapshotted = doc
+        .get("snapshotted")
+        .context("missing snapshotted")?
+        .as_u64("snapshotted")?;
+    let finished = doc
+        .get("finished")
+        .context("missing finished")?
+        .as_u64("finished")?;
+    match doc.get("dir") {
+        Some(dir) => {
+            let dir = dir.as_str("dir")?;
+            println!(
+                "drained {snapshotted} live jobs into {dir} ({finished} already finished) — \
+                 continue with `cupso resume {dir}`"
+            );
+        }
+        None => println!("drained: no live jobs to snapshot ({finished} finished)"),
+    }
+    Ok(())
 }
 
 fn cmd_simulate(rest: &[String]) -> Result<()> {

@@ -19,6 +19,11 @@ impl Summary {
         Self { sorted }
     }
 
+    /// The samples, ascending (for machine-readable bench records).
+    pub fn samples(&self) -> &[f64] {
+        &self.sorted
+    }
+
     /// Number of samples.
     pub fn n(&self) -> usize {
         self.sorted.len()

@@ -143,6 +143,11 @@ impl StreamExecutors {
         Self { slots, handles }
     }
 
+    /// How many executor threads (command slots) this set holds.
+    pub fn count(&self) -> usize {
+        self.slots.len()
+    }
+
     /// Publish `(run, k)` to executor `e` and wake it. The executor will
     /// run `run.step_many(k)` and park the report for [`take_report`].
     ///

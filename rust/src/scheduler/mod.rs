@@ -19,7 +19,7 @@
 //! cross-job (grids vs the launch guard): N tenants no longer serialize
 //! on one grid-in-flight. [`JobScheduler::batch_steps`] additionally
 //! batches `k` iterations per scheduling round through
-//! [`Run::step_many`], amortizing per-step dispatch overhead at the cost
+//! [`crate::engine::Run::step_many`], amortizing per-step dispatch overhead at the cost
 //! of batch-granular telemetry and termination checks (the explicit
 //! `max_iter` step cap is still honored exactly — batches are clamped to
 //! it).
@@ -37,6 +37,15 @@
 //! allocations** when nothing improves and nothing is preempted
 //! (`rust/tests/zero_alloc.rs`).
 //!
+//! **Dynamic sessions.** The session loop is a first-class object
+//! ([`Session`], opened via [`JobScheduler::session`]): jobs live in
+//! recyclable slots and can be **admitted**, **cancelled** and
+//! **reaped** at round boundaries while the session runs — the seam the
+//! [`crate::service`] daemon is built on. Job names are unique identity
+//! keys; duplicate admission is a loud error. The fixed-batch entry
+//! points below drive the same session type, so the two paths cannot
+//! drift.
+//!
 //! **Determinism.** Because a `Run` owns its whole mutable state and a
 //! grid launch never spans runs, a job's trajectory is bit-identical
 //! whether it runs alone, interleaved on one stream, or concurrently
@@ -44,8 +53,11 @@
 //! engines (CPU, Reduction, Loop-Unrolling, Queue). Queue-Lock and
 //! Async-Persistent carry their documented intra-run races, but those
 //! races are confined to the job's own `Run`: neighbours still cannot
-//! perturb each other. `rust/tests/scheduler_determinism.rs` enforces the
-//! bit-exact half.
+//! perturb each other. Admission and cancellation only happen at round
+//! boundaries (grid-quiescent, every run at a step boundary), so the
+//! invariant extends to live traffic: a job's trajectory does not depend
+//! on *when* other jobs were admitted or cancelled around it.
+//! `rust/tests/scheduler_determinism.rs` enforces the bit-exact half.
 //!
 //! **Preemption & migration.** Runs are checkpointable
 //! ([`crate::engine::Run::checkpoint`]), which upgrades the scheduler
@@ -68,17 +80,21 @@
 //! time-critical deployments (arXiv:1401.0546) need early termination and
 //! bounded per-step latency — both fall out of step-wise runs plus this
 //! scheduler.
+//!
+//! [`RunCheckpoint`]: crate::checkpoint::RunCheckpoint
 
 mod executor;
+mod session;
 
-use crate::checkpoint::{JobCheckpoint, RunCheckpoint};
+pub use session::{JobView, Session};
+
+use crate::checkpoint::JobCheckpoint;
 use crate::config::{EngineKind, JobConfig};
-use crate::engine::{self, ParallelSettings, Run, StepReport};
+use crate::engine::ParallelSettings;
 use crate::exec::GridPool;
 use crate::fitness::{by_name, Fitness, Objective};
 use crate::pso::{PsoParams, RunOutput};
 use anyhow::{bail, Context, Result};
-use executor::{spin_budget, StreamExecutors};
 use std::sync::Arc;
 
 /// When to stop a job before its `params.max_iter` budget.
@@ -162,17 +178,21 @@ pub enum StopReason {
     MaxIter,
     /// [`TerminationCriteria::stall_window`] consecutive stale steps.
     Stalled,
+    /// Cancelled by a tenant at a round boundary ([`Session::cancel`] /
+    /// the service's `cancel` verb).
+    Cancelled,
 }
 
 impl StopReason {
     /// Stable wire code for [`JobCheckpoint::stop`] (version-1 format —
-    /// never renumber).
+    /// never renumber; new reasons append new codes).
     pub fn code(self) -> u8 {
         match self {
             StopReason::Exhausted => 0,
             StopReason::TargetReached => 1,
             StopReason::MaxIter => 2,
             StopReason::Stalled => 3,
+            StopReason::Cancelled => 4,
         }
     }
 
@@ -183,6 +203,7 @@ impl StopReason {
             1 => StopReason::TargetReached,
             2 => StopReason::MaxIter,
             3 => StopReason::Stalled,
+            4 => StopReason::Cancelled,
             other => bail!("unknown stop-reason code {other}"),
         })
     }
@@ -195,16 +216,20 @@ impl std::fmt::Display for StopReason {
             StopReason::TargetReached => "target-reached",
             StopReason::MaxIter => "max-iter",
             StopReason::Stalled => "stalled",
+            StopReason::Cancelled => "cancelled",
         };
         f.write_str(s)
     }
 }
 
 /// One tenant job: engine kind, workload, seed, and stop bounds.
+#[derive(Clone)]
 pub struct JobSpec {
     /// Display name (batch-config section name). Interned (`Arc<str>`) so
     /// telemetry, outcomes and checkpoint snapshots share one allocation
-    /// instead of cloning the string per round/persist.
+    /// instead of cloning the string per round/persist. Names are
+    /// **unique identity keys**: the scheduler rejects duplicate
+    /// admissions and the service addresses jobs by name.
     pub name: Arc<str>,
     /// Plane-A engine kind driving this job.
     pub engine: EngineKind,
@@ -279,6 +304,37 @@ impl JobSpec {
             deadline: cfg.deadline,
         })
     }
+
+    /// Rebuild a spec from a suspended job checkpoint: workload, engine,
+    /// seed and objective come from the run state; fitness and the
+    /// termination bounds from the job wrapper. This is how `cupso
+    /// resume` (and a drained service) reconstructs a batch purely from
+    /// its snapshot.
+    pub fn from_checkpoint(ckpt: &JobCheckpoint) -> Result<Self> {
+        let fitness = by_name(&ckpt.fitness)
+            .with_context(|| format!("job {}: unknown fitness {:?}", ckpt.name, ckpt.fitness))?;
+        let engine = ckpt.run.kind.engine_kind().with_context(|| {
+            format!(
+                "job {}: run kind {} is not schedulable",
+                ckpt.name, ckpt.run.kind
+            )
+        })?;
+        let mut spec = JobSpec::new(
+            &ckpt.name,
+            engine,
+            ckpt.run.params.clone(),
+            Arc::from(fitness),
+            ckpt.run.objective,
+            ckpt.run.seed,
+        );
+        spec.termination = TerminationCriteria {
+            max_iter: ckpt.max_steps,
+            target_fit: ckpt.target_fit,
+            stall_window: ckpt.stall_window,
+        };
+        spec.deadline = ckpt.deadline;
+        Ok(spec)
+    }
 }
 
 /// Which live job gets the next step.
@@ -322,7 +378,8 @@ impl std::fmt::Display for SchedPolicy {
 /// one report per executed step).
 #[derive(Debug, Clone)]
 pub struct JobReport<'a> {
-    /// Index of the job in the spec slice.
+    /// Slot index of the job (== index in the spec slice for the
+    /// fixed-batch entry points).
     pub job: usize,
     /// Job name.
     pub name: &'a str,
@@ -373,25 +430,6 @@ pub struct JobScheduler {
     /// the persistent executors (the legacy baseline; see
     /// [`JobScheduler::spawn_per_round`]).
     spawn_per_round: bool,
-}
-
-struct LiveJob<'a> {
-    /// The live run — `None` while the job is suspended to `parked`.
-    run: Option<Box<dyn Run + 'a>>,
-    /// The suspension checkpoint of an inactive job (shared, so snapshot
-    /// persistence never deep-copies a parked swarm).
-    parked: Option<Arc<RunCheckpoint>>,
-    steps: u64,
-    stalled: u64,
-    stop: Option<StopReason>,
-    deadline: Option<u64>,
-    /// Pool stream the job's launches are currently pinned to. A
-    /// suspended job loses its pinning and may be restored onto any free
-    /// stream (migration).
-    stream: usize,
-    /// Steps executed since the last (re)activation — the preemption
-    /// quantum counts against this, not lifetime steps.
-    active_steps: u64,
 }
 
 impl JobScheduler {
@@ -469,6 +507,15 @@ impl JobScheduler {
         self.settings.pool.streams()
     }
 
+    /// Open a dynamic scheduling session: an empty slot table that jobs
+    /// can be admitted into, stepped round by round, cancelled out of,
+    /// and snapshotted — the seam the [`crate::service`] daemon drives.
+    /// Every fixed-batch entry point below is a loop over this same
+    /// session type.
+    pub fn session(&self) -> Session {
+        Session::new(self)
+    }
+
     /// Run all jobs to termination, discarding telemetry.
     pub fn run(&self, specs: &[JobSpec]) -> Result<Vec<JobOutcome>> {
         self.run_with(specs, |_| {})
@@ -538,34 +585,16 @@ impl JobScheduler {
         F: FnMut(&JobReport<'_>),
         P: FnMut(&[JobCheckpoint]) -> Result<()>,
     {
-        let streams = self.settings.pool.streams();
-        let mut live: Vec<LiveJob<'_>> = Vec::with_capacity(specs.len());
-        let mut finished = 0usize;
+        // Fixed-batch driving of the dynamic Session: admit everything up
+        // front — all allocation happens here, rounds stay allocation-free
+        // on the hot path — then loop rounds to termination. Slot order ==
+        // spec order, so outcomes, snapshots and telemetry indices are
+        // exactly the pre-Session behavior.
+        let mut session = self.session();
         match resume {
             None => {
-                // Fresh batch: prepare every run up front — all allocation
-                // happens here, steps stay allocation-free on the hot
-                // path. Each job starts pinned to pool stream `i % S`.
-                for (i, spec) in specs.iter().enumerate() {
-                    let mut engine =
-                        engine::build_with(spec.engine, self.settings.clone().on_stream(i))
-                            .with_context(|| {
-                                format!(
-                                    "job {}: engine {} is not schedulable",
-                                    spec.name, spec.engine
-                                )
-                            })?;
-                    let fitness: &dyn Fitness = &*spec.fitness;
-                    live.push(LiveJob {
-                        run: Some(engine.prepare(&spec.params, fitness, spec.objective, spec.seed)),
-                        parked: None,
-                        steps: 0,
-                        stalled: 0,
-                        stop: None,
-                        deadline: spec.deadline,
-                        stream: i % streams,
-                        active_steps: 0,
-                    });
+                for spec in specs {
+                    session.admit(spec.clone())?;
                 }
             }
             Some(ckpts) => {
@@ -576,322 +605,32 @@ impl JobScheduler {
                         specs.len()
                     );
                 }
-                for (i, (spec, ckpt)) in specs.iter().zip(ckpts).enumerate() {
-                    if ckpt.name != spec.name {
-                        bail!(
-                            "resume snapshot job {i} is {:?}, spec says {:?}",
-                            ckpt.name,
-                            spec.name
-                        );
-                    }
-                    ckpt.run
-                        .validate()
-                        .with_context(|| format!("resuming job {}", spec.name))?;
-                    if crate::checkpoint::RunKind::from_engine(spec.engine) != Some(ckpt.run.kind) {
-                        bail!(
-                            "resuming job {}: checkpoint is a {} run, spec wants engine {}",
-                            spec.name,
-                            ckpt.run.kind,
-                            spec.engine
-                        );
-                    }
-                    // The swarm's fit/pbest arrays were computed under the
-                    // recorded fitness — continuing under a different one
-                    // would be silently wrong, never do it.
-                    if ckpt.fitness != spec.fitness.name() {
-                        bail!(
-                            "resuming job {}: checkpoint was taken under fitness {:?}, spec uses {:?}",
-                            spec.name,
-                            ckpt.fitness,
-                            spec.fitness.name()
-                        );
-                    }
-                    let stop = ckpt.stop.map(StopReason::from_code).transpose()?;
-                    if stop.is_some() {
-                        finished += 1;
-                    }
-                    // Arc clone: resuming shares the caller's checkpoint
-                    // instead of deep-copying the swarm arrays.
-                    live.push(LiveJob {
-                        run: None,
-                        parked: Some(Arc::clone(&ckpt.run)),
-                        steps: ckpt.run.iter,
-                        stalled: ckpt.stalled,
-                        stop,
-                        deadline: spec.deadline,
-                        stream: i % streams,
-                        active_steps: 0,
-                    });
+                for (spec, ckpt) in specs.iter().zip(ckpts) {
+                    session.admit_resumed(spec.clone(), ckpt)?;
                 }
             }
         }
 
-        // Round state and executors are allocated once per session: the
-        // steady-state loop below is allocation-free per round
-        // (rust/tests/zero_alloc.rs pins this for the bit-exact engines).
-        let mut rs = RoundState::new(streams, live.len());
-        let executors = (!self.spawn_per_round && streams > 1 && live.len() > 1).then(|| {
-            let count = streams.min(live.len()) - 1;
-            let total = self.settings.pool.workers() + streams + count;
-            StreamExecutors::new(count, spin_budget(total))
-        });
-
         let mut rounds = 0u64;
-        while finished < live.len() {
+        while session.live() > 0 {
             if max_rounds.is_some_and(|cap| rounds >= cap) {
-                return Ok(BatchRun::Suspended(snapshot(specs, &live)));
+                return Ok(BatchRun::Suspended(session.snapshot()));
             }
             rounds += 1;
-            match self.policy {
-                SchedPolicy::RoundRobin => pick_round_robin(&live, streams, &mut rs),
-                SchedPolicy::EarliestDeadlineFirst => pick_edf(&live, streams, &mut rs),
-            };
-            debug_assert!(!rs.picked.is_empty(), "unfinished job exists");
-            self.step_round(&mut live, specs, executors.as_ref(), &mut rs)?;
-            for (idx, report) in rs.reports.iter() {
-                let idx = *idx;
-                let job = &mut live[idx];
-                let spec = &specs[idx];
-                let executed = report.iter - job.steps;
-                job.steps = report.iter;
-                job.active_steps += executed;
-                if report.improved {
-                    job.stalled = 0;
-                } else {
-                    job.stalled += executed;
-                }
-                // Criteria outrank budget exhaustion so a target hit on the
-                // final iteration still reports TargetReached (matching the
-                // precedence TerminationCriteria::check documents).
-                let stop = spec
-                    .termination
-                    .check(spec.objective, report.gbest_fit, job.steps, job.stalled)
-                    .or(report.done.then_some(StopReason::Exhausted));
-                telemetry(&JobReport {
-                    job: idx,
-                    name: &spec.name,
-                    iter: job.steps,
-                    gbest_fit: report.gbest_fit,
-                    improved: report.improved,
-                    finished: stop,
-                });
-                if stop.is_some() {
-                    job.stop = stop;
-                    finished += 1;
-                }
-            }
-            // Preemption: once a picked job has spent its quantum and the
-            // live set still outnumbers the streams, suspend it — its
-            // buffers are MOVED into a checkpoint (no deep copy) and its
-            // stream frees up for a neighbour next round.
-            if let Some(quantum) = self.preempt_quantum {
-                let unfinished = live.iter().filter(|j| j.stop.is_none()).count();
-                if unfinished > streams {
-                    for &(idx, _) in &rs.picked {
-                        let job = &mut live[idx];
-                        if job.stop.is_none() && job.active_steps >= quantum {
-                            if let Some(run) = job.run.take() {
-                                job.parked = Some(Arc::new(run.into_checkpoint()));
-                            }
-                        }
-                    }
-                }
-            }
+            session.round(&mut telemetry)?;
             // Skip the hook when the next iteration will suspend anyway:
             // the suspension snapshot captures the identical state, and a
             // back-to-back duplicate would waste a retention slot.
             let suspending_next = max_rounds.is_some_and(|cap| rounds >= cap);
             if persist_every.is_some_and(|n| rounds % n == 0)
-                && finished < live.len()
+                && session.live() > 0
                 && !suspending_next
             {
-                persist(&snapshot(specs, &live))?;
+                persist(&session.snapshot())?;
             }
         }
-
-        let mut outcomes = Vec::with_capacity(live.len());
-        for (i, (job, spec)) in live.into_iter().zip(specs).enumerate() {
-            let run = match job.run {
-                Some(run) => run,
-                None => {
-                    // Job finished in a *previous* session (or was never
-                    // reactivated): restore once, just to finish.
-                    let ckpt = job.parked.expect("inactive job holds its checkpoint");
-                    let fitness: &dyn Fitness = &*spec.fitness;
-                    engine::restore_with(&ckpt, self.settings.clone().on_stream(i), fitness)
-                        .with_context(|| format!("finishing job {}", spec.name))?
-                }
-            };
-            outcomes.push(JobOutcome {
-                name: spec.name.clone(),
-                engine: spec.engine,
-                stop: job.stop.expect("every job terminated"),
-                steps: job.steps,
-                output: run.finish(),
-            });
-        }
-        Ok(BatchRun::Complete(outcomes))
+        Ok(BatchRun::Complete(session.into_outcomes()?))
     }
-
-    /// Step every picked job once (a batch of `batch_steps` iterations),
-    /// in parallel when the round holds several jobs — each job's
-    /// launches go to its assigned pool stream, so the grids genuinely
-    /// overlap. Suspended picks are restored first, onto the stream the
-    /// round assigned them (migration when it differs from their last
-    /// pinning). Leaves `(index, report)` pairs sorted by job index in
-    /// `rs.reports`.
-    ///
-    /// Concurrent rounds default to the persistent executors (publish +
-    /// wake per extra job); `executors` is `None` in spawn-per-round mode,
-    /// which falls back to one scoped OS thread per extra job — the
-    /// legacy baseline `benches/scheduler_latency.rs` measures against.
-    fn step_round(
-        &self,
-        live: &mut [LiveJob<'_>],
-        specs: &[JobSpec],
-        executors: Option<&StreamExecutors>,
-        rs: &mut RoundState,
-    ) -> Result<()> {
-        for &(idx, stream) in &rs.picked {
-            if live[idx].run.is_none() {
-                let ckpt = live[idx].parked.take().expect("parked job has a checkpoint");
-                let fitness: &dyn Fitness = &*specs[idx].fitness;
-                let run =
-                    engine::restore_with(&ckpt, self.settings.clone().on_stream(stream), fitness)
-                        .with_context(|| format!("restoring job {}", specs[idx].name))?;
-                live[idx].run = Some(run);
-                live[idx].stream = stream;
-                live[idx].active_steps = 0;
-            }
-        }
-        rs.reports.clear();
-        if let [(idx, _)] = *rs.picked {
-            // Serialized fast path (always taken on a single-stream
-            // pool): no stepping threads, identical to the pre-stream
-            // scheduler loop.
-            let k = effective_batch(self.batch_steps, &specs[idx].termination, live[idx].steps);
-            let run = live[idx].run.as_mut().expect("picked job is active");
-            rs.reports.push((idx, run.step_many(k)));
-            return Ok(());
-        }
-        if let Some(execs) = executors {
-            // Persistent-executor path: publish every pick but the first
-            // to an executor slot, step the first inline on the
-            // scheduling thread, then collect the echoes — no spawn, no
-            // join, no allocation.
-            rs.inflight.clear();
-            let mut first: Option<(usize, u64, &mut Box<dyn Run + '_>)> = None;
-            for (i, job) in live.iter_mut().enumerate() {
-                if !rs.picked.iter().any(|&(p, _)| p == i) {
-                    continue;
-                }
-                let k = effective_batch(self.batch_steps, &specs[i].termination, job.steps);
-                let run = job.run.as_mut().expect("picked job is active");
-                if first.is_none() {
-                    first = Some((i, k, run));
-                } else {
-                    let e = rs.inflight.len();
-                    // SAFETY: every submitted slot is waited on below,
-                    // before the runs are touched again and before this
-                    // function returns; each run goes to one slot.
-                    unsafe { execs.submit(e, &mut **run, k) };
-                    rs.inflight.push(i);
-                }
-            }
-            let (i0, k0, run0) = first.expect("non-empty round");
-            rs.reports.push((i0, run0.step_many(k0)));
-            for (e, &i) in rs.inflight.iter().enumerate() {
-                execs.wait(e);
-                rs.reports.push((i, execs.take_report(e)));
-            }
-        } else {
-            // Legacy spawn-per-round path: S − 1 scoped threads per round.
-            let tasks: Vec<(usize, u64, &mut LiveJob<'_>)> = live
-                .iter_mut()
-                .enumerate()
-                .filter(|(i, _)| rs.picked.iter().any(|&(p, _)| p == *i))
-                .map(|(i, job)| {
-                    let k = effective_batch(self.batch_steps, &specs[i].termination, job.steps);
-                    (i, k, job)
-                })
-                .collect();
-            let stepped = std::thread::scope(|scope| {
-                let mut it = tasks.into_iter();
-                let (i0, k0, job0) = it.next().expect("non-empty round");
-                let handles: Vec<_> = it
-                    .map(|(i, k, job)| {
-                        scope.spawn(move || {
-                            let run = job.run.as_mut().expect("picked job is active");
-                            (i, run.step_many(k))
-                        })
-                    })
-                    .collect();
-                // The scheduling thread steps the first job itself: a
-                // round of S jobs costs S − 1 spawns.
-                let run0 = job0.run.as_mut().expect("picked job is active");
-                let mut out = vec![(i0, run0.step_many(k0))];
-                for h in handles {
-                    out.push(h.join().expect("stepping thread panicked"));
-                }
-                out
-            });
-            rs.reports.extend(stepped);
-        }
-        rs.reports.sort_unstable_by_key(|&(i, _)| i);
-        Ok(())
-    }
-}
-
-/// Reusable per-session scheduling buffers, allocated once so the
-/// steady-state loop performs zero heap allocations per round.
-struct RoundState {
-    /// Policy-ordering scratch (live job indices).
-    order: Vec<usize>,
-    /// Streams taken this round.
-    used: Vec<bool>,
-    /// The round's picks: `(job index, stream)`.
-    picked: Vec<(usize, usize)>,
-    /// Job index per submitted executor slot, in submission order.
-    inflight: Vec<usize>,
-    /// The round's step reports, sorted by job index before delivery.
-    reports: Vec<(usize, StepReport)>,
-}
-
-impl RoundState {
-    fn new(streams: usize, jobs: usize) -> Self {
-        let width = streams.min(jobs.max(1));
-        Self {
-            order: Vec::with_capacity(jobs),
-            used: vec![false; streams],
-            picked: Vec::with_capacity(width),
-            inflight: Vec::with_capacity(width),
-            reports: Vec::with_capacity(width),
-        }
-    }
-}
-
-/// One [`JobCheckpoint`] per job, in spec order — active jobs checkpoint
-/// their live runs (a copy is unavoidable: the run keeps stepping), while
-/// suspended jobs share their parked checkpoint via `Arc` instead of
-/// deep-copying it.
-fn snapshot(specs: &[JobSpec], live: &[LiveJob<'_>]) -> Vec<JobCheckpoint> {
-    live.iter()
-        .zip(specs)
-        .map(|(job, spec)| JobCheckpoint {
-            name: spec.name.clone(),
-            fitness: spec.fitness.name().to_string(),
-            stalled: job.stalled,
-            stop: job.stop.map(StopReason::code),
-            target_fit: spec.termination.target_fit,
-            stall_window: spec.termination.stall_window,
-            max_steps: spec.termination.max_iter,
-            deadline: spec.deadline,
-            run: match &job.run {
-                Some(run) => Arc::new(run.checkpoint()),
-                None => Arc::clone(job.parked.as_ref().expect("inactive job holds its checkpoint")),
-            },
-        })
-        .collect()
 }
 
 /// Batch size for one job's next round: the configured batch, clamped so
@@ -901,71 +640,6 @@ fn effective_batch(batch: u64, termination: &TerminationCriteria, steps_done: u6
     match termination.max_iter {
         Some(cap) => batch.min(cap.saturating_sub(steps_done)).max(1),
         None => batch,
-    }
-}
-
-/// Up to `streams` live jobs, least-progressed first (ties → lowest
-/// index), no two sharing a pool stream. This is the fair-share
-/// generalization of one-step-each cycling to concurrent rounds: with a
-/// single stream it degenerates to exactly the classic cyclic order (all
-/// live jobs stay within one step of each other, and the least-stepped
-/// lowest index is the next cyclic pick), while under stream conflicts
-/// the lagging job of a contended stream always outranks its
-/// stream-mates, so nobody starves.
-fn pick_round_robin(live: &[LiveJob<'_>], streams: usize, rs: &mut RoundState) {
-    rs.order.clear();
-    rs.order
-        .extend((0..live.len()).filter(|&i| live[i].stop.is_none()));
-    rs.order.sort_unstable_by_key(|&i| (live[i].steps, i));
-    assign_streams(live, streams, rs);
-}
-
-/// Up to `streams` live jobs by ascending deadline slack (`deadline -
-/// steps`; jobs without a deadline rank last, ties break on job index so
-/// scheduling is fully deterministic), no two sharing a pool stream.
-fn pick_edf(live: &[LiveJob<'_>], streams: usize, rs: &mut RoundState) {
-    rs.order.clear();
-    rs.order
-        .extend((0..live.len()).filter(|&i| live[i].stop.is_none()));
-    rs.order.sort_unstable_by_key(|&i| {
-        let slack = live[i]
-            .deadline
-            .map(|d| d.saturating_sub(live[i].steps))
-            .unwrap_or(u64::MAX);
-        (slack, i)
-    });
-    assign_streams(live, streams, rs);
-}
-
-/// Greedily assign the policy-ordered jobs (`rs.order`) to
-/// pairwise-distinct streams, into `rs.picked` (one grid in flight per
-/// stream per round). An active job keeps its pinning — its buffers
-/// already target that stream — and is skipped if the stream is taken
-/// this round; a suspended job has no pinning and takes the lowest free
-/// stream (that restore-time re-pinning is the migration path). Fully
-/// deterministic, and allocation-free: every buffer lives in
-/// [`RoundState`].
-fn assign_streams(live: &[LiveJob<'_>], streams: usize, rs: &mut RoundState) {
-    rs.used.iter_mut().for_each(|u| *u = false);
-    rs.picked.clear();
-    for &i in &rs.order {
-        let stream = if live[i].run.is_some() {
-            let s = live[i].stream;
-            if rs.used[s] {
-                continue;
-            }
-            s
-        } else {
-            match rs.used.iter().position(|&u| !u) {
-                Some(s) => s,
-                None => break,
-            }
-        };
-        rs.used[stream] = true;
-        rs.picked.push((i, stream));
-        if rs.picked.len() == streams {
-            break;
-        }
     }
 }
 
@@ -1269,6 +943,7 @@ mod tests {
             StopReason::TargetReached,
             StopReason::MaxIter,
             StopReason::Stalled,
+            StopReason::Cancelled,
         ] {
             assert_eq!(StopReason::from_code(reason.code()).unwrap(), reason);
         }
@@ -1288,5 +963,53 @@ mod tests {
     fn empty_spec_list_is_fine() {
         let scheduler = JobScheduler::with_workers(1);
         assert!(scheduler.run(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn duplicate_job_names_are_rejected_at_intake() {
+        // Names are identity keys (the service addresses jobs by name):
+        // a second "twin" must be a loud error, not a silent shadow.
+        let scheduler = JobScheduler::with_workers(1);
+        let specs = vec![
+            spec("twin", EngineKind::Queue, 32, 5, 1),
+            spec("twin", EngineKind::Reduction, 32, 5, 2),
+        ];
+        let err = scheduler.run(&specs).unwrap_err().to_string();
+        assert!(err.contains("twin") && err.contains("unique"), "{err}");
+    }
+
+    #[test]
+    fn session_admit_cancel_and_recycle_slots() {
+        let scheduler = JobScheduler::with_workers(2);
+        let mut session = scheduler.session();
+        assert_eq!(session.admit(spec("a", EngineKind::Queue, 32, 40, 1)).unwrap(), 0);
+        assert_eq!(session.admit(spec("b", EngineKind::Queue, 32, 40, 2)).unwrap(), 1);
+        assert_eq!(session.live(), 2);
+        for _ in 0..4 {
+            session.round(&mut |_| {}).unwrap();
+        }
+        // Cancel at a round boundary: outcome carries the steps done.
+        let out = session.cancel("a").unwrap();
+        assert_eq!(out.stop, StopReason::Cancelled);
+        assert!(out.steps > 0 && out.steps < 40, "steps {}", out.steps);
+        assert_eq!(out.output.iters, out.steps);
+        assert_eq!(session.live(), 1);
+        // Cancelling again (or an unknown name) is loud.
+        assert!(session.cancel("a").is_err());
+        assert!(session.cancel("nope").is_err());
+        // The freed slot 0 is recycled by the next admission; the name
+        // is reusable once the original job is gone.
+        assert_eq!(session.admit(spec("a", EngineKind::Queue, 32, 6, 3)).unwrap(), 0);
+        while session.live() > 0 {
+            session.round(&mut |_| {}).unwrap();
+        }
+        let mut reaped = Vec::new();
+        session.reap(|o| reaped.push(o)).unwrap();
+        assert_eq!(reaped.len(), 2);
+        assert_eq!(session.occupied(), 0);
+        assert_eq!(&*reaped[0].name, "a");
+        assert_eq!(reaped[0].steps, 6);
+        assert_eq!(&*reaped[1].name, "b");
+        assert_eq!(reaped[1].steps, 40);
     }
 }

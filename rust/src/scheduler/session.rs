@@ -1,0 +1,771 @@
+//! The stateful scheduling session: job slots, round stepping, and the
+//! dynamic admission/cancellation surface the service layer builds on.
+//!
+//! [`super::JobScheduler::run_session_with`] used to own this logic as
+//! one monolithic loop over a fixed spec slice. A live service cannot
+//! work that way — tenants submit and cancel jobs while the scheduler is
+//! running — so the loop's state is now a first-class [`Session`]:
+//!
+//! * **Job slots.** Jobs live in a slot table (`Vec<Option<SlotJob>>`).
+//!   [`Session::admit`] fills the lowest free slot (recycling the slots
+//!   of reaped/cancelled jobs) and pins the job to pool stream
+//!   `slot % S` — exactly the pinning rule the fixed-batch path always
+//!   used, so a batch admitted up front is indistinguishable from the
+//!   old code path.
+//! * **Round-boundary mutation.** [`Session::round`] steps one
+//!   scheduling round; admission ([`Session::admit`]), cancellation
+//!   ([`Session::cancel`]) and reaping ([`Session::reap`]) only ever
+//!   happen *between* rounds, when every grid is quiescent and every
+//!   `Run` sits at a step boundary. That keeps the determinism proof
+//!   intact: a `Run` owns all of its mutable state, a launch never spans
+//!   runs, and now additionally no job is ever created or destroyed
+//!   while a round is in flight — so a job's trajectory is bit-identical
+//!   regardless of *when* its neighbours were admitted or cancelled
+//!   (`rust/tests/scheduler_determinism.rs` § late admission).
+//! * **Unique names.** Job names are `Arc<str>` identity keys (the
+//!   service addresses jobs by name), so admission rejects duplicates
+//!   loudly instead of letting a second `"alpha"` shadow the first.
+//! * **Zero-allocation steady state.** All round bookkeeping lives in
+//!   [`RoundState`] buffers grown only at admission time, and the
+//!   executors are (re)created only when the occupied-slot count grows —
+//!   a warmed-up round still performs zero heap allocations for the
+//!   bit-exact engines (`rust/tests/zero_alloc.rs`), including the
+//!   service loop's empty-control-queue rounds.
+//!
+//! ## Lifetime erasure
+//!
+//! A [`Run`] borrows its fitness (`Engine::prepare<'a>`), which made the
+//! old `LiveJob<'a>` borrow the caller's spec slice. A dynamic session
+//! *owns* its specs, so a slot stores the run with an **erased**
+//! lifetime next to the `JobSpec` whose `Arc<dyn Fitness>` it borrows —
+//! the same discipline as the executor module's lifetime-erased command
+//! pointers. Soundness rests on three invariants, all local to this
+//! module: the `Arc` pointee is heap-allocated and never moves; a slot
+//! never replaces `spec.fitness` while `run` is `Some`; and `SlotJob`
+//! declares `run` before `spec`, so the run (and with it the erased
+//! borrow) always drops first.
+
+use super::executor::{spin_budget, StreamExecutors};
+use super::{
+    effective_batch, JobOutcome, JobReport, JobScheduler, JobSpec, SchedPolicy, StopReason,
+};
+use crate::checkpoint::{JobCheckpoint, RunCheckpoint, RunKind};
+use crate::engine::{self, ParallelSettings, Run, StepReport};
+use crate::fitness::Fitness;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// One occupied job slot.
+struct SlotJob {
+    /// The live run — `None` while the job is suspended to `parked`.
+    /// Declared FIRST: its erased borrow of `spec.fitness` must end
+    /// before `spec` (and the `Arc` it holds) drops.
+    run: Option<Box<dyn Run + 'static>>,
+    /// The suspension checkpoint of an inactive job (shared, so snapshot
+    /// persistence never deep-copies a parked swarm).
+    parked: Option<Arc<RunCheckpoint>>,
+    /// The job's spec — owns the `Arc<dyn Fitness>` the run borrows.
+    spec: JobSpec,
+    steps: u64,
+    stalled: u64,
+    stop: Option<StopReason>,
+    /// Pool stream the job's launches are currently pinned to. A
+    /// suspended job loses its pinning and may be restored onto any free
+    /// stream (migration).
+    stream: usize,
+    /// Steps executed since the last (re)activation — the preemption
+    /// quantum counts against this, not lifetime steps.
+    active_steps: u64,
+}
+
+/// Extend a fitness borrow to `'static` so the run can live in the same
+/// slot as the spec that owns it.
+///
+/// # Safety
+/// The caller must guarantee the `Arc<dyn Fitness>` inside `spec` stays
+/// alive (and is never replaced) for as long as anything produced from
+/// the returned reference lives. [`SlotJob`]'s field order and the
+/// module's no-reassignment invariant uphold this for every use here.
+unsafe fn erased_fitness(spec: &JobSpec) -> &'static dyn Fitness {
+    let fitness: &dyn Fitness = &*spec.fitness;
+    std::mem::transmute::<&dyn Fitness, &'static dyn Fitness>(fitness)
+}
+
+/// Read-only view of one occupied slot (the service's `status` rows).
+#[derive(Debug, Clone, Copy)]
+pub struct JobView<'a> {
+    /// Slot index (stable for the job's lifetime, recycled afterwards).
+    pub slot: usize,
+    /// Job name.
+    pub name: &'a str,
+    /// Engine kind.
+    pub engine: crate::config::EngineKind,
+    /// Steps executed so far.
+    pub steps: u64,
+    /// The run's iteration budget.
+    pub max_iter: u64,
+    /// Current global-best fitness.
+    pub gbest_fit: f64,
+    /// Pool stream the job is pinned to.
+    pub stream: usize,
+    /// Set once the job terminated (awaiting [`Session::reap`]).
+    pub stop: Option<StopReason>,
+}
+
+/// Reusable per-session scheduling buffers, grown only at admission time
+/// so the steady-state loop performs zero heap allocations per round.
+struct RoundState {
+    /// Policy-ordering scratch (live slot indices).
+    order: Vec<usize>,
+    /// Streams taken this round.
+    used: Vec<bool>,
+    /// The round's picks: `(slot index, stream)`.
+    picked: Vec<(usize, usize)>,
+    /// Slot index per submitted executor slot, in submission order.
+    inflight: Vec<usize>,
+    /// The round's step reports, sorted by slot index before delivery.
+    reports: Vec<(usize, StepReport)>,
+}
+
+impl RoundState {
+    fn new(streams: usize) -> Self {
+        Self {
+            order: Vec::new(),
+            used: vec![false; streams],
+            picked: Vec::new(),
+            inflight: Vec::new(),
+            reports: Vec::new(),
+        }
+    }
+
+    /// Pre-size every buffer for `slots` job slots on `streams` streams
+    /// (called at admission, never inside a round).
+    fn ensure(&mut self, streams: usize, slots: usize) {
+        let width = streams.min(slots.max(1));
+        reserve_to(&mut self.order, slots);
+        reserve_to(&mut self.picked, width);
+        reserve_to(&mut self.inflight, width);
+        reserve_to(&mut self.reports, width);
+    }
+}
+
+fn reserve_to<T>(v: &mut Vec<T>, cap: usize) {
+    if v.capacity() < cap {
+        v.reserve(cap - v.len());
+    }
+}
+
+/// A live scheduling session over one shared pool: jobs can be admitted,
+/// stepped round by round, cancelled, reaped and snapshotted — see the
+/// module docs. [`JobScheduler::run_session_with`] drives one of these
+/// for the fixed-batch path; the service layer drives one for live
+/// traffic.
+pub struct Session {
+    settings: ParallelSettings,
+    policy: SchedPolicy,
+    batch_steps: u64,
+    preempt_quantum: Option<u64>,
+    spawn_per_round: bool,
+    streams: usize,
+    /// Declared BEFORE `slots`: fields drop in declaration order, and a
+    /// panic unwinding mid-round (e.g. a fitness function panicking on
+    /// the scheduling thread while executors still step their submitted
+    /// runs) must join the executor threads *before* the runs they hold
+    /// raw pointers into are freed. The pre-refactor code got this from
+    /// local-variable drop order; the struct must encode it explicitly.
+    executors: Option<StreamExecutors>,
+    slots: Vec<Option<SlotJob>>,
+    /// Occupied slots (live + terminated-but-unreaped).
+    occupied: usize,
+    /// Occupied slots that have not terminated yet.
+    live: usize,
+    rounds: u64,
+    rs: RoundState,
+}
+
+impl Session {
+    pub(super) fn new(sched: &JobScheduler) -> Self {
+        let streams = sched.settings.pool.streams();
+        Self {
+            settings: sched.settings.clone(),
+            policy: sched.policy,
+            batch_steps: sched.batch_steps,
+            preempt_quantum: sched.preempt_quantum,
+            spawn_per_round: sched.spawn_per_round,
+            streams,
+            executors: None,
+            slots: Vec::new(),
+            occupied: 0,
+            live: 0,
+            rounds: 0,
+            rs: RoundState::new(streams),
+        }
+    }
+
+    /// Occupied slots that have not terminated yet.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Occupied slots (live + terminated-but-unreaped).
+    pub fn occupied(&self) -> usize {
+        self.occupied
+    }
+
+    /// Scheduling rounds executed so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Concurrent streams of the underlying pool.
+    pub fn streams(&self) -> usize {
+        self.streams
+    }
+
+    /// The pool stream the job in `slot` is currently pinned to
+    /// (`None` for a free slot). This is the session's own record —
+    /// callers reporting a job's placement must read it here rather
+    /// than re-deriving the pinning rule, which migration can overrule.
+    pub fn stream_of(&self, slot: usize) -> Option<usize> {
+        self.slots.get(slot)?.as_ref().map(|job| job.stream)
+    }
+
+    /// Reject a name that is already an occupied slot's identity key.
+    fn check_unique(&self, name: &str) -> Result<()> {
+        if self.slots.iter().flatten().any(|j| &*j.spec.name == name) {
+            bail!("duplicate job name {name:?}: job names are unique identity keys");
+        }
+        Ok(())
+    }
+
+    /// The lowest free slot, or a fresh one at the end of the table.
+    fn free_slot(&self) -> usize {
+        self.slots
+            .iter()
+            .position(Option::is_none)
+            .unwrap_or(self.slots.len())
+    }
+
+    fn insert(&mut self, idx: usize, job: SlotJob) {
+        if idx == self.slots.len() {
+            self.slots.push(Some(job));
+        } else {
+            debug_assert!(self.slots[idx].is_none(), "insert into an occupied slot");
+            self.slots[idx] = Some(job);
+        }
+        self.occupied += 1;
+        self.rs.ensure(self.streams, self.slots.len());
+    }
+
+    /// Admit a new job: prepare its run (all buffers allocated here, the
+    /// hot path stays allocation-free), pin it to stream `slot % S`, and
+    /// return its slot index. Rejects non-schedulable engines and
+    /// duplicate names.
+    pub fn admit(&mut self, spec: JobSpec) -> Result<usize> {
+        self.check_unique(&spec.name)?;
+        let idx = self.free_slot();
+        let stream = idx % self.streams;
+        let mut engine = engine::build_with(spec.engine, self.settings.clone().on_stream(idx))
+            .with_context(|| {
+                format!("job {}: engine {} is not schedulable", spec.name, spec.engine)
+            })?;
+        // SAFETY: the run lands in the same slot as `spec`; the slot
+        // drops it first and never swaps `spec.fitness` (module docs).
+        let fitness = unsafe { erased_fitness(&spec) };
+        let run = engine.prepare(&spec.params, fitness, spec.objective, spec.seed);
+        let job = SlotJob {
+            run: Some(run),
+            parked: None,
+            spec,
+            steps: 0,
+            stalled: 0,
+            stop: None,
+            stream,
+            active_steps: 0,
+        };
+        self.insert(idx, job);
+        self.live += 1;
+        Ok(idx)
+    }
+
+    /// Admit a job suspended in an earlier session: validate the
+    /// checkpoint against the spec and park it — the run is restored
+    /// lazily when the policy first picks it, onto whichever stream is
+    /// free that round (migration).
+    pub fn admit_resumed(&mut self, spec: JobSpec, ckpt: &JobCheckpoint) -> Result<usize> {
+        self.check_unique(&spec.name)?;
+        let idx = self.free_slot();
+        if ckpt.name != spec.name {
+            bail!(
+                "resume snapshot job {idx} is {:?}, spec says {:?}",
+                ckpt.name,
+                spec.name
+            );
+        }
+        ckpt.run
+            .validate()
+            .with_context(|| format!("resuming job {}", spec.name))?;
+        if RunKind::from_engine(spec.engine) != Some(ckpt.run.kind) {
+            bail!(
+                "resuming job {}: checkpoint is a {} run, spec wants engine {}",
+                spec.name,
+                ckpt.run.kind,
+                spec.engine
+            );
+        }
+        // The swarm's fit/pbest arrays were computed under the recorded
+        // fitness — continuing under a different one would be silently
+        // wrong, never do it.
+        if ckpt.fitness != spec.fitness.name() {
+            bail!(
+                "resuming job {}: checkpoint was taken under fitness {:?}, spec uses {:?}",
+                spec.name,
+                ckpt.fitness,
+                spec.fitness.name()
+            );
+        }
+        let stop = ckpt.stop.map(StopReason::from_code).transpose()?;
+        let job = SlotJob {
+            run: None,
+            // Arc clone: resuming shares the caller's checkpoint instead
+            // of deep-copying the swarm arrays.
+            parked: Some(Arc::clone(&ckpt.run)),
+            steps: ckpt.run.iter,
+            stalled: ckpt.stalled,
+            stop,
+            stream: idx % self.streams,
+            active_steps: 0,
+            spec,
+        };
+        self.insert(idx, job);
+        if stop.is_none() {
+            self.live += 1;
+        }
+        Ok(idx)
+    }
+
+    /// Cancel a live job by name at this round boundary: the slot is
+    /// freed immediately (recyclable by the next admission) and the
+    /// outcome — stop reason [`StopReason::Cancelled`], output as of the
+    /// executed steps — is returned. Cancelling an unknown or
+    /// already-terminated job is a loud error.
+    pub fn cancel(&mut self, name: &str) -> Result<JobOutcome> {
+        let idx = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|j| &*j.spec.name == name))
+            .with_context(|| format!("no scheduled job named {name:?}"))?;
+        {
+            let job = self.slots[idx].as_ref().expect("position hit");
+            if let Some(stop) = job.stop {
+                bail!("job {name:?} already terminated ({stop})");
+            }
+        }
+        let mut job = self.slots[idx].take().expect("position hit");
+        self.occupied -= 1;
+        self.live -= 1;
+        job.stop = Some(StopReason::Cancelled);
+        finish_slot(job, &self.settings, idx)
+    }
+
+    /// Free every terminated slot, handing its [`JobOutcome`] to `f` in
+    /// slot order. The freed slots are recycled by later admissions.
+    pub fn reap<F: FnMut(JobOutcome)>(&mut self, mut f: F) -> Result<()> {
+        for idx in 0..self.slots.len() {
+            if self.slots[idx].as_ref().is_some_and(|j| j.stop.is_some()) {
+                let job = self.slots[idx].take().expect("checked occupied");
+                self.occupied -= 1;
+                f(finish_slot(job, &self.settings, idx)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume the session into outcomes for every occupied slot, in
+    /// slot order. Every occupied job must have terminated.
+    pub fn into_outcomes(mut self) -> Result<Vec<JobOutcome>> {
+        let mut outcomes = Vec::with_capacity(self.occupied);
+        for idx in 0..self.slots.len() {
+            let Some(job) = self.slots[idx].take() else {
+                continue;
+            };
+            outcomes.push(finish_slot(job, &self.settings, idx)?);
+        }
+        Ok(outcomes)
+    }
+
+    /// One [`JobCheckpoint`] per occupied slot, in slot order — active
+    /// jobs checkpoint their live runs (a copy is unavoidable: the run
+    /// keeps stepping), while suspended jobs share their parked
+    /// checkpoint via `Arc` instead of deep-copying it.
+    pub fn snapshot(&self) -> Vec<JobCheckpoint> {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|job| JobCheckpoint {
+                name: job.spec.name.clone(),
+                fitness: job.spec.fitness.name().to_string(),
+                stalled: job.stalled,
+                stop: job.stop.map(StopReason::code),
+                target_fit: job.spec.termination.target_fit,
+                stall_window: job.spec.termination.stall_window,
+                max_steps: job.spec.termination.max_iter,
+                deadline: job.spec.deadline,
+                run: match &job.run {
+                    Some(run) => Arc::new(run.checkpoint()),
+                    None => Arc::clone(
+                        job.parked
+                            .as_ref()
+                            .expect("inactive job holds its checkpoint"),
+                    ),
+                },
+            })
+            .collect()
+    }
+
+    /// Visit every occupied slot's status row, in slot order.
+    pub fn jobs<F: FnMut(JobView<'_>)>(&self, mut f: F) {
+        for (i, slot) in self.slots.iter().enumerate() {
+            let Some(job) = slot else { continue };
+            f(JobView {
+                slot: i,
+                name: &job.spec.name,
+                engine: job.spec.engine,
+                steps: job.steps,
+                max_iter: job.spec.params.max_iter,
+                gbest_fit: match &job.run {
+                    Some(run) => run.gbest_fit(),
+                    None => {
+                        job.parked
+                            .as_ref()
+                            .expect("inactive job holds its checkpoint")
+                            .gbest_fit
+                    }
+                },
+                stream: job.stream,
+                stop: job.stop,
+            });
+        }
+    }
+
+    /// (Re)create the persistent executors when the occupied-slot count
+    /// outgrew them. A pure comparison in the steady state — no
+    /// allocation unless an admission actually raised the width.
+    fn ensure_executors(&mut self) {
+        if self.spawn_per_round || self.streams <= 1 || self.occupied <= 1 {
+            return;
+        }
+        let needed = self.streams.min(self.occupied) - 1;
+        let have = self.executors.as_ref().map_or(0, StreamExecutors::count);
+        if needed > have {
+            let total = self.settings.pool.workers() + self.streams + needed;
+            self.executors = Some(StreamExecutors::new(needed, spin_budget(total)));
+        }
+    }
+
+    /// Execute one scheduling round: pick up to `S` live jobs under the
+    /// policy, step them (in parallel across streams), deliver their
+    /// reports to `telemetry` in slot order, and apply termination and
+    /// preemption. Calling with no live job is a loud error (a caller's
+    /// drive loop must check [`live`](Self::live), and a misuse should
+    /// surface as the `Result` this signature advertises, not a panic
+    /// deep in the stepping machinery).
+    pub fn round<F: FnMut(&JobReport<'_>)>(&mut self, telemetry: &mut F) -> Result<()> {
+        if self.live == 0 {
+            bail!("scheduling round requested with no live job");
+        }
+        self.ensure_executors();
+        self.rounds += 1;
+        match self.policy {
+            SchedPolicy::RoundRobin => pick_round_robin(&self.slots, self.streams, &mut self.rs),
+            SchedPolicy::EarliestDeadlineFirst => pick_edf(&self.slots, self.streams, &mut self.rs),
+        }
+        debug_assert!(!self.rs.picked.is_empty(), "unfinished job exists");
+        self.step_round()?;
+        apply_reports(&mut self.slots, &self.rs, &mut self.live, telemetry);
+        // Preemption: once a picked job has spent its quantum and the
+        // live set still outnumbers the streams, suspend it — its
+        // buffers are MOVED into a checkpoint (no deep copy) and its
+        // stream frees up for a neighbour next round.
+        if let Some(quantum) = self.preempt_quantum {
+            if self.live > self.streams {
+                for k in 0..self.rs.picked.len() {
+                    let (idx, _) = self.rs.picked[k];
+                    let job = self.slots[idx].as_mut().expect("picked job is occupied");
+                    if job.stop.is_none() && job.active_steps >= quantum {
+                        if let Some(run) = job.run.take() {
+                            job.parked = Some(Arc::new(run.into_checkpoint()));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Step every picked job once (a batch of `batch_steps` iterations),
+    /// in parallel when the round holds several jobs — each job's
+    /// launches go to its assigned pool stream, so the grids genuinely
+    /// overlap. Suspended picks are restored first, onto the stream the
+    /// round assigned them (migration when it differs from their last
+    /// pinning). Leaves `(slot, report)` pairs sorted by slot index in
+    /// `rs.reports`.
+    ///
+    /// Concurrent rounds default to the persistent executors (publish +
+    /// wake per extra job); in spawn-per-round mode they fall back to one
+    /// scoped OS thread per extra job — the legacy baseline
+    /// `benches/scheduler_latency.rs` measures against.
+    fn step_round(&mut self) -> Result<()> {
+        let Session {
+            ref settings,
+            batch_steps,
+            ref mut slots,
+            ref mut rs,
+            ref executors,
+            ..
+        } = *self;
+        for k in 0..rs.picked.len() {
+            let (idx, stream) = rs.picked[k];
+            let job = slots[idx].as_mut().expect("picked job is occupied");
+            if job.run.is_none() {
+                let ckpt = job.parked.take().expect("parked job has a checkpoint");
+                // SAFETY: same slot-local erasure contract as `admit`.
+                let fitness = unsafe { erased_fitness(&job.spec) };
+                let run =
+                    engine::restore_with(&ckpt, settings.clone().on_stream(stream), fitness)
+                        .with_context(|| format!("restoring job {}", job.spec.name))?;
+                job.run = Some(run);
+                job.stream = stream;
+                job.active_steps = 0;
+            }
+        }
+        rs.reports.clear();
+        if let [(idx, _)] = *rs.picked {
+            // Serialized fast path (always taken on a single-stream
+            // pool): no stepping threads, identical to the pre-stream
+            // scheduler loop.
+            let job = slots[idx].as_mut().expect("picked job is occupied");
+            let k = effective_batch(batch_steps, &job.spec.termination, job.steps);
+            let run = job.run.as_mut().expect("picked job is active");
+            rs.reports.push((idx, run.step_many(k)));
+            return Ok(());
+        }
+        if let Some(execs) = executors {
+            // Persistent-executor path: publish every pick but the first
+            // to an executor slot, step the first inline on the
+            // scheduling thread, then collect the echoes — no spawn, no
+            // join, no allocation.
+            rs.inflight.clear();
+            let mut first: Option<(usize, u64, &mut Box<dyn Run + 'static>)> = None;
+            for (i, slot) in slots.iter_mut().enumerate() {
+                let Some(job) = slot.as_mut() else { continue };
+                if !rs.picked.iter().any(|&(p, _)| p == i) {
+                    continue;
+                }
+                let k = effective_batch(batch_steps, &job.spec.termination, job.steps);
+                let run = job.run.as_mut().expect("picked job is active");
+                if first.is_none() {
+                    first = Some((i, k, run));
+                } else {
+                    let e = rs.inflight.len();
+                    // SAFETY: every submitted slot is waited on below,
+                    // before the runs are touched again and before this
+                    // function returns; each run goes to one slot.
+                    unsafe { execs.submit(e, &mut **run, k) };
+                    rs.inflight.push(i);
+                }
+            }
+            let (i0, k0, run0) = first.expect("non-empty round");
+            rs.reports.push((i0, run0.step_many(k0)));
+            for (e, &i) in rs.inflight.iter().enumerate() {
+                execs.wait(e);
+                rs.reports.push((i, execs.take_report(e)));
+            }
+        } else {
+            // Legacy spawn-per-round path: S − 1 scoped threads per round.
+            let tasks: Vec<(usize, u64, &mut SlotJob)> = slots
+                .iter_mut()
+                .enumerate()
+                .filter_map(|(i, s)| s.as_mut().map(|job| (i, job)))
+                .filter(|(i, _)| rs.picked.iter().any(|&(p, _)| p == *i))
+                .map(|(i, job)| {
+                    let k = effective_batch(batch_steps, &job.spec.termination, job.steps);
+                    (i, k, job)
+                })
+                .collect();
+            let stepped = std::thread::scope(|scope| {
+                let mut it = tasks.into_iter();
+                let (i0, k0, job0) = it.next().expect("non-empty round");
+                let handles: Vec<_> = it
+                    .map(|(i, k, job)| {
+                        scope.spawn(move || {
+                            let run = job.run.as_mut().expect("picked job is active");
+                            (i, run.step_many(k))
+                        })
+                    })
+                    .collect();
+                // The scheduling thread steps the first job itself: a
+                // round of S jobs costs S − 1 spawns.
+                let run0 = job0.run.as_mut().expect("picked job is active");
+                let mut out = vec![(i0, run0.step_many(k0))];
+                for h in handles {
+                    out.push(h.join().expect("stepping thread panicked"));
+                }
+                out
+            });
+            rs.reports.extend(stepped);
+        }
+        rs.reports.sort_unstable_by_key(|&(i, _)| i);
+        Ok(())
+    }
+}
+
+/// Deliver the round's reports: update progress/stall counters, evaluate
+/// termination, and stream the [`JobReport`]s in slot order.
+fn apply_reports<F: FnMut(&JobReport<'_>)>(
+    slots: &mut [Option<SlotJob>],
+    rs: &RoundState,
+    live: &mut usize,
+    telemetry: &mut F,
+) {
+    for (idx, report) in rs.reports.iter() {
+        let idx = *idx;
+        let job = slots[idx].as_mut().expect("reported job is occupied");
+        let executed = report.iter - job.steps;
+        job.steps = report.iter;
+        job.active_steps += executed;
+        if report.improved {
+            job.stalled = 0;
+        } else {
+            job.stalled += executed;
+        }
+        // Criteria outrank budget exhaustion so a target hit on the
+        // final iteration still reports TargetReached (matching the
+        // precedence TerminationCriteria::check documents).
+        let stop = job
+            .spec
+            .termination
+            .check(job.spec.objective, report.gbest_fit, job.steps, job.stalled)
+            .or(report.done.then_some(StopReason::Exhausted));
+        telemetry(&JobReport {
+            job: idx,
+            name: &job.spec.name,
+            iter: job.steps,
+            gbest_fit: report.gbest_fit,
+            improved: report.improved,
+            finished: stop,
+        });
+        if stop.is_some() {
+            job.stop = stop;
+            *live -= 1;
+        }
+    }
+}
+
+/// Turn a terminated (or cancelled) slot into its [`JobOutcome`]. A job
+/// that finished in a previous session (or was never reactivated) is
+/// restored once, just to finish.
+fn finish_slot(mut job: SlotJob, settings: &ParallelSettings, slot: usize) -> Result<JobOutcome> {
+    let run = match job.run.take() {
+        Some(run) => run,
+        None => {
+            let ckpt = job
+                .parked
+                .take()
+                .expect("inactive job holds its checkpoint");
+            // SAFETY: the restored run is consumed by `finish()` below,
+            // before `job.spec` (and its fitness Arc) drops.
+            let fitness = unsafe { erased_fitness(&job.spec) };
+            engine::restore_with(&ckpt, settings.clone().on_stream(slot), fitness)
+                .with_context(|| format!("finishing job {}", job.spec.name))?
+        }
+    };
+    Ok(JobOutcome {
+        name: job.spec.name.clone(),
+        engine: job.spec.engine,
+        stop: job.stop.expect("every finished job has a stop reason"),
+        steps: job.steps,
+        output: run.finish(),
+    })
+}
+
+/// Up to `streams` live jobs, least-progressed first (ties → lowest
+/// slot index), no two sharing a pool stream. This is the fair-share
+/// generalization of one-step-each cycling to concurrent rounds: with a
+/// single stream it degenerates to exactly the classic cyclic order (all
+/// live jobs stay within one step of each other, and the least-stepped
+/// lowest index is the next cyclic pick), while under stream conflicts
+/// the lagging job of a contended stream always outranks its
+/// stream-mates, so nobody starves. A freshly admitted job starts at
+/// zero steps and therefore catches up with its neighbours first —
+/// fair-share by progress, exactly as a fresh batch behaves.
+fn pick_round_robin(slots: &[Option<SlotJob>], streams: usize, rs: &mut RoundState) {
+    rs.order.clear();
+    rs.order.extend(
+        slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.as_ref().is_some_and(|j| j.stop.is_none()))
+            .map(|(i, _)| i),
+    );
+    rs.order
+        .sort_unstable_by_key(|&i| (slots[i].as_ref().expect("live slot").steps, i));
+    assign_streams(slots, streams, rs);
+}
+
+/// Up to `streams` live jobs by ascending deadline slack (`deadline -
+/// steps`; jobs without a deadline rank last, ties break on slot index so
+/// scheduling is fully deterministic), no two sharing a pool stream.
+fn pick_edf(slots: &[Option<SlotJob>], streams: usize, rs: &mut RoundState) {
+    rs.order.clear();
+    rs.order.extend(
+        slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.as_ref().is_some_and(|j| j.stop.is_none()))
+            .map(|(i, _)| i),
+    );
+    rs.order.sort_unstable_by_key(|&i| {
+        let job = slots[i].as_ref().expect("live slot");
+        let slack = job
+            .spec
+            .deadline
+            .map(|d| d.saturating_sub(job.steps))
+            .unwrap_or(u64::MAX);
+        (slack, i)
+    });
+    assign_streams(slots, streams, rs);
+}
+
+/// Greedily assign the policy-ordered jobs (`rs.order`) to
+/// pairwise-distinct streams, into `rs.picked` (one grid in flight per
+/// stream per round). An active job keeps its pinning — its buffers
+/// already target that stream — and is skipped if the stream is taken
+/// this round; a suspended job has no pinning and takes the lowest free
+/// stream (that restore-time re-pinning is the migration path). Fully
+/// deterministic, and allocation-free: every buffer lives in
+/// [`RoundState`].
+fn assign_streams(slots: &[Option<SlotJob>], streams: usize, rs: &mut RoundState) {
+    rs.used.iter_mut().for_each(|u| *u = false);
+    rs.picked.clear();
+    for &i in &rs.order {
+        let job = slots[i].as_ref().expect("ordered slot is live");
+        let stream = if job.run.is_some() {
+            let s = job.stream;
+            if rs.used[s] {
+                continue;
+            }
+            s
+        } else {
+            match rs.used.iter().position(|&u| !u) {
+                Some(s) => s,
+                None => break,
+            }
+        };
+        rs.used[stream] = true;
+        rs.picked.push((i, stream));
+        if rs.picked.len() == streams {
+            break;
+        }
+    }
+}

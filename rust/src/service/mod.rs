@@ -1,0 +1,677 @@
+//! `cupso serve` — the live job-service daemon.
+//!
+//! Every earlier entry point (`cupso batch`, [`crate::scheduler`]'s
+//! fixed-batch calls) takes a job list decided before the session
+//! starts. A service handling live traffic cannot: tenants submit work
+//! to a *running* scheduler, cancel it, watch it, and expect the whole
+//! thing to shut down cleanly without losing their state. This module
+//! provides exactly that, in three pieces:
+//!
+//! * [`ServiceSession`] — the daemon loop. It owns a dynamic
+//!   [`Session`] (slot table, admission, cancellation, reaping) and an
+//!   MPSC **control queue** ([`Control`]) that is drained at every
+//!   round boundary: submits, cancels, status probes and the drain
+//!   request all take effect *between* scheduling rounds, when every
+//!   grid is quiescent. That boundary is what keeps the determinism
+//!   invariant alive under live traffic — a job's trajectory is
+//!   bit-identical regardless of when its neighbours were admitted or
+//!   cancelled (`rust/tests/scheduler_determinism.rs`) — and it costs
+//!   nothing in the steady state: an empty control queue is one
+//!   non-allocating `try_recv` per round, so warmed-up rounds stay
+//!   zero-allocation (`rust/tests/zero_alloc.rs`).
+//! * [`ServiceHandle`] — the cloneable client side of the control
+//!   queue, with blocking convenience calls (`submit`, `cancel`,
+//!   `status`, `drain`, `watch`). The socket server and in-process
+//!   tests both drive this.
+//! * [`proto`] / [`server`] — a line-oriented JSON protocol over a Unix
+//!   domain socket, so `cupso submit/status/cancel/drain` (or `nc -U`)
+//!   can talk to a daemon in another process.
+//!
+//! **Drain semantics.** `drain` checkpoints every live job through the
+//! shared snapshot store ([`crate::checkpoint::store`], the same
+//! `manifest.toml` + `job_<i>.ckpt` layout `cupso batch
+//! --checkpoint-dir` writes) and shuts the loop down. A drained service
+//! therefore resumes through the *existing* `cupso resume` path — the
+//! snapshot does not care whether its jobs arrived in a config file or
+//! were admitted live. Finished (and cancelled) jobs are reaped into a
+//! results table as they complete and are not part of the snapshot.
+//!
+//! **Lifecycle.** [`ServiceSession::run`] loops until (a) a drain
+//! request arrives, or (b) every [`ServiceHandle`] is dropped *and* all
+//! admitted work has finished — so a library caller can simply drop the
+//! handle and collect the results.
+
+pub mod proto;
+mod server;
+
+pub use server::{bind, spawn_server};
+
+use crate::checkpoint::store;
+use crate::config::{BatchConfig, EngineKind};
+use crate::scheduler::{JobOutcome, JobReport, JobScheduler, JobSpec, Session, StopReason};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+};
+use std::time::Duration;
+
+/// Finished-job rows retained for `status` and the end-of-life summary.
+/// A long-lived daemon completes unboundedly many jobs; the results
+/// table is a *window* (newest kept, oldest evicted) so memory and
+/// status-response size track current interest, not lifetime history —
+/// the total count is always reported alongside.
+pub const MAX_RESULTS: usize = 4096;
+
+/// Telemetry lines buffered per watcher. A watcher that stops reading
+/// (stalled client, full socket) falls behind; once it is this many
+/// events behind it is dropped, because the alternative — buffering
+/// without bound on an unbounded channel — lets one stalled observer
+/// OOM the whole daemon.
+pub const WATCH_BUFFER: usize = 1024;
+
+/// How often an *idle* service probes its watchers with a
+/// `{"event": "ping"}` heartbeat. Rounds reap dead watchers as a side
+/// effect of sending events; an idle daemon runs no rounds, so without
+/// the probe a disconnected watch client would pin its channel (and its
+/// server-side connection thread) forever.
+pub const IDLE_WATCH_PROBE: Duration = Duration::from_secs(30);
+
+/// Acknowledgement of a successful admission.
+#[derive(Debug, Clone)]
+pub struct Submitted {
+    /// The job's identity key.
+    pub name: std::sync::Arc<str>,
+    /// Slot the job landed in (freed slots are recycled).
+    pub slot: usize,
+    /// Pool stream the job was pinned to at admission (`slot % S`;
+    /// preemption may later migrate it).
+    pub stream: usize,
+}
+
+/// One live job's status row.
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    /// Job name.
+    pub name: String,
+    /// Engine kind.
+    pub engine: EngineKind,
+    /// Steps executed so far.
+    pub steps: u64,
+    /// Iteration budget.
+    pub max_iter: u64,
+    /// Current global-best fitness.
+    pub gbest_fit: f64,
+    /// Pool stream pinning.
+    pub stream: usize,
+}
+
+/// One finished (or cancelled) job's result row.
+#[derive(Debug, Clone)]
+pub struct FinishedJob {
+    /// Job name.
+    pub name: String,
+    /// Engine kind.
+    pub engine: EngineKind,
+    /// Why it stopped.
+    pub stop: StopReason,
+    /// Steps executed.
+    pub steps: u64,
+    /// Final global-best fitness.
+    pub gbest_fit: f64,
+}
+
+/// A point-in-time view of the service.
+#[derive(Debug, Clone)]
+pub struct StatusReport {
+    /// Scheduling rounds executed so far.
+    pub rounds: u64,
+    /// Concurrent pool streams.
+    pub streams: usize,
+    /// Live jobs, slot order.
+    pub live: Vec<JobStatus>,
+    /// The newest completed jobs (at most [`MAX_RESULTS`]), completion
+    /// order.
+    pub finished: Vec<FinishedJob>,
+    /// Every job ever completed (cancellations included) — may exceed
+    /// `finished.len()` once old rows have been evicted.
+    pub finished_total: u64,
+}
+
+/// Acknowledgement of a successful drain.
+#[derive(Debug, Clone)]
+pub struct DrainReport {
+    /// Live jobs checkpointed into the snapshot (0 = the service was
+    /// idle; nothing was written).
+    pub snapshotted: usize,
+    /// Jobs that had already finished over the service's lifetime
+    /// (their results were reported, not snapshotted).
+    pub finished: u64,
+    /// Where the snapshot landed, if one was written — feed it to
+    /// `cupso resume`.
+    pub dir: Option<PathBuf>,
+}
+
+/// A control-queue message. Client convenience wrappers live on
+/// [`ServiceHandle`]; each request carries its reply channel.
+pub enum Control {
+    /// Admit a job at the next round boundary.
+    Submit(Box<JobSpec>, Sender<Result<Submitted, String>>),
+    /// Cancel a live job by name at the next round boundary.
+    Cancel(String, Sender<Result<FinishedJob, String>>),
+    /// Report live jobs + finished results.
+    Status(Sender<StatusReport>),
+    /// Checkpoint all live jobs and shut down. The optional receiver is
+    /// a **completion latch**: after a successful drain the loop waits
+    /// (bounded) for it before returning, so the requester can flush
+    /// its acknowledgement to its client before the daemon exits — see
+    /// [`ServiceHandle::drain_then`].
+    Drain(Sender<Result<DrainReport, String>>, Option<Receiver<()>>),
+    /// Subscribe to the per-round telemetry stream (one JSON line per
+    /// stepped job per round; a final `{"event": "end"}` at shutdown).
+    /// Bounded: a subscriber more than [`WATCH_BUFFER`] events behind
+    /// is dropped.
+    Watch(SyncSender<String>),
+}
+
+/// Cloneable client side of a [`ServiceSession`]'s control queue.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<Control>,
+}
+
+impl ServiceHandle {
+    fn request<T>(&self, build: impl FnOnce(Sender<T>) -> Control) -> Result<T> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(build(tx))
+            .ok()
+            .context("service is no longer running")?;
+        rx.recv().ok().context("service shut down mid-request")
+    }
+
+    /// Admit `spec` at the next round boundary (blocks for the ack).
+    pub fn submit(&self, spec: JobSpec) -> Result<Submitted> {
+        self.request(|tx| Control::Submit(Box::new(spec), tx))?
+            .map_err(anyhow::Error::msg)
+    }
+
+    /// Cancel the live job `name` at the next round boundary.
+    pub fn cancel(&self, name: &str) -> Result<FinishedJob> {
+        self.request(|tx| Control::Cancel(name.to_string(), tx))?
+            .map_err(anyhow::Error::msg)
+    }
+
+    /// Snapshot the service's current state.
+    pub fn status(&self) -> Result<StatusReport> {
+        self.request(Control::Status)
+    }
+
+    /// Checkpoint all live jobs and shut the service down.
+    pub fn drain(&self) -> Result<DrainReport> {
+        self.request(|tx| Control::Drain(tx, None))?
+            .map_err(anyhow::Error::msg)
+    }
+
+    /// [`drain`](Self::drain) with a completion latch: the daemon defers
+    /// its exit until `()` arrives on `done` (or a bounded grace period
+    /// passes). The socket server uses this so the drain response is
+    /// flushed to the client *before* the process goes away — without
+    /// it, the reply write races process exit and the client can see a
+    /// bare EOF on a perfectly successful drain.
+    pub fn drain_then(&self, done: Receiver<()>) -> Result<DrainReport> {
+        self.request(|tx| Control::Drain(tx, Some(done)))?
+            .map_err(anyhow::Error::msg)
+    }
+
+    /// Subscribe to the telemetry stream (bounded: falling
+    /// [`WATCH_BUFFER`] events behind unsubscribes you).
+    pub fn watch(&self) -> Result<Receiver<String>> {
+        let (tx, rx) = sync_channel(WATCH_BUFFER);
+        self.tx
+            .send(Control::Watch(tx))
+            .ok()
+            .context("service is no longer running")?;
+        Ok(rx)
+    }
+}
+
+/// The end-of-life summary [`ServiceSession::run`] returns.
+#[derive(Debug)]
+pub struct ServiceEnd {
+    /// The newest finished (or cancelled) jobs, completion order — at
+    /// most [`MAX_RESULTS`] rows; `finished_total` counts all of them.
+    pub results: Vec<FinishedJob>,
+    /// Every job that completed over the service's lifetime.
+    pub finished_total: u64,
+    /// Live jobs checkpointed by a drain request (0 = ran dry or idle).
+    pub drained: usize,
+    /// Where the drain snapshot landed, if one was written.
+    pub snapshot_dir: Option<PathBuf>,
+}
+
+/// The daemon loop: a dynamic scheduler [`Session`] plus the control
+/// queue — see the module docs.
+pub struct ServiceSession {
+    session: Session,
+    rx: Receiver<Control>,
+    /// Scheduler knobs recorded in drain-snapshot manifests (the `jobs`
+    /// field is unused — the snapshot carries the real job list).
+    knobs: BatchConfig,
+    snapshot_dir: Option<PathBuf>,
+    /// Bounded window of the newest finished-job rows (see
+    /// [`MAX_RESULTS`]).
+    results: VecDeque<FinishedJob>,
+    /// Lifetime completion counter (survives window eviction).
+    finished_total: u64,
+    watchers: Vec<SyncSender<String>>,
+    drained: usize,
+    drained_to: Option<PathBuf>,
+    /// The drain requester's completion latch (waited on in `finish`).
+    drain_ack: Option<Receiver<()>>,
+}
+
+impl ServiceSession {
+    /// A service over `scheduler`'s configuration. `initial` jobs are
+    /// admitted before the loop starts (loud errors, not queued);
+    /// `snapshot_dir` is where a drain request checkpoints live jobs —
+    /// without it, draining a busy service is refused (data loss would
+    /// be silent otherwise).
+    pub fn new(
+        scheduler: &JobScheduler,
+        knobs: BatchConfig,
+        snapshot_dir: Option<PathBuf>,
+        initial: Vec<JobSpec>,
+    ) -> Result<(Self, ServiceHandle)> {
+        let mut session = scheduler.session();
+        for spec in initial {
+            session.admit(spec)?;
+        }
+        let (tx, rx) = channel();
+        Ok((
+            Self {
+                session,
+                rx,
+                knobs,
+                snapshot_dir,
+                results: VecDeque::new(),
+                finished_total: 0,
+                watchers: Vec::new(),
+                drained: 0,
+                drained_to: None,
+                drain_ack: None,
+            },
+            ServiceHandle { tx },
+        ))
+    }
+
+    /// Run the daemon loop, discarding telemetry.
+    pub fn run(self) -> Result<ServiceEnd> {
+        self.run_with(|_| {})
+    }
+
+    /// Run the daemon loop, streaming every [`JobReport`] to `telemetry`
+    /// (in addition to any protocol-level watchers).
+    ///
+    /// Per iteration: drain the control queue (blocking while idle,
+    /// non-blocking `try_recv` while jobs are live), then execute one
+    /// scheduling round and reap finished jobs into the results table.
+    /// Returns when a drain request lands or when every handle is gone
+    /// and all work has finished.
+    pub fn run_with<F: FnMut(&JobReport<'_>)>(mut self, mut telemetry: F) -> Result<ServiceEnd> {
+        loop {
+            if self.session.live() == 0 {
+                // Idle: park on the control queue instead of spinning.
+                // With watchers subscribed, wake periodically to probe
+                // them — rounds (the only other thing that touches
+                // watchers) don't run while idle, so a disconnected
+                // watch client would otherwise pin its channel and its
+                // server thread forever.
+                let received = if self.watchers.is_empty() {
+                    self.rx.recv().map_err(|_| ())
+                } else {
+                    match self.rx.recv_timeout(IDLE_WATCH_PROBE) {
+                        Ok(msg) => Ok(msg),
+                        Err(RecvTimeoutError::Timeout) => {
+                            self.probe_watchers();
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => Err(()),
+                    }
+                };
+                match received {
+                    Ok(msg) => {
+                        if self.apply(msg)? {
+                            return self.finish();
+                        }
+                    }
+                    Err(()) => return self.finish(), // every handle dropped
+                }
+            }
+            // Round boundary: drain whatever queued up. Empty-queue cost
+            // is one non-allocating try_recv.
+            loop {
+                match self.rx.try_recv() {
+                    Ok(msg) => {
+                        if self.apply(msg)? {
+                            return self.finish();
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        if self.session.live() == 0 {
+                            return self.finish();
+                        }
+                        break; // keep crunching the admitted work
+                    }
+                }
+            }
+            if self.session.live() > 0 {
+                self.step_round(&mut telemetry)?;
+            }
+        }
+    }
+
+    /// Send an idle heartbeat to every watcher, dropping the ones whose
+    /// clients are gone (their connection thread died, so the receiver
+    /// is disconnected) or wedged (buffer full). Only called while the
+    /// service is idle — busy rounds reap watchers on every event.
+    fn probe_watchers(&mut self) {
+        let line = proto::Obj::new().str("event", "ping").render();
+        self.watchers.retain(|w| w.try_send(line.clone()).is_ok());
+    }
+
+    /// One scheduling round + reap, with telemetry fan-out. When no
+    /// watcher is subscribed the fan-out is a length check — the
+    /// steady-state round allocates nothing.
+    fn step_round<F: FnMut(&JobReport<'_>)>(&mut self, telemetry: &mut F) -> Result<()> {
+        let ServiceSession {
+            session,
+            watchers,
+            results,
+            finished_total,
+            ..
+        } = self;
+        let round = session.rounds() + 1;
+        session.round(&mut |r| {
+            telemetry(r);
+            if !watchers.is_empty() {
+                let line = report_event(round, r);
+                // try_send, never send: a watcher that stopped reading
+                // (stalled client, full socket) is dropped once its
+                // buffer fills, instead of buffering the daemon to OOM.
+                watchers.retain(|w| w.try_send(line.clone()).is_ok());
+            }
+        })?;
+        session.reap(|outcome| push_result(results, finished_total, finished_row(&outcome)))
+    }
+
+    /// Apply one control message; `Ok(true)` means shut down (drain).
+    fn apply(&mut self, msg: Control) -> Result<bool> {
+        match msg {
+            Control::Submit(spec, reply) => {
+                let name = spec.name.clone();
+                let ack = match self.session.admit(*spec) {
+                    Ok(slot) => Ok(Submitted {
+                        name,
+                        slot,
+                        // Read the session's own record — never re-derive
+                        // the pinning rule here, migration can overrule it.
+                        stream: self.session.stream_of(slot).expect("just admitted"),
+                    }),
+                    Err(e) => Err(format!("{e:#}")),
+                };
+                let _ = reply.send(ack);
+                Ok(false)
+            }
+            Control::Cancel(name, reply) => {
+                let ack = self
+                    .session
+                    .cancel(&name)
+                    .map(|outcome| {
+                        let row = finished_row(&outcome);
+                        push_result(&mut self.results, &mut self.finished_total, row.clone());
+                        row
+                    })
+                    .map_err(|e| format!("{e:#}"));
+                let _ = reply.send(ack);
+                Ok(false)
+            }
+            Control::Status(reply) => {
+                let mut live = Vec::new();
+                self.session.jobs(|view| {
+                    if view.stop.is_none() {
+                        live.push(JobStatus {
+                            name: view.name.to_string(),
+                            engine: view.engine,
+                            steps: view.steps,
+                            max_iter: view.max_iter,
+                            gbest_fit: view.gbest_fit,
+                            stream: view.stream,
+                        });
+                    }
+                });
+                let _ = reply.send(StatusReport {
+                    rounds: self.session.rounds(),
+                    streams: self.session.streams(),
+                    live,
+                    finished: self.results.iter().cloned().collect(),
+                    finished_total: self.finished_total,
+                });
+                Ok(false)
+            }
+            Control::Drain(reply, ack) => {
+                let live = self.session.live();
+                if live > 0 && self.snapshot_dir.is_none() {
+                    let _ = reply.send(Err(format!(
+                        "cannot drain {live} live job(s): the service was started without \
+                         a snapshot directory (cupso serve --checkpoint-dir)"
+                    )));
+                    return Ok(false);
+                }
+                let mut dir_written = None;
+                if live > 0 {
+                    let dir = self.snapshot_dir.clone().expect("checked above");
+                    let snap = self.session.snapshot();
+                    let mut buf = Vec::new();
+                    if let Err(e) =
+                        store::write_snapshot(&dir, &self.knobs, 1, "serve", &snap, &mut buf)
+                    {
+                        // Keep serving: the jobs are still alive in
+                        // memory, which beats dying with them unsaved.
+                        let _ = reply.send(Err(format!("snapshot failed: {e:#}")));
+                        return Ok(false);
+                    }
+                    dir_written = Some(dir);
+                }
+                self.drained = live;
+                self.drained_to = dir_written.clone();
+                self.drain_ack = ack;
+                let _ = reply.send(Ok(DrainReport {
+                    snapshotted: live,
+                    finished: self.finished_total,
+                    dir: dir_written,
+                }));
+                Ok(true)
+            }
+            Control::Watch(tx) => {
+                self.watchers.push(tx);
+                Ok(false)
+            }
+        }
+    }
+
+    fn finish(mut self) -> Result<ServiceEnd> {
+        for w in &self.watchers {
+            let _ = w.try_send(proto::Obj::new().str("event", "end").render());
+        }
+        // A drain requester still has to flush its acknowledgement to
+        // its client before the process exits; give it a bounded grace
+        // period (either the latch fires or the requester is gone).
+        if let Some(ack) = self.drain_ack.take() {
+            let _ = ack.recv_timeout(std::time::Duration::from_secs(5));
+        }
+        Ok(ServiceEnd {
+            results: self.results.into_iter().collect(),
+            finished_total: self.finished_total,
+            drained: self.drained,
+            snapshot_dir: self.drained_to,
+        })
+    }
+}
+
+/// Append to the bounded results window (oldest row evicted past
+/// [`MAX_RESULTS`]) and bump the lifetime counter.
+fn push_result(results: &mut VecDeque<FinishedJob>, total: &mut u64, row: FinishedJob) {
+    if results.len() == MAX_RESULTS {
+        results.pop_front();
+    }
+    results.push_back(row);
+    *total += 1;
+}
+
+/// Project a [`JobOutcome`] onto its status/protocol row.
+fn finished_row(outcome: &JobOutcome) -> FinishedJob {
+    FinishedJob {
+        name: outcome.name.to_string(),
+        engine: outcome.engine,
+        stop: outcome.stop,
+        steps: outcome.steps,
+        gbest_fit: outcome.output.gbest_fit,
+    }
+}
+
+/// Render one telemetry line for the watch stream.
+fn report_event(round: u64, r: &JobReport<'_>) -> String {
+    let mut obj = proto::Obj::new()
+        .str("event", "report")
+        .int("round", round)
+        .str("job", r.name)
+        .int("iter", r.iter)
+        .num("gbest", r.gbest_fit)
+        .bool("improved", r.improved);
+    if let Some(stop) = r.finished {
+        obj = obj.str("finished", &stop.to_string());
+    }
+    obj.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::{Cubic, Objective};
+    use crate::pso::PsoParams;
+    use std::sync::Arc;
+
+    fn knobs() -> BatchConfig {
+        BatchConfig {
+            workers: 2,
+            policy: "round-robin".into(),
+            streams: 1,
+            batch_steps: 1,
+            preempt_quantum: 0,
+            jobs: Vec::new(),
+        }
+    }
+
+    fn spec(name: &str, iters: u64, seed: u64) -> JobSpec {
+        JobSpec::new(
+            name,
+            EngineKind::Queue,
+            PsoParams::paper_1d(64, iters),
+            Arc::new(Cubic),
+            Objective::Maximize,
+            seed,
+        )
+    }
+
+    #[test]
+    fn runs_dry_when_handles_drop() {
+        let scheduler = JobScheduler::with_workers(2);
+        let (service, handle) =
+            ServiceSession::new(&scheduler, knobs(), None, vec![spec("a", 8, 1)]).unwrap();
+        drop(handle);
+        let end = service.run().unwrap();
+        assert_eq!(end.results.len(), 1);
+        assert_eq!(&*end.results[0].name, "a");
+        assert_eq!(end.results[0].steps, 8);
+        assert_eq!(end.drained, 0);
+        assert!(end.snapshot_dir.is_none());
+    }
+
+    #[test]
+    fn submit_cancel_status_drain_through_the_handle() {
+        let scheduler = JobScheduler::with_workers(2);
+        let (service, handle) =
+            ServiceSession::new(&scheduler, knobs(), None, Vec::new()).unwrap();
+        let svc = std::thread::spawn(move || service.run().unwrap());
+
+        let ack = handle.submit(spec("long", 1_000_000, 1)).unwrap();
+        assert_eq!(&*ack.name, "long");
+        assert_eq!(ack.slot, 0);
+        let ack = handle.submit(spec("other", 1_000_000, 2)).unwrap();
+        assert_eq!(ack.slot, 1);
+        // Duplicate live name is refused.
+        let err = handle.submit(spec("long", 10, 3)).unwrap_err().to_string();
+        assert!(err.contains("unique"), "{err}");
+
+        let status = handle.status().unwrap();
+        assert_eq!(status.live.len(), 2);
+        assert!(status.streams >= 1);
+
+        let row = handle.cancel("other").unwrap();
+        assert_eq!(row.stop, StopReason::Cancelled);
+        assert!(handle.cancel("other").is_err(), "double cancel is loud");
+
+        // Idle drain is fine without a snapshot dir once nothing is live;
+        // with a live job it must be refused.
+        let err = handle.drain().unwrap_err().to_string();
+        assert!(err.contains("checkpoint-dir"), "{err}");
+        let row = handle.cancel("long").unwrap();
+        assert_eq!(row.stop, StopReason::Cancelled);
+        let report = handle.drain().unwrap();
+        assert_eq!(report.snapshotted, 0);
+        assert_eq!(report.finished, 2);
+        assert!(report.dir.is_none());
+
+        let end = svc.join().unwrap();
+        assert_eq!(end.results.len(), 2);
+        assert_eq!(end.drained, 0);
+        // The service is gone: the handle reports it loudly.
+        assert!(handle.status().is_err());
+    }
+
+    #[test]
+    fn watch_streams_reports_and_ends() {
+        let scheduler = JobScheduler::with_workers(2);
+        let (service, handle) =
+            ServiceSession::new(&scheduler, knobs(), None, Vec::new()).unwrap();
+        let svc = std::thread::spawn(move || service.run().unwrap());
+        let rx = handle.watch().unwrap();
+        handle.submit(spec("watched", 5, 1)).unwrap();
+        // One report per round; the job's budget is 5 steps. The last
+        // report carries the finished marker.
+        let timeout = std::time::Duration::from_secs(30);
+        for round in 1..=5u64 {
+            let line = rx.recv_timeout(timeout).expect("telemetry report");
+            let doc = proto::Json::parse(&line).unwrap();
+            assert_eq!(doc.str_field("event").unwrap(), "report");
+            assert_eq!(doc.str_field("job").unwrap(), "watched");
+            assert_eq!(doc.get("iter").unwrap().as_u64("iter").unwrap(), round);
+            if round == 5 {
+                assert_eq!(doc.str_field("finished").unwrap(), "exhausted");
+            }
+        }
+        // Release the idle service; the stream must close with `end`.
+        drop(handle);
+        let end = svc.join().unwrap();
+        assert_eq!(end.results.len(), 1);
+        assert_eq!(end.results[0].steps, 5);
+        let line = rx.recv_timeout(timeout).expect("end event");
+        assert_eq!(
+            proto::Json::parse(&line).unwrap().str_field("event").unwrap(),
+            "end"
+        );
+    }
+}

@@ -1,0 +1,746 @@
+//! The service wire protocol: line-oriented JSON over a Unix domain
+//! socket.
+//!
+//! Hand-rolled like [`crate::benchkit::json`] — serde is unavailable
+//! offline — but bidirectional: this module carries a small JSON-subset
+//! **parser** ([`Json::parse`]) next to a compact single-line writer.
+//! Every request and every response is exactly one `\n`-terminated JSON
+//! object, so framing is trivial (`BufRead::lines`) and a shell client
+//! (`nc -U`, the `cupso submit/status/...` verbs) stays one line of
+//! text per exchange.
+//!
+//! ## Requests
+//!
+//! ```text
+//! {"op": "ping"}
+//! {"op": "submit", "job": {"name": "a", "fitness": "sphere", ...}}
+//! {"op": "cancel", "name": "a"}
+//! {"op": "status"}
+//! {"op": "drain"}
+//! {"op": "watch"}
+//! ```
+//!
+//! ## Responses
+//!
+//! Every response carries `"ok": true|false`; failures carry `"error"`.
+//! `watch` switches the connection to a one-way stream: one
+//! `{"event": "report", ...}` line per scheduling round and job until
+//! the client disconnects or the service drains (a final
+//! `{"event": "end"}` line). An idle service emits periodic
+//! `{"event": "ping"}` heartbeats on watch streams — consumers should
+//! ignore event types they don't know.
+//!
+//! The `job` object mirrors the `[jobs.<name>]` section of a batch TOML
+//! field for field, and decoding funnels through the same
+//! [`JobConfig::validate`] — the two intake paths cannot drift.
+
+use crate::config::{EngineKind, JobConfig};
+use crate::fitness::Objective;
+use anyhow::{bail, Context, Result};
+
+/// A parsed JSON value (the subset the protocol needs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any number (always carried as `f64`).
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, insertion-ordered.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one JSON value from `text` (must be the whole input modulo
+    /// surrounding whitespace). Nesting is capped at [`MAX_DEPTH`]: the
+    /// parser recurses per level, and a hostile `[[[[…` line must be an
+    /// error, not a stack overflow that aborts the daemon.
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters after JSON value at byte {pos}");
+        }
+        Ok(value)
+    }
+
+    /// Render this value back to one compact JSON line — the exact
+    /// writer the daemon's responses use ([`Obj`]/[`array`] are built on
+    /// the same `escape`/`number` primitives), so a parse → render round
+    /// trip cannot drift from what travels on the wire.
+    pub fn render(&self) -> String {
+        match self {
+            Json::Null => "null".to_string(),
+            Json::Bool(b) => b.to_string(),
+            Json::Num(n) => number(*n),
+            Json::Str(s) => format!("\"{}\"", escape(s)),
+            Json::Arr(items) => array(items.iter().map(Json::render)),
+            Json::Obj(fields) => {
+                let body: Vec<String> = fields
+                    .iter()
+                    .map(|(k, v)| format!("\"{}\": {}", escape(k), v.render()))
+                    .collect();
+                format!("{{{}}}", body.join(", "))
+            }
+        }
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Coerce to a string.
+    pub fn as_str(&self, ctx: &str) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("{ctx}: expected string, got {other:?}"),
+        }
+    }
+
+    /// Coerce to a float.
+    pub fn as_f64(&self, ctx: &str) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => bail!("{ctx}: expected number, got {other:?}"),
+        }
+    }
+
+    /// Coerce to a non-negative integer. Rejects fractions and negatives
+    /// (a submit with `particles = -1` must be loud) AND anything above
+    /// 2^53: numbers travel as `f64`, so larger integers would round
+    /// silently — e.g. a hash-derived seed of 2^53+1 would admit a job
+    /// with a *different* seed, corrupting reproducibility without any
+    /// error. Loud refusal is the only safe answer.
+    pub fn as_u64(&self, ctx: &str) -> Result<u64> {
+        let n = self.as_f64(ctx)?;
+        const MAX_EXACT: f64 = (1u64 << 53) as f64;
+        if !(n.is_finite() && n >= 0.0 && n.fract() == 0.0) {
+            bail!("{ctx}: expected a non-negative integer, got {n}");
+        }
+        // `>=`, not `>`: 2^53 itself must be refused because 2^53 + 1
+        // parses to exactly 2^53 in f64 — accepting the boundary value
+        // would silently admit its unrepresentable neighbour.
+        if n >= MAX_EXACT {
+            bail!(
+                "{ctx}: {n} is at or above 2^53, where JSON numbers stop \
+                 carrying integers exactly — pick a smaller value"
+            );
+        }
+        Ok(n as u64)
+    }
+
+    /// Coerce to a bool.
+    pub fn as_bool(&self, ctx: &str) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => bail!("{ctx}: expected bool, got {other:?}"),
+        }
+    }
+
+    /// Required string field of an object.
+    pub fn str_field(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .with_context(|| format!("missing field {key:?}"))?
+            .as_str(key)
+    }
+}
+
+/// Deepest value nesting the parser accepts (recursion-depth bound).
+pub const MAX_DEPTH: usize = 64;
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
+    if depth > MAX_DEPTH {
+        bail!("JSON nesting deeper than {MAX_DEPTH} levels");
+    }
+    skip_ws(bytes, pos);
+    let Some(&c) = bytes.get(*pos) else {
+        bail!("unexpected end of JSON input");
+    };
+    match c {
+        b'{' => parse_obj(bytes, pos, depth),
+        b'[' => parse_arr(bytes, pos, depth),
+        b'"' => Ok(Json::Str(parse_string(bytes, pos)?)),
+        b't' => parse_lit(bytes, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(bytes, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(bytes, pos, "null", Json::Null),
+        _ => parse_num(bytes, pos),
+    }
+}
+
+fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        bail!("invalid JSON literal at byte {pos}");
+    }
+}
+
+fn parse_num(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&bytes[start..*pos]).expect("ascii number slice");
+    let n: f64 = text
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad JSON number {text:?} at byte {start}: {e}"))?;
+    Ok(Json::Num(n))
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    debug_assert_eq!(bytes[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        let Some(&c) = bytes.get(*pos) else {
+            bail!("unterminated JSON string");
+        };
+        *pos += 1;
+        match c {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let Some(&esc) = bytes.get(*pos) else {
+                    bail!("unterminated escape in JSON string");
+                };
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000c}'),
+                    b'u' => {
+                        let hex = bytes
+                            .get(*pos..*pos + 4)
+                            .context("truncated \\u escape in JSON string")?;
+                        let hex = std::str::from_utf8(hex).context("non-ASCII \\u escape")?;
+                        let code =
+                            u32::from_str_radix(hex, 16).context("bad \\u escape in JSON string")?;
+                        *pos += 4;
+                        // Surrogates are not needed by this protocol; map
+                        // them (and any other invalid scalar) to an error.
+                        out.push(
+                            char::from_u32(code)
+                                .with_context(|| format!("\\u{hex} is not a scalar value"))?,
+                        );
+                    }
+                    other => bail!("unknown escape \\{} in JSON string", other as char),
+                }
+            }
+            _ => {
+                // Multi-byte UTF-8: copy the whole sequence verbatim.
+                let width = utf8_width(c);
+                let seq = bytes
+                    .get(*pos - 1..*pos - 1 + width)
+                    .context("truncated UTF-8 in JSON string")?;
+                out.push_str(std::str::from_utf8(seq).context("invalid UTF-8 in JSON string")?);
+                *pos += width - 1;
+            }
+        }
+    }
+}
+
+fn utf8_width(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn parse_obj(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
+    debug_assert_eq!(bytes[*pos], b'{');
+    *pos += 1;
+    let mut fields = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        if bytes.get(*pos) != Some(&b'"') {
+            bail!("expected object key at byte {pos}");
+        }
+        let key = parse_string(bytes, pos)?;
+        skip_ws(bytes, pos);
+        if bytes.get(*pos) != Some(&b':') {
+            bail!("expected ':' after object key at byte {pos}");
+        }
+        *pos += 1;
+        let value = parse_value(bytes, pos, depth + 1)?;
+        fields.push((key, value));
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            _ => bail!("expected ',' or '}}' at byte {pos}"),
+        }
+    }
+}
+
+fn parse_arr(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
+    debug_assert_eq!(bytes[*pos], b'[');
+    *pos += 1;
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos, depth + 1)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => bail!("expected ',' or ']' at byte {pos}"),
+        }
+    }
+}
+
+/// Escape a string for a JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an `f64` as a JSON value (non-finite values become `null` —
+/// JSON has no NaN/∞).
+pub fn number(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// A compact single-line JSON object, built key by key (insertion order
+/// preserved). Unlike the bench writer this one nests: [`Obj::raw`]
+/// splices a pre-rendered value (another object, an array).
+#[derive(Default)]
+pub struct Obj {
+    parts: Vec<String>,
+}
+
+impl Obj {
+    /// Empty object.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a string field.
+    pub fn str(mut self, key: &str, value: &str) -> Self {
+        self.parts
+            .push(format!("\"{}\": \"{}\"", escape(key), escape(value)));
+        self
+    }
+
+    /// Add a numeric field.
+    pub fn num(mut self, key: &str, value: f64) -> Self {
+        self.parts
+            .push(format!("\"{}\": {}", escape(key), number(value)));
+        self
+    }
+
+    /// Add an integer field.
+    pub fn int(mut self, key: &str, value: u64) -> Self {
+        self.parts.push(format!("\"{}\": {value}", escape(key)));
+        self
+    }
+
+    /// Add a boolean field.
+    pub fn bool(mut self, key: &str, value: bool) -> Self {
+        self.parts.push(format!("\"{}\": {value}", escape(key)));
+        self
+    }
+
+    /// Splice a pre-rendered JSON value (nested object / array).
+    pub fn raw(mut self, key: &str, rendered: &str) -> Self {
+        self.parts.push(format!("\"{}\": {rendered}", escape(key)));
+        self
+    }
+
+    /// Render as one compact line.
+    pub fn render(&self) -> String {
+        format!("{{{}}}", self.parts.join(", "))
+    }
+}
+
+/// Render a JSON array from pre-rendered items.
+pub fn array<I: IntoIterator<Item = String>>(items: I) -> String {
+    let body: Vec<String> = items.into_iter().collect();
+    format!("[{}]", body.join(", "))
+}
+
+/// One client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Liveness probe.
+    Ping,
+    /// Admit a new job at the next round boundary.
+    Submit(JobConfig),
+    /// Cancel a live job by name at the next round boundary.
+    Cancel {
+        /// The job's identity key.
+        name: String,
+    },
+    /// Snapshot of live jobs, finished results and round progress.
+    Status,
+    /// Checkpoint all live jobs to the service's snapshot directory and
+    /// shut down (resumable via `cupso resume`).
+    Drain,
+    /// Subscribe this connection to the per-round telemetry stream.
+    Watch,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let doc = Json::parse(line)?;
+        let op = doc.str_field("op")?;
+        Ok(match op {
+            "ping" => Request::Ping,
+            "submit" => {
+                let job = doc.get("job").context("submit: missing field \"job\"")?;
+                Request::Submit(job_from_json(job)?)
+            }
+            "cancel" => Request::Cancel {
+                name: doc.str_field("name")?.to_string(),
+            },
+            "status" => Request::Status,
+            "drain" => Request::Drain,
+            "watch" => Request::Watch,
+            other => bail!("unknown op {other:?} (ping|submit|cancel|status|drain|watch)"),
+        })
+    }
+
+    /// Render as one request line (no trailing newline).
+    pub fn render(&self) -> String {
+        match self {
+            Request::Ping => Obj::new().str("op", "ping").render(),
+            Request::Submit(job) => Obj::new()
+                .str("op", "submit")
+                .raw("job", &job_to_json(job))
+                .render(),
+            Request::Cancel { name } => {
+                Obj::new().str("op", "cancel").str("name", name).render()
+            }
+            Request::Status => Obj::new().str("op", "status").render(),
+            Request::Drain => Obj::new().str("op", "drain").render(),
+            Request::Watch => Obj::new().str("op", "watch").render(),
+        }
+    }
+}
+
+/// Canonical engine token: the table label, lowercased and de-spaced —
+/// always accepted back by [`EngineKind::parse`].
+pub fn engine_token(kind: EngineKind) -> String {
+    kind.label().replace(' ', "").to_ascii_lowercase()
+}
+
+/// Serialize a job config as the protocol's `job` object (optional
+/// fields omitted when unset).
+pub fn job_to_json(job: &JobConfig) -> String {
+    let mut obj = Obj::new()
+        .str("name", &job.name)
+        .str("fitness", &job.fitness)
+        .int("particles", job.particles as u64)
+        .int("dim", job.dim as u64)
+        .int("iters", job.iters)
+        .str("engine", &engine_token(job.engine))
+        .num("vmax_frac", job.vmax_frac)
+        .int("seed", job.seed);
+    if let Some(o) = job.objective {
+        obj = obj.str(
+            "objective",
+            match o {
+                Objective::Maximize => "max",
+                Objective::Minimize => "min",
+            },
+        );
+    }
+    if let Some(t) = job.target_fitness {
+        obj = obj.num("target_fitness", t);
+    }
+    if let Some(w) = job.stall_window {
+        obj = obj.int("stall_window", w);
+    }
+    if let Some(m) = job.max_steps {
+        obj = obj.int("max_steps", m);
+    }
+    if let Some(d) = job.deadline {
+        obj = obj.int("deadline", d);
+    }
+    obj.render()
+}
+
+/// Decode the protocol's `job` object into a validated [`JobConfig`] —
+/// the same defaults and the same `validate()` as a `[jobs.<name>]`
+/// batch-TOML section, so the two intake paths cannot drift.
+pub fn job_from_json(doc: &Json) -> Result<JobConfig> {
+    let name = doc.str_field("name")?;
+    if name.is_empty() {
+        bail!("job name must not be empty");
+    }
+    let mut job = JobConfig::with_defaults(name);
+    for (key, value) in match doc {
+        Json::Obj(fields) => fields.iter(),
+        other => bail!("job: expected object, got {other:?}"),
+    } {
+        let ctx = format!("job.{key}");
+        match key.as_str() {
+            "name" => {}
+            "fitness" => job.fitness = value.as_str(&ctx)?.to_string(),
+            "objective" => {
+                let v = value.as_str(&ctx)?;
+                job.objective =
+                    Some(Objective::parse(v).with_context(|| format!("bad objective {v}"))?);
+            }
+            "particles" => job.particles = value.as_u64(&ctx)? as usize,
+            "dim" => job.dim = value.as_u64(&ctx)? as usize,
+            "iters" => job.iters = value.as_u64(&ctx)?,
+            "engine" => {
+                let v = value.as_str(&ctx)?;
+                job.engine = EngineKind::parse(v).with_context(|| format!("bad engine {v}"))?;
+            }
+            "vmax_frac" => job.vmax_frac = value.as_f64(&ctx)?,
+            "seed" => job.seed = value.as_u64(&ctx)?,
+            "target_fitness" => job.target_fitness = Some(value.as_f64(&ctx)?),
+            "stall_window" => job.stall_window = Some(value.as_u64(&ctx)?),
+            "max_steps" => job.max_steps = Some(value.as_u64(&ctx)?),
+            "deadline" => job.deadline = Some(value.as_u64(&ctx)?),
+            other => bail!("job {name}: unknown field {other:?}"),
+        }
+    }
+    job.validate()?;
+    Ok(job)
+}
+
+/// Render a failure response.
+pub fn error_line(err: &str) -> String {
+    Obj::new().bool("ok", false).str("error", err).render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_strings_and_nesting() {
+        let doc = Json::parse(
+            r#"{"a": 1, "b": -2.5, "c": "x\n\"y\"", "d": true, "e": null, "f": [1, "two"], "g": {"h": 3}}"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("a").unwrap().as_u64("a").unwrap(), 1);
+        assert_eq!(doc.get("b").unwrap().as_f64("b").unwrap(), -2.5);
+        assert_eq!(doc.get("c").unwrap().as_str("c").unwrap(), "x\n\"y\"");
+        assert!(doc.get("d").unwrap().as_bool("d").unwrap());
+        assert_eq!(doc.get("e"), Some(&Json::Null));
+        match doc.get("f").unwrap() {
+            Json::Arr(items) => assert_eq!(items.len(), 2),
+            other => panic!("not an array: {other:?}"),
+        }
+        assert_eq!(
+            doc.get("g").unwrap().get("h").unwrap().as_u64("h").unwrap(),
+            3
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\": }",
+            "{\"a\": 1,}",
+            "{\"a\" 1}",
+            "[1, 2",
+            "\"unterminated",
+            "{\"a\": 1} trailing",
+            "{\"a\": tru}",
+            "nul",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn unicode_and_escapes_roundtrip() {
+        let original = "héllo \"wörld\" →\t\\end";
+        let line = Obj::new().str("s", original).render();
+        let doc = Json::parse(&line).unwrap();
+        assert_eq!(doc.str_field("s").unwrap(), original);
+        // \u escapes decode too.
+        let doc = Json::parse(r#"{"s": "Aé"}"#).unwrap();
+        assert_eq!(doc.str_field("s").unwrap(), "Aé");
+    }
+
+    #[test]
+    fn as_u64_rejects_fractions_negatives_and_imprecise_integers() {
+        assert!(Json::Num(1.5).as_u64("x").is_err());
+        assert!(Json::Num(-1.0).as_u64("x").is_err());
+        assert_eq!(Json::Num(7.0).as_u64("x").unwrap(), 7);
+        // 2^53 - 1 is the last value every neighbour of which is still
+        // distinguishable; from 2^53 on, f64 rounds silently (2^53 + 1
+        // parses to exactly 2^53), so the boundary itself must already
+        // be refused — a seed that parsed off-by-one would corrupt
+        // reproducibility without any error.
+        let max_exact = (1u64 << 53) - 1;
+        assert_eq!(Json::Num(max_exact as f64).as_u64("x").unwrap(), max_exact);
+        for too_big in [9007199254740992.0, 9.007199254740994e15, 1e300] {
+            let err = Json::Num(too_big).as_u64("seed").unwrap_err().to_string();
+            assert!(err.contains("2^53"), "{too_big}: {err}");
+        }
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded_not_a_stack_overflow() {
+        // A hostile `[[[[…` request must be a parse error; unbounded
+        // recursion would abort the whole daemon.
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("nesting"), "{err}");
+        // Reasonable nesting still parses.
+        let ok = format!("{}1{}", "[".repeat(20), "]".repeat(20));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn render_round_trips_every_shape() {
+        let line = r#"{"a": 1, "b": [true, null, "x\ny"], "c": {"d": -2.5}}"#;
+        let doc = Json::parse(line).unwrap();
+        let rendered = doc.render();
+        assert_eq!(Json::parse(&rendered).unwrap(), doc);
+    }
+
+    #[test]
+    fn requests_roundtrip_through_render_and_parse() {
+        let mut job = JobConfig::with_defaults("alpha");
+        job.fitness = "sphere".into();
+        job.dim = 3;
+        job.iters = 500;
+        job.engine = EngineKind::Queue;
+        job.seed = 9;
+        job.objective = Some(Objective::Minimize);
+        job.target_fitness = Some(1e-3);
+        job.deadline = Some(400);
+        for req in [
+            Request::Ping,
+            Request::Submit(job),
+            Request::Cancel { name: "alpha".into() },
+            Request::Status,
+            Request::Drain,
+            Request::Watch,
+        ] {
+            let line = req.render();
+            let back = Request::parse(&line).unwrap();
+            match (&req, &back) {
+                (Request::Submit(a), Request::Submit(b)) => {
+                    assert_eq!(a.name, b.name);
+                    assert_eq!(a.fitness, b.fitness);
+                    assert_eq!(a.objective, b.objective);
+                    assert_eq!(a.particles, b.particles);
+                    assert_eq!(a.dim, b.dim);
+                    assert_eq!(a.iters, b.iters);
+                    assert_eq!(a.engine, b.engine);
+                    assert_eq!(a.vmax_frac, b.vmax_frac);
+                    assert_eq!(a.seed, b.seed);
+                    assert_eq!(a.target_fitness, b.target_fitness);
+                    assert_eq!(a.stall_window, b.stall_window);
+                    assert_eq!(a.max_steps, b.max_steps);
+                    assert_eq!(a.deadline, b.deadline);
+                }
+                (a, b) => assert_eq!(a, b, "{line}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_engine_token_parses_back() {
+        for kind in [
+            EngineKind::SerialCpu,
+            EngineKind::Reduction,
+            EngineKind::LoopUnrolling,
+            EngineKind::Queue,
+            EngineKind::QueueLock,
+            EngineKind::AsyncPersistent,
+        ] {
+            let token = engine_token(kind);
+            assert_eq!(EngineKind::parse(&token), Some(kind), "{token}");
+        }
+    }
+
+    #[test]
+    fn submit_decoding_is_validated_and_loud() {
+        // Unknown field.
+        let err = Request::parse(r#"{"op": "submit", "job": {"name": "x", "nope": 1}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("nope"), "{err}");
+        // Invalid workload (validate() fires).
+        let err = Request::parse(r#"{"op": "submit", "job": {"name": "x", "particles": 0}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("particles"), "{err}");
+        // XLA engines are not schedulable.
+        let err = Request::parse(r#"{"op": "submit", "job": {"name": "x", "engine": "xla"}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not schedulable"), "{err}");
+        // Missing name.
+        assert!(Request::parse(r#"{"op": "submit", "job": {"fitness": "sphere"}}"#).is_err());
+        // Unknown op.
+        let err = Request::parse(r#"{"op": "frobnicate"}"#).unwrap_err().to_string();
+        assert!(err.contains("unknown op"), "{err}");
+    }
+
+    #[test]
+    fn error_line_is_parseable() {
+        let line = error_line("bad \"thing\"\nhappened");
+        let doc = Json::parse(&line).unwrap();
+        assert!(!doc.get("ok").unwrap().as_bool("ok").unwrap());
+        assert_eq!(doc.str_field("error").unwrap(), "bad \"thing\"\nhappened");
+    }
+}

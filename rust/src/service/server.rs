@@ -1,0 +1,220 @@
+//! Unix-domain-socket front end for a [`ServiceSession`].
+//!
+//! One accept thread, one thread per connection. Each connection is a
+//! sequence of request lines answered by response lines
+//! ([`super::proto`]); a `watch` request flips the connection into a
+//! one-way telemetry stream until either side disconnects. Connection
+//! threads only ever talk to the daemon through a [`ServiceHandle`], so
+//! every mutation still funnels through the round-boundary control
+//! queue — the socket layer adds no new synchronization.
+//!
+//! [`ServiceSession`]: super::ServiceSession
+
+use super::proto::{self, Obj, Request};
+use super::{FinishedJob, JobStatus, ServiceHandle};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::thread::JoinHandle;
+
+/// Bind the service socket. A stale socket file left by a dead daemon
+/// is removed and rebound; a *live* one (something accepts connections)
+/// is a loud error — two daemons must not fight over one path.
+pub fn bind(path: &Path) -> Result<UnixListener> {
+    match UnixListener::bind(path) {
+        Ok(listener) => Ok(listener),
+        Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+            if UnixStream::connect(path).is_ok() {
+                bail!("{} is already being served", path.display());
+            }
+            std::fs::remove_file(path)
+                .with_context(|| format!("removing stale socket {}", path.display()))?;
+            UnixListener::bind(path)
+                .with_context(|| format!("binding {} after stale cleanup", path.display()))
+        }
+        Err(e) => Err(e).with_context(|| format!("binding {}", path.display())),
+    }
+}
+
+/// Spawn the accept loop: one detached thread per connection, each
+/// driving `handle`. The loop ends when the listener errors (e.g. the
+/// process is shutting down and closed it).
+pub fn spawn_server(listener: UnixListener, handle: ServiceHandle) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("cupso-serve-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(stream) = conn else { break };
+                let handle = handle.clone();
+                let _ = std::thread::Builder::new()
+                    .name("cupso-serve-conn".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, handle);
+                    });
+            }
+        })
+        .expect("spawn accept thread")
+}
+
+/// Longest request line the server accepts. Generous for any real
+/// request (a submit is a few hundred bytes) while bounding the memory a
+/// newline-free sender can pin per connection.
+const MAX_REQUEST_BYTES: usize = 1 << 20;
+
+/// Read one `\n`-terminated line, refusing to buffer more than `max`
+/// bytes (`BufRead::lines` would grow without bound on a newline-free
+/// stream). `Ok(None)` = clean EOF.
+fn read_line_bounded(reader: &mut impl BufRead, max: usize) -> Result<Option<String>> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let (chunk, newline_at) = {
+            let buf = reader.fill_buf().context("reading request line")?;
+            if buf.is_empty() {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-request");
+            }
+            let newline_at = buf.iter().position(|&b| b == b'\n');
+            let take = newline_at.map_or(buf.len(), |p| p);
+            (buf[..take].to_vec(), newline_at)
+        };
+        if line.len() + chunk.len() > max {
+            bail!("request line exceeds {max} bytes");
+        }
+        line.extend_from_slice(&chunk);
+        match newline_at {
+            Some(p) => {
+                reader.consume(p + 1);
+                let text = String::from_utf8(line).context("request line is not UTF-8")?;
+                return Ok(Some(text));
+            }
+            None => reader.consume(chunk.len()),
+        }
+    }
+}
+
+fn handle_conn(stream: UnixStream, handle: ServiceHandle) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
+    let mut writer = stream;
+    while let Some(line) = read_line_bounded(&mut reader, MAX_REQUEST_BYTES)? {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Request::parse(&line) {
+            Err(e) => proto::error_line(&format!("{e:#}")),
+            Ok(Request::Drain) => {
+                // Drain shuts the daemon down; hand it a completion
+                // latch so it waits for this response to reach the
+                // client before the process exits (otherwise the reply
+                // write races process teardown and the client sees EOF).
+                let (done_tx, done_rx) = std::sync::mpsc::channel();
+                let reply = match handle.drain_then(done_rx) {
+                    Ok(report) => {
+                        let mut obj = Obj::new()
+                            .bool("ok", true)
+                            .str("op", "drain")
+                            .int("snapshotted", report.snapshotted as u64)
+                            .int("finished", report.finished);
+                        if let Some(dir) = &report.dir {
+                            obj = obj.str("dir", &dir.display().to_string());
+                        }
+                        obj.render()
+                    }
+                    Err(e) => proto::error_line(&format!("{e:#}")),
+                };
+                writeln!(writer, "{reply}")?;
+                writer.flush()?;
+                let _ = done_tx.send(());
+                continue;
+            }
+            Ok(Request::Watch) => {
+                // Ack, then switch to the one-way stream until the
+                // client disconnects or the service ends.
+                let rx = match handle.watch() {
+                    Ok(rx) => rx,
+                    Err(e) => {
+                        writeln!(writer, "{}", proto::error_line(&format!("{e:#}")))?;
+                        return Ok(());
+                    }
+                };
+                writeln!(writer, "{}", Obj::new().bool("ok", true).str("op", "watch").render())?;
+                writer.flush()?;
+                for event in rx {
+                    if writeln!(writer, "{event}").is_err() {
+                        break; // client went away; retain() reaps us
+                    }
+                }
+                return Ok(());
+            }
+            Ok(req) => respond(&handle, req),
+        };
+        writeln!(writer, "{reply}")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Execute one non-watch request and render its response line.
+fn respond(handle: &ServiceHandle, req: Request) -> String {
+    let result = match req {
+        Request::Ping => Ok(Obj::new().bool("ok", true).str("op", "ping").render()),
+        Request::Submit(job) => crate::scheduler::JobSpec::from_config(&job)
+            .and_then(|spec| handle.submit(spec))
+            .map(|ack| {
+                Obj::new()
+                    .bool("ok", true)
+                    .str("op", "submit")
+                    .str("name", &ack.name)
+                    .int("slot", ack.slot as u64)
+                    .int("stream", ack.stream as u64)
+                    .render()
+            }),
+        Request::Cancel { name } => handle.cancel(&name).map(|row| {
+            Obj::new()
+                .bool("ok", true)
+                .str("op", "cancel")
+                .raw("job", &finished_json(&row))
+                .render()
+        }),
+        Request::Status => handle.status().map(|report| {
+            let live = proto::array(report.live.iter().map(live_json));
+            let finished = proto::array(report.finished.iter().map(finished_json));
+            Obj::new()
+                .bool("ok", true)
+                .str("op", "status")
+                .int("rounds", report.rounds)
+                .int("streams", report.streams as u64)
+                .int("finished_total", report.finished_total)
+                .raw("live", &live)
+                .raw("finished", &finished)
+                .render()
+        }),
+        Request::Drain | Request::Watch => {
+            unreachable!("drain and watch are handled by the connection loop")
+        }
+    };
+    result.unwrap_or_else(|e| proto::error_line(&format!("{e:#}")))
+}
+
+fn live_json(j: &JobStatus) -> String {
+    Obj::new()
+        .str("name", &j.name)
+        .str("engine", &proto::engine_token(j.engine))
+        .int("steps", j.steps)
+        .int("max_iter", j.max_iter)
+        .num("gbest", j.gbest_fit)
+        .int("stream", j.stream as u64)
+        .render()
+}
+
+fn finished_json(f: &FinishedJob) -> String {
+    Obj::new()
+        .str("name", &f.name)
+        .str("engine", &proto::engine_token(f.engine))
+        .str("stop", &f.stop.to_string())
+        .int("steps", f.steps)
+        .num("gbest", f.gbest_fit)
+        .render()
+}

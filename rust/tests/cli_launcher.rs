@@ -439,6 +439,245 @@ fn resume_rejects_missing_or_bad_directories() {
     assert!(text.contains("manifest"), "{text}");
 }
 
+/// Kills the `cupso serve` child if a test assertion unwinds first.
+struct ServeGuard(std::process::Child);
+
+impl Drop for ServeGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn spawn_serve(args: &[&str]) -> ServeGuard {
+    let child = Command::new(env!("CARGO_BIN_EXE_cupso"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn cupso serve");
+    ServeGuard(child)
+}
+
+/// Poll `cupso status` until the daemon answers (the socket exists and
+/// the protocol responds), failing after ~15s.
+fn wait_for_service(socket: &str) {
+    for _ in 0..300 {
+        let (ok, _) = cupso(&["status", "--socket", socket]);
+        if ok {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    panic!("service on {socket} never became reachable");
+}
+
+/// Wait for the serve child to exit on its own (after a drain), failing
+/// after ~30s.
+fn wait_for_exit(guard: &mut ServeGuard) {
+    for _ in 0..600 {
+        if let Some(status) = guard.0.try_wait().expect("try_wait") {
+            assert!(status.success(), "serve exited with {status}");
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    panic!("cupso serve did not exit after drain");
+}
+
+/// Deterministic-engine service config: two resident jobs with budgets
+/// large enough that a prompt drain always catches them live.
+const SERVE_BATCH: &str = r#"
+[scheduler]
+workers = 2
+policy = "round-robin"
+streams = 2
+batch_steps = 3
+
+[jobs.alpha]
+fitness = "cubic"
+engine = "queue"
+particles = 128
+dim = 1
+iters = 150_000
+seed = 11
+
+[jobs.beta]
+fitness = "sphere"
+engine = "reduction"
+particles = 96
+dim = 2
+iters = 120_000
+seed = 12
+"#;
+
+/// The same two jobs plus the live-submitted third — the uninterrupted
+/// reference batch for the drain→resume comparison.
+const SERVE_REFERENCE_BATCH: &str = r#"
+[scheduler]
+workers = 2
+policy = "round-robin"
+streams = 2
+batch_steps = 3
+
+[jobs.alpha]
+fitness = "cubic"
+engine = "queue"
+particles = 128
+dim = 1
+iters = 150_000
+seed = 11
+
+[jobs.beta]
+fitness = "sphere"
+engine = "reduction"
+particles = 96
+dim = 2
+iters = 120_000
+seed = 12
+
+[jobs.gamma]
+fitness = "cubic"
+engine = "unroll"
+particles = 130
+dim = 1
+iters = 100_000
+seed = 13
+"#;
+
+/// The acceptance e2e: a live service accepts a submit after startup,
+/// `drain` snapshots every live job (the dynamically admitted one
+/// included), and `cupso resume` continues the snapshot to the exact
+/// per-job results of the uninterrupted batch.
+#[test]
+fn serve_submit_drain_resume_reproduces_uninterrupted_batch() {
+    let dir = std::env::temp_dir().join("cupso-cli-serve-e2e");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let socket = dir.join("svc.sock");
+    let socket = socket.to_str().unwrap();
+    let snap = dir.join("drain");
+    let serve_cfg = dir.join("serve.toml");
+    let reference_cfg = dir.join("reference.toml");
+    std::fs::write(&serve_cfg, SERVE_BATCH).unwrap();
+    std::fs::write(&reference_cfg, SERVE_REFERENCE_BATCH).unwrap();
+
+    // Reference: all three jobs in one uninterrupted batch (admission
+    // timing is invisible for the bit-exact engines).
+    let (ok, reference) = cupso(&["batch", "--config", reference_cfg.to_str().unwrap()]);
+    assert!(ok, "{reference}");
+    let expected_rows: Vec<String> = reference
+        .lines()
+        .filter(|l| ["alpha", "beta", "gamma"].iter().any(|j| l.starts_with(&format!("| {j}"))))
+        .map(|l| l.to_string())
+        .collect();
+    assert_eq!(expected_rows.len(), 3, "{reference}");
+
+    let mut serve = spawn_serve(&[
+        "serve",
+        "--socket",
+        socket,
+        "--config",
+        serve_cfg.to_str().unwrap(),
+        "--checkpoint-dir",
+        snap.to_str().unwrap(),
+    ]);
+    wait_for_service(socket);
+
+    // Live admission after startup.
+    let (ok, text) = cupso(&[
+        "submit", "--socket", socket, "--name", "gamma", "--fitness", "cubic", "--engine",
+        "unroll", "--particles", "130", "--dim", "1", "--iters", "100_000", "--seed", "13",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("submitted gamma"), "{text}");
+
+    // Status sees all three live.
+    let (ok, text) = cupso(&["status", "--socket", socket]);
+    assert!(ok, "{text}");
+    for job in ["alpha", "beta", "gamma"] {
+        assert!(text.contains(job), "missing {job} in:\n{text}");
+    }
+    assert!(text.contains("3 live"), "{text}");
+
+    // Drain: every live job lands in the snapshot.
+    let (ok, text) = cupso(&["drain", "--socket", socket]);
+    assert!(ok, "{text}");
+    assert!(text.contains("drained 3 live jobs"), "{text}");
+    wait_for_exit(&mut serve);
+    assert!(snap.join("manifest.toml").exists());
+    let manifest = std::fs::read_to_string(snap.join("manifest.toml")).unwrap();
+    assert!(manifest.contains("source = \"serve\""), "{manifest}");
+
+    // The drained service resumes through the standard resume path.
+    let (ok, resumed) = cupso(&["resume", snap.to_str().unwrap()]);
+    assert!(ok, "{resumed}");
+    assert!(resumed.contains("cupso resume: 3 jobs"), "{resumed}");
+    let resumed_rows: Vec<String> = resumed
+        .lines()
+        .filter(|l| ["alpha", "beta", "gamma"].iter().any(|j| l.starts_with(&format!("| {j}"))))
+        .map(|l| l.to_string())
+        .collect();
+    assert_eq!(
+        resumed_rows, expected_rows,
+        "drained service diverged from the uninterrupted batch"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_status_cancel_and_idle_drain() {
+    let dir = std::env::temp_dir().join("cupso-cli-serve-cancel");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let socket = dir.join("svc.sock");
+    let socket = socket.to_str().unwrap();
+
+    // No config, no checkpoint dir: an empty idle service.
+    let mut serve = spawn_serve(&["serve", "--socket", socket]);
+    wait_for_service(socket);
+
+    let (ok, text) = cupso(&["status", "--socket", socket]);
+    assert!(ok, "{text}");
+    assert!(text.contains("0 live, 0 finished"), "{text}");
+
+    // Submit an effectively endless job, see it, cancel it.
+    let (ok, text) = cupso(&[
+        "submit", "--socket", socket, "--name", "spin", "--fitness", "cubic", "--engine",
+        "queue", "--particles", "64", "--iters", "1_000_000_000",
+    ]);
+    assert!(ok, "{text}");
+    let (ok, text) = cupso(&["status", "--socket", socket]);
+    assert!(ok, "{text}");
+    assert!(text.contains("spin"), "{text}");
+    // A duplicate submit of a live name is a loud protocol error.
+    let (ok, text) = cupso(&[
+        "submit", "--socket", socket, "--name", "spin", "--iters", "10",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("unique"), "{text}");
+    let (ok, text) = cupso(&["cancel", "--socket", socket, "spin"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("cancelled spin"), "{text}");
+    // Cancelling it again fails loudly.
+    let (ok, text) = cupso(&["cancel", "--socket", socket, "spin"]);
+    assert!(!ok);
+    assert!(text.contains("spin"), "{text}");
+
+    // Idle drain needs no snapshot dir and shuts the daemon down.
+    let (ok, text) = cupso(&["drain", "--socket", socket]);
+    assert!(ok, "{text}");
+    assert!(text.contains("no live jobs"), "{text}");
+    wait_for_exit(&mut serve);
+
+    // The socket is gone: clients fail loudly.
+    let (ok, text) = cupso(&["status", "--socket", socket]);
+    assert!(!ok);
+    assert!(text.contains("connecting"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn batch_suspend_requires_checkpoint_dir() {
     let (ok, text) = cupso(&[

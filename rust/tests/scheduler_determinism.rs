@@ -15,7 +15,7 @@ use cupso::engine::{self, Engine, ParallelSettings};
 use cupso::fitness::{Cubic, Objective};
 use cupso::pso::{serial_sync, PsoParams, RunOutput};
 use cupso::scheduler::{
-    JobScheduler, JobSpec, SchedPolicy, StopReason, TerminationCriteria,
+    BatchRun, JobScheduler, JobSpec, SchedPolicy, StopReason, TerminationCriteria,
 };
 use std::sync::Arc;
 
@@ -449,6 +449,129 @@ fn queue_lock_jobs_schedule_without_cross_talk() {
         1,
     );
     assert_outputs_equal(&outcomes[1].output, &solo, "queue neighbour of queue-lock");
+}
+
+/// ISSUE 5 determinism extension: **round-boundary admission and
+/// cancellation are invisible to neighbours.** A session that admits
+/// jobs mid-run, cancels one, and recycles its slot must leave every
+/// bit-exact job's trajectory identical to its solo one-shot run — the
+/// service layer's core correctness claim.
+#[test]
+fn late_admission_and_cancellation_are_invisible_to_neighbors() {
+    let solo = |engine: EngineKind, params: &PsoParams, seed: u64| {
+        engine::build(engine, 4)
+            .unwrap()
+            .run(params, &Cubic, Objective::Maximize, seed)
+    };
+    for streams in [1usize, 2, 3] {
+        let scheduler = JobScheduler::with_streams(4, streams);
+        let mut session = scheduler.session();
+        session
+            .admit(cubic_spec("keeper", EngineKind::Queue, PsoParams::paper_1d(300, 40), 1))
+            .unwrap();
+        session
+            .admit(cubic_spec("victim", EngineKind::Reduction, PsoParams::paper_1d(200, 60), 2))
+            .unwrap();
+        for _ in 0..6 {
+            session.round(&mut |_| {}).unwrap();
+        }
+        // Late admission while neighbours are mid-trajectory.
+        session
+            .admit(cubic_spec("late", EngineKind::LoopUnrolling, PsoParams::paper_1d(257, 30), 3))
+            .unwrap();
+        for _ in 0..4 {
+            session.round(&mut |_| {}).unwrap();
+        }
+        // Cancellation at a round boundary; the freed slot is recycled
+        // by the next admission.
+        let cancelled = session.cancel("victim").unwrap();
+        assert_eq!(cancelled.stop, StopReason::Cancelled);
+        assert!(cancelled.steps > 0 && cancelled.steps < 60);
+        session
+            .admit(cubic_spec("recycled", EngineKind::Queue, PsoParams::paper_120d(64, 12), 4))
+            .unwrap();
+        while session.live() > 0 {
+            session.round(&mut |_| {}).unwrap();
+        }
+        let mut outcomes = Vec::new();
+        session.reap(|o| outcomes.push(o)).unwrap();
+        assert_eq!(outcomes.len(), 3, "S={streams}");
+        for o in &outcomes {
+            let (engine, params, seed) = match &*o.name {
+                "keeper" => (EngineKind::Queue, PsoParams::paper_1d(300, 40), 1),
+                "late" => (EngineKind::LoopUnrolling, PsoParams::paper_1d(257, 30), 3),
+                "recycled" => (EngineKind::Queue, PsoParams::paper_120d(64, 12), 4),
+                other => panic!("unexpected job {other}"),
+            };
+            let reference = solo(engine, &params, seed);
+            assert_eq!(o.stop, StopReason::Exhausted, "S={streams} {}", o.name);
+            assert_outputs_equal(
+                &o.output,
+                &reference,
+                &format!("S={streams} {} vs solo", o.name),
+            );
+        }
+        // The cancelled job's partial output equals its solo run paused
+        // at the same step — cancellation truncates, never perturbs.
+        let mut e = engine::build(EngineKind::Reduction, 4).unwrap();
+        let params = PsoParams::paper_1d(200, 60);
+        let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 2);
+        for _ in 0..cancelled.steps {
+            run.step();
+        }
+        let paused = run.finish();
+        assert_outputs_equal(
+            &cancelled.output,
+            &paused,
+            &format!("S={streams} cancelled prefix"),
+        );
+    }
+}
+
+/// A live session drained mid-run (some jobs admitted late) resumes from
+/// its snapshot alone — and the completed results are bit-identical to
+/// the same jobs run in one uninterrupted batch.
+#[test]
+fn drained_session_snapshot_resumes_to_uninterrupted_results() {
+    let mk_a = || cubic_spec("a", EngineKind::Queue, PsoParams::paper_1d(300, 35), 7);
+    let mk_b = || cubic_spec("b", EngineKind::Reduction, PsoParams::paper_120d(64, 25), 8);
+    let scheduler = JobScheduler::with_streams(4, 2);
+    // Reference: both jobs, one uninterrupted batch. (Admission timing
+    // cannot matter for bit-exact engines, so this is the oracle even
+    // though `b` is admitted late below.)
+    let reference = scheduler.run(&[mk_a(), mk_b()]).unwrap();
+
+    let mut session = scheduler.session();
+    session.admit(mk_a()).unwrap();
+    for _ in 0..5 {
+        session.round(&mut |_| {}).unwrap();
+    }
+    session.admit(mk_b()).unwrap();
+    for _ in 0..4 {
+        session.round(&mut |_| {}).unwrap();
+    }
+    // Drain: snapshot every live job, then throw the session away.
+    let snap = session.snapshot();
+    drop(session);
+    assert_eq!(snap.len(), 2);
+    assert!(snap.iter().all(|j| j.stop.is_none()));
+
+    // Resume purely from the snapshot (specs rebuilt from checkpoints,
+    // exactly like `cupso resume` after a service drain).
+    let specs = snap
+        .iter()
+        .map(JobSpec::from_checkpoint)
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    let resumed = match scheduler.run_session(&specs, Some(&snap), None, |_| {}).unwrap() {
+        BatchRun::Complete(outcomes) => outcomes,
+        BatchRun::Suspended(_) => panic!("uncapped resume must complete"),
+    };
+    for (r, reference) in resumed.iter().zip(&reference) {
+        assert_eq!(r.steps, reference.steps, "{}", r.name);
+        assert_eq!(r.stop, reference.stop, "{}", r.name);
+        assert_outputs_equal(&r.output, &reference.output, &r.name);
+    }
 }
 
 #[test]

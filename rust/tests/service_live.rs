@@ -1,0 +1,252 @@
+//! Service-layer integration: drive a live [`ServiceSession`] over its
+//! real Unix-socket JSON protocol, in process — submit, status, watch,
+//! cancel, drain — then prove the drained snapshot resumes to the
+//! uninterrupted results through the library's resume path.
+//!
+//! (The `cupso` binary's serve/submit/... verbs are exercised end to end
+//! in `cli_launcher.rs`; this tier pins the protocol and the
+//! drain-to-snapshot semantics without process-spawn overhead.)
+
+use cupso::checkpoint::store::read_snapshot;
+use cupso::config::{BatchConfig, EngineKind};
+use cupso::fitness::{Cubic, Objective};
+use cupso::pso::PsoParams;
+use cupso::scheduler::{BatchRun, JobScheduler, JobSpec, StopReason};
+use cupso::service::proto::Json;
+use cupso::service::{bind, spawn_server, ServiceSession};
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn knobs(streams: usize) -> BatchConfig {
+    BatchConfig {
+        workers: 2,
+        policy: "round-robin".into(),
+        streams,
+        batch_steps: 1,
+        preempt_quantum: 0,
+        jobs: Vec::new(),
+    }
+}
+
+fn spec(name: &str, engine: EngineKind, n: usize, iters: u64, seed: u64) -> JobSpec {
+    JobSpec::new(
+        name,
+        engine,
+        PsoParams::paper_1d(n, iters),
+        Arc::new(Cubic),
+        Objective::Maximize,
+        seed,
+    )
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cupso-service-live-{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One request line → one parsed response line over a fresh connection.
+fn roundtrip(socket: &Path, line: &str) -> Json {
+    let stream = UnixStream::connect(socket).expect("connect");
+    let mut writer = stream.try_clone().unwrap();
+    writeln!(writer, "{line}").unwrap();
+    writer.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    Json::parse(reply.trim()).unwrap_or_else(|e| panic!("bad response {reply:?}: {e}"))
+}
+
+fn ok(doc: &Json) -> bool {
+    doc.get("ok").map(|v| v == &Json::Bool(true)).unwrap_or(false)
+}
+
+#[test]
+fn socket_protocol_submit_status_cancel_watch_drain() {
+    let dir = temp_dir("proto");
+    let socket = dir.join("svc.sock");
+    let snap_dir = dir.join("drain");
+    let scheduler = JobScheduler::with_streams(2, 2);
+    let (service, handle) = ServiceSession::new(
+        &scheduler,
+        knobs(2),
+        Some(snap_dir.clone()),
+        vec![spec("resident", EngineKind::Queue, 128, 500_000, 1)],
+    )
+    .unwrap();
+    let listener = bind(&socket).unwrap();
+    let _accept = spawn_server(listener, handle);
+    let svc = std::thread::spawn(move || service.run().unwrap());
+
+    // Ping.
+    let doc = roundtrip(&socket, r#"{"op": "ping"}"#);
+    assert!(ok(&doc), "{doc:?}");
+
+    // Submit a second live job over the wire.
+    let doc = roundtrip(
+        &socket,
+        r#"{"op": "submit", "job": {"name": "wired", "fitness": "cubic", "engine": "reduction", "particles": 96, "iters": 400000, "seed": 2}}"#,
+    );
+    assert!(ok(&doc), "{doc:?}");
+    assert_eq!(doc.str_field("name").unwrap(), "wired");
+    assert_eq!(doc.get("slot").unwrap().as_u64("slot").unwrap(), 1);
+
+    // Duplicate name → loud protocol error.
+    let doc = roundtrip(
+        &socket,
+        r#"{"op": "submit", "job": {"name": "wired", "iters": 10}}"#,
+    );
+    assert!(!ok(&doc));
+    assert!(doc.str_field("error").unwrap().contains("unique"), "{doc:?}");
+
+    // Malformed request → error, connection survives server-side.
+    let doc = roundtrip(&socket, r#"{"op": "submit", "job": {"name": "x", "particles": 0}}"#);
+    assert!(!ok(&doc));
+    assert!(doc.str_field("error").unwrap().contains("particles"));
+
+    // Status: both jobs live.
+    let doc = roundtrip(&socket, r#"{"op": "status"}"#);
+    assert!(ok(&doc), "{doc:?}");
+    let live = match doc.get("live").unwrap() {
+        Json::Arr(items) => items,
+        other => panic!("live not an array: {other:?}"),
+    };
+    assert_eq!(live.len(), 2);
+    assert_eq!(live[0].str_field("name").unwrap(), "resident");
+    assert_eq!(live[1].str_field("name").unwrap(), "wired");
+    assert!(live[0].get("steps").unwrap().as_u64("steps").unwrap() > 0);
+
+    // Watch: the ack line, then at least a few report events.
+    {
+        let stream = UnixStream::connect(&socket).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        writeln!(writer, r#"{{"op": "watch"}}"#).unwrap();
+        writer.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let ack = Json::parse(line.trim()).unwrap();
+        assert!(ok(&ack), "{ack:?}");
+        for _ in 0..4 {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let ev = Json::parse(line.trim()).unwrap();
+            assert_eq!(ev.str_field("event").unwrap(), "report");
+            let job = ev.str_field("job").unwrap();
+            assert!(job == "resident" || job == "wired", "{ev:?}");
+        }
+        // Dropping the connection unsubscribes us (server reaps on the
+        // next failed send).
+    }
+
+    // Cancel the wired job.
+    let doc = roundtrip(&socket, r#"{"op": "cancel", "name": "wired"}"#);
+    assert!(ok(&doc), "{doc:?}");
+    let job = doc.get("job").unwrap();
+    assert_eq!(job.str_field("name").unwrap(), "wired");
+    assert_eq!(job.str_field("stop").unwrap(), "cancelled");
+    let doc = roundtrip(&socket, r#"{"op": "cancel", "name": "wired"}"#);
+    assert!(!ok(&doc), "double cancel must fail: {doc:?}");
+
+    // Drain: the resident job lands in the snapshot, the service stops.
+    let doc = roundtrip(&socket, r#"{"op": "drain"}"#);
+    assert!(ok(&doc), "{doc:?}");
+    assert_eq!(doc.get("snapshotted").unwrap().as_u64("s").unwrap(), 1);
+    assert_eq!(doc.get("finished").unwrap().as_u64("f").unwrap(), 1);
+    assert_eq!(doc.str_field("dir").unwrap(), snap_dir.display().to_string());
+
+    let end = svc.join().unwrap();
+    assert_eq!(end.drained, 1);
+    assert_eq!(end.results.len(), 1);
+    assert_eq!(end.results[0].stop, StopReason::Cancelled);
+
+    // The snapshot is a regular resumable batch snapshot.
+    let (manifest_knobs, keep, ckpts) = read_snapshot(&snap_dir).unwrap();
+    assert_eq!(keep, 1);
+    assert_eq!(manifest_knobs.streams, 2);
+    assert_eq!(ckpts.len(), 1);
+    assert_eq!(&*ckpts[0].name, "resident");
+    assert!(ckpts[0].stop.is_none());
+    let manifest = std::fs::read_to_string(snap_dir.join("manifest.toml")).unwrap();
+    assert!(manifest.contains("source = \"serve\""), "{manifest}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Drain → resume equivalence at the library level: a service that
+/// admitted one job at startup and one live, drained mid-run, must
+/// resume (through the standard scheduler resume path) to the exact
+/// results of the uninterrupted batch.
+#[test]
+fn drained_service_resumes_to_uninterrupted_results() {
+    let dir = temp_dir("resume");
+    let snap_dir = dir.join("drain");
+    let mk_a = || spec("early", EngineKind::Queue, 256, 30_000, 11);
+    let mk_b = || spec("live", EngineKind::Reduction, 200, 25_000, 12);
+    let scheduler = JobScheduler::with_streams(2, 2);
+    let reference = scheduler.run(&[mk_a(), mk_b()]).unwrap();
+
+    let (service, handle) = ServiceSession::new(
+        &scheduler,
+        knobs(2),
+        Some(snap_dir.clone()),
+        vec![mk_a()],
+    )
+    .unwrap();
+    let svc = std::thread::spawn(move || service.run().unwrap());
+    handle.submit(mk_b()).unwrap();
+    // Let both jobs make some progress, then drain mid-flight.
+    loop {
+        let status = handle.status().unwrap();
+        if status.live.len() == 2 && status.live.iter().all(|j| j.steps > 50) {
+            break;
+        }
+        assert!(
+            status.live.len() + status.finished.len() == 2,
+            "lost a job: {status:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let report = handle.drain().unwrap();
+    assert_eq!(report.snapshotted, 2, "both jobs must still be live");
+    let end = svc.join().unwrap();
+    assert_eq!(end.drained, 2);
+
+    // Resume exactly like `cupso resume` does.
+    let (_, _, ckpts) = read_snapshot(&snap_dir).unwrap();
+    let specs = ckpts
+        .iter()
+        .map(JobSpec::from_checkpoint)
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    let resumed = match scheduler.run_session(&specs, Some(&ckpts), None, |_| {}).unwrap() {
+        BatchRun::Complete(outcomes) => outcomes,
+        BatchRun::Suspended(_) => panic!("uncapped resume must complete"),
+    };
+    assert_eq!(resumed.len(), 2);
+    for (r, reference) in resumed.iter().zip(&reference) {
+        assert_eq!(&r.name, &reference.name);
+        assert_eq!(r.steps, reference.steps, "{}", r.name);
+        assert_eq!(r.output.gbest_fit, reference.output.gbest_fit, "{}", r.name);
+        assert_eq!(r.output.gbest_pos, reference.output.gbest_pos, "{}", r.name);
+        assert_eq!(r.output.history, reference.output.history, "{}", r.name);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_socket_is_cleaned_up_and_live_socket_is_refused() {
+    let dir = temp_dir("bind");
+    let socket = dir.join("svc.sock");
+    // A stale file nobody listens on: bind() must replace it.
+    std::fs::write(&socket, b"").unwrap();
+    let listener = bind(&socket).expect("stale socket must be reclaimed");
+    // A *live* socket must be refused.
+    let err = bind(&socket).unwrap_err().to_string();
+    assert!(err.contains("already being served"), "{err}");
+    drop(listener);
+    std::fs::remove_dir_all(&dir).ok();
+}

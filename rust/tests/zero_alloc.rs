@@ -19,11 +19,12 @@
 //! The counter is process-global, so every test here serializes on one
 //! mutex; this file must contain only allocation-accounting tests.
 
-use cupso::config::EngineKind;
+use cupso::config::{BatchConfig, EngineKind};
 use cupso::engine::{self, Engine, Run};
 use cupso::fitness::{Fitness, Objective};
 use cupso::pso::PsoParams;
 use cupso::scheduler::{JobScheduler, JobSpec};
+use cupso::service::ServiceSession;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -183,6 +184,62 @@ fn warmed_up_rounds_allocate_nothing_for_bit_exact_engines() {
                 assert_eq!(o.output.counters.gbest_updates, 0);
             }
         }
+    }
+}
+
+#[test]
+fn service_rounds_with_empty_control_queue_allocate_nothing() {
+    let _g = LOCK.lock().unwrap();
+    // ISSUE 5: the service loop drains its control queue at every round
+    // boundary. When the queue is empty (no submits/cancels/watchers
+    // pending) that drain is one non-allocating try_recv, so a warmed-up
+    // service round must stay exactly as allocation-free as a plain
+    // scheduler round — on both the S=1 fast path and the executor path.
+    for streams in [1usize, 2] {
+        let iters = 600u64;
+        let specs = flat_specs(EngineKind::Queue, 2, iters);
+        let scheduler = JobScheduler::with_streams(2, streams);
+        let knobs = BatchConfig {
+            workers: 2,
+            policy: "round-robin".into(),
+            streams,
+            batch_steps: 1,
+            preempt_quantum: 0,
+            jobs: Vec::new(),
+        };
+        let (service, handle) = ServiceSession::new(&scheduler, knobs, None, specs).unwrap();
+        // Drop the only handle: the control queue stays empty forever and
+        // the service runs its admitted work dry.
+        drop(handle);
+        let (warm, upto) = (50u64, 450u64);
+        let mut calls = 0u64;
+        let mut start = 0u64;
+        let mut end = 0u64;
+        let outcome = service
+            .run_with(|_| {
+                calls += 1;
+                if calls == warm {
+                    start = allocs();
+                }
+                if calls == upto {
+                    end = allocs();
+                }
+            })
+            .unwrap();
+        assert!(calls >= upto, "S={streams}: too few rounds ({calls})");
+        assert_eq!(
+            end - start,
+            0,
+            "S={streams}: service steady-state rounds allocated {} times",
+            end - start
+        );
+        assert_eq!(outcome.results.len(), 2);
+        assert_eq!(outcome.finished_total, 2);
+        for o in &outcome.results {
+            assert_eq!(o.steps, iters);
+            assert_eq!(o.gbest_fit, 0.0);
+        }
+        assert_eq!(outcome.drained, 0);
     }
 }
 

@@ -1,0 +1,70 @@
+#!/usr/bin/env bash
+# Service smoke: start `cupso serve` on a temp socket, submit one sphere
+# job, poll status until it finishes, then drain — failing loudly on any
+# protocol error or hang. CI wraps this in `timeout` so a wedged daemon
+# fails the job instead of stalling it.
+set -euo pipefail
+
+BIN=${CUPSO_BIN:-target/release/cupso}
+WORK=$(mktemp -d)
+SOCK="$WORK/cupso.sock"
+SNAP="$WORK/drain"
+
+cleanup() {
+    if [[ -n "${SERVE_PID:-}" ]] && kill -0 "$SERVE_PID" 2>/dev/null; then
+        kill "$SERVE_PID" 2>/dev/null || true
+        wait "$SERVE_PID" 2>/dev/null || true
+    fi
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== starting cupso serve on $SOCK"
+"$BIN" serve --socket "$SOCK" --checkpoint-dir "$SNAP" &
+SERVE_PID=$!
+
+# Wait for the daemon to answer the protocol (not just bind the socket).
+for _ in $(seq 1 100); do
+    if "$BIN" status --socket "$SOCK" >/dev/null 2>&1; then
+        break
+    fi
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "serve died before becoming reachable" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+"$BIN" status --socket "$SOCK" >/dev/null
+
+echo "== submitting one sphere job"
+"$BIN" submit --socket "$SOCK" --name smoke --fitness sphere --dim 3 \
+    --particles 64 --iters 400 --engine queue --seed 7 | tee "$WORK/submit.out"
+grep -q "submitted smoke" "$WORK/submit.out"
+
+echo "== polling status until the job finishes"
+DONE=0
+for _ in $(seq 1 200); do
+    "$BIN" status --socket "$SOCK" >"$WORK/status.out"
+    if grep -q "0 live, 1 finished" "$WORK/status.out"; then
+        DONE=1
+        break
+    fi
+    sleep 0.1
+done
+if [[ "$DONE" != 1 ]]; then
+    echo "job never finished; last status:" >&2
+    cat "$WORK/status.out" >&2
+    exit 1
+fi
+grep -q "smoke" "$WORK/status.out"
+grep -q "exhausted" "$WORK/status.out"
+
+echo "== draining"
+"$BIN" drain --socket "$SOCK" | tee "$WORK/drain.out"
+grep -q "no live jobs" "$WORK/drain.out"
+
+echo "== waiting for the daemon to exit"
+wait "$SERVE_PID"
+SERVE_PID=""
+
+echo "service smoke OK"
