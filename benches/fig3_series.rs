@@ -4,7 +4,9 @@
 //! Regenerates the figure as an ASCII chart (log-y, like the published
 //! plot's visual spread) plus a CSV series file for external plotting.
 //! Two panels: measured (Plane A) and estimated GTX-1080Ti (Plane C).
+//! Set CUPSO_BENCH_JSON to also write `BENCH_fig3_series.json`.
 
+use cupso::benchkit::json::{BenchJson, JsonObj};
 use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
 use cupso::config::EngineKind;
 use cupso::fitness::{Cubic, Objective};
@@ -83,4 +85,21 @@ fn main() {
     let path = results_dir().join("fig3_series.csv");
     write_csv(&path, &table.to_csv()).unwrap();
     println!("series written to {}", path.display());
+
+    let mut doc = BenchJson::new("fig3_series", &cfg);
+    for ((kind, m), (_, e)) in measured.iter().zip(est_rows.iter()) {
+        for (i, &n) in particles.iter().enumerate() {
+            doc.push(
+                JsonObj::new()
+                    .str("engine", kind.label())
+                    .int("particles", n as u64)
+                    .int("iters", iters)
+                    .num("measured_s", m[i])
+                    .num("estimated_gpu_s", e[i]),
+            );
+        }
+    }
+    if let Some(path) = doc.emit().unwrap() {
+        println!("wrote {}", path.display());
+    }
 }

@@ -1,0 +1,158 @@
+//! Fleet stepping cost — swarm-packed megabatch vs per-job stream
+//! executors (ISSUE 6).
+//!
+//! A fleet of small compatible jobs pays the scheduler's per-job round
+//! machinery (pick, budget, launch pair, report) once per job per round
+//! on the executor path, but once per *pack* per round on the packed
+//! path: all member swarms live in one shared slab and step under a
+//! single grid-stride launch pair. This bench isolates that fixed cost
+//! with deliberately tiny jobs (64 particles, 1-D — arithmetic is
+//! negligible) swept over fleet sizes {8, 64, 256}:
+//!
+//! * `per_jobstep_ns` — wall time divided by (jobs × iterations);
+//! * `overhead_ns` — `per_jobstep` minus the solo S=1 fast-path
+//!   `per_jobstep` (one job, no fleet machinery: the pure stepping
+//!   cost), floored at zero;
+//! * `executor_vs_packed_overhead` — executor-path overhead divided by
+//!   packed-path overhead at the same fleet size. The acceptance bar
+//!   (ISSUE 6) is ≥ 5× at 64 jobs.
+//!
+//! Scale via CUPSO_BENCH_SCALE=ci|paper|smoke; set CUPSO_BENCH_JSON to
+//! also write `BENCH_pack.json`.
+
+use cupso::benchkit::json::{BenchJson, JsonObj};
+use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
+use cupso::config::EngineKind;
+use cupso::fitness::{Cubic, Objective};
+use cupso::metrics::Table;
+use cupso::pso::PsoParams;
+use cupso::scheduler::{JobScheduler, JobSpec};
+use std::sync::Arc;
+
+/// A fleet of identical tiny Queue jobs (all pack-compatible).
+fn specs(jobs: usize, iters: u64) -> Vec<JobSpec> {
+    (0..jobs)
+        .map(|j| {
+            JobSpec::new(
+                &format!("pack{j}"),
+                EngineKind::Queue,
+                PsoParams::paper_1d(64, iters),
+                Arc::new(Cubic),
+                Objective::Maximize,
+                j as u64 + 1,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let iters = cfg.iters(20_000);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "pack_throughput: 64-particle 1-D jobs, {iters} iters each ({}), \
+         {} reps trimmed-mean, {cores} cores\n",
+        cfg.scale_note(),
+        cfg.reps
+    );
+
+    let mut table = Table::new(
+        "Fleet stepping cost — packed megabatch vs stream executors",
+        &["Mode", "jobs", "time (s)", "ns/job-step", "overhead ns/job-step"],
+    );
+    let mut doc = BenchJson::new("pack", &cfg);
+
+    let mut measure = |scheduler: &JobScheduler, jobs: usize| -> f64 {
+        let job_specs = specs(jobs, iters);
+        let s = measure_timed(&cfg, || {
+            let outcomes = scheduler.run(&job_specs).unwrap();
+            for o in &outcomes {
+                assert_eq!(o.steps, iters, "{}", o.name);
+            }
+        });
+        s.trimmed_mean()
+    };
+
+    // One job on the S=1 fast path: the pure per-step cost with no fleet
+    // machinery at all, charged as the baseline for every mode below.
+    let solo = JobScheduler::with_streams(4, 1);
+    let base_wall = measure(&solo, 1);
+    let base = base_wall / iters as f64;
+    table.row(&[
+        "solo".into(),
+        "1".into(),
+        format!("{base_wall:.4}"),
+        format!("{:.0}", base * 1e9),
+        "0".into(),
+    ]);
+    doc.push(
+        JsonObj::new()
+            .str("mode", "solo")
+            .int("jobs", 1)
+            .int("iters", iters)
+            .num("wall_s", base_wall)
+            .num("per_jobstep_ns", base * 1e9)
+            .num("overhead_ns", 0.0),
+    );
+
+    for fleet in [8usize, 64, 256] {
+        let mut overheads = [0.0f64; 2]; // [executor, packed]
+        let executors = JobScheduler::with_streams(4, 4);
+        let packed = JobScheduler::with_streams(4, 1).pack(true);
+        for (slot, (mode, scheduler)) in [("executors", &executors), ("packed", &packed)]
+            .into_iter()
+            .enumerate()
+        {
+            let wall = measure(scheduler, fleet);
+            let per_jobstep = wall / (fleet as u64 * iters) as f64;
+            let overhead = (per_jobstep - base).max(0.0);
+            overheads[slot] = overhead;
+            table.row(&[
+                mode.into(),
+                fleet.to_string(),
+                format!("{wall:.4}"),
+                format!("{:.0}", per_jobstep * 1e9),
+                format!("{:.0}", overhead * 1e9),
+            ]);
+            doc.push(
+                JsonObj::new()
+                    .str("mode", mode)
+                    .int("jobs", fleet as u64)
+                    .int("iters", iters)
+                    .num("wall_s", wall)
+                    .num("per_jobstep_ns", per_jobstep * 1e9)
+                    .num("overhead_ns", overhead * 1e9),
+            );
+        }
+        let ratio = if overheads[1] > 0.0 {
+            overheads[0] / overheads[1]
+        } else {
+            f64::INFINITY
+        };
+        println!(
+            "{fleet} jobs: executor per-job-step overhead is {ratio:.1}x the \
+             packed overhead"
+        );
+        doc.push(
+            JsonObj::new()
+                .str("mode", "summary")
+                .int("jobs", fleet as u64)
+                .num("executor_overhead_ns", overheads[0] * 1e9)
+                .num("packed_overhead_ns", overheads[1] * 1e9)
+                .num("executor_vs_packed_overhead", ratio),
+        );
+    }
+
+    println!("\n{}", table.to_markdown());
+    table.emit(&results_dir(), "pack_throughput").unwrap();
+    if let Some(path) = doc.emit().unwrap() {
+        println!("wrote {}", path.display());
+    }
+    println!(
+        "expectation: executor fleets pay a pick + launch pair + report per\n\
+         job per round where packs pay one launch pair per round for the\n\
+         whole fleet; the acceptance bar is >= 5x lower overhead at 64 jobs."
+    );
+}

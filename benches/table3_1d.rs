@@ -3,8 +3,10 @@
 //!
 //! Emits three aligned columns per cell: **measured** (Plane A, this
 //! host), **estimated GPU** (Plane C, GTX-1080Ti model), and **paper**
-//! (the published number). Scale via CUPSO_BENCH_SCALE=ci|paper|smoke.
+//! (the published number). Scale via CUPSO_BENCH_SCALE=ci|paper|smoke;
+//! set CUPSO_BENCH_JSON to also write `BENCH_table3_1d.json`.
 
+use cupso::benchkit::json::{BenchJson, JsonObj};
 use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
 use cupso::config::EngineKind;
 use cupso::fitness::{Cubic, Objective};
@@ -34,6 +36,7 @@ fn main() {
             "paper (s)",
         ],
     );
+    let mut doc = BenchJson::new("table3_1d", &cfg);
 
     for (row_idx, &n) in gpusim::TABLE3_PARTICLES.iter().enumerate() {
         let params = PsoParams::paper_1d(n, iters);
@@ -56,9 +59,22 @@ fn main() {
                 format!("{est:.3}"),
                 format!("{:.3}", paper_vals[col]),
             ]);
+            doc.push(
+                JsonObj::new()
+                    .str("engine", kind.label())
+                    .int("particles", n as u64)
+                    .int("iters", iters)
+                    .num("measured_s", measured)
+                    .num("extrapolated_100k_s", measured * scale)
+                    .num("est_gpu_s", est)
+                    .num("paper_s", paper_vals[col]),
+            );
         }
     }
     table.emit(&results_dir(), "table3_1d").unwrap();
+    if let Some(path) = doc.emit().unwrap() {
+        println!("wrote {}", path.display());
+    }
 
     println!(
         "shape checks: within each particle count the measured ranking should\n\

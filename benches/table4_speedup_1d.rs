@@ -4,8 +4,10 @@
 //!
 //! Measured columns use Plane A (serial vs Queue-Lock on threads); the
 //! estimated column replays the sweep on the Plane-C GTX-1080Ti model,
-//! which reproduces the paper's peak-then-drop signature.
+//! which reproduces the paper's peak-then-drop signature. Set
+//! CUPSO_BENCH_JSON to also write `BENCH_table4_speedup_1d.json`.
 
+use cupso::benchkit::json::{BenchJson, JsonObj};
 use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
 use cupso::config::EngineKind;
 use cupso::engine::{Engine, ParallelSettings, QueueLockEngine, SerialEngine};
@@ -35,6 +37,7 @@ fn main() {
             "paper speedup",
         ],
     );
+    let mut doc = BenchJson::new("table4_speedup_1d", &cfg);
 
     let settings = ParallelSettings::with_workers(0);
     for (n, _, _, paper_speedup) in gpusim::paper::TABLE4 {
@@ -67,8 +70,21 @@ fn main() {
             format!("{:.2}", est_cpu / est_gpu),
             format!("{paper_speedup:.2}"),
         ]);
+        doc.push(
+            JsonObj::new()
+                .int("particles", n as u64)
+                .int("iters", iters)
+                .num("cpu_s", t_cpu)
+                .num("queuelock_s", t_ql)
+                .num("speedup", t_cpu / t_ql)
+                .num("est_gpu_speedup", est_cpu / est_gpu)
+                .num("paper_speedup", paper_speedup),
+        );
     }
     table.emit(&results_dir(), "table4_speedup_1d").unwrap();
+    if let Some(path) = doc.emit().unwrap() {
+        println!("wrote {}", path.display());
+    }
     println!(
         "the measured speedup is bounded by this host's core count; the\n\
          estimated-GPU column carries the paper's ~200x class and the\n\

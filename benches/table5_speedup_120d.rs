@@ -1,7 +1,9 @@
 //! Table 5 — speedups achieved by the Queue algorithm on the 120-D
 //! problem (paper: CPU vs GPU Queue, per-row iteration counts, peak
-//! ≈225× at 32 768 particles).
+//! ≈225× at 32 768 particles). Set CUPSO_BENCH_JSON to also write
+//! `BENCH_table5_speedup_120d.json`.
 
+use cupso::benchkit::json::{BenchJson, JsonObj};
 use cupso::benchkit::{measure_timed, results_dir, BenchConfig};
 use cupso::config::EngineKind;
 use cupso::engine::{Engine, ParallelSettings, QueueEngine, SerialEngine};
@@ -32,6 +34,7 @@ fn main() {
             "paper speedup",
         ],
     );
+    let mut doc = BenchJson::new("table5_speedup_120d", &cfg);
 
     let settings = ParallelSettings::with_workers(0);
     for ((n, paper_iters), (_, _, _, _, paper_speedup)) in gpusim::TABLE5_ROWS
@@ -69,8 +72,22 @@ fn main() {
             format!("{:.2}", est_cpu / est_gpu),
             format!("{paper_speedup:.2}"),
         ]);
+        doc.push(
+            JsonObj::new()
+                .int("particles", *n as u64)
+                .int("paper_iters", *paper_iters)
+                .int("iters", iters)
+                .num("cpu_s", t_cpu)
+                .num("queue_s", t_q)
+                .num("speedup", t_cpu / t_q)
+                .num("est_gpu_speedup", est_cpu / est_gpu)
+                .num("paper_speedup", *paper_speedup),
+        );
     }
     table.emit(&results_dir(), "table5_speedup_120d").unwrap();
+    if let Some(path) = doc.emit().unwrap() {
+        println!("wrote {}", path.display());
+    }
     println!(
         "the 120-D problem is compute/memory-bound: the measured speedup\n\
          approaches the host's core count, while the estimated-GPU column\n\

@@ -146,6 +146,9 @@ pub fn write_snapshot(
          streams = {}\n\
          batch_steps = {}\n\
          preempt_quantum = {}\n\
+         pack = {}\n\
+         pack_min = {}\n\
+         pack_max = {}\n\
          keep = {}\n\
          jobs = {}\n",
         dir.display(),
@@ -156,6 +159,9 @@ pub fn write_snapshot(
         cfg.streams,
         cfg.batch_steps,
         cfg.preempt_quantum,
+        cfg.pack,
+        cfg.pack_min,
+        cfg.pack_max,
         keep,
         snap.len()
     );
@@ -214,6 +220,31 @@ pub fn read_snapshot(dir: &Path) -> Result<(BatchConfig, usize, Vec<JobCheckpoin
         streams: streams as usize,
         batch_steps,
         preempt_quantum: get_uint("preempt_quantum", u64::MAX)?,
+        // Optional for compatibility with pre-packing snapshots.
+        pack: match doc.get("pack") {
+            Some(v) => v.as_bool("pack")?,
+            None => false,
+        },
+        pack_min: match doc.get("pack_min") {
+            Some(v) => {
+                let n = v.as_int("pack_min")?;
+                if !(2..=100_000).contains(&n) {
+                    bail!("manifest: pack_min = {n} out of range");
+                }
+                n as usize
+            }
+            None => 2,
+        },
+        pack_max: match doc.get("pack_max") {
+            Some(v) => {
+                let n = v.as_int("pack_max")?;
+                if !(0..=100_000).contains(&n) {
+                    bail!("manifest: pack_max = {n} out of range");
+                }
+                n as usize
+            }
+            None => 0,
+        },
         jobs: Vec::new(),
     };
     // Optional for compatibility with pre-rotation snapshots.

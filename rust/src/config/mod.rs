@@ -367,6 +367,14 @@ pub struct BatchConfig {
     /// checkpoint and later restored on a free stream (0 = cooperative
     /// scheduling, the default).
     pub preempt_quantum: u64,
+    /// Swarm-packing: group compatible live Queue jobs into one shared
+    /// slab stepped with a single launch pair per round (off by default;
+    /// see [`crate::scheduler::JobScheduler::pack`]).
+    pub pack: bool,
+    /// Smallest compatible group worth packing (≥ 2).
+    pub pack_min: usize,
+    /// Largest pack formed (0 = unbounded).
+    pub pack_max: usize,
     /// The jobs, in file order.
     pub jobs: Vec<JobConfig>,
 }
@@ -415,6 +423,9 @@ impl BatchConfig {
             streams: 1,
             batch_steps: 1,
             preempt_quantum: 0,
+            pack: false,
+            pack_min: 2,
+            pack_max: 0,
             jobs: Vec::new(),
         };
         // Materialize a job per `[jobs.<name>]` section header first, so a
@@ -493,6 +504,9 @@ impl BatchConfig {
                     "streams" => cfg.streams = as_uint(&value, &key)? as usize,
                     "batch_steps" => cfg.batch_steps = as_uint(&value, &key)?,
                     "preempt_quantum" => cfg.preempt_quantum = as_uint(&value, &key)?,
+                    "pack" => cfg.pack = value.as_bool(&key)?,
+                    "pack_min" => cfg.pack_min = as_uint(&value, &key)? as usize,
+                    "pack_max" => cfg.pack_max = as_uint(&value, &key)? as usize,
                     other => bail!("unknown batch key {other:?} (in {key:?})"),
                 }
             }
@@ -524,6 +538,16 @@ impl BatchConfig {
         }
         if self.batch_steps == 0 {
             bail!("batch_steps must be >= 1");
+        }
+        if self.pack_min < 2 {
+            bail!("pack_min must be >= 2 (a pack of one is a standalone job)");
+        }
+        if self.pack_max != 0 && self.pack_max < self.pack_min {
+            bail!(
+                "pack_max ({}) must be 0 (unbounded) or >= pack_min ({})",
+                self.pack_max,
+                self.pack_min
+            );
         }
         for (i, job) in self.jobs.iter().enumerate() {
             job.validate()?;
@@ -668,6 +692,28 @@ mod tests {
         assert!(BatchConfig::from_toml_str("batch_steps = 0\n[jobs.x]\nseed = 1").is_err());
         assert!(BatchConfig::from_toml_str("[jobs.x]\nvmax_frac = 0.0").is_err());
         assert!(BatchConfig::from_toml_str("[jobs.x]\nvmax_frac = 1.5").is_err());
+    }
+
+    #[test]
+    fn batch_config_parses_pack_knobs() {
+        let cfg = BatchConfig::from_toml_str(
+            "[scheduler]\npack = true\npack_min = 4\npack_max = 32\n[jobs.x]\nseed = 1",
+        )
+        .unwrap();
+        assert!(cfg.pack);
+        assert_eq!(cfg.pack_min, 4);
+        assert_eq!(cfg.pack_max, 32);
+        // Defaults: packing off, min 2, unbounded max.
+        let plain = BatchConfig::from_toml_str("[jobs.x]\nseed = 1").unwrap();
+        assert!(!plain.pack);
+        assert_eq!(plain.pack_min, 2);
+        assert_eq!(plain.pack_max, 0);
+        // Out-of-range values are load-time errors.
+        assert!(BatchConfig::from_toml_str("pack_min = 1\n[jobs.x]\nseed = 1").is_err());
+        assert!(
+            BatchConfig::from_toml_str("pack_min = 8\npack_max = 4\n[jobs.x]\nseed = 1").is_err()
+        );
+        assert!(BatchConfig::from_toml_str("pack = 1\n[jobs.x]\nseed = 1").is_err(), "not a bool");
     }
 
     #[test]

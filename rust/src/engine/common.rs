@@ -304,6 +304,23 @@ impl StepScratch {
     }
 }
 
+/// A mutable view of one swarm's SoA arrays — either a standalone
+/// [`SwarmState`]'s fields or one member's region of a pack slab
+/// ([`crate::engine::PackedRun`]). Within the view the layout is the
+/// standalone dimension-major one: `pos[d * n + i]`. Routing both the
+/// solo engines and the pack through [`step_block_view`] makes the two
+/// execution layouts bit-identical *by construction* — same function,
+/// same per-element op sequence.
+pub(crate) struct SwarmView<'s> {
+    pub n: usize,
+    pub dim: usize,
+    pub pos: &'s mut [f64],
+    pub vel: &'s mut [f64],
+    pub fit: &'s mut [f64],
+    pub pbest_pos: &'s mut [f64],
+    pub pbest_fit: &'s mut [f64],
+}
+
 /// The shared "1st kernel" body: step every particle of block `b` against
 /// the frozen global-best position, then evaluate fitness and update
 /// pbest. Returns the block's best `(fit, idx)` of *this iteration* under
@@ -320,6 +337,36 @@ impl StepScratch {
 #[inline]
 pub(crate) fn step_block(
     state: &mut SwarmState,
+    lo: usize,
+    hi: usize,
+    gbest_pos: &[f64],
+    params: &PsoParams,
+    fitness: &dyn Fitness,
+    objective: Objective,
+    stream: &PhiloxStream,
+    iter: u64,
+    scratch: &mut StepScratch,
+) -> (f64, usize) {
+    let mut view = SwarmView {
+        n: state.n,
+        dim: state.dim,
+        pos: &mut state.pos,
+        vel: &mut state.vel,
+        fit: &mut state.fit,
+        pbest_pos: &mut state.pbest_pos,
+        pbest_fit: &mut state.pbest_fit,
+    };
+    step_block_view(
+        &mut view, lo, hi, gbest_pos, params, fitness, objective, stream, iter, scratch,
+    )
+}
+
+/// [`step_block`] generalized over a [`SwarmView`] — the single body both
+/// the standalone engines and the pack slab execute.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn step_block_view(
+    state: &mut SwarmView<'_>,
     lo: usize,
     hi: usize,
     gbest_pos: &[f64],

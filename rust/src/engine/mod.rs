@@ -49,12 +49,14 @@
 
 mod async_persistent;
 mod common;
+mod pack;
 mod queue;
 mod queue_lock;
 mod reduction;
 
 pub use async_persistent::AsyncEngine;
 pub use common::{GlobalBest, ParallelSettings};
+pub use pack::PackedRun;
 pub use queue::QueueEngine;
 pub use queue_lock::QueueLockEngine;
 pub use reduction::ReductionEngine;

@@ -1,0 +1,661 @@
+//! Swarm-packing megabatch — step an entire fleet of jobs in one
+//! grid-stride launch (the fleet-level analogue of PSSO's flattened
+//! population, arXiv:2110.01470).
+//!
+//! The scheduler's per-job dispatch cost (a publish + wake per stream per
+//! round, `benches/scheduler_latency.rs`) dominates fleets of small
+//! swarms: S streams step at most S jobs per round, and every job pays
+//! the round machinery individually. A [`PackedRun`] removes that cost by
+//! fusing compatible jobs into **one shared SoA slab** — the positions,
+//! velocities, pbest and fitness arrays of all member swarms laid out
+//! contiguously, member by member — and stepping *every* member with a
+//! single pair of grid launches per iteration:
+//!
+//! 1. **1st kernel** over `Σ blocks_m` flat blocks: a block's flat index
+//!    decodes through `block_member` to its `(member, local block)` pair;
+//!    within the member's slab region the layout is exactly the
+//!    standalone dimension-major one, so the block runs the *identical*
+//!    [`step_block_view`] body a solo [`QueueRun`] runs — same Philox
+//!    draws (member-local particle indices, per-member streams), same
+//!    conditional queue append against the member's frozen threshold,
+//!    same thread-0 scan into the member's aux slots.
+//! 2. **2nd kernel** over `members` blocks: block `m` exclusively scans
+//!    member `m`'s aux range and updates member `m`'s own
+//!    [`GlobalBest`] — per-job gbest updates, never shared.
+//!
+//! Packing is therefore **purely an execution-layout choice**: per-job
+//! RNG streams, gbest updates, NaN ordering, history stride and counters
+//! are all bit-identical to solo execution, which the determinism tier
+//! proves (`rust/tests/scheduler_determinism.rs` § pack). Members are
+//! formed from — and extract back into — ordinary [`RunKind::Queue`]
+//! checkpoints, so a packed job can leave the pack (cancel, preemption,
+//! dissolution, drain) into a standalone checkpoint-equivalent state and
+//! resume anywhere a solo Queue run can.
+//!
+//! Compatibility rule (enforced by [`PackedRun::form`]): members must be
+//! Queue-kind checkpoints with equal `dim` and equal objective; particle
+//! counts and iteration budgets may differ (done members simply skip).
+//!
+//! [`QueueRun`]: crate::engine::QueueEngine
+
+use super::common::{
+    step_block_view, GlobalBest, ParallelSettings, PerBlock, StepScratch, SwarmView,
+};
+use super::{Run, StepReport};
+use crate::checkpoint::{RunCheckpoint, RunKind, VERSION};
+use crate::exec::SharedQueue;
+use crate::fitness::{Fitness, Objective};
+use crate::pso::serial_sync::better_with_tie;
+use crate::pso::{history_capacity, history_stride, Counters, PsoParams, RunOutput, SwarmState};
+use crate::rng::PhiloxStream;
+use anyhow::{bail, Result};
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+/// The pack's shared SoA arrays: every member's swarm, contiguous.
+/// Member `m` owns `pos/vel/pbest_pos[row_off .. row_off + n·dim]` and
+/// `fit/pbest_fit[par_off .. par_off + n]`; within its region the layout
+/// is the standalone dimension-major `[d * n + i]`.
+struct Slab {
+    pos: Vec<f64>,
+    vel: Vec<f64>,
+    fit: Vec<f64>,
+    pbest_pos: Vec<f64>,
+    pbest_fit: Vec<f64>,
+}
+
+/// Slab shared across blocks — the same discipline as
+/// [`super::common::SharedSwarm`]: blocks of one member touch disjoint
+/// particle columns of that member's region, and different members'
+/// regions are disjoint by construction.
+struct SharedSlab(UnsafeCell<Slab>);
+
+unsafe impl Sync for SharedSlab {}
+
+impl SharedSlab {
+    /// # Safety
+    /// Caller must only touch the particle columns of its own block's
+    /// member region while other blocks may be live.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get(&self) -> &mut Slab {
+        &mut *self.0.get()
+    }
+}
+
+/// One packed job: its own params, fitness, RNG stream, global best and
+/// bookkeeping — everything a solo `QueueRun` keeps per run — plus the
+/// member's offsets into the shared slab and flat block range.
+struct Member {
+    params: PsoParams,
+    objective: Objective,
+    fitness: Arc<dyn Fitness + Send>,
+    seed: u64,
+    rng: PhiloxStream,
+    gbest: GlobalBest,
+    /// Frozen global-best position for the current iteration (host-side
+    /// refresh before each launch pair, exactly like the solo run).
+    frozen: Vec<f64>,
+    /// Frozen improvement threshold for the current iteration.
+    threshold: f64,
+    /// Start of this member's region in the row slabs (`pos`/`vel`/
+    /// `pbest_pos`).
+    row_off: usize,
+    /// Start of this member's region in the particle slabs (`fit`/
+    /// `pbest_fit`).
+    par_off: usize,
+    /// First flat block of this member.
+    block_off: usize,
+    /// Flat blocks this member spans.
+    blocks: usize,
+    /// Queue pushes accumulated before pack formation.
+    push_base: u64,
+    stride: u64,
+    history: Vec<(u64, f64)>,
+    iter: u64,
+    /// False once the member was extracted (tombstone: its slab region
+    /// and blocks are simply skipped from then on).
+    live: bool,
+    /// Whether this member steps in the current iteration (host-set
+    /// before each launch pair; read-only inside the kernels).
+    step_active: bool,
+    /// Iterations remaining in the current budgeted batch.
+    budget: u64,
+    /// Gbest update count at batch start (per-batch `improved` flag).
+    updates_before: u64,
+}
+
+/// A fleet of compatible Queue jobs stepped as one unit — see the module
+/// docs. Formed from per-job [`RunCheckpoint`]s; members extract back
+/// into per-job checkpoints at any step boundary.
+pub struct PackedRun {
+    settings: ParallelSettings,
+    dim: usize,
+    members: Vec<Member>,
+    slab: SharedSlab,
+    /// One conditional-append queue per flat block (Algorithm 2's
+    /// shared-memory queue, identical geometry to the solo run).
+    queues: Vec<SharedQueue<(f64, u32)>>,
+    /// Per-flat-block `(fit, idx)` best of the iteration.
+    aux: PerBlock<(f64, u32)>,
+    scratch: PerBlock<StepScratch>,
+    /// Flat block index → member index (the grid-stride decode table).
+    block_member: Vec<u32>,
+    total_blocks: usize,
+    live: usize,
+}
+
+impl PackedRun {
+    /// Form a pack from per-member `(checkpoint, fitness)` pairs. Every
+    /// checkpoint must be a structurally valid [`RunKind::Queue`]
+    /// checkpoint; all members must share `dim` and objective. The slab
+    /// copies each member's swarm out of its checkpoint (one copy — the
+    /// checkpoints themselves are typically moves out of live runs).
+    pub fn form(
+        settings: ParallelSettings,
+        members_in: &[(Arc<RunCheckpoint>, Arc<dyn Fitness + Send>)],
+    ) -> Result<Self> {
+        let Some((first, _)) = members_in.first() else {
+            bail!("cannot form an empty pack");
+        };
+        let dim = first.params.dim;
+        let objective = first.objective;
+        for (ckpt, _) in members_in {
+            if ckpt.kind != RunKind::Queue {
+                bail!("pack members must be Queue runs, got {}", ckpt.kind);
+            }
+            ckpt.validate()?;
+            if ckpt.params.n == 0 {
+                bail!("cannot pack a checkpoint with an empty swarm");
+            }
+            if ckpt.params.dim != dim {
+                bail!(
+                    "pack members must share dim: {} vs {}",
+                    ckpt.params.dim,
+                    dim
+                );
+            }
+            if ckpt.objective != objective {
+                bail!("pack members must share the optimization objective");
+            }
+        }
+
+        let bs = settings.block_size;
+        let mut members = Vec::with_capacity(members_in.len());
+        let mut block_member = Vec::new();
+        let (mut row_off, mut par_off, mut block_off) = (0usize, 0usize, 0usize);
+        for (m, (ckpt, fitness)) in members_in.iter().enumerate() {
+            let n = ckpt.params.n;
+            let blocks = n.div_ceil(bs);
+            let mut history = ckpt.history.clone();
+            history.reserve(history_capacity(ckpt.params.max_iter).saturating_sub(history.len()));
+            let gbest =
+                GlobalBest::restore(ckpt.gbest_fit, &ckpt.gbest_pos, ckpt.counters.gbest_updates);
+            let frozen = gbest.pos_vec();
+            members.push(Member {
+                params: ckpt.params.clone(),
+                objective: ckpt.objective,
+                fitness: Arc::clone(fitness),
+                seed: ckpt.seed,
+                rng: PhiloxStream::new(ckpt.seed),
+                gbest,
+                frozen,
+                threshold: ckpt.gbest_fit,
+                row_off,
+                par_off,
+                block_off,
+                blocks,
+                push_base: ckpt.counters.queue_pushes,
+                stride: history_stride(ckpt.params.max_iter),
+                history,
+                iter: ckpt.iter,
+                live: true,
+                step_active: false,
+                budget: 0,
+                updates_before: 0,
+            });
+            block_member.extend(std::iter::repeat(m as u32).take(blocks));
+            row_off += n * dim;
+            par_off += n;
+            block_off += blocks;
+        }
+        let total_blocks = block_off;
+
+        let mut slab = Slab {
+            pos: Vec::with_capacity(row_off),
+            vel: Vec::with_capacity(row_off),
+            fit: Vec::with_capacity(par_off),
+            pbest_pos: Vec::with_capacity(row_off),
+            pbest_fit: Vec::with_capacity(par_off),
+        };
+        for (ckpt, _) in members_in {
+            slab.pos.extend_from_slice(&ckpt.swarm.pos);
+            slab.vel.extend_from_slice(&ckpt.swarm.vel);
+            slab.fit.extend_from_slice(&ckpt.swarm.fit);
+            slab.pbest_pos.extend_from_slice(&ckpt.swarm.pbest_pos);
+            slab.pbest_fit.extend_from_slice(&ckpt.swarm.pbest_fit);
+        }
+
+        let queues = (0..total_blocks).map(|_| SharedQueue::new(bs)).collect();
+        let aux = PerBlock::from_fn(total_blocks, |b| {
+            (
+                members[block_member[b] as usize].objective.worst(),
+                u32::MAX,
+            )
+        });
+        let scratch = PerBlock::from_fn(total_blocks, |_| StepScratch::new(bs));
+        let live = members.len();
+        Ok(Self {
+            settings,
+            dim,
+            members,
+            slab: SharedSlab(UnsafeCell::new(slab)),
+            queues,
+            aux,
+            scratch,
+            block_member,
+            total_blocks,
+            live,
+        })
+    }
+
+    /// Member slots, tombstoned ones included.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Whether the pack holds no member slots at all.
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Members not yet extracted.
+    pub fn live_members(&self) -> usize {
+        self.live
+    }
+
+    /// Whether member `m` is still in the pack.
+    pub fn member_live(&self, m: usize) -> bool {
+        self.members[m].live
+    }
+
+    /// Iterations member `m` has completed.
+    pub fn member_iter(&self, m: usize) -> u64 {
+        self.members[m].iter
+    }
+
+    /// Member `m`'s current global-best fitness.
+    pub fn member_gbest_fit(&self, m: usize) -> f64 {
+        self.members[m].gbest.fit_relaxed()
+    }
+
+    /// Give member `m` a budget of `k` iterations for the next
+    /// [`step_budgeted`](Self::step_budgeted) batch, and mark the batch
+    /// start for its `improved` flag. Allocation-free.
+    pub fn set_budget(&mut self, m: usize, k: u64) {
+        let mem = &mut self.members[m];
+        debug_assert!(mem.live, "budget for an extracted pack member");
+        mem.budget = k;
+        mem.updates_before = mem.gbest.update_count();
+    }
+
+    /// Step every budgeted member until its budget or iteration budget is
+    /// spent — one launch pair per fleet iteration, regardless of member
+    /// count. Members advance in lockstep; a member whose budget (or
+    /// `max_iter`) runs out earlier simply skips the remaining
+    /// iterations. Allocation-free in the steady state (histories are
+    /// pre-reserved; improvements publish into the member's own
+    /// [`GlobalBest`] scratch).
+    pub fn step_budgeted(&mut self) {
+        loop {
+            let mut any = false;
+            for mem in &mut self.members {
+                mem.step_active = mem.live && mem.budget > 0 && mem.iter < mem.params.max_iter;
+                if mem.step_active {
+                    any = true;
+                    // Freeze the member's own gbest for this iteration —
+                    // identical to the solo run's pre-launch snapshot.
+                    mem.gbest.load_pos(&mut mem.frozen);
+                    mem.threshold = mem.gbest.fit_relaxed();
+                }
+            }
+            if !any {
+                break;
+            }
+            self.launch_iteration();
+            for mem in &mut self.members {
+                if !mem.step_active {
+                    continue;
+                }
+                let it = mem.iter;
+                mem.iter += 1;
+                mem.budget -= 1;
+                if it % mem.stride == 0 {
+                    mem.history.push((it, mem.gbest.fit_relaxed()));
+                }
+            }
+        }
+        for mem in &mut self.members {
+            mem.budget = 0;
+        }
+    }
+
+    /// One fleet iteration: the two launches of the module docs.
+    fn launch_iteration(&self) {
+        let Self {
+            settings,
+            dim,
+            members,
+            slab,
+            queues,
+            aux,
+            scratch,
+            block_member,
+            total_blocks,
+            ..
+        } = self;
+        let dim = *dim;
+        // ---- 1st kernel: flat blocks decode to (member, local block) ----
+        settings.launch(*total_blocks, |ctx| {
+            let b = ctx.block_id;
+            let mem = &members[block_member[b] as usize];
+            if !mem.step_active {
+                return;
+            }
+            let n = mem.params.n;
+            let (lo, hi) = settings.block_range(b - mem.block_off, n);
+            let q = &queues[b];
+            q.reset();
+            // SAFETY: this block only touches particles [lo, hi) of its
+            // member's region; regions of different members are disjoint.
+            let sl = unsafe { slab.get() };
+            let r = mem.row_off..mem.row_off + n * dim;
+            let p = mem.par_off..mem.par_off + n;
+            let mut view = SwarmView {
+                n,
+                dim,
+                pos: &mut sl.pos[r.clone()],
+                vel: &mut sl.vel[r.clone()],
+                fit: &mut sl.fit[p.clone()],
+                pbest_pos: &mut sl.pbest_pos[r],
+                pbest_fit: &mut sl.pbest_fit[p],
+            };
+            // SAFETY: scratch[b] and aux[b] are this block's slots.
+            let ss = unsafe { scratch.get(b) };
+            step_block_view(
+                &mut view,
+                lo,
+                hi,
+                &mem.frozen,
+                &mem.params,
+                &*mem.fitness,
+                mem.objective,
+                &mem.rng,
+                mem.iter,
+                ss,
+            );
+            // Algorithm 2 lines 1–5 against the member's own threshold.
+            for k in 0..(hi - lo) {
+                let fit = ss.fit[k];
+                if mem.objective.better(fit, mem.threshold) {
+                    q.push((fit, (lo + k) as u32));
+                }
+            }
+            let mut best = (mem.objective.worst(), u32::MAX);
+            q.scan(|&(f, i)| {
+                if better_with_tie(mem.objective, f, i as usize, best.0, best.1 as usize) {
+                    best = (f, i);
+                }
+            });
+            unsafe { *aux.get(b) = best };
+        });
+        // ---- 2nd kernel: block m scans member m's aux range ----
+        settings.launch(members.len(), |ctx| {
+            let mem = &members[ctx.block_id];
+            if !mem.step_active {
+                return;
+            }
+            let mut best = (mem.objective.worst(), u32::MAX);
+            for b in mem.block_off..mem.block_off + mem.blocks {
+                // SAFETY: 1st kernel joined; exclusive read.
+                let (f, i) = unsafe { *aux.get(b) };
+                if better_with_tie(mem.objective, f, i as usize, best.0, best.1 as usize) {
+                    best = (f, i);
+                }
+            }
+            if best.1 != u32::MAX {
+                // SAFETY: 1st kernel joined, this block only reads its own
+                // member's region.
+                let sl = unsafe { slab.get() };
+                let n = mem.params.n;
+                let i = best.1 as usize;
+                mem.gbest.update_exclusive(mem.objective, best.0, |dst| {
+                    for (d, slot) in dst.iter_mut().enumerate() {
+                        *slot = sl.pos[mem.row_off + d * n + i];
+                    }
+                });
+            }
+        });
+    }
+
+    /// Member `m`'s report for the last budgeted batch — same contract as
+    /// [`Run::step_many`]: `iter`/`gbest_fit`/`done` are current,
+    /// `improved` (and the accompanying position) covers the whole batch.
+    pub fn member_report(&self, m: usize) -> StepReport {
+        let mem = &self.members[m];
+        let improved = mem.gbest.update_count() > mem.updates_before;
+        StepReport {
+            iter: mem.iter,
+            gbest_fit: mem.gbest.fit_relaxed(),
+            gbest_pos: improved.then(|| mem.gbest.pos_vec()),
+            improved,
+            done: mem.iter >= mem.params.max_iter,
+        }
+    }
+
+    fn member_counters(&self, m: usize) -> Counters {
+        let mem = &self.members[m];
+        Counters {
+            particle_updates: mem.params.n as u64 * mem.iter,
+            queue_pushes: mem.push_base
+                + self.queues[mem.block_off..mem.block_off + mem.blocks]
+                    .iter()
+                    .map(|q| q.total_pushes())
+                    .sum::<u64>(),
+            gbest_updates: mem.gbest.update_count(),
+            ..Default::default()
+        }
+    }
+
+    fn member_swarm(&self, m: usize) -> SwarmState {
+        let mem = &self.members[m];
+        let n = mem.params.n;
+        // SAFETY: between steps the grid is quiescent and `&self` excludes
+        // concurrent stepping.
+        let sl = unsafe { self.slab.get() };
+        let r = mem.row_off..mem.row_off + n * self.dim;
+        let p = mem.par_off..mem.par_off + n;
+        SwarmState {
+            n,
+            dim: self.dim,
+            pos: sl.pos[r.clone()].to_vec(),
+            vel: sl.vel[r.clone()].to_vec(),
+            fit: sl.fit[p.clone()].to_vec(),
+            pbest_pos: sl.pbest_pos[r].to_vec(),
+            pbest_fit: sl.pbest_fit[p].to_vec(),
+        }
+    }
+
+    /// Non-destructive per-member checkpoint (snapshot persistence). The
+    /// result is an ordinary Queue checkpoint — indistinguishable from
+    /// one taken off a solo run at the same iteration.
+    pub fn checkpoint_member(&self, m: usize) -> RunCheckpoint {
+        let mem = &self.members[m];
+        assert!(mem.live, "checkpoint of an extracted pack member");
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::Queue,
+            objective: mem.objective,
+            seed: mem.seed,
+            params: mem.params.clone(),
+            iter: mem.iter,
+            gbest_fit: mem.gbest.fit_relaxed(),
+            gbest_pos: mem.gbest.pos_vec(),
+            history: mem.history.clone(),
+            counters: self.member_counters(m),
+            swarm: self.member_swarm(m),
+        }
+    }
+
+    /// Extract member `m` out of the pack into a standalone Queue
+    /// checkpoint (cancellation, preemption, dissolution, termination).
+    /// The member becomes a tombstone: its slab region and blocks are
+    /// skipped from now on. The swarm is copied out of the slab (the
+    /// slab itself never reallocates); the history is moved.
+    pub fn extract_member(&mut self, m: usize) -> RunCheckpoint {
+        assert!(self.members[m].live, "double extraction of a pack member");
+        let counters = self.member_counters(m);
+        let swarm = self.member_swarm(m);
+        let mem = &mut self.members[m];
+        mem.live = false;
+        self.live -= 1;
+        RunCheckpoint {
+            version: VERSION,
+            kind: RunKind::Queue,
+            objective: mem.objective,
+            seed: mem.seed,
+            params: mem.params.clone(),
+            iter: mem.iter,
+            gbest_fit: mem.gbest.fit_relaxed(),
+            gbest_pos: mem.gbest.pos_vec(),
+            history: std::mem::take(&mut mem.history),
+            counters,
+            swarm,
+        }
+    }
+
+    /// Index of the single live member, for the whole-fleet [`Run`]
+    /// methods that only make sense on a degenerate pack.
+    fn sole_live(&self, what: &str) -> usize {
+        assert!(
+            self.live == 1,
+            "PackedRun::{what} requires exactly one live member ({} live); \
+             use the per-member API (checkpoint_member / extract_member)",
+            self.live
+        );
+        self.members
+            .iter()
+            .position(|m| m.live)
+            .expect("live count said one")
+    }
+}
+
+/// Fleet-level [`Run`] view of a pack: stepping advances *every* live
+/// member, progress aggregates over the fleet (min iterations, best
+/// global best under the shared objective). `finish`/`checkpoint`/
+/// `into_checkpoint` are only defined for a pack with exactly one live
+/// member (the degenerate solo case); multi-member packs use the
+/// per-member API — the scheduler never calls the whole-fleet forms.
+impl Run for PackedRun {
+    fn iters_done(&self) -> u64 {
+        self.members
+            .iter()
+            .filter(|m| m.live)
+            .map(|m| m.iter)
+            .min()
+            .unwrap_or(0)
+    }
+
+    fn max_iter(&self) -> u64 {
+        self.members
+            .iter()
+            .map(|m| m.params.max_iter)
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn gbest_fit(&self) -> f64 {
+        let objective = self.members[0].objective;
+        let mut best = objective.worst();
+        for mem in self.members.iter().filter(|m| m.live) {
+            let fit = mem.gbest.fit_relaxed();
+            if objective.better(fit, best) {
+                best = fit;
+            }
+        }
+        best
+    }
+
+    fn gbest_pos(&self) -> Vec<f64> {
+        let objective = self.members[0].objective;
+        let mut best = objective.worst();
+        let mut pos = vec![0.0; self.dim];
+        for mem in self.members.iter().filter(|m| m.live) {
+            let fit = mem.gbest.fit_relaxed();
+            if objective.better(fit, best) {
+                best = fit;
+                mem.gbest.load_pos(&mut pos);
+            }
+        }
+        pos
+    }
+
+    fn step(&mut self) -> StepReport {
+        self.step_many(1)
+    }
+
+    fn step_many(&mut self, k: u64) -> StepReport {
+        let k = k.max(1);
+        for m in 0..self.members.len() {
+            if self.members[m].live {
+                self.set_budget(m, k);
+            }
+        }
+        self.step_budgeted();
+        let mut improved = false;
+        let mut done = true;
+        for m in 0..self.members.len() {
+            if !self.members[m].live {
+                continue;
+            }
+            let r = self.member_report(m);
+            improved |= r.improved;
+            done &= r.done;
+        }
+        StepReport {
+            iter: self.iters_done(),
+            gbest_fit: self.gbest_fit(),
+            gbest_pos: improved.then(|| self.gbest_pos()),
+            improved,
+            done,
+        }
+    }
+
+    fn finish(self: Box<Self>) -> RunOutput {
+        let mut this = *self;
+        let m = this.sole_live("finish");
+        let counters = this.member_counters(m);
+        let swarm = this.member_swarm(m);
+        let mem = &mut this.members[m];
+        let mut history = std::mem::take(&mut mem.history);
+        history.push((mem.iter, mem.gbest.fit_relaxed()));
+        debug_assert_eq!(swarm.check_bounds(&mem.params), Ok(()));
+        RunOutput {
+            gbest_fit: mem.gbest.fit_relaxed(),
+            gbest_pos: mem.gbest.pos_vec(),
+            iters: mem.iter,
+            history,
+            counters,
+        }
+    }
+
+    fn checkpoint(&self) -> RunCheckpoint {
+        let m = self.sole_live("checkpoint");
+        self.checkpoint_member(m)
+    }
+
+    fn into_checkpoint(self: Box<Self>) -> RunCheckpoint {
+        let m = self.sole_live("into_checkpoint");
+        let mut this = *self;
+        this.extract_member(m)
+    }
+}

@@ -250,8 +250,27 @@ fn apply_scheduler_overrides(cfg: &mut BatchConfig, args: &Args) -> Result<()> {
             .parse()
             .map_err(|e| anyhow::anyhow!("--preempt-quantum {q:?}: {e}"))?;
     }
+    if args.flag("pack") {
+        cfg.pack = true;
+    }
+    if let Some(n) = args.get("pack-min") {
+        cfg.pack_min = n
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--pack-min {n:?}: {e}"))?;
+    }
+    if let Some(n) = args.get("pack-max") {
+        cfg.pack_max = n
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--pack-max {n:?}: {e}"))?;
+    }
     if cfg.streams == 0 || cfg.batch_steps == 0 {
         bail!("--streams and --batch-steps must be >= 1");
+    }
+    if cfg.pack_min < 2 {
+        bail!("--pack-min must be >= 2 (a pack of one is a standalone job)");
+    }
+    if cfg.pack_max != 0 && cfg.pack_max < cfg.pack_min {
+        bail!("--pack-max must be 0 (unbounded) or >= --pack-min");
     }
     Ok(())
 }
@@ -263,7 +282,10 @@ fn scheduler_from_knobs(cfg: &BatchConfig) -> Result<(JobScheduler, SchedPolicy)
     let scheduler = JobScheduler::new(ParallelSettings::with_streams(cfg.workers, cfg.streams))
         .policy(policy)
         .batch_steps(cfg.batch_steps)
-        .preempt_quantum(cfg.preempt_quantum);
+        .preempt_quantum(cfg.preempt_quantum)
+        .pack(cfg.pack)
+        .pack_min(cfg.pack_min)
+        .pack_max(cfg.pack_max);
     Ok((scheduler, policy))
 }
 
@@ -280,6 +302,9 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
              outnumber streams; 0 = cooperative (overrides the file)",
             None,
         )
+        .switch("pack", "fuse compatible Queue jobs into shared-slab packs")
+        .opt("pack-min", "smallest group worth packing (>= 2; overrides the file)", None)
+        .opt("pack-max", "largest pack formed (0 = unbounded; overrides the file)", None)
         .opt(
             "checkpoint-dir",
             "write periodic per-job checkpoints here (enables `cupso resume`)",
@@ -569,6 +594,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             "preemption quantum in steps; 0 = cooperative (overrides the file)",
             None,
         )
+        .switch("pack", "fuse compatible Queue jobs into shared-slab packs")
+        .opt("pack-min", "smallest group worth packing (>= 2; overrides the file)", None)
+        .opt("pack-max", "largest pack formed (0 = unbounded; overrides the file)", None)
         .opt(
             "checkpoint-dir",
             "where `cupso drain` snapshots live jobs (enables `cupso resume`)",
@@ -594,6 +622,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             streams: 1,
             batch_steps: 1,
             preempt_quantum: 0,
+            pack: false,
+            pack_min: 2,
+            pack_max: 0,
             jobs: Vec::new(),
         },
     };

@@ -430,6 +430,12 @@ pub struct JobScheduler {
     /// the persistent executors (the legacy baseline; see
     /// [`JobScheduler::spawn_per_round`]).
     spawn_per_round: bool,
+    /// Enable swarm-packing (see [`JobScheduler::pack`]).
+    pack: bool,
+    /// Smallest group worth packing (see [`JobScheduler::pack_min`]).
+    pack_min: usize,
+    /// Largest pack formed (see [`JobScheduler::pack_max`]; 0 = unbounded).
+    pack_max: usize,
 }
 
 impl JobScheduler {
@@ -443,6 +449,9 @@ impl JobScheduler {
             batch_steps: 1,
             preempt_quantum: None,
             spawn_per_round: false,
+            pack: false,
+            pack_min: 2,
+            pack_max: 0,
         }
     }
 
@@ -493,6 +502,38 @@ impl JobScheduler {
     /// per-round fixed cost the executors remove. Off by default.
     pub fn spawn_per_round(mut self, enabled: bool) -> Self {
         self.spawn_per_round = enabled;
+        self
+    }
+
+    /// Enable swarm-packing: at round boundaries the session groups
+    /// compatible live Queue jobs (same dimensionality, same objective)
+    /// into [`crate::engine::PackedRun`] packs — one shared SoA slab
+    /// stepping *every* member with a single launch pair per round, so a
+    /// fleet of small jobs stops paying the per-job dispatch cost
+    /// (`benches/pack_throughput.rs`). Packing is purely an execution
+    /// layout: bit-exact with solo execution, per-job status/cancel/
+    /// checkpoint semantics unchanged
+    /// (`rust/tests/scheduler_determinism.rs` § pack). Off by default.
+    pub fn pack(mut self, enabled: bool) -> Self {
+        self.pack = enabled;
+        self
+    }
+
+    /// Smallest compatible group worth packing (clamps to ≥ 2; default
+    /// 2). Groups below the minimum run standalone, and a pack whose
+    /// live membership falls below it is dissolved back to standalone
+    /// jobs at the next round boundary.
+    pub fn pack_min(mut self, n: usize) -> Self {
+        self.pack_min = n.max(2);
+        self
+    }
+
+    /// Largest pack formed (0 = unbounded, the default). A compatible
+    /// group larger than the maximum splits into several packs; a
+    /// leftover chunk smaller than [`pack_min`](Self::pack_min) stays
+    /// standalone (the "admit into a full pack" path).
+    pub fn pack_max(mut self, n: usize) -> Self {
+        self.pack_max = n;
         self
     }
 

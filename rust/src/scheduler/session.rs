@@ -31,6 +31,18 @@
 //!   a warmed-up round still performs zero heap allocations for the
 //!   bit-exact engines (`rust/tests/zero_alloc.rs`), including the
 //!   service loop's empty-control-queue rounds.
+//! * **Swarm packing.** With [`super::JobScheduler::pack`] enabled, the
+//!   session groups compatible live Queue jobs into
+//!   [`PackedRun`] packs at round boundaries and steps every pack member
+//!   with one launch pair per round instead of one dispatch per job —
+//!   the fleet-level megabatch (`DESIGN.md` § Pack execution). Packing
+//!   is invisible to everything else: members keep their slot, name,
+//!   stream record, per-round report and checkpoint semantics, and a
+//!   member leaving the pack (cancel, termination, preemption,
+//!   dissolution, drain) extracts its slice as an ordinary parked
+//!   checkpoint. Pack membership changes only at round boundaries, via
+//!   [`Session::reconcile_packs`], so the determinism story above is
+//!   unchanged — packed and standalone trajectories are bit-identical.
 //!
 //! ## Lifetime erasure
 //!
@@ -50,8 +62,9 @@ use super::{
     effective_batch, JobOutcome, JobReport, JobScheduler, JobSpec, SchedPolicy, StopReason,
 };
 use crate::checkpoint::{JobCheckpoint, RunCheckpoint, RunKind};
-use crate::engine::{self, ParallelSettings, Run, StepReport};
-use crate::fitness::Fitness;
+use crate::config::EngineKind;
+use crate::engine::{self, PackedRun, ParallelSettings, Run, StepReport};
+use crate::fitness::{Fitness, Objective};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
@@ -76,6 +89,14 @@ struct SlotJob {
     /// Steps executed since the last (re)activation — the preemption
     /// quantum counts against this, not lifetime steps.
     active_steps: u64,
+    /// Pack membership: `(pack slot, member index)` while the job's
+    /// state lives inside a [`PackedRun`] slab (`run` and `parked` are
+    /// both `None` then).
+    pack: Option<(usize, usize)>,
+    /// Sticky opt-out: set when preemption extracts the job from a pack,
+    /// so it rejoins the standalone preemptive pool instead of being
+    /// re-packed next reconcile.
+    no_pack: bool,
 }
 
 /// Extend a fitness borrow to `'static` so the run can live in the same
@@ -139,13 +160,15 @@ impl RoundState {
     }
 
     /// Pre-size every buffer for `slots` job slots on `streams` streams
-    /// (called at admission, never inside a round).
+    /// (called at admission, never inside a round). The report buffer is
+    /// sized for *every* slot: a round can report all packed members on
+    /// top of the standalone picks.
     fn ensure(&mut self, streams: usize, slots: usize) {
         let width = streams.min(slots.max(1));
         reserve_to(&mut self.order, slots);
         reserve_to(&mut self.picked, width);
         reserve_to(&mut self.inflight, width);
-        reserve_to(&mut self.reports, width);
+        reserve_to(&mut self.reports, slots.max(1));
     }
 }
 
@@ -153,6 +176,24 @@ fn reserve_to<T>(v: &mut Vec<T>, cap: usize) {
     if v.capacity() < cap {
         v.reserve(cap - v.len());
     }
+}
+
+/// The session's packing knobs (`None` on the pack field = packing off).
+#[derive(Clone, Copy)]
+struct PackPolicy {
+    /// Smallest compatible group worth packing (≥ 2).
+    min: usize,
+    /// Largest pack formed (0 = unbounded).
+    max: usize,
+}
+
+/// One live pack: the fused run plus the slot index of every member
+/// (`usize::MAX` = tombstone, the member was extracted). The pack's
+/// launches go to the stream its `PackedRun` settings were pinned to at
+/// formation time.
+struct PackSlot {
+    run: PackedRun,
+    members: Vec<usize>,
 }
 
 /// A live scheduling session over one shared pool: jobs can be admitted,
@@ -175,6 +216,16 @@ pub struct Session {
     /// local-variable drop order; the struct must encode it explicitly.
     executors: Option<StreamExecutors>,
     slots: Vec<Option<SlotJob>>,
+    /// Pack slots (swarm-packing mode; always empty otherwise). Declared
+    /// after `slots` only for tidiness — a `PackedRun` owns its member
+    /// fitness `Arc`s outright, so pack drop order is unconstrained.
+    packs: Vec<Option<PackSlot>>,
+    /// Packing knobs (`None` = packing disabled).
+    pack_policy: Option<PackPolicy>,
+    /// Membership may be stale: re-run `reconcile_packs` at the next
+    /// round boundary. Set by admission, extraction and termination;
+    /// false in the steady state so reconciliation is a single branch.
+    pack_dirty: bool,
     /// Occupied slots (live + terminated-but-unreaped).
     occupied: usize,
     /// Occupied slots that have not terminated yet.
@@ -195,6 +246,12 @@ impl Session {
             streams,
             executors: None,
             slots: Vec::new(),
+            packs: Vec::new(),
+            pack_policy: sched.pack.then(|| PackPolicy {
+                min: sched.pack_min.max(2),
+                max: sched.pack_max,
+            }),
+            pack_dirty: false,
             occupied: 0,
             live: 0,
             rounds: 0,
@@ -282,9 +339,12 @@ impl Session {
             stop: None,
             stream,
             active_steps: 0,
+            pack: None,
+            no_pack: false,
         };
         self.insert(idx, job);
         self.live += 1;
+        self.pack_dirty = true;
         Ok(idx)
     }
 
@@ -335,11 +395,14 @@ impl Session {
             stop,
             stream: idx % self.streams,
             active_steps: 0,
+            pack: None,
+            no_pack: false,
             spec,
         };
         self.insert(idx, job);
         if stop.is_none() {
             self.live += 1;
+            self.pack_dirty = true;
         }
         Ok(idx)
     }
@@ -365,6 +428,18 @@ impl Session {
         self.occupied -= 1;
         self.live -= 1;
         job.stop = Some(StopReason::Cancelled);
+        if let Some((p, m)) = job.pack.take() {
+            // Cancelling a packed member extracts its slice out of the
+            // slab — the outcome path below runs off the extracted
+            // checkpoint, exactly like a suspended standalone job.
+            let ps = self.packs[p].as_mut().expect("member's pack is occupied");
+            job.parked = Some(Arc::new(ps.run.extract_member(m)));
+            ps.members[m] = usize::MAX;
+            if ps.run.live_members() == 0 {
+                self.packs[p] = None;
+            }
+            self.pack_dirty = true;
+        }
         finish_slot(job, &self.settings, idx)
     }
 
@@ -384,6 +459,7 @@ impl Session {
     /// Consume the session into outcomes for every occupied slot, in
     /// slot order. Every occupied job must have terminated.
     pub fn into_outcomes(mut self) -> Result<Vec<JobOutcome>> {
+        self.unpack_all();
         let mut outcomes = Vec::with_capacity(self.occupied);
         for idx in 0..self.slots.len() {
             let Some(job) = self.slots[idx].take() else {
@@ -396,8 +472,12 @@ impl Session {
 
     /// One [`JobCheckpoint`] per occupied slot, in slot order — active
     /// jobs checkpoint their live runs (a copy is unavoidable: the run
-    /// keeps stepping), while suspended jobs share their parked
-    /// checkpoint via `Arc` instead of deep-copying it.
+    /// keeps stepping), packed jobs slice their member state out of the
+    /// pack slab (also a copy, and indistinguishable from a solo
+    /// checkpoint at the same iteration — a snapshot taken off a packed
+    /// session resumes bit-identically on a non-packed one), while
+    /// suspended jobs share their parked checkpoint via `Arc` instead of
+    /// deep-copying it.
     pub fn snapshot(&self) -> Vec<JobCheckpoint> {
         self.slots
             .iter()
@@ -411,9 +491,16 @@ impl Session {
                 stall_window: job.spec.termination.stall_window,
                 max_steps: job.spec.termination.max_iter,
                 deadline: job.spec.deadline,
-                run: match &job.run {
-                    Some(run) => Arc::new(run.checkpoint()),
-                    None => Arc::clone(
+                run: match (&job.run, job.pack) {
+                    (Some(run), _) => Arc::new(run.checkpoint()),
+                    (None, Some((p, m))) => Arc::new(
+                        self.packs[p]
+                            .as_ref()
+                            .expect("member's pack is occupied")
+                            .run
+                            .checkpoint_member(m),
+                    ),
+                    (None, None) => Arc::clone(
                         job.parked
                             .as_ref()
                             .expect("inactive job holds its checkpoint"),
@@ -433,9 +520,14 @@ impl Session {
                 engine: job.spec.engine,
                 steps: job.steps,
                 max_iter: job.spec.params.max_iter,
-                gbest_fit: match &job.run {
-                    Some(run) => run.gbest_fit(),
-                    None => {
+                gbest_fit: match (&job.run, job.pack) {
+                    (Some(run), _) => run.gbest_fit(),
+                    (None, Some((p, m))) => self.packs[p]
+                        .as_ref()
+                        .expect("member's pack is occupied")
+                        .run
+                        .member_gbest_fit(m),
+                    (None, None) => {
                         job.parked
                             .as_ref()
                             .expect("inactive job holds its checkpoint")
@@ -474,33 +566,89 @@ impl Session {
         if self.live == 0 {
             bail!("scheduling round requested with no live job");
         }
+        self.reconcile_packs()?;
         self.ensure_executors();
         self.rounds += 1;
         match self.policy {
             SchedPolicy::RoundRobin => pick_round_robin(&self.slots, self.streams, &mut self.rs),
             SchedPolicy::EarliestDeadlineFirst => pick_edf(&self.slots, self.streams, &mut self.rs),
         }
-        debug_assert!(!self.rs.picked.is_empty(), "unfinished job exists");
+        debug_assert!(
+            !self.rs.picked.is_empty()
+                || self.packs.iter().flatten().any(|p| p.run.live_members() > 0),
+            "unfinished job exists"
+        );
+        self.rs.reports.clear();
+        self.step_packs();
         self.step_round()?;
+        self.rs.reports.sort_unstable_by_key(|&(i, _)| i);
         apply_reports(&mut self.slots, &self.rs, &mut self.live, telemetry);
         // Preemption: once a picked job has spent its quantum and the
         // live set still outnumbers the streams, suspend it — its
         // buffers are MOVED into a checkpoint (no deep copy) and its
         // stream frees up for a neighbour next round.
-        if let Some(quantum) = self.preempt_quantum {
-            if self.live > self.streams {
-                for k in 0..self.rs.picked.len() {
-                    let (idx, _) = self.rs.picked[k];
-                    let job = self.slots[idx].as_mut().expect("picked job is occupied");
-                    if job.stop.is_none() && job.active_steps >= quantum {
-                        if let Some(run) = job.run.take() {
-                            job.parked = Some(Arc::new(run.into_checkpoint()));
-                        }
+        let preempting = self.preempt_quantum.filter(|_| self.live > self.streams);
+        if let Some(quantum) = preempting {
+            for k in 0..self.rs.picked.len() {
+                let (idx, _) = self.rs.picked[k];
+                let job = self.slots[idx].as_mut().expect("picked job is occupied");
+                if job.stop.is_none() && job.active_steps >= quantum {
+                    if let Some(run) = job.run.take() {
+                        job.parked = Some(Arc::new(run.into_checkpoint()));
                     }
                 }
             }
         }
+        // Pack maintenance: members that terminated this round leave the
+        // pack (their outcome runs off the extracted checkpoint), and —
+        // under preemption pressure — packed members over quantum are
+        // handed to the standalone preemptive pool.
+        self.sweep_packs(preempting);
         Ok(())
+    }
+
+    /// Step every live pack: give each live member its effective batch
+    /// budget, run the whole pack with one launch pair per fleet
+    /// iteration, and push one report per member — so a packed job's
+    /// per-round report stream is exactly what it would produce
+    /// standalone, just delivered every round instead of when picked.
+    /// Allocation-free in the steady state.
+    fn step_packs(&mut self) {
+        let Session {
+            batch_steps,
+            ref mut packs,
+            ref slots,
+            ref mut rs,
+            ..
+        } = *self;
+        for ps in packs.iter_mut().flatten() {
+            let mut any = false;
+            for (m, &idx) in ps.members.iter().enumerate() {
+                if idx == usize::MAX {
+                    continue;
+                }
+                let job = slots[idx].as_ref().expect("packed member is occupied");
+                if job.stop.is_some() {
+                    continue;
+                }
+                let k = effective_batch(batch_steps, &job.spec.termination, job.steps);
+                ps.run.set_budget(m, k);
+                any = true;
+            }
+            if !any {
+                continue;
+            }
+            ps.run.step_budgeted();
+            for (m, &idx) in ps.members.iter().enumerate() {
+                if idx == usize::MAX {
+                    continue;
+                }
+                if slots[idx].as_ref().expect("packed member is occupied").stop.is_some() {
+                    continue;
+                }
+                rs.reports.push((idx, ps.run.member_report(m)));
+            }
+        }
     }
 
     /// Step every picked job once (a batch of `batch_steps` iterations),
@@ -539,7 +687,11 @@ impl Session {
                 job.active_steps = 0;
             }
         }
-        rs.reports.clear();
+        if rs.picked.is_empty() {
+            // Every live job is packed this round; nothing standalone to
+            // step.
+            return Ok(());
+        }
         if let [(idx, _)] = *rs.picked {
             // Serialized fast path (always taken on a single-stream
             // pool): no stepping threads, identical to the pre-stream
@@ -615,8 +767,216 @@ impl Session {
             });
             rs.reports.extend(stepped);
         }
-        rs.reports.sort_unstable_by_key(|&(i, _)| i);
         Ok(())
+    }
+
+    /// Bring pack membership up to date at a round boundary (a single
+    /// branch when nothing changed since the last round):
+    ///
+    /// 1. **Dissolve** any pack whose live membership fell below the
+    ///    policy minimum — remaining members extract into parked
+    ///    checkpoints and rejoin the standalone pool.
+    /// 2. **Form** new packs from the unpacked live Queue jobs, grouped
+    ///    by the compatibility key (dimensionality, objective), in slot
+    ///    order, split into chunks of at most `pack_max` (0 =
+    ///    unbounded). A chunk smaller than `pack_min` stays standalone —
+    ///    including the leftover of a group that filled its packs, which
+    ///    is exactly where a job admitted into a "full" pack lands.
+    ///
+    /// Formation moves each member's state into the shared slab (active
+    /// runs suspend via `into_checkpoint`, which MOVES the swarm;
+    /// parked jobs contribute their checkpoint `Arc`), so packs never
+    /// deep-copy more than the one slab fill. Packs never grow after
+    /// formation: later admissions group among themselves.
+    fn reconcile_packs(&mut self) -> Result<()> {
+        if !self.pack_dirty {
+            return Ok(());
+        }
+        self.pack_dirty = false;
+        let Some(policy) = self.pack_policy else {
+            return Ok(());
+        };
+        // 1. Dissolve underfull packs.
+        for p in 0..self.packs.len() {
+            let underfull = self.packs[p]
+                .as_ref()
+                .is_some_and(|ps| ps.run.live_members() < policy.min);
+            if !underfull {
+                continue;
+            }
+            let mut ps = self.packs[p].take().expect("checked occupied");
+            for m in 0..ps.members.len() {
+                let idx = ps.members[m];
+                if idx == usize::MAX {
+                    continue;
+                }
+                let job = self.slots[idx].as_mut().expect("packed member is occupied");
+                job.parked = Some(Arc::new(ps.run.extract_member(m)));
+                job.pack = None;
+            }
+        }
+        // 2. Group the unpacked live Queue jobs by compatibility key.
+        let mut candidates: Vec<(usize, u8, usize)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                let job = s.as_ref()?;
+                let eligible = job.stop.is_none()
+                    && job.pack.is_none()
+                    && !job.no_pack
+                    && job.spec.engine == EngineKind::Queue;
+                eligible.then(|| (job.spec.params.dim, objective_code(job.spec.objective), i))
+            })
+            .collect();
+        candidates.sort_unstable();
+        let mut lo = 0;
+        while lo < candidates.len() {
+            let key = (candidates[lo].0, candidates[lo].1);
+            let mut hi = lo + 1;
+            while hi < candidates.len() && (candidates[hi].0, candidates[hi].1) == key {
+                hi += 1;
+            }
+            let group: Vec<usize> = candidates[lo..hi].iter().map(|&(_, _, i)| i).collect();
+            lo = hi;
+            let chunk_len = if policy.max == 0 {
+                group.len()
+            } else {
+                policy.max
+            };
+            for chunk in group.chunks(chunk_len) {
+                if chunk.len() >= policy.min {
+                    self.form_pack(chunk)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fuse the jobs in `chunk` (slot indices, all unpacked live Queue
+    /// jobs of one compatibility group) into a new pack pinned to stream
+    /// `pack slot % S`.
+    fn form_pack(&mut self, chunk: &[usize]) -> Result<()> {
+        let mut members_in: Vec<(Arc<RunCheckpoint>, Arc<dyn Fitness + Send>)> =
+            Vec::with_capacity(chunk.len());
+        for &idx in chunk {
+            let job = self.slots[idx].as_mut().expect("candidate is occupied");
+            let ckpt = match job.run.take() {
+                Some(run) => Arc::new(run.into_checkpoint()),
+                None => job
+                    .parked
+                    .take()
+                    .expect("inactive job holds its checkpoint"),
+            };
+            members_in.push((ckpt, Arc::clone(&job.spec.fitness)));
+        }
+        let p = self
+            .packs
+            .iter()
+            .position(Option::is_none)
+            .unwrap_or(self.packs.len());
+        let stream = p % self.streams;
+        let run = match PackedRun::form(self.settings.clone().on_stream(stream), &members_in) {
+            Ok(run) => run,
+            Err(e) => {
+                // Leave every would-be member parked on its checkpoint —
+                // the session stays consistent, the jobs run standalone.
+                for (&idx, (ckpt, _)) in chunk.iter().zip(members_in) {
+                    let job = self.slots[idx].as_mut().expect("candidate is occupied");
+                    job.parked = Some(ckpt);
+                }
+                return Err(e.context("forming a swarm pack"));
+            }
+        };
+        for (m, &idx) in chunk.iter().enumerate() {
+            let job = self.slots[idx].as_mut().expect("candidate is occupied");
+            job.pack = Some((p, m));
+            job.stream = stream;
+            job.active_steps = 0;
+        }
+        let slot = PackSlot {
+            run,
+            members: chunk.to_vec(),
+        };
+        if p == self.packs.len() {
+            self.packs.push(Some(slot));
+        } else {
+            self.packs[p] = Some(slot);
+        }
+        Ok(())
+    }
+
+    /// Post-round pack maintenance: extract members that terminated this
+    /// round (their outcome path runs off the parked checkpoint), and —
+    /// when `preempting` carries the quantum — packed members that
+    /// exhausted it. Preempted members set the sticky `no_pack` flag:
+    /// they rejoin the *standalone* preemptive pool, where the ordinary
+    /// pick/restore/suspend cycle time-shares them over the streams.
+    fn sweep_packs(&mut self, preempting: Option<u64>) {
+        let Session {
+            ref mut packs,
+            ref mut slots,
+            ref mut pack_dirty,
+            ..
+        } = *self;
+        for pack in packs.iter_mut() {
+            let Some(ps) = pack.as_mut() else { continue };
+            for m in 0..ps.members.len() {
+                let idx = ps.members[m];
+                if idx == usize::MAX {
+                    continue;
+                }
+                let job = slots[idx].as_mut().expect("packed member is occupied");
+                let stopped = job.stop.is_some();
+                let preempted = !stopped && preempting.is_some_and(|q| job.active_steps >= q);
+                if !(stopped || preempted) {
+                    continue;
+                }
+                job.parked = Some(Arc::new(ps.run.extract_member(m)));
+                job.pack = None;
+                job.no_pack |= preempted;
+                ps.members[m] = usize::MAX;
+                *pack_dirty = true;
+            }
+            if ps.run.live_members() == 0 {
+                *pack = None;
+            }
+        }
+    }
+
+    /// Extract every packed member back into a parked checkpoint — the
+    /// drain/outcome path, where each job's state must stand alone.
+    fn unpack_all(&mut self) {
+        let Session {
+            ref mut packs,
+            ref mut slots,
+            ref mut pack_dirty,
+            ..
+        } = *self;
+        for pack in packs.iter_mut() {
+            let Some(ps) = pack.as_mut() else { continue };
+            for m in 0..ps.members.len() {
+                let idx = ps.members[m];
+                if idx == usize::MAX {
+                    continue;
+                }
+                let job = slots[idx].as_mut().expect("packed member is occupied");
+                job.parked = Some(Arc::new(ps.run.extract_member(m)));
+                job.pack = None;
+                ps.members[m] = usize::MAX;
+                *pack_dirty = true;
+            }
+            *pack = None;
+        }
+    }
+}
+
+/// Total order for the pack-compatibility key ([`Objective`] itself
+/// derives no `Ord`).
+fn objective_code(objective: Objective) -> u8 {
+    match objective {
+        Objective::Maximize => 0,
+        Objective::Minimize => 1,
     }
 }
 
@@ -705,7 +1065,7 @@ fn pick_round_robin(slots: &[Option<SlotJob>], streams: usize, rs: &mut RoundSta
         slots
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.as_ref().is_some_and(|j| j.stop.is_none()))
+            .filter(|(_, s)| s.as_ref().is_some_and(|j| j.stop.is_none() && j.pack.is_none()))
             .map(|(i, _)| i),
     );
     rs.order
@@ -722,7 +1082,7 @@ fn pick_edf(slots: &[Option<SlotJob>], streams: usize, rs: &mut RoundState) {
         slots
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.as_ref().is_some_and(|j| j.stop.is_none()))
+            .filter(|(_, s)| s.as_ref().is_some_and(|j| j.stop.is_none() && j.pack.is_none()))
             .map(|(i, _)| i),
     );
     rs.order.sort_unstable_by_key(|&i| {

@@ -571,6 +571,9 @@ mod tests {
             streams: 1,
             batch_steps: 1,
             preempt_quantum: 0,
+            pack: false,
+            pack_min: 2,
+            pack_max: 0,
             jobs: Vec::new(),
         }
     }

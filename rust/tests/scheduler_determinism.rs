@@ -574,6 +574,254 @@ fn drained_session_snapshot_resumes_to_uninterrupted_results() {
     }
 }
 
+/// ISSUE 6 headline invariant: a fleet stepped as swarm packs (one
+/// shared slab, one grid-stride launch pair per round) is bit-exact
+/// with the same fleet stepped standalone — outcomes, RunOutput,
+/// counters AND the per-job telemetry stream.
+#[test]
+fn packed_fleet_matches_unpacked_fleet_bit_exactly() {
+    // Ten Queue jobs: eight share dim 1 (one pack), two share dim 120
+    // (a second pack); n, iteration budgets and seeds all differ.
+    let mk_specs = || -> Vec<JobSpec> {
+        let mut specs: Vec<JobSpec> = (0..8)
+            .map(|j| {
+                cubic_spec(
+                    &format!("f{j}"),
+                    EngineKind::Queue,
+                    PsoParams::paper_1d(64 + 32 * j, 20 + 2 * j as u64),
+                    j as u64 + 1,
+                )
+            })
+            .collect();
+        specs.push(cubic_spec("d1", EngineKind::Queue, PsoParams::paper_120d(40, 15), 21));
+        specs.push(cubic_spec("d2", EngineKind::Queue, PsoParams::paper_120d(64, 18), 22));
+        specs
+    };
+    let run_fleet = |scheduler: JobScheduler| {
+        let mut traces: Vec<Vec<(u64, f64, bool)>> = vec![Vec::new(); 10];
+        let outcomes = scheduler
+            .run_with(&mk_specs(), |r| traces[r.job].push((r.iter, r.gbest_fit, r.improved)))
+            .unwrap();
+        (outcomes, traces)
+    };
+    let (packed, packed_traces) = run_fleet(JobScheduler::with_streams(4, 2).pack(true));
+    let (plain, plain_traces) = run_fleet(JobScheduler::with_streams(4, 2));
+    for (j, (a, b)) in packed.iter().zip(&plain).enumerate() {
+        assert_eq!(a.stop, b.stop, "{}", a.name);
+        assert_eq!(a.steps, b.steps, "{}", a.name);
+        assert_outputs_equal(&a.output, &b.output, &format!("packed-vs-plain {}", a.name));
+        let (ca, cb) = (&a.output.counters, &b.output.counters);
+        assert_eq!(ca.particle_updates, cb.particle_updates, "{}", a.name);
+        assert_eq!(ca.queue_pushes, cb.queue_pushes, "{}", a.name);
+        assert_eq!(ca.gbest_updates, cb.gbest_updates, "{}", a.name);
+        assert_eq!(ca.pbest_improvements, cb.pbest_improvements, "{}", a.name);
+        // A packed job reports every round instead of when picked, but
+        // its per-job report stream must be identical.
+        assert_eq!(packed_traces[j], plain_traces[j], "telemetry for {}", a.name);
+    }
+    // And both equal the solo one-shot of every member.
+    for (o, spec) in packed.iter().zip(&mk_specs()) {
+        let solo = engine::build(spec.engine, 4).unwrap().run(
+            &spec.params,
+            &Cubic,
+            Objective::Maximize,
+            spec.seed,
+        );
+        assert_eq!(o.stop, StopReason::Exhausted, "{}", o.name);
+        assert_outputs_equal(&o.output, &solo, &format!("packed {} vs solo", o.name));
+    }
+}
+
+/// A compatibility group larger than `pack_max` splits; the leftover
+/// chunk below `pack_min` stays standalone (the "admitted into a full
+/// pack" path), and late admissions group among themselves — all of it
+/// bit-exact.
+#[test]
+fn full_packs_leave_leftovers_standalone_and_bit_exact() {
+    let mk = |j: usize| {
+        cubic_spec(
+            &format!("m{j}"),
+            EngineKind::Queue,
+            PsoParams::paper_1d(100 + 50 * j, 30),
+            j as u64 + 1,
+        )
+    };
+    let scheduler = JobScheduler::with_streams(4, 2).pack(true).pack_max(4);
+    let mut session = scheduler.session();
+    // Five compatible jobs against pack_max 4: one pack of four plus one
+    // standalone leftover.
+    for j in 0..5 {
+        session.admit(mk(j)).unwrap();
+    }
+    for _ in 0..5 {
+        session.round(&mut |_| {}).unwrap();
+    }
+    // The existing pack is full and never grows; the two late arrivals
+    // group with the still-live leftover into a fresh pack.
+    for j in 5..7 {
+        session.admit(mk(j)).unwrap();
+    }
+    while session.live() > 0 {
+        session.round(&mut |_| {}).unwrap();
+    }
+    let mut outcomes = Vec::new();
+    session.reap(|o| outcomes.push(o)).unwrap();
+    assert_eq!(outcomes.len(), 7);
+    for o in &outcomes {
+        let j: usize = o.name[1..].parse().unwrap();
+        let solo = engine::build(EngineKind::Queue, 4).unwrap().run(
+            &PsoParams::paper_1d(100 + 50 * j, 30),
+            &Cubic,
+            Objective::Maximize,
+            j as u64 + 1,
+        );
+        assert_eq!(o.stop, StopReason::Exhausted, "{}", o.name);
+        assert_eq!(o.steps, 30, "{}", o.name);
+        assert_outputs_equal(&o.output, &solo, &format!("{} vs solo", o.name));
+    }
+}
+
+/// Cancelling a packed member extracts its slice mid-flight: the
+/// cancelled output equals its solo run paused at the same step, and
+/// the surviving packmates finish bit-identical to their solo runs.
+#[test]
+fn cancel_mid_pack_truncates_without_perturbing_packmates() {
+    let mk = |j: usize| {
+        cubic_spec(
+            &format!("c{j}"),
+            EngineKind::Queue,
+            PsoParams::paper_1d(100 + 50 * j, 40),
+            j as u64 + 1,
+        )
+    };
+    let scheduler = JobScheduler::with_streams(4, 1).pack(true);
+    let mut session = scheduler.session();
+    for j in 0..4 {
+        session.admit(mk(j)).unwrap();
+    }
+    for _ in 0..6 {
+        session.round(&mut |_| {}).unwrap();
+    }
+    // Packed members step every round, so six rounds = six steps.
+    let cancelled = session.cancel("c1").unwrap();
+    assert_eq!(cancelled.stop, StopReason::Cancelled);
+    assert_eq!(cancelled.steps, 6);
+    let mut e = engine::build(EngineKind::Queue, 4).unwrap();
+    let params = PsoParams::paper_1d(150, 40);
+    let mut run = e.prepare(&params, &Cubic, Objective::Maximize, 2);
+    for _ in 0..6 {
+        run.step();
+    }
+    let paused = run.finish();
+    assert_outputs_equal(&cancelled.output, &paused, "cancelled packed prefix");
+    // The three survivors (pack still ≥ pack_min) run to completion.
+    while session.live() > 0 {
+        session.round(&mut |_| {}).unwrap();
+    }
+    let mut outcomes = Vec::new();
+    session.reap(|o| outcomes.push(o)).unwrap();
+    assert_eq!(outcomes.len(), 3);
+    for o in &outcomes {
+        let j: usize = o.name[1..].parse().unwrap();
+        let solo = engine::build(EngineKind::Queue, 4).unwrap().run(
+            &PsoParams::paper_1d(100 + 50 * j, 40),
+            &Cubic,
+            Objective::Maximize,
+            j as u64 + 1,
+        );
+        assert_outputs_equal(&o.output, &solo, &format!("packmate {} after cancel", o.name));
+    }
+}
+
+/// Preemption pressure (more live jobs than streams, quantum set)
+/// extracts packed members onto the standalone time-shared pool — the
+/// trajectory must not notice the migration.
+#[test]
+fn preempted_packed_jobs_continue_standalone_bit_exactly() {
+    let specs: Vec<JobSpec> = (0..3)
+        .map(|j| {
+            cubic_spec(
+                &format!("pq{j}"),
+                EngineKind::Queue,
+                PsoParams::paper_1d(100 + 64 * j, 25),
+                j as u64 + 1,
+            )
+        })
+        .collect();
+    let outcomes = JobScheduler::with_streams(4, 1)
+        .pack(true)
+        .preempt_quantum(2)
+        .run(&specs)
+        .unwrap();
+    for (o, spec) in outcomes.iter().zip(&specs) {
+        let solo = engine::build(spec.engine, 4).unwrap().run(
+            &spec.params,
+            &Cubic,
+            Objective::Maximize,
+            spec.seed,
+        );
+        assert_eq!(o.stop, StopReason::Exhausted, "{}", o.name);
+        assert_eq!(o.steps, 25, "{}", o.name);
+        assert_outputs_equal(&o.output, &solo, &format!("preempted-from-pack {}", o.name));
+    }
+}
+
+/// Checkpoints cross the pack boundary in both directions: a snapshot
+/// taken from a session with live packs resumes on a pack-disabled
+/// scheduler, and a standalone snapshot resumes on a pack-enabled one —
+/// both landing bit-identical to the uninterrupted fleet.
+#[test]
+fn checkpoints_cross_packed_and_unpacked_sessions_bit_exactly() {
+    let fleet = 8usize;
+    let mk_specs = || -> Vec<JobSpec> {
+        (0..fleet)
+            .map(|j| {
+                cubic_spec(
+                    &format!("x{j}"),
+                    EngineKind::Queue,
+                    PsoParams::paper_1d(64 + 32 * j, 30 + j as u64),
+                    j as u64 + 1,
+                )
+            })
+            .collect()
+    };
+    let plain_sched = JobScheduler::with_streams(4, 2);
+    let packed_sched = JobScheduler::with_streams(4, 2).pack(true);
+    let reference = plain_sched.run(&mk_specs()).unwrap();
+    let part_run = |sched: &JobScheduler| {
+        let mut session = sched.session();
+        for s in mk_specs() {
+            session.admit(s).unwrap();
+        }
+        for _ in 0..7 {
+            session.round(&mut |_| {}).unwrap();
+        }
+        session.snapshot()
+    };
+    let pairs = [
+        (&packed_sched, &plain_sched, "packed->plain"),
+        (&plain_sched, &packed_sched, "plain->packed"),
+    ];
+    for (snap_from, resume_with, what) in pairs {
+        let snap = part_run(snap_from);
+        assert_eq!(snap.len(), fleet, "{what}");
+        let specs = snap
+            .iter()
+            .map(JobSpec::from_checkpoint)
+            .collect::<anyhow::Result<Vec<_>>>()
+            .unwrap();
+        let resumed = match resume_with.run_session(&specs, Some(&snap), None, |_| {}).unwrap() {
+            BatchRun::Complete(outcomes) => outcomes,
+            BatchRun::Suspended(_) => panic!("uncapped resume must complete"),
+        };
+        for (r, reference) in resumed.iter().zip(&reference) {
+            assert_eq!(r.steps, reference.steps, "{what} {}", r.name);
+            assert_eq!(r.stop, reference.stop, "{what} {}", r.name);
+            assert_outputs_equal(&r.output, &reference.output, &format!("{what} {}", r.name));
+        }
+    }
+}
+
 #[test]
 fn shared_pool_is_actually_shared() {
     // All jobs run over the scheduler's single pool: build with an

@@ -26,6 +26,9 @@ fn knobs(streams: usize) -> BatchConfig {
         streams,
         batch_steps: 1,
         preempt_quantum: 0,
+        pack: false,
+        pack_min: 2,
+        pack_max: 0,
         jobs: Vec::new(),
     }
 }
@@ -229,6 +232,83 @@ fn drained_service_resumes_to_uninterrupted_results() {
     assert_eq!(resumed.len(), 2);
     for (r, reference) in resumed.iter().zip(&reference) {
         assert_eq!(&r.name, &reference.name);
+        assert_eq!(r.steps, reference.steps, "{}", r.name);
+        assert_eq!(r.output.gbest_fit, reference.output.gbest_fit, "{}", r.name);
+        assert_eq!(r.output.gbest_pos, reference.output.gbest_pos, "{}", r.name);
+        assert_eq!(r.output.history, reference.output.history, "{}", r.name);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ISSUE 6: draining a service with live *packs* snapshots every packed
+/// member as a standalone checkpoint, and the snapshot resumes — on a
+/// scheduler with packing disabled — to the exact results of the
+/// uninterrupted fleet. Pack membership is execution policy, never
+/// state.
+#[test]
+fn drained_packed_service_resumes_to_uninterrupted_results() {
+    let dir = temp_dir("pack-resume");
+    let snap_dir = dir.join("drain");
+    let fleet = 8usize;
+    let mk_fleet = || -> Vec<JobSpec> {
+        (0..fleet)
+            .map(|j| {
+                spec(
+                    &format!("pk{j}"),
+                    EngineKind::Queue,
+                    64 + 32 * j,
+                    20_000 + 1_000 * j as u64,
+                    j as u64 + 1,
+                )
+            })
+            .collect()
+    };
+    // Reference: the same fleet, uninterrupted and unpacked.
+    let plain = JobScheduler::with_streams(2, 2);
+    let reference = plain.run(&mk_fleet()).unwrap();
+
+    let packed = JobScheduler::with_streams(2, 1).pack(true);
+    let pack_knobs = BatchConfig {
+        pack: true,
+        ..knobs(1)
+    };
+    let (service, handle) =
+        ServiceSession::new(&packed, pack_knobs, Some(snap_dir.clone()), mk_fleet()).unwrap();
+    let svc = std::thread::spawn(move || service.run().unwrap());
+    // Let the packed fleet make real progress, then drain mid-flight.
+    loop {
+        let status = handle.status().unwrap();
+        if status.live.len() == fleet && status.live.iter().all(|j| j.steps > 50) {
+            break;
+        }
+        assert!(
+            status.live.len() + status.finished.len() == fleet,
+            "lost a job: {status:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let report = handle.drain().unwrap();
+    assert_eq!(report.snapshotted, fleet, "the whole fleet must still be live");
+    let end = svc.join().unwrap();
+    assert_eq!(end.drained, fleet);
+
+    // Resume on a NON-packed scheduler: packed-born checkpoints are
+    // ordinary checkpoints.
+    let (manifest_knobs, _, ckpts) = read_snapshot(&snap_dir).unwrap();
+    assert!(manifest_knobs.pack, "manifest must record the pack knob");
+    let specs = ckpts
+        .iter()
+        .map(JobSpec::from_checkpoint)
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    let resumed = match plain.run_session(&specs, Some(&ckpts), None, |_| {}).unwrap() {
+        BatchRun::Complete(outcomes) => outcomes,
+        BatchRun::Suspended(_) => panic!("uncapped resume must complete"),
+    };
+    assert_eq!(resumed.len(), fleet);
+    let by_name = |name: &str| reference.iter().find(|o| o.name == name).unwrap();
+    for r in &resumed {
+        let reference = by_name(&r.name);
         assert_eq!(r.steps, reference.steps, "{}", r.name);
         assert_eq!(r.output.gbest_fit, reference.output.gbest_fit, "{}", r.name);
         assert_eq!(r.output.gbest_pos, reference.output.gbest_pos, "{}", r.name);

@@ -205,6 +205,9 @@ fn service_rounds_with_empty_control_queue_allocate_nothing() {
             streams,
             batch_steps: 1,
             preempt_quantum: 0,
+            pack: false,
+            pack_min: 2,
+            pack_max: 0,
             jobs: Vec::new(),
         };
         let (service, handle) = ServiceSession::new(&scheduler, knobs, None, specs).unwrap();
@@ -241,6 +244,112 @@ fn service_rounds_with_empty_control_queue_allocate_nothing() {
         }
         assert_eq!(outcome.drained, 0);
     }
+}
+
+#[test]
+fn warmed_up_packed_rounds_allocate_nothing() {
+    let _g = LOCK.lock().unwrap();
+    // ISSUE 6: a warmed-up packed round (reconcile no-op, one launch
+    // pair for the whole fleet, one report per member, empty service
+    // control queue) must allocate nothing — same bar as the standalone
+    // steady state. Four compatible flat jobs fuse into a single pack on
+    // the first round; with a constant fitness the global bests never
+    // improve, so every measured round is pure packed steady state.
+    let iters = 600u64;
+    let jobs = 4usize;
+    let specs = flat_specs(EngineKind::Queue, jobs, iters);
+    let scheduler = JobScheduler::with_streams(2, 1).pack(true);
+    let knobs = BatchConfig {
+        workers: 2,
+        policy: "round-robin".into(),
+        streams: 1,
+        batch_steps: 1,
+        preempt_quantum: 0,
+        pack: true,
+        pack_min: 2,
+        pack_max: 0,
+        jobs: Vec::new(),
+    };
+    let (service, handle) = ServiceSession::new(&scheduler, knobs, None, specs).unwrap();
+    drop(handle);
+    // Packed members report every round, so telemetry fires jobs× per
+    // round; warm across the first 50 rounds, measure the next 350.
+    let (warm, upto) = (50 * jobs as u64, 400 * jobs as u64);
+    let mut calls = 0u64;
+    let mut start = 0u64;
+    let mut end = 0u64;
+    let outcome = service
+        .run_with(|_| {
+            calls += 1;
+            if calls == warm {
+                start = allocs();
+            }
+            if calls == upto {
+                end = allocs();
+            }
+        })
+        .unwrap();
+    assert!(calls >= upto, "too few packed reports ({calls})");
+    assert_eq!(
+        end - start,
+        0,
+        "packed steady-state rounds allocated {} times",
+        end - start
+    );
+    assert_eq!(outcome.results.len(), jobs);
+    assert_eq!(outcome.finished_total, jobs as u64);
+    for o in &outcome.results {
+        assert_eq!(o.steps, iters);
+        assert_eq!(o.gbest_fit, 0.0);
+    }
+    assert_eq!(outcome.drained, 0);
+}
+
+#[test]
+fn pack_formation_and_dissolution_stay_within_budget() {
+    let _g = LOCK.lock().unwrap();
+    // Pack lifecycle allocation budget (ISSUE 6). For J jobs of swarm
+    // unit U = n*dim*8 bytes, one packed session legitimately pays:
+    //   * admit: J standalone runs (swarm + queues + scratch, ≈ 4.5 U
+    //     each);
+    //   * formation (once): the slab fill plus pack queues/scratch
+    //     (≈ 4 U per member — `into_checkpoint` MOVES each swarm, so
+    //     formation adds one slab copy, not two);
+    //   * dissolution (once, at termination): one extracted checkpoint
+    //     per member (≈ 3.5 U each).
+    // That bounds the whole session near 12 U per member. The failure
+    // mode this budget guards against is lifecycle churn — a pack that
+    // re-forms every round pays formation + extraction per round, i.e.
+    // ≈ 7.5 U * iters per member, an order of magnitude above. A 20 U
+    // per-member budget separates the two with wide margins.
+    let (n, dim, iters, jobs) = (4096usize, 4usize, 12u64, 4usize);
+    let unit = (n * dim * 8) as u64;
+    let specs: Vec<JobSpec> = (0..jobs)
+        .map(|j| {
+            JobSpec::new(
+                &format!("pk{j}"),
+                EngineKind::Queue,
+                PsoParams::for_fitness(&Flat, n, dim, iters, 0.5),
+                Arc::new(Flat),
+                Objective::Maximize,
+                j as u64 + 1,
+            )
+        })
+        .collect();
+    let scheduler = JobScheduler::with_streams(2, 1).pack(true);
+    let before = bytes();
+    let outcomes = scheduler.run(&specs).unwrap();
+    let total = bytes() - before;
+    for o in &outcomes {
+        assert_eq!(o.steps, iters);
+    }
+    let budget = 20 * jobs as u64 * unit;
+    assert!(
+        total < budget,
+        "packed session allocated {total} bytes (budget {budget}; a \
+         form/extract-per-round churn regression lands an order of \
+         magnitude above it)"
+    );
 }
 
 #[test]

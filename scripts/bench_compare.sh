@@ -1,0 +1,109 @@
+#!/usr/bin/env bash
+# Diff two BENCH_*.json documents produced by the benchkit JSON writer
+# (rust/src/benchkit/json.rs) and report per-record metric deltas.
+#
+#   bench_compare.sh [--strict] baseline.json candidate.json
+#
+# Records are matched by their identity fields (mode, engine, streams,
+# batch_steps, jobs, particles, paper_iters); the compared metrics are
+# the timing and ratio fields (*_ns, *_s, speedup*, *_overhead). Time
+# metrics that grew by more than BENCH_COMPARE_MAX_REGRESSION percent
+# (default 25) are flagged; with --strict any flagged metric makes the
+# script exit 1. Ratio metrics (speedup, *_vs_*) are reported but never
+# flagged — higher is better there. See EXPERIMENTS.md §Bench baselines
+# for the thresholds and the promotion workflow.
+#
+# The writer emits one key per line at fixed indentation, so this parser
+# is plain awk — no jq dependency.
+set -euo pipefail
+
+strict=0
+threshold="${BENCH_COMPARE_MAX_REGRESSION:-25}"
+args=()
+for a in "$@"; do
+  case "$a" in
+    --strict) strict=1 ;;
+    -h|--help)
+      echo "usage: $0 [--strict] baseline.json candidate.json" >&2
+      exit 0
+      ;;
+    *) args+=("$a") ;;
+  esac
+done
+if [ "${#args[@]}" -ne 2 ]; then
+  echo "usage: $0 [--strict] baseline.json candidate.json" >&2
+  exit 2
+fi
+base="${args[0]}"
+cand="${args[1]}"
+for f in "$base" "$cand"; do
+  if [ ! -f "$f" ]; then
+    echo "bench_compare: no such file: $f" >&2
+    exit 2
+  fi
+done
+
+awk -v strict="$strict" -v threshold="$threshold" '
+  function trim(s) {
+    gsub(/^[ \t]+/, "", s)
+    gsub(/[ \t,]+$/, "", s)
+    return s
+  }
+  FNR == 1 { doc++ }
+  /^  "bench":/ { split($0, p, "\""); bench[doc] = p[4] }
+  /^  "scale":/ { split($0, p, "\""); scale[doc] = p[4] }
+  /^  "git_rev":/ { split($0, p, "\""); rev[doc] = p[4] }
+  /^    \{/ { delete cur }
+  /^      "/ {
+    line = trim($0)
+    sep = index(line, "\": ")
+    key = substr(line, 2, sep - 2)
+    val = substr(line, sep + 3)
+    gsub(/^"|"$/, "", val)
+    cur[key] = val
+  }
+  /^    \}/ {
+    id = ""
+    nid = split("mode engine streams batch_steps jobs particles paper_iters", idk, " ")
+    for (i = 1; i <= nid; i++)
+      if (idk[i] in cur) id = id (id == "" ? "" : " ") idk[i] "=" cur[idk[i]]
+    for (k in cur) {
+      if (k !~ /_ns$|_s$|speedup|_overhead$/) continue
+      if (cur[k] !~ /^-?[0-9]/) continue # null: non-finite in the writer
+      v[doc, id, k] = cur[k]
+      if (doc == 2 && !((id SUBSEP k) in seen)) {
+        seen[id SUBSEP k] = 1
+        list[++m] = id SUBSEP k
+      }
+    }
+  }
+  END {
+    printf "bench_compare: %s @ %s  ->  %s @ %s\n", \
+      bench[1], rev[1], bench[2], rev[2]
+    if (bench[1] != bench[2])
+      printf "WARNING: comparing different benches (%s vs %s)\n", bench[1], bench[2]
+    if (scale[1] != scale[2])
+      printf "WARNING: different scales (%s vs %s) — deltas are not comparable\n", \
+        scale[1], scale[2]
+    printf "%-52s %-28s %14s %14s %9s\n", "record", "metric", "baseline", "candidate", "delta"
+    bad = 0
+    for (i = 1; i <= m; i++) {
+      split(list[i], a, SUBSEP)
+      id = a[1]; k = a[2]
+      c = v[2, id, k] + 0
+      if ((1, id, k) in v) {
+        b = v[1, id, k] + 0
+        delta = (b != 0) ? (c - b) / b * 100 : 0
+        flag = ""
+        if (k ~ /_ns$|_s$/ && delta > threshold + 0) { flag = "  << regression"; bad++ }
+        printf "%-52s %-28s %14.3f %14.3f %+8.1f%%%s\n", id, k, b, c, delta, flag
+      } else {
+        printf "%-52s %-28s %14s %14.3f    (new)\n", id, k, "-", c
+      }
+    }
+    if (bad > 0) {
+      printf "%d time metric(s) regressed beyond %s%%\n", bad, threshold
+      if (strict) exit 1
+    }
+  }
+' "$base" "$cand"

@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# Promote a measured bench JSON document (downloaded from the CI
+# `bench-json` artifact, or produced locally with CUPSO_BENCH_JSON) to a
+# committed baseline at the repo root:
+#
+#   bench_promote.sh <measured.json> [dest.json]
+#
+# Guardrails — a baseline must carry real provenance, never a guess:
+#   * the document must name its bench and its git_rev;
+#   * the git_rev must be an actual commit in this repository AND an
+#     ancestor of HEAD (numbers from a rebase orphan or another clone
+#     are rejected);
+#   * placeholder revisions ("unknown", "baseline-estimate") are
+#     rejected outright.
+#
+# On success the document is copied to the destination (default
+# BENCH_<bench>.json at the repo root), a delta report against any prior
+# baseline is printed via bench_compare.sh, and the copy is left for a
+# reviewed `git commit`. See EXPERIMENTS.md §Bench baselines.
+set -euo pipefail
+
+if [ "$#" -lt 1 ] || [ "$#" -gt 2 ]; then
+  echo "usage: $0 <measured.json> [dest.json]" >&2
+  exit 2
+fi
+src="$1"
+if [ ! -f "$src" ]; then
+  echo "bench_promote: no such file: $src" >&2
+  exit 2
+fi
+root="$(git rev-parse --show-toplevel)"
+
+field() {
+  sed -n "s/^  \"$1\": \"\(.*\)\",*$/\1/p" "$src" | head -n 1
+}
+bench="$(field bench)"
+rev="$(field git_rev)"
+if [ -z "$bench" ]; then
+  echo "bench_promote: $src has no \"bench\" field — not a benchkit document" >&2
+  exit 1
+fi
+case "$rev" in
+  ""|unknown|baseline-estimate)
+    echo "bench_promote: $src has placeholder git_rev \"$rev\" — refusing:" >&2
+    echo "a committed baseline needs real provenance (re-run the bench in a git checkout)" >&2
+    exit 1
+    ;;
+esac
+if ! git -C "$root" cat-file -e "$rev^{commit}" 2>/dev/null; then
+  echo "bench_promote: git_rev $rev is not a commit in this repository" >&2
+  exit 1
+fi
+if ! git -C "$root" merge-base --is-ancestor "$rev" HEAD; then
+  echo "bench_promote: git_rev $rev is not an ancestor of HEAD — these numbers" >&2
+  echo "were taken on a branch this history does not contain" >&2
+  exit 1
+fi
+
+dest="${2:-$root/BENCH_$bench.json}"
+if [ -f "$dest" ]; then
+  echo "delta vs the current baseline:"
+  bash "$root/scripts/bench_compare.sh" "$dest" "$src" || true
+fi
+cp "$src" "$dest"
+echo "promoted $src -> $dest (bench \"$bench\", measured at $rev)"
+echo "review the delta above, then commit the new baseline."
