@@ -180,6 +180,7 @@ impl Engine for AsyncEngine {
             pbest_improvements.fetch_add(improved, Ordering::Relaxed);
         });
 
+        // SAFETY: all blocks quiesced (launch returned); exclusive access.
         let mut history = std::mem::take(unsafe { history_cells.get(0) });
         history.push((params.max_iter, gbest.fit_relaxed()));
 

@@ -93,6 +93,7 @@ impl ParallelSettings {
 /// columns, but element indices `d*n + i` are disjoint for disjoint `i`).
 pub(crate) struct SharedSwarm(UnsafeCell<SwarmState>);
 
+// SAFETY: disjoint-column discipline per the type docs above.
 unsafe impl Sync for SharedSwarm {}
 
 impl SharedSwarm {
@@ -106,7 +107,9 @@ impl SharedSwarm {
     /// written elsewhere.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get(&self) -> &mut SwarmState {
-        &mut *self.0.get()
+        // SAFETY: non-aliasing per this function's contract (caller stays
+        // within its own block's columns).
+        unsafe { &mut *self.0.get() }
     }
 
     /// Reclaim the swarm after all blocks quiesced (used by
@@ -122,6 +125,7 @@ pub(crate) struct PerBlock<T> {
     cells: Vec<UnsafeCell<T>>,
 }
 
+// SAFETY: one-block-per-entry discipline per the type docs above.
 unsafe impl<T: Send> Sync for PerBlock<T> {}
 
 impl<T> PerBlock<T> {
@@ -137,7 +141,9 @@ impl<T> PerBlock<T> {
     /// (e.g. after an inter-kernel barrier).
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get(&self, i: usize) -> &mut T {
-        &mut *self.cells[i].get()
+        // SAFETY: at most one live accessor per index, per this
+        // function's contract.
+        unsafe { &mut *self.cells[i].get() }
     }
 
     /// Number of per-block slots (= the grid's block count).

@@ -70,6 +70,7 @@ struct Slab {
 /// regions are disjoint by construction.
 struct SharedSlab(UnsafeCell<Slab>);
 
+// SAFETY: disjoint-region discipline per the type docs above.
 unsafe impl Sync for SharedSlab {}
 
 impl SharedSlab {
@@ -78,7 +79,9 @@ impl SharedSlab {
     /// member region while other blocks may be live.
     #[allow(clippy::mut_from_ref)]
     unsafe fn get(&self) -> &mut Slab {
-        &mut *self.0.get()
+        // SAFETY: non-aliasing per this function's contract (blocks stay
+        // within their own member regions).
+        unsafe { &mut *self.0.get() }
     }
 }
 
@@ -406,6 +409,7 @@ impl PackedRun {
                     best = (f, i);
                 }
             });
+            // SAFETY: entry `b` is this block's own PerBlock slot.
             unsafe { *aux.get(b) = best };
         });
         // ---- 2nd kernel: block m scans member m's aux range ----

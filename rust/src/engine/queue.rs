@@ -236,6 +236,8 @@ impl Run for QueueRun<'_> {
                     }
                 }
                 if best.1 != u32::MAX {
+                    // SAFETY: read-only position access after the push
+                    // phase quiesced (single scanner block).
                     let st = unsafe { state.get() };
                     gbest.update_exclusive(objective, best.0, |dst| {
                         st.position_into(best.1 as usize, dst)

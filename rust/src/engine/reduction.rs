@@ -346,6 +346,8 @@ impl Run for ReductionRun<'_> {
                 }
                 let (bf, bi) = reduce_tree(sc, blocks, objective, unrolled);
                 if bi != u32::MAX {
+                    // SAFETY: read-only position access after the update
+                    // kernel joined (single reducer block).
                     let st = unsafe { state.get() };
                     gbest.update_exclusive(objective, bf, |dst| {
                         st.position_into(bi as usize, dst)

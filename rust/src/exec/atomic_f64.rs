@@ -1,7 +1,7 @@
 //! Atomic `f64` via CAS on the bit pattern — the CPU analog of CUDA's
 //! software atomic-double idiom (`atomicCAS` on `unsigned long long`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::exec::sync::{AtomicU64, Ordering};
 
 /// An `f64` updatable atomically across threads.
 pub struct AtomicF64 {
@@ -94,20 +94,22 @@ mod tests {
 
     #[test]
     fn concurrent_max_converges_to_global_max() {
+        // Scaled down under Miri (interpreter, ~10^4x slower).
+        const ITERS: u64 = if cfg!(miri) { 100 } else { 10_000 };
         let a = std::sync::Arc::new(AtomicF64::new(f64::NEG_INFINITY));
         let mut handles = vec![];
-        for t in 0..8 {
+        for t in 0..8u64 {
             let a = a.clone();
             handles.push(std::thread::spawn(move || {
-                for i in 0..10_000 {
-                    a.fetch_max((t * 10_000 + i) as f64);
+                for i in 0..ITERS {
+                    a.fetch_max((t * ITERS + i) as f64);
                 }
             }));
         }
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(a.load(Relaxed), 79_999.0);
+        assert_eq!(a.load(Relaxed), (8 * ITERS - 1) as f64);
     }
 
     #[test]

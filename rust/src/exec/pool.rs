@@ -51,8 +51,7 @@
 //! touch disjoint `Shared` instances, and calls on the *same* stream are
 //! serialized by that stream's launch guard.
 
-use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::exec::sync::{self, AtomicBool, AtomicU64, AtomicUsize, Ordering, RacyCell};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -86,7 +85,7 @@ struct Shared {
     /// Bumped once per launch (Release); workers detect work by comparing.
     generation: AtomicU64,
     /// Written by the launcher only while `active == 0`.
-    job: UnsafeCell<Option<JobDesc>>,
+    job: RacyCell<Option<JobDesc>>,
     /// Next block index to claim.
     next_block: AtomicUsize,
     /// Blocks finished in the current generation.
@@ -129,8 +128,9 @@ pub struct GridPool {
     workers: usize,
 }
 
-/// Spin budget when cores are plentiful.
-const SPIN_ROUNDS_PARALLEL: u32 = 20_000;
+/// Spin budget when cores are plentiful. Under Miri every spin iteration
+/// is interpreted, so the budget collapses to "yield immediately".
+const SPIN_ROUNDS_PARALLEL: u32 = if cfg!(miri) { 4 } else { 20_000 };
 /// Spin budget when the pool (workers + launchers) oversubscribes the
 /// machine — effectively "yield immediately".
 const SPIN_ROUNDS_OVERSUB: u32 = 16;
@@ -141,7 +141,7 @@ fn spin_wait<F: Fn() -> bool>(budget: u32, cond: F) {
     while !cond() {
         spins += 1;
         if spins < budget {
-            std::hint::spin_loop();
+            sync::spin_loop();
         } else {
             std::thread::yield_now();
         }
@@ -182,7 +182,7 @@ impl GridPool {
                 let group_workers = base + usize::from(s < rem);
                 let shared = Arc::new(Shared {
                     generation: AtomicU64::new(0),
-                    job: UnsafeCell::new(None),
+                    job: RacyCell::new(None),
                     next_block: AtomicUsize::new(0),
                     blocks_done: AtomicUsize::new(0),
                     active: AtomicUsize::new(0),
@@ -265,11 +265,11 @@ impl GridPool {
         let sh = &*st.shared;
         // Quiesce: nobody may still be reading the previous descriptor.
         spin_wait(sh.spin_rounds, || sh.active.load(Ordering::SeqCst) == 0);
-        // Erase the closure's lifetime: sound because this function joins
-        // (waits for blocks_done == blocks and active == 0) before `kernel`
-        // can drop.
         let obj: &(dyn Fn(BlockCtx) + Sync + '_) = &kernel;
         let desc = JobDesc {
+            // SAFETY: erasing the closure's lifetime is sound because
+            // this function joins (waits for blocks_done == blocks and
+            // active == 0) before `kernel` can drop.
             func: unsafe {
                 std::mem::transmute::<
                     *const (dyn Fn(BlockCtx) + Sync + '_),
@@ -279,7 +279,8 @@ impl GridPool {
             blocks,
         };
         // Publish slot + counters, then bump the generation.
-        unsafe { *sh.job.get() = Some(desc) };
+        // SAFETY: `active == 0` (quiesce above) — no worker holds the slot.
+        unsafe { *sh.job.write() = Some(desc) };
         sh.next_block.store(0, Ordering::Relaxed);
         sh.blocks_done.store(0, Ordering::Relaxed);
         sh.generation.fetch_add(1, Ordering::Release);
@@ -354,7 +355,7 @@ fn worker_loop(shared: Arc<Shared>, worker_id: usize) {
                 }
                 break;
             }
-            std::hint::spin_loop();
+            sync::spin_loop();
         }
         if shared.shutdown.load(Ordering::SeqCst) {
             return;
@@ -367,7 +368,7 @@ fn worker_loop(shared: Arc<Shared>, worker_id: usize) {
             seen_gen = g;
             // SAFETY: slot for `g` is published (Release bump / SeqCst
             // load) and cannot be overwritten while `active > 0`.
-            if let Some(desc) = unsafe { *shared.job.get() } {
+            if let Some(desc) = unsafe { *shared.job.read() } {
                 run_blocks(&shared, desc, worker_id);
             }
         }

@@ -13,8 +13,7 @@
 //! measurement, re-verified by `benches/ablation_queue_rarity.rs`), then a
 //! single scanner (thread 0 of the block) linearly reduces the queue.
 
-use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::exec::sync::{AtomicU64, AtomicUsize, Ordering, RacyCell};
 
 /// Fixed-capacity multi-producer append array (`atomicAdd` on the cursor).
 ///
@@ -22,10 +21,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// stores particle *indices* in the high-dimension case to bound shared
 /// memory (§5.3), and we mirror that.
 pub struct SharedQueue<T: Copy> {
-    slots: Box<[UnsafeCell<T>]>,
+    slots: Box<[RacyCell<T>]>,
     len: AtomicUsize,
     /// Lifetime pushes (instrumentation for the rarity ablation).
-    total_pushes: std::sync::atomic::AtomicU64,
+    total_pushes: AtomicU64,
 }
 
 // SAFETY: slot writes are claimed by unique indices from `len`; reads only
@@ -37,12 +36,12 @@ unsafe impl<T: Copy + Send> Sync for SharedQueue<T> {}
 impl<T: Copy + Default> SharedQueue<T> {
     /// Queue with `capacity` slots (the shared-memory allocation).
     pub fn new(capacity: usize) -> Self {
-        let slots: Vec<UnsafeCell<T>> =
-            (0..capacity).map(|_| UnsafeCell::new(T::default())).collect();
+        let slots: Vec<RacyCell<T>> =
+            (0..capacity).map(|_| RacyCell::new(T::default())).collect();
         Self {
             slots: slots.into_boxed_slice(),
             len: AtomicUsize::new(0),
-            total_pushes: std::sync::atomic::AtomicU64::new(0),
+            total_pushes: AtomicU64::new(0),
         }
     }
 }
@@ -70,7 +69,7 @@ impl<T: Copy> SharedQueue<T> {
             })
             .ok()?;
         // SAFETY: idx was uniquely claimed by the successful CAS.
-        unsafe { *self.slots[idx].get() = value };
+        unsafe { *self.slots[idx].write() = value };
         self.total_pushes.fetch_add(1, Ordering::Relaxed);
         Some(idx)
     }
@@ -101,7 +100,7 @@ impl<T: Copy> SharedQueue<T> {
         let n = self.len();
         for slot in &self.slots[..n] {
             // SAFETY: producers have quiesced; indices < len are written.
-            f(unsafe { &*slot.get() });
+            f(unsafe { &*slot.read() });
         }
     }
 
@@ -166,7 +165,7 @@ mod tests {
         // overflowing pushers raced a reset.
         const CAP: usize = 16;
         const THREADS: u64 = 8;
-        const PER_THREAD: u64 = 2_000;
+        const PER_THREAD: u64 = if cfg!(miri) { 40 } else { 2_000 };
         let q: Arc<SharedQueue<u64>> = Arc::new(SharedQueue::new(CAP));
         for round in 0..4u64 {
             let mut handles = vec![];
@@ -202,21 +201,23 @@ mod tests {
 
     #[test]
     fn concurrent_pushes_claim_unique_slots() {
-        let q: Arc<SharedQueue<u64>> = Arc::new(SharedQueue::new(64_000));
+        const PER_THREAD: usize = if cfg!(miri) { 50 } else { 8_000 };
+        const TOTAL: usize = 8 * PER_THREAD;
+        let q: Arc<SharedQueue<u64>> = Arc::new(SharedQueue::new(TOTAL));
         let mut handles = vec![];
         for t in 0..8u64 {
             let q = q.clone();
             handles.push(std::thread::spawn(move || {
-                for i in 0..8000 {
-                    q.push(t * 8000 + i).unwrap();
+                for i in 0..PER_THREAD as u64 {
+                    q.push(t * PER_THREAD as u64 + i).unwrap();
                 }
             }));
         }
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(q.len(), 64_000);
-        let mut seen = vec![false; 64_000];
+        assert_eq!(q.len(), TOTAL);
+        let mut seen = vec![false; TOTAL];
         q.scan(|&v| {
             assert!(!seen[v as usize], "duplicate value {v}");
             seen[v as usize] = true;

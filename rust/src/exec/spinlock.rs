@@ -12,16 +12,25 @@
 //! `(gbest_fit, gbest_pos)` and by the async coordinator to guard the
 //! cross-shard global best.
 
-use std::cell::UnsafeCell;
+use crate::exec::sync::{self, AtomicU32, AtomicU64, Ordering, RacyCell};
 use std::ops::{Deref, DerefMut};
-use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Ordering of the unlock store (`atomicExch(lock, 0)`). `Release` is
+/// what makes the critical section visible to the next acquirer; the
+/// `cupso_mutate_spinlock_release` cfg weakens it to `Relaxed` so the
+/// modelcheck CI job can prove the race detector refutes the weakened
+/// protocol (see `rust/tests/modelcheck.rs`).
+#[cfg(not(cupso_mutate_spinlock_release))]
+const UNLOCK_ORDERING: Ordering = Ordering::Release;
+#[cfg(cupso_mutate_spinlock_release)]
+const UNLOCK_ORDERING: Ordering = Ordering::Relaxed;
 
 /// CAS spin lock protecting `T`.
 pub struct SpinLock<T> {
     flag: AtomicU32,
-    data: UnsafeCell<T>,
+    data: RacyCell<T>,
     /// Total acquisitions (instrumentation for the contention ablation).
-    acquisitions: std::sync::atomic::AtomicU64,
+    acquisitions: AtomicU64,
 }
 
 // SAFETY: access to `data` is serialized by `flag`.
@@ -33,8 +42,8 @@ impl<T> SpinLock<T> {
     pub fn new(value: T) -> Self {
         Self {
             flag: AtomicU32::new(0),
-            data: UnsafeCell::new(value),
-            acquisitions: std::sync::atomic::AtomicU64::new(0),
+            data: RacyCell::new(value),
+            acquisitions: AtomicU64::new(0),
         }
     }
 
@@ -52,7 +61,7 @@ impl<T> SpinLock<T> {
                 break;
             }
             while self.flag.load(Ordering::Relaxed) != 0 {
-                std::hint::spin_loop();
+                sync::spin_loop();
             }
         }
         self.acquisitions.fetch_add(1, Ordering::Relaxed);
@@ -95,7 +104,7 @@ impl<T> Deref for SpinGuard<'_, T> {
     #[inline]
     fn deref(&self) -> &T {
         // SAFETY: guard holds the lock.
-        unsafe { &*self.lock.data.get() }
+        unsafe { &*self.lock.data.read() }
     }
 }
 
@@ -103,7 +112,7 @@ impl<T> DerefMut for SpinGuard<'_, T> {
     #[inline]
     fn deref_mut(&mut self) -> &mut T {
         // SAFETY: guard holds the lock exclusively.
-        unsafe { &mut *self.lock.data.get() }
+        unsafe { &mut *self.lock.data.write() }
     }
 }
 
@@ -111,8 +120,9 @@ impl<T> Drop for SpinGuard<'_, T> {
     #[inline]
     fn drop(&mut self) {
         // Release ordering publishes the critical section (__threadfence),
-        // the store is the atomicExch(lock, 0).
-        self.lock.flag.store(0, Ordering::Release);
+        // the store is the atomicExch(lock, 0). UNLOCK_ORDERING is
+        // `Release` except under the mutation self-test cfg.
+        self.lock.flag.store(0, UNLOCK_ORDERING);
     }
 }
 
@@ -121,6 +131,10 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
+    // Miri executes ~10^4x slower than native; keep the schedules it can
+    // explore but drop the raw iteration count.
+    const ITERS: u64 = if cfg!(miri) { 100 } else { 50_000 };
+
     #[test]
     fn exclusive_increments_do_not_race() {
         let lock = Arc::new(SpinLock::new(0u64));
@@ -128,7 +142,7 @@ mod tests {
         for _ in 0..8 {
             let lock = lock.clone();
             handles.push(std::thread::spawn(move || {
-                for _ in 0..50_000 {
+                for _ in 0..ITERS {
                     *lock.lock() += 1;
                 }
             }));
@@ -136,8 +150,8 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(*lock.lock(), 400_000);
-        assert_eq!(lock.acquisition_count(), 400_001);
+        assert_eq!(*lock.lock(), 8 * ITERS);
+        assert_eq!(lock.acquisition_count(), 8 * ITERS + 1);
     }
 
     #[test]
@@ -158,7 +172,7 @@ mod tests {
         for t in 1..=4u64 {
             let lock = lock.clone();
             handles.push(std::thread::spawn(move || {
-                for i in 0..20_000 {
+                for i in 0..ITERS / 2 {
                     let mut g = lock.lock();
                     let v = t * 1_000_000 + i;
                     *g = (v, v);

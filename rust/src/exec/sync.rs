@@ -1,0 +1,356 @@
+//! Synchronization facade for the unsafe hot path.
+//!
+//! Every exec primitive (and the scheduler's executor slots) performs its
+//! atomic operations and lock-free `UnsafeCell` accesses through this
+//! module instead of `std::sync::atomic` / `std::cell::UnsafeCell`
+//! directly. The indirection buys one thing: a **model-checkable** build.
+//!
+//! * Default build (`--cfg cupso_model` absent): every item is a
+//!   re-export or `#[repr(transparent)]` + `#[inline]` wrapper of the
+//!   `std` original — the facade compiles out entirely, zero overhead
+//!   (the zero-allocation and latency tiers run against this shape).
+//! * `--cfg cupso_model`: the atomic types and [`RacyCell`] route every
+//!   operation through [`crate::modelcheck`]'s virtual scheduler. Inside
+//!   an exploration ([`crate::modelcheck::Explorer`]) each operation is a
+//!   scheduling point and feeds the vector-clock data-race detector;
+//!   outside an exploration (threads the explorer does not own) the
+//!   instrumented ops fall through to the plain `std` operation, so the
+//!   rest of the test suite still runs correctly under the cfg.
+//!
+//! Two deliberate model-mode deviations, both documented invariants of
+//! the checker rather than bugs:
+//!
+//! * `compare_exchange_weak` never fails spuriously under the model
+//!   (it lowers to the strong CAS). Spurious failure is a *scheduling*
+//!   artifact, and the explorer owns the schedule — allowing it would
+//!   make replayed schedules non-deterministic.
+//! * `SeqCst` is modeled as `AcqRel` for happens-before purposes: the
+//!   detector tracks release/acquire edges only, not the single total
+//!   order. This under-approximates `SeqCst` (it can flag an SC-only
+//!   protocol as racy) — none of the model-checked protocols rely on
+//!   SC-only reasoning; see DESIGN.md §Concurrency correctness.
+
+pub use std::sync::atomic::Ordering;
+
+/// `true` when `order` has an acquire component (load side).
+#[cfg(cupso_model)]
+pub(crate) fn acquires(order: Ordering) -> bool {
+    matches!(order, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+/// `true` when `order` has a release component (store side).
+#[cfg(cupso_model)]
+pub(crate) fn releases(order: Ordering) -> bool {
+    matches!(order, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// Default build: transparent re-exports.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(cupso_model))]
+mod imp {
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+
+    /// A spin-loop hint. Under the model this is a voluntary-yield
+    /// scheduling point (the explorer deprioritizes the spinner); here it
+    /// is exactly `std::hint::spin_loop`.
+    #[inline(always)]
+    pub fn spin_loop() {
+        std::hint::spin_loop();
+    }
+
+    /// An `UnsafeCell` whose accesses are visible to the race detector.
+    ///
+    /// [`read`](RacyCell::read) / [`write`](RacyCell::write) mark the
+    /// access intent at the call site; in the default build both are the
+    /// plain `UnsafeCell::get`. Dereferencing the returned pointer is the
+    /// caller's obligation, exactly as with `UnsafeCell` — the protocols
+    /// that make those dereferences sound are what `cupso_model` builds
+    /// verify.
+    #[repr(transparent)]
+    pub struct RacyCell<T>(std::cell::UnsafeCell<T>);
+
+    impl<T> RacyCell<T> {
+        /// Cell holding `value`.
+        #[inline(always)]
+        pub const fn new(value: T) -> Self {
+            Self(std::cell::UnsafeCell::new(value))
+        }
+
+        /// Raw pointer for a read of the protected data.
+        #[inline(always)]
+        pub fn read(&self) -> *mut T {
+            self.0.get()
+        }
+
+        /// Raw pointer for a write of the protected data.
+        #[inline(always)]
+        pub fn write(&self) -> *mut T {
+            self.0.get()
+        }
+
+        /// Consume the cell (requires ownership, hence quiescence).
+        #[inline(always)]
+        pub fn into_inner(self) -> T {
+            self.0.into_inner()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model build: every op is a scheduling point + a happens-before event.
+// ---------------------------------------------------------------------------
+
+#[cfg(cupso_model)]
+mod imp {
+    use super::{acquires, releases, Ordering};
+    use crate::modelcheck::runtime::{self, AtomicAccess};
+
+    macro_rules! model_atomic_int {
+        ($name:ident, $std:ty, $ty:ty) => {
+            /// Model-routed atomic (see module docs). API-compatible with
+            /// the `std` type for every operation the crate uses.
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $ty) -> Self {
+                    Self {
+                        inner: <$std>::new(v),
+                    }
+                }
+
+                #[inline]
+                fn addr(&self) -> usize {
+                    self as *const Self as usize
+                }
+
+                #[inline]
+                pub fn load(&self, order: Ordering) -> $ty {
+                    runtime::atomic_access(self.addr(), || {
+                        (
+                            self.inner.load(order),
+                            AtomicAccess::Load {
+                                acq: acquires(order),
+                            },
+                        )
+                    })
+                }
+
+                #[inline]
+                pub fn store(&self, v: $ty, order: Ordering) {
+                    runtime::atomic_access(self.addr(), || {
+                        (
+                            self.inner.store(v, order),
+                            AtomicAccess::Store {
+                                rel: releases(order),
+                            },
+                        )
+                    })
+                }
+
+                #[inline]
+                pub fn swap(&self, v: $ty, order: Ordering) -> $ty {
+                    runtime::atomic_access(self.addr(), || {
+                        (
+                            self.inner.swap(v, order),
+                            AtomicAccess::Rmw {
+                                acq: acquires(order),
+                                rel: releases(order),
+                            },
+                        )
+                    })
+                }
+
+                #[inline]
+                pub fn fetch_add(&self, v: $ty, order: Ordering) -> $ty {
+                    runtime::atomic_access(self.addr(), || {
+                        (
+                            self.inner.fetch_add(v, order),
+                            AtomicAccess::Rmw {
+                                acq: acquires(order),
+                                rel: releases(order),
+                            },
+                        )
+                    })
+                }
+
+                #[inline]
+                pub fn fetch_sub(&self, v: $ty, order: Ordering) -> $ty {
+                    runtime::atomic_access(self.addr(), || {
+                        (
+                            self.inner.fetch_sub(v, order),
+                            AtomicAccess::Rmw {
+                                acq: acquires(order),
+                                rel: releases(order),
+                            },
+                        )
+                    })
+                }
+
+                #[inline]
+                pub fn compare_exchange(
+                    &self,
+                    current: $ty,
+                    new: $ty,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$ty, $ty> {
+                    runtime::atomic_access(self.addr(), || {
+                        let res = self.inner.compare_exchange(current, new, success, failure);
+                        let access = match &res {
+                            Ok(_) => AtomicAccess::Rmw {
+                                acq: acquires(success),
+                                rel: releases(success),
+                            },
+                            Err(_) => AtomicAccess::Load {
+                                acq: acquires(failure),
+                            },
+                        };
+                        (res, access)
+                    })
+                }
+
+                /// Lowers to the strong CAS: spurious failure would make
+                /// a replayed schedule non-deterministic (module docs).
+                #[inline]
+                pub fn compare_exchange_weak(
+                    &self,
+                    current: $ty,
+                    new: $ty,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$ty, $ty> {
+                    self.compare_exchange(current, new, success, failure)
+                }
+
+                /// Load + CAS loop, each iteration its own scheduling
+                /// point (mirrors `std`'s observable behavior).
+                #[inline]
+                pub fn fetch_update<F: FnMut($ty) -> Option<$ty>>(
+                    &self,
+                    set_order: Ordering,
+                    fetch_order: Ordering,
+                    mut f: F,
+                ) -> Result<$ty, $ty> {
+                    let mut prev = self.load(fetch_order);
+                    while let Some(next) = f(prev) {
+                        match self.compare_exchange_weak(prev, next, set_order, fetch_order) {
+                            Ok(old) => return Ok(old),
+                            Err(seen) => prev = seen,
+                        }
+                    }
+                    Err(prev)
+                }
+
+                #[allow(dead_code)]
+                pub fn into_inner(self) -> $ty {
+                    self.inner.into_inner()
+                }
+            }
+        };
+    }
+
+    model_atomic_int!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+    model_atomic_int!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    model_atomic_int!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+    /// Model-routed atomic bool (subset the crate uses).
+    pub struct AtomicBool {
+        inner: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            Self {
+                inner: std::sync::atomic::AtomicBool::new(v),
+            }
+        }
+
+        #[inline]
+        fn addr(&self) -> usize {
+            self as *const Self as usize
+        }
+
+        #[inline]
+        pub fn load(&self, order: Ordering) -> bool {
+            runtime::atomic_access(self.addr(), || {
+                (
+                    self.inner.load(order),
+                    AtomicAccess::Load {
+                        acq: acquires(order),
+                    },
+                )
+            })
+        }
+
+        #[inline]
+        pub fn store(&self, v: bool, order: Ordering) {
+            runtime::atomic_access(self.addr(), || {
+                (
+                    self.inner.store(v, order),
+                    AtomicAccess::Store {
+                        rel: releases(order),
+                    },
+                )
+            })
+        }
+
+        #[inline]
+        pub fn swap(&self, v: bool, order: Ordering) -> bool {
+            runtime::atomic_access(self.addr(), || {
+                (
+                    self.inner.swap(v, order),
+                    AtomicAccess::Rmw {
+                        acq: acquires(order),
+                        rel: releases(order),
+                    },
+                )
+            })
+        }
+    }
+
+    /// Voluntary-yield scheduling point (see the default build's docs).
+    #[inline]
+    pub fn spin_loop() {
+        runtime::voluntary_yield();
+    }
+
+    /// Race-detected `UnsafeCell` (see the default build's docs): `read`
+    /// / `write` record a happens-before-checked access event before
+    /// handing out the pointer.
+    pub struct RacyCell<T>(std::cell::UnsafeCell<T>);
+
+    impl<T> RacyCell<T> {
+        #[inline]
+        pub const fn new(value: T) -> Self {
+            Self(std::cell::UnsafeCell::new(value))
+        }
+
+        #[inline]
+        fn addr(&self) -> usize {
+            self.0.get() as usize
+        }
+
+        #[inline]
+        pub fn read(&self) -> *mut T {
+            runtime::data_read(self.addr());
+            self.0.get()
+        }
+
+        #[inline]
+        pub fn write(&self) -> *mut T {
+            runtime::data_write(self.addr());
+            self.0.get()
+        }
+
+        #[inline]
+        pub fn into_inner(self) -> T {
+            self.0.into_inner()
+        }
+    }
+}
+
+pub use imp::{spin_loop, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, RacyCell};

@@ -44,6 +44,11 @@
 //! println!("gbest fitness = {:.6} at {:?}", out.gbest_fit, out.gbest_pos);
 //! ```
 
+// The unsafe hot path (exec primitives, executor slots) is audited: every
+// unsafe operation carries its own `// SAFETY:` justification, enforced
+// by this lint plus `scripts/unsafe_audit.sh` in CI.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod benchkit;
 pub mod checkpoint;
 pub mod cli;
@@ -54,6 +59,7 @@ pub mod exec;
 pub mod fitness;
 pub mod gpusim;
 pub mod metrics;
+pub mod modelcheck;
 pub mod pso;
 pub mod rng;
 pub mod runtime;

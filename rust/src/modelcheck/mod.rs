@@ -1,0 +1,282 @@
+//! Deterministic concurrency model checking for the exec primitives.
+//!
+//! The paper's contribution is a claim about concurrent memory effects —
+//! atomic queue updates and a CAS spin lock beating reduction by avoiding
+//! synchronization overhead — and this crate encodes that claim in a
+//! handful of hand-rolled lock-free protocols (`exec::SpinLock`,
+//! `exec::AtomicF64`, `exec::SharedQueue`, the scheduler's executor
+//! slots). This module is the first tool in the repo that can *refute*
+//! one of those protocols' memory orderings instead of merely failing to
+//! observe a bug:
+//!
+//! * a [`Scenario`] is a set of closures (model threads) over fresh
+//!   shared state plus a post-execution invariant check;
+//! * under `--cfg cupso_model`, [`Explorer::explore`] runs the scenario
+//!   under every schedule of a bounded-exhaustive CHESS-style search
+//!   (preemption-bounded DFS at atomic-op granularity) for 2–3 threads,
+//!   or under seeded-random schedules beyond that, with a vector-clock
+//!   data-race detector watching every [`crate::exec::sync::RacyCell`]
+//!   access (see [`runtime`]-module docs for the algorithm);
+//! * without the cfg the same tests still compile and run as bounded
+//!   real-thread stress executions (no detector, no schedule control),
+//!   so `cargo test modelcheck` is meaningful in every build.
+//!
+//! The detector earns its keep in CI forever via mutation self-tests:
+//! weakening `SpinLock`'s unlock store or the executor's completion echo
+//! from `Release` to `Relaxed` (`--cfg cupso_mutate_spinlock_release` /
+//! `--cfg cupso_mutate_executor_done`) must flip the corresponding
+//! modelcheck test from green to red — the CI `modelcheck` job asserts
+//! exactly that.
+
+#[cfg(cupso_model)]
+pub(crate) mod runtime;
+
+pub mod protocols;
+
+#[cfg(cupso_model)]
+use crate::rng::{RngEngine, Xoshiro256pp};
+
+/// One reported data race (deduplicated per location per execution).
+#[derive(Debug, Clone)]
+pub struct Race {
+    /// Human-readable description: threads, access kinds, location.
+    pub desc: String,
+}
+
+/// A concurrency scenario: model threads over fresh shared state, plus an
+/// optional post-execution invariant check (runs after every execution,
+/// after all threads joined; a panic fails the exploration).
+#[derive(Default)]
+pub struct Scenario {
+    threads: Vec<Box<dyn FnOnce() + Send>>,
+    check: Option<Box<dyn FnOnce()>>,
+}
+
+impl Scenario {
+    /// Empty scenario.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a model thread.
+    pub fn thread<F: FnOnce() + Send + 'static>(&mut self, f: F) -> &mut Self {
+        self.threads.push(Box::new(f));
+        self
+    }
+
+    /// Set the post-execution invariant check.
+    pub fn check<F: FnOnce() + 'static>(&mut self, f: F) -> &mut Self {
+        self.check = Some(Box::new(f));
+        self
+    }
+}
+
+/// Outcome of an exploration.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Executions run.
+    pub schedules: u64,
+    /// Executions that hit the decision budget and finished under the
+    /// fair fallback scheduler (explored as a prefix only).
+    pub truncated: u64,
+    /// DFS exhausted the bounded schedule space within `max_schedules`
+    /// (always `false` in random and stress modes).
+    pub exhausted: bool,
+    /// Data races found (exploration stops at the first racy schedule
+    /// unless [`Explorer::continue_past_races`] is set).
+    pub races: Vec<Race>,
+}
+
+impl Report {
+    /// No data race observed in any explored schedule.
+    pub fn race_free(&self) -> bool {
+        self.races.is_empty()
+    }
+}
+
+/// Schedule-exploring model checker (see module docs).
+///
+/// Defaults: preemption bound 2, decision budget 400 per execution, at
+/// most 20 000 schedules, DFS for ≤ 3 threads / seeded-random beyond,
+/// 64 stress executions in non-model builds.
+#[allow(dead_code)] // each build shape reads its own subset of the knobs
+pub struct Explorer {
+    preemptions: u32,
+    decision_budget: u64,
+    fair_cap: u64,
+    max_schedules: u64,
+    seed: Option<u64>,
+    stress_iters: u64,
+    stop_on_race: bool,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Explorer {
+    /// Explorer with the default bounds.
+    pub fn new() -> Self {
+        Self {
+            preemptions: 2,
+            decision_budget: 400,
+            fair_cap: 1_000_000,
+            max_schedules: 20_000,
+            seed: None,
+            stress_iters: 64,
+            stop_on_race: true,
+        }
+    }
+
+    /// CHESS-style context bound: preemptive switches per execution.
+    pub fn preemptions(mut self, p: u32) -> Self {
+        self.preemptions = p;
+        self
+    }
+
+    /// Scheduling decisions explored per execution before the fair
+    /// fallback finishes it deterministically.
+    pub fn decision_budget(mut self, d: u64) -> Self {
+        self.decision_budget = d;
+        self
+    }
+
+    /// Upper bound on executions.
+    pub fn max_schedules(mut self, m: u64) -> Self {
+        self.max_schedules = m;
+        self
+    }
+
+    /// Force seeded-random scheduling (also the default above 3 threads).
+    pub fn random_seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Executions per scenario in non-model (stress) builds.
+    pub fn stress_iters(mut self, n: u64) -> Self {
+        self.stress_iters = n;
+        self
+    }
+
+    /// Keep exploring after a race is found (for scenarios that assert
+    /// counter invariants while *expecting* unsynchronized cells, e.g.
+    /// queue pushes racing a reset). At most 16 races are recorded.
+    pub fn continue_past_races(mut self) -> Self {
+        self.stop_on_race = false;
+        self
+    }
+
+    /// Explore the scenario produced by `factory` (called once per
+    /// execution — shared state must be rebuilt fresh each time).
+    #[cfg(cupso_model)]
+    pub fn explore<F: FnMut() -> Scenario>(&self, mut factory: F) -> Report {
+        use runtime::{run_schedule, Mode, ScheduleCfg};
+        let cfg = ScheduleCfg {
+            preemptions: self.preemptions,
+            decision_budget: self.decision_budget,
+            fair_cap: self.fair_cap,
+        };
+        let mut report = Report::default();
+        let mut scenario = factory();
+        let randomized = self.seed.is_some() || scenario.threads.len() > 3;
+        if randomized {
+            let mut rng = Xoshiro256pp::seeded(self.seed.unwrap_or(0xC0FF_EE00));
+            loop {
+                let Scenario { threads, check } = scenario;
+                let mut pick = |n: usize| (rng.next_u64() % n as u64) as usize;
+                let outcome = run_schedule(threads, &cfg, Mode::Random { rng: &mut pick });
+                if self.record(&mut report, outcome, check) {
+                    return report;
+                }
+                if report.schedules >= self.max_schedules {
+                    return report;
+                }
+                scenario = factory();
+            }
+        }
+        // Bounded-exhaustive DFS over (free-switch × preemption) choices.
+        let mut forced: Vec<usize> = Vec::new();
+        loop {
+            let Scenario { threads, check } = scenario;
+            let outcome = run_schedule(threads, &cfg, Mode::Dfs { forced: &forced });
+            let mut decisions = outcome.decisions.clone();
+            if self.record(&mut report, outcome, check) {
+                return report;
+            }
+            if report.schedules >= self.max_schedules {
+                return report;
+            }
+            // Backtrack to the deepest decision with an untried option.
+            loop {
+                match decisions.last_mut() {
+                    None => {
+                        report.exhausted = true;
+                        return report;
+                    }
+                    Some(d) if d.taken + 1 < d.options => {
+                        d.taken += 1;
+                        break;
+                    }
+                    _ => {
+                        decisions.pop();
+                    }
+                }
+            }
+            forced = decisions.iter().map(|d| d.taken).collect();
+            scenario = factory();
+        }
+    }
+
+    /// Fold one execution into the report; true = stop exploring.
+    #[cfg(cupso_model)]
+    fn record(
+        &self,
+        report: &mut Report,
+        outcome: runtime::ExecOutcome,
+        check: Option<Box<dyn FnOnce()>>,
+    ) -> bool {
+        report.schedules += 1;
+        if outcome.truncated {
+            report.truncated += 1;
+        }
+        if let Some(p) = outcome.panic {
+            std::panic::resume_unwind(p);
+        }
+        if let Some(check) = check {
+            check();
+        }
+        if !outcome.races.is_empty() {
+            let room = 16usize.saturating_sub(report.races.len());
+            report.races.extend(outcome.races.into_iter().take(room));
+            if self.stop_on_race {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Non-model fallback: bounded real-thread stress executions (no
+    /// schedule control, no race detector — the `--cfg cupso_model` CI
+    /// job runs the real exploration).
+    #[cfg(not(cupso_model))]
+    pub fn explore<F: FnMut() -> Scenario>(&self, mut factory: F) -> Report {
+        let mut report = Report::default();
+        for _ in 0..self.stress_iters {
+            let Scenario { threads, check } = factory();
+            let handles: Vec<_> = threads.into_iter().map(std::thread::spawn).collect();
+            for h in handles {
+                if let Err(p) = h.join() {
+                    std::panic::resume_unwind(p);
+                }
+            }
+            if let Some(check) = check {
+                check();
+            }
+            report.schedules += 1;
+        }
+        report
+    }
+}

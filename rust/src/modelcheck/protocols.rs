@@ -1,0 +1,169 @@
+//! Model-checkable replicas of crate-internal protocols.
+//!
+//! The scheduler's executor slots ([`crate::scheduler::executor`]) mix
+//! the lock-free publish→echo protocol with OS parking (a condvar) that
+//! the virtual scheduler cannot own. These scenario builders replicate
+//! the *protocol* — the part every SAFETY comment in `executor.rs` leans
+//! on — spin-only, using the same [`crate::exec::sync`] facade types and,
+//! crucially, the **same ordering constants** the real executor compiles
+//! with: the `cupso_mutate_executor_done` mutation weakens the real
+//! `done`-echo store and these scenarios together, so the modelcheck CI
+//! job proves the detector catches the weakening.
+//!
+//! The payload stands in as a `u64` (the real slot carries a `Cmd` /
+//! `StepReport`); the race detector only cares that the cells are
+//! unsynchronized-or-not, not what they hold.
+
+use super::Scenario;
+use crate::exec::sync::{spin_loop, AtomicBool, AtomicU64, Ordering, RacyCell};
+use crate::scheduler::executor::DONE_ECHO_ORDERING;
+use std::sync::Arc;
+
+/// The executor command slot, shapes and orderings as in
+/// `scheduler/executor.rs`: `cmd` written by the producer only while
+/// `done == gen`, published by a Release `gen` bump; `report` written by
+/// the consumer before the `done` echo and taken by the producer after
+/// observing it.
+struct ModelSlot {
+    gen: AtomicU64,
+    done: AtomicU64,
+    cmd: RacyCell<Option<u64>>,
+    report: RacyCell<Option<u64>>,
+    poisoned: AtomicBool,
+    shutdown: AtomicBool,
+}
+
+// SAFETY: `cmd` and `report` are guarded by the gen/done publish→echo
+// protocol (the property the model checker verifies); everything else is
+// atomic.
+unsafe impl Sync for ModelSlot {}
+// SAFETY: all fields are Send.
+unsafe impl Send for ModelSlot {}
+
+impl ModelSlot {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            gen: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+            cmd: RacyCell::new(None),
+            report: RacyCell::new(None),
+            poisoned: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+}
+
+/// Happy path: `rounds` publish→step→echo round trips, then shutdown.
+/// Checks echo integrity (every report read back intact) and — under the
+/// model — that `cmd`/`report` accesses are fully synchronized.
+pub fn executor_slot_scenario(rounds: u64) -> Scenario {
+    let slot = ModelSlot::new();
+    let mut s = Scenario::new();
+    let p = slot.clone();
+    s.thread(move || {
+        // Producer: StreamExecutors::{submit, wait, take_report}.
+        for r in 1..=rounds {
+            // SAFETY: replica of submit — done == gen here (round r-1
+            // fully echoed), so the consumer is not touching the cell.
+            unsafe { *p.cmd.write() = Some(r) };
+            p.gen.fetch_add(1, Ordering::Release);
+            while p.done.load(Ordering::Acquire) != r {
+                spin_loop();
+            }
+            assert!(
+                !p.poisoned.load(Ordering::Acquire),
+                "unexpected poison in the happy path"
+            );
+            // SAFETY: replica of take_report — the echo was observed, so
+            // the consumer's report write happened-before this read.
+            let got = unsafe { (*p.report.read()).take() };
+            assert_eq!(got, Some(r * 2), "round {r}: echo lost or torn");
+        }
+        p.shutdown.store(true, Ordering::SeqCst);
+    });
+    let c = slot.clone();
+    s.thread(move || {
+        // Consumer: executor_loop, minus the condvar parking.
+        let mut seen = 0u64;
+        loop {
+            if c.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let g = c.gen.load(Ordering::Acquire);
+            if g == seen {
+                spin_loop();
+                continue;
+            }
+            // SAFETY: replica of the executor's cmd read — the slot for
+            // `g` was fully published before the Release bump this
+            // Acquire load observed.
+            let cmd = unsafe { (*c.cmd.read()).expect("a bumped gen has a published cmd") };
+            // SAFETY: the producer does not touch `report` until the
+            // echo below.
+            unsafe { *c.report.write() = Some(cmd * 2) };
+            seen = g;
+            c.done.store(g, DONE_ECHO_ORDERING);
+        }
+    });
+    let q = slot;
+    s.check(move || {
+        assert_eq!(
+            q.gen.load(Ordering::Relaxed),
+            rounds,
+            "every round was published"
+        );
+        assert_eq!(
+            q.done.load(Ordering::Relaxed),
+            rounds,
+            "every round was echoed"
+        );
+    });
+    s
+}
+
+/// Poison path: the consumer's command "panics" — it must still echo
+/// (or the producer's wait would hang forever), flagging `poisoned`
+/// instead of writing a report; the producer must observe the poison and
+/// never touch the report cell.
+pub fn executor_poison_scenario() -> Scenario {
+    let slot = ModelSlot::new();
+    let mut s = Scenario::new();
+    let p = slot.clone();
+    s.thread(move || {
+        // SAFETY: done == gen (nothing in flight); consumer not reading.
+        unsafe { *p.cmd.write() = Some(7) };
+        p.gen.fetch_add(1, Ordering::Release);
+        while p.done.load(Ordering::Acquire) != 1 {
+            spin_loop();
+        }
+        assert!(
+            p.poisoned.load(Ordering::Acquire),
+            "the poisoned round must be observed as poisoned"
+        );
+        // take_report would panic here; the report cell is never read.
+        p.shutdown.store(true, Ordering::SeqCst);
+    });
+    let c = slot;
+    s.thread(move || {
+        loop {
+            if c.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let g = c.gen.load(Ordering::Acquire);
+            if g == 0 {
+                spin_loop();
+                continue;
+            }
+            // The command "panicked": no report write, poison instead —
+            // but the echo still happens, so wait() cannot hang.
+            c.poisoned.store(true, Ordering::Release);
+            c.done.store(g, DONE_ECHO_ORDERING);
+            // Park until shutdown (the real loop would re-spin).
+            while !c.shutdown.load(Ordering::SeqCst) {
+                spin_loop();
+            }
+            return;
+        }
+    });
+    s
+}

@@ -1,0 +1,484 @@
+//! The virtual scheduler and the vector-clock race detector (compiled
+//! only under `--cfg cupso_model`).
+//!
+//! ## Serialization discipline
+//!
+//! Model threads are real OS threads, but at most one is ever *running*:
+//! every instrumented operation ([`atomic_access`], [`data_read`],
+//! [`data_write`], [`voluntary_yield`]) is a **rendezvous** — the thread
+//! parks as `Ready` and proceeds only when the controller grants it the
+//! turn. The controller (the exploring test thread) waits until every
+//! thread is parked, picks one `Ready` thread per the schedule under
+//! exploration, and grants exactly that thread one step (the granted
+//! operation plus the uninstrumented code up to its next rendezvous).
+//! Interleavings are therefore explored at atomic-op granularity, and a
+//! (schedule, scenario) pair replays deterministically — the property the
+//! DFS backtracker in [`super::Explorer`] relies on.
+//!
+//! ## Happens-before tracking
+//!
+//! Each thread carries a vector clock; each atomic location carries a
+//! *sync clock* standing for the release history readable through it:
+//!
+//! * store with Release ⇒ the location's sync clock becomes the storing
+//!   thread's clock (a new release-sequence head);
+//! * store without Release ⇒ the sync clock is cleared (the relaxed
+//!   store breaks the release sequence — this is exactly what the
+//!   `SpinLock::unlock` mutation test relies on);
+//! * RMW ⇒ joins its clock *into* the sync clock when it releases, and
+//!   leaves the sync clock intact otherwise (an RMW continues the
+//!   release sequence per C++11 §[intro.races]);
+//! * load/RMW with Acquire ⇒ the thread's clock joins the sync clock.
+//!
+//! [`RacyCell`](crate::exec::sync::RacyCell) accesses are checked against
+//! per-location read/write shadow clocks: an access unordered (by the
+//! tracked happens-before) with a prior conflicting access is reported as
+//! a data race. `SeqCst` contributes its acquire/release halves only
+//! (documented under-approximation, see `exec::sync` docs).
+
+use super::Race;
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Semantic shape of one atomic operation, resolved *after* the op ran
+/// (a failed CAS is a load at the failure ordering).
+pub(crate) enum AtomicAccess {
+    Load { acq: bool },
+    Store { rel: bool },
+    Rmw { acq: bool, rel: bool },
+}
+
+#[derive(Clone, Debug)]
+struct VClock(Vec<u64>);
+
+impl VClock {
+    fn new(n: usize) -> Self {
+        VClock(vec![0; n])
+    }
+
+    fn join(&mut self, other: &VClock) {
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a = (*a).max(*b);
+        }
+    }
+
+    fn get(&self, t: usize) -> u64 {
+        self.0[t]
+    }
+
+    fn set(&mut self, t: usize, v: u64) {
+        self.0[t] = v;
+    }
+
+    fn bump(&mut self, t: usize) {
+        self.0[t] += 1;
+    }
+}
+
+struct DataShadow {
+    reads: VClock,
+    writes: VClock,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Status {
+    /// Parked at a rendezvous, eligible for a grant.
+    Ready,
+    /// Granted and executing up to its next rendezvous.
+    Running,
+    Finished,
+}
+
+struct TState {
+    status: Status,
+    /// Set while parked by a voluntary yield (`spin_loop`): the spinner
+    /// made no progress, so the scheduler deprioritizes it.
+    yielded: bool,
+}
+
+struct ExecState {
+    threads: Vec<TState>,
+    granted: Option<usize>,
+    clocks: Vec<VClock>,
+    /// Per-atomic-location sync (release-history) clock.
+    atomics: HashMap<usize, VClock>,
+    /// Per-data-location access shadow.
+    data: HashMap<usize, DataShadow>,
+    races: Vec<Race>,
+    raced: HashSet<usize>,
+    panics: Vec<Box<dyn Any + Send>>,
+}
+
+pub(crate) struct Runtime {
+    state: Mutex<ExecState>,
+    /// Controller waits here for quiescence (everyone parked/finished).
+    ctrl_cv: Condvar,
+    /// Model threads wait here for their grant.
+    thread_cv: Condvar,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+#[derive(Clone)]
+struct Ctx {
+    rt: Arc<Runtime>,
+    id: usize,
+}
+
+fn current_ctx() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+impl Runtime {
+    fn new(n: usize) -> Self {
+        Runtime {
+            state: Mutex::new(ExecState {
+                threads: (0..n)
+                    .map(|_| TState {
+                        status: Status::Running,
+                        yielded: false,
+                    })
+                    .collect(),
+                granted: None,
+                clocks: (0..n).map(|_| VClock::new(n)).collect(),
+                atomics: HashMap::new(),
+                data: HashMap::new(),
+                races: Vec::new(),
+                raced: HashSet::new(),
+                panics: Vec::new(),
+            }),
+            ctrl_cv: Condvar::new(),
+            thread_cv: Condvar::new(),
+        }
+    }
+
+    /// Park as Ready and block until granted; returns with the state
+    /// lock held and this thread marked Running.
+    fn rendezvous(&self, id: usize, voluntary: bool) -> MutexGuard<'_, ExecState> {
+        let mut st = self.state.lock().unwrap();
+        st.threads[id].status = Status::Ready;
+        st.threads[id].yielded = voluntary;
+        self.ctrl_cv.notify_all();
+        while st.granted != Some(id) {
+            st = self.thread_cv.wait(st).unwrap();
+        }
+        st.granted = None;
+        st.threads[id].status = Status::Running;
+        st.threads[id].yielded = false;
+        st
+    }
+
+    fn finish_thread(&self, id: usize, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        st.threads[id].status = Status::Finished;
+        if let Some(p) = panic {
+            st.panics.push(p);
+        }
+        self.ctrl_cv.notify_all();
+    }
+}
+
+impl ExecState {
+    fn apply_atomic(&mut self, t: usize, addr: usize, access: AtomicAccess) {
+        let n = self.clocks.len();
+        let sync = self.atomics.entry(addr).or_insert_with(|| VClock::new(n));
+        let clock = &mut self.clocks[t];
+        match access {
+            AtomicAccess::Load { acq } => {
+                if acq {
+                    clock.join(sync);
+                }
+            }
+            AtomicAccess::Store { rel } => {
+                *sync = if rel { clock.clone() } else { VClock::new(n) };
+            }
+            AtomicAccess::Rmw { acq, rel } => {
+                if acq {
+                    clock.join(sync);
+                }
+                if rel {
+                    sync.join(clock);
+                }
+                // A non-releasing RMW leaves `sync` intact: it continues
+                // the release sequence it read from.
+            }
+        }
+        clock.bump(t);
+    }
+
+    fn apply_data(&mut self, t: usize, addr: usize, is_write: bool) {
+        let n = self.clocks.len();
+        let shadow = self.data.entry(addr).or_insert_with(|| DataShadow {
+            reads: VClock::new(n),
+            writes: VClock::new(n),
+        });
+        let clock = &self.clocks[t];
+        let mut conflict = None;
+        for u in 0..n {
+            if u == t {
+                continue;
+            }
+            if shadow.writes.get(u) > clock.get(u) {
+                conflict = Some((u, "write"));
+                break;
+            }
+            if is_write && shadow.reads.get(u) > clock.get(u) {
+                conflict = Some((u, "read"));
+                break;
+            }
+        }
+        if let Some((u, other)) = conflict {
+            if self.raced.insert(addr) {
+                let mine = if is_write { "write" } else { "read" };
+                self.races.push(Race {
+                    desc: format!(
+                        "data race at cell {addr:#x}: thread {t} {mine} is unordered \
+                         with thread {u} {other}"
+                    ),
+                });
+            }
+        }
+        let now = clock.get(t);
+        if is_write {
+            shadow.writes.set(t, now);
+        } else {
+            shadow.reads.set(t, now);
+        }
+        self.clocks[t].bump(t);
+    }
+}
+
+/// Instrumented atomic op: rendezvous, run `f` while serialized, apply
+/// its happens-before effect. Falls through to `f` outside explorations.
+pub(crate) fn atomic_access<R>(addr: usize, f: impl FnOnce() -> (R, AtomicAccess)) -> R {
+    match current_ctx() {
+        None => f().0,
+        Some(ctx) => {
+            let mut st = ctx.rt.rendezvous(ctx.id, false);
+            let (r, access) = f();
+            st.apply_atomic(ctx.id, addr, access);
+            r
+        }
+    }
+}
+
+/// Instrumented data-read event (no-op outside explorations).
+pub(crate) fn data_read(addr: usize) {
+    if let Some(ctx) = current_ctx() {
+        let mut st = ctx.rt.rendezvous(ctx.id, false);
+        st.apply_data(ctx.id, addr, false);
+    }
+}
+
+/// Instrumented data-write event (no-op outside explorations).
+pub(crate) fn data_write(addr: usize) {
+    if let Some(ctx) = current_ctx() {
+        let mut st = ctx.rt.rendezvous(ctx.id, false);
+        st.apply_data(ctx.id, addr, true);
+    }
+}
+
+/// Voluntary yield (`spin_loop`): a rendezvous that marks the thread as
+/// making no progress, so the scheduler runs someone else next.
+pub(crate) fn voluntary_yield() {
+    match current_ctx() {
+        None => std::hint::spin_loop(),
+        Some(ctx) => {
+            let _st = ctx.rt.rendezvous(ctx.id, true);
+        }
+    }
+}
+
+/// One decision the controller took: `taken` of `options` candidates.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Decision {
+    pub options: usize,
+    pub taken: usize,
+}
+
+/// How the controller picks at each decision point.
+pub(crate) enum Mode<'a> {
+    /// Replay `forced` choice indices, then first-option; record all
+    /// decisions for the DFS backtracker.
+    Dfs { forced: &'a [usize] },
+    /// Uniform choice from a deterministic PRNG stream.
+    Random {
+        rng: &'a mut dyn FnMut(usize) -> usize,
+    },
+}
+
+/// Knobs bounding one execution.
+pub(crate) struct ScheduleCfg {
+    /// Max preemptive switches (CHESS-style context bound).
+    pub preemptions: u32,
+    /// Decisions explored before falling back to fair round-robin (the
+    /// execution still runs to completion, but stops branching and is
+    /// reported as truncated).
+    pub decision_budget: u64,
+    /// Hard cap on fair-fallback grants; exceeding it means the scenario
+    /// itself livelocks under fair scheduling and the run panics.
+    pub fair_cap: u64,
+}
+
+pub(crate) struct ExecOutcome {
+    pub decisions: Vec<Decision>,
+    pub races: Vec<Race>,
+    pub truncated: bool,
+    pub panic: Option<Box<dyn Any + Send>>,
+}
+
+/// Run one scenario instance under one schedule to completion.
+pub(crate) fn run_schedule(
+    threads: Vec<Box<dyn FnOnce() + Send>>,
+    cfg: &ScheduleCfg,
+    mut mode: Mode<'_>,
+) -> ExecOutcome {
+    let n = threads.len();
+    let rt = Arc::new(Runtime::new(n));
+    let handles: Vec<_> = threads
+        .into_iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let rt2 = rt.clone();
+            std::thread::Builder::new()
+                .name(format!("cupso-model-{i}"))
+                .spawn(move || {
+                    CTX.with(|c| {
+                        *c.borrow_mut() = Some(Ctx {
+                            rt: rt2.clone(),
+                            id: i,
+                        })
+                    });
+                    // The opening rendezvous: a thread becomes Ready
+                    // before running any scenario code, so the very first
+                    // user operation is already schedule-controlled.
+                    drop(rt2.rendezvous(i, false));
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                    CTX.with(|c| *c.borrow_mut() = None);
+                    rt2.finish_thread(i, res.err());
+                })
+                .expect("spawn model thread")
+        })
+        .collect();
+
+    let mut decisions: Vec<Decision> = Vec::new();
+    let mut budget = cfg.preemptions;
+    let mut current: Option<usize> = None;
+    let mut truncated = false;
+    let mut fair_grants = 0u64;
+    {
+        let mut st = rt.state.lock().unwrap();
+        loop {
+            while st.granted.is_some() || st.threads.iter().any(|t| t.status == Status::Running) {
+                st = rt.ctrl_cv.wait(st).unwrap();
+            }
+            let ready: Vec<usize> = (0..n)
+                .filter(|&i| st.threads[i].status == Status::Ready)
+                .collect();
+            if ready.is_empty() {
+                break; // everyone finished
+            }
+            let pick = if truncated {
+                // Fair deterministic fallback: round-robin. Spinners make
+                // progress because whoever blocks them gets scheduled.
+                fair_grants += 1;
+                assert!(
+                    fair_grants <= cfg.fair_cap,
+                    "modelcheck: scenario did not terminate under fair scheduling \
+                     (livelocked threads?)"
+                );
+                let start = current.map_or(0, |c| c + 1);
+                (0..n)
+                    .map(|k| (start + k) % n)
+                    .find(|&i| st.threads[i].status == Status::Ready)
+                    .expect("some thread is ready")
+            } else {
+                let options = compute_options(&st, current, &ready, budget);
+                let taken = match &mut mode {
+                    Mode::Dfs { forced } => {
+                        let d = decisions.len();
+                        if d < forced.len() {
+                            forced[d].min(options.len() - 1)
+                        } else {
+                            0
+                        }
+                    }
+                    Mode::Random { rng } => rng(options.len()),
+                };
+                decisions.push(Decision {
+                    options: options.len(),
+                    taken,
+                });
+                let pick = options[taken];
+                let continuable = current.is_some_and(|c| {
+                    st.threads[c].status == Status::Ready && !st.threads[c].yielded
+                });
+                if continuable && Some(pick) != current {
+                    budget -= 1;
+                }
+                if decisions.len() as u64 >= cfg.decision_budget {
+                    truncated = true;
+                }
+                pick
+            };
+            current = Some(pick);
+            st.granted = Some(pick);
+            rt.thread_cv.notify_all();
+        }
+    }
+    for h in handles {
+        h.join().expect("model thread wrapper is panic-free");
+    }
+    let mut st = rt.state.lock().unwrap();
+    ExecOutcome {
+        decisions,
+        races: std::mem::take(&mut st.races),
+        truncated,
+        panic: st.panics.pop(),
+    }
+}
+
+/// Candidate threads at a decision point, deterministic order.
+///
+/// * Current thread Ready and not spinning: continuing it is free
+///   (options[0]); switching to any other non-spinning Ready thread is a
+///   preemption, offered only while budget remains.
+/// * Otherwise (current finished or yielded): switching is free and all
+///   non-spinning Ready threads are candidates; if *everyone* is
+///   spinning, fall back to a single round-robin choice so the execution
+///   keeps making progress instead of branching over symmetric spins.
+fn compute_options(
+    st: &ExecState,
+    current: Option<usize>,
+    ready: &[usize],
+    budget: u32,
+) -> Vec<usize> {
+    let non_yielded: Vec<usize> = ready
+        .iter()
+        .copied()
+        .filter(|&i| !st.threads[i].yielded)
+        .collect();
+    if let Some(c) = current {
+        if st.threads[c].status == Status::Ready && !st.threads[c].yielded {
+            let mut opts = vec![c];
+            if budget > 0 {
+                opts.extend(non_yielded.iter().copied().filter(|&i| i != c));
+            }
+            return opts;
+        }
+    }
+    if !non_yielded.is_empty() {
+        return non_yielded;
+    }
+    let start = current.map_or(0, |c| c + 1);
+    let n = st.threads.len();
+    let rr = (0..n)
+        .map(|k| (start + k) % n)
+        .find(|i| ready.contains(i))
+        .expect("ready is non-empty");
+    vec![rr]
+}

@@ -40,14 +40,27 @@
 //! allocations** (`rust/tests/zero_alloc.rs`).
 
 use crate::engine::{Run, StepReport};
-use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::exec::sync::{self, AtomicBool, AtomicU64, Ordering, RacyCell};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+/// Ordering of the executor's completion echo (`done.store(gen)`). The
+/// `Release` is what orders the report write before the producer's
+/// Acquire spin — `wait` then `take_report` lean on exactly this edge.
+/// The `cupso_mutate_executor_done` cfg weakens it to `Relaxed` so the
+/// modelcheck CI job can prove the race detector refutes the weakened
+/// protocol (the replica in [`crate::modelcheck::protocols`] shares this
+/// constant, so the mutation hits the real executor and the model
+/// scenario together).
+#[cfg(not(cupso_mutate_executor_done))]
+pub(crate) const DONE_ECHO_ORDERING: Ordering = Ordering::Release;
+#[cfg(cupso_mutate_executor_done)]
+pub(crate) const DONE_ECHO_ORDERING: Ordering = Ordering::Relaxed;
+
 /// Spin budget before parking when cores are plentiful (matches the
-/// pool's discipline).
-const SPIN_ROUNDS_PARALLEL: u32 = 20_000;
+/// pool's discipline). Collapses under Miri, where spinning is
+/// interpreted instruction-by-instruction.
+const SPIN_ROUNDS_PARALLEL: u32 = if cfg!(miri) { 4 } else { 20_000 };
 /// Effectively "yield immediately" when the machine is oversubscribed.
 const SPIN_ROUNDS_OVERSUB: u32 = 16;
 
@@ -84,10 +97,10 @@ struct Slot {
     /// (Release) after moving the report out.
     done: AtomicU64,
     /// Written by the producer only while `done == gen`.
-    cmd: UnsafeCell<Option<Cmd>>,
+    cmd: RacyCell<Option<Cmd>>,
     /// The stepped report, written by the executor before the echo and
     /// taken by the producer after it.
-    report: UnsafeCell<Option<StepReport>>,
+    report: RacyCell<Option<StepReport>>,
     /// Set when a command panicked: the echo still arrives (so `wait`
     /// cannot hang), and `take_report` re-raises on the scheduling
     /// thread — matching the legacy scoped-thread `join().expect(…)`
@@ -119,8 +132,8 @@ impl StreamExecutors {
                 Arc::new(Slot {
                     gen: AtomicU64::new(0),
                     done: AtomicU64::new(0),
-                    cmd: UnsafeCell::new(None),
-                    report: UnsafeCell::new(None),
+                    cmd: RacyCell::new(None),
+                    report: RacyCell::new(None),
                     poisoned: AtomicBool::new(false),
                     shutdown: AtomicBool::new(false),
                     idle: Mutex::new(()),
@@ -163,14 +176,16 @@ impl StreamExecutors {
             slot.gen.load(Ordering::SeqCst),
             "submit while a command is still in flight"
         );
-        // Erase the run's borrow lifetime: sound because wait(e) happens
-        // before the borrow ends (the safety contract above).
         let ptr: *mut (dyn Run + '_) = run;
-        let run: *mut (dyn Run + 'static) =
-            std::mem::transmute::<*mut (dyn Run + '_), *mut (dyn Run + 'static)>(ptr);
-        // Slot write is safe per the handoff protocol: `done == gen`
+        // SAFETY: erasing the run's borrow lifetime is sound because
+        // wait(e) happens before the borrow ends (the safety contract
+        // above), and the executor only dereferences inside that window.
+        let run: *mut (dyn Run + 'static) = unsafe {
+            std::mem::transmute::<*mut (dyn Run + '_), *mut (dyn Run + 'static)>(ptr)
+        };
+        // SAFETY: slot write per the handoff protocol — `done == gen`
         // (asserted above), so the executor is not reading the cell.
-        *slot.cmd.get() = Some(Cmd { run, k });
+        unsafe { *slot.cmd.write() = Some(Cmd { run, k }) };
         slot.gen.fetch_add(1, Ordering::Release);
         let _idle = slot.idle.lock().unwrap();
         slot.cv.notify_one();
@@ -184,7 +199,7 @@ impl StreamExecutors {
         while slot.done.load(Ordering::Acquire) != target {
             spins += 1;
             if spins < slot.spin_rounds {
-                std::hint::spin_loop();
+                sync::spin_loop();
             } else {
                 std::thread::yield_now();
             }
@@ -206,7 +221,7 @@ impl StreamExecutors {
         // SAFETY: the echo ordered the executor's write before this read,
         // and the executor will not touch the cell again until the next
         // submit.
-        unsafe { (*slot.report.get()).take() }.expect("executor echoed without a report")
+        unsafe { (*slot.report.read()).take() }.expect("executor echoed without a report")
     }
 }
 
@@ -245,7 +260,7 @@ fn executor_loop(slot: &Slot) {
                 }
                 break;
             }
-            std::hint::spin_loop();
+            sync::spin_loop();
         }
         if slot.shutdown.load(Ordering::SeqCst) {
             return;
@@ -254,7 +269,7 @@ fn executor_loop(slot: &Slot) {
         // SAFETY: the slot for `g` was fully published before the Release
         // bump this Acquire load observed, and the producer cannot
         // rewrite it until we echo `done = g`.
-        if let Some(cmd) = unsafe { *slot.cmd.get() } {
+        if let Some(cmd) = unsafe { *slot.cmd.read() } {
             // A panicking step must still echo, or the producer's `wait`
             // would spin forever; the poison flag re-raises the panic on
             // the scheduling thread at `take_report`.
@@ -265,12 +280,14 @@ fn executor_loop(slot: &Slot) {
                 run.step_many(cmd.k)
             }));
             match stepped {
-                Ok(report) => unsafe { *slot.report.get() = Some(report) },
+                // SAFETY: the producer does not touch `report` until it
+                // observes the echo below.
+                Ok(report) => unsafe { *slot.report.write() = Some(report) },
                 Err(_) => slot.poisoned.store(true, Ordering::Release),
             }
         }
         seen = g;
-        slot.done.store(g, Ordering::Release);
+        slot.done.store(g, DONE_ECHO_ORDERING);
     }
 }
 

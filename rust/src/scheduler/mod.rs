@@ -83,7 +83,7 @@
 //!
 //! [`RunCheckpoint`]: crate::checkpoint::RunCheckpoint
 
-mod executor;
+pub(crate) mod executor;
 mod session;
 
 pub use session::{JobView, Session};

@@ -109,7 +109,9 @@ struct SlotJob {
 /// module's no-reassignment invariant uphold this for every use here.
 unsafe fn erased_fitness(spec: &JobSpec) -> &'static dyn Fitness {
     let fitness: &dyn Fitness = &*spec.fitness;
-    std::mem::transmute::<&dyn Fitness, &'static dyn Fitness>(fitness)
+    // SAFETY: lifetime extension per this function's contract (the Arc
+    // outlives every artifact of the returned reference).
+    unsafe { std::mem::transmute::<&dyn Fitness, &'static dyn Fitness>(fitness) }
 }
 
 /// Read-only view of one occupied slot (the service's `status` rows).

@@ -1,0 +1,50 @@
+#!/usr/bin/env bash
+# Audit every `unsafe` site in rust/src for an adjacent justification.
+#
+# Policy (enforced in the CI lint job):
+#   * every line containing the token `unsafe` must have a `// SAFETY:`
+#     comment (or a `/// # Safety` contract doc for `unsafe fn`
+#     declarations) within the WINDOW lines above it, on it, or — for
+#     `unsafe fn` with the doc contract — anywhere in its doc block;
+#   * `#![deny(unsafe_op_in_unsafe_fn)]` (lib.rs) makes every unsafe
+#     *operation* inside an `unsafe fn` need its own block, so this
+#     check covers operations, not just function boundaries.
+#
+# Output: a per-file inventory of unsafe sites, then a non-zero exit if
+# any site lacks a justification.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+SRC=rust/src
+WINDOW=6
+
+fail=0
+total=0
+
+echo "== unsafe inventory ($SRC) =="
+for f in $(grep -rl --include='*.rs' 'unsafe' "$SRC" | sort); do
+    count=$(grep -c 'unsafe' "$f" || true)
+    printf '%4d  %s\n' "$count" "$f"
+    total=$((total + count))
+done
+echo "------"
+printf '%4d  total `unsafe` tokens\n\n' "$total"
+
+# Check each unsafe site for an adjacent SAFETY justification.
+while IFS=: read -r file line _; do
+    start=$((line - WINDOW))
+    [ "$start" -lt 1 ] && start=1
+    context=$(sed -n "${start},${line}p" "$file")
+    if ! printf '%s\n' "$context" | grep -qiE '(//+ *SAFETY:|//[/!]+ *# Safety)'; then
+        echo "MISSING SAFETY comment: $file:$line"
+        sed -n "${line}p" "$file" | sed 's/^/    /'
+        fail=1
+    fi
+done < <(grep -rn --include='*.rs' 'unsafe' "$SRC" | grep -vE '^\S+:[0-9]+: *(//|//!|///)([^/]|$)')
+
+if [ "$fail" -ne 0 ]; then
+    echo
+    echo "unsafe_audit: FAIL — add a '// SAFETY:' (ops/impls) or '/// # Safety' (fn contracts) justification next to each site."
+    exit 1
+fi
+echo "unsafe_audit: OK — every unsafe site carries a justification."
