@@ -136,8 +136,9 @@ impl Explorer {
         self
     }
 
-    /// Scheduling decisions explored per execution before the fair
-    /// fallback finishes it deterministically.
+    /// Branch points (scheduling decisions with ≥ 2 candidates) explored
+    /// per execution before the fair fallback finishes it
+    /// deterministically; forced moves don't count against it.
     pub fn decision_budget(mut self, d: u64) -> Self {
         self.decision_budget = d;
         self

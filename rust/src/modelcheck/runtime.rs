@@ -242,13 +242,21 @@ impl ExecState {
                 });
             }
         }
-        let now = clock.get(t);
+        // Record the access at a *post-bump* epoch: shadow entry 0 means
+        // "never accessed", so a thread's first instrumented access must
+        // record epoch 1, not 0 — the strict `>` checks above could
+        // otherwise never fire against it (silent false negatives on any
+        // race whose first side is a thread's first op). A release store
+        // that follows publishes this post-bump clock (`apply_atomic`
+        // clones before its own bump), so the epoch recorded here is
+        // covered by the release and acquirers see the access as ordered.
+        self.clocks[t].bump(t);
+        let now = self.clocks[t].get(t);
         if is_write {
             shadow.writes.set(t, now);
         } else {
             shadow.reads.set(t, now);
         }
-        self.clocks[t].bump(t);
     }
 }
 
@@ -315,9 +323,11 @@ pub(crate) enum Mode<'a> {
 pub(crate) struct ScheduleCfg {
     /// Max preemptive switches (CHESS-style context bound).
     pub preemptions: u32,
-    /// Decisions explored before falling back to fair round-robin (the
-    /// execution still runs to completion, but stops branching and is
-    /// reported as truncated).
+    /// Branch points (decision points with ≥ 2 candidates) explored
+    /// before falling back to fair round-robin (the execution still runs
+    /// to completion, but stops branching and is reported as truncated).
+    /// Forced moves — a lone Ready thread, spin echo rounds — cost
+    /// nothing, so the budget measures real exploration depth.
     pub decision_budget: u64,
     /// Hard cap on fair-fallback grants; exceeding it means the scenario
     /// itself livelocks under fair scheduling and the run panics.
@@ -366,6 +376,7 @@ pub(crate) fn run_schedule(
         .collect();
 
     let mut decisions: Vec<Decision> = Vec::new();
+    let mut branch_decisions = 0u64;
     let mut budget = cfg.preemptions;
     let mut current: Option<usize> = None;
     let mut truncated = false;
@@ -420,7 +431,18 @@ pub(crate) fn run_schedule(
                 if continuable && Some(pick) != current {
                     budget -= 1;
                 }
-                if decisions.len() as u64 >= cfg.decision_budget {
+                // Only branch points count against the budget: forced
+                // moves (single candidate) don't shrink the explored
+                // depth. Total grants stay bounded regardless — a
+                // scenario spinning through forced moves forever is
+                // handed to the fair fallback at `fair_cap` grants,
+                // whose own cap turns livelock into a loud panic.
+                if options.len() > 1 {
+                    branch_decisions += 1;
+                }
+                if branch_decisions >= cfg.decision_budget
+                    || decisions.len() as u64 >= cfg.fair_cap
+                {
                     truncated = true;
                 }
                 pick

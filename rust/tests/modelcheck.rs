@@ -54,6 +54,7 @@ fn spinlock_mutual_exclusion_and_release_visibility() {
         report.races
     );
     assert!(report.schedules > 0);
+    assert_eq!(report.truncated, 0, "exploration silently lost depth");
 }
 
 /// `fetch_max` linearizes: whatever the interleaving of three racing
@@ -77,6 +78,7 @@ fn atomic_f64_fetch_max_linearizes_to_global_max() {
         s
     });
     assert!(report.race_free(), "{:?}", report.races);
+    assert_eq!(report.truncated, 0, "exploration silently lost depth");
 }
 
 /// `fetch_min` mirror of the above (the Minimize objective sense).
@@ -96,6 +98,7 @@ fn atomic_f64_fetch_min_linearizes_to_global_min() {
         s
     });
     assert!(report.race_free(), "{:?}", report.races);
+    assert_eq!(report.truncated, 0, "exploration silently lost depth");
 }
 
 /// No lost push, no duplicate slot: concurrent pushers end up with
@@ -126,6 +129,7 @@ fn queue_concurrent_pushes_keep_unique_slots() {
         s
     });
     assert!(report.race_free(), "{:?}", report.races);
+    assert_eq!(report.truncated, 0, "exploration silently lost depth");
 }
 
 /// Overflow discipline: on a capacity-2 queue, exactly two of four
@@ -158,6 +162,7 @@ fn queue_overflow_exactly_capacity_pushes_win() {
         s
     });
     assert!(report.race_free(), "{:?}", report.races);
+    assert_eq!(report.truncated, 0, "exploration silently lost depth");
 }
 
 /// Pushes racing a reset: the *counter* invariant (cursor stays within
@@ -194,6 +199,7 @@ fn queue_reset_race_never_corrupts_cursor() {
     // The cursor invariant held on every explored schedule (the asserts
     // above) even though the cells race by design here.
     assert!(report.schedules > 0);
+    assert_eq!(report.truncated, 0, "exploration silently lost depth");
 }
 
 /// The executor slot's publish→echo protocol over two full rounds plus
@@ -209,6 +215,7 @@ fn executor_slot_publish_echo_rounds_and_shutdown() {
         report.races
     );
     assert!(report.schedules > 0);
+    assert_eq!(report.truncated, 0, "exploration silently lost depth");
 }
 
 /// The poison path: a panicking command still echoes (so `wait` cannot
@@ -218,6 +225,7 @@ fn executor_slot_publish_echo_rounds_and_shutdown() {
 fn executor_slot_poison_path_echoes_without_report() {
     let report = Explorer::new().explore(protocols::executor_poison_scenario);
     assert!(report.race_free(), "{:?}", report.races);
+    assert_eq!(report.truncated, 0, "exploration silently lost depth");
 }
 
 /// Sanity for the harness itself: the detector must actually *find* a

@@ -2,10 +2,15 @@
 # Audit every `unsafe` site in rust/src for an adjacent justification.
 #
 # Policy (enforced in the CI lint job):
-#   * every line containing the token `unsafe` must have a `// SAFETY:`
-#     comment (or a `/// # Safety` contract doc for `unsafe fn`
-#     declarations) within the WINDOW lines above it, on it, or — for
-#     `unsafe fn` with the doc contract — anywhere in its doc block;
+#   * an audit site is a non-comment, non-attribute code line containing
+#     the `unsafe` keyword as a whole word (`grep -w`) — identifiers and
+#     attribute arguments such as the crate-root
+#     `#![deny(unsafe_op_in_unsafe_fn)]` lint are not sites, and neither
+#     is comment prose mentioning unsafety;
+#   * every site must have a `// SAFETY:` comment (or a `/// # Safety`
+#     contract doc for `unsafe fn` declarations) within the WINDOW lines
+#     above it, on it, or — for `unsafe fn` with the doc contract —
+#     anywhere in its doc block;
 #   * `#![deny(unsafe_op_in_unsafe_fn)]` (lib.rs) makes every unsafe
 #     *operation* inside an `unsafe fn` need its own block, so this
 #     check covers operations, not just function boundaries.
@@ -18,20 +23,30 @@ cd "$(dirname "$0")/.."
 SRC=rust/src
 WINDOW=6
 
-fail=0
-total=0
+# Audit sites: the `unsafe` keyword as a whole word (underscored
+# identifiers don't match `-w`), skipping comment-only lines and
+# attribute lines (`#[...]` / `#![...]`).
+SITES=$(
+    grep -rnw --include='*.rs' 'unsafe' "$SRC" \
+        | grep -vE '^[^:]+:[0-9]+:[[:space:]]*//' \
+        | grep -vE '^[^:]+:[0-9]+:[[:space:]]*#!?\[' \
+        | sort -t: -k1,1 -k2,2n || true
+)
 
 echo "== unsafe inventory ($SRC) =="
-for f in $(grep -rl --include='*.rs' 'unsafe' "$SRC" | sort); do
-    count=$(grep -c 'unsafe' "$f" || true)
-    printf '%4d  %s\n' "$count" "$f"
+total=0
+while read -r count file; do
+    [ -z "$file" ] && continue
+    printf '%4d  %s\n' "$count" "$file"
     total=$((total + count))
-done
+done < <(printf '%s\n' "$SITES" | cut -d: -f1 | uniq -c | awk 'NF {print $1, $2}')
 echo "------"
-printf '%4d  total `unsafe` tokens\n\n' "$total"
+printf '%4d  total `unsafe` keyword sites\n\n' "$total"
 
+fail=0
 # Check each unsafe site for an adjacent SAFETY justification.
 while IFS=: read -r file line _; do
+    [ -z "$file" ] && continue
     start=$((line - WINDOW))
     [ "$start" -lt 1 ] && start=1
     context=$(sed -n "${start},${line}p" "$file")
@@ -40,7 +55,7 @@ while IFS=: read -r file line _; do
         sed -n "${line}p" "$file" | sed 's/^/    /'
         fail=1
     fi
-done < <(grep -rn --include='*.rs' 'unsafe' "$SRC" | grep -vE '^\S+:[0-9]+: *(//|//!|///)([^/]|$)')
+done <<< "$SITES"
 
 if [ "$fail" -ne 0 ]; then
     echo
