@@ -149,6 +149,8 @@ pub fn write_snapshot(
          pack = {}\n\
          pack_min = {}\n\
          pack_max = {}\n\
+         quota_jobs = {}\n\
+         quota_steps = {}\n\
          keep = {}\n\
          jobs = {}\n",
         dir.display(),
@@ -162,6 +164,8 @@ pub fn write_snapshot(
         cfg.pack,
         cfg.pack_min,
         cfg.pack_max,
+        cfg.quota_jobs,
+        cfg.quota_steps,
         keep,
         snap.len()
     );
@@ -242,6 +246,27 @@ pub fn read_snapshot(dir: &Path) -> Result<(BatchConfig, usize, Vec<JobCheckpoin
                     bail!("manifest: pack_max = {n} out of range");
                 }
                 n as usize
+            }
+            None => 0,
+        },
+        // Optional for compatibility with pre-quota snapshots.
+        quota_jobs: match doc.get("quota_jobs") {
+            Some(v) => {
+                let n = v.as_int("quota_jobs")?;
+                if !(0..=1_000_000).contains(&n) {
+                    bail!("manifest: quota_jobs = {n} out of range");
+                }
+                n as usize
+            }
+            None => 0,
+        },
+        quota_steps: match doc.get("quota_steps") {
+            Some(v) => {
+                let n = v.as_int("quota_steps")?;
+                if n < 0 {
+                    bail!("manifest: quota_steps = {n} out of range");
+                }
+                n as u64
             }
             None => 0,
         },

@@ -287,6 +287,9 @@ pub struct JobConfig {
     pub max_steps: Option<u64>,
     /// EDF deadline in scheduler steps.
     pub deadline: Option<u64>,
+    /// Owning tenant for service quotas and weighted-fair scheduling;
+    /// `None` = the anonymous tenant.
+    pub tenant: Option<String>,
 }
 
 impl JobConfig {
@@ -308,6 +311,7 @@ impl JobConfig {
             stall_window: None,
             max_steps: None,
             deadline: None,
+            tenant: None,
         }
     }
 
@@ -345,6 +349,9 @@ impl JobConfig {
         if self.max_steps == Some(0) {
             bail!("job {}: max_steps must be > 0", self.name);
         }
+        if self.tenant.as_deref() == Some("") {
+            bail!("job {}: tenant must be a non-empty string", self.name);
+        }
         Ok(())
     }
 }
@@ -355,7 +362,7 @@ impl JobConfig {
 pub struct BatchConfig {
     /// Worker threads for the one shared pool (0 = machine default).
     pub workers: usize,
-    /// Stepping policy name (`round-robin` | `edf`).
+    /// Stepping policy name (`round-robin` | `edf` | `weighted-fair`).
     pub policy: String,
     /// Concurrent pool streams: up to this many jobs step in parallel
     /// per scheduling round (1 = the serialized scheduler).
@@ -375,6 +382,12 @@ pub struct BatchConfig {
     pub pack_min: usize,
     /// Largest pack formed (0 = unbounded).
     pub pack_max: usize,
+    /// Service admission quota: max concurrently live jobs per tenant
+    /// (0 = unlimited). Enforced by `ServiceSession` at `submit` time.
+    pub quota_jobs: usize,
+    /// Service admission quota: max outstanding iteration budget per
+    /// tenant, summed over its live jobs (0 = unlimited).
+    pub quota_steps: u64,
     /// The jobs, in file order.
     pub jobs: Vec<JobConfig>,
 }
@@ -426,6 +439,8 @@ impl BatchConfig {
             pack: false,
             pack_min: 2,
             pack_max: 0,
+            quota_jobs: 0,
+            quota_steps: 0,
             jobs: Vec::new(),
         };
         // Materialize a job per `[jobs.<name>]` section header first, so a
@@ -485,6 +500,7 @@ impl BatchConfig {
                     "stall_window" => job.stall_window = Some(as_uint(&value, &ctx)?),
                     "max_steps" => job.max_steps = Some(as_uint(&value, &ctx)?),
                     "deadline" => job.deadline = Some(as_uint(&value, &ctx)?),
+                    "tenant" => job.tenant = Some(value.as_str(&ctx)?.to_string()),
                     other => bail!("jobs.{name}: unknown field {other:?}"),
                 }
             } else {
@@ -507,6 +523,8 @@ impl BatchConfig {
                     "pack" => cfg.pack = value.as_bool(&key)?,
                     "pack_min" => cfg.pack_min = as_uint(&value, &key)? as usize,
                     "pack_max" => cfg.pack_max = as_uint(&value, &key)? as usize,
+                    "quota_jobs" => cfg.quota_jobs = as_uint(&value, &key)? as usize,
+                    "quota_steps" => cfg.quota_steps = as_uint(&value, &key)?,
                     other => bail!("unknown batch key {other:?} (in {key:?})"),
                 }
             }
@@ -531,7 +549,7 @@ impl BatchConfig {
     /// intake paths.
     fn validate_allowing_no_jobs(&self) -> Result<()> {
         if crate::scheduler::SchedPolicy::parse(&self.policy).is_none() {
-            bail!("bad policy {:?} (round-robin|edf)", self.policy);
+            bail!("bad policy {:?} (round-robin|edf|weighted-fair)", self.policy);
         }
         if self.streams == 0 {
             bail!("streams must be >= 1");
@@ -762,6 +780,38 @@ mod tests {
         std::fs::write(&path, "[scheduler]\nstreams = 0\n").unwrap();
         assert!(BatchConfig::from_file_for_service(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_config_parses_tenants_and_quota_knobs() {
+        let cfg = BatchConfig::from_toml_str(
+            r#"
+            [scheduler]
+            policy = "weighted-fair"
+            quota_jobs = 4
+            quota_steps = 100_000
+
+            [jobs.a]
+            seed = 1
+            tenant = "team-a"
+            [jobs.b]
+            seed = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.policy, "weighted-fair");
+        assert_eq!(cfg.quota_jobs, 4);
+        assert_eq!(cfg.quota_steps, 100_000);
+        assert_eq!(cfg.jobs[0].tenant.as_deref(), Some("team-a"));
+        assert_eq!(cfg.jobs[1].tenant, None, "tenant defaults to anonymous");
+        // Defaults: quotas off.
+        let plain = BatchConfig::from_toml_str("[jobs.x]\nseed = 1").unwrap();
+        assert_eq!(plain.quota_jobs, 0);
+        assert_eq!(plain.quota_steps, 0);
+        // Out-of-range values are load-time errors.
+        assert!(BatchConfig::from_toml_str("quota_jobs = -1\n[jobs.x]\nseed = 1").is_err());
+        assert!(BatchConfig::from_toml_str("[jobs.x]\ntenant = \"\"").is_err(), "empty tenant");
+        assert!(BatchConfig::from_toml_str("[jobs.x]\ntenant = 3").is_err(), "not a string");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //!             (optionally checkpointing every job into --checkpoint-dir)
 //!   resume    continue a suspended/checkpointed batch from its directory
 //!   serve     run the scheduler as a live job-service daemon on a Unix
-//!             socket (dynamic admission / cancellation / drain)
+//!             socket and/or TCP (dynamic admission / cancellation / drain)
 //!   submit    submit job(s) to a running service
 //!   status    show a running service's live jobs and finished results
 //!   cancel    cancel a live job on a running service
@@ -278,7 +278,7 @@ fn apply_scheduler_overrides(cfg: &mut BatchConfig, args: &Args) -> Result<()> {
 /// Build a scheduler from batch-config knobs.
 fn scheduler_from_knobs(cfg: &BatchConfig) -> Result<(JobScheduler, SchedPolicy)> {
     let policy = SchedPolicy::parse(&cfg.policy)
-        .with_context(|| format!("bad policy {:?} (round-robin|edf)", cfg.policy))?;
+        .with_context(|| format!("bad policy {:?} (round-robin|edf|weighted-fair)", cfg.policy))?;
     let scheduler = JobScheduler::new(ParallelSettings::with_streams(cfg.workers, cfg.streams))
         .policy(policy)
         .batch_steps(cfg.batch_steps)
@@ -293,7 +293,7 @@ fn cmd_batch(rest: &[String]) -> Result<()> {
     let spec = Command::new("batch", "run a multi-job TOML on one shared pool")
         .opt("config", "multi-job TOML file", Some("config/batch_demo.toml"))
         .opt("workers", "worker threads (0 = all cores; overrides the file)", None)
-        .opt("policy", "round-robin|edf (overrides the file)", None)
+        .opt("policy", "round-robin|edf|weighted-fair (overrides the file)", None)
         .opt("streams", "concurrent pool streams (overrides the file)", None)
         .opt("batch-steps", "iterations per job per round (overrides the file)", None)
         .opt(
@@ -574,19 +574,26 @@ fn print_batch_results(
 
 // --------------------------------------------------------------------
 // The service verbs: serve (daemon) + submit/status/cancel/drain
-// (clients of the line-JSON Unix-socket protocol; see service/proto.rs).
+// (clients of the line-JSON protocol over a Unix socket or TCP; see
+// service/proto.rs and service/server.rs).
 // --------------------------------------------------------------------
 
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let spec = Command::new("serve", "run the scheduler as a live job-service daemon")
-        .opt("socket", "Unix socket path to listen on (required)", None)
+        .opt("socket", "Unix socket path to listen on", None)
+        .opt("listen", "TCP host:port to listen on (combinable with --socket)", None)
+        .opt(
+            "max-conns",
+            "concurrent client connection cap; excess clients are shed loudly",
+            None,
+        )
         .opt(
             "config",
             "batch TOML seeding the scheduler knobs and initial jobs",
             None,
         )
         .opt("workers", "worker threads (0 = all cores; overrides the file)", None)
-        .opt("policy", "round-robin|edf (overrides the file)", None)
+        .opt("policy", "round-robin|edf|weighted-fair (overrides the file)", None)
         .opt("streams", "concurrent pool streams (overrides the file)", None)
         .opt("batch-steps", "iterations per job per round (overrides the file)", None)
         .opt(
@@ -598,6 +605,16 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("pack-min", "smallest group worth packing (>= 2; overrides the file)", None)
         .opt("pack-max", "largest pack formed (0 = unbounded; overrides the file)", None)
         .opt(
+            "quota-jobs",
+            "per-tenant concurrent-job cap; 0 = unlimited (overrides the file)",
+            None,
+        )
+        .opt(
+            "quota-steps",
+            "per-tenant live iteration-budget cap; 0 = unlimited (overrides the file)",
+            None,
+        )
+        .opt(
             "checkpoint-dir",
             "where `cupso drain` snapshots live jobs (enables `cupso resume`)",
             None,
@@ -608,10 +625,26 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         return Ok(());
     }
     let args = spec.parse(rest)?;
-    let socket = PathBuf::from(
-        args.get("socket")
-            .context("--socket is required (e.g. --socket /tmp/cupso.sock)")?,
-    );
+    let socket = args.get("socket").map(PathBuf::from);
+    let listen = args.get("listen").map(str::to_string);
+    if socket.is_none() && listen.is_none() {
+        bail!(
+            "--socket <path> and/or --listen <host:port> is required \
+             (e.g. --socket /tmp/cupso.sock)"
+        );
+    }
+    let max_conns: usize = match args.get("max-conns") {
+        Some(v) => {
+            let n = v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--max-conns {v:?}: {e}"))?;
+            if n == 0 {
+                bail!("--max-conns must be >= 1");
+            }
+            n
+        }
+        None => cupso::service::DEFAULT_MAX_CONNS,
+    };
     let mut cfg = match args.get("config") {
         // Service configs may be scheduler-knobs-only: every job can
         // arrive live through `cupso submit`.
@@ -625,10 +658,22 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             pack: false,
             pack_min: 2,
             pack_max: 0,
+            quota_jobs: 0,
+            quota_steps: 0,
             jobs: Vec::new(),
         },
     };
     apply_scheduler_overrides(&mut cfg, &args)?;
+    if let Some(v) = args.get("quota-jobs") {
+        cfg.quota_jobs = v
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--quota-jobs {v:?}: {e}"))?;
+    }
+    if let Some(v) = args.get("quota-steps") {
+        cfg.quota_steps = v
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--quota-steps {v:?}: {e}"))?;
+    }
     let initial: Vec<JobSpec> = cfg
         .jobs
         .iter()
@@ -643,15 +688,34 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 
     let (service, handle) =
         ServiceSession::new(&scheduler, knobs, ckpt_dir.clone(), initial)?;
-    let listener = cupso::service::bind(&socket)?;
-    let _accept = cupso::service::spawn_server(listener, handle);
+    let mut listeners = Vec::new();
+    let mut endpoints = Vec::new();
+    if let Some(path) = &socket {
+        listeners.push(cupso::service::Listener::Unix(cupso::service::bind(path)?));
+        endpoints.push(path.display().to_string());
+    }
+    if let Some(addr) = &listen {
+        listeners.push(cupso::service::Listener::Tcp(cupso::service::bind_tcp(addr)?));
+        endpoints.push(format!("tcp {addr}"));
+    }
+    let _accept = cupso::service::spawn_server_on(listeners, handle, max_conns);
     println!(
-        "cupso serve: listening on {} — {} initial jobs, {} policy, {} streams, {} steps/round{}{}",
-        socket.display(),
+        "cupso serve: listening on {} — {} initial jobs, {} policy, {} streams, {} steps/round, \
+         {} conns max{}{}{}",
+        endpoints.join(" + "),
         cfg.jobs.len(),
         policy,
         scheduler.streams(),
         cfg.batch_steps,
+        max_conns,
+        if cfg.quota_jobs > 0 || cfg.quota_steps > 0 {
+            format!(
+                ", tenant quotas {} jobs / {} steps",
+                cfg.quota_jobs, cfg.quota_steps
+            )
+        } else {
+            String::new()
+        },
         if cfg.preempt_quantum > 0 {
             format!(", preemption quantum {}", cfg.preempt_quantum)
         } else {
@@ -662,7 +726,16 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             None => ", no drain dir (drain of live jobs refused)".to_string(),
         }
     );
-    println!("  submit with `cupso submit --socket {} --name my-job ...`", socket.display());
+    match (&socket, &listen) {
+        (Some(path), _) => println!(
+            "  submit with `cupso submit --socket {} --name my-job ...`",
+            path.display()
+        ),
+        (None, Some(addr)) => {
+            println!("  submit with `cupso submit --connect {addr} --name my-job ...`")
+        }
+        (None, None) => unreachable!("at least one endpoint is required above"),
+    }
 
     let trace = args.flag("trace");
     let end = service.run_with(|r| {
@@ -672,7 +745,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     })?;
     // Best-effort socket cleanup: a stale file is also handled at the
     // next bind, but leaving none behind is tidier.
-    let _ = std::fs::remove_file(&socket);
+    if let Some(path) = &socket {
+        let _ = std::fs::remove_file(path);
+    }
     print_service_results(&end);
     Ok(())
 }
@@ -708,22 +783,47 @@ fn print_service_results(end: &ServiceEnd) {
     }
 }
 
+/// Where a client verb reaches the daemon: the two transports speak
+/// the identical line-JSON protocol, so everything past connect() is
+/// shared.
+enum ServiceAddr {
+    Unix(PathBuf),
+    Tcp(String),
+}
+
+/// `--socket <path>` or `--connect <host:port>` — exactly one.
+fn service_addr(args: &Args) -> Result<ServiceAddr> {
+    match (args.get("socket"), args.get("connect")) {
+        (Some(_), Some(_)) => {
+            bail!("pass either --socket <path> or --connect <host:port>, not both")
+        }
+        (Some(path), None) => Ok(ServiceAddr::Unix(PathBuf::from(path))),
+        (None, Some(addr)) => Ok(ServiceAddr::Tcp(addr.to_string())),
+        (None, None) => bail!("--socket <path> or --connect <host:port> is required"),
+    }
+}
+
 /// Send one request line to a running service and parse its response,
 /// failing loudly on transport problems or an `"ok": false` reply.
-fn service_roundtrip(socket: &Path, request: &Request) -> Result<Json> {
-    use std::io::{BufRead, BufReader, Write};
-    let stream = std::os::unix::net::UnixStream::connect(socket).with_context(|| {
-        format!(
-            "connecting to {} (is `cupso serve` running there?)",
-            socket.display()
-        )
-    })?;
-    let mut writer = stream.try_clone().context("cloning socket")?;
-    writeln!(writer, "{}", request.render()).context("sending request")?;
-    writer.flush().context("flushing request")?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line).context("reading response")?;
+fn service_roundtrip(addr: &ServiceAddr, request: &Request) -> Result<Json> {
+    let line = match addr {
+        ServiceAddr::Unix(path) => {
+            let stream = std::os::unix::net::UnixStream::connect(path).with_context(|| {
+                format!(
+                    "connecting to {} (is `cupso serve` running there?)",
+                    path.display()
+                )
+            })?;
+            exchange_line(stream, request)?
+        }
+        ServiceAddr::Tcp(addr) => {
+            let stream = std::net::TcpStream::connect(addr).with_context(|| {
+                format!("connecting to tcp {addr} (is `cupso serve --listen` running there?)")
+            })?;
+            let _ = stream.set_nodelay(true);
+            exchange_line(stream, request)?
+        }
+    };
     if line.trim().is_empty() {
         bail!("service closed the connection without a response");
     }
@@ -741,21 +841,32 @@ fn service_roundtrip(socket: &Path, request: &Request) -> Result<Json> {
     Ok(doc)
 }
 
-fn socket_arg(args: &Args) -> Result<PathBuf> {
-    Ok(PathBuf::from(
-        args.get("socket").context("--socket is required")?,
-    ))
+/// One request line out, one response line back, on any stream. The
+/// write completes before the read starts, so no clone is needed.
+fn exchange_line<S: std::io::Read + std::io::Write>(
+    mut stream: S,
+    request: &Request,
+) -> Result<String> {
+    use std::io::{BufRead, BufReader, Write};
+    writeln!(stream, "{}", request.render()).context("sending request")?;
+    stream.flush().context("flushing request")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading response")?;
+    Ok(line)
 }
 
 fn cmd_submit(rest: &[String]) -> Result<()> {
     let spec = Command::new("submit", "submit job(s) to a running service")
-        .opt("socket", "service socket path (required)", None)
+        .opt("socket", "service Unix socket path", None)
+        .opt("connect", "service TCP host:port (alternative to --socket)", None)
         .opt(
             "config",
             "batch TOML whose [jobs.*] sections are all submitted (per-job flags ignored)",
             None,
         )
         .opt("name", "job name (unique identity key; required without --config)", None)
+        .opt("tenant", "tenant label for per-tenant admission quotas", None)
         .opt("fitness", "fitness function", Some("cubic"))
         .opt("particles", "swarm size", Some("1024"))
         .opt("dim", "dimensionality", Some("1"))
@@ -773,7 +884,7 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
         return Ok(());
     }
     let args = spec.parse(rest)?;
-    let socket = socket_arg(&args)?;
+    let addr = service_addr(&args)?;
     let jobs: Vec<JobConfig> = match args.get("config") {
         Some(path) => BatchConfig::from_file(Path::new(path))?.jobs,
         None => {
@@ -783,6 +894,9 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
             let mut job = JobConfig::with_defaults(name);
             if let Some(v) = args.get("fitness") {
                 job.fitness = v.to_string();
+            }
+            if let Some(v) = args.get("tenant") {
+                job.tenant = Some(v.to_string());
             }
             job.particles = args.get_parse("particles", job.particles)?;
             job.dim = args.get_parse("dim", job.dim)?;
@@ -825,7 +939,7 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
         }
     };
     for job in &jobs {
-        let doc = service_roundtrip(&socket, &Request::Submit(job.clone()))?;
+        let doc = service_roundtrip(&addr, &Request::Submit(job.clone()))?;
         println!(
             "submitted {} → slot {}, stream {}",
             doc.str_field("name")?,
@@ -838,15 +952,16 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
 
 fn cmd_status(rest: &[String]) -> Result<()> {
     let spec = Command::new("status", "show a running service's jobs and results")
-        .opt("socket", "service socket path (required)", None)
+        .opt("socket", "service Unix socket path", None)
+        .opt("connect", "service TCP host:port (alternative to --socket)", None)
         .switch("json", "print the raw JSON response line");
     if rest.iter().any(|a| a == "--help") {
         println!("{}", spec.usage());
         return Ok(());
     }
     let args = spec.parse(rest)?;
-    let socket = socket_arg(&args)?;
-    let doc = service_roundtrip(&socket, &Request::Status)?;
+    let addr = service_addr(&args)?;
+    let doc = service_roundtrip(&addr, &Request::Status)?;
     if args.flag("json") {
         // Re-render the parsed document for scripting (same writer the
         // daemon used, so the line cannot drift from the wire format).
@@ -876,7 +991,7 @@ fn cmd_status(rest: &[String]) -> Result<()> {
                 j.str_field("engine")?.to_string(),
                 j.get("steps").context("steps")?.as_u64("steps")?.to_string(),
                 j.get("max_iter").context("max_iter")?.as_u64("max_iter")?.to_string(),
-                format!("{:.6}", j.get("gbest").context("gbest")?.as_f64("gbest")?),
+                fmt_gbest(j.num_or_null_field("gbest")?),
                 j.get("stream").context("stream")?.as_u64("stream")?.to_string(),
             ]);
         }
@@ -890,12 +1005,23 @@ fn cmd_status(rest: &[String]) -> Result<()> {
                 j.str_field("engine")?.to_string(),
                 j.get("steps").context("steps")?.as_u64("steps")?.to_string(),
                 j.str_field("stop")?.to_string(),
-                format!("{:.6}", j.get("gbest").context("gbest")?.as_f64("gbest")?),
+                fmt_gbest(j.num_or_null_field("gbest")?),
             ]);
         }
         println!("{}", t.to_markdown());
     }
     Ok(())
+}
+
+/// Render a wire `gbest` that may be `null`: JSON numbers cannot carry
+/// non-finite values, and a just-admitted job legitimately reports one
+/// (-inf under maximize, +inf under minimize) before its first
+/// improving round.
+fn fmt_gbest(value: Option<f64>) -> String {
+    match value {
+        Some(g) => format!("{g:.6}"),
+        None => "n/a".to_string(),
+    }
 }
 
 /// Rows of an array field of a parsed response.
@@ -909,7 +1035,8 @@ fn json_rows<'a>(doc: &'a Json, key: &str) -> Result<Vec<&'a Json>> {
 
 fn cmd_cancel(rest: &[String]) -> Result<()> {
     let spec = Command::new("cancel", "cancel a live job on a running service")
-        .opt("socket", "service socket path (required)", None)
+        .opt("socket", "service Unix socket path", None)
+        .opt("connect", "service TCP host:port (alternative to --socket)", None)
         .opt("name", "job name (also accepted as a positional argument)", None);
     if rest.iter().any(|a| a == "--help") {
         println!("{}", spec.usage());
@@ -917,7 +1044,7 @@ fn cmd_cancel(rest: &[String]) -> Result<()> {
         return Ok(());
     }
     let args = spec.parse(rest)?;
-    let socket = socket_arg(&args)?;
+    let addr = service_addr(&args)?;
     let name = args
         .positional
         .first()
@@ -925,27 +1052,28 @@ fn cmd_cancel(rest: &[String]) -> Result<()> {
         .or_else(|| args.get("name"))
         .context("usage: cupso cancel --socket <path> <job-name>")?
         .to_string();
-    let doc = service_roundtrip(&socket, &Request::Cancel { name })?;
+    let doc = service_roundtrip(&addr, &Request::Cancel { name })?;
     let job = doc.get("job").context("missing job")?;
     println!(
-        "cancelled {} after {} steps (gbest {:.6})",
+        "cancelled {} after {} steps (gbest {})",
         job.str_field("name")?,
         job.get("steps").context("steps")?.as_u64("steps")?,
-        job.get("gbest").context("gbest")?.as_f64("gbest")?,
+        fmt_gbest(job.num_or_null_field("gbest")?),
     );
     Ok(())
 }
 
 fn cmd_drain(rest: &[String]) -> Result<()> {
     let spec = Command::new("drain", "checkpoint a running service's live jobs and stop it")
-        .opt("socket", "service socket path (required)", None);
+        .opt("socket", "service Unix socket path", None)
+        .opt("connect", "service TCP host:port (alternative to --socket)", None);
     if rest.iter().any(|a| a == "--help") {
         println!("{}", spec.usage());
         return Ok(());
     }
     let args = spec.parse(rest)?;
-    let socket = socket_arg(&args)?;
-    let doc = service_roundtrip(&socket, &Request::Drain)?;
+    let addr = service_addr(&args)?;
+    let doc = service_roundtrip(&addr, &Request::Drain)?;
     let snapshotted = doc
         .get("snapshotted")
         .context("missing snapshotted")?

@@ -246,6 +246,10 @@ pub struct JobSpec {
     /// Step budget this job would like to finish within — consumed by
     /// [`SchedPolicy::EarliestDeadlineFirst`]; ignored by round-robin.
     pub deadline: Option<u64>,
+    /// Owning tenant (interned) — consumed by
+    /// [`SchedPolicy::WeightedFair`] and the service's per-tenant
+    /// admission quotas. `None` jobs share one anonymous tenant.
+    pub tenant: Option<Arc<str>>,
 }
 
 impl JobSpec {
@@ -267,6 +271,7 @@ impl JobSpec {
             seed,
             termination: TerminationCriteria::none(),
             deadline: None,
+            tenant: None,
         }
     }
 
@@ -302,6 +307,7 @@ impl JobSpec {
                 stall_window: cfg.stall_window,
             },
             deadline: cfg.deadline,
+            tenant: cfg.tenant.as_deref().map(Arc::from),
         })
     }
 
@@ -309,7 +315,8 @@ impl JobSpec {
     /// seed and objective come from the run state; fitness and the
     /// termination bounds from the job wrapper. This is how `cupso
     /// resume` (and a drained service) reconstructs a batch purely from
-    /// its snapshot.
+    /// its snapshot. Tenancy is service-session state, not run state, so
+    /// a resumed spec starts with no tenant.
     pub fn from_checkpoint(ckpt: &JobCheckpoint) -> Result<Self> {
         let fitness = by_name(&ckpt.fitness)
             .with_context(|| format!("job {}: unknown fitness {:?}", ckpt.name, ckpt.fitness))?;
@@ -352,6 +359,14 @@ pub enum SchedPolicy {
     /// rank last). Ties break on job index, so scheduling is fully
     /// deterministic.
     EarliestDeadlineFirst,
+    /// Tenant-fair progress: schedule the job whose **tenant** has
+    /// executed the fewest total steps first (ties → least-progressed
+    /// job, then lowest index). A tenant with ten live jobs advances no
+    /// faster than a tenant with one, so one heavy tenant cannot starve
+    /// the rest of a shared service. Jobs without a tenant share one
+    /// anonymous tenant. Fully deterministic: the key is
+    /// `(tenant steps, job steps, slot index)`, all integers.
+    WeightedFair,
 }
 
 impl SchedPolicy {
@@ -360,6 +375,7 @@ impl SchedPolicy {
         match s.to_ascii_lowercase().replace(['-', '_'], "").as_str() {
             "roundrobin" | "rr" => Some(Self::RoundRobin),
             "edf" | "deadline" | "earliestdeadlinefirst" => Some(Self::EarliestDeadlineFirst),
+            "weightedfair" | "wf" | "fair" => Some(Self::WeightedFair),
             _ => None,
         }
     }
@@ -370,6 +386,7 @@ impl std::fmt::Display for SchedPolicy {
         match self {
             SchedPolicy::RoundRobin => f.write_str("round-robin"),
             SchedPolicy::EarliestDeadlineFirst => f.write_str("edf"),
+            SchedPolicy::WeightedFair => f.write_str("weighted-fair"),
         }
     }
 }
@@ -734,8 +751,22 @@ mod tests {
             SchedPolicy::parse("EDF"),
             Some(SchedPolicy::EarliestDeadlineFirst)
         );
+        assert_eq!(
+            SchedPolicy::parse("weighted-fair"),
+            Some(SchedPolicy::WeightedFair)
+        );
+        assert_eq!(SchedPolicy::parse("wf"), Some(SchedPolicy::WeightedFair));
         assert_eq!(SchedPolicy::parse("fifo"), None);
         assert_eq!(SchedPolicy::RoundRobin.to_string(), "round-robin");
+        assert_eq!(SchedPolicy::WeightedFair.to_string(), "weighted-fair");
+        // Display → parse round trip for every policy.
+        for p in [
+            SchedPolicy::RoundRobin,
+            SchedPolicy::EarliestDeadlineFirst,
+            SchedPolicy::WeightedFair,
+        ] {
+            assert_eq!(SchedPolicy::parse(&p.to_string()), Some(p));
+        }
     }
 
     #[test]
@@ -781,6 +812,40 @@ mod tests {
     }
 
     #[test]
+    fn weighted_fair_splits_rounds_by_tenant_not_by_job() {
+        // Tenant A brings three jobs, tenant B one: under weighted-fair a
+        // single stream must alternate A-job / B-job, giving B half the
+        // machine despite owning a quarter of the jobs (round-robin would
+        // give it a quarter). The pick order is fully deterministic.
+        let mk = |name: &str, tenant: &str, seed: u64| {
+            let mut s = spec(name, EngineKind::Queue, 64, 10, seed);
+            s.tenant = Some(Arc::from(tenant));
+            s
+        };
+        let specs = vec![
+            mk("a1", "A", 1),
+            mk("a2", "A", 2),
+            mk("a3", "A", 3),
+            mk("b1", "B", 4),
+        ];
+        let scheduler = JobScheduler::with_workers(2).policy(SchedPolicy::WeightedFair);
+        let mut order = Vec::new();
+        let outcomes = scheduler
+            .run_with(&specs, |r| order.push(r.job))
+            .unwrap();
+        // Tenant sums tie at every even pick, so the sequence interleaves
+        // B's only job with A's least-progressed job.
+        assert_eq!(&order[..8], &[0, 3, 1, 3, 2, 3, 0, 3], "pick order {order:?}");
+        // Every other pick belongs to tenant B until its job finishes.
+        let b_picks = order.iter().take(20).filter(|&&j| j == 3).count();
+        assert_eq!(b_picks, 10, "tenant B did not get half the rounds: {order:?}");
+        for o in &outcomes {
+            assert_eq!(o.stop, StopReason::Exhausted, "{}", o.name);
+            assert_eq!(o.steps, 10, "{}", o.name);
+        }
+    }
+
+    #[test]
     fn from_config_respects_vmax_frac() {
         // Regression: vmax_frac used to be hard-coded to 0.5, silently
         // ignoring the batch TOML. A non-default value must change both
@@ -799,6 +864,7 @@ mod tests {
             stall_window: None,
             max_steps: None,
             deadline: None,
+            tenant: None,
         };
         let tight = JobSpec::from_config(&mk(0.05, "tight")).unwrap();
         let wide = JobSpec::from_config(&mk(0.5, "wide")).unwrap();

@@ -133,6 +133,9 @@ pub struct JobView<'a> {
     pub stream: usize,
     /// Set once the job terminated (awaiting [`Session::reap`]).
     pub stop: Option<StopReason>,
+    /// Owning tenant (`None` = the anonymous tenant) — the service's
+    /// quota accounting reads per-tenant usage straight off this view.
+    pub tenant: Option<&'a str>,
 }
 
 /// Reusable per-session scheduling buffers, grown only at admission time
@@ -148,6 +151,9 @@ struct RoundState {
     inflight: Vec<usize>,
     /// The round's step reports, sorted by slot index before delivery.
     reports: Vec<(usize, StepReport)>,
+    /// Per-slot tenant step totals (weighted-fair policy scratch; indexed
+    /// by slot, refreshed each round from capacity reserved at admission).
+    keys: Vec<u64>,
 }
 
 impl RoundState {
@@ -158,6 +164,7 @@ impl RoundState {
             picked: Vec::new(),
             inflight: Vec::new(),
             reports: Vec::new(),
+            keys: Vec::new(),
         }
     }
 
@@ -171,6 +178,7 @@ impl RoundState {
         reserve_to(&mut self.picked, width);
         reserve_to(&mut self.inflight, width);
         reserve_to(&mut self.reports, slots.max(1));
+        reserve_to(&mut self.keys, slots);
     }
 }
 
@@ -538,6 +546,7 @@ impl Session {
                 },
                 stream: job.stream,
                 stop: job.stop,
+                tenant: job.spec.tenant.as_deref(),
             });
         }
     }
@@ -574,6 +583,7 @@ impl Session {
         match self.policy {
             SchedPolicy::RoundRobin => pick_round_robin(&self.slots, self.streams, &mut self.rs),
             SchedPolicy::EarliestDeadlineFirst => pick_edf(&self.slots, self.streams, &mut self.rs),
+            SchedPolicy::WeightedFair => pick_weighted_fair(&self.slots, self.streams, &mut self.rs),
         }
         debug_assert!(
             !self.rs.picked.is_empty()
@@ -1096,6 +1106,46 @@ fn pick_edf(slots: &[Option<SlotJob>], streams: usize, rs: &mut RoundState) {
             .unwrap_or(u64::MAX);
         (slack, i)
     });
+    assign_streams(slots, streams, rs);
+}
+
+/// Up to `streams` live jobs by ascending tenant step total (all live
+/// jobs — packed ones too — charge steps to their tenant; jobs without a
+/// tenant pool into one anonymous tenant), then own progress, then slot
+/// index, no two sharing a pool stream. Round-robin fairness between
+/// *tenants* rather than jobs: a tenant running ten jobs advances its
+/// total ten times faster than a single-job tenant, so the single-job
+/// tenant is picked every round while the heavy tenant's jobs share the
+/// remaining streams — one noisy neighbour cannot starve the rest. The
+/// per-tenant totals are recomputed each round into a [`RoundState`]
+/// scratch buffer reserved at admission (an O(slots²) scan, negligible
+/// next to a launch and allocation-free), so the pick is a pure function
+/// of slot state and stays deterministic under any admission timing.
+fn pick_weighted_fair(slots: &[Option<SlotJob>], streams: usize, rs: &mut RoundState) {
+    rs.order.clear();
+    rs.order.extend(
+        slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.as_ref().is_some_and(|j| j.stop.is_none() && j.pack.is_none()))
+            .map(|(i, _)| i),
+    );
+    rs.keys.clear();
+    rs.keys.resize(slots.len(), 0);
+    for i in 0..slots.len() {
+        let Some(job) = slots[i].as_ref().filter(|j| j.stop.is_none()) else {
+            continue;
+        };
+        let tenant = job.spec.tenant.as_deref();
+        rs.keys[i] = slots
+            .iter()
+            .flatten()
+            .filter(|j| j.stop.is_none() && j.spec.tenant.as_deref() == tenant)
+            .map(|j| j.steps)
+            .sum();
+    }
+    rs.order
+        .sort_unstable_by_key(|&i| (rs.keys[i], slots[i].as_ref().expect("live slot").steps, i));
     assign_streams(slots, streams, rs);
 }
 

@@ -21,11 +21,17 @@
 //!   zero-allocation (`rust/tests/zero_alloc.rs`).
 //! * [`ServiceHandle`] — the cloneable client side of the control
 //!   queue, with blocking convenience calls (`submit`, `cancel`,
-//!   `status`, `drain`, `watch`). The socket server and in-process
-//!   tests both drive this.
-//! * [`proto`] / [`server`] — a line-oriented JSON protocol over a Unix
-//!   domain socket, so `cupso submit/status/cancel/drain` (or `nc -U`)
-//!   can talk to a daemon in another process.
+//!   `status`, `drain`, `watch`) plus non-blocking `*_deferred`
+//!   variants that return the reply channel instead of waiting on it —
+//!   the event-loop server drives those, because a single-threaded loop
+//!   must never park on one client's reply. In-process tests drive the
+//!   blocking forms.
+//! * [`proto`] / [`server`] — a line-oriented JSON protocol served over
+//!   Unix-domain **and TCP** sockets by one nonblocking `poll(2)` event
+//!   loop, so `cupso submit/status/cancel/drain` (or `nc -U` / `nc`)
+//!   can talk to a daemon in another process — or another machine.
+//!   The loop registers a [`Waker`] (via [`Control::SetWaker`]) so the
+//!   service can rouse it when replies or telemetry become ready.
 //!
 //! **Drain semantics.** `drain` checkpoints every live job through the
 //! shared snapshot store ([`crate::checkpoint::store`], the same
@@ -44,7 +50,9 @@
 pub mod proto;
 mod server;
 
-pub use server::{bind, spawn_server};
+pub use server::{
+    bind, bind_tcp, spawn_server, spawn_server_on, Listener, DEFAULT_MAX_CONNS,
+};
 
 use crate::checkpoint::store;
 use crate::config::{BatchConfig, EngineKind};
@@ -52,10 +60,9 @@ use crate::scheduler::{JobOutcome, JobReport, JobScheduler, JobSpec, Session, St
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::mpsc::{
-    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
-};
-use std::time::Duration;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Finished-job rows retained for `status` and the end-of-life summary.
 /// A long-lived daemon completes unboundedly many jobs; the results
@@ -66,9 +73,12 @@ pub const MAX_RESULTS: usize = 4096;
 
 /// Telemetry lines buffered per watcher. A watcher that stops reading
 /// (stalled client, full socket) falls behind; once it is this many
-/// events behind it is dropped, because the alternative — buffering
-/// without bound on an unbounded channel — lets one stalled observer
-/// OOM the whole daemon.
+/// events behind its subscription is terminated, because the
+/// alternative — buffering without bound — lets one stalled observer
+/// OOM the whole daemon. The **last slot is reserved** for the
+/// protocol-promised `{"event":"end"}` line: regular reports fill at
+/// most `WATCH_BUFFER - 1` slots, so end-of-stream is deliverable even
+/// to a watcher that overflowed (see [`WatchStream`]).
 pub const WATCH_BUFFER: usize = 1024;
 
 /// How often an *idle* service probes its watchers with a
@@ -153,10 +163,152 @@ pub struct DrainReport {
     pub dir: Option<PathBuf>,
 }
 
+/// Wake callback the socket server registers via [`Control::SetWaker`].
+/// The service invokes it after processing controls, after fanning out
+/// watch telemetry, and at shutdown — so a single-threaded event loop
+/// can park in `poll(2)` and still learn promptly that deferred replies
+/// or watch lines became ready (the callback writes one byte into the
+/// loop's self-pipe).
+pub type Waker = Arc<dyn Fn() + Send + Sync>;
+
+/// Shared core of one watch subscription: a bounded line queue plus
+/// lifecycle flags under one mutex, with a condvar for blocking
+/// consumers. This replaces the old `SyncSender<String>` plumbing
+/// because a plain channel cannot express the end-of-stream guarantee:
+/// the queue's **last slot is reserved** for `{"event":"end"}`, so even
+/// a stalled watcher whose buffer is full observes a deterministic
+/// terminator instead of hanging until raw EOF.
+struct WatchShared {
+    state: Mutex<WatchState>,
+    cv: Condvar,
+}
+
+struct WatchState {
+    queue: VecDeque<String>,
+    /// The end line has been queued; nothing further will ever arrive.
+    ended: bool,
+    /// The consuming side dropped its [`WatchStream`].
+    dropped: bool,
+    /// Report lines were refused because the consumer fell behind.
+    lagged: bool,
+}
+
+/// The service's side of one watch subscription.
+pub struct WatchSender {
+    shared: Arc<WatchShared>,
+}
+
+impl WatchSender {
+    /// Queue one telemetry line. `false` means the subscription is dead
+    /// — the consumer vanished, or it just overflowed and was
+    /// terminated — and the caller should drop this sender (the reap).
+    fn send(&self, line: &str) -> bool {
+        let mut st = self.shared.state.lock().expect("watch state lock");
+        if st.dropped || st.ended {
+            return false;
+        }
+        if st.queue.len() < WATCH_BUFFER - 1 {
+            st.queue.push_back(line.to_string());
+            self.shared.cv.notify_one();
+            return true;
+        }
+        // Overflow: the consumer is WATCH_BUFFER - 1 lines behind. Keep
+        // the bounded-memory promise by ending the subscription — but
+        // through the reserved slot, so the client still reads the
+        // protocol-promised terminator after its backlog.
+        st.lagged = true;
+        st.queue.push_back(end_line());
+        st.ended = true;
+        self.shared.cv.notify_one();
+        false
+    }
+
+    /// Queue the final `{"event":"end"}` line. The reserved last slot
+    /// guarantees space even when the consumer never read a byte.
+    fn end(&self) {
+        let mut st = self.shared.state.lock().expect("watch state lock");
+        if st.ended || st.dropped {
+            return;
+        }
+        st.queue.push_back(end_line());
+        st.ended = true;
+        self.shared.cv.notify_one();
+    }
+}
+
+/// The consumer's side of one watch subscription (see
+/// [`ServiceHandle::watch`]). Dropping it unsubscribes: the service
+/// reaps the dead sender at its next send attempt.
+pub struct WatchStream {
+    shared: Arc<WatchShared>,
+}
+
+impl WatchStream {
+    /// Non-blocking pop — the event loop's writable-driven pump.
+    pub fn try_next(&self) -> Option<String> {
+        self.shared
+            .state
+            .lock()
+            .expect("watch state lock")
+            .queue
+            .pop_front()
+    }
+
+    /// Blocking pop, mpsc-flavoured so test code reads naturally:
+    /// `Err(Timeout)` after `timeout` with nothing queued,
+    /// `Err(Disconnected)` once the stream ended *and* the backlog is
+    /// fully drained.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<String, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().expect("watch state lock");
+        loop {
+            if let Some(line) = st.queue.pop_front() {
+                return Ok(line);
+            }
+            if st.ended {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return Err(RecvTimeoutError::Timeout);
+            };
+            st = self
+                .shared
+                .cv
+                .wait_timeout(st, left)
+                .expect("watch state lock")
+                .0;
+        }
+    }
+
+    /// True once the subscription was terminated for falling
+    /// [`WATCH_BUFFER`] lines behind (its final line is still `end`).
+    pub fn lagged(&self) -> bool {
+        self.shared.state.lock().expect("watch state lock").lagged
+    }
+
+    /// True once the service queued the final `end` line — after the
+    /// backlog drains, [`try_next`](Self::try_next) stays `None` forever.
+    pub fn ended(&self) -> bool {
+        self.shared.state.lock().expect("watch state lock").ended
+    }
+}
+
+impl Drop for WatchStream {
+    fn drop(&mut self) {
+        self.shared.state.lock().expect("watch state lock").dropped = true;
+    }
+}
+
+/// The rendered `{"event":"end"}` terminator line.
+fn end_line() -> String {
+    proto::Obj::new().str("event", "end").render()
+}
+
 /// A control-queue message. Client convenience wrappers live on
 /// [`ServiceHandle`]; each request carries its reply channel.
 pub enum Control {
-    /// Admit a job at the next round boundary.
+    /// Admit a job at the next round boundary (per-tenant quotas
+    /// permitting — see [`crate::config::BatchConfig::quota_jobs`]).
     Submit(Box<JobSpec>, Sender<Result<Submitted, String>>),
     /// Cancel a live job by name at the next round boundary.
     Cancel(String, Sender<Result<FinishedJob, String>>),
@@ -169,10 +321,14 @@ pub enum Control {
     /// [`ServiceHandle::drain_then`].
     Drain(Sender<Result<DrainReport, String>>, Option<Receiver<()>>),
     /// Subscribe to the per-round telemetry stream (one JSON line per
-    /// stepped job per round; a final `{"event": "end"}` at shutdown).
-    /// Bounded: a subscriber more than [`WATCH_BUFFER`] events behind
-    /// is dropped.
-    Watch(SyncSender<String>),
+    /// stepped job per round; a final `{"event": "end"}` at shutdown —
+    /// guaranteed, even to overflowed subscribers, via the reserved
+    /// [`WATCH_BUFFER`] slot).
+    Watch(WatchSender),
+    /// Register the event loop's wake callback (sent once, at server
+    /// startup; MPSC ordering guarantees it precedes any client control
+    /// enqueued by the same loop).
+    SetWaker(Waker),
 }
 
 /// Cloneable client side of a [`ServiceSession`]'s control queue.
@@ -182,13 +338,26 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    fn request<T>(&self, build: impl FnOnce(Sender<T>) -> Control) -> Result<T> {
+    fn send(&self, msg: Control) -> Result<()> {
+        self.tx.send(msg).ok().context("service is no longer running")
+    }
+
+    /// Enqueue a control and hand back its reply channel *without*
+    /// waiting — the deferred form the event loop needs, since a
+    /// single-threaded loop must never park on one client's reply. The
+    /// service calls the registered [`Waker`] once the reply is sent,
+    /// so the loop knows when `try_recv` is worth retrying.
+    fn defer<T>(&self, build: impl FnOnce(Sender<T>) -> Control) -> Result<Receiver<T>> {
         let (tx, rx) = channel();
-        self.tx
-            .send(build(tx))
+        self.send(build(tx))?;
+        Ok(rx)
+    }
+
+    fn request<T>(&self, build: impl FnOnce(Sender<T>) -> Control) -> Result<T> {
+        self.defer(build)?
+            .recv()
             .ok()
-            .context("service is no longer running")?;
-        rx.recv().ok().context("service shut down mid-request")
+            .context("service shut down mid-request")
     }
 
     /// Admit `spec` at the next round boundary (blocks for the ack).
@@ -197,15 +366,30 @@ impl ServiceHandle {
             .map_err(anyhow::Error::msg)
     }
 
+    /// Non-blocking [`submit`](Self::submit): returns the reply channel.
+    pub fn submit_deferred(&self, spec: JobSpec) -> Result<Receiver<Result<Submitted, String>>> {
+        self.defer(|tx| Control::Submit(Box::new(spec), tx))
+    }
+
     /// Cancel the live job `name` at the next round boundary.
     pub fn cancel(&self, name: &str) -> Result<FinishedJob> {
         self.request(|tx| Control::Cancel(name.to_string(), tx))?
             .map_err(anyhow::Error::msg)
     }
 
+    /// Non-blocking [`cancel`](Self::cancel): returns the reply channel.
+    pub fn cancel_deferred(&self, name: &str) -> Result<Receiver<Result<FinishedJob, String>>> {
+        self.defer(|tx| Control::Cancel(name.to_string(), tx))
+    }
+
     /// Snapshot the service's current state.
     pub fn status(&self) -> Result<StatusReport> {
         self.request(Control::Status)
+    }
+
+    /// Non-blocking [`status`](Self::status): returns the reply channel.
+    pub fn status_deferred(&self) -> Result<Receiver<StatusReport>> {
+        self.defer(Control::Status)
     }
 
     /// Checkpoint all live jobs and shut the service down.
@@ -225,15 +409,38 @@ impl ServiceHandle {
             .map_err(anyhow::Error::msg)
     }
 
+    /// Non-blocking drain with an optional completion latch: returns
+    /// the reply channel. The event loop passes a latch it fires only
+    /// after the drain reply has been flushed to the requesting client.
+    pub fn drain_deferred(
+        &self,
+        done: Option<Receiver<()>>,
+    ) -> Result<Receiver<Result<DrainReport, String>>> {
+        self.defer(|tx| Control::Drain(tx, done))
+    }
+
     /// Subscribe to the telemetry stream (bounded: falling
-    /// [`WATCH_BUFFER`] events behind unsubscribes you).
-    pub fn watch(&self) -> Result<Receiver<String>> {
-        let (tx, rx) = sync_channel(WATCH_BUFFER);
-        self.tx
-            .send(Control::Watch(tx))
-            .ok()
-            .context("service is no longer running")?;
-        Ok(rx)
+    /// [`WATCH_BUFFER`] lines behind ends the subscription — after a
+    /// final, guaranteed `{"event":"end"}`).
+    pub fn watch(&self) -> Result<WatchStream> {
+        let shared = Arc::new(WatchShared {
+            state: Mutex::new(WatchState {
+                queue: VecDeque::new(),
+                ended: false,
+                dropped: false,
+                lagged: false,
+            }),
+            cv: Condvar::new(),
+        });
+        self.send(Control::Watch(WatchSender {
+            shared: Arc::clone(&shared),
+        }))?;
+        Ok(WatchStream { shared })
+    }
+
+    /// Register the event loop's wake callback (see [`Waker`]).
+    pub fn set_waker(&self, waker: Waker) -> Result<()> {
+        self.send(Control::SetWaker(waker))
     }
 }
 
@@ -265,7 +472,9 @@ pub struct ServiceSession {
     results: VecDeque<FinishedJob>,
     /// Lifetime completion counter (survives window eviction).
     finished_total: u64,
-    watchers: Vec<SyncSender<String>>,
+    watchers: Vec<WatchSender>,
+    /// The event loop's wake callback, if a socket server is attached.
+    waker: Option<Waker>,
     drained: usize,
     drained_to: Option<PathBuf>,
     /// The drain requester's completion latch (waited on in `finish`).
@@ -298,6 +507,7 @@ impl ServiceSession {
                 results: VecDeque::new(),
                 finished_total: 0,
                 watchers: Vec::new(),
+                waker: None,
                 drained: 0,
                 drained_to: None,
                 drain_ack: None,
@@ -342,7 +552,9 @@ impl ServiceSession {
                 };
                 match received {
                     Ok(msg) => {
-                        if self.apply(msg)? {
+                        let shutdown = self.apply(msg)?;
+                        self.wake();
+                        if shutdown {
                             return self.finish();
                         }
                     }
@@ -354,7 +566,9 @@ impl ServiceSession {
             loop {
                 match self.rx.try_recv() {
                     Ok(msg) => {
-                        if self.apply(msg)? {
+                        let shutdown = self.apply(msg)?;
+                        self.wake();
+                        if shutdown {
                             return self.finish();
                         }
                     }
@@ -373,13 +587,22 @@ impl ServiceSession {
         }
     }
 
-    /// Send an idle heartbeat to every watcher, dropping the ones whose
-    /// clients are gone (their connection thread died, so the receiver
-    /// is disconnected) or wedged (buffer full). Only called while the
+    /// Rouse the event loop, if one registered a [`Waker`]. One branch
+    /// when no server is attached, so library-embedded services (and
+    /// the zero-allocation steady state) pay nothing.
+    fn wake(&self) {
+        if let Some(waker) = &self.waker {
+            waker();
+        }
+    }
+
+    /// Send an idle heartbeat to every watcher, reaping the ones whose
+    /// clients are gone or that overflowed. Only called while the
     /// service is idle — busy rounds reap watchers on every event.
     fn probe_watchers(&mut self) {
         let line = proto::Obj::new().str("event", "ping").render();
-        self.watchers.retain(|w| w.try_send(line.clone()).is_ok());
+        self.watchers.retain(|w| w.send(&line));
+        self.wake();
     }
 
     /// One scheduling round + reap, with telemetry fan-out. When no
@@ -393,18 +616,63 @@ impl ServiceSession {
             finished_total,
             ..
         } = self;
+        let had_watchers = !watchers.is_empty();
         let round = session.rounds() + 1;
         session.round(&mut |r| {
             telemetry(r);
             if !watchers.is_empty() {
                 let line = report_event(round, r);
-                // try_send, never send: a watcher that stopped reading
-                // (stalled client, full socket) is dropped once its
-                // buffer fills, instead of buffering the daemon to OOM.
-                watchers.retain(|w| w.try_send(line.clone()).is_ok());
+                // Bounded send: a watcher that stopped reading (stalled
+                // client, full socket) is terminated once its buffer
+                // fills — after a guaranteed final `end` line — instead
+                // of buffering the daemon to OOM.
+                watchers.retain(|w| w.send(&line));
             }
         })?;
-        session.reap(|outcome| push_result(results, finished_total, finished_row(&outcome)))
+        session.reap(|outcome| push_result(results, finished_total, finished_row(&outcome)))?;
+        if had_watchers {
+            self.wake();
+        }
+        Ok(())
+    }
+
+    /// Admission with per-tenant quota enforcement: before the
+    /// scheduler sees the spec, the submitting tenant's live usage is
+    /// checked against the configured caps (0 = unlimited). Usage is
+    /// read straight off the live slot table — a cancelled or finished
+    /// job releases its quota the moment it leaves — and a job's step
+    /// charge is its declared iteration budget (`iters`): tenants are
+    /// charged for what they reserve, not for what a lucky early
+    /// termination happens to use. Jobs without a tenant pool into one
+    /// anonymous tenant, so unlabelled traffic is bounded too.
+    fn admit(&mut self, spec: JobSpec) -> Result<usize> {
+        let (quota_jobs, quota_steps) = (self.knobs.quota_jobs, self.knobs.quota_steps);
+        if quota_jobs > 0 || quota_steps > 0 {
+            let tenant = spec.tenant.as_deref();
+            let mut jobs_used = 0usize;
+            let mut steps_used = 0u64;
+            self.session.jobs(|view| {
+                if view.stop.is_none() && view.tenant == tenant {
+                    jobs_used += 1;
+                    steps_used = steps_used.saturating_add(view.max_iter);
+                }
+            });
+            let label = tenant.unwrap_or("<anonymous>");
+            if quota_jobs > 0 && jobs_used >= quota_jobs {
+                anyhow::bail!(
+                    "tenant {label} is at its concurrent-job quota \
+                     ({jobs_used} of {quota_jobs} live); cancel a job or wait"
+                );
+            }
+            let charge = spec.params.max_iter;
+            if quota_steps > 0 && steps_used.saturating_add(charge) > quota_steps {
+                anyhow::bail!(
+                    "tenant {label} would exceed its step quota: {steps_used} outstanding \
+                     + {charge} requested > {quota_steps} allowed"
+                );
+            }
+        }
+        self.session.admit(spec)
     }
 
     /// Apply one control message; `Ok(true)` means shut down (drain).
@@ -412,7 +680,7 @@ impl ServiceSession {
         match msg {
             Control::Submit(spec, reply) => {
                 let name = spec.name.clone();
-                let ack = match self.session.admit(*spec) {
+                let ack = match self.admit(*spec) {
                     Ok(slot) => Ok(Submitted {
                         name,
                         slot,
@@ -499,13 +767,22 @@ impl ServiceSession {
                 self.watchers.push(tx);
                 Ok(false)
             }
+            Control::SetWaker(waker) => {
+                self.waker = Some(waker);
+                Ok(false)
+            }
         }
     }
 
     fn finish(mut self) -> Result<ServiceEnd> {
+        // Every live subscriber gets the protocol-promised terminator —
+        // unconditionally, thanks to the reserved queue slot. (The old
+        // try_send silently lost `end` for a watcher whose buffer was
+        // full, leaving its client hanging until raw EOF.)
         for w in &self.watchers {
-            let _ = w.try_send(proto::Obj::new().str("event", "end").render());
+            w.end();
         }
+        self.wake();
         // A drain requester still has to flush its acknowledgement to
         // its client before the process exits; give it a bounded grace
         // period (either the latch fires or the requester is gone).
@@ -574,8 +851,28 @@ mod tests {
             pack: false,
             pack_min: 2,
             pack_max: 0,
+            quota_jobs: 0,
+            quota_steps: 0,
             jobs: Vec::new(),
         }
+    }
+
+    /// Poll status until no job is live (bounded).
+    fn wait_idle(handle: &ServiceHandle) {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while !handle.status().unwrap().live.is_empty() {
+            assert!(Instant::now() < deadline, "service did not run dry");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Read a watch stream to its deterministic end.
+    fn drain_stream(rx: &WatchStream) -> Vec<String> {
+        let mut lines = Vec::new();
+        while let Ok(line) = rx.recv_timeout(Duration::from_secs(5)) {
+            lines.push(line);
+        }
+        lines
     }
 
     fn spec(name: &str, iters: u64, seed: u64) -> JobSpec {
@@ -676,5 +973,104 @@ mod tests {
             proto::Json::parse(&line).unwrap().str_field("event").unwrap(),
             "end"
         );
+    }
+
+    #[test]
+    fn watcher_full_at_shutdown_still_gets_end() {
+        // Exactly WATCH_BUFFER - 1 reports fill every regular slot of a
+        // never-read subscription; the reserved slot must still carry
+        // `{"event":"end"}` at shutdown. (The old try_send-based finish
+        // silently lost it and the client hung until raw EOF.)
+        let scheduler = JobScheduler::with_workers(2);
+        let (service, handle) =
+            ServiceSession::new(&scheduler, knobs(), None, Vec::new()).unwrap();
+        let svc = std::thread::spawn(move || service.run().unwrap());
+        let rx = handle.watch().unwrap();
+        let iters = WATCH_BUFFER as u64 - 1;
+        handle.submit(spec("flood", iters, 1)).unwrap();
+        wait_idle(&handle);
+        drop(handle);
+        let end = svc.join().unwrap();
+        assert_eq!(end.results[0].steps, iters);
+        let lines = drain_stream(&rx);
+        assert_eq!(lines.len(), WATCH_BUFFER);
+        for line in &lines[..WATCH_BUFFER - 1] {
+            let doc = proto::Json::parse(line).unwrap();
+            assert_eq!(doc.str_field("event").unwrap(), "report");
+        }
+        let doc = proto::Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(doc.str_field("event").unwrap(), "end");
+        assert!(!rx.lagged(), "nothing was discarded — the buffer just filled");
+    }
+
+    #[test]
+    fn overflowed_watcher_is_terminated_with_a_deterministic_end() {
+        // A subscription that falls WATCH_BUFFER - 1 lines behind is
+        // cut off mid-run — but its backlog still terminates with the
+        // protocol-promised `end` line, never a hang or a bare EOF.
+        let scheduler = JobScheduler::with_workers(2);
+        let (service, handle) =
+            ServiceSession::new(&scheduler, knobs(), None, Vec::new()).unwrap();
+        let svc = std::thread::spawn(move || service.run().unwrap());
+        let rx = handle.watch().unwrap();
+        let iters = WATCH_BUFFER as u64 + 64;
+        handle.submit(spec("flood", iters, 1)).unwrap();
+        wait_idle(&handle);
+        drop(handle);
+        let end = svc.join().unwrap();
+        assert_eq!(end.results[0].steps, iters, "the job itself is unaffected");
+        let lines = drain_stream(&rx);
+        assert_eq!(lines.len(), WATCH_BUFFER);
+        let doc = proto::Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(doc.str_field("event").unwrap(), "end");
+        assert!(rx.lagged());
+        assert!(rx.ended());
+    }
+
+    #[test]
+    fn tenant_quotas_shed_at_admission_and_release_on_cancel() {
+        let scheduler = JobScheduler::with_workers(2);
+        let mut k = knobs();
+        k.quota_jobs = 2;
+        k.quota_steps = 2_500_000;
+        let (service, handle) = ServiceSession::new(&scheduler, k, None, Vec::new()).unwrap();
+        let svc = std::thread::spawn(move || service.run().unwrap());
+        let tenant_spec = |name: &str, iters: u64, seed: u64, tenant: &str| {
+            let mut s = spec(name, iters, seed);
+            s.tenant = Some(Arc::from(tenant));
+            s
+        };
+        handle.submit(tenant_spec("a1", 1_000_000, 1, "acme")).unwrap();
+        handle.submit(tenant_spec("a2", 1_000_000, 2, "acme")).unwrap();
+        // A third concurrent job trips the tenant's job quota.
+        let err = handle
+            .submit(tenant_spec("a3", 10, 3, "acme"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("concurrent-job quota"), "{err}");
+        // Another tenant is unaffected by acme's usage...
+        handle.submit(tenant_spec("b1", 1_000_000, 4, "bloor")).unwrap();
+        // ...but its own step budget binds: 1M outstanding + 2M > 2.5M.
+        let err = handle
+            .submit(tenant_spec("b2", 2_000_000, 5, "bloor"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("step quota"), "{err}");
+        // Untagged jobs pool into one anonymous tenant, bounded too.
+        handle.submit(spec("anon1", 1_000_000, 6)).unwrap();
+        handle.submit(spec("anon2", 1_000_000, 7)).unwrap();
+        let err = handle.submit(spec("anon3", 10, 8)).unwrap_err().to_string();
+        assert!(err.contains("concurrent-job quota"), "{err}");
+        // Cancelling releases quota immediately (usage is read off the
+        // live slot table, so there is nothing to forget to decrement).
+        handle.cancel("a1").unwrap();
+        handle.submit(tenant_spec("a3", 10, 3, "acme")).unwrap();
+        for name in ["a2", "b1", "anon1", "anon2"] {
+            handle.cancel(name).unwrap();
+        }
+        // a3 (10 iters) runs dry on its own once the rest is cancelled.
+        drop(handle);
+        let end = svc.join().unwrap();
+        assert_eq!(end.finished_total, 6);
     }
 }

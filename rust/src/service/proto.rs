@@ -154,6 +154,22 @@ impl Json {
             .with_context(|| format!("missing field {key:?}"))?
             .as_str(key)
     }
+
+    /// Required numeric field that may legitimately be `null`: the wire
+    /// writer ([`number`]) has no representation for non-finite floats,
+    /// so a just-admitted maximize job's `gbest = -inf` travels as
+    /// `null`. Clients must read fitness fields through this (a bare
+    /// [`as_f64`](Self::as_f64) would reject the very first status or
+    /// watch row of such a job). `None` = "no finite value yet".
+    pub fn num_or_null_field(&self, key: &str) -> Result<Option<f64>> {
+        match self
+            .get(key)
+            .with_context(|| format!("missing field {key:?}"))?
+        {
+            Json::Null => Ok(None),
+            value => value.as_f64(key).map(Some),
+        }
+    }
 }
 
 /// Deepest value nesting the parser accepts (recursion-depth bound).
@@ -513,6 +529,9 @@ pub fn job_to_json(job: &JobConfig) -> String {
     if let Some(d) = job.deadline {
         obj = obj.int("deadline", d);
     }
+    if let Some(t) = &job.tenant {
+        obj = obj.str("tenant", t);
+    }
     obj.render()
 }
 
@@ -551,6 +570,7 @@ pub fn job_from_json(doc: &Json) -> Result<JobConfig> {
             "stall_window" => job.stall_window = Some(value.as_u64(&ctx)?),
             "max_steps" => job.max_steps = Some(value.as_u64(&ctx)?),
             "deadline" => job.deadline = Some(value.as_u64(&ctx)?),
+            "tenant" => job.tenant = Some(value.as_str(&ctx)?.to_string()),
             other => bail!("job {name}: unknown field {other:?}"),
         }
     }
@@ -666,6 +686,7 @@ mod tests {
         job.objective = Some(Objective::Minimize);
         job.target_fitness = Some(1e-3);
         job.deadline = Some(400);
+        job.tenant = Some("team-a".into());
         for req in [
             Request::Ping,
             Request::Submit(job),
@@ -691,6 +712,7 @@ mod tests {
                     assert_eq!(a.stall_window, b.stall_window);
                     assert_eq!(a.max_steps, b.max_steps);
                     assert_eq!(a.deadline, b.deadline);
+                    assert_eq!(a.tenant, b.tenant);
                 }
                 (a, b) => assert_eq!(a, b, "{line}"),
             }
@@ -734,6 +756,31 @@ mod tests {
         // Unknown op.
         let err = Request::parse(r#"{"op": "frobnicate"}"#).unwrap_err().to_string();
         assert!(err.contains("unknown op"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_fitness_travels_as_null_and_reads_back_tolerantly() {
+        // A just-admitted maximize job's gbest is -inf until its first
+        // improving round; the writer must emit `null` (JSON has no
+        // infinities) and the tolerant reader must accept it.
+        for v in [f64::NEG_INFINITY, f64::INFINITY, f64::NAN] {
+            assert_eq!(number(v), "null", "{v}");
+        }
+        let line = Obj::new()
+            .str("name", "hot")
+            .num("gbest", f64::NEG_INFINITY)
+            .int("steps", 0)
+            .render();
+        let doc = Json::parse(&line).unwrap();
+        assert_eq!(doc.num_or_null_field("gbest").unwrap(), None);
+        assert_eq!(doc.num_or_null_field("steps").unwrap(), Some(0.0));
+        // A finite gbest still reads through the same accessor.
+        let doc = Json::parse(r#"{"gbest": -2.5}"#).unwrap();
+        assert_eq!(doc.num_or_null_field("gbest").unwrap(), Some(-2.5));
+        // Missing stays loud; wrong type stays loud.
+        assert!(doc.num_or_null_field("absent").is_err());
+        let doc = Json::parse(r#"{"gbest": "oops"}"#).unwrap();
+        assert!(doc.num_or_null_field("gbest").is_err());
     }
 
     #[test]

@@ -1,60 +1,214 @@
-//! Unix-domain-socket front end for a [`ServiceSession`].
+//! Socket front end for a [`ServiceSession`]: Unix-domain **and TCP**
+//! listeners multiplexed by one nonblocking `poll(2)` event loop.
 //!
-//! One accept thread, one thread per connection. Each connection is a
-//! sequence of request lines answered by response lines
-//! ([`super::proto`]); a `watch` request flips the connection into a
-//! one-way telemetry stream until either side disconnects. Connection
-//! threads only ever talk to the daemon through a [`ServiceHandle`], so
-//! every mutation still funnels through the round-boundary control
-//! queue — the socket layer adds no new synchronization.
+//! The previous front end spawned one thread per connection, which is
+//! exactly the synchronization-overhead trap the paper describes one
+//! layer down: at the ROADMAP's 10k-client target the daemon drowns in
+//! thread spawn/wakeup costs before the scheduler breaks a sweat. The
+//! rewrite keeps the wire protocol byte-for-byte intact and changes only
+//! the machinery:
+//!
+//! * **One loop thread** owns every listener and every connection,
+//!   parked in `poll(2)` (raw FFI — no runtime dependency) until a
+//!   socket or the service has something for it.
+//! * **Self-pipe waker**: the loop registers a [`Waker`] with the
+//!   service ([`super::Control::SetWaker`]); the service writes one byte
+//!   into the pipe after processing controls or fanning out telemetry,
+//!   which is what lets the loop use the *deferred* [`ServiceHandle`]
+//!   calls — it enqueues a control, remembers the reply channel in the
+//!   connection's in-order pending queue, and never blocks.
+//! * **Bounded buffers**: one persistent read buffer per connection
+//!   (lines are parsed in place — no per-chunk copy, no per-request
+//!   `String`), one write buffer flushed writability-driven, both
+//!   capped. Watch fan-out pulls from the subscription's bounded
+//!   [`WatchStream`] only when the socket can take more.
+//! * **Connection cap with loud shedding**: past `max_conns` the
+//!   accept loop answers `{"ok":false,...,"shed":true}` and closes,
+//!   instead of growing without bound — overload is visible, not a
+//!   mystery timeout.
+//!
+//! Every mutation still funnels through the round-boundary control
+//! queue; the socket layer adds no new synchronization.
 //!
 //! [`ServiceSession`]: super::ServiceSession
+//! [`Waker`]: super::Waker
 
 use super::proto::{self, Obj, Request};
-use super::{FinishedJob, JobStatus, ServiceHandle};
+use super::{
+    DrainReport, FinishedJob, JobStatus, ServiceHandle, StatusReport, Submitted, Waker,
+    WatchStream,
+};
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::raw::{c_int, c_short, c_ulong};
+use std::os::unix::io::{AsRawFd, RawFd};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Weak};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-/// Bind the service socket. A stale socket file left by a dead daemon
-/// is removed and rebound; a *live* one (something accepts connections)
-/// is a loud error — two daemons must not fight over one path.
+/// Bind the service's Unix socket. A stale socket file left by a dead
+/// daemon is removed and rebound; a *live* one (something accepts
+/// connections) is a loud error — two daemons must not fight over one
+/// path. Anything that is not a socket is refused outright: the old
+/// code unlinked whatever sat at the path after any failed connect, so
+/// `cupso serve --socket <some-regular-file>` could delete a user's
+/// file.
 pub fn bind(path: &Path) -> Result<UnixListener> {
     match UnixListener::bind(path) {
         Ok(listener) => Ok(listener),
-        Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
-            if UnixStream::connect(path).is_ok() {
-                bail!("{} is already being served", path.display());
+        Err(e) if e.kind() == io::ErrorKind::AddrInUse => {
+            use std::os::unix::fs::FileTypeExt;
+            let meta = std::fs::symlink_metadata(path)
+                .with_context(|| format!("inspecting {}", path.display()))?;
+            if !meta.file_type().is_socket() {
+                bail!(
+                    "{} exists and is not a socket — refusing to replace it",
+                    path.display()
+                );
             }
-            std::fs::remove_file(path)
-                .with_context(|| format!("removing stale socket {}", path.display()))?;
-            UnixListener::bind(path)
-                .with_context(|| format!("binding {} after stale cleanup", path.display()))
+            match UnixStream::connect(path) {
+                Ok(_) => bail!("{} is already being served", path.display()),
+                // Only connection-refused proves the bound daemon is
+                // gone. Any other probe failure (permissions, interrupts)
+                // is not evidence of staleness — removing on it would
+                // reintroduce the delete-someone-else's-socket bug.
+                Err(probe) if probe.kind() == io::ErrorKind::ConnectionRefused => {
+                    std::fs::remove_file(path)
+                        .with_context(|| format!("removing stale socket {}", path.display()))?;
+                    UnixListener::bind(path)
+                        .with_context(|| format!("binding {} after stale cleanup", path.display()))
+                }
+                Err(probe) => Err(probe)
+                    .with_context(|| format!("probing existing socket {}", path.display())),
+            }
         }
         Err(e) => Err(e).with_context(|| format!("binding {}", path.display())),
     }
 }
 
-/// Spawn the accept loop: one detached thread per connection, each
-/// driving `handle`. The loop ends when the listener errors (e.g. the
-/// process is shutting down and closed it).
+/// Bind the TCP listener (`cupso serve --listen host:port`).
+pub fn bind_tcp(addr: &str) -> Result<TcpListener> {
+    TcpListener::bind(addr).with_context(|| format!("binding tcp {addr}"))
+}
+
+/// Default cap on concurrent connections (`cupso serve --max-conns`).
+/// Past it, new clients are shed loudly — see the module docs.
+pub const DEFAULT_MAX_CONNS: usize = 1024;
+
+/// One bound accept socket: Unix and TCP share the connection-handling
+/// core behind this.
+pub enum Listener {
+    /// Unix-domain (`--socket path`).
+    Unix(UnixListener),
+    /// TCP (`--listen host:port`).
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self) -> io::Result<()> {
+        match self {
+            Listener::Unix(l) => l.set_nonblocking(true),
+            Listener::Tcp(l) => l.set_nonblocking(true),
+        }
+    }
+
+    fn raw_fd(&self) -> RawFd {
+        match self {
+            Listener::Unix(l) => l.as_raw_fd(),
+            Listener::Tcp(l) => l.as_raw_fd(),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                // One JSON line per exchange: Nagle only adds latency.
+                let _ = s.set_nodelay(true);
+                Stream::Tcp(s)
+            }),
+        }
+    }
+}
+
+/// One accepted connection's transport.
+enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    fn set_nonblocking(&self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(true),
+            Stream::Tcp(s) => s.set_nonblocking(true),
+        }
+    }
+
+    fn raw_fd(&self) -> RawFd {
+        match self {
+            Stream::Unix(s) => s.as_raw_fd(),
+            Stream::Tcp(s) => s.as_raw_fd(),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Spawn the event loop over one Unix listener with the default cap —
+/// the historical entry point, kept for callers and tests.
 pub fn spawn_server(listener: UnixListener, handle: ServiceHandle) -> JoinHandle<()> {
+    spawn_server_on(vec![Listener::Unix(listener)], handle, DEFAULT_MAX_CONNS)
+}
+
+/// Spawn the event-loop thread serving every listener (Unix and TCP
+/// side by side), capped at `max_conns` concurrent connections.
+pub fn spawn_server_on(
+    listeners: Vec<Listener>,
+    handle: ServiceHandle,
+    max_conns: usize,
+) -> JoinHandle<()> {
     std::thread::Builder::new()
-        .name("cupso-serve-accept".into())
+        .name("cupso-serve-loop".into())
         .spawn(move || {
-            for conn in listener.incoming() {
-                let Ok(stream) = conn else { break };
-                let handle = handle.clone();
-                let _ = std::thread::Builder::new()
-                    .name("cupso-serve-conn".into())
-                    .spawn(move || {
-                        let _ = handle_conn(stream, handle);
-                    });
+            match EventLoop::new(listeners, handle, max_conns) {
+                Ok(ev) => {
+                    if let Err(e) = ev.run() {
+                        eprintln!("cupso serve: event loop error: {e:#}");
+                    }
+                }
+                Err(e) => eprintln!("cupso serve: event loop setup failed: {e:#}"),
             }
         })
-        .expect("spawn accept thread")
+        .expect("spawn event loop thread")
 }
 
 /// Longest request line the server accepts. Generous for any real
@@ -62,140 +216,628 @@ pub fn spawn_server(listener: UnixListener, handle: ServiceHandle) -> JoinHandle
 /// newline-free sender can pin per connection.
 const MAX_REQUEST_BYTES: usize = 1 << 20;
 
-/// Read one `\n`-terminated line, refusing to buffer more than `max`
-/// bytes (`BufRead::lines` would grow without bound on a newline-free
-/// stream). `Ok(None)` = clean EOF.
-fn read_line_bounded(reader: &mut impl BufRead, max: usize) -> Result<Option<String>> {
-    let mut line: Vec<u8> = Vec::new();
-    loop {
-        let (chunk, newline_at) = {
-            let buf = reader.fill_buf().context("reading request line")?;
-            if buf.is_empty() {
-                if line.is_empty() {
-                    return Ok(None);
-                }
-                bail!("connection closed mid-request");
-            }
-            let newline_at = buf.iter().position(|&b| b == b'\n');
-            let take = newline_at.map_or(buf.len(), |p| p);
-            (buf[..take].to_vec(), newline_at)
-        };
-        if line.len() + chunk.len() > max {
-            bail!("request line exceeds {max} bytes");
+/// Unflushed reply/telemetry bytes a connection may hold before the
+/// loop stops pumping (and stops reading new requests from) it.
+const WBUF_SOFT_CAP: usize = 256 * 1024;
+
+/// Unanswered pipelined requests a connection may queue before the loop
+/// stops reading from it.
+const MAX_PIPELINE: usize = 128;
+
+/// Fallback poll timeout. The waker is the real wake path; the timeout
+/// only bounds how stale the loop can get if a wake is ever lost.
+const POLL_TIMEOUT_MS: c_int = 200;
+
+// ---- poll(2) FFI (the loop's only unsafe surface) ----
+
+/// POSIX `struct pollfd`.
+#[repr(C)]
+struct PollFd {
+    fd: RawFd,
+    events: c_short,
+    revents: c_short,
+}
+
+const POLLIN: c_short = 0x001;
+const POLLOUT: c_short = 0x004;
+const POLLERR: c_short = 0x008;
+const POLLHUP: c_short = 0x010;
+const POLLNVAL: c_short = 0x020;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+}
+
+/// Safe wrapper: block until an fd is ready or `timeout_ms` passes.
+/// EINTR reads as "zero fds ready" — the caller's loop just re-polls.
+fn poll_wait(fds: &mut [PollFd], timeout_ms: c_int) -> io::Result<usize> {
+    // SAFETY: `fds` is a live, exclusively borrowed slice of #[repr(C)]
+    // pollfd records; its length is passed alongside the pointer, and
+    // poll(2) only reads fd/events and writes revents within that
+    // bound. The slice outlives the call.
+    let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
+    if n < 0 {
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::Interrupted {
+            return Ok(0);
         }
-        line.extend_from_slice(&chunk);
-        match newline_at {
-            Some(p) => {
-                reader.consume(p + 1);
-                let text = String::from_utf8(line).context("request line is not UTF-8")?;
-                return Ok(Some(text));
-            }
-            None => reader.consume(chunk.len()),
+        return Err(err);
+    }
+    Ok(n as usize)
+}
+
+/// One request's reply, queued in arrival order: responses must land in
+/// request order even though the service answers asynchronously, so the
+/// head of this queue gates everything behind it.
+enum Pending {
+    /// Already rendered (ping, parse errors, the watch ack).
+    Ready(String),
+    Submit(Receiver<Result<Submitted, String>>),
+    Cancel(Receiver<Result<FinishedJob, String>>),
+    Status(Receiver<StatusReport>),
+    Drain(Receiver<Result<DrainReport, String>>),
+}
+
+/// One live connection: transport plus bounded read/write buffers and
+/// the in-order pending-reply queue.
+struct Conn {
+    stream: Stream,
+    /// Unparsed request bytes. Persistent: lines are parsed in place
+    /// and the consumed prefix drained, so the steady request path
+    /// copies nothing per chunk and allocates no per-line `String`.
+    rbuf: Vec<u8>,
+    /// Rendered-but-unflushed reply/telemetry bytes...
+    wbuf: Vec<u8>,
+    /// ...of which `..wpos` has already reached the socket.
+    wpos: usize,
+    pending: VecDeque<Pending>,
+    /// Set once a `watch` request flipped this connection one-way.
+    watch: Option<WatchStream>,
+    /// Held from the drain request until its reply is *rendered*...
+    drain_latch: Option<Sender<()>>,
+    /// ...then armed here and fired when the reply is *flushed* — the
+    /// daemon defers its exit on this latch, so the acknowledgement
+    /// reaches the client before the process goes away.
+    fire_on_flush: Option<Sender<()>>,
+    /// Client closed its write half.
+    eof: bool,
+    /// Close once `wbuf` is flushed.
+    closing: bool,
+    /// Drop at the next sweep.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: Stream) -> Self {
+        Self {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            watch: None,
+            drain_latch: None,
+            fire_on_flush: None,
+            eof: false,
+            closing: false,
+            dead: false,
         }
+    }
+
+    fn unflushed(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Nothing left to emit: the shutdown sweep's retention test.
+    fn drained_out(&self) -> bool {
+        self.unflushed() == 0
+            && match &self.watch {
+                Some(_) => self.closing,
+                None => self.pending.is_empty(),
+            }
     }
 }
 
-fn handle_conn(stream: UnixStream, handle: ServiceHandle) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
-    let mut writer = stream;
-    while let Some(line) = read_line_bounded(&mut reader, MAX_REQUEST_BYTES)? {
-        if line.trim().is_empty() {
-            continue;
+/// Append one protocol line to a write buffer.
+fn push_line(wbuf: &mut Vec<u8>, line: &str) {
+    wbuf.extend_from_slice(line.as_bytes());
+    wbuf.push(b'\n');
+}
+
+/// The single-threaded server core. See the module docs.
+struct EventLoop {
+    handle: ServiceHandle,
+    listeners: Vec<Listener>,
+    /// Read side of the self-pipe the [`Waker`] writes into.
+    wake_rx: UnixStream,
+    /// Liveness probe: the service holds the only strong count of its
+    /// registered waker, so this upgrading to `None` means the service
+    /// loop has returned and it is time to flush and exit.
+    alive: Weak<dyn Fn() + Send + Sync>,
+    conns: Vec<Conn>,
+    pollfds: Vec<PollFd>,
+    max_conns: usize,
+}
+
+impl EventLoop {
+    fn new(listeners: Vec<Listener>, handle: ServiceHandle, max_conns: usize) -> Result<Self> {
+        for l in &listeners {
+            l.set_nonblocking().context("listener nonblocking")?;
         }
-        let reply = match Request::parse(&line) {
-            Err(e) => proto::error_line(&format!("{e:#}")),
-            Ok(Request::Drain) => {
-                // Drain shuts the daemon down; hand it a completion
-                // latch so it waits for this response to reach the
-                // client before the process exits (otherwise the reply
-                // write races process teardown and the client sees EOF).
-                let (done_tx, done_rx) = std::sync::mpsc::channel();
-                let reply = match handle.drain_then(done_rx) {
-                    Ok(report) => {
-                        let mut obj = Obj::new()
-                            .bool("ok", true)
-                            .str("op", "drain")
-                            .int("snapshotted", report.snapshotted as u64)
-                            .int("finished", report.finished);
-                        if let Some(dir) = &report.dir {
-                            obj = obj.str("dir", &dir.display().to_string());
-                        }
-                        obj.render()
-                    }
-                    Err(e) => proto::error_line(&format!("{e:#}")),
-                };
-                writeln!(writer, "{reply}")?;
-                writer.flush()?;
-                let _ = done_tx.send(());
-                continue;
-            }
-            Ok(Request::Watch) => {
-                // Ack, then switch to the one-way stream until the
-                // client disconnects or the service ends.
-                let rx = match handle.watch() {
-                    Ok(rx) => rx,
-                    Err(e) => {
-                        writeln!(writer, "{}", proto::error_line(&format!("{e:#}")))?;
-                        return Ok(());
-                    }
-                };
-                writeln!(writer, "{}", Obj::new().bool("ok", true).str("op", "watch").render())?;
-                writer.flush()?;
-                for event in rx {
-                    if writeln!(writer, "{event}").is_err() {
-                        break; // client went away; retain() reaps us
-                    }
-                }
+        let (wake_tx, wake_rx) = UnixStream::pair().context("creating self-pipe")?;
+        wake_tx.set_nonblocking(true).context("self-pipe")?;
+        wake_rx.set_nonblocking(true).context("self-pipe")?;
+        let waker: Waker = Arc::new(move || {
+            // A full pipe is fine — the loop is already due to wake.
+            let _ = (&wake_tx).write(&[1u8]);
+        });
+        let alive = Arc::downgrade(&waker);
+        // MPSC ordering: registered before any client control this loop
+        // will ever enqueue, so the service always has the waker by the
+        // time a deferred reply needs announcing.
+        handle.set_waker(waker)?;
+        Ok(Self {
+            handle,
+            listeners,
+            wake_rx,
+            alive,
+            conns: Vec::new(),
+            pollfds: Vec::new(),
+            max_conns: max_conns.max(1),
+        })
+    }
+
+    fn run(mut self) -> Result<()> {
+        loop {
+            if self.alive.upgrade().is_none() {
+                // Service loop returned: flush what remains and exit.
+                self.shutdown_flush();
                 return Ok(());
             }
-            Ok(req) => respond(&handle, req),
-        };
-        writeln!(writer, "{reply}")?;
-        writer.flush()?;
+            self.build_pollfds();
+            poll_wait(&mut self.pollfds, POLL_TIMEOUT_MS).context("poll")?;
+            if self.pollfds[0].revents & (POLLIN | POLLERR | POLLHUP) != 0 {
+                self.drain_wake();
+            }
+            // Connection events against this iteration's pollfd
+            // snapshot (fresh accepts simply poll next time around).
+            let base = 1 + self.listeners.len();
+            for i in 0..self.conns.len() {
+                let revents = self.pollfds[base + i].revents;
+                if revents & (POLLERR | POLLNVAL) != 0 {
+                    self.conns[i].dead = true;
+                    continue;
+                }
+                if revents & (POLLIN | POLLHUP) != 0
+                    && !read_requests(&self.handle, &mut self.conns[i])
+                {
+                    self.conns[i].dead = true;
+                }
+            }
+            // Pump: service replies and watch telemetry into write
+            // buffers, write buffers into sockets.
+            for conn in &mut self.conns {
+                if conn.dead {
+                    continue;
+                }
+                pump_replies(conn);
+                pump_watch(conn);
+                if !flush_conn(conn) {
+                    conn.dead = true;
+                    continue;
+                }
+                if conn.unflushed() == 0
+                    && (conn.closing
+                        || (conn.eof && conn.watch.is_none() && conn.pending.is_empty()))
+                {
+                    conn.dead = true;
+                }
+            }
+            self.conns.retain(|c| !c.dead);
+            self.accept_all();
+        }
     }
-    Ok(())
+
+    fn build_pollfds(&mut self) {
+        self.pollfds.clear();
+        self.pollfds.push(PollFd {
+            fd: self.wake_rx.as_raw_fd(),
+            events: POLLIN,
+            revents: 0,
+        });
+        for l in &self.listeners {
+            self.pollfds.push(PollFd {
+                fd: l.raw_fd(),
+                events: POLLIN,
+                revents: 0,
+            });
+        }
+        for c in &self.conns {
+            let backpressured =
+                c.pending.len() >= MAX_PIPELINE || c.unflushed() >= WBUF_SOFT_CAP;
+            let mut events = 0;
+            if !c.eof && !c.closing && !backpressured {
+                events |= POLLIN;
+            }
+            if c.unflushed() > 0 {
+                events |= POLLOUT;
+            }
+            self.pollfds.push(PollFd {
+                fd: c.stream.raw_fd(),
+                events,
+                revents: 0,
+            });
+        }
+    }
+
+    fn drain_wake(&mut self) {
+        let mut scratch = [0u8; 64];
+        loop {
+            match (&self.wake_rx).read(&mut scratch) {
+                Ok(0) => break, // write side gone with the service
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break, // WouldBlock: drained
+            }
+        }
+    }
+
+    /// Accept everything waiting on every listener. Past the cap each
+    /// accept is answered with a loud shed line and closed — overload
+    /// must be visible to the client, not a mystery timeout, and the
+    /// daemon's memory stays bounded by `max_conns` connections.
+    fn accept_all(&mut self) {
+        for l in &self.listeners {
+            loop {
+                match l.accept() {
+                    Ok(stream) => {
+                        if self.conns.len() >= self.max_conns {
+                            shed(stream, self.max_conns);
+                            continue;
+                        }
+                        if stream.set_nonblocking().is_err() {
+                            continue;
+                        }
+                        self.conns.push(Conn::new(stream));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => break, // WouldBlock: backlog drained
+                }
+            }
+        }
+    }
+
+    /// The service is gone: resolve every still-pending reply (their
+    /// channels are disconnected — each becomes a loud error line),
+    /// drain ended watch backlogs, and flush within a bounded grace
+    /// period so a drain acknowledgement or final `end` line never
+    /// silently vanishes with the process.
+    fn shutdown_flush(&mut self) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            for conn in &mut self.conns {
+                pump_replies(conn);
+                pump_watch(conn);
+                if !flush_conn(conn) {
+                    conn.dead = true;
+                }
+            }
+            self.conns.retain(|c| !c.dead && !c.drained_out());
+            if self.conns.is_empty() || Instant::now() >= deadline {
+                return;
+            }
+            self.pollfds.clear();
+            for c in &self.conns {
+                self.pollfds.push(PollFd {
+                    fd: c.stream.raw_fd(),
+                    events: POLLOUT,
+                    revents: 0,
+                });
+            }
+            if poll_wait(&mut self.pollfds, 50).is_err() {
+                return;
+            }
+        }
+    }
 }
 
-/// Execute one non-watch request and render its response line.
-fn respond(handle: &ServiceHandle, req: Request) -> String {
-    let result = match req {
-        Request::Ping => Ok(Obj::new().bool("ok", true).str("op", "ping").render()),
-        Request::Submit(job) => crate::scheduler::JobSpec::from_config(&job)
-            .and_then(|spec| handle.submit(spec))
-            .map(|ack| {
-                Obj::new()
-                    .bool("ok", true)
-                    .str("op", "submit")
-                    .str("name", &ack.name)
-                    .int("slot", ack.slot as u64)
-                    .int("stream", ack.stream as u64)
-                    .render()
-            }),
-        Request::Cancel { name } => handle.cancel(&name).map(|row| {
-            Obj::new()
-                .bool("ok", true)
-                .str("op", "cancel")
-                .raw("job", &finished_json(&row))
-                .render()
-        }),
-        Request::Status => handle.status().map(|report| {
-            let live = proto::array(report.live.iter().map(live_json));
-            let finished = proto::array(report.finished.iter().map(finished_json));
-            Obj::new()
-                .bool("ok", true)
-                .str("op", "status")
-                .int("rounds", report.rounds)
-                .int("streams", report.streams as u64)
-                .int("finished_total", report.finished_total)
-                .raw("live", &live)
-                .raw("finished", &finished)
-                .render()
-        }),
-        Request::Drain | Request::Watch => {
-            unreachable!("drain and watch are handled by the connection loop")
+/// Refuse one over-cap connection, loudly.
+fn shed(mut stream: Stream, cap: usize) {
+    let line = Obj::new()
+        .bool("ok", false)
+        .str(
+            "error",
+            &format!("server at its connection cap ({cap}); retry later"),
+        )
+        .bool("shed", true)
+        .render();
+    let _ = stream.set_nonblocking();
+    // Best effort: one nonblocking write into the fresh socket buffer.
+    let mut bytes = Vec::with_capacity(line.len() + 1);
+    push_line(&mut bytes, &line);
+    let _ = stream.write(&bytes);
+}
+
+/// Drain the socket into the connection's read buffer and dispatch any
+/// complete request lines. `false` = transport error, drop the
+/// connection.
+fn read_requests(handle: &ServiceHandle, conn: &mut Conn) -> bool {
+    let mut scratch = [0u8; 4096];
+    loop {
+        match conn.stream.read(&mut scratch) {
+            Ok(0) => {
+                conn.eof = true;
+                return true;
+            }
+            Ok(n) => {
+                if conn.watch.is_some() || conn.closing {
+                    continue; // one-way stream: inbound bytes are discarded
+                }
+                conn.rbuf.extend_from_slice(&scratch[..n]);
+                drain_lines(handle, conn);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
         }
+    }
+}
+
+/// Parse and dispatch every complete line in the read buffer, in place:
+/// the buffer itself is the line buffer (the old per-connection reader
+/// copied each chunk through a fresh `to_vec` and built a `String` per
+/// request — pure overhead on the hot path).
+fn drain_lines(handle: &ServiceHandle, conn: &mut Conn) {
+    let rbuf = std::mem::take(&mut conn.rbuf);
+    let mut consumed = 0usize;
+    while let Some(nl) = rbuf[consumed..].iter().position(|&b| b == b'\n') {
+        let line = &rbuf[consumed..consumed + nl];
+        consumed += nl + 1;
+        handle_line(handle, conn, line);
+        if conn.watch.is_some() {
+            // Flipped one-way: everything after the watch request is
+            // discarded by protocol.
+            consumed = rbuf.len();
+            break;
+        }
+    }
+    conn.rbuf = rbuf;
+    conn.rbuf.drain(..consumed);
+    if conn.rbuf.len() > MAX_REQUEST_BYTES {
+        conn.pending.push_back(Pending::Ready(proto::error_line(&format!(
+            "request line exceeds {MAX_REQUEST_BYTES} bytes"
+        ))));
+        conn.rbuf.clear();
+        conn.closing = true;
+    }
+}
+
+/// Dispatch one request line: immediate answers (ping, errors, the
+/// watch ack) enter the pending queue pre-rendered; everything else
+/// enqueues a control and parks its reply channel there. Either way the
+/// queue preserves request order.
+fn handle_line(handle: &ServiceHandle, conn: &mut Conn, line: &[u8]) {
+    let Ok(text) = std::str::from_utf8(line) else {
+        conn.pending
+            .push_back(Pending::Ready(proto::error_line("request line is not UTF-8")));
+        return;
     };
-    result.unwrap_or_else(|e| proto::error_line(&format!("{e:#}")))
+    if text.trim().is_empty() {
+        return;
+    }
+    let pending = match Request::parse(text) {
+        Err(e) => Pending::Ready(proto::error_line(&format!("{e:#}"))),
+        Ok(Request::Ping) => {
+            Pending::Ready(Obj::new().bool("ok", true).str("op", "ping").render())
+        }
+        Ok(Request::Submit(job)) => match crate::scheduler::JobSpec::from_config(&job) {
+            Err(e) => Pending::Ready(proto::error_line(&format!("{e:#}"))),
+            Ok(spec) => match handle.submit_deferred(spec) {
+                Ok(rx) => Pending::Submit(rx),
+                Err(e) => Pending::Ready(proto::error_line(&format!("{e:#}"))),
+            },
+        },
+        Ok(Request::Cancel { name }) => match handle.cancel_deferred(&name) {
+            Ok(rx) => Pending::Cancel(rx),
+            Err(e) => Pending::Ready(proto::error_line(&format!("{e:#}"))),
+        },
+        Ok(Request::Status) => match handle.status_deferred() {
+            Ok(rx) => Pending::Status(rx),
+            Err(e) => Pending::Ready(proto::error_line(&format!("{e:#}"))),
+        },
+        Ok(Request::Drain) => {
+            let (latch_tx, latch_rx) = channel();
+            match handle.drain_deferred(Some(latch_rx)) {
+                Ok(rx) => {
+                    conn.drain_latch = Some(latch_tx);
+                    Pending::Drain(rx)
+                }
+                Err(e) => Pending::Ready(proto::error_line(&format!("{e:#}"))),
+            }
+        }
+        Ok(Request::Watch) => match handle.watch() {
+            Ok(stream) => {
+                conn.watch = Some(stream);
+                Pending::Ready(Obj::new().bool("ok", true).str("op", "watch").render())
+            }
+            Err(e) => Pending::Ready(proto::error_line(&format!("{e:#}"))),
+        },
+    };
+    conn.pending.push_back(pending);
+}
+
+/// Move ready replies from the head of the pending queue into the write
+/// buffer — head-of-line order is the protocol's reply order. A
+/// disconnected reply channel (service gone mid-request) resolves to a
+/// loud error line rather than a silent drop.
+fn pump_replies(conn: &mut Conn) {
+    while conn.unflushed() < WBUF_SOFT_CAP {
+        let line = match conn.pending.front() {
+            None => break,
+            Some(Pending::Ready(_)) => match conn.pending.pop_front() {
+                Some(Pending::Ready(line)) => line,
+                _ => unreachable!("front was Ready"),
+            },
+            Some(Pending::Submit(rx)) => match rx.try_recv() {
+                Err(TryRecvError::Empty) => break,
+                Ok(ack) => {
+                    conn.pending.pop_front();
+                    submit_line(ack)
+                }
+                Err(TryRecvError::Disconnected) => {
+                    conn.pending.pop_front();
+                    gone_line()
+                }
+            },
+            Some(Pending::Cancel(rx)) => match rx.try_recv() {
+                Err(TryRecvError::Empty) => break,
+                Ok(ack) => {
+                    conn.pending.pop_front();
+                    cancel_line(ack)
+                }
+                Err(TryRecvError::Disconnected) => {
+                    conn.pending.pop_front();
+                    gone_line()
+                }
+            },
+            Some(Pending::Status(rx)) => match rx.try_recv() {
+                Err(TryRecvError::Empty) => break,
+                Ok(report) => {
+                    conn.pending.pop_front();
+                    status_line(&report)
+                }
+                Err(TryRecvError::Disconnected) => {
+                    conn.pending.pop_front();
+                    gone_line()
+                }
+            },
+            Some(Pending::Drain(rx)) => match rx.try_recv() {
+                Err(TryRecvError::Empty) => break,
+                Ok(ack) => {
+                    conn.pending.pop_front();
+                    // Arm the exit latch: fired once this reply reaches
+                    // the socket, releasing the daemon to exit.
+                    conn.fire_on_flush = conn.drain_latch.take();
+                    drain_line(ack)
+                }
+                Err(TryRecvError::Disconnected) => {
+                    conn.pending.pop_front();
+                    conn.fire_on_flush = conn.drain_latch.take();
+                    gone_line()
+                }
+            },
+        };
+        push_line(&mut conn.wbuf, &line);
+    }
+}
+
+/// Writability-driven watch fan-out: pull telemetry lines from the
+/// bounded subscription only while the write buffer has room, and only
+/// once every pending reply is out (the ack precedes the stream). When
+/// the stream has ended and its backlog is fully buffered, the
+/// connection closes after the flush.
+fn pump_watch(conn: &mut Conn) {
+    let Some(watch) = &conn.watch else { return };
+    if !conn.pending.is_empty() {
+        return;
+    }
+    while conn.unflushed() < WBUF_SOFT_CAP {
+        match watch.try_next() {
+            Some(line) => push_line(&mut conn.wbuf, &line),
+            None => {
+                if watch.ended() {
+                    conn.closing = true;
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Flush the write buffer as far as the socket allows. `false` =
+/// transport error, drop the connection.
+fn flush_conn(conn: &mut Conn) -> bool {
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return false,
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+        if let Some(latch) = conn.fire_on_flush.take() {
+            let _ = latch.send(());
+        }
+    } else if conn.wpos > WBUF_SOFT_CAP {
+        // Reclaim the flushed prefix so a long-lived watch connection
+        // does not grow its buffer without bound.
+        conn.wbuf.drain(..conn.wpos);
+        conn.wpos = 0;
+    }
+    true
+}
+
+fn gone_line() -> String {
+    proto::error_line("service shut down mid-request")
+}
+
+fn submit_line(ack: Result<Submitted, String>) -> String {
+    match ack {
+        Ok(ack) => Obj::new()
+            .bool("ok", true)
+            .str("op", "submit")
+            .str("name", &ack.name)
+            .int("slot", ack.slot as u64)
+            .int("stream", ack.stream as u64)
+            .render(),
+        Err(e) => proto::error_line(&e),
+    }
+}
+
+fn cancel_line(ack: Result<FinishedJob, String>) -> String {
+    match ack {
+        Ok(row) => Obj::new()
+            .bool("ok", true)
+            .str("op", "cancel")
+            .raw("job", &finished_json(&row))
+            .render(),
+        Err(e) => proto::error_line(&e),
+    }
+}
+
+fn status_line(report: &StatusReport) -> String {
+    let live = proto::array(report.live.iter().map(live_json));
+    let finished = proto::array(report.finished.iter().map(finished_json));
+    Obj::new()
+        .bool("ok", true)
+        .str("op", "status")
+        .int("rounds", report.rounds)
+        .int("streams", report.streams as u64)
+        .int("finished_total", report.finished_total)
+        .raw("live", &live)
+        .raw("finished", &finished)
+        .render()
+}
+
+fn drain_line(ack: Result<DrainReport, String>) -> String {
+    match ack {
+        Ok(report) => {
+            let mut obj = Obj::new()
+                .bool("ok", true)
+                .str("op", "drain")
+                .int("snapshotted", report.snapshotted as u64)
+                .int("finished", report.finished);
+            if let Some(dir) = &report.dir {
+                obj = obj.str("dir", &dir.display().to_string());
+            }
+            obj.render()
+        }
+        Err(e) => proto::error_line(&e),
+    }
 }
 
 fn live_json(j: &JobStatus) -> String {

@@ -141,6 +141,20 @@ fn interleaving_is_policy_invariant_for_bit_exact_engines() {
     for (a, b) in rr.iter().zip(&edf) {
         assert_outputs_equal(&a.output, &b.output, &a.name);
     }
+    // Weighted-fair (with tenant labels steering its order) is held to
+    // the same bar: policy and tenancy reorder rounds, never numerics.
+    let wf = {
+        let mut specs = mk_specs();
+        specs[0].tenant = Some(Arc::from("t-a"));
+        specs[1].tenant = Some(Arc::from("t-b"));
+        JobScheduler::with_workers(3)
+            .policy(SchedPolicy::WeightedFair)
+            .run(&specs)
+            .unwrap()
+    };
+    for (a, b) in rr.iter().zip(&wf) {
+        assert_outputs_equal(&a.output, &b.output, &format!("wf {}", a.name));
+    }
 }
 
 #[test]
@@ -251,6 +265,186 @@ fn concurrent_streams_match_solo_runs_bit_exactly() {
             );
         }
     }
+}
+
+/// ISSUE 8 tentpole: the weighted-fair policy only reorders rounds.
+/// With tenant labels attached (what the policy keys on), every job
+/// still reproduces its solo run bit for bit at every streams/batch
+/// combination.
+#[test]
+fn weighted_fair_matches_solo_runs_bit_exactly() {
+    let mk_specs = || -> Vec<JobSpec> {
+        let mut specs = vec![
+            cubic_spec("a1", EngineKind::Queue, PsoParams::paper_1d(300, 30), 41),
+            cubic_spec("a2", EngineKind::Reduction, PsoParams::paper_1d(257, 22), 42),
+            cubic_spec("b1", EngineKind::LoopUnrolling, PsoParams::paper_1d(150, 28), 43),
+            cubic_spec("anon", EngineKind::Queue, PsoParams::paper_120d(64, 12), 44),
+        ];
+        specs[0].tenant = Some(Arc::from("acme"));
+        specs[1].tenant = Some(Arc::from("acme"));
+        specs[2].tenant = Some(Arc::from("bloor"));
+        specs
+    };
+    let solo: Vec<RunOutput> = mk_specs()
+        .iter()
+        .map(|s| {
+            engine::build(s.engine, 4)
+                .unwrap()
+                .run(&s.params, &Cubic, Objective::Maximize, s.seed)
+        })
+        .collect();
+    for (streams, batch) in [(1u64, 1u64), (2, 1), (2, 5), (4, 3)] {
+        let scheduler = JobScheduler::with_streams(4, streams as usize)
+            .policy(SchedPolicy::WeightedFair)
+            .batch_steps(batch);
+        let outcomes = scheduler.run(&mk_specs()).unwrap();
+        for (outcome, reference) in outcomes.iter().zip(&solo) {
+            assert_eq!(outcome.stop, StopReason::Exhausted, "{}", outcome.name);
+            assert_outputs_equal(
+                &outcome.output,
+                reference,
+                &format!("wf S={streams} batch={batch} job {}", outcome.name),
+            );
+        }
+    }
+}
+
+/// ISSUE 8 acceptance: a *service* under the weighted-fair policy, with
+/// per-tenant quotas shedding some admissions, fed by a mix of
+/// in-process, Unix-socket, and TCP clients, still finishes every
+/// admitted job with exactly its solo result. Transport, tenancy, and
+/// refused neighbours are all invisible to trajectories.
+#[test]
+fn service_under_weighted_fair_quotas_and_mixed_transports_is_bit_exact() {
+    use cupso::config::{BatchConfig, JobConfig};
+    use cupso::service::proto::{Json, Request};
+    use cupso::service::{bind, bind_tcp, spawn_server_on, Listener, ServiceSession};
+    use std::io::{BufRead, BufReader, Write};
+
+    fn roundtrip_on<S: std::io::Read + Write>(mut stream: S, line: &str) -> Json {
+        writeln!(stream, "{line}").unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        Json::parse(reply.trim()).unwrap_or_else(|e| panic!("bad response {reply:?}: {e}"))
+    }
+    fn is_ok(doc: &Json) -> bool {
+        doc.get("ok").map(|v| v == &Json::Bool(true)).unwrap_or(false)
+    }
+    fn wire_job(name: &str, engine: &str, particles: usize, iters: u64, seed: u64, tenant: &str) -> JobConfig {
+        let mut job = JobConfig::with_defaults(name);
+        job.engine = EngineKind::parse(engine).unwrap();
+        job.particles = particles;
+        job.iters = iters;
+        job.seed = seed;
+        job.tenant = Some(tenant.to_string());
+        job
+    }
+
+    let dir = std::env::temp_dir().join("cupso-determinism-service");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let socket = dir.join("svc.sock");
+
+    // Specs admitted in-process; wire jobs are built as JobConfig so the
+    // solo reference goes through the very same from_config path.
+    let a1 = || cubic_spec("a1", EngineKind::Queue, PsoParams::paper_1d(200, 2_000), 31);
+    let anon = || cubic_spec("anon", EngineKind::LoopUnrolling, PsoParams::paper_1d(64, 1_200), 34);
+    let a2 = wire_job("a2", "reduction", 96, 1_500, 32, "acme");
+    let b1 = wire_job("b1", "queue", 128, 1_800, 33, "bloor");
+
+    let knobs = BatchConfig {
+        workers: 2,
+        policy: "weighted-fair".into(),
+        streams: 2,
+        batch_steps: 1,
+        preempt_quantum: 0,
+        pack: false,
+        pack_min: 2,
+        pack_max: 0,
+        quota_jobs: 2,
+        quota_steps: 0,
+        jobs: Vec::new(),
+    };
+    let scheduler = JobScheduler::with_streams(2, 2)
+        .policy(SchedPolicy::WeightedFair)
+        .batch_steps(1);
+    let (service, handle) = ServiceSession::new(&scheduler, knobs, None, Vec::new()).unwrap();
+    let tcp = bind_tcp("127.0.0.1:0").unwrap();
+    let addr = tcp.local_addr().unwrap();
+    let listeners = vec![Listener::Unix(bind(&socket).unwrap()), Listener::Tcp(tcp)];
+    let _accept = spawn_server_on(listeners, handle.clone(), 64);
+    let svc = std::thread::spawn(move || service.run().unwrap());
+
+    // Mixed admission paths: in-process, Unix, TCP — with tenants.
+    let mut spec_a1 = a1();
+    spec_a1.tenant = Some(Arc::from("acme"));
+    handle.submit(spec_a1).unwrap();
+    let doc = roundtrip_on(
+        std::os::unix::net::UnixStream::connect(&socket).unwrap(),
+        &Request::Submit(a2.clone()).render(),
+    );
+    assert!(is_ok(&doc), "{doc:?}");
+    // A third concurrent acme job is shed at admission, loudly...
+    let doc = roundtrip_on(
+        std::net::TcpStream::connect(addr).unwrap(),
+        &Request::Submit(wire_job("a3", "queue", 64, 500, 35, "acme")).render(),
+    );
+    assert!(!is_ok(&doc), "{doc:?}");
+    assert!(doc.str_field("error").unwrap().contains("concurrent-job quota"), "{doc:?}");
+    // ...while other tenants and anonymous jobs sail through.
+    let doc = roundtrip_on(
+        std::net::TcpStream::connect(addr).unwrap(),
+        &Request::Submit(b1.clone()).render(),
+    );
+    assert!(is_ok(&doc), "{doc:?}");
+    handle.submit(anon()).unwrap();
+
+    // Run the admitted fleet dry, then stop the idle service (the
+    // event loop holds its own handle, so shutdown goes over the wire).
+    loop {
+        let status = handle.status().unwrap();
+        if status.live.is_empty() && status.finished.len() == 4 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let doc = roundtrip_on(
+        std::net::TcpStream::connect(addr).unwrap(),
+        &Request::Drain.render(),
+    );
+    assert!(is_ok(&doc), "{doc:?}");
+    drop(handle);
+    let end = svc.join().unwrap();
+    assert_eq!(end.finished_total, 4);
+
+    // Every admitted job matches its solo run exactly — the shed a3 and
+    // the transport mix left no trace on anyone's numerics.
+    let solo_specs = vec![
+        {
+            let mut s = a1();
+            s.tenant = Some(Arc::from("acme"));
+            s
+        },
+        JobSpec::from_config(&a2).unwrap(),
+        JobSpec::from_config(&b1).unwrap(),
+        anon(),
+    ];
+    for spec in &solo_specs {
+        let reference = engine::build(spec.engine, 2)
+            .unwrap()
+            .run(&spec.params, &Cubic, Objective::Maximize, spec.seed);
+        let served = end
+            .results
+            .iter()
+            .find(|r| r.name == &*spec.name)
+            .unwrap_or_else(|| panic!("{} missing from results", spec.name));
+        assert_eq!(served.stop, StopReason::Exhausted, "{}", spec.name);
+        assert_eq!(served.steps, spec.params.max_iter, "{}", spec.name);
+        assert_eq!(served.gbest_fit, reference.gbest_fit, "{}", spec.name);
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// ISSUE 4 determinism extension: the persistent-executor stepping path

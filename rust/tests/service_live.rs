@@ -1,7 +1,8 @@
 //! Service-layer integration: drive a live [`ServiceSession`] over its
-//! real Unix-socket JSON protocol, in process — submit, status, watch,
-//! cancel, drain — then prove the drained snapshot resumes to the
-//! uninterrupted results through the library's resume path.
+//! real line-JSON protocol — Unix socket and TCP side by side — in
+//! process: submit, status, watch, cancel, drain — then prove the
+//! drained snapshot resumes to the uninterrupted results through the
+//! library's resume path.
 //!
 //! (The `cupso` binary's serve/submit/... verbs are exercised end to end
 //! in `cli_launcher.rs`; this tier pins the protocol and the
@@ -9,12 +10,13 @@
 
 use cupso::checkpoint::store::read_snapshot;
 use cupso::config::{BatchConfig, EngineKind};
-use cupso::fitness::{Cubic, Objective};
+use cupso::fitness::{Cubic, Fitness, Objective};
 use cupso::pso::PsoParams;
 use cupso::scheduler::{BatchRun, JobScheduler, JobSpec, StopReason};
 use cupso::service::proto::Json;
-use cupso::service::{bind, spawn_server, ServiceSession};
-use std::io::{BufRead, BufReader, Write};
+use cupso::service::{bind, bind_tcp, spawn_server, spawn_server_on, Listener, ServiceSession};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::os::unix::net::UnixStream;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -29,6 +31,8 @@ fn knobs(streams: usize) -> BatchConfig {
         pack: false,
         pack_min: 2,
         pack_max: 0,
+        quota_jobs: 0,
+        quota_steps: 0,
         jobs: Vec::new(),
     }
 }
@@ -51,20 +55,34 @@ fn temp_dir(tag: &str) -> PathBuf {
     dir
 }
 
-/// One request line → one parsed response line over a fresh connection.
-fn roundtrip(socket: &Path, line: &str) -> Json {
-    let stream = UnixStream::connect(socket).expect("connect");
-    let mut writer = stream.try_clone().unwrap();
-    writeln!(writer, "{line}").unwrap();
-    writer.flush().unwrap();
+/// One request line → one parsed response line over any fresh stream
+/// (the two transports speak the byte-identical protocol).
+fn roundtrip_on<S: Read + Write>(mut stream: S, line: &str) -> Json {
+    writeln!(stream, "{line}").unwrap();
+    stream.flush().unwrap();
     let mut reader = BufReader::new(stream);
     let mut reply = String::new();
     reader.read_line(&mut reply).unwrap();
     Json::parse(reply.trim()).unwrap_or_else(|e| panic!("bad response {reply:?}: {e}"))
 }
 
+fn roundtrip(socket: &Path, line: &str) -> Json {
+    roundtrip_on(UnixStream::connect(socket).expect("connect"), line)
+}
+
+fn roundtrip_tcp(addr: SocketAddr, line: &str) -> Json {
+    roundtrip_on(TcpStream::connect(addr).expect("connect tcp"), line)
+}
+
 fn ok(doc: &Json) -> bool {
     doc.get("ok").map(|v| v == &Json::Bool(true)).unwrap_or(false)
+}
+
+fn rows<'a>(doc: &'a Json, key: &str) -> &'a [Json] {
+    match doc.get(key) {
+        Some(Json::Arr(items)) => items,
+        other => panic!("{key} not an array: {other:?}"),
+    }
 }
 
 #[test]
@@ -317,16 +335,225 @@ fn drained_packed_service_resumes_to_uninterrupted_results() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// ISSUE 8 satellite: `bind` reclaims only *bona fide* stale sockets.
+/// The old reclaim path unlinked whatever sat at the path the moment
+/// `connect` failed — including regular files that were never ours.
 #[test]
 fn stale_socket_is_cleaned_up_and_live_socket_is_refused() {
     let dir = temp_dir("bind");
     let socket = dir.join("svc.sock");
-    // A stale file nobody listens on: bind() must replace it.
-    std::fs::write(&socket, b"").unwrap();
+    // A genuinely stale socket: a previous daemon bound it and died
+    // without unlinking (std's UnixListener does not unlink on drop).
+    drop(bind(&socket).unwrap());
+    assert!(socket.exists(), "drop must leave the socket file behind");
     let listener = bind(&socket).expect("stale socket must be reclaimed");
     // A *live* socket must be refused.
     let err = bind(&socket).unwrap_err().to_string();
     assert!(err.contains("already being served"), "{err}");
     drop(listener);
+
+    // A regular file at the path is not ours to delete: refuse loudly
+    // and leave every byte in place.
+    let decoy = dir.join("decoy.txt");
+    std::fs::write(&decoy, b"important bytes").unwrap();
+    let err = bind(&decoy).unwrap_err().to_string();
+    assert!(err.contains("not a socket"), "{err}");
+    assert_eq!(
+        std::fs::read(&decoy).unwrap(),
+        b"important bytes",
+        "bind must never unlink a non-socket"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ISSUE 8 tentpole: one service, two doors. A TCP listener and the
+/// Unix socket front the same scheduler over the byte-identical
+/// protocol; submissions through either transport are visible — and
+/// cancellable — through the other.
+#[test]
+fn tcp_and_unix_clients_share_one_service() {
+    let dir = temp_dir("tcp");
+    let socket = dir.join("svc.sock");
+    let scheduler = JobScheduler::with_streams(2, 2);
+    let (service, handle) = ServiceSession::new(
+        &scheduler,
+        knobs(2),
+        None,
+        vec![spec("resident", EngineKind::Queue, 128, 500_000, 1)],
+    )
+    .unwrap();
+    let tcp = bind_tcp("127.0.0.1:0").unwrap();
+    let addr = tcp.local_addr().unwrap();
+    let listeners = vec![Listener::Unix(bind(&socket).unwrap()), Listener::Tcp(tcp)];
+    let _accept = spawn_server_on(listeners, handle, 64);
+    let svc = std::thread::spawn(move || service.run().unwrap());
+
+    // Ping through the TCP door.
+    assert!(ok(&roundtrip_tcp(addr, r#"{"op": "ping"}"#)));
+
+    // Submit over TCP (with a tenant label riding the same `job` object)...
+    let doc = roundtrip_tcp(
+        addr,
+        r#"{"op": "submit", "job": {"name": "tcp-born", "fitness": "cubic", "engine": "reduction", "particles": 96, "iters": 400000, "seed": 2, "tenant": "edge"}}"#,
+    );
+    assert!(ok(&doc), "{doc:?}");
+
+    // ...and the Unix side sees it: one scheduler behind both doors.
+    let doc = roundtrip(&socket, r#"{"op": "status"}"#);
+    assert!(ok(&doc), "{doc:?}");
+    let live = rows(&doc, "live");
+    assert_eq!(live.len(), 2);
+    assert_eq!(live[1].str_field("name").unwrap(), "tcp-born");
+
+    // A TCP watch subscription gets the same event stream.
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        writeln!(writer, r#"{{"op": "watch"}}"#).unwrap();
+        writer.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(ok(&Json::parse(line.trim()).unwrap()), "{line:?}");
+        for _ in 0..4 {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let ev = Json::parse(line.trim()).unwrap();
+            assert_eq!(ev.str_field("event").unwrap(), "report");
+        }
+    }
+
+    // Cancel the TCP-born job from the Unix side, then shut down
+    // through TCP: a drain with no live jobs needs no snapshot dir.
+    assert!(ok(&roundtrip(&socket, r#"{"op": "cancel", "name": "tcp-born"}"#)));
+    assert!(ok(&roundtrip_tcp(addr, r#"{"op": "cancel", "name": "resident"}"#)));
+    let doc = roundtrip_tcp(addr, r#"{"op": "drain"}"#);
+    assert!(ok(&doc), "{doc:?}");
+
+    let end = svc.join().unwrap();
+    assert_eq!(end.finished_total, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ISSUE 8 tentpole: per-tenant admission quotas are enforced at the
+/// wire with loud, named errors — and a cancel releases the quota,
+/// because usage is scanned off the live slot table, never a counter.
+#[test]
+fn tenant_quotas_are_enforced_at_the_wire() {
+    let dir = temp_dir("quota");
+    let socket = dir.join("svc.sock");
+    let scheduler = JobScheduler::with_streams(2, 2);
+    let mut cfg = knobs(2);
+    cfg.quota_jobs = 1;
+    let (service, handle) = ServiceSession::new(&scheduler, cfg, None, Vec::new()).unwrap();
+    let _accept = spawn_server(bind(&socket).unwrap(), handle);
+    let svc = std::thread::spawn(move || service.run().unwrap());
+
+    let submit = |name: &str, tenant: &str| {
+        roundtrip(
+            &socket,
+            &format!(
+                r#"{{"op": "submit", "job": {{"name": "{name}", "fitness": "cubic", "particles": 64, "iters": 500000, "tenant": "{tenant}"}}}}"#
+            ),
+        )
+    };
+    // First job per tenant fits; the second trips the cap, loudly.
+    assert!(ok(&submit("a1", "acme")));
+    let doc = submit("a2", "acme");
+    assert!(!ok(&doc), "{doc:?}");
+    let err = doc.str_field("error").unwrap();
+    assert!(err.contains("concurrent-job quota"), "{err}");
+    assert!(err.contains("acme"), "{err}");
+    // Another tenant's pool is untouched.
+    assert!(ok(&submit("b1", "bloor")));
+    // Cancelling the blocker frees the slot for the refused job.
+    assert!(ok(&roundtrip(&socket, r#"{"op": "cancel", "name": "a1"}"#)));
+    assert!(ok(&submit("a2", "acme")));
+
+    for name in ["a2", "b1"] {
+        assert!(ok(&roundtrip(&socket, &format!(r#"{{"op": "cancel", "name": "{name}"}}"#))));
+    }
+    assert!(ok(&roundtrip(&socket, r#"{"op": "drain"}"#)));
+    let end = svc.join().unwrap();
+    assert_eq!(end.finished_total, 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ISSUE 8 satellite: a maximize job whose swarm never improves keeps
+/// `gbest = -inf`, which JSON cannot carry as a number. The wire
+/// renders it as `null` in status rows, watch reports, and cancel
+/// acknowledgements — and clients must round-trip that without dying.
+#[test]
+fn non_finite_gbest_is_null_on_the_wire_and_survives_clients() {
+    /// Every evaluation is -inf: under maximize, nothing ever strictly
+    /// improves on the -inf starting gbest.
+    struct BottomlessPit;
+    impl Fitness for BottomlessPit {
+        fn name(&self) -> &'static str {
+            "bottomless"
+        }
+        fn default_bounds(&self) -> (f64, f64) {
+            (-1.0, 1.0)
+        }
+        fn default_objective(&self) -> Objective {
+            Objective::Maximize
+        }
+        fn eval(&self, _x: &[f64]) -> f64 {
+            f64::NEG_INFINITY
+        }
+    }
+
+    let dir = temp_dir("null-gbest");
+    let socket = dir.join("svc.sock");
+    let scheduler = JobScheduler::with_streams(1, 1);
+    let job = JobSpec::new(
+        "abyss",
+        EngineKind::Queue,
+        PsoParams::paper_1d(64, 300_000),
+        Arc::new(BottomlessPit),
+        Objective::Maximize,
+        7,
+    );
+    let (service, handle) = ServiceSession::new(&scheduler, knobs(1), None, vec![job]).unwrap();
+    let _accept = spawn_server(bind(&socket).unwrap(), handle);
+    let svc = std::thread::spawn(move || service.run().unwrap());
+
+    // Status: the live row carries `"gbest": null`, parses, and
+    // re-renders to a line that parses right back (what
+    // `cupso status --json` prints is this exact re-render).
+    let doc = roundtrip(&socket, r#"{"op": "status"}"#);
+    assert!(ok(&doc), "{doc:?}");
+    let live = rows(&doc, "live");
+    assert_eq!(live.len(), 1);
+    assert_eq!(live[0].num_or_null_field("gbest").unwrap(), None);
+    let again = Json::parse(&doc.render()).expect("re-rendered status must parse");
+    assert_eq!(rows(&again, "live")[0].num_or_null_field("gbest").unwrap(), None);
+
+    // Watch: report rows for the never-improving job carry null too.
+    {
+        let stream = UnixStream::connect(&socket).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        writeln!(writer, r#"{{"op": "watch"}}"#).unwrap();
+        writer.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(ok(&Json::parse(line.trim()).unwrap()), "{line:?}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let ev = Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad event {line:?}: {e}"));
+        assert_eq!(ev.str_field("event").unwrap(), "report");
+        assert_eq!(ev.str_field("job").unwrap(), "abyss");
+        assert_eq!(ev.num_or_null_field("gbest").unwrap(), None);
+    }
+
+    // Cancel: the finished row tolerates the null as well.
+    let doc = roundtrip(&socket, r#"{"op": "cancel", "name": "abyss"}"#);
+    assert!(ok(&doc), "{doc:?}");
+    let job = doc.get("job").unwrap();
+    assert_eq!(job.num_or_null_field("gbest").unwrap(), None);
+
+    assert!(ok(&roundtrip(&socket, r#"{"op": "drain"}"#)));
+    svc.join().unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }

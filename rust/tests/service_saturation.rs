@@ -1,0 +1,239 @@
+//! Bounded saturation tier (ISSUE 8): the TCP event-loop front end
+//! under concurrent client load, scaled down for `cargo test`. The
+//! full stampede (1000+ concurrent TCP clients) lives in
+//! `benches/service_saturation.rs`; this tier pins the same invariants
+//! at a size every CI runner can afford:
+//!
+//! * every concurrent submit is admitted and acknowledged (admission
+//!   never deadlocks or drops a client under a burst);
+//! * a full connection table sheds over-cap clients with the loud
+//!   `{"ok": false, ..., "shed": true}` line — and frees slots again
+//!   when holders disconnect;
+//! * watch fan-out delivers every report to every subscriber exactly
+//!   once, terminated by `{"event":"end"}`.
+
+use cupso::config::BatchConfig;
+use cupso::scheduler::{JobScheduler, SchedPolicy};
+use cupso::service::proto::Json;
+use cupso::service::{bind_tcp, spawn_server_on, Listener, ServiceEnd, ServiceSession};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+struct Daemon {
+    addr: SocketAddr,
+    svc: JoinHandle<ServiceEnd>,
+}
+
+fn start(policy: &str, max_conns: usize) -> Daemon {
+    let knobs = BatchConfig {
+        workers: 2,
+        policy: policy.into(),
+        streams: 2,
+        batch_steps: 1,
+        preempt_quantum: 0,
+        pack: false,
+        pack_min: 2,
+        pack_max: 0,
+        quota_jobs: 0,
+        quota_steps: 0,
+        jobs: Vec::new(),
+    };
+    let scheduler = JobScheduler::with_streams(2, 2)
+        .policy(SchedPolicy::parse(policy).unwrap())
+        .batch_steps(1);
+    let (service, handle) = ServiceSession::new(&scheduler, knobs, None, Vec::new()).unwrap();
+    let tcp = bind_tcp("127.0.0.1:0").unwrap();
+    let addr = tcp.local_addr().unwrap();
+    let _accept = spawn_server_on(vec![Listener::Tcp(tcp)], handle, max_conns);
+    let svc = std::thread::spawn(move || service.run().unwrap());
+    Daemon { addr, svc }
+}
+
+fn roundtrip(addr: SocketAddr, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(120)))
+        .unwrap();
+    writeln!(stream, "{line}").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    Json::parse(reply.trim()).unwrap_or_else(|e| panic!("bad response {reply:?}: {e}"))
+}
+
+fn ok(doc: &Json) -> bool {
+    doc.get("ok").map(|v| v == &Json::Bool(true)).unwrap_or(false)
+}
+
+fn wait_finished(addr: SocketAddr, n: u64) {
+    loop {
+        let doc = roundtrip(addr, r#"{"op": "status"}"#);
+        let done = doc
+            .get("finished_total")
+            .and_then(|v| v.as_u64("finished_total").ok());
+        if done == Some(n) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn drain(addr: SocketAddr) {
+    let doc = roundtrip(addr, r#"{"op": "drain"}"#);
+    assert!(ok(&doc), "{doc:?}");
+}
+
+#[test]
+fn concurrent_tcp_submit_burst_is_fully_admitted() {
+    let clients = 96usize;
+    let d = start("weighted-fair", clients + 8);
+    let go = Arc::new(Barrier::new(clients));
+    let handles: Vec<_> = (0..clients)
+        .map(|i| {
+            let go = Arc::clone(&go);
+            let addr = d.addr;
+            std::thread::Builder::new()
+                .stack_size(256 * 1024)
+                .spawn(move || {
+                    go.wait();
+                    let reply = roundtrip(
+                        addr,
+                        &format!(
+                            r#"{{"op": "submit", "job": {{"name": "burst{i}", "fitness": "cubic", "particles": 16, "iters": 50, "seed": {}, "tenant": "t{}"}}}}"#,
+                            i + 1,
+                            i % 4
+                        ),
+                    );
+                    assert!(ok(&reply), "client {i}: {reply:?}");
+                })
+                .unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    wait_finished(d.addr, clients as u64);
+    drain(d.addr);
+    let end = d.svc.join().unwrap();
+    assert_eq!(end.finished_total, clients as u64);
+}
+
+#[test]
+fn over_cap_clients_are_shed_loudly_and_slots_recycle() {
+    let cap = 8usize;
+    let probes = 24usize;
+    let d = start("round-robin", cap);
+    // Fill the table with proven-live holder connections.
+    let holders: Vec<TcpStream> = (0..cap)
+        .map(|i| {
+            let mut stream = TcpStream::connect(d.addr).expect("holder connect");
+            stream
+                .set_read_timeout(Some(Duration::from_secs(120)))
+                .unwrap();
+            writeln!(stream, r#"{{"op": "ping"}}"#).unwrap();
+            stream.flush().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            assert!(ok(&Json::parse(reply.trim()).unwrap()), "holder {i}: {reply:?}");
+            reader.into_inner()
+        })
+        .collect();
+    // Every probe past the cap gets the loud refusal, concurrently.
+    let handles: Vec<_> = (0..probes)
+        .map(|i| {
+            let addr = d.addr;
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("probe connect");
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(120)))
+                    .unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let reply = Json::parse(line.trim())
+                    .unwrap_or_else(|e| panic!("probe {i}: bad shed line {line:?}: {e}"));
+                assert!(!ok(&reply), "probe {i} must be refused: {reply:?}");
+                assert_eq!(reply.get("shed"), Some(&Json::Bool(true)), "{reply:?}");
+                assert!(
+                    reply.str_field("error").unwrap().contains("connection cap"),
+                    "{reply:?}"
+                );
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Releasing holders frees slots: service again, not a dead daemon.
+    drop(holders);
+    loop {
+        if ok(&roundtrip(d.addr, r#"{"op": "ping"}"#)) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drain(d.addr);
+    d.svc.join().unwrap();
+}
+
+#[test]
+fn watch_fanout_delivers_every_report_to_every_subscriber() {
+    let watchers = 8usize;
+    let rounds = 64u64;
+    let d = start("round-robin", watchers + 8);
+    let ready = Arc::new(Barrier::new(watchers + 1));
+    let handles: Vec<_> = (0..watchers)
+        .map(|i| {
+            let addr = d.addr;
+            let ready = Arc::clone(&ready);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("watcher connect");
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(120)))
+                    .unwrap();
+                writeln!(stream, r#"{{"op": "watch"}}"#).unwrap();
+                stream.flush().unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert!(ok(&Json::parse(line.trim()).unwrap()), "watcher {i}: {line:?}");
+                ready.wait();
+                let mut reports = 0u64;
+                loop {
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    let ev = Json::parse(line.trim())
+                        .unwrap_or_else(|e| panic!("watcher {i}: bad event {line:?}: {e}"));
+                    match ev.str_field("event").unwrap() {
+                        "end" => return reports,
+                        "report" => {
+                            assert_eq!(ev.str_field("job").unwrap(), "beacon");
+                            reports += 1;
+                        }
+                        other => panic!("watcher {i}: unexpected event {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    ready.wait(); // all subscriptions acknowledged before the job runs
+    let reply = roundtrip(
+        d.addr,
+        &format!(
+            r#"{{"op": "submit", "job": {{"name": "beacon", "fitness": "cubic", "particles": 32, "iters": {rounds}, "seed": 9}}}}"#
+        ),
+    );
+    assert!(ok(&reply), "{reply:?}");
+    wait_finished(d.addr, 1);
+    drain(d.addr);
+    for (i, h) in handles.into_iter().enumerate() {
+        let reports = h.join().unwrap();
+        assert_eq!(reports, rounds, "watcher {i} must see every round");
+    }
+    d.svc.join().unwrap();
+}

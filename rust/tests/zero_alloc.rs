@@ -208,6 +208,8 @@ fn service_rounds_with_empty_control_queue_allocate_nothing() {
             pack: false,
             pack_min: 2,
             pack_max: 0,
+            quota_jobs: 0,
+            quota_steps: 0,
             jobs: Vec::new(),
         };
         let (service, handle) = ServiceSession::new(&scheduler, knobs, None, specs).unwrap();
@@ -268,6 +270,8 @@ fn warmed_up_packed_rounds_allocate_nothing() {
         pack: true,
         pack_min: 2,
         pack_max: 0,
+        quota_jobs: 0,
+        quota_steps: 0,
         jobs: Vec::new(),
     };
     let (service, handle) = ServiceSession::new(&scheduler, knobs, None, specs).unwrap();

@@ -1,14 +1,18 @@
 #!/usr/bin/env bash
-# Service smoke: start `cupso serve` on a temp socket, submit one sphere
-# job, poll status until it finishes, then drain — failing loudly on any
-# protocol error or hang. CI wraps this in `timeout` so a wedged daemon
-# fails the job instead of stalling it.
+# Service smoke: start `cupso serve` on a temp Unix socket AND a TCP
+# port, submit one job per transport, poll status until both finish,
+# then drain over TCP — failing loudly on any protocol error or hang.
+# CI wraps this in `timeout` so a wedged daemon fails the job instead
+# of stalling it.
 set -euo pipefail
 
 BIN=${CUPSO_BIN:-target/release/cupso}
 WORK=$(mktemp -d)
 SOCK="$WORK/cupso.sock"
 SNAP="$WORK/drain"
+# Ephemeral-ish TCP port; RANDOM keeps parallel runs from colliding.
+PORT=$(( 20000 + RANDOM % 20000 ))
+ADDR="127.0.0.1:$PORT"
 
 cleanup() {
     if [[ -n "${SERVE_PID:-}" ]] && kill -0 "$SERVE_PID" 2>/dev/null; then
@@ -19,8 +23,9 @@ cleanup() {
 }
 trap cleanup EXIT
 
-echo "== starting cupso serve on $SOCK"
-"$BIN" serve --socket "$SOCK" --checkpoint-dir "$SNAP" &
+echo "== starting cupso serve on $SOCK + tcp $ADDR"
+"$BIN" serve --socket "$SOCK" --listen "$ADDR" --max-conns 64 \
+    --checkpoint-dir "$SNAP" &
 SERVE_PID=$!
 
 # Wait for the daemon to answer the protocol (not just bind the socket).
@@ -36,31 +41,41 @@ for _ in $(seq 1 100); do
 done
 "$BIN" status --socket "$SOCK" >/dev/null
 
-echo "== submitting one sphere job"
+echo "== TCP leg: status over --connect"
+"$BIN" status --connect "$ADDR" >/dev/null
+
+echo "== submitting one sphere job over the Unix socket"
 "$BIN" submit --socket "$SOCK" --name smoke --fitness sphere --dim 3 \
     --particles 64 --iters 400 --engine queue --seed 7 | tee "$WORK/submit.out"
 grep -q "submitted smoke" "$WORK/submit.out"
 
-echo "== polling status until the job finishes"
+echo "== submitting one cubic job over TCP with a tenant label"
+"$BIN" submit --connect "$ADDR" --name smoke-tcp --fitness cubic \
+    --particles 64 --iters 400 --engine queue --seed 8 --tenant demo \
+    | tee "$WORK/submit_tcp.out"
+grep -q "submitted smoke-tcp" "$WORK/submit_tcp.out"
+
+echo "== polling status (over TCP) until both jobs finish"
 DONE=0
 for _ in $(seq 1 200); do
-    "$BIN" status --socket "$SOCK" >"$WORK/status.out"
-    if grep -q "0 live, 1 finished" "$WORK/status.out"; then
+    "$BIN" status --connect "$ADDR" >"$WORK/status.out"
+    if grep -q "0 live, 2 finished" "$WORK/status.out"; then
         DONE=1
         break
     fi
     sleep 0.1
 done
 if [[ "$DONE" != 1 ]]; then
-    echo "job never finished; last status:" >&2
+    echo "jobs never finished; last status:" >&2
     cat "$WORK/status.out" >&2
     exit 1
 fi
 grep -q "smoke" "$WORK/status.out"
+grep -q "smoke-tcp" "$WORK/status.out"
 grep -q "exhausted" "$WORK/status.out"
 
-echo "== draining"
-"$BIN" drain --socket "$SOCK" | tee "$WORK/drain.out"
+echo "== draining over TCP"
+"$BIN" drain --connect "$ADDR" | tee "$WORK/drain.out"
 grep -q "no live jobs" "$WORK/drain.out"
 
 echo "== waiting for the daemon to exit"
