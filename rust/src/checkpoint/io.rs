@@ -1,0 +1,481 @@
+//! The durable store-I/O seam: every byte the checkpoint store puts on
+//! disk goes through a process-global [`StoreIo`], so durability policy
+//! lives in one place and tests can inject faults deterministically.
+//!
+//! ## Durability discipline
+//!
+//! [`write_atomic`] is the only way checkpoint bytes reach disk:
+//!
+//! 1. write the payload to `<path>.tmp`,
+//! 2. **fsync the temp file** — data must be durable before it becomes
+//!    reachable,
+//! 3. rename it over `path` (atomic publish),
+//! 4. **fsync the parent directory** — the rename itself must be durable,
+//!    or a power loss can forget the publish (or worse, on journaled
+//!    filesystems without `auto_da_alloc`, publish a zero-length file).
+//!
+//! The snapshot store layers a commit-point ordering on top: every
+//! `job_<i>.ckpt` is written (durably) *before* `manifest.toml`, so the
+//! manifest's existence certifies a complete snapshot.
+//!
+//! ## Fault injection
+//!
+//! [`FaultPlan`] is a deterministic schedule of injected failures,
+//! parsed from a tiny grammar (also accepted via the `CUPSO_FAULT_PLAN`
+//! environment variable by the `cupso` binary):
+//!
+//! ```text
+//! plan      := directive (';' directive)*
+//! directive := op '@' nth ['=' action]
+//! op        := 'write' | 'fsync' | 'rename' | 'persist'
+//! nth       := 1-based index of that op, counted process-wide
+//! action    := 'eio' (default) | 'enospc' | 'truncate:<k>' | 'abort'
+//! ```
+//!
+//! `write@3=truncate:17` makes the 3rd write put only its first 17 bytes
+//! on disk and report success (a lost tail, as after power loss on a
+//! non-fsyncing store); `persist@2=abort` aborts the process at the 2nd
+//! snapshot persist point (a crash mid-persist); `fsync@1` fails the
+//! first fsync (file or directory) with EIO. Counting is deterministic
+//! because all store I/O happens on the session thread in program order.
+
+use anyhow::{Context, Result};
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// The primitive operations the checkpoint store performs against the
+/// filesystem. The default implementation is [`RealIo`]; tests install a
+/// [`FaultyIo`] to inject failures at exact points.
+pub trait StoreIo: Send + Sync {
+    /// Create-or-truncate `path` and write `bytes` to it.
+    fn write(&self, path: &Path, bytes: &[u8]) -> io::Result<()>;
+    /// Flush `path`'s data and metadata to stable storage.
+    fn fsync_file(&self, path: &Path) -> io::Result<()>;
+    /// Atomically rename `from` to `to`.
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    /// Flush the directory entry table of `dir` to stable storage.
+    fn fsync_dir(&self, dir: &Path) -> io::Result<()>;
+    /// Called once at the top of every snapshot persist; the fault
+    /// plan's `persist` op hooks here. Real I/O does nothing.
+    fn persist_point(&self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Production I/O: `std::fs` with real fsyncs.
+pub struct RealIo;
+
+impl StoreIo for RealIo {
+    fn write(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        std::fs::write(path, bytes)
+    }
+
+    fn fsync_file(&self, path: &Path) -> io::Result<()> {
+        std::fs::File::open(path)?.sync_all()
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn fsync_dir(&self, dir: &Path) -> io::Result<()> {
+        // On Linux a directory opened read-only accepts fsync(2); this is
+        // the only portable way to make a rename durable.
+        std::fs::File::open(dir)?.sync_all()
+    }
+}
+
+fn slot() -> &'static RwLock<Arc<dyn StoreIo>> {
+    static SLOT: OnceLock<RwLock<Arc<dyn StoreIo>>> = OnceLock::new();
+    SLOT.get_or_init(|| RwLock::new(Arc::new(RealIo)))
+}
+
+/// The currently installed store I/O (an `Arc` clone — no allocation).
+pub fn io() -> Arc<dyn StoreIo> {
+    slot().read().unwrap().clone()
+}
+
+/// Install a store I/O implementation process-wide. Tests that install a
+/// [`FaultyIo`] must serialize with each other and [`reset`] when done.
+pub fn install(io: Arc<dyn StoreIo>) {
+    *slot().write().unwrap() = io;
+}
+
+/// Restore the default [`RealIo`].
+pub fn reset() {
+    install(Arc::new(RealIo));
+}
+
+/// Durable atomic write: temp + fsync + rename + parent-dir fsync (see
+/// the module docs for why each step exists). On return the bytes are
+/// durable under `path`; a crash at any interior point leaves either the
+/// old content or nothing — never a torn file.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let io = io();
+    let tmp = path.with_extension("tmp");
+    io.write(&tmp, bytes)
+        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    io.fsync_file(&tmp)
+        .with_context(|| format!("fsyncing checkpoint {}", tmp.display()))?;
+    io.rename(&tmp, path)
+        .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            io.fsync_dir(parent)
+                .with_context(|| format!("fsyncing directory {}", parent.display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// Which store operation a fault directive targets.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FaultOp {
+    /// A payload write (temp-file contents).
+    Write,
+    /// Any fsync — file or directory; they share one counter.
+    Fsync,
+    /// The atomic publish rename.
+    Rename,
+    /// A snapshot persist point (top of `store::write_snapshot`).
+    Persist,
+}
+
+impl FaultOp {
+    /// Position in [`FaultyIo::counts`] order: write, fsync, rename,
+    /// persist.
+    pub fn index(self) -> usize {
+        match self {
+            FaultOp::Write => 0,
+            FaultOp::Fsync => 1,
+            FaultOp::Rename => 2,
+            FaultOp::Persist => 3,
+        }
+    }
+}
+
+/// What happens when a directive fires.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultAction {
+    /// Fail with `EIO` (I/O error).
+    Eio,
+    /// Fail with `ENOSPC` (no space left on device).
+    Enospc,
+    /// Writes only: put the first `k` bytes on disk, then report
+    /// success — a silently lost tail.
+    Truncate(usize),
+    /// Abort the process — a crash at exactly this operation.
+    Abort,
+}
+
+/// One injected failure: the `nth` occurrence of `op` (1-based,
+/// process-wide) performs `action`.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultDirective {
+    pub op: FaultOp,
+    pub nth: u64,
+    pub action: FaultAction,
+}
+
+/// A deterministic schedule of injected store failures. See the module
+/// docs for the grammar.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    directives: Vec<FaultDirective>,
+}
+
+impl FaultPlan {
+    /// One directive: the `nth` `op` performs `action`.
+    pub fn single(op: FaultOp, nth: u64, action: FaultAction) -> Self {
+        Self {
+            directives: vec![FaultDirective { op, nth, action }],
+        }
+    }
+
+    /// Parse the `op@nth[=action]` grammar (see module docs).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut directives = Vec::new();
+        for part in text.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (opstr, rest) = part
+                .split_once('@')
+                .with_context(|| format!("fault directive {part:?}: expected op@nth[=action]"))?;
+            let op = match opstr.trim() {
+                "write" => FaultOp::Write,
+                "fsync" => FaultOp::Fsync,
+                "rename" => FaultOp::Rename,
+                "persist" => FaultOp::Persist,
+                other => anyhow::bail!(
+                    "fault directive {part:?}: unknown op {other:?} \
+                     (expected write|fsync|rename|persist)"
+                ),
+            };
+            let (nthstr, actionstr) = match rest.split_once('=') {
+                Some((n, a)) => (n, Some(a)),
+                None => (rest, None),
+            };
+            let nth: u64 = nthstr
+                .trim()
+                .parse()
+                .with_context(|| format!("fault directive {part:?}: bad index {nthstr:?}"))?;
+            if nth == 0 {
+                anyhow::bail!("fault directive {part:?}: indices are 1-based");
+            }
+            let action = match actionstr.map(str::trim) {
+                None | Some("eio") => FaultAction::Eio,
+                Some("enospc") => FaultAction::Enospc,
+                Some("abort") => FaultAction::Abort,
+                Some(a) => {
+                    if let Some(k) = a.strip_prefix("truncate:") {
+                        let k: usize = k.parse().with_context(|| {
+                            format!("fault directive {part:?}: bad truncate length {k:?}")
+                        })?;
+                        if op != FaultOp::Write {
+                            anyhow::bail!(
+                                "fault directive {part:?}: truncate only applies to write"
+                            );
+                        }
+                        FaultAction::Truncate(k)
+                    } else {
+                        anyhow::bail!(
+                            "fault directive {part:?}: unknown action {a:?} \
+                             (expected eio|enospc|truncate:<k>|abort)"
+                        );
+                    }
+                }
+            };
+            directives.push(FaultDirective { op, nth, action });
+        }
+        Ok(Self { directives })
+    }
+
+    /// A pseudo-random single-fault plan derived from `seed`: picks one
+    /// of the first `ops_per_kind` occurrences of write/fsync/rename and
+    /// an EIO/ENOSPC/truncate action. Used by the durability tier to add
+    /// seeded coverage on top of its exhaustive sweeps; same seed, same
+    /// plan.
+    pub fn seeded(seed: u64, ops_per_kind: u64) -> Self {
+        // splitmix64 — tiny, deterministic, dependency-free.
+        let mut s = seed;
+        let mut next = move || {
+            s = s.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        };
+        let op = match next() % 3 {
+            0 => FaultOp::Write,
+            1 => FaultOp::Fsync,
+            _ => FaultOp::Rename,
+        };
+        let nth = next() % ops_per_kind.max(1) + 1;
+        let action = match next() % 3 {
+            0 => FaultAction::Eio,
+            1 => FaultAction::Enospc,
+            _ if op == FaultOp::Write => FaultAction::Truncate((next() % 64) as usize),
+            _ => FaultAction::Eio,
+        };
+        Self::single(op, nth, action)
+    }
+
+    /// The plan from `CUPSO_FAULT_PLAN`, if set. `Some(Err(..))` means
+    /// the variable was set but unparsable — callers must fail loudly,
+    /// never ignore a typo'd plan.
+    pub fn from_env() -> Option<Result<Self>> {
+        std::env::var("CUPSO_FAULT_PLAN")
+            .ok()
+            .map(|text| Self::parse(&text))
+    }
+
+    /// Number of directives in the plan.
+    pub fn len(&self) -> usize {
+        self.directives.len()
+    }
+
+    /// Whether the plan injects nothing (counts still tick).
+    pub fn is_empty(&self) -> bool {
+        self.directives.is_empty()
+    }
+
+    fn lookup(&self, op: FaultOp, n: u64) -> Option<FaultAction> {
+        self.directives
+            .iter()
+            .find(|d| d.op == op && d.nth == n)
+            .map(|d| d.action)
+    }
+}
+
+fn injected(kind: &str, n: u64, raw_os: i32, what: &str) -> io::Error {
+    eprintln!("cupso: fault injection: {kind} #{n} -> injected {what}");
+    io::Error::from_raw_os_error(raw_os)
+}
+
+/// A [`StoreIo`] that executes a [`FaultPlan`] on top of [`RealIo`],
+/// counting every operation process-wide. With an empty plan it is a
+/// pure pass-through counter (useful for sizing exhaustive sweeps).
+pub struct FaultyIo {
+    inner: RealIo,
+    plan: FaultPlan,
+    counts: [AtomicU64; 4],
+}
+
+impl FaultyIo {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            inner: RealIo,
+            plan,
+            counts: Default::default(),
+        }
+    }
+
+    /// Operation counts so far: `[writes, fsyncs, renames, persists]`.
+    pub fn counts(&self) -> [u64; 4] {
+        [
+            self.counts[0].load(Ordering::Relaxed),
+            self.counts[1].load(Ordering::Relaxed),
+            self.counts[2].load(Ordering::Relaxed),
+            self.counts[3].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Count one `op`; `Err` or `Ok(Some(k))` (truncate) when a
+    /// directive fires, `Ok(None)` to proceed normally.
+    fn arm(&self, op: FaultOp) -> io::Result<Option<usize>> {
+        let n = self.counts[op.index()].fetch_add(1, Ordering::Relaxed) + 1;
+        let kind = match op {
+            FaultOp::Write => "write",
+            FaultOp::Fsync => "fsync",
+            FaultOp::Rename => "rename",
+            FaultOp::Persist => "persist",
+        };
+        match self.plan.lookup(op, n) {
+            None => Ok(None),
+            Some(FaultAction::Eio) => Err(injected(kind, n, 5, "EIO")),
+            Some(FaultAction::Enospc) => Err(injected(kind, n, 28, "ENOSPC")),
+            Some(FaultAction::Truncate(k)) => Ok(Some(k)),
+            Some(FaultAction::Abort) => {
+                eprintln!("cupso: fault injection: {kind} #{n} -> aborting process");
+                std::process::abort();
+            }
+        }
+    }
+}
+
+impl StoreIo for FaultyIo {
+    fn write(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        match self.arm(FaultOp::Write)? {
+            // Torn write: only the first k bytes land, reported as success.
+            Some(k) => self.inner.write(path, &bytes[..k.min(bytes.len())]),
+            None => self.inner.write(path, bytes),
+        }
+    }
+
+    fn fsync_file(&self, path: &Path) -> io::Result<()> {
+        self.arm(FaultOp::Fsync)?;
+        self.inner.fsync_file(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        self.arm(FaultOp::Rename)?;
+        self.inner.rename(from, to)
+    }
+
+    fn fsync_dir(&self, dir: &Path) -> io::Result<()> {
+        self.arm(FaultOp::Fsync)?;
+        self.inner.fsync_dir(dir)
+    }
+
+    fn persist_point(&self) -> io::Result<()> {
+        self.arm(FaultOp::Persist)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grammar_round_trips() {
+        let plan =
+            FaultPlan::parse("write@3=truncate:17; persist@2=abort;fsync@1 ; rename@4=enospc")
+                .unwrap();
+        assert_eq!(plan.directives.len(), 4);
+        assert!(matches!(
+            plan.lookup(FaultOp::Write, 3),
+            Some(FaultAction::Truncate(17))
+        ));
+        assert!(matches!(
+            plan.lookup(FaultOp::Persist, 2),
+            Some(FaultAction::Abort)
+        ));
+        assert!(matches!(plan.lookup(FaultOp::Fsync, 1), Some(FaultAction::Eio)));
+        assert!(matches!(
+            plan.lookup(FaultOp::Rename, 4),
+            Some(FaultAction::Enospc)
+        ));
+        assert!(plan.lookup(FaultOp::Write, 2).is_none());
+    }
+
+    #[test]
+    fn plan_grammar_rejects_garbage_loudly() {
+        for bad in [
+            "write",             // no index
+            "write@0",           // 1-based
+            "write@x",           // bad index
+            "chmod@1",           // unknown op
+            "write@1=explode",   // unknown action
+            "fsync@1=truncate:4", // truncate only on write
+            "write@1=truncate:x", // bad length
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn empty_plan_counts_without_failing() {
+        let dir = std::env::temp_dir().join(format!("cupso_io_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let io = FaultyIo::new(FaultPlan::default());
+        let p = dir.join("a.bin");
+        io.write(&p, b"hello").unwrap();
+        io.fsync_file(&p).unwrap();
+        let q = dir.join("b.bin");
+        io.rename(&p, &q).unwrap();
+        io.fsync_dir(&dir).unwrap();
+        io.persist_point().unwrap();
+        assert_eq!(io.counts(), [1, 2, 1, 1]);
+        assert_eq!(std::fs::read(&q).unwrap(), b"hello");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn eio_and_truncate_fire_at_exact_indices() {
+        let dir = std::env::temp_dir().join(format!("cupso_io_fault_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let io = FaultyIo::new(FaultPlan::parse("write@2=truncate:3; fsync@1=enospc").unwrap());
+        let p = dir.join("a.bin");
+        io.write(&p, b"first").unwrap(); // write #1: clean
+        io.write(&p, b"second").unwrap(); // write #2: torn at 3 bytes
+        assert_eq!(std::fs::read(&p).unwrap(), b"sec");
+        let err = io.fsync_file(&p).unwrap_err();
+        assert_eq!(err.raw_os_error(), Some(28));
+        io.fsync_file(&p).unwrap(); // fsync #2: clean
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        for seed in 0..16 {
+            let a = format!("{:?}", FaultPlan::seeded(seed, 40));
+            let b = format!("{:?}", FaultPlan::seeded(seed, 40));
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -43,9 +43,11 @@
 //! `rust/tests/fixtures/` pins the version-1 layout: today's decoder must
 //! keep reading it forever (bump `VERSION` for incompatible changes).
 
+pub mod io;
 pub mod store;
 
 use crate::config::EngineKind;
+use io::write_atomic;
 use crate::fitness::Objective;
 use crate::pso::{Counters, PsoParams, SwarmState};
 use anyhow::{bail, Context, Result};
@@ -458,7 +460,7 @@ impl JobCheckpoint {
         })
     }
 
-    /// Write to a file (atomic temp + rename).
+    /// Write to a file (durable atomic write — see [`io::write_atomic`]).
     pub fn write_file(&self, path: &Path) -> Result<()> {
         write_atomic(path, &self.encode())
     }
@@ -477,15 +479,6 @@ impl JobCheckpoint {
         Self::decode(&bytes)
             .with_context(|| format!("decoding job checkpoint {}", path.display()))
     }
-}
-
-fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
-    let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, bytes)
-        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
-    std::fs::rename(&tmp, path)
-        .with_context(|| format!("publishing checkpoint {}", path.display()))?;
-    Ok(())
 }
 
 /// FNV-1a 64-bit — tiny, dependency-free corruption detector (not a

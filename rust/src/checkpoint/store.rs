@@ -21,7 +21,21 @@
 //!
 //! This module used to live inside the launcher binary; it moved into
 //! the library so the service layer (and tests) can drive it directly.
+//!
+//! ## Crash safety
+//!
+//! All disk I/O goes through the durable seam in [`super::io`]: every
+//! file is written temp + fsync + rename + parent-dir fsync, and within
+//! a snapshot the `job_<i>.ckpt` files are all durable *before*
+//! `manifest.toml` is published — the manifest is the commit point, so
+//! its presence certifies a complete snapshot (that is also why
+//! [`list_rotated`] only counts directories holding one). Recovery is
+//! lenient where strictness would lose work: [`load_snapshot`]
+//! quarantines torn/missing job files with a per-job report instead of
+//! failing the whole directory, and prefers the newest *fully-valid*
+//! rotated snapshot over a newer damaged one.
 
+use super::io::{self, write_atomic};
 use super::JobCheckpoint;
 use crate::config::{parse_toml, BatchConfig, TomlValue};
 use anyhow::{bail, Context, Result};
@@ -35,9 +49,9 @@ use std::path::{Path, PathBuf};
 /// `snap_<seq>/` subdirectories, pruning so the latest `keep` survive
 /// (ROADMAP retention item); [`resolve_snapshot_dir`] picks the newest on
 /// resume. One encode buffer is reused across every checkpoint written.
-pub struct SnapshotSink<'a> {
-    dir: &'a Path,
-    cfg: &'a BatchConfig,
+pub struct SnapshotSink {
+    dir: PathBuf,
+    cfg: BatchConfig,
     keep: usize,
     /// Who wrote the snapshot (`"batch"` | `"serve"`), recorded in the
     /// manifest for provenance.
@@ -46,22 +60,19 @@ pub struct SnapshotSink<'a> {
     buf: Vec<u8>,
 }
 
-impl<'a> SnapshotSink<'a> {
+impl SnapshotSink {
     /// A sink over `dir` with the given retention and provenance tag.
-    pub fn new(
-        dir: &'a Path,
-        cfg: &'a BatchConfig,
-        keep: usize,
-        source: &'static str,
-    ) -> Result<Self> {
-        // Continue numbering after any snapshots a previous run left.
-        let seq = match list_rotated(dir) {
-            Ok(existing) => existing.last().map_or(0, |&(s, _)| s + 1),
-            Err(_) => 0, // directory does not exist yet
-        };
+    /// The sink owns its path and knob copy so a long-lived service can
+    /// hold one for its whole run.
+    pub fn new(dir: &Path, cfg: &BatchConfig, keep: usize, source: &'static str) -> Result<Self> {
+        // Continue numbering after any snapshots a previous run left. A
+        // missing directory means sequence 0, but a *real* listing error
+        // (permissions, I/O) must propagate: silently restarting at
+        // `snap_000000` would clobber retention.
+        let seq = list_rotated(dir)?.last().map_or(0, |&(s, _)| s + 1);
         Ok(Self {
-            dir,
-            cfg,
+            dir: dir.to_path_buf(),
+            cfg: cfg.clone(),
             keep,
             source,
             seq,
@@ -69,28 +80,73 @@ impl<'a> SnapshotSink<'a> {
         })
     }
 
-    /// Persist one snapshot under the sink's retention policy.
+    /// The root directory this sink writes under.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Persist one snapshot under the sink's retention policy. On `Ok`
+    /// the snapshot is durable (fsynced through the commit point).
     pub fn persist(&mut self, snap: &[JobCheckpoint]) -> Result<()> {
         if self.keep <= 1 {
-            return write_snapshot(self.dir, self.cfg, self.keep, self.source, snap, &mut self.buf);
+            return write_snapshot(
+                &self.dir,
+                &self.cfg,
+                self.keep,
+                self.source,
+                snap,
+                &mut self.buf,
+            );
         }
         let target = self.dir.join(format!("snap_{:06}", self.seq));
-        write_snapshot(&target, self.cfg, self.keep, self.source, snap, &mut self.buf)?;
+        write_snapshot(
+            &target,
+            &self.cfg,
+            self.keep,
+            self.source,
+            snap,
+            &mut self.buf,
+        )?;
+        // Make the new snap_<seq>/ entry itself durable in the root.
+        io::io()
+            .fsync_dir(&self.dir)
+            .with_context(|| format!("fsyncing snapshot root {}", self.dir.display()))?;
         self.seq += 1;
-        // Prune: keep the latest `keep` rotated snapshots.
-        let existing = list_rotated(self.dir)?;
-        for (_, path) in existing.iter().rev().skip(self.keep) {
-            std::fs::remove_dir_all(path)
-                .with_context(|| format!("pruning old snapshot {}", path.display()))?;
+        // Prune to the latest `keep` rotated snapshots. The new snapshot
+        // is already durable at this point, so a prune failure must NOT
+        // turn a completed persist into an error — report it loudly and
+        // retry naturally on the next persist.
+        match list_rotated(&self.dir) {
+            Ok(existing) => {
+                for (_, path) in existing.iter().rev().skip(self.keep) {
+                    if let Err(e) = std::fs::remove_dir_all(path) {
+                        eprintln!(
+                            "cupso: warning: snapshot persisted, but pruning old {} failed: {e}",
+                            path.display()
+                        );
+                    }
+                }
+            }
+            Err(e) => eprintln!(
+                "cupso: warning: snapshot persisted, but listing {} for pruning failed: {e:#}",
+                self.dir.display()
+            ),
         }
         Ok(())
     }
 }
 
 /// Numbered `snap_<seq>/` subdirectories holding a manifest, ascending.
+/// A directory that does not exist yet lists as empty; every other error
+/// (permissions, I/O) propagates.
 pub fn list_rotated(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("listing {}", dir.display())),
+    };
     let mut found = Vec::new();
-    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+    for entry in entries {
         let path = entry?.path();
         let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
             continue;
@@ -112,7 +168,7 @@ pub fn resolve_snapshot_dir(dir: &Path) -> Result<PathBuf> {
     if dir.join("manifest.toml").exists() {
         return Ok(dir.to_path_buf());
     }
-    let mut rotated = list_rotated(dir).unwrap_or_default();
+    let mut rotated = list_rotated(dir)?;
     rotated.pop().map(|(_, p)| p).with_context(|| {
         format!(
             "no manifest.toml or snap_*/ snapshot under {}",
@@ -124,6 +180,12 @@ pub fn resolve_snapshot_dir(dir: &Path) -> Result<PathBuf> {
 /// Persist a batch snapshot: one `job_<i>.ckpt` per job plus a
 /// `manifest.toml` recording the scheduler knobs, provenance and job
 /// count. `buf` is the reusable encode buffer.
+///
+/// Ordering is the crash-safety contract: every job checkpoint is
+/// durable (written + fsynced + published) *before* the manifest, and
+/// the manifest is published last as the commit point — a crash at any
+/// interior step leaves either the previous complete snapshot or an
+/// uncommitted partial one, never a committed-but-torn one.
 pub fn write_snapshot(
     dir: &Path,
     cfg: &BatchConfig,
@@ -132,6 +194,9 @@ pub fn write_snapshot(
     snap: &[JobCheckpoint],
     buf: &mut Vec<u8>,
 ) -> Result<()> {
+    io::io()
+        .persist_point()
+        .context("snapshot persist point")?;
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
     for (i, job) in snap.iter().enumerate() {
@@ -151,8 +216,10 @@ pub fn write_snapshot(
          pack_max = {}\n\
          quota_jobs = {}\n\
          quota_steps = {}\n\
+         checkpoint_every = {}\n\
          keep = {}\n\
-         jobs = {}\n",
+         jobs = {}\n\
+         complete = true\n",
         dir.display(),
         super::VERSION,
         source,
@@ -166,23 +233,40 @@ pub fn write_snapshot(
         cfg.pack_max,
         cfg.quota_jobs,
         cfg.quota_steps,
+        cfg.checkpoint_every,
         keep,
         snap.len()
     );
-    // Atomic like the job checkpoints: a crash mid-write must never tear
-    // the manifest, or the whole snapshot becomes unresumable.
-    let tmp = dir.join("manifest.toml.tmp");
-    std::fs::write(&tmp, manifest)
-        .with_context(|| format!("writing manifest in {}", dir.display()))?;
-    std::fs::rename(&tmp, dir.join("manifest.toml"))
+    // Durable + atomic like the job checkpoints, and written LAST: the
+    // manifest is the commit point, so it must only become visible once
+    // every job file above is already durable.
+    write_atomic(&dir.join("manifest.toml"), manifest.as_bytes())
         .with_context(|| format!("publishing manifest in {}", dir.display()))?;
     Ok(())
 }
 
 /// Load a batch snapshot directory: scheduler knobs (as a job-less
 /// [`BatchConfig`]) plus the retention count and every job checkpoint in
-/// manifest order.
+/// manifest order. Strict: any torn or missing job checkpoint is an
+/// `Err` — resumable-with-losses callers want [`load_snapshot`].
 pub fn read_snapshot(dir: &Path) -> Result<(BatchConfig, usize, Vec<JobCheckpoint>)> {
+    let (knobs, keep, jobs, quarantined) = read_snapshot_lenient(dir)?;
+    if let Some(q) = quarantined.first() {
+        bail!(
+            "snapshot {}: job checkpoint {} unreadable ({} of {} damaged): {}",
+            dir.display(),
+            q.path.display(),
+            quarantined.len(),
+            jobs.len() + quarantined.len(),
+            q.error
+        );
+    }
+    Ok((knobs, keep, jobs))
+}
+
+/// Parse a snapshot manifest: scheduler knobs, retention count and the
+/// number of job checkpoints the snapshot claims to hold.
+fn read_manifest(dir: &Path) -> Result<(BatchConfig, usize, usize)> {
     let manifest_path = dir.join("manifest.toml");
     let text = std::fs::read_to_string(&manifest_path)
         .with_context(|| format!("reading {}", manifest_path.display()))?;
@@ -214,7 +298,7 @@ pub fn read_snapshot(dir: &Path) -> Result<(BatchConfig, usize, Vec<JobCheckpoin
     if streams == 0 || batch_steps == 0 {
         bail!("manifest: streams and batch_steps must be >= 1");
     }
-    let knobs = BatchConfig {
+    let mut knobs = BatchConfig {
         workers: get_uint("workers", 1_000_000)? as usize,
         policy: doc
             .get("policy")
@@ -270,6 +354,18 @@ pub fn read_snapshot(dir: &Path) -> Result<(BatchConfig, usize, Vec<JobCheckpoin
             }
             None => 0,
         },
+        // Optional for compatibility with pre-crash-safety snapshots.
+        checkpoint_every: match doc.get("checkpoint_every") {
+            Some(v) => {
+                let n = v.as_int("checkpoint_every")?;
+                if n < 0 {
+                    bail!("manifest: checkpoint_every = {n} out of range");
+                }
+                n as u64
+            }
+            None => 0,
+        },
+        checkpoint_keep: 1, // overwritten with `keep` below
         jobs: Vec::new(),
     };
     // Optional for compatibility with pre-rotation snapshots.
@@ -283,10 +379,201 @@ pub fn read_snapshot(dir: &Path) -> Result<(BatchConfig, usize, Vec<JobCheckpoin
         }
         None => 1,
     };
+    knobs.checkpoint_keep = keep;
     let job_count = get_uint("jobs", 100_000)?;
-    let mut ckpts = Vec::with_capacity(job_count as usize);
-    for i in 0..job_count {
-        ckpts.push(JobCheckpoint::read_file(&dir.join(format!("job_{i}.ckpt")))?);
+    // The trailing commit marker: `jobs = N` alone is not enough, because
+    // a manifest truncated mid-number (`jobs = 12` cut to `jobs = 1`)
+    // still parses and would silently resume a subset. `complete = true`
+    // is written last, so any truncation removes or damages it.
+    match doc.get("complete") {
+        Some(v) if v.as_bool("complete")? => {}
+        Some(_) => bail!(
+            "manifest {}: complete = false — torn or hand-damaged manifest",
+            manifest_path.display()
+        ),
+        None => bail!(
+            "manifest {}: missing trailing commit marker `complete` — \
+             manifest torn or truncated",
+            manifest_path.display()
+        ),
     }
-    Ok((knobs, keep, ckpts))
+    Ok((knobs, keep, job_count as usize))
+}
+
+/// One job checkpoint that could not be read back from a snapshot.
+#[derive(Debug)]
+pub struct QuarantinedJob {
+    /// The job's index in the snapshot (its `job_<i>.ckpt` slot).
+    pub index: usize,
+    pub path: PathBuf,
+    /// The decode/read error, rendered with its full context chain.
+    pub error: String,
+}
+
+/// Read a snapshot directory leniently: the manifest must parse (it is
+/// the commit point — if it is damaged the directory is not a snapshot),
+/// but torn or missing `job_<i>.ckpt` files are *quarantined* with a
+/// per-job record instead of failing the load. Valid jobs keep their
+/// manifest order.
+pub fn read_snapshot_lenient(
+    dir: &Path,
+) -> Result<(BatchConfig, usize, Vec<JobCheckpoint>, Vec<QuarantinedJob>)> {
+    let (knobs, keep, job_count) = read_manifest(dir)?;
+    let mut ckpts = Vec::with_capacity(job_count);
+    let mut quarantined = Vec::new();
+    for i in 0..job_count {
+        let path = dir.join(format!("job_{i}.ckpt"));
+        match JobCheckpoint::read_file(&path) {
+            Ok(ckpt) => ckpts.push(ckpt),
+            Err(e) => quarantined.push(QuarantinedJob {
+                index: i,
+                path,
+                error: format!("{e:#}"),
+            }),
+        }
+    }
+    Ok((knobs, keep, ckpts, quarantined))
+}
+
+/// A snapshot as recovered from disk, with the full damage report.
+#[derive(Debug)]
+pub struct LoadedSnapshot {
+    /// The concrete snapshot directory used (the root itself for the
+    /// flat layout, a `snap_<seq>/` subdirectory for the rotated one).
+    pub dir: PathBuf,
+    pub knobs: BatchConfig,
+    pub keep: usize,
+    pub jobs: Vec<JobCheckpoint>,
+    /// Job checkpoints in `dir` that could not be read.
+    pub quarantined: Vec<QuarantinedJob>,
+    /// Newer rotated snapshots that were skipped as damaged, with why.
+    pub skipped: Vec<(PathBuf, String)>,
+}
+
+impl LoadedSnapshot {
+    /// Whether recovery was lossless: nothing quarantined, nothing skipped.
+    pub fn is_clean(&self) -> bool {
+        self.quarantined.is_empty() && self.skipped.is_empty()
+    }
+
+    /// Print the loud per-job damage report to stderr. Callers that
+    /// resume from a dirty snapshot MUST emit this (or an equivalent) —
+    /// silently resuming a subset would hide lost work.
+    pub fn report(&self) {
+        for (path, why) in &self.skipped {
+            eprintln!(
+                "cupso: warning: skipping damaged snapshot {}: {why}",
+                path.display()
+            );
+        }
+        for q in &self.quarantined {
+            eprintln!(
+                "cupso: warning: quarantined job {} ({}): {}",
+                q.index,
+                q.path.display(),
+                q.error
+            );
+        }
+        if !self.quarantined.is_empty() {
+            eprintln!(
+                "cupso: warning: resuming {} of {} jobs from {} — {} quarantined",
+                self.jobs.len(),
+                self.jobs.len() + self.quarantined.len(),
+                self.dir.display(),
+                self.quarantined.len()
+            );
+        }
+    }
+}
+
+/// Whether `root` holds at least one **committed** snapshot: a flat
+/// manifest, or a rotated `snap_<seq>/` entry (which [`list_rotated`]
+/// only counts once its manifest exists). The manifest is the commit
+/// point, so a crash mid-snapshot leaves nothing committed — callers
+/// treat that as a cold start, not an error.
+pub fn snapshot_present(root: &Path) -> bool {
+    root.join("manifest.toml").is_file()
+        || list_rotated(root).map_or(false, |v| !v.is_empty())
+}
+
+/// Recover the best available snapshot under `root`.
+///
+/// Flat layout (a manifest directly in `root`): load it leniently. The
+/// rotated layout scans `snap_<seq>/` from newest to oldest and returns
+/// the newest **fully-valid** snapshot; if every candidate is damaged,
+/// it falls back to the newest one whose manifest still parses, with its
+/// unreadable jobs quarantined. Only when no candidate has a readable
+/// manifest does the load fail.
+pub fn load_snapshot(root: &Path) -> Result<LoadedSnapshot> {
+    if root.join("manifest.toml").exists() {
+        let (knobs, keep, jobs, quarantined) = read_snapshot_lenient(root)?;
+        return Ok(LoadedSnapshot {
+            dir: root.to_path_buf(),
+            knobs,
+            keep,
+            jobs,
+            quarantined,
+            skipped: Vec::new(),
+        });
+    }
+    let rotated = list_rotated(root)?;
+    if rotated.is_empty() {
+        bail!(
+            "no manifest.toml or snap_*/ snapshot under {}",
+            root.display()
+        );
+    }
+    let mut skipped: Vec<(PathBuf, String)> = Vec::new();
+    let mut fallback: Option<LoadedSnapshot> = None;
+    for (_, path) in rotated.iter().rev() {
+        match read_snapshot_lenient(path) {
+            Ok((knobs, keep, jobs, quarantined)) => {
+                if quarantined.is_empty() {
+                    return Ok(LoadedSnapshot {
+                        dir: path.clone(),
+                        knobs,
+                        keep,
+                        jobs,
+                        quarantined,
+                        skipped,
+                    });
+                }
+                let total = jobs.len() + quarantined.len();
+                if fallback.is_none() {
+                    fallback = Some(LoadedSnapshot {
+                        dir: path.clone(),
+                        knobs,
+                        keep,
+                        jobs,
+                        quarantined,
+                        skipped: Vec::new(),
+                    });
+                }
+                skipped.push((
+                    path.clone(),
+                    format!("{} of {total} job checkpoint(s) torn or missing", total - jobs.len()),
+                ));
+            }
+            Err(e) => skipped.push((path.clone(), format!("{e:#}"))),
+        }
+    }
+    if let Some(mut best) = fallback {
+        // `skipped` lists everything we passed over, including the
+        // fallback itself — keep only snapshots newer than it.
+        best.skipped = skipped
+            .into_iter()
+            .take_while(|(p, _)| *p != best.dir)
+            .collect();
+        return Ok(best);
+    }
+    bail!(
+        "no loadable snapshot under {}: all {} rotated candidate(s) damaged \
+         (newest: {})",
+        root.display(),
+        skipped.len(),
+        skipped
+            .first()
+            .map(|(p, why)| format!("{} — {why}", p.display()))
+            .unwrap_or_default()
+    )
 }

@@ -388,6 +388,16 @@ pub struct BatchConfig {
     /// Service admission quota: max outstanding iteration budget per
     /// tenant, summed over its live jobs (0 = unlimited).
     pub quota_steps: u64,
+    /// Periodic persistence cadence in scheduling rounds: with a
+    /// checkpoint directory configured, snapshot every N round
+    /// boundaries while running (batch and serve alike). 0 = only at
+    /// explicit points (suspend, drain). CLI `--checkpoint-every`
+    /// overrides.
+    pub checkpoint_every: u64,
+    /// Snapshot retention: how many rotated snapshots survive pruning
+    /// (1 = overwrite the directory in place). CLI `--checkpoint-keep`
+    /// overrides.
+    pub checkpoint_keep: usize,
     /// The jobs, in file order.
     pub jobs: Vec<JobConfig>,
 }
@@ -441,6 +451,8 @@ impl BatchConfig {
             pack_max: 0,
             quota_jobs: 0,
             quota_steps: 0,
+            checkpoint_every: 0,
+            checkpoint_keep: 1,
             jobs: Vec::new(),
         };
         // Materialize a job per `[jobs.<name>]` section header first, so a
@@ -525,6 +537,8 @@ impl BatchConfig {
                     "pack_max" => cfg.pack_max = as_uint(&value, &key)? as usize,
                     "quota_jobs" => cfg.quota_jobs = as_uint(&value, &key)? as usize,
                     "quota_steps" => cfg.quota_steps = as_uint(&value, &key)?,
+                    "checkpoint_every" => cfg.checkpoint_every = as_uint(&value, &key)?,
+                    "checkpoint_keep" => cfg.checkpoint_keep = as_uint(&value, &key)? as usize,
                     other => bail!("unknown batch key {other:?} (in {key:?})"),
                 }
             }
@@ -566,6 +580,9 @@ impl BatchConfig {
                 self.pack_max,
                 self.pack_min
             );
+        }
+        if self.checkpoint_keep == 0 {
+            bail!("checkpoint_keep must be >= 1");
         }
         for (i, job) in self.jobs.iter().enumerate() {
             job.validate()?;

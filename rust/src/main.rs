@@ -23,7 +23,8 @@
 //! `config/service_demo.toml`).
 
 use anyhow::{bail, Context, Result};
-use cupso::checkpoint::store::{read_snapshot, resolve_snapshot_dir, SnapshotSink};
+use cupso::checkpoint::io::{self as store_io, FaultPlan, FaultyIo};
+use cupso::checkpoint::store::{load_snapshot, snapshot_present, SnapshotSink};
 use cupso::checkpoint::JobCheckpoint;
 use cupso::cli::{split_subcommand, Args, Command};
 use cupso::config::{BatchConfig, EngineKind, JobConfig, RunConfig};
@@ -42,10 +43,23 @@ use std::path::{Path, PathBuf};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = dispatch(&argv) {
+    if let Err(e) = install_fault_plan().and_then(|()| dispatch(&argv)) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// `CUPSO_FAULT_PLAN` (grammar in [`cupso::checkpoint::io`]) swaps the
+/// store-IO seam for a deterministic fault injector before any command
+/// runs. A plan that fails to parse is fatal: a mistyped plan silently
+/// running clean would defeat the crash-testing harness.
+fn install_fault_plan() -> Result<()> {
+    if let Some(plan) = FaultPlan::from_env() {
+        let plan = plan.context("CUPSO_FAULT_PLAN")?;
+        eprintln!("cupso: fault injection armed: {} directive(s)", plan.len());
+        store_io::install(std::sync::Arc::new(FaultyIo::new(plan)));
+    }
+    Ok(())
 }
 
 fn dispatch(argv: &[String]) -> Result<()> {
@@ -444,14 +458,15 @@ fn cmd_resume(rest: &[String]) -> Result<()> {
     }
     let trace = args.flag("trace");
 
-    let snap_dir = resolve_snapshot_dir(&dir)?;
-    let (knobs, keep, ckpts) = read_snapshot(&snap_dir)?;
+    let loaded = load_snapshot(&dir)?;
+    loaded.report();
+    let (knobs, keep, ckpts) = (loaded.knobs, loaded.keep, loaded.jobs);
     let specs = ckpts
         .iter()
         .map(JobSpec::from_checkpoint)
         .collect::<Result<Vec<_>>>()?;
     let (scheduler, policy) = scheduler_from_knobs(&knobs)
-        .with_context(|| format!("manifest of {}", snap_dir.display()))?;
+        .with_context(|| format!("manifest of {}", loaded.dir.display()))?;
     let done = ckpts.iter().filter(|c| c.stop.is_some()).count();
     println!(
         "cupso resume: {} jobs from {} ({} already finished), {} policy, {} streams",
@@ -616,7 +631,20 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         )
         .opt(
             "checkpoint-dir",
-            "where `cupso drain` snapshots live jobs (enables `cupso resume`)",
+            "snapshot directory: drain target, periodic live snapshots, and \
+             warm-restart source (enables `cupso resume`)",
+            None,
+        )
+        .opt(
+            "checkpoint-every",
+            "rounds between periodic live snapshots into --checkpoint-dir; \
+             0 = snapshot only on drain (overrides the file)",
+            None,
+        )
+        .opt(
+            "checkpoint-keep",
+            "retained snapshots: 1 = overwrite in place, N > 1 = rotate \
+             snap_<seq>/ directories keeping the latest N (overrides the file)",
             None,
         )
         .switch("trace", "print every global-best improvement as it lands");
@@ -660,6 +688,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             pack_max: 0,
             quota_jobs: 0,
             quota_steps: 0,
+            checkpoint_every: 0,
+            checkpoint_keep: 1,
             jobs: Vec::new(),
         },
     };
@@ -674,20 +704,64 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             .parse()
             .map_err(|e| anyhow::anyhow!("--quota-steps {v:?}: {e}"))?;
     }
+    if let Some(v) = args.get("checkpoint-every") {
+        cfg.checkpoint_every = v
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--checkpoint-every {v:?}: {e}"))?;
+    }
+    if let Some(v) = args.get("checkpoint-keep") {
+        cfg.checkpoint_keep = v
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--checkpoint-keep {v:?}: {e}"))?;
+        if cfg.checkpoint_keep == 0 {
+            bail!("--checkpoint-keep must be >= 1");
+        }
+    }
+    let (scheduler, policy) = scheduler_from_knobs(&cfg)?;
+    let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
+    if cfg.checkpoint_every > 0 && ckpt_dir.is_none() {
+        bail!("--checkpoint-every requires --checkpoint-dir (snapshots need a home)");
+    }
+
+    // Warm restart: a committed snapshot in the checkpoint directory
+    // means a previous serve died mid-run (or was drained) — adopt its
+    // jobs instead of starting cold, so a supervisor restart loop is a
+    // correct recovery story. Initial config jobs whose names were
+    // adopted are skipped: the snapshot is the newer truth about them.
+    let warm = match &ckpt_dir {
+        Some(dir) if snapshot_present(dir) => {
+            let loaded = load_snapshot(dir)?;
+            loaded.report();
+            Some(loaded)
+        }
+        _ => None,
+    };
+    let adopted_names: std::collections::HashSet<&str> = warm
+        .as_ref()
+        .map(|l| l.jobs.iter().map(|c| &*c.name).collect())
+        .unwrap_or_default();
     let initial: Vec<JobSpec> = cfg
         .jobs
         .iter()
+        .filter(|j| !adopted_names.contains(j.name.as_str()))
         .map(JobSpec::from_config)
         .collect::<Result<_>>()?;
-    let (scheduler, policy) = scheduler_from_knobs(&cfg)?;
-    let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
     let knobs = BatchConfig {
         jobs: Vec::new(),
         ..cfg.clone()
     };
 
-    let (service, handle) =
+    let (mut service, handle) =
         ServiceSession::new(&scheduler, knobs, ckpt_dir.clone(), initial)?;
+    if let Some(loaded) = &warm {
+        let live = service.adopt(&loaded.jobs)?;
+        println!(
+            "cupso serve: warm restart — adopted {} job(s) from {} ({} still live)",
+            loaded.jobs.len(),
+            loaded.dir.display(),
+            live
+        );
+    }
     let mut listeners = Vec::new();
     let mut endpoints = Vec::new();
     if let Some(path) = &socket {
@@ -721,9 +795,15 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         } else {
             String::new()
         },
-        match &ckpt_dir {
-            Some(d) => format!(", drain dir {}", d.display()),
-            None => ", no drain dir (drain of live jobs refused)".to_string(),
+        match (&ckpt_dir, cfg.checkpoint_every) {
+            (Some(d), 0) => format!(", drain dir {}", d.display()),
+            (Some(d), n) => format!(
+                ", snapshot dir {} (every {} rounds, keep {})",
+                d.display(),
+                n,
+                cfg.checkpoint_keep
+            ),
+            (None, _) => ", no drain dir (drain of live jobs refused)".to_string(),
         }
     );
     match (&socket, &listen) {
@@ -878,7 +958,13 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
         .opt("target-fitness", "early stop: target fitness", None)
         .opt("stall-window", "early stop: non-improving steps", None)
         .opt("max-steps", "early stop: scheduler-step cap", None)
-        .opt("deadline", "EDF deadline in steps", None);
+        .opt("deadline", "EDF deadline in steps", None)
+        .opt(
+            "retries",
+            "retry transient connect/submit failures this many times \
+             (capped exponential backoff; idempotent via the job name)",
+            Some("0"),
+        );
     if rest.iter().any(|a| a == "--help") {
         println!("{}", spec.usage());
         return Ok(());
@@ -938,8 +1024,11 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
             vec![job]
         }
     };
+    let retries: u32 = args.get_parse("retries", 0u32)?;
     for job in &jobs {
-        let doc = service_roundtrip(&addr, &Request::Submit(job.clone()))?;
+        let Some(doc) = submit_with_retries(&addr, job, retries)? else {
+            continue; // an earlier attempt landed; message already printed
+        };
         println!(
             "submitted {} → slot {}, stream {}",
             doc.str_field("name")?,
@@ -948,6 +1037,51 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Submit one job, retrying transient failures (connection refused,
+/// dropped mid-exchange, service momentarily overloaded) with capped
+/// exponential backoff: 50ms doubling to a 2s ceiling. The retry loop is
+/// idempotent through the job's unique name — if an earlier attempt
+/// actually landed before its response was lost, the service refuses the
+/// duplicate name and that refusal on a retry counts as success
+/// (`Ok(None)`).
+fn submit_with_retries(
+    addr: &ServiceAddr,
+    job: &JobConfig,
+    retries: u32,
+) -> Result<Option<Json>> {
+    let cap = std::time::Duration::from_secs(2);
+    let mut delay = std::time::Duration::from_millis(50);
+    let mut attempt = 0u32;
+    loop {
+        match service_roundtrip(addr, &Request::Submit(job.clone())) {
+            Ok(doc) => return Ok(Some(doc)),
+            // The duplicate-name refusal is only a success signal when a
+            // previous attempt could have landed; on the first try it is
+            // a genuine error.
+            Err(e) if attempt > 0 && format!("{e:#}").contains("unique identity keys") => {
+                println!(
+                    "submitted {} on an earlier attempt (service already holds the name)",
+                    job.name
+                );
+                return Ok(None);
+            }
+            Err(e) if attempt < retries => {
+                attempt += 1;
+                eprintln!(
+                    "cupso submit: {} attempt {}/{} failed ({e:#}); retrying in {}ms",
+                    job.name,
+                    attempt,
+                    retries,
+                    delay.as_millis()
+                );
+                std::thread::sleep(delay);
+                delay = cap.min(delay * 2);
+            }
+            Err(e) => return Err(e),
+        }
+    }
 }
 
 fn cmd_status(rest: &[String]) -> Result<()> {

@@ -42,6 +42,20 @@
 //! were admitted live. Finished (and cancelled) jobs are reaped into a
 //! results table as they complete and are not part of the snapshot.
 //!
+//! **Crash safety.** With `checkpoint_every = N` in the knobs (CLI
+//! `--checkpoint-every`) the loop *also* persists every live job through
+//! the same store at every Nth round boundary, without stopping —
+//! durably, via the fsync + manifest-commit-point discipline of
+//! [`crate::checkpoint::io`]. [`ServiceSession::adopt`] is the matching
+//! warm restart: `cupso serve --checkpoint-dir D` auto-adopts a valid
+//! snapshot already in `D`, so a plain supervisor restart loop is a
+//! correct recovery story — a `kill -9` loses at most the rounds since
+//! the last snapshot, and the continuation is bit-exact for the
+//! bit-exact engines (`rust/tests/durability.rs`). A periodic persist
+//! *failure* is deliberately fatal: the daemon dies loudly with the last
+//! durable snapshot intact rather than serving with silently degraded
+//! durability.
+//!
 //! **Lifecycle.** [`ServiceSession::run`] loops until (a) a drain
 //! request arrives, or (b) every [`ServiceHandle`] is dropped *and* all
 //! admitted work has finished — so a library caller can simply drop the
@@ -54,7 +68,8 @@ pub use server::{
     bind, bind_tcp, spawn_server, spawn_server_on, Listener, DEFAULT_MAX_CONNS,
 };
 
-use crate::checkpoint::store;
+use crate::checkpoint::store::SnapshotSink;
+use crate::checkpoint::JobCheckpoint;
 use crate::config::{BatchConfig, EngineKind};
 use crate::scheduler::{JobOutcome, JobReport, JobScheduler, JobSpec, Session, StopReason};
 use anyhow::{Context, Result};
@@ -465,8 +480,20 @@ pub struct ServiceSession {
     rx: Receiver<Control>,
     /// Scheduler knobs recorded in drain-snapshot manifests (the `jobs`
     /// field is unused — the snapshot carries the real job list).
+    /// `knobs.checkpoint_every > 0` turns on periodic live snapshots at
+    /// round boundaries; `knobs.checkpoint_keep` sets snapshot rotation.
     knobs: BatchConfig,
     snapshot_dir: Option<PathBuf>,
+    /// The snapshot writer over `snapshot_dir` (None iff no directory
+    /// was configured) — shared by periodic persists and drain.
+    sink: Option<SnapshotSink>,
+    /// Whether this service owns the snapshot directory's lifecycle:
+    /// true once periodic persistence is on (`checkpoint_every > 0`) or
+    /// a snapshot was adopted from it. An owning service writes a final
+    /// snapshot when it runs dry, so a supervisor restart never re-runs
+    /// work that already finished; a drain-only service leaves the
+    /// directory alone outside explicit drains.
+    owns_dir: bool,
     /// Bounded window of the newest finished-job rows (see
     /// [`MAX_RESULTS`]).
     results: VecDeque<FinishedJob>,
@@ -497,6 +524,16 @@ impl ServiceSession {
         for spec in initial {
             session.admit(spec)?;
         }
+        let sink = match &snapshot_dir {
+            Some(dir) => Some(SnapshotSink::new(
+                dir,
+                &knobs,
+                knobs.checkpoint_keep.max(1),
+                "serve",
+            )?),
+            None => None,
+        };
+        let owns_dir = sink.is_some() && knobs.checkpoint_every > 0;
         let (tx, rx) = channel();
         Ok((
             Self {
@@ -504,6 +541,8 @@ impl ServiceSession {
                 rx,
                 knobs,
                 snapshot_dir,
+                sink,
+                owns_dir,
                 results: VecDeque::new(),
                 finished_total: 0,
                 watchers: Vec::new(),
@@ -514,6 +553,33 @@ impl ServiceSession {
             },
             ServiceHandle { tx },
         ))
+    }
+
+    /// Warm restart: admit the jobs of a recovered snapshot before the
+    /// loop starts. Already-finished checkpoints are reaped straight
+    /// into the results table; live ones resume bit-exactly from their
+    /// recorded round. Returns the number of live jobs adopted. After a
+    /// successful adopt this service owns the snapshot directory's
+    /// lifecycle (see `owns_dir`).
+    pub fn adopt(&mut self, ckpts: &[JobCheckpoint]) -> Result<usize> {
+        for ckpt in ckpts {
+            let spec = JobSpec::from_checkpoint(ckpt)
+                .with_context(|| format!("adopting snapshot job {:?}", ckpt.name))?;
+            self.session
+                .admit_resumed(spec, ckpt)
+                .with_context(|| format!("adopting snapshot job {:?}", ckpt.name))?;
+        }
+        let ServiceSession {
+            session,
+            results,
+            finished_total,
+            ..
+        } = self;
+        session.reap(|outcome| push_result(results, finished_total, finished_row(&outcome)))?;
+        if self.sink.is_some() {
+            self.owns_dir = true;
+        }
+        Ok(self.session.live())
     }
 
     /// Run the daemon loop, discarding telemetry.
@@ -583,8 +649,29 @@ impl ServiceSession {
             }
             if self.session.live() > 0 {
                 self.step_round(&mut telemetry)?;
+                self.maybe_persist()?;
             }
         }
+    }
+
+    /// Periodic live snapshot at a round boundary (`checkpoint_every`
+    /// rounds apart; 0 = off). Off-cadence rounds cost two field reads
+    /// and a modulo — the zero-allocation steady state is untouched. A
+    /// persist failure is fatal by design: the daemon dies loudly with
+    /// the last durable snapshot intact on disk, and a plain supervisor
+    /// restart warm-adopts it (`cupso serve --checkpoint-dir` auto-
+    /// resumes) — dying is the recovery story, not an outage.
+    fn maybe_persist(&mut self) -> Result<()> {
+        let every = self.knobs.checkpoint_every;
+        if every == 0 || self.session.rounds() % every != 0 {
+            return Ok(());
+        }
+        let Some(sink) = self.sink.as_mut() else {
+            return Ok(());
+        };
+        let snap = self.session.snapshot();
+        sink.persist(&snap)
+            .context("periodic service snapshot failed (restart to recover the last durable one)")
     }
 
     /// Rouse the event loop, if one registered a [`Waker`]. One branch
@@ -740,18 +827,15 @@ impl ServiceSession {
                 }
                 let mut dir_written = None;
                 if live > 0 {
-                    let dir = self.snapshot_dir.clone().expect("checked above");
                     let snap = self.session.snapshot();
-                    let mut buf = Vec::new();
-                    if let Err(e) =
-                        store::write_snapshot(&dir, &self.knobs, 1, "serve", &snap, &mut buf)
-                    {
+                    let sink = self.sink.as_mut().expect("checked above");
+                    if let Err(e) = sink.persist(&snap) {
                         // Keep serving: the jobs are still alive in
                         // memory, which beats dying with them unsaved.
                         let _ = reply.send(Err(format!("snapshot failed: {e:#}")));
                         return Ok(false);
                     }
-                    dir_written = Some(dir);
+                    dir_written = self.snapshot_dir.clone();
                 }
                 self.drained = live;
                 self.drained_to = dir_written.clone();
@@ -775,6 +859,20 @@ impl ServiceSession {
     }
 
     fn finish(mut self) -> Result<ServiceEnd> {
+        // A dir-owning service that ran dry (not drained) rewrites its
+        // snapshot one final time, so the directory reflects reality: a
+        // supervisor restarting the daemon adopts the now-empty (or
+        // residual) job set instead of re-running work that already
+        // finished. Best-effort — the results are already in hand, and a
+        // re-run after a crash here would be deterministic anyway.
+        if self.drained == 0 && self.owns_dir {
+            if let Some(sink) = self.sink.as_mut() {
+                let snap = self.session.snapshot();
+                if let Err(e) = sink.persist(&snap) {
+                    eprintln!("cupso: warning: final snapshot failed: {e:#}");
+                }
+            }
+        }
         // Every live subscriber gets the protocol-promised terminator —
         // unconditionally, thanks to the reserved queue slot. (The old
         // try_send silently lost `end` for a watcher whose buffer was
@@ -853,6 +951,8 @@ mod tests {
             pack_max: 0,
             quota_jobs: 0,
             quota_steps: 0,
+            checkpoint_every: 0,
+            checkpoint_keep: 1,
             jobs: Vec::new(),
         }
     }

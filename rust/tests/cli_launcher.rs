@@ -690,3 +690,243 @@ fn batch_suspend_requires_checkpoint_dir() {
     assert!(!ok);
     assert!(text.contains("--checkpoint-dir"), "{text}");
 }
+
+/// Like [`cupso`] but with one extra environment variable set.
+fn cupso_env(args: &[&str], key: &str, val: &str) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_cupso"))
+        .args(args)
+        .env(key, val)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn cupso");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+/// Two deterministic long-budget jobs: still live whenever the crash
+/// tests kill the daemon, finite enough for the recovery run to finish.
+const CRASH_BATCH: &str = r#"
+[scheduler]
+workers = 2
+policy = "round-robin"
+streams = 2
+batch_steps = 3
+
+[jobs.alpha]
+fitness = "cubic"
+engine = "queue"
+particles = 128
+dim = 1
+iters = 150_000
+seed = 11
+
+[jobs.beta]
+fitness = "sphere"
+engine = "reduction"
+particles = 96
+dim = 2
+iters = 120_000
+seed = 12
+"#;
+
+/// ISSUE 9 acceptance: `kill -9` a serving daemon mid-run, restart it on
+/// the same `--checkpoint-dir`, and the jobs still finish with the
+/// uninterrupted batch's exact results. The second incarnation gets no
+/// `--config` — every live job it serves must come from the snapshot the
+/// killed daemon left behind (the supervisor-restart recovery story).
+#[test]
+fn serve_survives_sigkill_and_warm_restart_finishes_the_jobs() {
+    let dir = std::env::temp_dir().join("cupso-cli-sigkill");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("batch.toml");
+    std::fs::write(&cfg, CRASH_BATCH).unwrap();
+    let snap = dir.join("snap");
+    let socket1 = dir.join("svc1.sock");
+    let socket2 = dir.join("svc2.sock");
+
+    let (ok, reference) = cupso(&["batch", "--config", cfg.to_str().unwrap()]);
+    assert!(ok, "{reference}");
+    let expected_rows: Vec<String> = reference
+        .lines()
+        .filter(|l| l.starts_with("| alpha") || l.starts_with("| beta"))
+        .map(|l| l.to_string())
+        .collect();
+    assert_eq!(expected_rows.len(), 2, "{reference}");
+
+    // Incarnation 1: periodic live snapshots every 5 rounds.
+    let mut first = spawn_serve(&[
+        "serve",
+        "--socket",
+        socket1.to_str().unwrap(),
+        "--config",
+        cfg.to_str().unwrap(),
+        "--checkpoint-dir",
+        snap.to_str().unwrap(),
+        "--checkpoint-every",
+        "5",
+    ]);
+    wait_for_service(socket1.to_str().unwrap());
+    // Wait for the first committed snapshot, then kill without warning —
+    // SIGKILL, not a drain: no shutdown code runs, the daemon may die
+    // mid-write. Whatever half-written state that leaves, the restart
+    // must recover from the last *committed* snapshot.
+    for _ in 0..300 {
+        if snap.join("manifest.toml").exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    assert!(snap.join("manifest.toml").exists(), "no snapshot to kill over");
+    first.0.kill().expect("SIGKILL serve");
+    first.0.wait().expect("reap serve");
+
+    // Incarnation 2: same snapshot dir, fresh socket, NO --config.
+    let mut second = spawn_serve(&[
+        "serve",
+        "--socket",
+        socket2.to_str().unwrap(),
+        "--checkpoint-dir",
+        snap.to_str().unwrap(),
+    ]);
+    wait_for_service(socket2.to_str().unwrap());
+    let (ok, text) = cupso(&["status", "--socket", socket2.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(
+        text.contains("2 live"),
+        "warm restart must adopt both snapshot jobs:\n{text}"
+    );
+
+    // Drain the adopted jobs and continue them through the standard
+    // resume path: results must be bit-exact with the uninterrupted run.
+    let (ok, text) = cupso(&["drain", "--socket", socket2.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("drained 2 live jobs"), "{text}");
+    wait_for_exit(&mut second);
+
+    let (ok, resumed) = cupso(&["resume", snap.to_str().unwrap()]);
+    assert!(ok, "{resumed}");
+    assert!(resumed.contains("cupso resume: 2 jobs"), "{resumed}");
+    let resumed_rows: Vec<String> = resumed
+        .lines()
+        .filter(|l| l.starts_with("| alpha") || l.starts_with("| beta"))
+        .map(|l| l.to_string())
+        .collect();
+    assert_eq!(
+        resumed_rows, expected_rows,
+        "recovery after kill -9 diverged from the uninterrupted run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `cupso submit --retries N` keeps knocking while the daemon is still
+/// starting (the supervisor-restart window), and a duplicate of a live
+/// name still fails immediately — retries never mask a real conflict.
+#[test]
+fn submit_retries_bridge_a_late_starting_daemon() {
+    let dir = std::env::temp_dir().join("cupso-cli-submit-retry");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let socket = dir.join("svc.sock");
+    let socket = socket.to_str().unwrap();
+
+    // Client first, daemon later: the submit must survive the gap.
+    let submit = Command::new(env!("CARGO_BIN_EXE_cupso"))
+        .args([
+            "submit", "--socket", socket, "--retries", "60", "--name", "solo", "--fitness",
+            "cubic", "--engine", "queue", "--particles", "64", "--iters", "1_000_000_000",
+        ])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn cupso submit");
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let mut serve = spawn_serve(&["serve", "--socket", socket]);
+    let out = submit.wait_with_output().expect("submit output");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(out.status.success(), "{text}");
+    assert!(text.contains("retrying"), "submit never had to retry:\n{text}");
+    assert!(text.contains("submitted solo"), "{text}");
+
+    // The name is live: a duplicate fails on its FIRST attempt — only a
+    // retry of one's own submit treats "already live" as success.
+    let (ok, text) = cupso(&[
+        "submit", "--socket", socket, "--retries", "3", "--name", "solo", "--iters", "10",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("unique"), "{text}");
+
+    let (ok, text) = cupso(&["cancel", "--socket", socket, "solo"]);
+    assert!(ok, "{text}");
+    let (ok, text) = cupso(&["drain", "--socket", socket]);
+    assert!(ok, "{text}");
+    wait_for_exit(&mut serve);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `CUPSO_FAULT_PLAN=persist@3=abort` crashes a periodic-checkpointing
+/// batch at its 3rd persist point; `cupso resume` then finishes from the
+/// last committed snapshot with the uninterrupted run's exact rows. The
+/// same seam refuses a typo'd plan loudly instead of ignoring it.
+#[test]
+fn fault_plan_abort_at_persist_then_resume_reproduces_results() {
+    let dir = std::env::temp_dir().join("cupso-cli-fault-abort");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("batch.toml");
+    std::fs::write(&cfg, DETERMINISTIC_BATCH).unwrap();
+    let snap = dir.join("snap");
+
+    let (ok, reference) = cupso(&["batch", "--config", cfg.to_str().unwrap()]);
+    assert!(ok, "{reference}");
+    let expected_rows = batch_result_rows(&reference);
+
+    let (ok, text) = cupso_env(
+        &[
+            "batch",
+            "--config",
+            cfg.to_str().unwrap(),
+            "--checkpoint-dir",
+            snap.to_str().unwrap(),
+            "--checkpoint-every",
+            "3",
+        ],
+        "CUPSO_FAULT_PLAN",
+        "persist@3=abort",
+    );
+    assert!(!ok, "the abort directive must kill the batch:\n{text}");
+    assert!(text.contains("fault injection armed"), "{text}");
+    assert!(text.contains("aborting process"), "{text}");
+    assert!(
+        snap.join("manifest.toml").exists(),
+        "two persists committed before the abort"
+    );
+
+    let (ok, resumed) = cupso(&["resume", snap.to_str().unwrap()]);
+    assert!(ok, "{resumed}");
+    assert!(resumed.contains("cupso resume: 4 jobs"), "{resumed}");
+    assert_eq!(
+        batch_result_rows(&resumed),
+        expected_rows,
+        "resume after an injected crash diverged from the uninterrupted run"
+    );
+
+    // A typo'd plan is a loud startup error, never silently no faults.
+    let (ok, text) = cupso_env(
+        &["batch", "--config", cfg.to_str().unwrap()],
+        "CUPSO_FAULT_PLAN",
+        "chmod@1",
+    );
+    assert!(!ok);
+    assert!(text.contains("CUPSO_FAULT_PLAN"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}

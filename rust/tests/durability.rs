@@ -1,0 +1,563 @@
+//! Crash-recovery determinism tier (ISSUE 9): kill the service at every
+//! injected persist point — and, for the queue engine, at every
+//! individual store write/fsync/rename — then warm-restart from the
+//! surviving snapshot and prove the observable outcomes are bit-exact
+//! with the never-interrupted run.
+//!
+//! The contract under test: a job's final `(steps, stop, gbest)` is an
+//! *exactly-once observable* even though execution is at-least-once. A
+//! crash may re-run work since the last durable snapshot, but the
+//! deterministic engines replay it bit-identically, so the union of
+//! results observed across incarnations equals the uninterrupted run's —
+//! and any job observed on both sides of the crash must agree exactly.
+//!
+//! Faults are injected through the process-global store-I/O seam
+//! ([`cupso::checkpoint::io`]); every test that installs an I/O
+//! implementation holds [`lock_io`] and restores [`RealIo`] on drop.
+
+use anyhow::Result;
+use cupso::checkpoint::io::{
+    self as storeio, FaultAction, FaultOp, FaultPlan, FaultyIo, RealIo, StoreIo,
+};
+use cupso::checkpoint::store::{load_snapshot, snapshot_present};
+use cupso::checkpoint::JobCheckpoint;
+use cupso::config::{BatchConfig, EngineKind};
+use cupso::fitness::{Cubic, Objective};
+use cupso::pso::PsoParams;
+use cupso::scheduler::{JobScheduler, JobSpec};
+use cupso::service::{ServiceEnd, ServiceSession};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// The I/O seam is process-global, so fault-injecting tests serialize.
+static IO_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds the seam lock and restores [`RealIo`] on drop — even when the
+/// test body panics, the next test starts from clean I/O.
+struct IoGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for IoGuard {
+    fn drop(&mut self) {
+        storeio::reset();
+    }
+}
+
+fn lock_io() -> IoGuard {
+    let locked = IO_LOCK.lock();
+    IoGuard(locked.unwrap_or_else(std::sync::PoisonError::into_inner))
+}
+
+/// (name, iteration budget, seed).
+type Job = (&'static str, u64, u64);
+
+/// name → (final iter, stop reason, gbest bits): everything a client can
+/// observe about a finished job, with the fitness compared bit-for-bit.
+type Fp = BTreeMap<String, (u64, String, u64)>;
+
+fn knobs(every: u64, keep: usize) -> BatchConfig {
+    BatchConfig {
+        workers: 2,
+        policy: "round-robin".into(),
+        streams: 1,
+        batch_steps: 1,
+        preempt_quantum: 0,
+        pack: false,
+        pack_min: 2,
+        pack_max: 0,
+        quota_jobs: 0,
+        quota_steps: 0,
+        checkpoint_every: every,
+        checkpoint_keep: keep,
+        jobs: Vec::new(),
+    }
+}
+
+fn spec(name: &str, engine: EngineKind, iters: u64, seed: u64) -> JobSpec {
+    JobSpec::new(
+        name,
+        engine,
+        PsoParams::paper_1d(48, iters),
+        Arc::new(Cubic),
+        Objective::Maximize,
+        seed,
+    )
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cupso-durability-{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run one service incarnation to its end (or its death), recording the
+/// finished-job telemetry the whole way — that record survives a fatal
+/// persist error the same way a watching client's notes would.
+fn run_observing(
+    engine: EngineKind,
+    dir: &Path,
+    every: u64,
+    keep: usize,
+    jobs: &[Job],
+    adopt: Option<&[JobCheckpoint]>,
+) -> (Result<ServiceEnd>, Fp) {
+    let mut seen: Fp = BTreeMap::new();
+    let run = (|| -> Result<ServiceEnd> {
+        let scheduler = JobScheduler::with_workers(2);
+        let initial: Vec<JobSpec> = if adopt.is_some() {
+            Vec::new()
+        } else {
+            jobs.iter()
+                .map(|&(name, iters, seed)| spec(name, engine, iters, seed))
+                .collect()
+        };
+        let (mut service, handle) = ServiceSession::new(
+            &scheduler,
+            knobs(every, keep),
+            Some(dir.to_path_buf()),
+            initial,
+        )?;
+        if let Some(ckpts) = adopt {
+            service.adopt(ckpts)?;
+        }
+        drop(handle);
+        service.run_with(|r| {
+            if let Some(stop) = r.finished {
+                seen.insert(
+                    r.name.to_string(),
+                    (r.iter, stop.to_string(), r.gbest_fit.to_bits()),
+                );
+            }
+        })
+    })();
+    (run, seen)
+}
+
+/// Warm-restart recovery after a fatal injected fault: adopt the newest
+/// committed snapshot (which an EIO-style fault can never have torn —
+/// failed writes are never published), or start cold if the crash
+/// predates the first commit point. Returns the recovery incarnation's
+/// observed finishes.
+fn recover(engine: EngineKind, dir: &Path, every: u64, keep: usize, jobs: &[Job]) -> Fp {
+    if snapshot_present(dir) {
+        let loaded = load_snapshot(dir).expect("a committed snapshot must load");
+        loaded.report();
+        assert!(
+            loaded.is_clean(),
+            "fail-stop faults must never commit torn snapshots"
+        );
+        let (end, seen) = run_observing(engine, dir, every, keep, jobs, Some(&loaded.jobs));
+        end.expect("recovery run");
+        seen
+    } else {
+        let (end, seen) = run_observing(engine, dir, every, keep, jobs, None);
+        end.expect("cold restart");
+        seen
+    }
+}
+
+/// The exactly-once-observable check: pre-crash ∪ post-crash finishes
+/// must equal the uninterrupted run's, and a job observed in both
+/// incarnations must agree bit-for-bit.
+fn check_union(pre: &Fp, post: &Fp, want: &Fp, what: &str) {
+    let mut union = pre.clone();
+    for (name, row) in post {
+        if let Some(prev) = union.get(name) {
+            assert_eq!(prev, row, "{what}: job {name} diverged across the crash");
+        }
+        union.insert(name.clone(), row.clone());
+    }
+    assert_eq!(
+        &union, want,
+        "{what}: observable outcomes differ from the uninterrupted run"
+    );
+}
+
+/// Exhaustive crash sweep: size the run with a fault-free counting pass,
+/// then kill it at the 1st, 2nd, … nth occurrence of `op` and prove
+/// recovery each time.
+fn crash_sweep(engine: EngineKind, op: FaultOp, tag: &str, jobs: &[Job], every: u64) {
+    let _io = lock_io();
+    let base = temp_dir(&format!("{tag}-base"));
+    let counter = Arc::new(FaultyIo::new(FaultPlan::default()));
+    storeio::install(counter.clone());
+    let (end, want) = run_observing(engine, &base, every, 1, jobs, None);
+    end.expect("baseline run");
+    let points = counter.counts()[op.index()];
+    storeio::reset();
+    assert_eq!(want.len(), jobs.len(), "baseline must finish every job");
+    assert!(points >= 2, "{tag}: workload too small ({points} {op:?} points)");
+
+    for nth in 1..=points {
+        let dir = temp_dir(&format!("{tag}-{nth}"));
+        let plan = FaultPlan::single(op, nth, FaultAction::Eio);
+        storeio::install(Arc::new(FaultyIo::new(plan)));
+        let (crashed, seen_pre) = run_observing(engine, &dir, every, 1, jobs, None);
+        storeio::reset();
+        match crashed {
+            // The fault landed on the best-effort final snapshot: the
+            // daemon warns but the run itself is unaffected.
+            Ok(_) => assert_eq!(
+                seen_pre, want,
+                "{tag}: surviving run diverged under {op:?}@{nth}"
+            ),
+            Err(_) => {
+                let seen_post = recover(engine, &dir, every, 1, jobs);
+                check_union(&seen_pre, &seen_post, &want, &format!("{tag} {op:?}@{nth}"));
+            }
+        }
+    }
+}
+
+const PERSIST_JOBS: &[Job] = &[("alpha", 26, 9), ("beta", 34, 21), ("gamma", 21, 5)];
+const OP_JOBS: &[Job] = &[("left", 10, 3), ("right", 14, 8)];
+
+#[test]
+fn cpu_crash_at_every_persist_point_recovers_bit_exact() {
+    crash_sweep(
+        EngineKind::SerialCpu,
+        FaultOp::Persist,
+        "cpu",
+        PERSIST_JOBS,
+        6,
+    );
+}
+
+#[test]
+fn reduction_crash_at_every_persist_point_recovers_bit_exact() {
+    crash_sweep(
+        EngineKind::Reduction,
+        FaultOp::Persist,
+        "red",
+        PERSIST_JOBS,
+        6,
+    );
+}
+
+#[test]
+fn unroll_crash_at_every_persist_point_recovers_bit_exact() {
+    crash_sweep(
+        EngineKind::LoopUnrolling,
+        FaultOp::Persist,
+        "unr",
+        PERSIST_JOBS,
+        6,
+    );
+}
+
+#[test]
+fn queue_crash_at_every_persist_point_recovers_bit_exact() {
+    crash_sweep(EngineKind::Queue, FaultOp::Persist, "que", PERSIST_JOBS, 6);
+}
+
+#[test]
+fn queue_crash_at_every_store_write_recovers_bit_exact() {
+    crash_sweep(EngineKind::Queue, FaultOp::Write, "qwrite", OP_JOBS, 4);
+}
+
+#[test]
+fn queue_crash_at_every_store_fsync_recovers_bit_exact() {
+    crash_sweep(EngineKind::Queue, FaultOp::Fsync, "qfsync", OP_JOBS, 4);
+}
+
+#[test]
+fn queue_crash_at_every_store_rename_recovers_bit_exact() {
+    crash_sweep(EngineKind::Queue, FaultOp::Rename, "qrename", OP_JOBS, 4);
+}
+
+#[test]
+fn seeded_fault_plans_recover_or_survive() {
+    // Randomized single-fault coverage on top of the exhaustive sweeps:
+    // same seed, same plan, so a failure here is replayable verbatim.
+    let _io = lock_io();
+    let every = 4;
+    let base = temp_dir("seeded-base");
+    let counter = Arc::new(FaultyIo::new(FaultPlan::default()));
+    storeio::install(counter.clone());
+    let (end, want) = run_observing(EngineKind::Queue, &base, every, 1, OP_JOBS, None);
+    end.expect("baseline run");
+    let counts = counter.counts();
+    storeio::reset();
+    let ops_per_kind = counts[..3].iter().copied().min().unwrap();
+    assert!(ops_per_kind >= 2, "workload too small: {counts:?}");
+
+    for seed in 0..24u64 {
+        let plan = FaultPlan::seeded(seed, ops_per_kind);
+        let dir = temp_dir(&format!("seeded-{seed}"));
+        storeio::install(Arc::new(FaultyIo::new(plan)));
+        let (crashed, seen_pre) = run_observing(EngineKind::Queue, &dir, every, 1, OP_JOBS, None);
+        storeio::reset();
+        match crashed {
+            // Truncate faults report success (a silently lost tail), so
+            // the run itself completes; EIO/ENOSPC on the final
+            // best-effort snapshot also leaves the run whole.
+            Ok(_) => assert_eq!(seen_pre, want, "seed {seed}: surviving run diverged"),
+            Err(_) => {
+                let seen_post = recover(EngineKind::Queue, &dir, every, 1, OP_JOBS);
+                check_union(&seen_pre, &seen_post, &want, &format!("seed {seed}"));
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Torn-snapshot recovery: quarantine, manifest commit point, rotated
+// fallback.
+// ------------------------------------------------------------------
+
+/// Crash a run at the given persist point and return (its pre-crash
+/// observations, the baseline fingerprint).
+fn crashed_dir(tag: &str, plan: &str, every: u64, keep: usize) -> (PathBuf, Fp, Fp) {
+    let base = temp_dir(&format!("{tag}-base"));
+    let (end, want) = run_observing(EngineKind::Queue, &base, every, keep, OP_JOBS, None);
+    end.expect("baseline run");
+    let dir = temp_dir(tag);
+    storeio::install(Arc::new(FaultyIo::new(FaultPlan::parse(plan).unwrap())));
+    let (crashed, seen_pre) = run_observing(EngineKind::Queue, &dir, every, keep, OP_JOBS, None);
+    storeio::reset();
+    crashed.expect_err("the injected fault must kill the daemon");
+    (dir, seen_pre, want)
+}
+
+#[test]
+fn torn_job_checkpoint_is_quarantined_and_the_rest_resumes() {
+    let _io = lock_io();
+    // Writes per flat persist: job_0, job_1, manifest. Tearing write #4
+    // (persist 2's job_0) and dying at persist 3 leaves a *committed*
+    // snapshot whose job_0 payload is torn — the checksum catches it.
+    let (dir, seen_pre, want) = crashed_dir("torn-job", "write@4=truncate:16; persist@3", 4, 1);
+    let loaded = load_snapshot(&dir).expect("manifest is intact, load must succeed");
+    loaded.report();
+    assert!(!loaded.is_clean());
+    assert_eq!(loaded.quarantined.len(), 1, "exactly job_0 is damaged");
+    assert_eq!(loaded.quarantined[0].index, 0);
+    assert!(
+        loaded.quarantined[0].error.contains("job_0"),
+        "quarantine report names the file: {}",
+        loaded.quarantined[0].error
+    );
+    assert_eq!(loaded.jobs.len(), 1, "the undamaged job survives");
+
+    let adopt = Some(loaded.jobs.as_slice());
+    let (end, seen_post) = run_observing(EngineKind::Queue, &dir, 4, 1, OP_JOBS, adopt);
+    end.expect("recovery with quarantine");
+    // The surviving job's outcome is bit-exact; the torn job is *lost*,
+    // but loudly — the quarantine row accounts for it.
+    let mut union = seen_pre.clone();
+    union.extend(seen_post.clone());
+    for (name, row) in &union {
+        assert_eq!(want.get(name), Some(row), "{name} not bit-exact");
+    }
+    assert_eq!(
+        union.len() + loaded.quarantined.len(),
+        want.len(),
+        "every missing job must be accounted for by a quarantine row"
+    );
+}
+
+#[test]
+fn missing_job_checkpoint_is_quarantined_like_a_torn_one() {
+    let _io = lock_io();
+    let (dir, _seen_pre, _want) = crashed_dir("missing-job", "persist@3", 4, 1);
+    std::fs::remove_file(dir.join("job_1.ckpt")).expect("snapshot holds job_1");
+    let loaded = load_snapshot(&dir).expect("manifest intact");
+    assert_eq!(loaded.quarantined.len(), 1);
+    assert_eq!(loaded.quarantined[0].index, 1);
+    assert_eq!(loaded.jobs.len(), 1);
+}
+
+#[test]
+fn torn_manifest_fails_the_load_loudly_never_a_silent_subset() {
+    let _io = lock_io();
+    // Write #6 is persist 2's manifest: tearing it leaves a flat layout
+    // whose commit point itself is damaged — the whole load must fail
+    // loudly (the manifest can no longer certify anything).
+    let (dir, _seen_pre, _want) =
+        crashed_dir("torn-manifest", "write@6=truncate:20; persist@3", 4, 1);
+    let err = load_snapshot(&dir).expect_err("torn manifest must not load");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest"), "error names the manifest: {msg}");
+}
+
+#[test]
+fn rotated_fallback_prefers_newest_fully_valid_snapshot() {
+    let _io = lock_io();
+    let jobs: &[Job] = &[("left", 30, 3), ("right", 34, 8)];
+    let every = 4;
+    let keep = 3;
+    let base = temp_dir("rot-base");
+    let (end, want) = run_observing(EngineKind::Queue, &base, every, keep, jobs, None);
+    end.expect("baseline run");
+
+    // Die at persist 4: snap_000000..2 are committed and retained.
+    let dir = temp_dir("rot-crash");
+    let plan = FaultPlan::single(FaultOp::Persist, 4, FaultAction::Eio);
+    storeio::install(Arc::new(FaultyIo::new(plan)));
+    let (crashed, seen_pre) = run_observing(EngineKind::Queue, &dir, every, keep, jobs, None);
+    storeio::reset();
+    crashed.expect_err("persist fault must kill the daemon");
+    for snap in ["snap_000000", "snap_000001", "snap_000002"] {
+        assert!(dir.join(snap).join("manifest.toml").is_file(), "{snap}");
+    }
+
+    // Wound the newest snapshot: recovery must fall back to the newest
+    // fully-valid one rather than resume snap_2 minus a job.
+    std::fs::write(dir.join("snap_000002").join("job_0.ckpt"), b"torn").unwrap();
+    let loaded = load_snapshot(&dir).unwrap();
+    loaded.report();
+    assert_eq!(loaded.dir, dir.join("snap_000001"), "newest fully-valid wins");
+    assert!(loaded.quarantined.is_empty());
+    assert_eq!(loaded.skipped.len(), 1, "the damaged newer snapshot is reported");
+    assert_eq!(loaded.jobs.len(), 2);
+
+    let adopt = Some(loaded.jobs.as_slice());
+    let (end, seen_post) = run_observing(EngineKind::Queue, &dir, every, keep, jobs, adopt);
+    end.expect("recovery from the fallback snapshot");
+    check_union(&seen_pre, &seen_post, &want, "rotated fallback");
+}
+
+#[test]
+fn all_rotated_candidates_damaged_falls_back_with_quarantine_then_fails_loudly() {
+    let _io = lock_io();
+    let jobs: &[Job] = &[("left", 30, 3), ("right", 34, 8)];
+    let every = 4;
+    let keep = 3;
+    let base = temp_dir("rot-all-base");
+    let (end, want) = run_observing(EngineKind::Queue, &base, every, keep, jobs, None);
+    end.expect("baseline run");
+
+    let dir = temp_dir("rot-all-crash");
+    let plan = FaultPlan::single(FaultOp::Persist, 4, FaultAction::Eio);
+    storeio::install(Arc::new(FaultyIo::new(plan)));
+    let (crashed, seen_pre) = run_observing(EngineKind::Queue, &dir, every, keep, jobs, None);
+    storeio::reset();
+    crashed.expect_err("persist fault must kill the daemon");
+
+    // Every candidate loses job_0: the newest loadable one wins, with
+    // its damage quarantined — a lossy but loud recovery.
+    for snap in ["snap_000000", "snap_000001", "snap_000002"] {
+        std::fs::write(dir.join(snap).join("job_0.ckpt"), b"torn").unwrap();
+    }
+    let loaded = load_snapshot(&dir).unwrap();
+    loaded.report();
+    assert_eq!(loaded.dir, dir.join("snap_000002"), "newest loadable wins");
+    assert_eq!(loaded.quarantined.len(), 1);
+    assert_eq!(loaded.jobs.len(), 1);
+
+    let adopt = Some(loaded.jobs.as_slice());
+    let (end, seen_post) = run_observing(EngineKind::Queue, &dir, every, keep, jobs, adopt);
+    end.expect("lossy recovery");
+    let mut union = seen_pre.clone();
+    union.extend(seen_post);
+    for (name, row) in &union {
+        assert_eq!(want.get(name), Some(row), "{name} not bit-exact");
+    }
+    assert_eq!(union.len() + loaded.quarantined.len(), want.len());
+
+    // With every manifest gone there is nothing to certify a snapshot:
+    // the load fails loudly instead of inventing an empty resume.
+    for snap in ["snap_000000", "snap_000001", "snap_000002"] {
+        std::fs::remove_file(dir.join(snap).join("manifest.toml")).ok();
+    }
+    assert!(!snapshot_present(&dir));
+    let err = load_snapshot(&dir).expect_err("no committed snapshot left");
+    assert!(format!("{err:#}").contains("no manifest"), "{err:#}");
+}
+
+// ------------------------------------------------------------------
+// Durable-write ordering: the discipline itself, observed op by op.
+// ------------------------------------------------------------------
+
+/// Logs every store operation (delegating to [`RealIo`]) so the test can
+/// assert the write → fsync → rename → dir-fsync order and the
+/// manifest-last commit point literally, not just by their effects.
+struct RecordingIo {
+    inner: RealIo,
+    log: Mutex<Vec<String>>,
+}
+
+fn tail(p: &Path) -> String {
+    let name = p.file_name().unwrap_or(p.as_os_str());
+    name.to_string_lossy().into_owned()
+}
+
+impl StoreIo for RecordingIo {
+    fn write(&self, path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+        self.log.lock().unwrap().push(format!("write {}", tail(path)));
+        self.inner.write(path, bytes)
+    }
+
+    fn fsync_file(&self, path: &Path) -> std::io::Result<()> {
+        self.log.lock().unwrap().push(format!("fsync {}", tail(path)));
+        self.inner.fsync_file(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        self.log
+            .lock()
+            .unwrap()
+            .push(format!("rename {} -> {}", tail(from), tail(to)));
+        self.inner.rename(from, to)
+    }
+
+    fn fsync_dir(&self, dir: &Path) -> std::io::Result<()> {
+        self.log.lock().unwrap().push("fsyncdir".to_string());
+        self.inner.fsync_dir(dir)
+    }
+
+    fn persist_point(&self) -> std::io::Result<()> {
+        self.log.lock().unwrap().push("persist".to_string());
+        Ok(())
+    }
+}
+
+#[test]
+fn snapshot_io_orders_fsync_before_publish_and_manifest_last() {
+    let _io = lock_io();
+    let dir = temp_dir("ordering");
+    let rec = Arc::new(RecordingIo {
+        inner: RealIo,
+        log: Mutex::new(Vec::new()),
+    });
+    storeio::install(rec.clone());
+    let (end, _) = run_observing(EngineKind::Queue, &dir, 2, 1, &[("only", 5, 1)], None);
+    end.expect("run");
+    storeio::reset();
+    let log = rec.log.lock().unwrap().clone();
+
+    // Group ops by persist point; nothing may touch the store outside one.
+    let mut groups: Vec<Vec<String>> = Vec::new();
+    for entry in log {
+        if entry == "persist" {
+            groups.push(Vec::new());
+        } else {
+            groups
+                .last_mut()
+                .expect("store ops before the first persist point")
+                .push(entry);
+        }
+    }
+    assert!(groups.len() >= 2, "want several persists: {groups:?}");
+    for g in &groups {
+        assert!(!g.is_empty() && g.len() % 4 == 0, "4 ops per file: {g:?}");
+        let chunks: Vec<&[String]> = g.chunks(4).collect();
+        for chunk in &chunks {
+            let file = chunk[0]
+                .strip_prefix("write ")
+                .unwrap_or_else(|| panic!("chunk must start with its write: {chunk:?}"));
+            assert!(file.ends_with(".tmp"), "writes land in the temp file: {chunk:?}");
+            assert_eq!(chunk[1], format!("fsync {file}"), "data durable before publish");
+            assert!(
+                chunk[2].starts_with(&format!("rename {file} -> ")),
+                "publish follows the fsync: {chunk:?}"
+            );
+            assert_eq!(chunk[3], "fsyncdir", "the publish itself is made durable");
+        }
+        let last = chunks.last().unwrap();
+        assert!(
+            last[2].ends_with("-> manifest.toml"),
+            "manifest is the commit point — published last: {g:?}"
+        );
+    }
+}

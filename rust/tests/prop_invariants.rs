@@ -10,10 +10,14 @@
 //! * **checkpoint codec** — encode→decode round-trips every f64 bit
 //!   pattern exactly (NaN payloads, ±0, ±∞), including empty/degenerate
 //!   swarms, and corrupted/truncated/version-bumped inputs fail loudly,
-//!   never panic.
+//!   never panic;
+//! * **snapshot torn-file invariant** — a job checkpoint or manifest
+//!   truncated at *every* byte offset is a loud error (or a loud
+//!   quarantine), never a panic and never a silent subset-resume.
 
-use cupso::checkpoint::{RunCheckpoint, RunKind};
-use cupso::config::EngineKind;
+use cupso::checkpoint::store::{load_snapshot, read_snapshot, write_snapshot};
+use cupso::checkpoint::{JobCheckpoint, RunCheckpoint, RunKind};
+use cupso::config::{BatchConfig, EngineKind};
 use cupso::engine::{Engine, ParallelSettings};
 use cupso::exec::{GridPool, SharedQueue};
 use cupso::fitness::{Cubic, Objective};
@@ -21,6 +25,7 @@ use cupso::pso::{Counters, PsoParams, SwarmState};
 use cupso::rng::{PhiloxStream, RngEngine, Xoshiro256pp};
 use cupso::testsupport::{gen_usize, prop_check};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 #[test]
 fn engines_respect_bounds_and_monotonicity() {
@@ -347,4 +352,119 @@ fn custom_block_size_preserves_equivalence() {
             }
         }
     }
+}
+
+// ------------------------------------------------------------------
+// Snapshot store: torn files at every byte offset.
+// ------------------------------------------------------------------
+
+fn snapshot_knobs() -> BatchConfig {
+    BatchConfig {
+        workers: 2,
+        policy: "round-robin".into(),
+        streams: 1,
+        batch_steps: 1,
+        preempt_quantum: 0,
+        pack: false,
+        pack_min: 2,
+        pack_max: 0,
+        quota_jobs: 0,
+        quota_steps: 0,
+        checkpoint_every: 0,
+        checkpoint_keep: 1,
+        jobs: Vec::new(),
+    }
+}
+
+fn random_job_checkpoint(rng: &mut dyn RngEngine, name: &str) -> JobCheckpoint {
+    JobCheckpoint {
+        name: Arc::from(name),
+        fitness: "cubic".into(),
+        stalled: rng.next_u64() % 8,
+        stop: None,
+        target_fit: None,
+        stall_window: None,
+        max_steps: None,
+        deadline: None,
+        run: Arc::new(random_checkpoint(rng, 2, 1)),
+    }
+}
+
+/// Write a two-job flat snapshot into a fresh temp dir and return it.
+fn tiny_snapshot(tag: &str, seed: u64) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cupso-prop-store-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let jobs = [
+        random_job_checkpoint(&mut rng, "alpha"),
+        random_job_checkpoint(&mut rng, "beta"),
+    ];
+    let mut buf = Vec::new();
+    write_snapshot(&dir, &snapshot_knobs(), 1, "prop", &jobs, &mut buf).unwrap();
+    dir
+}
+
+#[test]
+fn snapshot_job_file_truncated_at_every_offset_is_loud_or_quarantined() {
+    let dir = tiny_snapshot("job", 0x10B5);
+    let path = dir.join("job_0.ckpt");
+    let whole = std::fs::read(&path).unwrap();
+    assert_eq!(read_snapshot(&dir).unwrap().2.len(), 2, "baseline intact");
+
+    for cut in 0..whole.len() {
+        std::fs::write(&path, &whole[..cut]).unwrap();
+        // Strict read: the torn job fails the whole snapshot, loudly.
+        let err = read_snapshot(&dir)
+            .err()
+            .unwrap_or_else(|| panic!("job_0 cut to {cut} bytes read strictly"));
+        assert!(
+            format!("{err:#}").contains("job_0"),
+            "cut {cut}: error names the file: {err:#}"
+        );
+        // Lenient load: never a panic, never a silent subset — the torn
+        // job is accounted for in the quarantine report.
+        let loaded = load_snapshot(&dir)
+            .unwrap_or_else(|e| panic!("lenient load failed at cut {cut}: {e:#}"));
+        assert_eq!(loaded.quarantined.len(), 1, "cut {cut}");
+        assert_eq!(loaded.quarantined[0].index, 0, "cut {cut}");
+        assert_eq!(loaded.jobs.len(), 1, "cut {cut}: the intact job survives");
+        assert_eq!(&*loaded.jobs[0].name, "beta", "cut {cut}");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn snapshot_manifest_truncated_at_every_offset_never_silently_drops_jobs() {
+    let dir = tiny_snapshot("manifest", 0x3A2F);
+    let path = dir.join("manifest.toml");
+    let whole = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(read_snapshot(&dir).unwrap().2.len(), 2, "baseline intact");
+
+    for cut in 0..whole.len() {
+        std::fs::write(&path, &whole.as_bytes()[..cut]).unwrap();
+        // The manifest has no checksum; its trailing `complete = true`
+        // commit marker is what makes truncation detectable. Any cut
+        // must either fail loudly or (when only trailing whitespace is
+        // lost) read back the complete, identical snapshot — a subset
+        // would silently abandon jobs.
+        match read_snapshot(&dir) {
+            Err(_) => {}
+            Ok((knobs, keep, jobs)) => {
+                assert_eq!(jobs.len(), 2, "cut {cut}: manifest read a subset");
+                assert_eq!(keep, 1, "cut {cut}");
+                assert_eq!(knobs.streams, 1, "cut {cut}");
+            }
+        }
+        match load_snapshot(&dir) {
+            Err(_) => {}
+            Ok(loaded) => {
+                assert!(loaded.is_clean(), "cut {cut}");
+                assert_eq!(loaded.jobs.len(), 2, "cut {cut}: lenient load lost jobs");
+            }
+        }
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
 }

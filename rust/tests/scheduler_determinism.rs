@@ -365,6 +365,8 @@ fn service_under_weighted_fair_quotas_and_mixed_transports_is_bit_exact() {
         pack_max: 0,
         quota_jobs: 2,
         quota_steps: 0,
+        checkpoint_every: 0,
+        checkpoint_keep: 1,
         jobs: Vec::new(),
     };
     let scheduler = JobScheduler::with_streams(2, 2)

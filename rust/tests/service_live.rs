@@ -33,6 +33,8 @@ fn knobs(streams: usize) -> BatchConfig {
         pack_max: 0,
         quota_jobs: 0,
         quota_steps: 0,
+        checkpoint_every: 0,
+        checkpoint_keep: 1,
         jobs: Vec::new(),
     }
 }

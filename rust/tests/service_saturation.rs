@@ -39,6 +39,8 @@ fn start(policy: &str, max_conns: usize) -> Daemon {
         pack_max: 0,
         quota_jobs: 0,
         quota_steps: 0,
+        checkpoint_every: 0,
+        checkpoint_keep: 1,
         jobs: Vec::new(),
     };
     let scheduler = JobScheduler::with_streams(2, 2)

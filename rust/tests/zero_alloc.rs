@@ -210,6 +210,8 @@ fn service_rounds_with_empty_control_queue_allocate_nothing() {
             pack_max: 0,
             quota_jobs: 0,
             quota_steps: 0,
+            checkpoint_every: 0,
+            checkpoint_keep: 1,
             jobs: Vec::new(),
         };
         let (service, handle) = ServiceSession::new(&scheduler, knobs, None, specs).unwrap();
@@ -249,6 +251,64 @@ fn service_rounds_with_empty_control_queue_allocate_nothing() {
 }
 
 #[test]
+fn service_rounds_between_snapshots_allocate_nothing() {
+    let _g = LOCK.lock().unwrap();
+    // ISSUE 9: configuring periodic snapshots must not tax the rounds
+    // that don't persist. The cadence check (`rounds % every`) runs at
+    // every round boundary; with a sink constructed and a cadence too
+    // large to ever fire inside the run, warmed-up rounds must stay
+    // exactly as allocation-free as a service with no checkpointing.
+    let iters = 600u64;
+    let specs = flat_specs(EngineKind::Queue, 2, iters);
+    let scheduler = JobScheduler::with_streams(2, 1);
+    let dir = std::env::temp_dir().join(format!("cupso-zeroalloc-snap-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let knobs = BatchConfig {
+        workers: 2,
+        policy: "round-robin".into(),
+        streams: 1,
+        batch_steps: 1,
+        preempt_quantum: 0,
+        pack: false,
+        pack_min: 2,
+        pack_max: 0,
+        quota_jobs: 0,
+        quota_steps: 0,
+        checkpoint_every: 1 << 30,
+        checkpoint_keep: 1,
+        jobs: Vec::new(),
+    };
+    let (service, handle) =
+        ServiceSession::new(&scheduler, knobs, Some(dir.clone()), specs).unwrap();
+    drop(handle);
+    let (warm, upto) = (50u64, 450u64);
+    let mut calls = 0u64;
+    let mut start = 0u64;
+    let mut end = 0u64;
+    let outcome = service
+        .run_with(|_| {
+            calls += 1;
+            if calls == warm {
+                start = allocs();
+            }
+            if calls == upto {
+                end = allocs();
+            }
+        })
+        .unwrap();
+    assert!(calls >= upto, "too few rounds ({calls})");
+    assert_eq!(
+        end - start,
+        0,
+        "non-persisting rounds with a snapshot sink allocated {} times",
+        end - start
+    );
+    assert_eq!(outcome.finished_total, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn warmed_up_packed_rounds_allocate_nothing() {
     let _g = LOCK.lock().unwrap();
     // ISSUE 6: a warmed-up packed round (reconcile no-op, one launch
@@ -272,6 +332,8 @@ fn warmed_up_packed_rounds_allocate_nothing() {
         pack_max: 0,
         quota_jobs: 0,
         quota_steps: 0,
+        checkpoint_every: 0,
+        checkpoint_keep: 1,
         jobs: Vec::new(),
     };
     let (service, handle) = ServiceSession::new(&scheduler, knobs, None, specs).unwrap();

@@ -82,4 +82,88 @@ echo "== waiting for the daemon to exit"
 wait "$SERVE_PID"
 SERVE_PID=""
 
-echo "service smoke OK"
+# ---------------------------------------------------------------------
+# Crash leg (ISSUE 9): kill -9 a daemon mid-run, restart it on the same
+# --checkpoint-dir with no config, and the adopted job still finishes.
+# ---------------------------------------------------------------------
+CRASH="$WORK/crash"
+SOCK2="$WORK/cupso2.sock"
+SOCK3="$WORK/cupso3.sock"
+
+echo "== crash leg: serve with periodic snapshots every 5 rounds"
+"$BIN" serve --socket "$SOCK2" --checkpoint-dir "$CRASH" --checkpoint-every 5 \
+    >"$WORK/serve2.out" 2>&1 &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+    if "$BIN" status --socket "$SOCK2" >/dev/null 2>&1; then
+        break
+    fi
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "crash-leg serve died before becoming reachable" >&2
+        cat "$WORK/serve2.out" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+
+echo "== submitting a long job, waiting for the first committed snapshot"
+"$BIN" submit --socket "$SOCK2" --name phoenix --fitness sphere --dim 2 \
+    --particles 64 --iters 1_000_000 --engine queue --seed 9 >/dev/null
+FOUND=0
+for _ in $(seq 1 100); do
+    if [[ -f "$CRASH/manifest.toml" ]]; then
+        FOUND=1
+        break
+    fi
+    sleep 0.05
+done
+if [[ "$FOUND" != 1 ]]; then
+    echo "no snapshot committed before the kill" >&2
+    exit 1
+fi
+
+echo "== kill -9 (no shutdown code runs)"
+kill -9 "$SERVE_PID"
+wait "$SERVE_PID" 2>/dev/null || true
+SERVE_PID=""
+
+echo "== warm restart on the same --checkpoint-dir (no --config)"
+"$BIN" serve --socket "$SOCK3" --checkpoint-dir "$CRASH" \
+    >"$WORK/serve3.out" 2>&1 &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+    if "$BIN" status --socket "$SOCK3" >/dev/null 2>&1; then
+        break
+    fi
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "restarted serve died before becoming reachable" >&2
+        cat "$WORK/serve3.out" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+grep -q "warm restart" "$WORK/serve3.out"
+
+echo "== polling until the adopted job finishes"
+DONE=0
+for _ in $(seq 1 600); do
+    "$BIN" status --socket "$SOCK3" >"$WORK/status3.out"
+    if grep -q "0 live, 1 finished" "$WORK/status3.out"; then
+        DONE=1
+        break
+    fi
+    sleep 0.1
+done
+if [[ "$DONE" != 1 ]]; then
+    echo "adopted job never finished; last status:" >&2
+    cat "$WORK/status3.out" >&2
+    exit 1
+fi
+grep -q "phoenix" "$WORK/status3.out"
+
+echo "== draining the recovered daemon"
+"$BIN" drain --socket "$SOCK3" >/dev/null
+wait "$SERVE_PID"
+SERVE_PID=""
+
+echo "service smoke OK (crash leg included)"
