@@ -58,6 +58,8 @@ fn knobs(every: u64) -> BatchConfig {
         quota_steps: 0,
         checkpoint_every: every,
         checkpoint_keep: 1,
+        telemetry: true,
+        trace_dump: None,
         jobs: Vec::new(),
     }
 }

@@ -75,7 +75,10 @@ fn track<E: Engine>(engine: &mut E, frames: usize, iters_per_frame: u64) -> (Sum
             .sqrt();
         errors.push(err);
     }
-    (Summary::from_samples(&latencies), Summary::from_samples(&errors))
+    let latencies =
+        Summary::from_samples(&latencies).expect("one latency sample per tracked frame");
+    let errors = Summary::from_samples(&errors).expect("one error sample per tracked frame");
+    (latencies, errors)
 }
 
 fn main() {

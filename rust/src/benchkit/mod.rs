@@ -118,6 +118,7 @@ pub fn measure<F: FnMut() -> f64>(cfg: &BenchConfig, mut f: F) -> Summary {
     }
     let samples: Vec<f64> = (0..cfg.reps.max(1)).map(|_| f()).collect();
     Summary::from_samples(&samples)
+        .expect("bench samples are non-empty by construction (reps.max(1))")
 }
 
 /// Run a closure `reps` times, timing each run wholesale.

@@ -39,6 +39,7 @@
 //! first fsync (file or directory) with EIO. Counting is deterministic
 //! because all store I/O happens on the session thread in program order.
 
+use crate::telemetry::{self, Counter, TraceKind};
 use anyhow::{Context, Result};
 use std::io;
 use std::path::Path;
@@ -117,14 +118,17 @@ pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     let tmp = path.with_extension("tmp");
     io.write(&tmp, bytes)
         .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    telemetry::add(Counter::SnapshotBytes, bytes.len() as u64);
     io.fsync_file(&tmp)
         .with_context(|| format!("fsyncing checkpoint {}", tmp.display()))?;
+    telemetry::bump(Counter::SnapshotFsyncs);
     io.rename(&tmp, path)
         .with_context(|| format!("publishing checkpoint {}", path.display()))?;
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             io.fsync_dir(parent)
                 .with_context(|| format!("fsyncing directory {}", parent.display()))?;
+            telemetry::bump(Counter::SnapshotFsyncs);
         }
     }
     Ok(())
@@ -311,6 +315,16 @@ impl FaultPlan {
     }
 }
 
+/// The registry counter tracking fired directives against `op`.
+fn fault_counter(op: FaultOp) -> Counter {
+    match op {
+        FaultOp::Write => Counter::FaultsFiredWrite,
+        FaultOp::Fsync => Counter::FaultsFiredFsync,
+        FaultOp::Rename => Counter::FaultsFiredRename,
+        FaultOp::Persist => Counter::FaultsFiredPersist,
+    }
+}
+
 fn injected(kind: &str, n: u64, raw_os: i32, what: &str) -> io::Error {
     eprintln!("cupso: fault injection: {kind} #{n} -> injected {what}");
     io::Error::from_raw_os_error(raw_os)
@@ -354,12 +368,19 @@ impl FaultyIo {
             FaultOp::Rename => "rename",
             FaultOp::Persist => "persist",
         };
-        match self.plan.lookup(op, n) {
-            None => Ok(None),
-            Some(FaultAction::Eio) => Err(injected(kind, n, 5, "EIO")),
-            Some(FaultAction::Enospc) => Err(injected(kind, n, 28, "ENOSPC")),
-            Some(FaultAction::Truncate(k)) => Ok(Some(k)),
-            Some(FaultAction::Abort) => {
+        let Some(action) = self.plan.lookup(op, n) else {
+            return Ok(None);
+        };
+        // Fault-hit accounting: the durability tier asserts exactly-N
+        // directives fired, so a plan targeting an op that never occurs
+        // is a loud test failure instead of a silent no-op.
+        telemetry::bump(fault_counter(op));
+        telemetry::trace(TraceKind::FaultFired, op.index() as u64, n);
+        match action {
+            FaultAction::Eio => Err(injected(kind, n, 5, "EIO")),
+            FaultAction::Enospc => Err(injected(kind, n, 28, "ENOSPC")),
+            FaultAction::Truncate(k) => Ok(Some(k)),
+            FaultAction::Abort => {
                 eprintln!("cupso: fault injection: {kind} #{n} -> aborting process");
                 std::process::abort();
             }

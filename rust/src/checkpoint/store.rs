@@ -38,9 +38,11 @@
 use super::io::{self, write_atomic};
 use super::JobCheckpoint;
 use crate::config::{parse_toml, BatchConfig, TomlValue};
+use crate::telemetry::{self, Counter, Series, TraceKind};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 /// Writes batch snapshots under a checkpoint directory, with retention.
 ///
@@ -88,6 +90,35 @@ impl SnapshotSink {
     /// Persist one snapshot under the sink's retention policy. On `Ok`
     /// the snapshot is durable (fsynced through the commit point).
     pub fn persist(&mut self, snap: &[JobCheckpoint]) -> Result<()> {
+        let t0 = telemetry::enabled().then(Instant::now);
+        let bytes0 = telemetry::counter(Counter::SnapshotBytes);
+        let fsyncs0 = telemetry::counter(Counter::SnapshotFsyncs);
+        let result = self.persist_inner(snap);
+        // Store I/O runs on the session thread in program order, so the
+        // lifetime-counter deltas are this snapshot's own cost
+        // (saturating: parallel tests share the process-global registry).
+        let bytes = telemetry::counter(Counter::SnapshotBytes).saturating_sub(bytes0);
+        let fsyncs = telemetry::counter(Counter::SnapshotFsyncs).saturating_sub(fsyncs0);
+        match &result {
+            Ok(()) => {
+                telemetry::bump(Counter::Snapshots);
+                telemetry::record(Series::SnapshotBytesPer, bytes);
+                telemetry::record(Series::SnapshotFsyncsPer, fsyncs);
+                if let Some(t0) = t0 {
+                    telemetry::record(Series::SnapshotPersistNs, t0.elapsed().as_nanos() as u64);
+                }
+                telemetry::mark_snapshot_now();
+                telemetry::trace(TraceKind::PersistOk, snap.len() as u64, bytes);
+            }
+            Err(_) => {
+                telemetry::bump(Counter::SnapshotFailures);
+                telemetry::trace(TraceKind::PersistFail, snap.len() as u64, 0);
+            }
+        }
+        result
+    }
+
+    fn persist_inner(&mut self, snap: &[JobCheckpoint]) -> Result<()> {
         if self.keep <= 1 {
             return write_snapshot(
                 &self.dir,
@@ -366,6 +397,10 @@ fn read_manifest(dir: &Path) -> Result<(BatchConfig, usize, usize)> {
             None => 0,
         },
         checkpoint_keep: 1, // overwritten with `keep` below
+        // Runtime observability knobs are not snapshot semantics — a
+        // resumed session decides its own; the manifest never records them.
+        telemetry: true,
+        trace_dump: None,
         jobs: Vec::new(),
     };
     // Optional for compatibility with pre-rotation snapshots.

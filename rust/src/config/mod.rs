@@ -398,6 +398,16 @@ pub struct BatchConfig {
     /// (1 = overwrite the directory in place). CLI `--checkpoint-keep`
     /// overrides.
     pub checkpoint_keep: usize,
+    /// Runtime telemetry (the [`crate::telemetry`] registry + flight
+    /// recorder): on by default — recording is a handful of relaxed
+    /// atomics per round. `false` turns every recording call into an
+    /// early-out, which exists to *prove* invisibility (determinism
+    /// tier diffs on vs. off), not to save cost.
+    pub telemetry: bool,
+    /// File the flight-recorder trace ring is appended to on panic,
+    /// fatal persist failure, or drain. `None` = stderr. CLI
+    /// `--trace-dump` overrides.
+    pub trace_dump: Option<String>,
     /// The jobs, in file order.
     pub jobs: Vec<JobConfig>,
 }
@@ -453,6 +463,8 @@ impl BatchConfig {
             quota_steps: 0,
             checkpoint_every: 0,
             checkpoint_keep: 1,
+            telemetry: true,
+            trace_dump: None,
             jobs: Vec::new(),
         };
         // Materialize a job per `[jobs.<name>]` section header first, so a
@@ -539,6 +551,8 @@ impl BatchConfig {
                     "quota_steps" => cfg.quota_steps = as_uint(&value, &key)?,
                     "checkpoint_every" => cfg.checkpoint_every = as_uint(&value, &key)?,
                     "checkpoint_keep" => cfg.checkpoint_keep = as_uint(&value, &key)? as usize,
+                    "telemetry" => cfg.telemetry = value.as_bool(&key)?,
+                    "trace_dump" => cfg.trace_dump = Some(value.as_str(&key)?.to_string()),
                     other => bail!("unknown batch key {other:?} (in {key:?})"),
                 }
             }
@@ -829,6 +843,23 @@ mod tests {
         assert!(BatchConfig::from_toml_str("quota_jobs = -1\n[jobs.x]\nseed = 1").is_err());
         assert!(BatchConfig::from_toml_str("[jobs.x]\ntenant = \"\"").is_err(), "empty tenant");
         assert!(BatchConfig::from_toml_str("[jobs.x]\ntenant = 3").is_err(), "not a string");
+    }
+
+    #[test]
+    fn batch_config_parses_telemetry_knobs() {
+        let cfg = BatchConfig::from_toml_str(
+            "[scheduler]\ntelemetry = false\ntrace_dump = \"/tmp/trace.log\"\n[jobs.x]\nseed = 1",
+        )
+        .unwrap();
+        assert!(!cfg.telemetry);
+        assert_eq!(cfg.trace_dump.as_deref(), Some("/tmp/trace.log"));
+        // Defaults: telemetry on, trace ring dumps to stderr.
+        let plain = BatchConfig::from_toml_str("[jobs.x]\nseed = 1").unwrap();
+        assert!(plain.telemetry);
+        assert_eq!(plain.trace_dump, None);
+        // Type errors are load-time errors.
+        assert!(BatchConfig::from_toml_str("telemetry = 1\n[jobs.x]\nseed = 1").is_err());
+        assert!(BatchConfig::from_toml_str("trace_dump = 3\n[jobs.x]\nseed = 1").is_err());
     }
 
     #[test]

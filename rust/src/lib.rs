@@ -65,6 +65,7 @@ pub mod rng;
 pub mod runtime;
 pub mod scheduler;
 pub mod service;
+pub mod telemetry;
 pub mod testsupport;
 
 /// Crate-wide result alias.

@@ -10,6 +10,8 @@
 //!             socket and/or TCP (dynamic admission / cancellation / drain)
 //!   submit    submit job(s) to a running service
 //!   status    show a running service's live jobs and finished results
+//!             (`--metrics` prints Prometheus-style telemetry text)
+//!   top       live telemetry dashboard for a running service
 //!   cancel    cancel a live job on a running service
 //!   drain     checkpoint a running service's live jobs and stop it
 //!   simulate  print the Plane-C estimated-GPU tables (no execution)
@@ -32,7 +34,7 @@ use cupso::coordinator::{AsyncScheduler, CoordinatorConfig, SyncScheduler};
 use cupso::engine::ParallelSettings;
 use cupso::fitness::{by_name, Objective};
 use cupso::gpusim;
-use cupso::metrics::{Stopwatch, Table};
+use cupso::metrics::{AsciiPlot, Stopwatch, Table};
 use cupso::pso::PsoParams;
 use cupso::rng::RngKind;
 use cupso::runtime::XlaRuntime;
@@ -72,6 +74,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         Some("serve") => cmd_serve(rest),
         Some("submit") => cmd_submit(rest),
         Some("status") => cmd_status(rest),
+        Some("top") => cmd_top(rest),
         Some("cancel") => cmd_cancel(rest),
         Some("drain") => cmd_drain(rest),
         Some("simulate") => cmd_simulate(rest),
@@ -95,6 +98,7 @@ fn top_usage() -> String {
      \x20 serve     run the scheduler as a live job-service daemon\n\
      \x20 submit    submit job(s) to a running service\n\
      \x20 status    show a running service's jobs and results\n\
+     \x20 top       live telemetry dashboard for a running service\n\
      \x20 cancel    cancel a live job on a running service\n\
      \x20 drain     checkpoint a running service and stop it\n\
      \x20 simulate  print the estimated-GPU tables (Plane C)\n\
@@ -647,6 +651,16 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
              snap_<seq>/ directories keeping the latest N (overrides the file)",
             None,
         )
+        .opt(
+            "trace-dump",
+            "append flight-recorder trace dumps (panic/fatal persist/drain) \
+             to this file instead of stderr (overrides the file)",
+            None,
+        )
+        .switch(
+            "no-telemetry",
+            "disable runtime metrics and the trace ring entirely",
+        )
         .switch("trace", "print every global-best improvement as it lands");
     if rest.iter().any(|a| a == "--help") {
         println!("{}", spec.usage());
@@ -690,6 +704,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             quota_steps: 0,
             checkpoint_every: 0,
             checkpoint_keep: 1,
+            telemetry: true,
+            trace_dump: None,
             jobs: Vec::new(),
         },
     };
@@ -717,6 +733,18 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             bail!("--checkpoint-keep must be >= 1");
         }
     }
+    if let Some(path) = args.get("trace-dump") {
+        cfg.trace_dump = Some(path.to_string());
+    }
+    if args.flag("no-telemetry") {
+        cfg.telemetry = false;
+    }
+    // Telemetry is wired before the session exists so even the initial
+    // jobs' admissions land in the flight recorder, and the panic hook
+    // guarantees a crashing daemon dumps the trace ring on the way out.
+    cupso::telemetry::set_enabled(cfg.telemetry);
+    cupso::telemetry::set_trace_path(cfg.trace_dump.as_ref().map(PathBuf::from));
+    cupso::telemetry::install_panic_hook();
     let (scheduler, policy) = scheduler_from_knobs(&cfg)?;
     let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
     if cfg.checkpoint_every > 0 && ckpt_dir.is_none() {
@@ -1088,6 +1116,11 @@ fn cmd_status(rest: &[String]) -> Result<()> {
     let spec = Command::new("status", "show a running service's jobs and results")
         .opt("socket", "service Unix socket path", None)
         .opt("connect", "service TCP host:port (alternative to --socket)", None)
+        .switch(
+            "metrics",
+            "print Prometheus-style telemetry text (the `metrics` verb) \
+             instead of the job tables",
+        )
         .switch("json", "print the raw JSON response line");
     if rest.iter().any(|a| a == "--help") {
         println!("{}", spec.usage());
@@ -1095,6 +1128,16 @@ fn cmd_status(rest: &[String]) -> Result<()> {
     }
     let args = spec.parse(rest)?;
     let addr = service_addr(&args)?;
+    if args.flag("metrics") {
+        let doc = service_roundtrip(&addr, &Request::Metrics)?;
+        if args.flag("json") {
+            println!("{}", doc.render());
+        } else {
+            let m = doc.get("metrics").context("response missing metrics")?;
+            print!("{}", render_prometheus(m)?);
+        }
+        return Ok(());
+    }
     let doc = service_roundtrip(&addr, &Request::Status)?;
     if args.flag("json") {
         // Re-render the parsed document for scripting (same writer the
@@ -1113,6 +1156,24 @@ fn cmd_status(rest: &[String]) -> Result<()> {
     println!(
         "cupso status: round {rounds}, {streams} streams, {} live, {finished_total} finished",
         live.len()
+    );
+    let uptime = doc.get("uptime_s").context("missing uptime_s")?.as_u64("uptime_s")?;
+    let admitted = doc
+        .get("admitted_total")
+        .context("missing admitted_total")?
+        .as_u64("admitted_total")?;
+    let cancelled = doc
+        .get("cancelled_total")
+        .context("missing cancelled_total")?
+        .as_u64("cancelled_total")?;
+    let shed = doc
+        .get("shed_total")
+        .context("missing shed_total")?
+        .as_u64("shed_total")?;
+    println!(
+        "  uptime {uptime}s — lifetime {admitted} admitted / {finished_total} finished / \
+         {cancelled} cancelled / {shed} conns shed; last snapshot {}",
+        fmt_age(doc.num_or_null_field("last_snapshot_age_s")?)
     );
     if !live.is_empty() {
         let mut t = Table::new(
@@ -1165,6 +1226,170 @@ fn json_rows<'a>(doc: &'a Json, key: &str) -> Result<Vec<&'a Json>> {
         Some(other) => bail!("{key}: expected array, got {other:?}"),
         None => bail!("response missing {key:?}"),
     }
+}
+
+/// Key/value fields of an object-valued field of a parsed response.
+fn obj_fields<'a>(doc: &'a Json, key: &str) -> Result<&'a [(String, Json)]> {
+    match doc.get(key) {
+        Some(Json::Obj(fields)) => Ok(fields),
+        Some(other) => bail!("{key}: expected object, got {other:?}"),
+        None => bail!("response missing {key:?}"),
+    }
+}
+
+/// Render a wire age-in-seconds that may be `null` (never happened).
+fn fmt_age(age: Option<f64>) -> String {
+    match age {
+        Some(a) => format!("{a:.0}s ago"),
+        None => "never".to_string(),
+    }
+}
+
+/// Render a parsed `metrics` body as Prometheus-style exposition text.
+/// The wire carries structured JSON (scripting-friendly, one parser);
+/// the text form is a client-side view of the same snapshot, so the
+/// two can never disagree.
+fn render_prometheus(m: &Json) -> Result<String> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let uptime = m.get("uptime_s").context("metrics missing uptime_s")?.as_u64("uptime_s")?;
+    let _ = writeln!(out, "# TYPE cupso_uptime_seconds gauge");
+    let _ = writeln!(out, "cupso_uptime_seconds {uptime}");
+    if let Some(age) = m.num_or_null_field("last_snapshot_age_s")? {
+        let _ = writeln!(out, "# TYPE cupso_last_snapshot_age_seconds gauge");
+        let _ = writeln!(out, "cupso_last_snapshot_age_seconds {age:.0}");
+    }
+    for (k, v) in obj_fields(m, "counters")? {
+        let _ = writeln!(out, "# TYPE cupso_{k} counter");
+        let _ = writeln!(out, "cupso_{k} {}", v.as_u64(k)?);
+    }
+    for (k, v) in obj_fields(m, "gauges")? {
+        let _ = writeln!(out, "# TYPE cupso_{k} gauge");
+        let _ = writeln!(out, "cupso_{k} {}", v.as_u64(k)?);
+    }
+    for (k, h) in obj_fields(m, "histos")? {
+        let count = h.get("count").with_context(|| format!("{k}.count"))?.as_u64("count")?;
+        let sum = h.get("sum").with_context(|| format!("{k}.sum"))?.as_u64("sum")?;
+        let max = h.get("max").with_context(|| format!("{k}.max"))?.as_u64("max")?;
+        let _ = writeln!(out, "# TYPE cupso_{k} summary");
+        let _ = writeln!(out, "cupso_{k}_count {count}");
+        let _ = writeln!(out, "cupso_{k}_sum {sum}");
+        let _ = writeln!(out, "cupso_{k}_max {max}");
+    }
+    Ok(out)
+}
+
+fn cmd_top(rest: &[String]) -> Result<()> {
+    let spec = Command::new("top", "live telemetry dashboard for a running service")
+        .opt("socket", "service Unix socket path", None)
+        .opt("connect", "service TCP host:port (alternative to --socket)", None)
+        .opt("interval-ms", "milliseconds between refreshes", Some("1000"))
+        .opt(
+            "samples",
+            "render this many frames then exit; 0 = until interrupted",
+            Some("0"),
+        )
+        .switch("plain", "do not clear the screen between frames");
+    if rest.iter().any(|a| a == "--help") {
+        println!("{}", spec.usage());
+        return Ok(());
+    }
+    let args = spec.parse(rest)?;
+    let addr = service_addr(&args)?;
+    let interval = std::time::Duration::from_millis(args.get_parse("interval-ms", 1000u64)?);
+    let samples: u64 = args.get_parse("samples", 0u64)?;
+    let plain = args.flag("plain");
+    // Counter totals from the previous frame, for the Δ column.
+    let mut prev: std::collections::BTreeMap<String, u64> = std::collections::BTreeMap::new();
+    let mut frame = 0u64;
+    loop {
+        let doc = service_roundtrip(&addr, &Request::Metrics)?;
+        let m = doc.get("metrics").context("response missing metrics")?;
+        let rendered = render_top_frame(m, &mut prev)?;
+        if !plain {
+            // ANSI clear + home, so the dashboard repaints in place.
+            print!("\x1b[2J\x1b[H");
+        }
+        println!("{rendered}");
+        frame += 1;
+        if samples != 0 && frame >= samples {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// One `cupso top` frame: header, non-zero counters with per-frame
+/// deltas, active histogram series, and a log-binned latency sketch of
+/// the round step phase.
+fn render_top_frame(
+    m: &Json,
+    prev: &mut std::collections::BTreeMap<String, u64>,
+) -> Result<String> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let uptime = m.get("uptime_s").context("metrics missing uptime_s")?.as_u64("uptime_s")?;
+    let enabled = m.get("enabled").context("metrics missing enabled")?.as_bool("enabled")?;
+    let trace = m.get("trace").context("metrics missing trace")?;
+    let recorded = trace.get("recorded").context("trace.recorded")?.as_u64("recorded")?;
+    let _ = writeln!(
+        out,
+        "cupso top — uptime {uptime}s, telemetry {}, {recorded} trace events, last snapshot {}",
+        if enabled { "on" } else { "off" },
+        fmt_age(m.num_or_null_field("last_snapshot_age_s")?)
+    );
+    let mut zeros = 0usize;
+    let mut counters = Table::new("Counters", &["Counter", "Total", "Δ"]);
+    for (k, v) in obj_fields(m, "counters")? {
+        let v = v.as_u64(k)?;
+        let delta = v.saturating_sub(prev.insert(k.clone(), v).unwrap_or(v));
+        if v == 0 {
+            zeros += 1;
+            continue;
+        }
+        counters.row(&[k.clone(), v.to_string(), format!("+{delta}")]);
+    }
+    if counters.is_empty() {
+        let _ = writeln!(out, "(no activity recorded yet)");
+    } else {
+        out.push_str(&counters.to_markdown());
+    }
+    if zeros > 0 {
+        let _ = writeln!(out, "({zeros} zero counters hidden)");
+    }
+    let histos = obj_fields(m, "histos")?;
+    let mut series = Table::new("Series", &["Series", "Count", "Mean", "Max"]);
+    for (k, h) in histos {
+        let count = h.get("count").with_context(|| format!("{k}.count"))?.as_u64("count")?;
+        if count == 0 {
+            continue;
+        }
+        let mean = h.get("mean").with_context(|| format!("{k}.mean"))?.as_f64("mean")?;
+        let max = h.get("max").with_context(|| format!("{k}.max"))?.as_u64("max")?;
+        series.row(&[k.clone(), count.to_string(), format!("{mean:.0}"), max.to_string()]);
+    }
+    if !series.is_empty() {
+        out.push_str(&series.to_markdown());
+    }
+    if let Some((k, h)) = histos.iter().find(|(k, _)| k == "round_step_ns") {
+        if let Some(Json::Arr(raw)) = h.get("bins") {
+            let bins: Vec<f64> = raw
+                .iter()
+                .map(|b| b.as_f64("bin"))
+                .collect::<Result<_>>()?;
+            if bins.iter().any(|&b| b > 0.0) {
+                let labels: Vec<String> = (0..bins.len())
+                    .map(|b| if b == 0 { "0".to_string() } else { format!("<2^{b}ns") })
+                    .collect();
+                let plot = AsciiPlot::new(&format!("{k} — events per log2 bin"), 60, 10)
+                    .log_y()
+                    .x_labels(&labels)
+                    .series("events", &bins);
+                out.push_str(&plot.render());
+            }
+        }
+    }
+    Ok(out)
 }
 
 fn cmd_cancel(rest: &[String]) -> Result<()> {

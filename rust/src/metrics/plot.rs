@@ -53,7 +53,17 @@ impl AsciiPlot {
             out.push_str("(no data)\n");
             return out;
         }
-        let tx = |v: f64| if self.log_y { v.max(1e-12).log10() } else { v };
+        // Sanitize before scaling: a NaN or ±∞ sample (a 0/0 rate, an
+        // empty summary) must not poison the axis bounds, and log-y
+        // clamps zero/negative values instead of producing NaN rows.
+        let tx = |v: f64| {
+            let v = if v.is_finite() { v } else { 0.0 };
+            if self.log_y {
+                v.max(1e-12).log10()
+            } else {
+                v
+            }
+        };
         let all: Vec<f64> = self
             .series
             .iter()
@@ -137,6 +147,19 @@ mod tests {
             .series("a", &[0.001, 1000.0]);
         let r = p.render();
         assert!(r.contains("1000"));
+    }
+
+    #[test]
+    fn log_scale_clamps_zero_negative_and_non_finite() {
+        let p = AsciiPlot::new("t", 40, 10)
+            .log_y()
+            .series("a", &[0.0, -3.0, f64::NAN, f64::INFINITY, 10.0]);
+        let r = p.render();
+        // Every row renders (no NaN-indexed panics), the axis labels are
+        // finite numbers, and the finite sample anchors the top.
+        assert!(!r.contains("NaN"), "{r}");
+        assert!(!r.contains("inf"), "{r}");
+        assert!(r.contains("10.000"), "{r}");
     }
 
     #[test]

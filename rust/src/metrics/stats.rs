@@ -1,5 +1,7 @@
 //! Run-summary statistics, headlined by the paper's trimmed mean.
 
+use anyhow::{bail, Result};
+
 /// Summary statistics over a sample of measurements (seconds, ratios, …).
 #[derive(Debug, Clone)]
 pub struct Summary {
@@ -7,16 +9,20 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Build from raw samples (order irrelevant; NaNs rejected).
-    pub fn from_samples(samples: &[f64]) -> Self {
-        assert!(!samples.is_empty(), "empty sample set");
-        assert!(
-            samples.iter().all(|x| !x.is_nan()),
-            "NaN in samples: {samples:?}"
-        );
+    /// Build from raw samples (order irrelevant). An empty set (a
+    /// zero-rep bench config, e.g. `CUPSO_BENCH_REPS=0`) or a NaN
+    /// sample is a loud `Err`, not a panic — callers decide whether a
+    /// degenerate measurement aborts the whole run.
+    pub fn from_samples(samples: &[f64]) -> Result<Self> {
+        if samples.is_empty() {
+            bail!("empty sample set (zero-rep bench config?)");
+        }
+        if samples.iter().any(|x| x.is_nan()) {
+            bail!("NaN in samples: {samples:?}");
+        }
         let mut sorted = samples.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Self { sorted }
+        Ok(Self { sorted })
     }
 
     /// The samples, ascending (for machine-readable bench records).
@@ -112,20 +118,21 @@ mod tests {
     #[test]
     fn trimmed_mean_drops_min_and_max() {
         // 10 runs as the paper does: drop 1 (min) and 100 (max).
-        let s = Summary::from_samples(&[1.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 100.0]);
+        let s = Summary::from_samples(&[1.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 100.0])
+            .unwrap();
         assert_eq!(s.trimmed_mean(), 5.0);
         assert!((s.mean() - 14.1).abs() < 1e-12);
     }
 
     #[test]
     fn trimmed_mean_small_samples_fall_back() {
-        assert_eq!(Summary::from_samples(&[2.0]).trimmed_mean(), 2.0);
-        assert_eq!(Summary::from_samples(&[2.0, 4.0]).trimmed_mean(), 3.0);
+        assert_eq!(Summary::from_samples(&[2.0]).unwrap().trimmed_mean(), 2.0);
+        assert_eq!(Summary::from_samples(&[2.0, 4.0]).unwrap().trimmed_mean(), 3.0);
     }
 
     #[test]
     fn order_statistics() {
-        let s = Summary::from_samples(&[3.0, 1.0, 2.0]);
+        let s = Summary::from_samples(&[3.0, 1.0, 2.0]).unwrap();
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 3.0);
         assert_eq!(s.median(), 2.0);
@@ -134,7 +141,7 @@ mod tests {
 
     #[test]
     fn percentile_interpolates() {
-        let s = Summary::from_samples(&[0.0, 10.0]);
+        let s = Summary::from_samples(&[0.0, 10.0]).unwrap();
         assert_eq!(s.percentile(0.0), 0.0);
         assert_eq!(s.percentile(50.0), 5.0);
         assert_eq!(s.percentile(100.0), 10.0);
@@ -142,7 +149,7 @@ mod tests {
 
     #[test]
     fn stddev_of_constant_is_zero() {
-        let s = Summary::from_samples(&[4.0, 4.0, 4.0]);
+        let s = Summary::from_samples(&[4.0, 4.0, 4.0]).unwrap();
         assert_eq!(s.stddev(), 0.0);
         assert_eq!(s.cv(), 0.0);
     }
@@ -151,21 +158,30 @@ mod tests {
     fn cv_is_nonnegative_for_negative_means() {
         // Speedup *differences* or signed deltas can have negative means;
         // the relative spread must still come out ≥ 0.
-        let neg = Summary::from_samples(&[-4.0, -5.0, -6.0]);
+        let neg = Summary::from_samples(&[-4.0, -5.0, -6.0]).unwrap();
         assert!(neg.mean() < 0.0);
         assert!(neg.cv() > 0.0, "cv {}", neg.cv());
         // Mirror-image samples have the same spread.
-        let pos = Summary::from_samples(&[4.0, 5.0, 6.0]);
+        let pos = Summary::from_samples(&[4.0, 5.0, 6.0]).unwrap();
         assert_eq!(neg.cv(), pos.cv());
         // All-zero samples stay well-defined.
-        assert_eq!(Summary::from_samples(&[0.0, 0.0]).cv(), 0.0);
+        assert_eq!(Summary::from_samples(&[0.0, 0.0]).unwrap().cv(), 0.0);
         // Zero mean + nonzero spread is maximal relative noise, not zero.
-        assert_eq!(Summary::from_samples(&[-1.0, 1.0]).cv(), f64::INFINITY);
+        assert_eq!(
+            Summary::from_samples(&[-1.0, 1.0]).unwrap().cv(),
+            f64::INFINITY
+        );
     }
 
     #[test]
-    #[should_panic(expected = "NaN")]
-    fn rejects_nan() {
-        Summary::from_samples(&[1.0, f64::NAN]);
+    fn rejects_nan_with_an_error_not_a_panic() {
+        let err = Summary::from_samples(&[1.0, f64::NAN]).unwrap_err();
+        assert!(err.to_string().contains("NaN"), "{err}");
+    }
+
+    #[test]
+    fn rejects_empty_sample_set() {
+        let err = Summary::from_samples(&[]).unwrap_err();
+        assert!(err.to_string().contains("empty sample set"), "{err}");
     }
 }

@@ -65,6 +65,7 @@ use crate::checkpoint::{JobCheckpoint, RunCheckpoint, RunKind};
 use crate::config::EngineKind;
 use crate::engine::{self, PackedRun, ParallelSettings, Run, StepReport};
 use crate::fitness::{Fitness, Objective};
+use crate::telemetry::{bump, trace, Counter, PhaseClock, Series, TraceKind};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
@@ -355,6 +356,8 @@ impl Session {
         self.insert(idx, job);
         self.live += 1;
         self.pack_dirty = true;
+        bump(Counter::JobsAdmitted);
+        trace(TraceKind::Admit, idx as u64, 0);
         Ok(idx)
     }
 
@@ -414,6 +417,8 @@ impl Session {
             self.live += 1;
             self.pack_dirty = true;
         }
+        bump(Counter::JobsAdmitted);
+        trace(TraceKind::Admit, idx as u64, 1);
         Ok(idx)
     }
 
@@ -447,22 +452,31 @@ impl Session {
             ps.members[m] = usize::MAX;
             if ps.run.live_members() == 0 {
                 self.packs[p] = None;
+                bump(Counter::PacksDissolved);
+                trace(TraceKind::PackDissolve, p as u64, 0);
             }
             self.pack_dirty = true;
         }
+        bump(Counter::JobsCancelled);
+        trace(TraceKind::Cancel, idx as u64, 0);
         finish_slot(job, &self.settings, idx)
     }
 
     /// Free every terminated slot, handing its [`JobOutcome`] to `f` in
     /// slot order. The freed slots are recycled by later admissions.
     pub fn reap<F: FnMut(JobOutcome)>(&mut self, mut f: F) -> Result<()> {
+        let mut clock = PhaseClock::start();
         for idx in 0..self.slots.len() {
             if self.slots[idx].as_ref().is_some_and(|j| j.stop.is_some()) {
                 let job = self.slots[idx].take().expect("checked occupied");
                 self.occupied -= 1;
-                f(finish_slot(job, &self.settings, idx)?);
+                let outcome = finish_slot(job, &self.settings, idx)?;
+                bump(Counter::JobsFinished);
+                trace(TraceKind::Finish, idx as u64, outcome.stop.code() as u64);
+                f(outcome);
             }
         }
+        clock.lap(Series::RoundReapNs);
         Ok(())
     }
 
@@ -577,14 +591,21 @@ impl Session {
         if self.live == 0 {
             bail!("scheduling round requested with no live job");
         }
+        // Phase clock: one Instant read per phase boundary, recorded into
+        // the round-split histograms. Inert (no clock reads) when
+        // telemetry is disabled, and never inside engine math — the
+        // step phase is timed around `step_many`, not within it.
+        let mut clock = PhaseClock::start();
         self.reconcile_packs()?;
         self.ensure_executors();
         self.rounds += 1;
+        bump(Counter::Rounds);
         match self.policy {
             SchedPolicy::RoundRobin => pick_round_robin(&self.slots, self.streams, &mut self.rs),
             SchedPolicy::EarliestDeadlineFirst => pick_edf(&self.slots, self.streams, &mut self.rs),
             SchedPolicy::WeightedFair => pick_weighted_fair(&self.slots, self.streams, &mut self.rs),
         }
+        clock.lap(Series::RoundPickNs);
         debug_assert!(
             !self.rs.picked.is_empty()
                 || self.packs.iter().flatten().any(|p| p.run.live_members() > 0),
@@ -592,9 +613,10 @@ impl Session {
         );
         self.rs.reports.clear();
         self.step_packs();
-        self.step_round()?;
+        self.step_round(&mut clock)?;
         self.rs.reports.sort_unstable_by_key(|&(i, _)| i);
         apply_reports(&mut self.slots, &self.rs, &mut self.live, telemetry);
+        clock.lap(Series::RoundGbestNs);
         // Preemption: once a picked job has spent its quantum and the
         // live set still outnumbers the streams, suspend it — its
         // buffers are MOVED into a checkpoint (no deep copy) and its
@@ -675,7 +697,7 @@ impl Session {
     /// wake per extra job); in spawn-per-round mode they fall back to one
     /// scoped OS thread per extra job — the legacy baseline
     /// `benches/scheduler_latency.rs` measures against.
-    fn step_round(&mut self) -> Result<()> {
+    fn step_round(&mut self, clock: &mut PhaseClock) -> Result<()> {
         let Session {
             ref settings,
             batch_steps,
@@ -701,7 +723,8 @@ impl Session {
         }
         if rs.picked.is_empty() {
             // Every live job is packed this round; nothing standalone to
-            // step.
+            // step. The split since pick covers the pack stepping.
+            clock.lap(Series::RoundStepNs);
             return Ok(());
         }
         if let [(idx, _)] = *rs.picked {
@@ -712,6 +735,7 @@ impl Session {
             let k = effective_batch(batch_steps, &job.spec.termination, job.steps);
             let run = job.run.as_mut().expect("picked job is active");
             rs.reports.push((idx, run.step_many(k)));
+            clock.lap(Series::RoundStepNs);
             return Ok(());
         }
         if let Some(execs) = executors {
@@ -739,12 +763,19 @@ impl Session {
                     rs.inflight.push(i);
                 }
             }
+            clock.lap(Series::RoundPublishNs);
+            // Anchor for per-executor wake-to-done latency: every wait
+            // return below measures from the end of publication.
+            let published = clock.mark();
             let (i0, k0, run0) = first.expect("non-empty round");
             rs.reports.push((i0, run0.step_many(k0)));
+            clock.lap(Series::RoundStepNs);
             for (e, &i) in rs.inflight.iter().enumerate() {
                 execs.wait(e);
+                clock.record_since(published, Series::ExecWakeToDoneNs);
                 rs.reports.push((i, execs.take_report(e)));
             }
+            clock.lap(Series::RoundWakeNs);
         } else {
             // Legacy spawn-per-round path: S − 1 scoped threads per round.
             let tasks: Vec<(usize, u64, &mut SlotJob)> = slots
@@ -778,6 +809,7 @@ impl Session {
                 out
             });
             rs.reports.extend(stepped);
+            clock.lap(Series::RoundStepNs);
         }
         Ok(())
     }
@@ -817,6 +849,8 @@ impl Session {
                 continue;
             }
             let mut ps = self.packs[p].take().expect("checked occupied");
+            bump(Counter::PacksDissolved);
+            trace(TraceKind::PackDissolve, p as u64, ps.run.live_members() as u64);
             for m in 0..ps.members.len() {
                 let idx = ps.members[m];
                 if idx == usize::MAX {
@@ -915,6 +949,8 @@ impl Session {
         } else {
             self.packs[p] = Some(slot);
         }
+        bump(Counter::PacksFormed);
+        trace(TraceKind::PackForm, p as u64, chunk.len() as u64);
         Ok(())
     }
 
@@ -931,7 +967,7 @@ impl Session {
             ref mut pack_dirty,
             ..
         } = *self;
-        for pack in packs.iter_mut() {
+        for (p, pack) in packs.iter_mut().enumerate() {
             let Some(ps) = pack.as_mut() else { continue };
             for m in 0..ps.members.len() {
                 let idx = ps.members[m];
@@ -952,6 +988,8 @@ impl Session {
             }
             if ps.run.live_members() == 0 {
                 *pack = None;
+                bump(Counter::PacksDissolved);
+                trace(TraceKind::PackDissolve, p as u64, 0);
             }
         }
     }
@@ -965,7 +1003,7 @@ impl Session {
             ref mut pack_dirty,
             ..
         } = *self;
-        for pack in packs.iter_mut() {
+        for (p, pack) in packs.iter_mut().enumerate() {
             let Some(ps) = pack.as_mut() else { continue };
             for m in 0..ps.members.len() {
                 let idx = ps.members[m];
@@ -979,6 +1017,8 @@ impl Session {
                 *pack_dirty = true;
             }
             *pack = None;
+            bump(Counter::PacksDissolved);
+            trace(TraceKind::PackDissolve, p as u64, 0);
         }
     }
 }

@@ -72,6 +72,7 @@ use crate::checkpoint::store::SnapshotSink;
 use crate::checkpoint::JobCheckpoint;
 use crate::config::{BatchConfig, EngineKind};
 use crate::scheduler::{JobOutcome, JobReport, JobScheduler, JobSpec, Session, StopReason};
+use crate::telemetry::{self, Counter, Series, TraceKind};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -534,6 +535,7 @@ impl ServiceSession {
             None => None,
         };
         let owns_dir = sink.is_some() && knobs.checkpoint_every > 0;
+        telemetry::mark_service_start();
         let (tx, rx) = channel();
         Ok((
             Self {
@@ -671,6 +673,11 @@ impl ServiceSession {
         };
         let snap = self.session.snapshot();
         sink.persist(&snap)
+            .inspect_err(|_| {
+                // The daemon is about to die loudly; leave the flight
+                // recorder's last words next to the error.
+                telemetry::dump_trace("fatal persist failure");
+            })
             .context("periodic service snapshot failed (restart to recover the last durable one)")
     }
 
@@ -708,6 +715,8 @@ impl ServiceSession {
         session.round(&mut |r| {
             telemetry(r);
             if !watchers.is_empty() {
+                crate::telemetry::bump(Counter::WatchEvents);
+                crate::telemetry::record(Series::WatchFanout, watchers.len() as u64);
                 let line = report_event(round, r);
                 // Bounded send: a watcher that stopped reading (stalled
                 // client, full socket) is terminated once its buffer
@@ -746,6 +755,8 @@ impl ServiceSession {
             });
             let label = tenant.unwrap_or("<anonymous>");
             if quota_jobs > 0 && jobs_used >= quota_jobs {
+                telemetry::bump(Counter::QuotaRefusals);
+                telemetry::trace(TraceKind::QuotaRefusal, 0, jobs_used as u64);
                 anyhow::bail!(
                     "tenant {label} is at its concurrent-job quota \
                      ({jobs_used} of {quota_jobs} live); cancel a job or wait"
@@ -753,6 +764,8 @@ impl ServiceSession {
             }
             let charge = spec.params.max_iter;
             if quota_steps > 0 && steps_used.saturating_add(charge) > quota_steps {
+                telemetry::bump(Counter::QuotaRefusals);
+                telemetry::trace(TraceKind::QuotaRefusal, 1, steps_used);
                 anyhow::bail!(
                     "tenant {label} would exceed its step quota: {steps_used} outstanding \
                      + {charge} requested > {quota_steps} allowed"
@@ -840,6 +853,8 @@ impl ServiceSession {
                 self.drained = live;
                 self.drained_to = dir_written.clone();
                 self.drain_ack = ack;
+                telemetry::trace(TraceKind::Drain, live as u64, self.finished_total);
+                telemetry::dump_trace("drain");
                 let _ = reply.send(Ok(DrainReport {
                     snapshotted: live,
                     finished: self.finished_total,
@@ -953,6 +968,8 @@ mod tests {
             quota_steps: 0,
             checkpoint_every: 0,
             checkpoint_keep: 1,
+            telemetry: true,
+            trace_dump: None,
             jobs: Vec::new(),
         }
     }

@@ -18,6 +18,7 @@
 //! {"op": "status"}
 //! {"op": "drain"}
 //! {"op": "watch"}
+//! {"op": "metrics"}
 //! ```
 //!
 //! ## Responses
@@ -449,6 +450,9 @@ pub enum Request {
     Drain,
     /// Subscribe this connection to the per-round telemetry stream.
     Watch,
+    /// Snapshot of the process-global telemetry registry (counters,
+    /// round-phase histograms, gauges, trace-ring state).
+    Metrics,
 }
 
 impl Request {
@@ -468,7 +472,10 @@ impl Request {
             "status" => Request::Status,
             "drain" => Request::Drain,
             "watch" => Request::Watch,
-            other => bail!("unknown op {other:?} (ping|submit|cancel|status|drain|watch)"),
+            "metrics" => Request::Metrics,
+            other => {
+                bail!("unknown op {other:?} (ping|submit|cancel|status|drain|watch|metrics)")
+            }
         })
     }
 
@@ -486,6 +493,7 @@ impl Request {
             Request::Status => Obj::new().str("op", "status").render(),
             Request::Drain => Obj::new().str("op", "drain").render(),
             Request::Watch => Obj::new().str("op", "watch").render(),
+            Request::Metrics => Obj::new().str("op", "metrics").render(),
         }
     }
 }
@@ -694,6 +702,7 @@ mod tests {
             Request::Status,
             Request::Drain,
             Request::Watch,
+            Request::Metrics,
         ] {
             let line = req.render();
             let back = Request::parse(&line).unwrap();

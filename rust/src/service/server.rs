@@ -38,6 +38,7 @@ use super::{
     DrainReport, FinishedJob, JobStatus, ServiceHandle, StatusReport, Submitted, Waker,
     WatchStream,
 };
+use crate::telemetry::{self, Counter, Gauge, TraceKind};
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
@@ -453,6 +454,10 @@ impl EventLoop {
             });
         }
         for c in &self.conns {
+            // Queue high-water marks for the metrics registry: how deep
+            // the in-order reply queue and write buffer ever got.
+            telemetry::gauge_max(Gauge::ConnPendingHwm, c.pending.len() as u64);
+            telemetry::gauge_max(Gauge::ConnWbufHwm, c.unflushed() as u64);
             let backpressured =
                 c.pending.len() >= MAX_PIPELINE || c.unflushed() >= WBUF_SOFT_CAP;
             let mut events = 0;
@@ -498,6 +503,7 @@ impl EventLoop {
                         if stream.set_nonblocking().is_err() {
                             continue;
                         }
+                        telemetry::bump(Counter::ConnsAccepted);
                         self.conns.push(Conn::new(stream));
                     }
                     Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
@@ -543,6 +549,8 @@ impl EventLoop {
 
 /// Refuse one over-cap connection, loudly.
 fn shed(mut stream: Stream, cap: usize) {
+    telemetry::bump(Counter::ConnsShed);
+    telemetry::trace(TraceKind::Shed, cap as u64, 0);
     let line = Obj::new()
         .bool("ok", false)
         .str(
@@ -662,6 +670,10 @@ fn handle_line(handle: &ServiceHandle, conn: &mut Conn, line: &[u8]) {
             }
             Err(e) => Pending::Ready(proto::error_line(&format!("{e:#}"))),
         },
+        // The registry is process-global and lock-free, so metrics are
+        // answered inline like ping — no round-boundary control, no
+        // perturbation of the session the metrics describe.
+        Ok(Request::Metrics) => Pending::Ready(metrics_line()),
     };
     conn.pending.push_back(pending);
 }
@@ -812,14 +824,34 @@ fn cancel_line(ack: Result<FinishedJob, String>) -> String {
 fn status_line(report: &StatusReport) -> String {
     let live = proto::array(report.live.iter().map(live_json));
     let finished = proto::array(report.finished.iter().map(finished_json));
-    Obj::new()
+    // Lifetime counters and timestamps come from the telemetry
+    // registry: daemon uptime, process-wide admission/cancel/shed
+    // totals, and the age of the last durable snapshot.
+    let mut obj = Obj::new()
         .bool("ok", true)
         .str("op", "status")
         .int("rounds", report.rounds)
         .int("streams", report.streams as u64)
         .int("finished_total", report.finished_total)
-        .raw("live", &live)
-        .raw("finished", &finished)
+        .int("uptime_s", telemetry::uptime_secs())
+        .int("admitted_total", telemetry::counter(Counter::JobsAdmitted))
+        .int("cancelled_total", telemetry::counter(Counter::JobsCancelled))
+        .int("shed_total", telemetry::counter(Counter::ConnsShed));
+    obj = match telemetry::last_snapshot_age_secs() {
+        Some(age) => obj.int("last_snapshot_age_s", age),
+        None => obj.raw("last_snapshot_age_s", "null"),
+    };
+    obj.raw("live", &live).raw("finished", &finished).render()
+}
+
+/// The `metrics` verb's reply: the full registry snapshot under a
+/// `metrics` key (counters, gauges, per-series histograms, trace-ring
+/// state — see [`telemetry::render_json`]).
+fn metrics_line() -> String {
+    Obj::new()
+        .bool("ok", true)
+        .str("op", "metrics")
+        .raw("metrics", &telemetry::render_json())
         .render()
 }
 

@@ -1,0 +1,843 @@
+//! Flight-recorder telemetry: always-on, bit-exactness-preserving
+//! runtime metrics for the serving stack.
+//!
+//! Three pieces:
+//!
+//! 1. **A process-global registry** of lock-free counters, high-water
+//!    gauges and fixed-bin log₂-scale histograms — every cell is a
+//!    pre-allocated `static` [`AtomicU64`] touched with `Relaxed`
+//!    ordering only, so recording is a handful of uncontended atomic
+//!    adds: no locks, no allocation, and no branching inside engine
+//!    math (instrumentation lives at the scheduler/service layer and
+//!    wraps phases; it never reads or writes run state). Timing uses
+//!    [`Instant`] reads that feed *only* the registry, so the
+//!    determinism tier can prove instrumented runs bit-identical to
+//!    telemetry-disabled runs (`rust/tests/scheduler_determinism.rs`)
+//!    and the zero-alloc tier can prove a warmed-up instrumented
+//!    service round allocates nothing (`rust/tests/zero_alloc.rs`).
+//!
+//! 2. **A fixed-capacity trace ring** (the flight recorder): the last
+//!    [`TRACE_CAP`] discrete scheduler/service events (admissions,
+//!    cancellations, finishes, sheds, quota refusals, pack churn,
+//!    snapshot outcomes, injected faults, drain) as fixed-size
+//!    `String`-free records in a lock-free ring — a racing writer can
+//!    at worst tear a slot that is being overwritten anyway. The ring
+//!    is dumped to stderr (or the file set by [`set_trace_path`]) on
+//!    panic ([`install_panic_hook`]), on a fatal persist failure, and
+//!    on demand at drain.
+//!
+//! 3. **Exposure**: [`render_json`] is the body of the `metrics` wire
+//!    verb (`service/proto.rs`); `cupso status --metrics` renders the
+//!    same snapshot as Prometheus-style text and `cupso top` as a live
+//!    terminal dashboard (both client-side, in `main.rs`).
+//!
+//! Histogram bin scheme: bin 0 counts exact zeros; bin `b ≥ 1` counts
+//! values in `[2^(b−1), 2^b)`; the last bin absorbs everything at or
+//! above `2^(HISTO_BINS−2)` (≈ 4.6 minutes for nanosecond series).
+//! Log₂ binning costs one `leading_zeros` on the hot path and keeps
+//! the whole registry a few KiB of statics.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::Release};
+use std::sync::Mutex;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Number of histogram bins (see the module docs for the bin scheme).
+pub const HISTO_BINS: usize = 40;
+
+/// Capacity of the trace ring (events; oldest are overwritten).
+pub const TRACE_CAP: usize = 1024;
+
+/// Monotonic counters, indexed by discriminant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Scheduling rounds completed.
+    Rounds,
+    /// Jobs admitted into a session (service or batch).
+    JobsAdmitted,
+    /// Jobs that ran to a terminal stop reason other than cancellation.
+    JobsFinished,
+    /// Jobs cancelled by request.
+    JobsCancelled,
+    /// Submissions refused by a per-tenant quota.
+    QuotaRefusals,
+    /// Connections accepted by the event loop.
+    ConnsAccepted,
+    /// Connections shed at the connection cap.
+    ConnsShed,
+    /// Watch telemetry events fanned out to subscribers.
+    WatchEvents,
+    /// Packs formed by the scheduler's packing policy.
+    PacksFormed,
+    /// Packs dissolved (underfull or swept).
+    PacksDissolved,
+    /// Snapshots persisted successfully.
+    Snapshots,
+    /// Snapshot persist attempts that failed.
+    SnapshotFailures,
+    /// Bytes handed to the store seam's durable writes.
+    SnapshotBytes,
+    /// fsync calls issued by the store seam (file + directory).
+    SnapshotFsyncs,
+    /// `CUPSO_FAULT_PLAN` write directives that actually fired.
+    FaultsFiredWrite,
+    /// Fault-plan fsync directives that actually fired.
+    FaultsFiredFsync,
+    /// Fault-plan rename directives that actually fired.
+    FaultsFiredRename,
+    /// Fault-plan persist-point directives that actually fired.
+    FaultsFiredPersist,
+    /// Trace-ring dumps emitted.
+    TraceDumps,
+}
+
+impl Counter {
+    /// Every counter, in render order.
+    pub const ALL: [Counter; 19] = [
+        Counter::Rounds,
+        Counter::JobsAdmitted,
+        Counter::JobsFinished,
+        Counter::JobsCancelled,
+        Counter::QuotaRefusals,
+        Counter::ConnsAccepted,
+        Counter::ConnsShed,
+        Counter::WatchEvents,
+        Counter::PacksFormed,
+        Counter::PacksDissolved,
+        Counter::Snapshots,
+        Counter::SnapshotFailures,
+        Counter::SnapshotBytes,
+        Counter::SnapshotFsyncs,
+        Counter::FaultsFiredWrite,
+        Counter::FaultsFiredFsync,
+        Counter::FaultsFiredRename,
+        Counter::FaultsFiredPersist,
+        Counter::TraceDumps,
+    ];
+    /// Number of counters.
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Stable wire/Prometheus name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Rounds => "rounds_total",
+            Counter::JobsAdmitted => "jobs_admitted_total",
+            Counter::JobsFinished => "jobs_finished_total",
+            Counter::JobsCancelled => "jobs_cancelled_total",
+            Counter::QuotaRefusals => "quota_refusals_total",
+            Counter::ConnsAccepted => "conns_accepted_total",
+            Counter::ConnsShed => "conns_shed_total",
+            Counter::WatchEvents => "watch_events_total",
+            Counter::PacksFormed => "packs_formed_total",
+            Counter::PacksDissolved => "packs_dissolved_total",
+            Counter::Snapshots => "snapshots_total",
+            Counter::SnapshotFailures => "snapshot_failures_total",
+            Counter::SnapshotBytes => "snapshot_bytes_total",
+            Counter::SnapshotFsyncs => "snapshot_fsyncs_total",
+            Counter::FaultsFiredWrite => "faults_fired_write_total",
+            Counter::FaultsFiredFsync => "faults_fired_fsync_total",
+            Counter::FaultsFiredRename => "faults_fired_rename_total",
+            Counter::FaultsFiredPersist => "faults_fired_persist_total",
+            Counter::TraceDumps => "trace_dumps_total",
+        }
+    }
+}
+
+/// Histogram series, indexed by discriminant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Series {
+    /// Round phase: policy pick (candidate ordering + selection).
+    RoundPickNs,
+    /// Round phase: command publish to the stream executors.
+    RoundPublishNs,
+    /// Round phase: waiting for executor completion echoes.
+    RoundWakeNs,
+    /// Round phase: stepping (inline fast path + packs + legacy spawns).
+    RoundStepNs,
+    /// Round phase: report application / global-best accounting.
+    RoundGbestNs,
+    /// Round phase: reaping finished slots.
+    RoundReapNs,
+    /// Per-executor latency from command publish to completion echo.
+    ExecWakeToDoneNs,
+    /// Wall time of one snapshot persist.
+    SnapshotPersistNs,
+    /// Bytes written durably by one snapshot.
+    SnapshotBytesPer,
+    /// fsyncs issued by one snapshot.
+    SnapshotFsyncsPer,
+    /// Watch subscribers fanned out to per stepped round.
+    WatchFanout,
+}
+
+impl Series {
+    /// Every series, in render order.
+    pub const ALL: [Series; 11] = [
+        Series::RoundPickNs,
+        Series::RoundPublishNs,
+        Series::RoundWakeNs,
+        Series::RoundStepNs,
+        Series::RoundGbestNs,
+        Series::RoundReapNs,
+        Series::ExecWakeToDoneNs,
+        Series::SnapshotPersistNs,
+        Series::SnapshotBytesPer,
+        Series::SnapshotFsyncsPer,
+        Series::WatchFanout,
+    ];
+    /// Number of series.
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Stable wire/Prometheus name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Series::RoundPickNs => "round_pick_ns",
+            Series::RoundPublishNs => "round_publish_ns",
+            Series::RoundWakeNs => "round_wake_ns",
+            Series::RoundStepNs => "round_step_ns",
+            Series::RoundGbestNs => "round_gbest_ns",
+            Series::RoundReapNs => "round_reap_ns",
+            Series::ExecWakeToDoneNs => "exec_wake_to_done_ns",
+            Series::SnapshotPersistNs => "snapshot_persist_ns",
+            Series::SnapshotBytesPer => "snapshot_bytes",
+            Series::SnapshotFsyncsPer => "snapshot_fsyncs",
+            Series::WatchFanout => "watch_fanout",
+        }
+    }
+}
+
+/// Gauges (set / running-max cells), indexed by discriminant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Gauge {
+    /// High-water mark of any connection's pending-reply queue.
+    ConnPendingHwm,
+    /// High-water mark of any connection's write-buffer bytes.
+    ConnWbufHwm,
+    /// Unix milliseconds when the service session started (0 = never).
+    ServiceStartUnixMs,
+    /// Unix milliseconds of the last successful snapshot (0 = never).
+    LastSnapshotUnixMs,
+}
+
+impl Gauge {
+    /// Every gauge, in render order.
+    pub const ALL: [Gauge; 4] = [
+        Gauge::ConnPendingHwm,
+        Gauge::ConnWbufHwm,
+        Gauge::ServiceStartUnixMs,
+        Gauge::LastSnapshotUnixMs,
+    ];
+    /// Number of gauges.
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Stable wire/Prometheus name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::ConnPendingHwm => "conn_pending_hwm",
+            Gauge::ConnWbufHwm => "conn_wbuf_hwm",
+            Gauge::ServiceStartUnixMs => "service_start_unix_ms",
+            Gauge::LastSnapshotUnixMs => "last_snapshot_unix_ms",
+        }
+    }
+}
+
+/// Discrete event kinds recorded in the trace ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u64)]
+pub enum TraceKind {
+    /// Job admitted (`a` = slot).
+    Admit = 1,
+    /// Job cancelled (`a` = slot).
+    Cancel = 2,
+    /// Job finished (`a` = slot, `b` = stop-reason code).
+    Finish = 3,
+    /// Submission refused by quota (`a` = 0 jobs / 1 steps).
+    QuotaRefusal = 4,
+    /// Connection shed at the cap (`a` = configured cap).
+    Shed = 5,
+    /// Pack formed (`a` = member count).
+    PackForm = 6,
+    /// Pack dissolved (`a` = member count).
+    PackDissolve = 7,
+    /// Snapshot persisted (`a` = live jobs captured).
+    PersistOk = 8,
+    /// Snapshot persist failed (`a` = live jobs attempted).
+    PersistFail = 9,
+    /// Injected fault directive fired (`a` = op index, `b` = nth).
+    FaultFired = 10,
+    /// Drain accepted.
+    Drain = 11,
+}
+
+fn kind_name(code: u64) -> &'static str {
+    match code {
+        1 => "admit",
+        2 => "cancel",
+        3 => "finish",
+        4 => "quota_refusal",
+        5 => "shed",
+        6 => "pack_form",
+        7 => "pack_dissolve",
+        8 => "persist_ok",
+        9 => "persist_fail",
+        10 => "fault_fired",
+        11 => "drain",
+        _ => "unknown",
+    }
+}
+
+/// One fixed-bin log₂ histogram: pre-allocated atomics, `Relaxed` adds.
+pub struct Histo {
+    bins: [AtomicU64; HISTO_BINS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histo {
+    const fn new() -> Self {
+        Self {
+            bins: [const { AtomicU64::new(0) }; HISTO_BINS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, v: u64) {
+        self.bins[bin_of(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+    }
+}
+
+/// Bin index for a value (see the module docs for the scheme).
+pub fn bin_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HISTO_BINS - 1)
+    }
+}
+
+/// A point-in-time copy of one histogram.
+#[derive(Debug, Clone)]
+pub struct HistoSnapshot {
+    /// Values recorded.
+    pub count: u64,
+    /// Sum of recorded values.
+    pub sum: u64,
+    /// Largest recorded value.
+    pub max: u64,
+    /// Per-bin counts.
+    pub bins: [u64; HISTO_BINS],
+}
+
+impl HistoSnapshot {
+    /// Arithmetic mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+struct TraceSlot {
+    seq: AtomicU64,
+    kind: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+    at_ms: AtomicU64,
+}
+
+impl TraceSlot {
+    const fn new() -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            kind: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+            at_ms: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Registry {
+    enabled: AtomicBool,
+    counters: [AtomicU64; Counter::COUNT],
+    histos: [Histo; Series::COUNT],
+    gauges: [AtomicU64; Gauge::COUNT],
+    trace_cursor: AtomicU64,
+    trace: [TraceSlot; TRACE_CAP],
+    trace_path: Mutex<Option<PathBuf>>,
+}
+
+static REGISTRY: Registry = Registry {
+    enabled: AtomicBool::new(true),
+    counters: [const { AtomicU64::new(0) }; Counter::COUNT],
+    histos: [const { Histo::new() }; Series::COUNT],
+    gauges: [const { AtomicU64::new(0) }; Gauge::COUNT],
+    trace_cursor: AtomicU64::new(0),
+    trace: [const { TraceSlot::new() }; TRACE_CAP],
+    trace_path: Mutex::new(None),
+};
+
+/// Is recording enabled? (Default: on. One `Relaxed` load.)
+#[inline]
+pub fn enabled() -> bool {
+    REGISTRY.enabled.load(Relaxed)
+}
+
+/// Enable or disable all recording. Disabling makes every record call
+/// a no-op *and* skips the clock reads that feed the phase histograms —
+/// the determinism tier compares runs across this switch.
+pub fn set_enabled(on: bool) {
+    REGISTRY.enabled.store(on, Relaxed);
+}
+
+/// Increment a counter by 1.
+#[inline]
+pub fn bump(c: Counter) {
+    add(c, 1);
+}
+
+/// Increment a counter by `n`.
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    if enabled() {
+        REGISTRY.counters[c as usize].fetch_add(n, Relaxed);
+    }
+}
+
+/// Read a counter.
+pub fn counter(c: Counter) -> u64 {
+    REGISTRY.counters[c as usize].load(Relaxed)
+}
+
+/// Record one value into a histogram series.
+#[inline]
+pub fn record(s: Series, v: u64) {
+    if enabled() {
+        REGISTRY.histos[s as usize].record(v);
+    }
+}
+
+/// Snapshot one histogram series.
+pub fn histo(s: Series) -> HistoSnapshot {
+    let h = &REGISTRY.histos[s as usize];
+    let mut bins = [0u64; HISTO_BINS];
+    for (out, bin) in bins.iter_mut().zip(h.bins.iter()) {
+        *out = bin.load(Relaxed);
+    }
+    HistoSnapshot {
+        count: h.count.load(Relaxed),
+        sum: h.sum.load(Relaxed),
+        max: h.max.load(Relaxed),
+        bins,
+    }
+}
+
+/// Raise a gauge to at least `v` (running maximum).
+#[inline]
+pub fn gauge_max(g: Gauge, v: u64) {
+    if enabled() {
+        REGISTRY.gauges[g as usize].fetch_max(v, Relaxed);
+    }
+}
+
+/// Set a gauge (unconditional — timestamps must move, even backwards
+/// across test sessions in one process).
+pub fn gauge_set(g: Gauge, v: u64) {
+    REGISTRY.gauges[g as usize].store(v, Relaxed);
+}
+
+/// Read a gauge.
+pub fn gauge(g: Gauge) -> u64 {
+    REGISTRY.gauges[g as usize].load(Relaxed)
+}
+
+/// Milliseconds since the Unix epoch (0 if the clock is before it).
+pub fn unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Mark the service session start (uptime anchor).
+pub fn mark_service_start() {
+    gauge_set(Gauge::ServiceStartUnixMs, unix_ms());
+}
+
+/// Whole seconds since [`mark_service_start`] (0 if never marked).
+pub fn uptime_secs() -> u64 {
+    let start = gauge(Gauge::ServiceStartUnixMs);
+    if start == 0 {
+        0
+    } else {
+        unix_ms().saturating_sub(start) / 1000
+    }
+}
+
+/// Mark a successful snapshot now.
+pub fn mark_snapshot_now() {
+    gauge_set(Gauge::LastSnapshotUnixMs, unix_ms());
+}
+
+/// Whole seconds since the last successful snapshot (`None` = never).
+pub fn last_snapshot_age_secs() -> Option<u64> {
+    match gauge(Gauge::LastSnapshotUnixMs) {
+        0 => None,
+        at => Some(unix_ms().saturating_sub(at) / 1000),
+    }
+}
+
+/// Record one discrete event into the trace ring.
+pub fn trace(kind: TraceKind, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    let r = &REGISTRY;
+    let seq = r.trace_cursor.fetch_add(1, Relaxed) + 1;
+    let slot = &r.trace[(seq - 1) as usize % TRACE_CAP];
+    // seq = 0 marks the slot in-progress; readers skip it. A concurrent
+    // writer lapping this slot would be overwriting it anyway — the dump
+    // is a best-effort flight recording, not a consistent snapshot.
+    slot.seq.store(0, Release);
+    slot.kind.store(kind as u64, Relaxed);
+    slot.a.store(a, Relaxed);
+    slot.b.store(b, Relaxed);
+    slot.at_ms.store(unix_ms(), Relaxed);
+    slot.seq.store(seq, Release);
+}
+
+/// Total events ever recorded into the trace ring.
+pub fn trace_recorded() -> u64 {
+    REGISTRY.trace_cursor.load(Relaxed)
+}
+
+/// Route trace-ring dumps to a file (append) instead of stderr.
+/// `None` restores stderr.
+pub fn set_trace_path(path: Option<PathBuf>) {
+    *REGISTRY.trace_path.lock().unwrap_or_else(|e| e.into_inner()) = path;
+}
+
+/// Where dumps currently go (`None` = stderr).
+pub fn trace_path() -> Option<PathBuf> {
+    REGISTRY
+        .trace_path
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .clone()
+}
+
+/// Dump the trace ring (oldest → newest) to the configured sink.
+/// Best-effort by design — it runs inside panic hooks and fatal-error
+/// paths, so every I/O failure falls back to stderr rather than
+/// propagating. Returns the number of events dumped.
+pub fn dump_trace(reason: &str) -> usize {
+    let r = &REGISTRY;
+    let mut events: Vec<(u64, u64, u64, u64, u64)> = Vec::with_capacity(TRACE_CAP);
+    for slot in r.trace.iter() {
+        let seq = slot.seq.load(Relaxed);
+        if seq != 0 {
+            events.push((
+                seq,
+                slot.at_ms.load(Relaxed),
+                slot.kind.load(Relaxed),
+                slot.a.load(Relaxed),
+                slot.b.load(Relaxed),
+            ));
+        }
+    }
+    events.sort_unstable_by_key(|e| e.0);
+    let mut out = format!(
+        "== cupso trace ring ({reason}): {} event(s) of {} recorded ==\n",
+        events.len(),
+        trace_recorded(),
+    );
+    for (seq, at_ms, kind, a, b) in &events {
+        out.push_str(&format!(
+            "trace seq={seq} t_ms={at_ms} event={} a={a} b={b}\n",
+            kind_name(*kind)
+        ));
+    }
+    out.push_str("== end trace ring ==\n");
+    REGISTRY.counters[Counter::TraceDumps as usize].fetch_add(1, Relaxed);
+    match trace_path() {
+        Some(path) => {
+            if append_file(&path, &out).is_err() {
+                eprint!("{out}");
+            }
+        }
+        None => eprint!("{out}"),
+    }
+    events.len()
+}
+
+fn append_file(path: &Path, text: &str) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    f.write_all(text.as_bytes())
+}
+
+/// Install a panic hook that dumps the trace ring before the default
+/// handler runs. Idempotent; chains any previously installed hook.
+pub fn install_panic_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            dump_trace("panic");
+            prev(info);
+        }));
+    });
+}
+
+/// Per-round phase stopwatch: one [`Instant`] read per lap, recording
+/// the split into the given series. Disabled telemetry makes `start`
+/// return an inert clock — no clock reads at all on the disabled path,
+/// so the on/off determinism comparison covers the timing calls too.
+pub struct PhaseClock {
+    last: Option<Instant>,
+}
+
+impl PhaseClock {
+    /// Start timing (inert when telemetry is disabled).
+    pub fn start() -> Self {
+        Self {
+            last: enabled().then(Instant::now),
+        }
+    }
+
+    /// Record the split since the previous lap into `series`.
+    pub fn lap(&mut self, series: Series) {
+        if let Some(prev) = self.last {
+            let now = Instant::now();
+            record(series, now.duration_since(prev).as_nanos() as u64);
+            self.last = Some(now);
+        }
+    }
+
+    /// The instant of the previous lap (None when inert) — lets callers
+    /// measure overlapping intervals (e.g. per-executor wake-to-done)
+    /// without extra clock reads.
+    pub fn mark(&self) -> Option<Instant> {
+        self.last
+    }
+
+    /// Record the elapsed time since `from` into `series`.
+    pub fn record_since(&self, from: Option<Instant>, series: Series) {
+        if let (Some(from), Some(_)) = (from, self.last) {
+            record(series, from.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// Render the full registry as one structured JSON object (the body of
+/// the `metrics` wire verb): uptime, counters, gauges, per-series
+/// histograms (count/sum/max/mean + raw bins), and trace-ring state.
+pub fn render_json() -> String {
+    use crate::service::proto::{array, Obj};
+    let mut counters = Obj::new();
+    for c in Counter::ALL {
+        counters = counters.int(c.name(), counter(c));
+    }
+    let mut gauges = Obj::new();
+    for g in Gauge::ALL {
+        gauges = gauges.int(g.name(), gauge(g));
+    }
+    let mut histos = Obj::new();
+    for s in Series::ALL {
+        let h = histo(s);
+        let hi_bin = h
+            .bins
+            .iter()
+            .rposition(|&b| b != 0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let body = Obj::new()
+            .int("count", h.count)
+            .int("sum", h.sum)
+            .int("max", h.max)
+            .num("mean", h.mean())
+            .raw(
+                "bins",
+                &array(h.bins[..hi_bin].iter().map(|b| b.to_string())),
+            )
+            .render();
+        histos = histos.raw(s.name(), &body);
+    }
+    let trace = Obj::new()
+        .int("recorded", trace_recorded())
+        .int("capacity", TRACE_CAP as u64)
+        .render();
+    let mut obj = Obj::new()
+        .bool("enabled", enabled())
+        .int("uptime_s", uptime_secs());
+    obj = match last_snapshot_age_secs() {
+        Some(age) => obj.int("last_snapshot_age_s", age),
+        None => obj.raw("last_snapshot_age_s", "null"),
+    };
+    obj.raw("counters", &counters.render())
+        .raw("gauges", &gauges.render())
+        .raw("histos", &histos.render())
+        .raw("trace", &trace.render())
+        .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and lib unit tests run
+    // concurrently; serialize the tests that toggle global switches.
+    static TLOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn bin_scheme_boundaries() {
+        assert_eq!(bin_of(0), 0);
+        assert_eq!(bin_of(1), 1);
+        assert_eq!(bin_of(2), 2);
+        assert_eq!(bin_of(3), 2);
+        assert_eq!(bin_of(4), 3);
+        assert_eq!(bin_of((1 << 20) - 1), 20);
+        assert_eq!(bin_of(1 << 20), 21);
+        assert_eq!(bin_of(u64::MAX), HISTO_BINS - 1);
+    }
+
+    #[test]
+    fn counters_and_histos_accumulate() {
+        let _g = TLOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let was = enabled();
+        set_enabled(true);
+        let before = counter(Counter::Rounds);
+        bump(Counter::Rounds);
+        add(Counter::Rounds, 2);
+        assert_eq!(counter(Counter::Rounds), before + 3);
+
+        let h0 = histo(Series::RoundPickNs);
+        record(Series::RoundPickNs, 0);
+        record(Series::RoundPickNs, 5);
+        let h1 = histo(Series::RoundPickNs);
+        assert_eq!(h1.count, h0.count + 2);
+        assert_eq!(h1.sum, h0.sum + 5);
+        assert!(h1.max >= 5);
+        assert_eq!(h1.bins[0], h0.bins[0] + 1);
+        assert_eq!(h1.bins[bin_of(5)], h0.bins[bin_of(5)] + 1);
+        set_enabled(was);
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _g = TLOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let was = enabled();
+        set_enabled(false);
+        let c0 = counter(Counter::ConnsShed);
+        let h0 = histo(Series::WatchFanout).count;
+        let t0 = trace_recorded();
+        bump(Counter::ConnsShed);
+        record(Series::WatchFanout, 7);
+        trace(TraceKind::Shed, 1, 2);
+        let mut clock = PhaseClock::start();
+        assert!(clock.mark().is_none(), "inert clock reads no Instant");
+        clock.lap(Series::WatchFanout);
+        assert_eq!(counter(Counter::ConnsShed), c0);
+        assert_eq!(histo(Series::WatchFanout).count, h0);
+        assert_eq!(trace_recorded(), t0);
+        set_enabled(was);
+    }
+
+    #[test]
+    fn trace_ring_wraps_and_dumps_to_file() {
+        let _g = TLOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let was = enabled();
+        set_enabled(true);
+        for i in 0..(TRACE_CAP as u64 + 8) {
+            trace(TraceKind::Admit, i, 0);
+        }
+        trace(TraceKind::Drain, 0, 0);
+        let dir = std::env::temp_dir().join(format!(
+            "cupso_trace_test_{}_{}",
+            std::process::id(),
+            unix_ms()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.log");
+        set_trace_path(Some(path.clone()));
+        let dumped = dump_trace("unit test");
+        set_trace_path(None);
+        assert!(dumped <= TRACE_CAP, "ring is bounded, dumped {dumped}");
+        assert!(dumped > 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("trace ring (unit test)"), "{text}");
+        assert!(text.contains("event=admit"), "{text}");
+        assert!(text.contains("event=drain"), "{text}");
+        assert!(text.contains("== end trace ring =="), "{text}");
+        std::fs::remove_dir_all(&dir).ok();
+        set_enabled(was);
+    }
+
+    #[test]
+    fn render_json_is_parseable_and_complete() {
+        let _g = TLOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let was = enabled();
+        set_enabled(true);
+        record(Series::RoundStepNs, 1234);
+        bump(Counter::Rounds);
+        let doc = crate::service::proto::Json::parse(&render_json()).unwrap();
+        assert!(doc.get("enabled").unwrap().as_bool("enabled").unwrap());
+        let counters = doc.get("counters").unwrap();
+        for c in Counter::ALL {
+            assert!(counters.get(c.name()).is_some(), "missing {}", c.name());
+        }
+        let gauges = doc.get("gauges").unwrap();
+        for g in Gauge::ALL {
+            assert!(gauges.get(g.name()).is_some(), "missing {}", g.name());
+        }
+        let histos = doc.get("histos").unwrap();
+        for s in Series::ALL {
+            let h = histos.get(s.name()).unwrap_or_else(|| panic!("{}", s.name()));
+            assert!(h.get("count").is_some() && h.get("bins").is_some());
+        }
+        let step = histos.get("round_step_ns").unwrap();
+        assert!(step.get("count").unwrap().as_u64("count").unwrap() >= 1);
+        assert!(doc.get("trace").unwrap().get("capacity").is_some());
+        set_enabled(was);
+    }
+
+    #[test]
+    fn phase_clock_records_laps_and_spans() {
+        let _g = TLOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let was = enabled();
+        set_enabled(true);
+        let h0 = histo(Series::RoundGbestNs).count;
+        let w0 = histo(Series::ExecWakeToDoneNs).count;
+        let mut clock = PhaseClock::start();
+        let mark = clock.mark();
+        assert!(mark.is_some());
+        clock.lap(Series::RoundGbestNs);
+        clock.record_since(mark, Series::ExecWakeToDoneNs);
+        assert_eq!(histo(Series::RoundGbestNs).count, h0 + 1);
+        assert_eq!(histo(Series::ExecWakeToDoneNs).count, w0 + 1);
+        set_enabled(was);
+    }
+
+    #[test]
+    fn uptime_and_snapshot_age_anchor() {
+        let _g = TLOCK.lock().unwrap_or_else(|e| e.into_inner());
+        mark_service_start();
+        assert!(uptime_secs() < 3600);
+        mark_snapshot_now();
+        assert!(last_snapshot_age_secs().unwrap() < 3600);
+    }
+}

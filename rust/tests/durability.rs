@@ -26,6 +26,7 @@ use cupso::fitness::{Cubic, Objective};
 use cupso::pso::PsoParams;
 use cupso::scheduler::{JobScheduler, JobSpec};
 use cupso::service::{ServiceEnd, ServiceSession};
+use cupso::telemetry::{self, Counter};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -69,8 +70,30 @@ fn knobs(every: u64, keep: usize) -> BatchConfig {
         quota_steps: 0,
         checkpoint_every: every,
         checkpoint_keep: keep,
+        telemetry: true,
+        trace_dump: None,
         jobs: Vec::new(),
     }
+}
+
+/// The flight-recorder counter tracking fired directives against `op`
+/// (ISSUE 10: injected faults are themselves observable, so a plan
+/// whose directive never fires is a loud test failure, not a no-op).
+fn fired_counter(op: FaultOp) -> Counter {
+    match op {
+        FaultOp::Write => Counter::FaultsFiredWrite,
+        FaultOp::Fsync => Counter::FaultsFiredFsync,
+        FaultOp::Rename => Counter::FaultsFiredRename,
+        FaultOp::Persist => Counter::FaultsFiredPersist,
+    }
+}
+
+/// Sum of all four fault-fired counters (multi-directive plans).
+fn faults_fired_total() -> u64 {
+    [FaultOp::Write, FaultOp::Fsync, FaultOp::Rename, FaultOp::Persist]
+        .into_iter()
+        .map(|op| telemetry::counter(fired_counter(op)))
+        .sum()
 }
 
 fn spec(name: &str, engine: EngineKind, iters: u64, seed: u64) -> JobSpec {
@@ -192,9 +215,18 @@ fn crash_sweep(engine: EngineKind, op: FaultOp, tag: &str, jobs: &[Job], every: 
     for nth in 1..=points {
         let dir = temp_dir(&format!("{tag}-{nth}"));
         let plan = FaultPlan::single(op, nth, FaultAction::Eio);
+        let fired_before = telemetry::counter(fired_counter(op));
         storeio::install(Arc::new(FaultyIo::new(plan)));
         let (crashed, seen_pre) = run_observing(engine, &dir, every, 1, jobs, None);
         storeio::reset();
+        // Exactly-once injection: the single directive fired once — the
+        // sweep position `nth` exists by the counting pass above, and a
+        // fired directive is spent, never re-armed.
+        assert_eq!(
+            telemetry::counter(fired_counter(op)) - fired_before,
+            1,
+            "{tag}: {op:?}@{nth} must fire exactly once"
+        );
         match crashed {
             // The fault landed on the best-effort final snapshot: the
             // daemon warns but the run itself is unaffected.
@@ -307,16 +339,30 @@ fn seeded_fault_plans_recover_or_survive() {
 // ------------------------------------------------------------------
 
 /// Crash a run at the given persist point and return (its pre-crash
-/// observations, the baseline fingerprint).
-fn crashed_dir(tag: &str, plan: &str, every: u64, keep: usize) -> (PathBuf, Fp, Fp) {
+/// observations, the baseline fingerprint). `expect_faults` pins the
+/// number of plan directives that must have fired — exactly, via the
+/// flight-recorder fault counters.
+fn crashed_dir(
+    tag: &str,
+    plan: &str,
+    every: u64,
+    keep: usize,
+    expect_faults: u64,
+) -> (PathBuf, Fp, Fp) {
     let base = temp_dir(&format!("{tag}-base"));
     let (end, want) = run_observing(EngineKind::Queue, &base, every, keep, OP_JOBS, None);
     end.expect("baseline run");
     let dir = temp_dir(tag);
+    let fired_before = faults_fired_total();
     storeio::install(Arc::new(FaultyIo::new(FaultPlan::parse(plan).unwrap())));
     let (crashed, seen_pre) = run_observing(EngineKind::Queue, &dir, every, keep, OP_JOBS, None);
     storeio::reset();
     crashed.expect_err("the injected fault must kill the daemon");
+    assert_eq!(
+        faults_fired_total() - fired_before,
+        expect_faults,
+        "{tag}: plan {plan:?} must fire exactly {expect_faults} directive(s)"
+    );
     (dir, seen_pre, want)
 }
 
@@ -326,7 +372,8 @@ fn torn_job_checkpoint_is_quarantined_and_the_rest_resumes() {
     // Writes per flat persist: job_0, job_1, manifest. Tearing write #4
     // (persist 2's job_0) and dying at persist 3 leaves a *committed*
     // snapshot whose job_0 payload is torn — the checksum catches it.
-    let (dir, seen_pre, want) = crashed_dir("torn-job", "write@4=truncate:16; persist@3", 4, 1);
+    let (dir, seen_pre, want) =
+        crashed_dir("torn-job", "write@4=truncate:16; persist@3", 4, 1, 2);
     let loaded = load_snapshot(&dir).expect("manifest is intact, load must succeed");
     loaded.report();
     assert!(!loaded.is_clean());
@@ -359,7 +406,7 @@ fn torn_job_checkpoint_is_quarantined_and_the_rest_resumes() {
 #[test]
 fn missing_job_checkpoint_is_quarantined_like_a_torn_one() {
     let _io = lock_io();
-    let (dir, _seen_pre, _want) = crashed_dir("missing-job", "persist@3", 4, 1);
+    let (dir, _seen_pre, _want) = crashed_dir("missing-job", "persist@3", 4, 1, 1);
     std::fs::remove_file(dir.join("job_1.ckpt")).expect("snapshot holds job_1");
     let loaded = load_snapshot(&dir).expect("manifest intact");
     assert_eq!(loaded.quarantined.len(), 1);
@@ -374,7 +421,7 @@ fn torn_manifest_fails_the_load_loudly_never_a_silent_subset() {
     // whose commit point itself is damaged — the whole load must fail
     // loudly (the manifest can no longer certify anything).
     let (dir, _seen_pre, _want) =
-        crashed_dir("torn-manifest", "write@6=truncate:20; persist@3", 4, 1);
+        crashed_dir("torn-manifest", "write@6=truncate:20; persist@3", 4, 1, 2);
     let err = load_snapshot(&dir).expect_err("torn manifest must not load");
     let msg = format!("{err:#}");
     assert!(msg.contains("manifest"), "error names the manifest: {msg}");
@@ -393,10 +440,16 @@ fn rotated_fallback_prefers_newest_fully_valid_snapshot() {
     // Die at persist 4: snap_000000..2 are committed and retained.
     let dir = temp_dir("rot-crash");
     let plan = FaultPlan::single(FaultOp::Persist, 4, FaultAction::Eio);
+    let fired_before = telemetry::counter(Counter::FaultsFiredPersist);
     storeio::install(Arc::new(FaultyIo::new(plan)));
     let (crashed, seen_pre) = run_observing(EngineKind::Queue, &dir, every, keep, jobs, None);
     storeio::reset();
     crashed.expect_err("persist fault must kill the daemon");
+    assert_eq!(
+        telemetry::counter(Counter::FaultsFiredPersist) - fired_before,
+        1,
+        "the single persist directive must fire exactly once"
+    );
     for snap in ["snap_000000", "snap_000001", "snap_000002"] {
         assert!(dir.join(snap).join("manifest.toml").is_file(), "{snap}");
     }

@@ -372,6 +372,8 @@ fn snapshot_knobs() -> BatchConfig {
         quota_steps: 0,
         checkpoint_every: 0,
         checkpoint_keep: 1,
+        telemetry: true,
+        trace_dump: None,
         jobs: Vec::new(),
     }
 }

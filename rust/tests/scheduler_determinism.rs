@@ -367,6 +367,8 @@ fn service_under_weighted_fair_quotas_and_mixed_transports_is_bit_exact() {
         quota_steps: 0,
         checkpoint_every: 0,
         checkpoint_keep: 1,
+        telemetry: true,
+        trace_dump: None,
         jobs: Vec::new(),
     };
     let scheduler = JobScheduler::with_streams(2, 2)
@@ -493,6 +495,63 @@ fn executor_rounds_match_scoped_thread_rounds_bit_exactly() {
             );
         }
     }
+}
+
+/// ISSUE 10 tentpole invariant: the flight recorder is provably
+/// invisible. The same fleet run with telemetry recording on and off —
+/// serialized (S=1), concurrent streams, and packed — produces
+/// bit-identical per-job outputs AND an identical report stream, while
+/// the instrumented run demonstrably recorded (the rounds counter
+/// moved). Instrumentation wraps phases and reads clocks, but never
+/// touches run state; this is the proof.
+#[test]
+fn runs_with_telemetry_on_and_off_are_bit_identical() {
+    use cupso::telemetry;
+    let mk_specs = || -> Vec<JobSpec> {
+        vec![
+            cubic_spec("m1", EngineKind::Queue, PsoParams::paper_1d(300, 24), 1),
+            cubic_spec("m2", EngineKind::Reduction, PsoParams::paper_1d(257, 18), 2),
+            cubic_spec("m3", EngineKind::LoopUnrolling, PsoParams::paper_120d(64, 12), 3),
+            cubic_spec("m4", EngineKind::Queue, PsoParams::paper_1d(150, 20), 4),
+        ]
+    };
+    let was = telemetry::enabled();
+    for (streams, pack) in [(1usize, false), (2, false), (2, true)] {
+        let run_fleet = |record: bool| {
+            telemetry::set_enabled(record);
+            let mut trace = Vec::new();
+            let outcomes = JobScheduler::with_streams(4, streams)
+                .pack(pack)
+                .run_with(&mk_specs(), |r| {
+                    trace.push((r.job, r.iter, r.gbest_fit, r.improved))
+                })
+                .unwrap();
+            telemetry::set_enabled(was);
+            (outcomes, trace)
+        };
+        let rounds_before = telemetry::counter(telemetry::Counter::Rounds);
+        let (on_outcomes, on_trace) = run_fleet(true);
+        assert!(
+            telemetry::counter(telemetry::Counter::Rounds) > rounds_before,
+            "instrumented run recorded nothing (S={streams} pack={pack})"
+        );
+        let (off_outcomes, off_trace) = run_fleet(false);
+        assert_eq!(
+            on_trace, off_trace,
+            "report stream diverged across the telemetry switch (S={streams} pack={pack})"
+        );
+        assert_eq!(on_outcomes.len(), off_outcomes.len());
+        for (a, b) in on_outcomes.iter().zip(&off_outcomes) {
+            assert_eq!(a.stop, b.stop, "{}", a.name);
+            assert_eq!(a.steps, b.steps, "{}", a.name);
+            assert_outputs_equal(
+                &a.output,
+                &b.output,
+                &format!("telemetry on-vs-off S={streams} pack={pack} {}", a.name),
+            );
+        }
+    }
+    telemetry::set_enabled(was);
 }
 
 #[test]

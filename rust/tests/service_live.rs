@@ -35,6 +35,8 @@ fn knobs(streams: usize) -> BatchConfig {
         quota_steps: 0,
         checkpoint_every: 0,
         checkpoint_keep: 1,
+        telemetry: true,
+        trace_dump: None,
         jobs: Vec::new(),
     }
 }
@@ -557,5 +559,134 @@ fn non_finite_gbest_is_null_on_the_wire_and_survives_clients() {
 
     assert!(ok(&roundtrip(&socket, r#"{"op": "drain"}"#)));
     svc.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ISSUE 10 tentpole: the `metrics` verb serves one structured JSON
+/// document — byte-identical in shape over both transports — that
+/// `cupso top` and `cupso status --metrics` render client-side. Pin
+/// the envelope and the document's top-level shape.
+#[test]
+fn metrics_verb_has_a_stable_shape_over_unix_and_tcp() {
+    let dir = temp_dir("metrics");
+    let socket = dir.join("svc.sock");
+    let scheduler = JobScheduler::with_streams(2, 2);
+    let (service, handle) = ServiceSession::new(
+        &scheduler,
+        knobs(2),
+        None,
+        vec![spec("resident", EngineKind::Queue, 128, 500_000, 1)],
+    )
+    .unwrap();
+    let tcp = bind_tcp("127.0.0.1:0").unwrap();
+    let addr = tcp.local_addr().unwrap();
+    let listeners = vec![Listener::Unix(bind(&socket).unwrap()), Listener::Tcp(tcp)];
+    let _accept = spawn_server_on(listeners, handle, 64);
+    let svc = std::thread::spawn(move || service.run().unwrap());
+
+    let check = |doc: &Json| {
+        assert!(ok(doc), "{doc:?}");
+        assert_eq!(doc.str_field("op").unwrap(), "metrics");
+        let m = doc.get("metrics").expect("reply carries a metrics object");
+        m.get("enabled").unwrap().as_bool("enabled").unwrap();
+        m.get("uptime_s").unwrap().as_u64("uptime_s").unwrap();
+        // Always present; null until a snapshot lands (this service has
+        // no snapshot dir, so it may be null or — because telemetry is
+        // process-global — a number left by a sibling test's persist).
+        m.num_or_null_field("last_snapshot_age_s").unwrap();
+        let counters = m.get("counters").expect("counters object");
+        for name in [
+            "rounds_total",
+            "jobs_admitted_total",
+            "jobs_finished_total",
+            "conns_accepted_total",
+            "snapshots_total",
+        ] {
+            counters
+                .get(name)
+                .unwrap_or_else(|| panic!("missing counter {name}"))
+                .as_u64(name)
+                .unwrap();
+        }
+        let gauges = m.get("gauges").expect("gauges object");
+        gauges
+            .get("conn_pending_hwm")
+            .expect("conn_pending_hwm gauge")
+            .as_u64("conn_pending_hwm")
+            .unwrap();
+        let histos = m.get("histos").expect("histos object");
+        let step = histos.get("round_step_ns").expect("round_step_ns histo");
+        step.get("count").unwrap().as_u64("count").unwrap();
+        assert!(step.get("bins").is_some(), "histos carry their bins");
+        let trace = m.get("trace").expect("trace object");
+        trace.get("recorded").unwrap().as_u64("recorded").unwrap();
+        assert!(trace.get("capacity").unwrap().as_u64("capacity").unwrap() > 0);
+    };
+    check(&roundtrip(&socket, r#"{"op": "metrics"}"#));
+    check(&roundtrip_tcp(addr, r#"{"op": "metrics"}"#));
+
+    // The resident job's admission is on the books (the registry is
+    // process-global, so `>= 1`, not `== 1`).
+    let doc = roundtrip(&socket, r#"{"op": "metrics"}"#);
+    let admitted = doc
+        .get("metrics")
+        .unwrap()
+        .get("counters")
+        .unwrap()
+        .get("jobs_admitted_total")
+        .unwrap()
+        .as_u64("jobs_admitted_total")
+        .unwrap();
+    assert!(admitted >= 1, "resident admission must be counted");
+
+    assert!(ok(&roundtrip(&socket, r#"{"op": "cancel", "name": "resident"}"#)));
+    assert!(ok(&roundtrip(&socket, r#"{"op": "drain"}"#)));
+    svc.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ISSUE 10 tentpole: a drain dumps the flight-recorder trace ring to
+/// the configured sink, in the pinned line format, with the admit and
+/// drain events of this very service on it.
+#[test]
+fn drain_dumps_the_trace_ring_to_the_configured_file() {
+    let dir = temp_dir("trace-dump");
+    let socket = dir.join("svc.sock");
+    let dump = dir.join("trace.log");
+    // Point the process-global trace sink at our file. Sibling tests
+    // draining concurrently may append their own dumps here too — every
+    // assertion below is containment, not equality, for that reason.
+    cupso::telemetry::set_trace_path(Some(dump.clone()));
+
+    let scheduler = JobScheduler::with_streams(2, 2);
+    let (service, handle) = ServiceSession::new(
+        &scheduler,
+        knobs(2),
+        None,
+        vec![spec("resident", EngineKind::Queue, 128, 500_000, 1)],
+    )
+    .unwrap();
+    let _accept = spawn_server(bind(&socket).unwrap(), handle);
+    let svc = std::thread::spawn(move || service.run().unwrap());
+
+    assert!(ok(&roundtrip(&socket, r#"{"op": "cancel", "name": "resident"}"#)));
+    assert!(ok(&roundtrip(&socket, r#"{"op": "drain"}"#)));
+    svc.join().unwrap();
+    cupso::telemetry::set_trace_path(None);
+
+    let text = std::fs::read_to_string(&dump).expect("drain must write the trace dump");
+    assert!(text.contains("== cupso trace ring (drain):"), "{text}");
+    assert!(text.contains("event=admit"), "{text}");
+    assert!(text.contains("event=cancel"), "{text}");
+    assert!(text.contains("event=drain"), "{text}");
+    assert!(text.contains("== end trace ring =="), "{text}");
+    // Every event line carries the pinned key=value fields.
+    let line = text
+        .lines()
+        .find(|l| l.starts_with("trace seq="))
+        .expect("at least one event line");
+    for key in ["t_ms=", "event=", "a=", "b="] {
+        assert!(line.contains(key), "{line}");
+    }
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -41,6 +41,8 @@ fn start(policy: &str, max_conns: usize) -> Daemon {
         quota_steps: 0,
         checkpoint_every: 0,
         checkpoint_keep: 1,
+        telemetry: true,
+        trace_dump: None,
         jobs: Vec::new(),
     };
     let scheduler = JobScheduler::with_streams(2, 2)

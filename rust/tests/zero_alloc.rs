@@ -212,6 +212,8 @@ fn service_rounds_with_empty_control_queue_allocate_nothing() {
             quota_steps: 0,
             checkpoint_every: 0,
             checkpoint_keep: 1,
+            telemetry: true,
+            trace_dump: None,
             jobs: Vec::new(),
         };
         let (service, handle) = ServiceSession::new(&scheduler, knobs, None, specs).unwrap();
@@ -277,6 +279,8 @@ fn service_rounds_between_snapshots_allocate_nothing() {
         quota_steps: 0,
         checkpoint_every: 1 << 30,
         checkpoint_keep: 1,
+        telemetry: true,
+        trace_dump: None,
         jobs: Vec::new(),
     };
     let (service, handle) =
@@ -309,6 +313,78 @@ fn service_rounds_between_snapshots_allocate_nothing() {
 }
 
 #[test]
+fn instrumented_service_rounds_still_allocate_nothing() {
+    let _g = LOCK.lock().unwrap();
+    use cupso::telemetry::{self, Counter, Series};
+    // ISSUE 10: the flight recorder must be invisible to the allocator
+    // too. With telemetry explicitly enabled, warmed-up service rounds —
+    // phase clocks lapping into histograms, the rounds counter bumping —
+    // perform ZERO heap allocations: recording is pre-allocated statics
+    // and `Instant` reads, nothing else. The counter/histogram deltas
+    // prove the instrumentation was really live while we measured.
+    let was = telemetry::enabled();
+    telemetry::set_enabled(true);
+    for streams in [1usize, 2] {
+        let iters = 600u64;
+        let specs = flat_specs(EngineKind::Queue, 2, iters);
+        let scheduler = JobScheduler::with_streams(2, streams);
+        let knobs = BatchConfig {
+            workers: 2,
+            policy: "round-robin".into(),
+            streams,
+            batch_steps: 1,
+            preempt_quantum: 0,
+            pack: false,
+            pack_min: 2,
+            pack_max: 0,
+            quota_jobs: 0,
+            quota_steps: 0,
+            checkpoint_every: 0,
+            checkpoint_keep: 1,
+            telemetry: true,
+            trace_dump: None,
+            jobs: Vec::new(),
+        };
+        let (service, handle) = ServiceSession::new(&scheduler, knobs, None, specs).unwrap();
+        drop(handle);
+        let rounds_before = telemetry::counter(Counter::Rounds);
+        let splits_before = telemetry::histo(Series::RoundStepNs).count;
+        let (warm, upto) = (50u64, 450u64);
+        let mut calls = 0u64;
+        let mut start = 0u64;
+        let mut end = 0u64;
+        let outcome = service
+            .run_with(|_| {
+                calls += 1;
+                if calls == warm {
+                    start = allocs();
+                }
+                if calls == upto {
+                    end = allocs();
+                }
+            })
+            .unwrap();
+        assert!(calls >= upto, "S={streams}: too few rounds ({calls})");
+        assert_eq!(
+            end - start,
+            0,
+            "S={streams}: instrumented steady-state rounds allocated {} times",
+            end - start
+        );
+        assert!(
+            telemetry::counter(Counter::Rounds) > rounds_before,
+            "S={streams}: instrumentation recorded no rounds"
+        );
+        assert!(
+            telemetry::histo(Series::RoundStepNs).count > splits_before,
+            "S={streams}: instrumentation recorded no step-phase splits"
+        );
+        assert_eq!(outcome.finished_total, 2);
+    }
+    telemetry::set_enabled(was);
+}
+
+#[test]
 fn warmed_up_packed_rounds_allocate_nothing() {
     let _g = LOCK.lock().unwrap();
     // ISSUE 6: a warmed-up packed round (reconcile no-op, one launch
@@ -334,6 +410,8 @@ fn warmed_up_packed_rounds_allocate_nothing() {
         quota_steps: 0,
         checkpoint_every: 0,
         checkpoint_keep: 1,
+        telemetry: true,
+        trace_dump: None,
         jobs: Vec::new(),
     };
     let (service, handle) = ServiceSession::new(&scheduler, knobs, None, specs).unwrap();

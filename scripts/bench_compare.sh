@@ -5,13 +5,14 @@
 #   bench_compare.sh [--strict] baseline.json candidate.json
 #
 # Records are matched by their identity fields (mode, engine, streams,
-# batch_steps, jobs, particles, paper_iters); the compared metrics are
-# the timing and ratio fields (*_ns, *_s, speedup*, *_overhead). Time
-# metrics that grew by more than BENCH_COMPARE_MAX_REGRESSION percent
-# (default 25) are flagged; with --strict any flagged metric makes the
-# script exit 1. Ratio metrics (speedup, *_vs_*) are reported but never
-# flagged — higher is better there. See EXPERIMENTS.md §Bench baselines
-# for the thresholds and the promotion workflow.
+# batch_steps, jobs, particles, paper_iters, phase, clients, watchers,
+# every); the compared metrics are the timing and ratio fields (*_ns,
+# *_us, *_ms, *_s, speedup*, *_overhead). Time metrics that grew by
+# more than BENCH_COMPARE_MAX_REGRESSION percent (default 25) are
+# flagged; with --strict any flagged metric makes the script exit 1.
+# Ratio and rate metrics (speedup, *_vs_*, *_per_s) are reported but
+# never flagged — higher is better there. See EXPERIMENTS.md §Bench
+# baselines for the thresholds and the promotion workflow.
 #
 # The writer emits one key per line at fixed indentation, so this parser
 # is plain awk — no jq dependency.
@@ -64,11 +65,11 @@ awk -v strict="$strict" -v threshold="$threshold" '
   }
   /^    \}/ {
     id = ""
-    nid = split("mode engine streams batch_steps jobs particles paper_iters", idk, " ")
+    nid = split("mode engine streams batch_steps jobs particles paper_iters phase clients watchers every", idk, " ")
     for (i = 1; i <= nid; i++)
       if (idk[i] in cur) id = id (id == "" ? "" : " ") idk[i] "=" cur[idk[i]]
     for (k in cur) {
-      if (k !~ /_ns$|_s$|speedup|_overhead$/) continue
+      if (k !~ /_ns$|_us$|_ms$|_s$|speedup|_overhead$/) continue
       if (cur[k] !~ /^-?[0-9]/) continue # null: non-finite in the writer
       v[doc, id, k] = cur[k]
       if (doc == 2 && !((id SUBSEP k) in seen)) {
@@ -95,7 +96,7 @@ awk -v strict="$strict" -v threshold="$threshold" '
         b = v[1, id, k] + 0
         delta = (b != 0) ? (c - b) / b * 100 : 0
         flag = ""
-        if (k ~ /_ns$|_s$/ && delta > threshold + 0) { flag = "  << regression"; bad++ }
+        if (k ~ /_ns$|_us$|_ms$|_s$/ && k !~ /_per_s$/ && delta > threshold + 0) { flag = "  << regression"; bad++ }
         printf "%-52s %-28s %14.3f %14.3f %+8.1f%%%s\n", id, k, b, c, delta, flag
       } else {
         printf "%-52s %-28s %14s %14.3f    (new)\n", id, k, "-", c

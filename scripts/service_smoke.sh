@@ -24,8 +24,9 @@ cleanup() {
 trap cleanup EXIT
 
 echo "== starting cupso serve on $SOCK + tcp $ADDR"
+TRACE="$WORK/trace.log"
 "$BIN" serve --socket "$SOCK" --listen "$ADDR" --max-conns 64 \
-    --checkpoint-dir "$SNAP" &
+    --checkpoint-dir "$SNAP" --trace-dump "$TRACE" &
 SERVE_PID=$!
 
 # Wait for the daemon to answer the protocol (not just bind the socket).
@@ -55,6 +56,15 @@ echo "== submitting one cubic job over TCP with a tenant label"
     | tee "$WORK/submit_tcp.out"
 grep -q "submitted smoke-tcp" "$WORK/submit_tcp.out"
 
+echo "== metrics leg: status --metrics (both transports) + one cupso top frame"
+"$BIN" status --socket "$SOCK" --metrics >"$WORK/metrics.out"
+grep -q "# TYPE cupso_rounds_total counter" "$WORK/metrics.out"
+grep -Eq "^cupso_jobs_admitted_total [1-9]" "$WORK/metrics.out"
+grep -q "cupso_uptime_seconds" "$WORK/metrics.out"
+"$BIN" status --connect "$ADDR" --metrics | grep -q "cupso_rounds_total"
+"$BIN" top --socket "$SOCK" --samples 1 --plain >"$WORK/top.out"
+grep -q "jobs_admitted_total" "$WORK/top.out"
+
 echo "== polling status (over TCP) until both jobs finish"
 DONE=0
 for _ in $(seq 1 200); do
@@ -81,6 +91,12 @@ grep -q "no live jobs" "$WORK/drain.out"
 echo "== waiting for the daemon to exit"
 wait "$SERVE_PID"
 SERVE_PID=""
+
+echo "== trace ring dumped to --trace-dump on drain"
+grep -q "== cupso trace ring (drain):" "$TRACE"
+grep -q "event=admit" "$TRACE"
+grep -q "event=drain" "$TRACE"
+grep -q "== end trace ring ==" "$TRACE"
 
 # ---------------------------------------------------------------------
 # Crash leg (ISSUE 9): kill -9 a daemon mid-run, restart it on the same
